@@ -1,0 +1,49 @@
+//! Quickstart: the Table-2-style user API end to end on the tiny dataset.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Mirrors the paper's Listing 1: load a graph, pick a synchronous
+//! training algorithm and a GNN model, let the framework generate the
+//! design (DSE → accelerator config, software generator → host program),
+//! then train and save the model.
+
+use hitgnn::api::HitGnn;
+use hitgnn::partition::Algorithm;
+
+fn main() -> anyhow::Result<()> {
+    // --- Design phase (Listing 1 lines 1–22) ---------------------------
+    let design = HitGnn::new()
+        .load_input_graph("tiny", 0)          // LoadInputGraph()
+        .graph_partition(Algorithm::DistDgl)  // Graph_Partition()
+        .feature_storing(0.2)                 // Feature_Storing()
+        .gnn_computation("gcn")               // GNN_Computation('GCN')
+        .gnn_parameters(2, 128)               // GNN_Parameters(L=2, hidden)
+        .fpga_metadata(hitgnn::fpga::U250)    // FPGA_Metadata()
+        .platform_metadata(2, 16.0, 205.0)    // Platform_Metadata()
+        .seed(7)
+        .generate_design()?; // Generate_Design()
+
+    let (n, m) = design.fpga_parallelism();
+    println!(
+        "generated design: accelerator (n={n}, m={m}) per FPGA, \
+         estimated {} NVTPS at full scale",
+        hitgnn::util::stats::si(design.estimated_nvtps)
+    );
+
+    // --- Runtime phase (Listing 1 lines 24–28) ---------------------------
+    let report = design.start_training(3)?; // Start_training(epochs=3)
+    for e in &report.epochs {
+        println!(
+            "epoch {}: loss {:.4} ({} iterations, {:.2}s)",
+            e.epoch, e.mean_loss, e.iterations, e.wall_seconds
+        );
+    }
+    let first = report.epochs.first().unwrap().mean_loss;
+    let last = report.last_loss();
+    anyhow::ensure!(last < first, "training should reduce the loss");
+    println!("loss {first:.4} -> {last:.4} ✓");
+
+    design.save_model("/tmp/hitgnn_quickstart_model.json")?; // Save_model()
+    println!("model saved to /tmp/hitgnn_quickstart_model.json");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Scalability study (paper §7.6 / Fig 8): project the training throughput
+//! from 1 to 16 FPGAs and find where CPU memory bandwidth becomes the
+//! limit (205 GB/s ÷ 16 GB/s PCIe ≈ 12.8 concurrent fetchers).
+//!
+//!     cargo run --release --example scalability [--shift 6]
+
+use hitgnn::perf::experiments::fig8;
+use hitgnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let shift: u32 = args.num("shift", 6)?;
+    args.finish()?;
+
+    let counts = [1usize, 2, 4, 6, 8, 10, 12, 14, 16];
+    println!("measuring host statistics (shift {shift}) and projecting...");
+    let series = fig8(&counts, shift, 6)?;
+
+    println!("\nspeedup over 1 FPGA (ogbn-products, GraphSAGE):\n");
+    println!("{:>9} | {}", "FPGAs", "0        4        8        12       16");
+    println!("{:->9}-+{:-<42}", "", "");
+    for (algo, speedups) in &series {
+        for (p, s) in counts.iter().zip(speedups) {
+            let bar = "█".repeat((s * 2.5).round() as usize);
+            println!("{:>9} | {bar} {s:.2}x  ({}x{p})", algo.name(), p);
+        }
+        println!("{:->9}-+{:-<42}", "", "");
+    }
+
+    // the knee: marginal speedup per added FPGA before/after saturation
+    for (algo, s) in &series {
+        let idx8 = counts.iter().position(|&p| p == 8).unwrap();
+        let idx16 = counts.iter().position(|&p| p == 16).unwrap();
+        let early = (s[idx8] - s[0]) / 7.0;
+        let late = (s[idx16] - s[idx8]) / 8.0;
+        println!(
+            "{}: marginal speedup {:.2}/FPGA below 8, {:.2}/FPGA from 8→16 \
+             (CPU memory bandwidth saturates at ≈12.8 FPGAs)",
+            algo.name(),
+            early,
+            late
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX model, AOT export.
+Never imported at runtime — the Rust binary only reads artifacts/."""

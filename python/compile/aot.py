@@ -1,0 +1,141 @@
+"""AOT export: lower every (model × dataset-dims) train step + predict to
+HLO **text** and write artifacts/manifest.json for the Rust runtime.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+`make artifacts` is a no-op if the outputs are newer than the inputs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+from .model import (
+    BATCH_ORDER,
+    ModelDims,
+    example_args,
+    init_params,
+    make_predict,
+    make_train_step,
+    param_order,
+)
+
+# Mirror of the Rust dataset registry (graph/datasets.rs — Table 4 dims).
+DATASETS = {
+    "reddit": dict(f0=602, f1=128, f2=41),
+    "yelp": dict(f0=300, f1=128, f2=100),
+    "amazon": dict(f0=200, f1=128, f2=107),
+    "ogbn-products": dict(f0=100, f1=128, f2=47),
+}
+
+# Small dims for runtime integration tests / quickstart.
+TINY = dict(f0=32, f1=16, f2=8)
+
+MODELS = ["gcn", "sage"]
+
+
+def to_hlo_text(fn, specs) -> str:
+    """jitted fn + example shapes -> HLO text via stablehlo."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_name(kind: str, model: str, dataset: str) -> str:
+    return f"{kind}_{model}_{dataset.replace('-', '_')}"
+
+
+def export_entry(kind, model, dataset, dims: ModelDims, out_dir):
+    fn = make_train_step(model, dims) if kind == "train" else make_predict(model, dims)
+    specs = example_args(model, dims)
+    text = to_hlo_text(fn, specs)
+    name = entry_name(kind, model, dataset)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    pnames = param_order(model)
+    params = init_params(model, dims)
+    outputs = ["loss"] + [f"grad_{n}" for n in pnames] if kind == "train" else ["logits"]
+    return {
+        "name": name,
+        "kind": kind,
+        "model": model,
+        "dataset": dataset,
+        "file": fname,
+        "dims": dims.__dict__,
+        "params": [{"name": n, "shape": list(params[n].shape)} for n in pnames],
+        "inputs": pnames + BATCH_ORDER,
+        "outputs": outputs,
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=256,
+                    help="target capacity B of the execution-path artifacts")
+    ap.add_argument("--k1", type=int, default=10, help="layer-1 fanout")
+    ap.add_argument("--k2", type=int, default=5, help="layer-2 fanout")
+    ap.add_argument("--datasets", default="all",
+                    help="comma list or 'all' or 'tiny-only'")
+    ap.add_argument("--models", default="gcn,sage")
+    ap.add_argument("--no-tiny", action="store_true",
+                    help="skip the tiny test artifact")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    if args.datasets == "all":
+        datasets = list(DATASETS)
+    elif args.datasets == "tiny-only":
+        datasets = []
+    else:
+        datasets = [d.strip() for d in args.datasets.split(",")]
+
+    entries = []
+    for model in models:
+        for ds in datasets:
+            f = DATASETS[ds]
+            dims = ModelDims.from_batch(args.batch, args.k1, args.k2,
+                                        f["f0"], f["f1"], f["f2"])
+            for kind in ("train", "predict"):
+                e = export_entry(kind, model, ds, dims, args.out_dir)
+                entries.append(e)
+                print(f"wrote {e['file']}", file=sys.stderr)
+        if not args.no_tiny:
+            dims = ModelDims.from_batch(32, 3, 2, TINY["f0"], TINY["f1"], TINY["f2"])
+            for kind in ("train", "predict"):
+                e = export_entry(kind, model, "tiny", dims, args.out_dir)
+                entries.append(e)
+                print(f"wrote {e['file']}", file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "batch": {"b": args.batch, "k1": args.k1, "k2": args.k2},
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(entries)} entries -> {args.out_dir}/manifest.json",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

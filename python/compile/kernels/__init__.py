@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; AOT-lowered into the HLO
+artifacts the Rust runtime executes)."""
+
+from .aggregate import aggregate, aggregate_pallas, pick_block
+from .update import matmul, matmul_pallas, update
+
+__all__ = [
+    "aggregate",
+    "aggregate_pallas",
+    "matmul",
+    "matmul_pallas",
+    "pick_block",
+    "update",
+]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal. Every kernel must match its reference to float32 tolerance across
+the shape/dtype sweep in python/tests/."""
+
+import jax.numpy as jnp
+
+
+def aggregate_ref(feat, idx, w):
+    """out[r] = sum_k w[r,k] * feat[idx[r,k]] — no tiling, no pallas."""
+    g = jnp.take(feat, idx, axis=0)          # [Vout, K, F]
+    return jnp.einsum("rk,rkf->rf", w, g)
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def update_ref(x, w, b):
+    return x @ w + b[None, :]
+
+
+def aggregate_grads_ref(feat, idx, w, ct):
+    """Analytic VJP of aggregate (for gradient tests)."""
+    d_feat = jnp.zeros_like(feat).at[idx].add(w[..., None] * ct[:, None, :])
+    d_w = jnp.einsum("rc,rkc->rk", ct, jnp.take(feat, idx, axis=0))
+    return d_feat, d_w

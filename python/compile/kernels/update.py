@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: feature update (the paper's systolic-array MLP
+kernel, §5.3, mapped to MXU-shaped tiled matmul).
+
+The FPGA update kernel is an `m`-PE systolic array computing h·W. The TPU
+analogue is a (bm × bn) output-tiled matmul with the full contraction
+dimension resident per tile (f <= 602 everywhere in the paper, so a K-loop
+is unnecessary and the MXU sees one [bm, K] x [K, bn] contraction per
+tile). Tiles default to 128x128 — the MXU systolic array shape.
+
+`matmul` carries a custom VJP so both grad GEMMs (ct @ W^T and x^T @ ct)
+run through the same kernel, mirroring how the FPGA reuses its update
+array in the backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .aggregate import pick_block
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul_pallas(x, w, *, block_m: int = 128, block_n: int = 128):
+    """x [M,K] @ w [K,N] -> [M,N], output-tiled for the MXU."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def matmul(x, w):
+    """Differentiable tiled matmul (the update kernel's GEMM core)."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, ct):
+    x, w = res
+    d_x = matmul_pallas(ct, w.T)
+    d_w = matmul_pallas(x.T, ct)
+    return d_x, d_w
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def update(x, w, b):
+    """The paper's Update(): linear transform + bias (activation applied
+    by the model so XLA can fuse it with the surrounding ops)."""
+    return matmul(x, w) + b[None, :]

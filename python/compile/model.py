@@ -1,0 +1,203 @@
+"""L2: the paper's GNN models (GCN, GraphSAGE) as JAX forward/backward
+train steps over the fixed-shape padded mini-batch wire format
+(DESIGN.md §Mini-batch wire format), calling the L1 Pallas kernels.
+
+The Rust sampler emits, per batch:
+
+    feat0  [v0_cap, f0] f32   layer-0 features (gathered by the host)
+    idx1   [v1_cap, k1+1] i32 positions into feat0 rows; col 0 = self
+    w1     [v1_cap, k1+1] f32 aggregation weights (0 = padding)
+    idx2   [b, k2+1] i32      positions into layer-1 rows; col 0 = self
+    w2     [b, k2+1] f32
+    labels [b] i32
+    mask   [b] f32            1 for real targets, 0 for padding
+
+GCN uses the full (k+1)-wide weighted sum (self edge included in w by the
+sampler, symmetric normalisation). GraphSAGE splits self and neighbors:
+the neighbor mean flows through W_nbr, the self row through W_self —
+equivalent to the concat formulation but keeps one kernel API.
+
+`train_step` = masked softmax cross-entropy + gradients in one jitted
+function; this is the module that gets AOT-lowered per (model, dims).
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate, matmul, update
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Static shapes of one artifact (must match the Rust sampler config)."""
+
+    b: int
+    k1: int
+    k2: int
+    v1_cap: int
+    v0_cap: int
+    f0: int
+    f1: int
+    f2: int
+
+    @staticmethod
+    def from_batch(b: int, k1: int, k2: int, f0: int, f1: int, f2: int) -> "ModelDims":
+        v1_cap = b * (k2 + 1)
+        v0_cap = v1_cap * (k1 + 1)
+        return ModelDims(b, k1, k2, v1_cap, v0_cap, f0, f1, f2)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_params(model: str, dims: ModelDims, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic parameter pytree (dict, insertion-ordered)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    f0, f1, f2 = dims.f0, dims.f1, dims.f2
+    if model == "gcn":
+        return {
+            "w1": _glorot(ks[0], (f0, f1)),
+            "b1": jnp.zeros((f1,), jnp.float32),
+            "w2": _glorot(ks[1], (f1, f2)),
+            "b2": jnp.zeros((f2,), jnp.float32),
+        }
+    if model == "sage":
+        return {
+            "w1_self": _glorot(ks[0], (f0, f1)),
+            "w1_nbr": _glorot(ks[1], (f0, f1)),
+            "b1": jnp.zeros((f1,), jnp.float32),
+            "w2_self": _glorot(ks[2], (f1, f2)),
+            "w2_nbr": _glorot(ks[3], (f1, f2)),
+            "b2": jnp.zeros((f2,), jnp.float32),
+        }
+    raise ValueError(f"unknown model '{model}' (gcn|sage)")
+
+
+def param_order(model: str) -> List[str]:
+    """Canonical flat ordering used by the AOT artifact interface."""
+    if model == "gcn":
+        return ["w1", "b1", "w2", "b2"]
+    if model == "sage":
+        return ["w1_self", "w1_nbr", "b1", "w2_self", "w2_nbr", "b2"]
+    raise ValueError(model)
+
+
+BATCH_ORDER = ["feat0", "idx1", "w1a", "idx2", "w2a", "labels", "mask"]
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _gcn_layer(h, idx, w, wmat, bias, act):
+    agg = aggregate(h, idx, w)            # Â·H over the sampled block
+    out = update(agg, wmat, bias)         # (Â·H)·W + b
+    return act(out)
+
+
+def gcn_forward(params, batch) -> jnp.ndarray:
+    """2-layer GCN → logits [b, f2]."""
+    h1 = _gcn_layer(batch["feat0"], batch["idx1"], batch["w1a"],
+                    params["w1"], params["b1"], jax.nn.relu)
+    logits = _gcn_layer(h1, batch["idx2"], batch["w2a"],
+                        params["w2"], params["b2"], lambda x: x)
+    return logits
+
+
+def _sage_layer(h, idx, w, w_self, w_nbr, bias, act):
+    # neighbor mean: zero the self column (col 0) of the weights
+    w_n = w.at[:, 0].set(0.0)
+    nbr = aggregate(h, idx, w_n)
+    self_rows = jnp.take(h, idx[:, 0], axis=0)
+    out = matmul(self_rows, w_self) + matmul(nbr, w_nbr) + bias[None, :]
+    return act(out)
+
+
+def sage_forward(params, batch) -> jnp.ndarray:
+    """2-layer GraphSAGE-mean → logits [b, f2]."""
+    h1 = _sage_layer(batch["feat0"], batch["idx1"], batch["w1a"],
+                     params["w1_self"], params["w1_nbr"], params["b1"], jax.nn.relu)
+    logits = _sage_layer(h1, batch["idx2"], batch["w2a"],
+                         params["w2_self"], params["w2_nbr"], params["b2"],
+                         lambda x: x)
+    return logits
+
+
+FORWARD = {"gcn": gcn_forward, "sage": sage_forward}
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, model: str, num_classes: int) -> jnp.ndarray:
+    """Masked mean softmax cross-entropy over the real targets."""
+    logits = FORWARD[model](params, batch)
+    onehot = jax.nn.one_hot(batch["labels"], num_classes, dtype=jnp.float32)
+    ce = -(onehot * jax.nn.log_softmax(logits, axis=-1)).sum(axis=-1)
+    mask = batch["mask"]
+    return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(model: str, dims: ModelDims):
+    """Flat-signature train step for AOT lowering:
+    (*params, feat0, idx1, w1a, idx2, w2a, labels, mask) -> (loss, *grads).
+    """
+    names = param_order(model)
+
+    def train_step(*args):
+        params = dict(zip(names, args[: len(names)]))
+        fvals = args[len(names):]
+        batch = dict(zip(BATCH_ORDER, fvals))
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, model, dims.f2)
+        )(params)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    return train_step
+
+
+def make_predict(model: str, dims: ModelDims):
+    """Flat-signature inference: (*params, feat0..mask) -> (logits,)."""
+    names = param_order(model)
+
+    def predict(*args):
+        params = dict(zip(names, args[: len(names)]))
+        batch = dict(zip(BATCH_ORDER, args[len(names):]))
+        logits = FORWARD[model](params, batch)
+        # keep labels/mask alive in the jaxpr so the lowered artifact has
+        # the same input arity as the train step (jax.jit prunes unused
+        # parameters otherwise and the Rust caller feeds a fixed list)
+        keep = 0.0 * (batch["mask"].sum() + batch["labels"].sum().astype(logits.dtype))
+        return (logits + keep,)
+
+    return predict
+
+
+def example_args(model: str, dims: ModelDims):
+    """ShapeDtypeStructs in the artifact's flat input order."""
+    s = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    params = init_params(model, dims)
+    specs = [s(params[n].shape, f32) for n in param_order(model)]
+    specs += [
+        s((dims.v0_cap, dims.f0), f32),           # feat0
+        s((dims.v1_cap, dims.k1 + 1), i32),       # idx1
+        s((dims.v1_cap, dims.k1 + 1), f32),       # w1a
+        s((dims.b, dims.k2 + 1), i32),            # idx2
+        s((dims.b, dims.k2 + 1), f32),            # w2a
+        s((dims.b,), i32),                        # labels
+        s((dims.b,), f32),                        # mask
+    ]
+    return specs

@@ -1,0 +1,62 @@
+"""AOT export sanity: manifest schema, artifact files, HLO text shape.
+Uses tiny dims only to stay fast."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--datasets", "tiny-only", "--models", "gcn,sage"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_schema(tiny_artifacts):
+    with open(tiny_artifacts / "manifest.json") as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    names = {e["name"] for e in m["entries"]}
+    assert names == {"train_gcn_tiny", "predict_gcn_tiny",
+                     "train_sage_tiny", "predict_sage_tiny"}
+    for e in m["entries"]:
+        assert (tiny_artifacts / e["file"]).exists()
+        d = e["dims"]
+        assert d["v1_cap"] == d["b"] * (d["k2"] + 1)
+        assert d["v0_cap"] == d["v1_cap"] * (d["k1"] + 1)
+        assert e["inputs"][-7:] == ["feat0", "idx1", "w1a", "idx2", "w2a",
+                                    "labels", "mask"]
+        if e["kind"] == "train":
+            assert e["outputs"][0] == "loss"
+            assert len(e["outputs"]) == 1 + len(e["params"])
+        else:
+            assert e["outputs"] == ["logits"]
+
+
+def test_hlo_text_is_parseable_hlo(tiny_artifacts):
+    with open(tiny_artifacts / "manifest.json") as f:
+        m = json.load(f)
+    for e in m["entries"]:
+        text = (tiny_artifacts / e["file"]).read_text()
+        assert text.startswith("HloModule"), e["file"]
+        assert "ENTRY" in text
+        # tuple return (return_tuple=True) so the rust side can unpack
+        assert "tuple" in text.lower()
+
+
+def test_gcn_param_shapes_in_manifest(tiny_artifacts):
+    with open(tiny_artifacts / "manifest.json") as f:
+        m = json.load(f)
+    e = next(x for x in m["entries"] if x["name"] == "train_gcn_tiny")
+    shapes = {p["name"]: p["shape"] for p in e["params"]}
+    assert shapes == {"w1": [32, 16], "b1": [16], "w2": [16, 8], "b2": [8]}

@@ -1,0 +1,159 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes with hypothesis. This is the CORE build-time
+correctness signal — if these fail, the AOT artifacts are wrong."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, aggregate_pallas, matmul, matmul_pallas, pick_block
+from compile.kernels.ref import aggregate_grads_ref, aggregate_ref, matmul_ref, update_ref
+from compile.kernels.update import update
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# aggregate kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vin=st.integers(4, 200),
+    vout=st.integers(1, 96),
+    k=st.integers(1, 12),
+    f=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref_hypothesis(vin, vout, k, f, seed):
+    kf, ki, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    feat = jax.random.normal(kf, (vin, f), dtype=jnp.float32)
+    idx = jax.random.randint(ki, (vout, k), 0, vin, dtype=jnp.int32)
+    w = jax.random.normal(kw, (vout, k), dtype=jnp.float32)
+    got = aggregate_pallas(feat, idx, w)
+    want = aggregate_ref(feat, idx, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("vin,vout,k,f", [
+    (16, 8, 4, 32),        # block-aligned
+    (100, 33, 11, 41),     # prime-ish dims exercise pick_block
+    (1, 1, 1, 1),          # degenerate
+    (512, 128, 26, 602),   # reddit-like layer-1 shape
+])
+def test_aggregate_fixed_shapes(vin, vout, k, f):
+    feat = rand(1, (vin, f))
+    idx = jax.random.randint(jax.random.PRNGKey(2), (vout, k), 0, vin, dtype=jnp.int32)
+    w = rand(3, (vout, k))
+    np.testing.assert_allclose(
+        aggregate_pallas(feat, idx, w), aggregate_ref(feat, idx, w),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_aggregate_zero_weights_ignore_indices():
+    # padding rows carry idx=0, w=0 — they must contribute nothing
+    feat = rand(1, (10, 8))
+    idx = jnp.zeros((4, 3), jnp.int32)
+    w = jnp.zeros((4, 3), jnp.float32)
+    out = aggregate_pallas(feat, idx, w)
+    np.testing.assert_array_equal(out, jnp.zeros((4, 8)))
+
+
+def test_aggregate_duplicate_indices_accumulate():
+    feat = jnp.ones((4, 2), jnp.float32)
+    idx = jnp.array([[1, 1, 1]], jnp.int32)
+    w = jnp.array([[0.5, 0.25, 0.25]], jnp.float32)
+    np.testing.assert_allclose(aggregate_pallas(feat, idx, w), jnp.ones((1, 2)))
+
+
+def test_aggregate_grads_match_ref():
+    feat = rand(5, (20, 12))
+    idx = jax.random.randint(jax.random.PRNGKey(6), (7, 4), 0, 20, dtype=jnp.int32)
+    w = rand(7, (7, 4))
+
+    def f_feat(x):
+        return (aggregate(x, idx, w) ** 2).sum()
+
+    def f_w(x):
+        return (aggregate(feat, idx, x) ** 2).sum()
+
+    ct = 2.0 * aggregate_ref(feat, idx, w)
+    d_feat_ref, d_w_ref = aggregate_grads_ref(feat, idx, w, ct)
+    np.testing.assert_allclose(jax.grad(f_feat)(feat), d_feat_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(jax.grad(f_w)(w), d_w_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_grad_finite_difference():
+    feat = rand(8, (6, 3)).astype(jnp.float64)
+    idx = jnp.array([[0, 2], [4, 4], [1, 5]], jnp.int32)
+    w = rand(9, (3, 2)).astype(jnp.float64)
+
+    def loss(w_):
+        return (aggregate_ref(feat, idx, w_) ** 3).sum()  # analytic path
+
+    def loss_pallas(w_):
+        return (aggregate(feat.astype(jnp.float32), idx, w_.astype(jnp.float32)) ** 3).sum()
+
+    g_ref = jax.grad(loss)(w)
+    g_pallas = jax.grad(loss_pallas)(w.astype(jnp.float32))
+    np.testing.assert_allclose(g_pallas, g_ref.astype(jnp.float32), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# matmul / update kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(ka, (m, k), dtype=jnp.float32)
+    w = jax.random.normal(kb, (k, n), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), matmul_ref(x, w), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 602, 128), (256, 128, 47), (1, 1, 1), (33, 7, 13)])
+def test_matmul_fixed_shapes(m, k, n):
+    x, w = rand(1, (m, k)), rand(2, (k, n))
+    np.testing.assert_allclose(matmul_pallas(x, w), matmul_ref(x, w), rtol=2e-4, atol=2e-4)
+
+
+def test_update_adds_bias():
+    x, w = rand(1, (8, 4)), rand(2, (4, 6))
+    b = rand(3, (6,))
+    np.testing.assert_allclose(update(x, w, b), update_ref(x, w, b), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_grads():
+    x, w = rand(4, (9, 5)), rand(5, (5, 7))
+
+    def f(x_, w_):
+        return (matmul(x_, w_) ** 2).sum()
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    ct = 2.0 * matmul_ref(x, w)
+    np.testing.assert_allclose(gx, ct @ w.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, x.T @ ct, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 4096), target=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounded(dim, target):
+    b = pick_block(dim, target)
+    assert 1 <= b <= max(dim, 1)
+    assert dim % b == 0
+    assert b <= target or dim <= target

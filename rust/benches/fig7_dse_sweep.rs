@@ -1,0 +1,70 @@
+//! Fig 7: the DSE engine's sweep of the (n, m) design space for
+//! GraphSAGE, averaged over the four datasets — printed as a grid of
+//! estimated NVTPS (the paper shows this as a surface plot).
+
+use hitgnn::dse::{paper_dse_workloads, DseEngine};
+use hitgnn::perf::PlatformSpec;
+use hitgnn::util::bench::Table;
+use hitgnn::util::stats::si;
+
+fn main() {
+    let mut engine = DseEngine::new(PlatformSpec::paper_4fpga());
+    engine.m_step = 32; // per-die m granularity for the printed grid
+    let workloads = paper_dse_workloads(2.0);
+    let res = engine.explore(&workloads).expect("sweep");
+
+    println!("\n=== Fig 7: DSE sweep (GraphSAGE, 4-dataset average) ===");
+    println!(
+        "search space: n ≤ {} per die, m ≤ {} per die; {} feasible points\n",
+        res.n_max,
+        res.m_max,
+        res.grid.len()
+    );
+
+    // grid: rows = n (FPGA-level), cols = m (FPGA-level)
+    let mut ns: Vec<u32> = res.grid.iter().map(|p| p.n_fpga).collect();
+    ns.sort_unstable();
+    ns.dedup();
+    let mut ms: Vec<u32> = res.grid.iter().map(|p| p.m_fpga).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    // cap printed columns for readability
+    let shown_ms: Vec<u32> = ms
+        .iter()
+        .copied()
+        .filter(|m| m % 256 == 0 || *m == *ms.last().unwrap() || *m == ms[0])
+        .collect();
+
+    let mut headers = vec!["n \\ m".to_string()];
+    headers.extend(shown_ms.iter().map(|m| m.to_string()));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&headers_ref);
+    for &n in &ns {
+        let mut row = vec![n.to_string()];
+        for &m in &shown_ms {
+            let cell = res
+                .grid
+                .iter()
+                .find(|p| p.n_fpga == n && p.m_fpga == m)
+                .map(|p| si(p.throughput))
+                .unwrap_or_else(|| "-".into());
+            row.push(cell);
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    println!(
+        "\nbest: (n,m) = ({}, {}) @ {} NVTPS  [paper: (8,2048) @ 97.0 M]",
+        res.best.n_fpga,
+        res.best.m_fpga,
+        si(res.best.throughput)
+    );
+    // Fig 7 shape: the optimum invests heavily in update parallelism; it
+    // must not sit at maximal aggregation parallelism (the paper's
+    // headline observation about (8,2048) vs (16,1024)).
+    assert!(
+        res.best.n_fpga < ns[ns.len() - 1] || ns.len() == 1,
+        "best design should not need maximal aggregation parallelism"
+    );
+}

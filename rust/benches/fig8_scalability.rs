@@ -1,0 +1,51 @@
+//! Fig 8: scalability — speedup over one FPGA as the platform grows to 16
+//! FPGAs, per algorithm (ogbn-products, GraphSAGE). β is re-measured at
+//! every p because partitioning into more parts lowers locality.
+//!
+//! Paper: near-linear scaling to 16 FPGAs, limited by CPU memory
+//! bandwidth (205/16 ≈ 12.8 concurrent PCIe fetchers).
+
+use hitgnn::perf::experiments::fig8;
+use hitgnn::util::bench::Table;
+
+fn main() {
+    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let counts = [1usize, 2, 4, 8, 12, 16];
+    eprintln!("measuring β per FPGA count at shift {shift}...");
+    let series = fig8(&counts, shift, 6).expect("fig8");
+
+    println!("\n=== Fig 8: scalability (speedup vs 1 FPGA, ogbn-products GSG) ===");
+    let mut headers = vec!["algorithm".to_string()];
+    headers.extend(counts.iter().map(|p| format!("p={p}")));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&href);
+    for (algo, speedups) in &series {
+        let mut row = vec![algo.name().to_string()];
+        row.extend(speedups.iter().map(|s| format!("{s:.2}x")));
+        t.row(&row);
+    }
+    t.print();
+
+    for (algo, s) in &series {
+        // monotone non-decreasing up to 16
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0] * 0.98, "{}: speedup regressed: {s:?}", algo.name());
+        }
+        // near-linear at p=4 (≥3x), clearly sublinear marginal gain at 16
+        let idx4 = counts.iter().position(|&p| p == 4).unwrap();
+        assert!(s[idx4] > 2.8, "{}: poor 4-FPGA scaling: {s:?}", algo.name());
+        let idx8 = counts.iter().position(|&p| p == 8).unwrap();
+        let idx16 = counts.iter().position(|&p| p == 16).unwrap();
+        let marginal_8_16 = (s[idx16] - s[idx8]) / (16.0 - 8.0);
+        let marginal_1_8 = (s[idx8] - s[0]) / 7.0;
+        assert!(
+            marginal_8_16 <= marginal_1_8 * 1.05,
+            "{}: expected CPU-bandwidth-limited tail: {s:?}",
+            algo.name()
+        );
+    }
+    println!("\nshape check OK: monotone, ≥2.8x at p=4, diminishing marginal gain past 8");
+}

@@ -1,0 +1,97 @@
+//! Host-side micro benchmarks: the components on the coordinator's
+//! critical path (sampler, partitioner, scheduler, feature gather, JSON).
+//! These feed the §Perf analysis in EXPERIMENTS.md: sampling must outpace
+//! the simulated-FPGA batch time for Eq. 5 to be compute-bound.
+
+use hitgnn::comm::{CommConfig, FeatureService};
+use hitgnn::graph::datasets;
+use hitgnn::partition::{preprocess, Algorithm};
+use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
+use hitgnn::sched::TwoStageScheduler;
+use hitgnn::util::bench::{black_box, Bench};
+use hitgnn::util::json::Json;
+use hitgnn::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("micro_host");
+
+    // --- dataset build (R-MAT + CSR) -----------------------------------
+    let spec = datasets::lookup("ogbn-products").unwrap();
+    let m = b
+        .measure("build ogbn-products shift=5 (R-MAT+CSR)", |i| {
+            black_box(spec.build(5, i as u64))
+        })
+        .median_s;
+    let data = spec.build(5, 17);
+    b.throughput("  edge construction", data.graph.num_edges() as f64, m, "edges");
+
+    // --- partitioner ----------------------------------------------------
+    let m = b
+        .measure("LDG multi-constraint partition p=4", |i| {
+            black_box(preprocess(Algorithm::DistDgl, &data, 4, 0.2, i as u64))
+        })
+        .median_s;
+    b.throughput("  partitioning", data.graph.num_vertices() as f64, m, "vertices");
+
+    // --- sampler (the Eq. 5 critical path) ------------------------------
+    let pre = preprocess(Algorithm::DistDgl, &data, 4, 0.2, 17);
+    let cfg = FanoutConfig { batch_size: 1024, k1: 25, k2: 10 };
+    let mut sampler = Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 3);
+    let targets: Vec<u32> = pre.train_parts[0]
+        .iter()
+        .copied()
+        .take(1024)
+        .collect();
+    let ms = b
+        .measure("sample B=1024 fanout 25/10", |_| {
+            black_box(sampler.sample(&data, &targets, 0, 0))
+        })
+        .median_s;
+    let mb = sampler.sample(&data, &targets, 0, 0);
+    b.throughput("  sampling", mb.vertices_traversed() as f64, ms, "vertices");
+    println!(
+        "  (per-batch sampling {:.2} ms vs paper-model FPGA batch ≈ 5–8 ms → sampling overlaps)",
+        ms * 1e3
+    );
+
+    // --- feature gather --------------------------------------------------
+    let svc = FeatureService::new(&data.features, CommConfig::default());
+    let mg = b
+        .measure("gather feat0 (v0 x 100 f32)", |_| {
+            black_box(svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0))
+        })
+        .median_s;
+    b.throughput(
+        "  gather",
+        (mb.n_v0 * data.features.bytes_per_vertex()) as f64,
+        mg,
+        "bytes",
+    );
+
+    // --- scheduler --------------------------------------------------------
+    b.measure("two-stage scheduler: 10k-batch epoch plan (p=16)", |_| {
+        let mut s = TwoStageScheduler::new(16, true);
+        let counts: Vec<usize> = (0..16).map(|i| 600 + i * 5).collect();
+        black_box(s.plan_epoch(&counts))
+    });
+
+    // --- json (manifest-sized) ---------------------------------------------
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest_text {
+        b.measure("parse artifacts/manifest.json", |_| {
+            black_box(Json::parse(&text).unwrap())
+        });
+    }
+
+    // --- prng ---------------------------------------------------------------
+    b.measure("xoshiro256** 1M draws", |i| {
+        let mut r = Rng::new(i as u64);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(r.next_u64());
+        }
+        acc
+    });
+
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Table 5: resource utilization & estimated throughput of the two
+//! saturating accelerator configurations, FPGA-level (8,2048) vs
+//! (16,1024), GraphSAGE, averaged over the four datasets.
+//!
+//! Paper values: (8,2048): LUT 72% DSP 90% URAM 48% BRAM 40%, 97.0 M
+//! NVTPS; (16,1024): LUT 65% DSP 56% URAM 34% BRAM 28%, 92.6 M NVTPS.
+
+use hitgnn::dse::{paper_dse_workloads, DseEngine};
+use hitgnn::perf::PlatformSpec;
+use hitgnn::util::bench::Table;
+use hitgnn::util::stats::si;
+
+fn main() {
+    let engine = DseEngine::new(PlatformSpec::paper_4fpga());
+    let workloads = paper_dse_workloads(2.0); // GraphSAGE
+    let configs = [(8u32, 2048u32), (16u32, 1024u32)];
+
+    println!("\n=== Table 5: resource utilization and parallelism ===");
+    let mut t = Table::new(&[
+        "Parallelism (n,m)",
+        "LUTs",
+        "DSPs",
+        "URAM",
+        "BRAM",
+        "Est. Throughput (NVTPS)",
+    ]);
+    let mut points = Vec::new();
+    for (n, m) in configs {
+        let p = engine
+            .evaluate_fpga_config(n, m, &workloads)
+            .expect("config must be feasible");
+        t.row(&[
+            format!("({n},{m})"),
+            format!("{:.0}%", p.utilization.lut * 100.0),
+            format!("{:.0}%", p.utilization.dsp * 100.0),
+            format!("{:.0}%", p.utilization.uram * 100.0),
+            format!("{:.0}%", p.utilization.bram * 100.0),
+            si(p.throughput),
+        ]);
+        points.push(p);
+    }
+    t.print();
+    println!(
+        "\npaper: (8,2048) 72/90/48/40% @ 97.0 M — (16,1024) 65/56/34/28% @ 92.6 M"
+    );
+    assert!(
+        points[0].throughput > points[1].throughput,
+        "(8,2048) must out-perform (16,1024) as in the paper"
+    );
+    println!(
+        "shape check OK: (8,2048) beats (16,1024) by {:.1}%",
+        (points[0].throughput / points[1].throughput - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,302 @@
+//! High-level user API — the Rust rendering of the paper's Table 2.
+//!
+//! The paper exposes Python APIs (`Graph_Partition`, `Feature_Storing`,
+//! `GNN_Parameters`, `GNN_Model`, `FPGA_Metadata`, `Platform_Metadata`,
+//! `Generate_Design`, `LoadInputGraph`, `Start_training`, `Save_model`);
+//! here the same workflow is a builder:
+//!
+//! ```no_run
+//! use hitgnn::api::HitGnn;
+//! use hitgnn::partition::Algorithm;
+//!
+//! let design = HitGnn::new()
+//!     .load_input_graph("ogbn-products", 4)      // LoadInputGraph()
+//!     .graph_partition(Algorithm::DistDgl)        // Graph_Partition()
+//!     .feature_storing(0.2)                       // Feature_Storing()
+//!     .gnn_computation("gcn")                     // GNN_Computation()
+//!     .gnn_parameters(2, 128)                     // GNN_Parameters()
+//!     .fpga_metadata(hitgnn::fpga::U250)          // FPGA_Metadata()
+//!     .platform_metadata(4, 16.0, 205.0)          // Platform_Metadata()
+//!     .generate_design()                          // Generate_Design()
+//!     .unwrap();
+//! let report = design.start_training(2).unwrap(); // Start_training()
+//! design.save_model("model.json").unwrap();       // Save_model()
+//! # let _ = report;
+//! ```
+//!
+//! `generate_design()` runs the DSE engine (accelerator generator) and
+//! assembles the host-program configuration (software generator); the
+//! returned [`Design`] owns the trained state after `start_training`.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use crate::coordinator::{TrainConfig, TrainReport, Trainer};
+use crate::dse::{DseEngine, DseWorkload};
+use crate::fpga::timing::BatchShape;
+use crate::fpga::{DieConfig, FpgaSpec};
+use crate::graph::datasets;
+use crate::partition::Algorithm;
+use crate::perf::PlatformSpec;
+use crate::util::json::Json;
+
+/// Builder for a HitGNN design (the "input program" of Fig. 3).
+#[derive(Clone, Debug)]
+pub struct HitGnn {
+    dataset: Option<String>,
+    scale_shift: u32,
+    algo: Algorithm,
+    cache_ratio: f64,
+    model: Option<String>,
+    layers: usize,
+    hidden: usize,
+    fpga: FpgaSpec,
+    num_fpgas: usize,
+    pcie_gbs: f64,
+    cpu_mem_gbs: f64,
+    seed: u64,
+}
+
+impl Default for HitGnn {
+    fn default() -> Self {
+        HitGnn {
+            dataset: None,
+            scale_shift: 4,
+            algo: Algorithm::DistDgl,
+            cache_ratio: 0.2,
+            model: None,
+            layers: 2,
+            hidden: 128,
+            fpga: crate::fpga::U250,
+            num_fpgas: 4,
+            pcie_gbs: 16.0,
+            cpu_mem_gbs: 205.0,
+            seed: 42,
+        }
+    }
+}
+
+impl HitGnn {
+    pub fn new() -> HitGnn {
+        HitGnn::default()
+    }
+
+    /// `LoadInputGraph()`: dataset key + scale shift (execution path).
+    pub fn load_input_graph(mut self, dataset: &str, scale_shift: u32) -> Self {
+        self.dataset = Some(dataset.to_string());
+        self.scale_shift = scale_shift;
+        self
+    }
+
+    /// `Graph_Partition()`: the synchronous training algorithm's
+    /// partitioning strategy (Table 1).
+    pub fn graph_partition(mut self, algo: Algorithm) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// `Feature_Storing()`: cache capacity fraction for caching strategies.
+    pub fn feature_storing(mut self, cache_ratio: f64) -> Self {
+        self.cache_ratio = cache_ratio;
+        self
+    }
+
+    /// `GNN_Computation()`: "gcn" | "sage" (the kernel-library models).
+    pub fn gnn_computation(mut self, model: &str) -> Self {
+        self.model = Some(model.to_string());
+        self
+    }
+
+    /// `GNN_Parameters()`: L and hidden dim. This reproduction ships L=2
+    /// artifacts with hidden 128 (the paper's evaluation configuration);
+    /// other values are validated against the artifact set at
+    /// `generate_design` time.
+    pub fn gnn_parameters(mut self, layers: usize, hidden: usize) -> Self {
+        self.layers = layers;
+        self.hidden = hidden;
+        self
+    }
+
+    /// `FPGA_Metadata()`.
+    pub fn fpga_metadata(mut self, fpga: FpgaSpec) -> Self {
+        self.fpga = fpga;
+        self
+    }
+
+    /// `Platform_Metadata()`.
+    pub fn platform_metadata(mut self, num_fpgas: usize, pcie_gbs: f64, cpu_mem_gbs: f64) -> Self {
+        self.num_fpgas = num_fpgas;
+        self.pcie_gbs = pcie_gbs;
+        self.cpu_mem_gbs = cpu_mem_gbs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `Generate_Design()`: run the DSE engine for the accelerator
+    /// configuration and assemble the host-program configuration.
+    pub fn generate_design(self) -> anyhow::Result<Design> {
+        let dataset = self.dataset.clone().ok_or_else(|| {
+            anyhow::anyhow!("call load_input_graph() before generate_design()")
+        })?;
+        let model = self
+            .model
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("call gnn_computation() before generate_design()"))?;
+        anyhow::ensure!(
+            self.layers == 2,
+            "this reproduction ships 2-layer artifacts (got L={})",
+            self.layers
+        );
+        anyhow::ensure!(
+            self.hidden == 128,
+            "artifacts are built with hidden=128 (got {}); re-run `make artifacts`",
+            self.hidden
+        );
+        let spec = datasets::lookup(&dataset)?;
+
+        let platform = PlatformSpec {
+            num_fpgas: self.num_fpgas,
+            fpga: self.fpga,
+            pcie_gbs: self.pcie_gbs,
+            cpu_mem_gbs: self.cpu_mem_gbs,
+        };
+        // accelerator generator: DSE over this dataset's dims
+        let engine = DseEngine::new(platform);
+        let dse = engine.explore(&[DseWorkload {
+            shape: BatchShape::nominal(
+                1024.0,
+                25.0,
+                10.0,
+                [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
+            ),
+            beta: 0.75,
+            param_scale: if model == "sage" { 2.0 } else { 1.0 },
+            sampling_s_per_batch: 2e-3,
+        }])?;
+
+        // software generator: the host-program configuration
+        let train = TrainConfig {
+            dataset,
+            model,
+            algo: self.algo,
+            num_fpgas: self.num_fpgas,
+            scale_shift: self.scale_shift,
+            cache_ratio: self.cache_ratio,
+            seed: self.seed,
+            ..TrainConfig::default()
+        };
+
+        Ok(Design {
+            platform,
+            accelerator: dse.best.die,
+            estimated_nvtps: dse.best.throughput,
+            train,
+            trained: RefCell::new(None),
+        })
+    }
+}
+
+/// A generated design: accelerator configuration + host program, ready to
+/// train (`Start_training()`) and save (`Save_model()`).
+pub struct Design {
+    pub platform: PlatformSpec,
+    /// Per-die accelerator configuration chosen by the DSE engine.
+    pub accelerator: DieConfig,
+    pub estimated_nvtps: f64,
+    pub train: TrainConfig,
+    trained: RefCell<Option<crate::coordinator::params::ParamSet>>,
+}
+
+impl Design {
+    /// FPGA-level (n, m) as the paper reports it.
+    pub fn fpga_parallelism(&self) -> (u32, u32) {
+        let d = self.platform.fpga.dies as u32;
+        (self.accelerator.n * d, self.accelerator.m * d)
+    }
+
+    /// `Start_training()`: run the host program for `epochs`.
+    pub fn start_training(&self, epochs: usize) -> anyhow::Result<TrainReport> {
+        let mut cfg = self.train.clone();
+        cfg.epochs = epochs;
+        let mut trainer = Trainer::new(cfg)?;
+        let report = trainer.run()?;
+        *self.trained.borrow_mut() = Some(trainer.params.clone());
+        trainer.shutdown();
+        Ok(report)
+    }
+
+    /// `Save_model()`: write the trained parameters as JSON.
+    pub fn save_model(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let trained = self.trained.borrow();
+        let params = trained
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no trained model — call start_training() first"))?;
+        let obj = Json::obj(
+            params
+                .names
+                .iter()
+                .zip(&params.data)
+                .map(|(n, d)| {
+                    (
+                        n.as_str(),
+                        Json::arr(d.iter().map(|&x| Json::num(x as f64)).collect()),
+                    )
+                })
+                .collect(),
+        );
+        std::fs::write(path.as_ref(), obj.to_string())
+            .map_err(|e| anyhow::anyhow!("writing model: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_requires_graph_and_model() {
+        assert!(HitGnn::new().generate_design().is_err());
+        assert!(HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .generate_design()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_validates_artifact_coverage() {
+        let r = HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .gnn_computation("gcn")
+            .gnn_parameters(3, 128)
+            .generate_design();
+        assert!(r.is_err()); // L=3 not shipped
+    }
+
+    #[test]
+    fn generate_design_runs_dse() {
+        let d = HitGnn::new()
+            .load_input_graph("ogbn-products", 6)
+            .graph_partition(Algorithm::PaGraph)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert!(d.estimated_nvtps > 0.0);
+        let (n, m) = d.fpga_parallelism();
+        assert!(n >= 4 && m >= 64);
+        assert_eq!(d.train.algo, Algorithm::PaGraph);
+    }
+
+    #[test]
+    fn save_model_before_training_errors() {
+        let d = HitGnn::new()
+            .load_input_graph("ogbn-products", 6)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert!(d.save_model("/tmp/should_not_exist.json").is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! The `hitgnn` launcher.
+
+use crate::dse::{paper_dse_workloads, DseEngine};
+use crate::fpga::DieConfig;
+use crate::graph::datasets;
+use crate::partition::Algorithm;
+use crate::perf::{PlatformModel, PlatformSpec, Workload};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+use crate::util::stats::si;
+
+const HELP: &str = "\
+hitgnn — HitGNN: high-throughput GNN training on CPU+Multi-FPGA (reproduction)
+
+USAGE:
+    hitgnn <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    train      run synchronous GNN training (real PJRT execution path)
+    dse        run the hardware design-space exploration engine (§6)
+    simulate   analytic platform estimate for one configuration (§6.2)
+    info       print the dataset registry and platform metadata
+    help       show this message
+
+TRAIN OPTIONS:
+    --dataset <reddit|yelp|amazon|ogbn-products>   (default ogbn-products)
+    --model <gcn|sage>           --algo <distdgl|pagraph|p3>
+    --fpgas <p>                  --epochs <n>
+    --lr <f>                     --momentum <f>
+    --scale-shift <s>            graph scaled to |V|/2^s (default 4)
+    --cache-ratio <f>            PaGraph cache fraction (default 0.2)
+    --no-wb / --no-dc            disable an optimization (ablation)
+    --prefetch                   prepare batch i+1 while i executes (§8)
+    --max-iterations <n>         cap iterations per epoch
+    --seed <u64>                 --artifacts <dir>
+    --report <file.json>         write the training report
+
+DSE OPTIONS:
+    --model <gcn|sage>           --fpgas <p>
+    --m-step <k>                 update-PE sweep granularity (default 16)
+
+SIMULATE OPTIONS:
+    --dataset --model --algo --fpgas --no-wb --no-dc as above
+    --beta <f>                   local-fetch ratio (default 0.75)
+    --batch <B> --k1 <k> --k2 <k>  mini-batch configuration (1024/25/10)
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn main_entry() -> i32 {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("dse") => cmd_dse(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("info") => cmd_info(args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}' (try `hitgnn help`)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = super::config::TrainConfig::from_args(args)?;
+    let report_path = args.opt_str("report");
+    args.finish()?;
+    let mut trainer = super::trainer::Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    let acc = trainer.evaluate(4)?;
+    println!("final mean loss: {:.4}", report.last_loss());
+    println!("train-set accuracy (4 batches): {:.3}", acc);
+    if let Some(path) = report_path {
+        report.save(std::path::Path::new(&path))?;
+        println!("report written to {path}");
+    }
+    trainer.shutdown();
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let model = args.str("model", "sage");
+    let p: usize = args.num("fpgas", 4)?;
+    let m_step: u32 = args.num("m-step", 16)?;
+    args.finish()?;
+    let param_scale = if model == "sage" { 2.0 } else { 1.0 };
+    let mut spec = PlatformSpec::paper_4fpga();
+    spec.num_fpgas = p;
+    let mut engine = DseEngine::new(spec);
+    engine.m_step = m_step;
+    let res = engine.explore(&paper_dse_workloads(param_scale))?;
+    println!(
+        "search space: n ≤ {} per die, m ≤ {} per die ({} feasible points)",
+        res.n_max,
+        res.m_max,
+        res.grid.len()
+    );
+    let b = &res.best;
+    println!(
+        "best: FPGA-level (n={}, m={}) → estimated {} NVTPS",
+        b.n_fpga,
+        b.m_fpga,
+        si(b.throughput)
+    );
+    println!(
+        "utilization: DSP {:.0}%  LUT {:.0}%  URAM {:.0}%  BRAM {:.0}%",
+        b.utilization.dsp * 100.0,
+        b.utilization.lut * 100.0,
+        b.utilization.uram * 100.0,
+        b.utilization.bram * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.str("dataset", "ogbn-products");
+    let model = args.str("model", "gcn");
+    let _algo = Algorithm::parse(&args.str("algo", "distdgl"))?;
+    let p: usize = args.num("fpgas", 4)?;
+    let beta: f64 = args.num("beta", 0.75)?;
+    let batch: f64 = args.num("batch", 1024.0)?;
+    let k1: f64 = args.num("k1", 25.0)?;
+    let k2: f64 = args.num("k2", 10.0)?;
+    let wb = !args.flag("no-wb");
+    let dc = !args.flag("no-dc");
+    args.finish()?;
+
+    let spec = datasets::lookup(&dataset)?;
+    let mut plat = PlatformSpec::paper_4fpga();
+    plat.num_fpgas = p;
+    let model_scale = if model == "sage" { 2.0 } else { 1.0 };
+    let shape = crate::fpga::timing::BatchShape::nominal(
+        batch,
+        k1,
+        k2,
+        [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
+    );
+    let batches = (spec.vertices as f64 * spec.train_frac / batch).ceil() as usize;
+    let w = Workload {
+        shape,
+        beta,
+        param_scale: model_scale,
+        sampling_s_per_batch: 2e-3,
+        batches_per_part: vec![batches / p.max(1); p],
+        workload_balancing: wb,
+        direct_host_fetch: dc,
+        extra_pcie_bytes_per_batch: 0.0,
+            prefetch: false,
+    };
+    let pm = PlatformModel::new(plat, DieConfig { n: 2, m: 512 });
+    let est = pm.epoch(&w);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["epoch time (s)".into(), format!("{:.3}", est.epoch_s)]);
+    t.row(&["iterations".into(), est.iterations.to_string()]);
+    t.row(&["throughput (NVTPS)".into(), si(est.nvtps)]);
+    t.row(&["BW efficiency (NVTPS/(GB/s))".into(), si(est.bw_efficiency)]);
+    t.row(&["per-batch GNN time (ms)".into(), format!("{:.3}", est.batch_gnn_s * 1e3)]);
+    t.row(&["gradient sync (ms)".into(), format!("{:.3}", est.gradient_sync_s * 1e3)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let mut t = Table::new(&["dataset", "|V|", "|E|", "f0", "f1", "f2", "train%"]);
+    for s in &datasets::REGISTRY {
+        t.row(&[
+            s.key.to_string(),
+            s.vertices.to_string(),
+            s.edges.to_string(),
+            s.dims.f0.to_string(),
+            s.dims.f1.to_string(),
+            s.dims.f2.to_string(),
+            format!("{:.0}%", s.train_frac * 100.0),
+        ]);
+    }
+    t.print();
+    let f = crate::fpga::U250;
+    println!(
+        "\nFPGA: {} — {} dies, {} DSP/die, {} kLUT/die, {:.2} GB/s DDR/die, {} MHz",
+        f.name,
+        f.dies,
+        f.dsp_per_die,
+        f.lut_per_die / 1000,
+        f.ddr_gbs_per_die,
+        f.freq_mhz
+    );
+    let p = PlatformSpec::paper_4fpga();
+    println!(
+        "platform: {} FPGAs, PCIe {} GB/s per link, CPU mem {} GB/s (total BW {} GB/s)",
+        p.num_fpgas,
+        p.pcie_gbs,
+        p.cpu_mem_gbs,
+        p.total_bandwidth_gbs()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_runs() {
+        run(&Args::parse(["help"])).unwrap();
+        run(&Args::parse(Vec::<String>::new())).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&Args::parse(["bogus"])).is_err());
+    }
+
+    #[test]
+    fn info_and_simulate_run() {
+        run(&Args::parse(["info"])).unwrap();
+        run(&Args::parse(["simulate", "--dataset", "reddit", "--fpgas", "4"])).unwrap();
+    }
+
+    #[test]
+    fn dse_runs_with_coarse_step() {
+        run(&Args::parse(["dse", "--m-step", "128"])).unwrap();
+    }
+}

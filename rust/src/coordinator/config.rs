@@ -1,0 +1,150 @@
+//! Training-run configuration.
+
+use std::path::PathBuf;
+
+use crate::partition::Algorithm;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Everything a training run needs (the "user program" of Listing 1).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: String,
+    /// "gcn" | "sage".
+    pub model: String,
+    pub algo: Algorithm,
+    /// Simulated FPGAs (= partitions = workers).
+    pub num_fpgas: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Dataset scale shift (|V|,|E| ÷ 2^shift) for the execution path.
+    pub scale_shift: u32,
+    /// PaGraph cache capacity as a fraction of |V|.
+    pub cache_ratio: f64,
+    /// WB optimization (two-stage scheduling).
+    pub workload_balancing: bool,
+    /// DC optimization (direct host fetch).
+    pub direct_host_fetch: bool,
+    /// §8 future-work extension: prepare iteration i+1's batches (sample +
+    /// feature gather) while the workers execute iteration i.
+    pub prefetch: bool,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+    /// Cap on iterations per epoch (None = full epoch); lets examples and
+    /// benches bound wall-clock.
+    pub max_iterations: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: "ogbn-products".into(),
+            model: "gcn".into(),
+            algo: Algorithm::DistDgl,
+            num_fpgas: 4,
+            epochs: 1,
+            lr: 0.05,
+            momentum: 0.9,
+            scale_shift: 4,
+            cache_ratio: 0.2,
+            workload_balancing: true,
+            direct_host_fetch: true,
+            prefetch: false,
+            seed: 42,
+            artifacts_dir: crate::runtime::Manifest::default_dir(),
+            max_iterations: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse from CLI arguments (shared by `hitgnn train` and examples).
+    pub fn from_args(args: &Args) -> anyhow::Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let cfg = TrainConfig {
+            dataset: args.str("dataset", &d.dataset),
+            model: args.str("model", &d.model),
+            algo: Algorithm::parse(&args.str("algo", "distdgl"))?,
+            num_fpgas: args.num("fpgas", d.num_fpgas)?,
+            epochs: args.num("epochs", d.epochs)?,
+            lr: args.num("lr", d.lr)?,
+            momentum: args.num("momentum", d.momentum)?,
+            scale_shift: args.num("scale-shift", d.scale_shift)?,
+            cache_ratio: args.num("cache-ratio", d.cache_ratio)?,
+            workload_balancing: !args.flag("no-wb"),
+            direct_host_fetch: !args.flag("no-dc"),
+            prefetch: args.flag("prefetch"),
+            seed: args.num("seed", d.seed)?,
+            artifacts_dir: PathBuf::from(
+                args.str("artifacts", &d.artifacts_dir.display().to_string()),
+            ),
+            max_iterations: args.opt_str("max-iterations").map(|s| s.parse()).transpose()?,
+        };
+        anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
+        anyhow::ensure!(cfg.epochs >= 1, "--epochs must be >= 1");
+        Ok(cfg)
+    }
+
+    /// JSON round-trip (for the training report and saved runs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("model", Json::str(&self.model)),
+            ("algo", Json::str(self.algo.name())),
+            ("num_fpgas", Json::num(self.num_fpgas as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("momentum", Json::num(self.momentum as f64)),
+            ("scale_shift", Json::num(self.scale_shift as f64)),
+            ("cache_ratio", Json::num(self.cache_ratio)),
+            ("workload_balancing", Json::Bool(self.workload_balancing)),
+            ("direct_host_fetch", Json::Bool(self.direct_host_fetch)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.num_fpgas, 4);
+        assert!(c.workload_balancing && c.direct_host_fetch);
+    }
+
+    #[test]
+    fn parses_cli_overrides() {
+        let args = Args::parse([
+            "train", "--dataset", "reddit", "--model", "sage", "--algo", "pagraph",
+            "--fpgas", "2", "--no-wb", "--lr", "0.1",
+        ]);
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.dataset, "reddit");
+        assert_eq!(c.model, "sage");
+        assert_eq!(c.algo, Algorithm::PaGraph);
+        assert_eq!(c.num_fpgas, 2);
+        assert!(!c.workload_balancing);
+        assert!(c.direct_host_fetch);
+        assert_eq!(c.lr, 0.1);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let args = Args::parse(["train", "--fpgas", "0"]);
+        assert!(TrainConfig::from_args(&args).is_err());
+        let args = Args::parse(["train", "--algo", "bogus"]);
+        assert!(TrainConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let c = TrainConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.req_str("algo").unwrap(), "DistDGL");
+        assert_eq!(j.req_usize("num_fpgas").unwrap(), 4);
+    }
+}

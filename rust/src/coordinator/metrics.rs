@@ -1,0 +1,107 @@
+//! Per-epoch measurements and the JSON training report.
+
+use crate::util::json::Json;
+
+/// Measurements from one epoch of real execution.
+#[derive(Clone, Debug, Default)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub final_loss: f64,
+    pub wall_seconds: f64,
+    pub iterations: usize,
+    pub batches: usize,
+    /// Σ over batches of (|V^0|+|V^1|+|V^2|) — the NVTPS numerator.
+    pub vertices_traversed: u64,
+    /// Measured execution-path throughput (CPU-PJRT, not FPGA-projected).
+    pub nvtps: f64,
+    /// Measured local-fetch ratio (Eq. 7's β) across all batches.
+    pub beta: f64,
+    pub local_bytes: u64,
+    pub host_bytes: u64,
+    pub f2f_bytes: u64,
+    /// Host-side time breakdown (seconds, summed over the epoch).
+    pub sample_seconds: f64,
+    pub gather_seconds: f64,
+    pub execute_seconds: f64,
+    pub sync_seconds: f64,
+}
+
+impl EpochMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("mean_loss", Json::num(self.mean_loss)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("vertices_traversed", Json::num(self.vertices_traversed as f64)),
+            ("nvtps", Json::num(self.nvtps)),
+            ("beta", Json::num(self.beta)),
+            ("local_bytes", Json::num(self.local_bytes as f64)),
+            ("host_bytes", Json::num(self.host_bytes as f64)),
+            ("f2f_bytes", Json::num(self.f2f_bytes as f64)),
+            ("sample_seconds", Json::num(self.sample_seconds)),
+            ("gather_seconds", Json::num(self.gather_seconds)),
+            ("execute_seconds", Json::num(self.execute_seconds)),
+            ("sync_seconds", Json::num(self.sync_seconds)),
+        ])
+    }
+}
+
+/// Full training report (config + per-epoch metrics + measured shapes).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub config: Json,
+    pub epochs: Vec<EpochMetrics>,
+    /// Mean measured mini-batch shape: [v0, v1, v2, a1, a2].
+    pub mean_shape: [f64; 5],
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.clone()),
+            (
+                "epochs",
+                Json::arr(self.epochs.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
+                "mean_shape",
+                Json::arr(self.mean_shape.iter().map(|&x| Json::num(x)).collect()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Loss of the last epoch (convergence check for tests/examples).
+    pub fn last_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.mean_loss).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_serialises_and_reparses() {
+        let report = TrainReport {
+            config: Json::obj(vec![("model", Json::str("gcn"))]),
+            epochs: vec![EpochMetrics { epoch: 0, mean_loss: 1.5, ..Default::default() }],
+            mean_shape: [5.0, 4.0, 3.0, 2.0, 1.0],
+        };
+        let text = report.to_json().pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("epochs").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.get("config").unwrap().req_str("model").unwrap(),
+            "gcn"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! The HitGNN host program (software-generator output, §4.1–4.2).
+//!
+//! The coordinator is what the paper's generated host program does at
+//! runtime: graph preprocessing, mini-batch sampling, two-stage task
+//! scheduling, CPU→FPGA feature service, dispatch to the (simulated) FPGA
+//! workers, gradient synchronisation, and the weight update — synchronous
+//! SGD across `p` devices (Algorithm 2 + §2.3).
+//!
+//! - [`config`]  — run configuration (CLI / JSON)
+//! - [`params`]  — parameter set + SGD-with-momentum optimizer
+//! - [`worker`]  — per-FPGA worker threads running the PJRT executors
+//! - [`trainer`] — the epoch loop tying everything together
+//! - [`metrics`] — per-epoch measurements and the JSON training report
+//! - [`cli`]     — the `hitgnn` launcher
+
+pub mod cli;
+pub mod config;
+pub mod metrics;
+pub mod params;
+pub mod trainer;
+pub mod worker;
+
+pub use config::TrainConfig;
+pub use metrics::{EpochMetrics, TrainReport};
+pub use trainer::Trainer;

@@ -1,0 +1,180 @@
+//! Model parameters and the synchronous-SGD weight update.
+//!
+//! Parameters live on the host in artifact order; after every iteration
+//! the coordinator averages the per-FPGA gradients (gradient
+//! synchronisation, §4.2) and applies SGD with momentum, then broadcasts
+//! the updated weights (in the simulation: shares the new `Arc`).
+
+use crate::runtime::ArtifactEntry;
+use crate::util::rng::Rng;
+
+/// Flat parameter set in artifact order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub data: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Glorot-initialised parameters matching an artifact's shapes
+    /// (biases — rank-1 params — start at zero).
+    pub fn init(entry: &ArtifactEntry, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed ^ 0x9a2a);
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut data = Vec::new();
+        for (name, shape) in &entry.params {
+            let n: usize = shape.iter().product();
+            let buf = if shape.len() >= 2 {
+                let scale = (2.0 / (shape[0] + shape[1]) as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+            } else {
+                vec![0.0f32; n]
+            };
+            names.push(name.clone());
+            shapes.push(shape.clone());
+            data.push(buf);
+        }
+        ParamSet { names, shapes, data }
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.data.iter().map(|d| d.len()).sum()
+    }
+
+    /// L2 norm over all parameters (diagnostics / tests).
+    pub fn norm(&self) -> f64 {
+        self.data
+            .iter()
+            .flat_map(|d| d.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Average gradients across workers (synchronous SGD's reduction).
+pub fn average_grads(grads: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    assert!(!grads.is_empty());
+    let p = grads.len() as f32;
+    let mut avg: Vec<Vec<f32>> = grads[0].clone();
+    for g in &grads[1..] {
+        assert_eq!(g.len(), avg.len(), "gradient arity mismatch");
+        for (a, gi) in avg.iter_mut().zip(g) {
+            assert_eq!(a.len(), gi.len(), "gradient shape mismatch");
+            for (x, y) in a.iter_mut().zip(gi) {
+                *x += *y;
+            }
+        }
+    }
+    for a in avg.iter_mut() {
+        for x in a.iter_mut() {
+            *x /= p;
+        }
+    }
+    avg
+}
+
+/// SGD with momentum.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, params: &ParamSet) -> Sgd {
+        Sgd {
+            lr,
+            momentum,
+            velocity: params.data.iter().map(|d| vec![0.0; d.len()]).collect(),
+        }
+    }
+
+    /// In-place update: v = μ·v + g;  w -= lr·v.
+    pub fn step(&mut self, params: &mut ParamSet, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), params.data.len());
+        for ((w, v), g) in params.data.iter_mut().zip(&mut self.velocity).zip(grads) {
+            assert_eq!(w.len(), g.len());
+            for i in 0..w.len() {
+                v[i] = self.momentum * v[i] + g[i];
+                w[i] -= self.lr * v[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn entry() -> ArtifactEntry {
+        ArtifactEntry {
+            name: "t".into(),
+            kind: "train".into(),
+            model: "gcn".into(),
+            dataset: "tiny".into(),
+            path: PathBuf::from("/dev/null"),
+            dims: crate::runtime::ArtifactDims {
+                b: 4, k1: 2, k2: 1, v1_cap: 8, v0_cap: 24, f0: 6, f1: 5, f2: 3,
+            },
+            params: vec![
+                ("w1".into(), vec![6, 5]),
+                ("b1".into(), vec![5]),
+                ("w2".into(), vec![5, 3]),
+                ("b2".into(), vec![3]),
+            ],
+            outputs: vec!["loss".into()],
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_bias_zero() {
+        let p = ParamSet::init(&entry(), 1);
+        assert_eq!(p.num_elems(), 30 + 5 + 15 + 3);
+        assert!(p.data[1].iter().all(|&x| x == 0.0)); // b1
+        assert!(p.data[0].iter().any(|&x| x != 0.0)); // w1
+        // deterministic
+        let q = ParamSet::init(&entry(), 1);
+        assert_eq!(p.data, q.data);
+        assert_ne!(p.data, ParamSet::init(&entry(), 2).data);
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let g1 = vec![vec![1.0f32, 2.0], vec![0.0]];
+        let g2 = vec![vec![3.0f32, 6.0], vec![2.0]];
+        let avg = average_grads(&[g1, g2]);
+        assert_eq!(avg, vec![vec![2.0, 4.0], vec![1.0]]);
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = ParamSet::init(&entry(), 3);
+        let w0 = p.data[0][0];
+        let mut opt = Sgd::new(0.1, 0.0, &p);
+        let grads: Vec<Vec<f32>> = p.data.iter().map(|d| vec![1.0; d.len()]).collect();
+        opt.step(&mut p, &grads);
+        assert!((p.data[0][0] - (w0 - 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut p = ParamSet::init(&entry(), 4);
+        let w0 = p.data[0][0];
+        let mut opt = Sgd::new(0.1, 0.5, &p);
+        let grads: Vec<Vec<f32>> = p.data.iter().map(|d| vec![1.0; d.len()]).collect();
+        opt.step(&mut p, &grads); // v=1, w -= .1
+        opt.step(&mut p, &grads); // v=1.5, w -= .15
+        assert!((p.data[0][0] - (w0 - 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn average_rejects_mismatched_arity() {
+        average_grads(&[vec![vec![1.0]], vec![vec![1.0], vec![2.0]]]);
+    }
+}

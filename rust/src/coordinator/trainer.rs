@@ -1,0 +1,319 @@
+//! The training driver: preprocessing → epochs of (sample → gather →
+//! dispatch → gradient sync → weight update), with full measurement.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::config::TrainConfig;
+use super::metrics::{EpochMetrics, TrainReport};
+use super::params::{average_grads, ParamSet, Sgd};
+use super::worker::{WorkItem, WorkerPool};
+use crate::comm::{CommConfig, FeatureService};
+use crate::graph::{datasets, Dataset};
+use crate::partition::{preprocess, Preprocessed};
+use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
+use crate::sampling::{EpochPlan, MiniBatch, Sampler, WeightMode};
+use crate::sched::TwoStageScheduler;
+use crate::util::rng::Rng;
+
+/// Everything needed to train; build with [`Trainer::new`], run with
+/// [`Trainer::run`].
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub data: Dataset,
+    pub pre: Preprocessed,
+    entry: ArtifactEntry,
+    pool: WorkerPool,
+    pub params: ParamSet,
+    opt: Sgd,
+    samplers: Vec<Sampler>,
+    rng: Rng,
+    /// Accumulated mean batch shape [v0, v1, v2, a1, a2].
+    shape_acc: [f64; 5],
+    shape_n: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        let spec = datasets::lookup(&cfg.dataset)?;
+        let data = spec.build(cfg.scale_shift, cfg.seed);
+        crate::log_info!("dataset: {}", data.summary());
+
+        let pre = preprocess(cfg.algo, &data, cfg.num_fpgas, cfg.cache_ratio, cfg.seed);
+        crate::log_info!(
+            "preprocessed with {}: imbalance={:.3} edge_cut={:?}",
+            cfg.algo.name(),
+            pre.train_imbalance(),
+            pre.edge_cut(&data.graph).map(|c| (c * 1000.0).round() / 1000.0)
+        );
+
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let entry = manifest.find("train", &cfg.model, &cfg.dataset)?.clone();
+        anyhow::ensure!(
+            entry.dims.f0 == data.spec.dims.f0,
+            "artifact f0 {} != dataset f0 {}",
+            entry.dims.f0,
+            data.spec.dims.f0
+        );
+
+        let pool = WorkerPool::spawn(&entry, cfg.num_fpgas)?;
+        let params = ParamSet::init(&entry, cfg.seed);
+        let opt = Sgd::new(cfg.lr, cfg.momentum, &params);
+
+        let mode = WeightMode::for_model(&cfg.model)?;
+        let fanout = entry.dims.fanout_config();
+        let mut rng = Rng::new(cfg.seed ^ 0x7a11);
+        let samplers = (0..cfg.num_fpgas)
+            .map(|i| {
+                Sampler::new(fanout, mode, data.graph.num_vertices(), rng.fork(i as u64).next_u64())
+            })
+            .collect();
+
+        Ok(Trainer {
+            cfg,
+            data,
+            pre,
+            entry,
+            pool,
+            params,
+            opt,
+            samplers,
+            rng,
+            shape_acc: [0.0; 5],
+            shape_n: 0.0,
+        })
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Run the configured number of epochs; returns the full report.
+    pub fn run(&mut self) -> anyhow::Result<TrainReport> {
+        let mut epochs = Vec::new();
+        for epoch in 0..self.cfg.epochs {
+            let m = self.run_epoch(epoch)?;
+            crate::log_info!(
+                "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3}",
+                epoch,
+                m.mean_loss,
+                m.wall_seconds,
+                m.iterations,
+                crate::util::stats::si(m.nvtps),
+                m.beta
+            );
+            epochs.push(m);
+        }
+        Ok(TrainReport {
+            config: self.cfg.to_json(),
+            epochs,
+            mean_shape: self.mean_shape(),
+        })
+    }
+
+    /// Mean measured batch shape [v0, v1, v2, a1, a2] over all batches so
+    /// far (drives the analytic benches with real dedup statistics).
+    pub fn mean_shape(&self) -> [f64; 5] {
+        if self.shape_n == 0.0 {
+            return [0.0; 5];
+        }
+        let mut s = self.shape_acc;
+        for x in s.iter_mut() {
+            *x /= self.shape_n;
+        }
+        s
+    }
+
+    fn record_shape(&mut self, mb: &MiniBatch) {
+        self.shape_acc[0] += mb.n_v0 as f64;
+        self.shape_acc[1] += mb.n_v1 as f64;
+        self.shape_acc[2] += mb.n_targets as f64;
+        self.shape_acc[3] += mb.edges_layer1() as f64;
+        self.shape_acc[4] += mb.edges_layer2() as f64;
+        self.shape_n += 1.0;
+    }
+
+    /// Sample + gather every task of one iteration plan (the host-side
+    /// batch preparation; does not touch `self.params`, so with
+    /// prefetching it can run while the workers execute the previous
+    /// iteration).
+    fn prepare_iteration(
+        &mut self,
+        iter_plan: &crate::sched::IterationPlan,
+        plan: &mut EpochPlan,
+        remaining: &mut [usize],
+        m: &mut EpochMetrics,
+    ) -> anyhow::Result<Vec<(usize, usize, BatchBuffers)>> {
+        let comm = CommConfig { direct_host_fetch: self.cfg.direct_host_fetch };
+        let f0 = self.data.features.feat_dim();
+        let mut items = Vec::with_capacity(iter_plan.tasks.len());
+        for (tag, task) in iter_plan.tasks.iter().enumerate() {
+            remaining[task.part] -= 1;
+            let t0 = Instant::now();
+            let targets = plan
+                .next_targets(task.part)
+                .ok_or_else(|| anyhow::anyhow!("partition {} exhausted early", task.part))?
+                .to_vec();
+            let mb = self.samplers[task.part].sample(&self.data, &targets, task.part, tag);
+            m.sample_seconds += t0.elapsed().as_secs_f64();
+            self.record_shape(&mb);
+            m.vertices_traversed += mb.vertices_traversed() as u64;
+            m.batches += 1;
+
+            // host feature service: gather + traffic accounting against
+            // the *executing* FPGA's store
+            let t1 = Instant::now();
+            let svc = FeatureService::new(&self.data.features, comm);
+            let (feat0, traffic) = svc.gather(
+                &mb,
+                &self.pre.stores[task.fpga],
+                self.pre.vertex_part.as_deref(),
+                task.fpga,
+            );
+            m.gather_seconds += t1.elapsed().as_secs_f64();
+            m.local_bytes += traffic.local_bytes;
+            m.host_bytes += traffic.host_bytes;
+            m.f2f_bytes += traffic.f2f_bytes;
+
+            items.push((task.fpga, tag, BatchBuffers::from_minibatch(&mb, feat0, f0)));
+        }
+        Ok(items)
+    }
+
+    /// One epoch of synchronous training. With `cfg.prefetch` the next
+    /// iteration's batches are prepared while the workers execute the
+    /// current one (§8 future-work extension; `--prefetch` on the CLI).
+    pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochMetrics> {
+        let cfg = self.cfg.clone();
+        let p = cfg.num_fpgas;
+        let t_epoch = Instant::now();
+
+        let mut plan = EpochPlan::new(
+            &self.pre.train_parts,
+            self.entry.dims.b,
+            &mut self.rng,
+        );
+        let mut sched = TwoStageScheduler::new(p, cfg.workload_balancing);
+
+        let mut m = EpochMetrics { epoch, ..Default::default() };
+        let mut loss_sum = 0.0f64;
+        let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+
+        // prepare the first iteration
+        let mut next_prepared = {
+            match sched.plan_iteration(&remaining) {
+                Some(ip) => {
+                    let items = self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?;
+                    Some(items)
+                }
+                None => None,
+            }
+        };
+
+        while let Some(items) = next_prepared.take() {
+            if let Some(maxit) = cfg.max_iterations {
+                if m.iterations >= maxit {
+                    break;
+                }
+            }
+            let params = Arc::new(self.params.data.clone());
+            let submitted = items.len();
+            for (fpga, tag, batch) in items {
+                self.pool.submit(fpga, WorkItem { params: params.clone(), batch, tag })?;
+            }
+
+            // prefetch: prepare iteration i+1 while the workers execute i
+            // (skip when the iteration cap would discard the prepared work)
+            let next_allowed = cfg.max_iterations.map_or(true, |mx| m.iterations + 1 < mx);
+            if cfg.prefetch && next_allowed {
+                if let Some(ip) = sched.plan_iteration(&remaining) {
+                    next_prepared =
+                        Some(self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?);
+                }
+            }
+
+            // gradient synchronisation barrier
+            let t2 = Instant::now();
+            let results = self.pool.collect(submitted)?;
+            let mut grads = Vec::with_capacity(submitted);
+            for r in results {
+                let out = r.result?;
+                m.execute_seconds += r.exec_seconds;
+                loss_sum += out.loss as f64;
+                m.final_loss = out.loss as f64;
+                grads.push(out.grads);
+            }
+            let avg = average_grads(&grads);
+            self.opt.step(&mut self.params, &avg);
+            m.sync_seconds += t2.elapsed().as_secs_f64();
+            m.iterations += 1;
+
+            // non-prefetch path: prepare the next iteration after the sync
+            // (same iteration-cap guard so capped runs don't count
+            // prepared-but-never-executed batches in the metrics)
+            let next_allowed = cfg.max_iterations.map_or(true, |mx| m.iterations < mx);
+            if !cfg.prefetch && next_allowed {
+                if let Some(ip) = sched.plan_iteration(&remaining) {
+                    next_prepared =
+                        Some(self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?);
+                }
+            }
+        }
+
+        m.wall_seconds = t_epoch.elapsed().as_secs_f64();
+        m.mean_loss = loss_sum / m.batches.max(1) as f64;
+        m.nvtps = m.vertices_traversed as f64 / m.wall_seconds;
+        let total = (m.local_bytes + m.host_bytes + m.f2f_bytes) as f64;
+        m.beta = if total > 0.0 { m.local_bytes as f64 / total } else { 1.0 };
+        Ok(m)
+    }
+
+    /// Evaluate prediction accuracy on up to `n_batches` fresh batches
+    /// (uses the predict artifact on the coordinator thread).
+    pub fn evaluate(&mut self, n_batches: usize) -> anyhow::Result<f64> {
+        let manifest = Manifest::load(&self.cfg.artifacts_dir)?;
+        let pentry = manifest.find("predict", &self.cfg.model, &self.cfg.dataset)?;
+        let exe = TrainExecutor::compile(pentry)?;
+        let comm = CommConfig { direct_host_fetch: self.cfg.direct_host_fetch };
+        let f0 = self.data.features.feat_dim();
+        let f2 = self.entry.dims.f2;
+        let b = self.entry.dims.b;
+
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut plan =
+            EpochPlan::new(&self.pre.train_parts, b, &mut self.rng);
+        for i in 0..n_batches {
+            let part = i % self.cfg.num_fpgas;
+            let Some(targets) = plan.next_targets(part).map(|t| t.to_vec()) else {
+                break;
+            };
+            let mb = self.samplers[part].sample(&self.data, &targets, part, i);
+            let svc = FeatureService::new(&self.data.features, comm);
+            let (feat0, _) =
+                svc.gather(&mb, &self.pre.stores[part], self.pre.vertex_part.as_deref(), part);
+            let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
+            let logits = exe.predict(&self.params.data, &batch)?;
+            for r in 0..mb.n_targets {
+                let row = &logits[r * f2..(r + 1) * f2];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as u32 == mb.labels[r] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        anyhow::ensure!(total > 0, "no evaluation targets");
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Shut down the worker pool explicitly (also happens on drop).
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}

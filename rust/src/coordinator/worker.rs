@@ -1,0 +1,138 @@
+//! Per-FPGA worker threads.
+//!
+//! Each simulated FPGA is a thread that owns its own PJRT client and
+//! compiled executable (the xla handles are not `Send`), receives work
+//! over an mpsc channel, and returns (loss, gradients) to the
+//! coordinator. This mirrors the paper's runtime system: the host enqueues
+//! a mini-batch per FPGA per iteration and waits at the gradient-sync
+//! barrier.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::runtime::{ArtifactEntry, BatchBuffers, TrainExecutor};
+
+/// One unit of work for a worker.
+pub struct WorkItem {
+    /// Current parameters (shared snapshot — the "broadcast" of §4.2).
+    pub params: Arc<Vec<Vec<f32>>>,
+    pub batch: BatchBuffers,
+    /// Coordinator-side correlation tag (iteration-local task index).
+    pub tag: usize,
+}
+
+/// A worker's reply.
+pub struct WorkResult {
+    pub worker: usize,
+    pub tag: usize,
+    pub result: anyhow::Result<crate::runtime::StepOutput>,
+    /// Pure execute wall time (excludes queueing).
+    pub exec_seconds: f64,
+}
+
+enum Msg {
+    Work(WorkItem),
+    Stop,
+}
+
+/// Pool of `p` simulated-FPGA workers.
+pub struct WorkerPool {
+    txs: Vec<mpsc::Sender<Msg>>,
+    rx: mpsc::Receiver<WorkResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `p` workers, each compiling `entry` on its own PJRT client.
+    /// Blocks until every worker has finished compiling (so that training
+    /// time does not include compilation).
+    pub fn spawn(entry: &ArtifactEntry, p: usize) -> anyhow::Result<WorkerPool> {
+        let (result_tx, rx) = mpsc::channel::<WorkResult>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let mut txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for worker in 0..p {
+            let (tx, work_rx) = mpsc::channel::<Msg>();
+            txs.push(tx);
+            let entry = entry.clone();
+            let result_tx = result_tx.clone();
+            let ready_tx = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let exe = match TrainExecutor::compile(&entry) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(Msg::Work(item)) = work_rx.recv() {
+                    let t0 = std::time::Instant::now();
+                    let result = exe.train_step(&item.params, &item.batch);
+                    let _ = result_tx.send(WorkResult {
+                        worker,
+                        tag: item.tag,
+                        result,
+                        exec_seconds: t0.elapsed().as_secs_f64(),
+                    });
+                }
+            }));
+        }
+        // wait for all compiles
+        for _ in 0..p {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died during compile"))??;
+        }
+        Ok(WorkerPool { txs, rx, handles })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Enqueue a batch on worker `fpga`.
+    pub fn submit(&self, fpga: usize, item: WorkItem) -> anyhow::Result<()> {
+        self.txs[fpga]
+            .send(Msg::Work(item))
+            .map_err(|_| anyhow::anyhow!("worker {fpga} channel closed"))
+    }
+
+    /// Collect exactly `n` results (barrier — gradient synchronisation).
+    pub fn collect(&self, n: usize) -> anyhow::Result<Vec<WorkResult>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(
+                self.rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("all workers disconnected"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Stop all workers and join.
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Stop);
+        }
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

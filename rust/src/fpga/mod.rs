@@ -1,0 +1,246 @@
+//! FPGA device model: platform metadata (paper Table 3 / Listing 1) and
+//! the resource-utilization model of §6.1 (Eqs. 1–2, extended to URAM and
+//! BRAM so Table 5 can be reproduced in full).
+//!
+//! `n` = scatter-gather PEs in the aggregate kernel, `m` = PEs in the
+//! update kernel — both **per die** (the DSE engine explores per die,
+//! Algorithm 4; each die has one DDR channel). FPGA-level parallelism is
+//! `dies ×` the per-die configuration.
+
+pub mod timing;
+
+/// Static FPGA platform metadata (the `FPGA_Metadata()` API of Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaSpec {
+    pub name: &'static str,
+    /// Super logic regions (dies); U250 has 4, one DDR channel each.
+    pub dies: usize,
+    /// Per-die resources.
+    pub dsp_per_die: u32,
+    pub lut_per_die: u32,
+    pub uram_per_die: u32,
+    pub bram_per_die: u32,
+    /// Per-die DDR channel bandwidth (GB/s); 77 total on U250 → 19.25.
+    pub ddr_gbs_per_die: f64,
+    /// Kernel clock (MHz). Paper: 300.
+    pub freq_mhz: f64,
+    /// SIMD lanes per scatter-gather PE: 512-bit / 32-bit = 16 (Eq. 8).
+    pub pe_simd: u32,
+}
+
+/// Xilinx Alveo U250 — the paper's FPGA (Table 3, Listing 1).
+pub const U250: FpgaSpec = FpgaSpec {
+    name: "Xilinx Alveo U250",
+    dies: 4,
+    dsp_per_die: 3072,
+    lut_per_die: 423_000,
+    uram_per_die: 320,
+    bram_per_die: 672,
+    ddr_gbs_per_die: 19.25,
+    freq_mhz: 300.0,
+    pe_simd: 16,
+};
+
+impl FpgaSpec {
+    /// Total DDR bandwidth of the card.
+    pub fn ddr_gbs_total(&self) -> f64 {
+        self.ddr_gbs_per_die * self.dies as f64
+    }
+    /// Kernel frequency in Hz.
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_mhz * 1e6
+    }
+}
+
+/// Per-die accelerator configuration: the DSE decision variables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DieConfig {
+    /// Scatter-gather PEs in the aggregate kernel.
+    pub n: u32,
+    /// PEs in the update kernel.
+    pub m: u32,
+}
+
+/// Resource-consumption coefficients (Eqs. 1–2 plus URAM/BRAM analogues).
+/// Fitted so the U250 utilizations of Table 5 are reproduced — see
+/// EXPERIMENTS.md §Table 5 for the fit.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceCoeffs {
+    /// DSPs: λ1·m + λ2·n ≤ N_DSP (Eq. 1).
+    pub lambda1: f64,
+    pub lambda2: f64,
+    /// LUTs: ρ1·m + ρ2·n + ρ3·n·log2(n) ≤ N_LUT (Eq. 2; the n·log n term
+    /// models the aggregate kernel's routing network).
+    pub rho1: f64,
+    pub rho2: f64,
+    pub rho3: f64,
+    /// URAM: μ1·m + μ2·n (result buffers).
+    pub mu1: f64,
+    pub mu2: f64,
+    /// BRAM: ν1·m + ν2·n (stream FIFOs).
+    pub nu1: f64,
+    pub nu2: f64,
+}
+
+impl Default for ResourceCoeffs {
+    fn default() -> Self {
+        // Fit against Table 5 (per-die configs (2,512) and (4,256) are the
+        // paper's FPGA-level (8,2048) / (16,1024) divided by 4 dies):
+        //   DSP  90% / 56%, LUT 72% / 65%, URAM 48% / 34%, BRAM 40% / 28%.
+        ResourceCoeffs {
+            lambda1: 5.0,    // f32 MAC ≈ 5 DSP48 per update PE
+            lambda2: 102.0,  // 16-lane SIMD scatter-gather PE
+            rho1: 487.0,
+            rho2: 17_557.0,
+            rho3: 10_000.0,
+            mu1: 0.258,
+            mu2: 10.67,
+            nu1: 0.455,      // fitted to BRAM 40%/28% of 672
+            nu2: 17.92,
+        }
+    }
+}
+
+/// Utilization fractions for one die configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Utilization {
+    pub dsp: f64,
+    pub lut: f64,
+    pub uram: f64,
+    pub bram: f64,
+}
+
+impl Utilization {
+    /// Within budget on every resource (the Eq. 1/2 feasibility check).
+    pub fn feasible(&self) -> bool {
+        self.dsp <= 1.0 && self.lut <= 1.0 && self.uram <= 1.0 && self.bram <= 1.0
+    }
+    pub fn max_fraction(&self) -> f64 {
+        self.dsp.max(self.lut).max(self.uram).max(self.bram)
+    }
+}
+
+/// The §6.1 resource-utilization model.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceModel {
+    pub spec: FpgaSpec,
+    pub coeffs: ResourceCoeffs,
+}
+
+impl ResourceModel {
+    pub fn new(spec: FpgaSpec) -> ResourceModel {
+        ResourceModel { spec, coeffs: ResourceCoeffs::default() }
+    }
+
+    /// Per-die utilization of configuration `c`.
+    pub fn utilization(&self, c: DieConfig) -> Utilization {
+        let (n, m) = (c.n as f64, c.m as f64);
+        let k = &self.coeffs;
+        let nlogn = if c.n > 1 { n * n.log2() } else { 0.0 };
+        Utilization {
+            dsp: (k.lambda1 * m + k.lambda2 * n) / self.spec.dsp_per_die as f64,
+            lut: (k.rho1 * m + k.rho2 * n + k.rho3 * nlogn) / self.spec.lut_per_die as f64,
+            uram: (k.mu1 * m + k.mu2 * n) / self.spec.uram_per_die as f64,
+            bram: (k.nu1 * m + k.nu2 * n) / self.spec.bram_per_die as f64,
+        }
+    }
+
+    /// Feasibility under Eqs. 1–2 (+ URAM/BRAM).
+    pub fn check(&self, c: DieConfig) -> bool {
+        c.n >= 1 && c.m >= 1 && self.utilization(c).feasible()
+    }
+
+    /// Largest feasible `n` with m = 1 (Algorithm 4's search-space bound).
+    pub fn n_max(&self) -> u32 {
+        let mut n = 1;
+        while self.check(DieConfig { n: n + 1, m: 1 }) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Largest feasible `m` with n = 1.
+    pub fn m_max(&self) -> u32 {
+        let mut lo = 1u32;
+        let mut hi = self.spec.dsp_per_die; // m is DSP-bound long before this
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.check(DieConfig { n: 1, m: mid }) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ResourceModel {
+        ResourceModel::new(U250)
+    }
+
+    #[test]
+    fn table5_config_8_2048_utilization() {
+        // FPGA-level (8,2048) = per-die (2,512)
+        let u = model().utilization(DieConfig { n: 2, m: 512 });
+        assert!((u.dsp - 0.90).abs() < 0.03, "dsp={}", u.dsp);
+        assert!((u.lut - 0.72).abs() < 0.03, "lut={}", u.lut);
+        assert!((u.uram - 0.48).abs() < 0.04, "uram={}", u.uram);
+        assert!((u.bram - 0.40).abs() < 0.04, "bram={}", u.bram);
+        assert!(u.feasible());
+    }
+
+    #[test]
+    fn table5_config_16_1024_utilization() {
+        // FPGA-level (16,1024) = per-die (4,256)
+        let u = model().utilization(DieConfig { n: 4, m: 256 });
+        assert!((u.dsp - 0.56).abs() < 0.03, "dsp={}", u.dsp);
+        assert!((u.lut - 0.65).abs() < 0.03, "lut={}", u.lut);
+        assert!((u.uram - 0.34).abs() < 0.04, "uram={}", u.uram);
+        assert!((u.bram - 0.28).abs() < 0.04, "bram={}", u.bram);
+        assert!(u.feasible());
+    }
+
+    #[test]
+    fn infeasible_when_oversubscribed() {
+        let m = model();
+        assert!(!m.check(DieConfig { n: 2, m: 100_000 }));
+        assert!(!m.check(DieConfig { n: 1000, m: 1 }));
+        assert!(!m.check(DieConfig { n: 0, m: 16 }));
+    }
+
+    #[test]
+    fn search_space_bounds_are_tight() {
+        let m = model();
+        let nmax = m.n_max();
+        let mmax = m.m_max();
+        assert!(m.check(DieConfig { n: nmax, m: 1 }));
+        assert!(!m.check(DieConfig { n: nmax + 1, m: 1 }));
+        assert!(m.check(DieConfig { n: 1, m: mmax }));
+        assert!(!m.check(DieConfig { n: 1, m: mmax + 1 }));
+        // sanity: U250 die supports a handful of aggregate PEs and a few
+        // hundred update PEs
+        assert!(nmax >= 4 && nmax < 64, "nmax={nmax}");
+        assert!(mmax >= 256 && mmax < 1024, "mmax={mmax}");
+    }
+
+    #[test]
+    fn utilization_monotone_in_n_and_m() {
+        let m = model();
+        let base = m.utilization(DieConfig { n: 2, m: 128 });
+        let more_n = m.utilization(DieConfig { n: 4, m: 128 });
+        let more_m = m.utilization(DieConfig { n: 2, m: 256 });
+        assert!(more_n.max_fraction() > base.max_fraction());
+        assert!(more_m.max_fraction() > base.max_fraction());
+    }
+
+    #[test]
+    fn u250_totals() {
+        assert!((U250.ddr_gbs_total() - 77.0).abs() < 1e-9);
+        assert_eq!(U250.freq_hz(), 3.0e8);
+    }
+}

@@ -1,0 +1,260 @@
+//! Kernel timing model — §6.2, Eqs. 5–9.
+//!
+//! All times are per mini-batch on one FPGA. The model works on a
+//! [`BatchShape`] (the |V^l| / |A^l| / f^l statistics of a sampled
+//! mini-batch) so it can be driven either by the paper's nominal
+//! parameters or by *measured* shapes from the real sampler.
+
+use super::{DieConfig, FpgaSpec};
+
+/// Mini-batch shape statistics for a 2-layer GNN.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchShape {
+    /// Sampled vertex counts per layer: |V^0|, |V^1|, |V^2|.
+    pub v: [f64; 3],
+    /// Sampled edge counts per layer: |A^1|, |A^2| (self edges included).
+    pub a: [f64; 2],
+    /// Feature widths: f^0, f^1, f^2.
+    pub f: [f64; 3],
+}
+
+impl BatchShape {
+    /// Nominal paper shape: B targets, fanouts (k1, k2), dedup ignored
+    /// (upper bound — matches how the paper sizes its DSE input).
+    pub fn nominal(batch: f64, k1: f64, k2: f64, f: [f64; 3]) -> BatchShape {
+        let v2 = batch;
+        let v1 = v2 * (k2 + 1.0);
+        let v0 = v1 * (k1 + 1.0);
+        BatchShape { v: [v0, v1, v2], a: [v1 * (k1 + 1.0), v2 * (k2 + 1.0)], f }
+    }
+
+    /// Total sampled vertices (the NVTPS numerator contribution).
+    pub fn vertices(&self) -> f64 {
+        self.v.iter().sum()
+    }
+
+    /// Model parameter bytes (f32): Σ_l f^{l-1}·f^l (GCN; SAGE doubles it
+    /// via the W_self path — handled by the caller's `param_scale`).
+    pub fn param_bytes(&self, param_scale: f64) -> u64 {
+        ((self.f[0] * self.f[1] + self.f[1] * self.f[2]) * 4.0 * param_scale) as u64
+    }
+}
+
+/// Memory-path bandwidths seen by one FPGA.
+#[derive(Clone, Copy, Debug)]
+pub struct Bandwidths {
+    /// FPGA-local DDR (GB/s) — full card.
+    pub ddr_gbs: f64,
+    /// Host↔FPGA PCIe (GB/s).
+    pub pcie_gbs: f64,
+}
+
+/// Per-layer timing breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerTiming {
+    pub load_s: f64,
+    pub compute_s: f64,
+    pub aggregate_s: f64,
+    pub update_s: f64,
+    /// max(aggregate, update): the two stages are pipelined.
+    pub layer_s: f64,
+}
+
+/// Timing for one mini-batch (forward + loss + backward).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchTiming {
+    pub layers: [LayerTiming; 2],
+    pub fp_s: f64,
+    pub lc_s: f64,
+    pub bp_s: f64,
+    /// t_GNN = t_FP + t_LC + t_BP (Eq. 5).
+    pub gnn_s: f64,
+}
+
+/// The §6.2 kernel timing model for a whole FPGA (dies × per-die config).
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    pub spec: FpgaSpec,
+    pub die: DieConfig,
+    pub bw: Bandwidths,
+}
+
+pub const S_FEAT: f64 = 4.0; // f32 feature bytes (Eq. 7's S_feat)
+
+impl TimingModel {
+    pub fn new(spec: FpgaSpec, die: DieConfig, pcie_gbs: f64) -> TimingModel {
+        TimingModel {
+            spec,
+            die,
+            bw: Bandwidths { ddr_gbs: spec.ddr_gbs_total(), pcie_gbs },
+        }
+    }
+
+    /// FPGA-level PE counts (all dies work on the same batch).
+    pub fn n_total(&self) -> f64 {
+        (self.die.n as usize * self.spec.dies) as f64
+    }
+    pub fn m_total(&self) -> f64 {
+        (self.die.m as usize * self.spec.dies) as f64
+    }
+
+    /// Eq. 7: vertex-feature loading time for layer `l` (1-based).
+    /// β is the local-fetch ratio; layer 2 reads the layer-1 results that
+    /// are already on-card, so β is forced to 1 there.
+    pub fn t_load(&self, shape: &BatchShape, l: usize, beta: f64) -> f64 {
+        let (rows, width) = (shape.v[l - 1], shape.f[l - 1]);
+        let beta = if l >= 2 { 1.0 } else { beta };
+        let bytes = rows * width * S_FEAT;
+        bytes * beta / (self.bw.ddr_gbs * 1e9) + bytes * (1.0 - beta) / (self.bw.pcie_gbs * 1e9)
+    }
+
+    /// Eq. 8: aggregation compute time for layer `l`.
+    pub fn t_compute(&self, shape: &BatchShape, l: usize) -> f64 {
+        shape.a[l - 1] * shape.f[l - 1]
+            / (self.n_total() * self.spec.pe_simd as f64 * self.spec.freq_hz())
+    }
+
+    /// Eq. 9: feature-update (MLP) time for layer `l`.
+    pub fn t_update(&self, shape: &BatchShape, l: usize) -> f64 {
+        shape.v[l] * shape.f[l - 1] * shape.f[l] / (self.m_total() * self.spec.freq_hz())
+    }
+
+    /// Eq. 6 + pipeline composition for one layer.
+    pub fn layer(&self, shape: &BatchShape, l: usize, beta: f64) -> LayerTiming {
+        let load_s = self.t_load(shape, l, beta);
+        let compute_s = self.t_compute(shape, l);
+        let aggregate_s = load_s.max(compute_s);
+        let update_s = self.t_update(shape, l);
+        LayerTiming { load_s, compute_s, aggregate_s, update_s, layer_s: aggregate_s.max(update_s) }
+    }
+
+    /// Full mini-batch timing (Eq. 5). `param_scale` = 1 for GCN, 2 for
+    /// GraphSAGE (separate self/neighbor weights double the update work).
+    pub fn batch(&self, shape: &BatchShape, beta: f64, param_scale: f64) -> BatchTiming {
+        let l1 = self.layer(shape, 1, beta);
+        let mut l2 = self.layer(shape, 2, beta);
+        l2.update_s *= param_scale;
+        l1_scaled_layer(&mut l2);
+        let mut l1 = l1;
+        l1.update_s *= param_scale;
+        l1_scaled_layer(&mut l1);
+
+        let fp_s = l1.layer_s + l2.layer_s;
+        // loss calculation: softmax+CE over |V^2|·f^2, on the update PEs
+        let lc_s = shape.v[2] * shape.f[2] / (self.m_total() * self.spec.freq_hz());
+        // backward pass: same dataflow reversed (paper: "similar
+        // computation as forward propagation but in the reverse direction")
+        let bp_s = fp_s;
+        BatchTiming { layers: [l1, l2], fp_s, lc_s, bp_s, gnn_s: fp_s + lc_s + bp_s }
+    }
+}
+
+/// Recompute the pipelined layer time after an update-stage adjustment.
+fn l1_scaled_layer(l: &mut LayerTiming) {
+    l.layer_s = l.aggregate_s.max(l.update_s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::U250;
+
+    fn model() -> TimingModel {
+        TimingModel::new(U250, DieConfig { n: 2, m: 512 }, 16.0)
+    }
+
+    fn shape() -> BatchShape {
+        // paper nominal: B=1024, fanouts 25/10, products dims
+        BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0])
+    }
+
+    #[test]
+    fn nominal_shape_counts() {
+        let s = shape();
+        assert_eq!(s.v[2], 1024.0);
+        assert_eq!(s.v[1], 1024.0 * 11.0);
+        assert_eq!(s.v[0], 1024.0 * 11.0 * 26.0);
+        assert_eq!(s.a[0], s.v[0]);
+        assert_eq!(s.a[1], s.v[1]);
+    }
+
+    #[test]
+    fn load_time_splits_by_beta() {
+        let m = model();
+        let s = shape();
+        let local = m.t_load(&s, 1, 1.0);
+        let remote = m.t_load(&s, 1, 0.0);
+        let mixed = m.t_load(&s, 1, 0.5);
+        // PCIe (16 GB/s) is slower than card DDR (77 GB/s)
+        assert!(remote > local);
+        assert!(local < mixed && mixed < remote);
+        // exact endpoints
+        let bytes = s.v[0] * s.f[0] * 4.0;
+        assert!((local - bytes / 77.0e9).abs() / local < 1e-9);
+        assert!((remote - bytes / 16.0e9).abs() / remote < 1e-9);
+    }
+
+    #[test]
+    fn layer2_load_is_always_local() {
+        let m = model();
+        let s = shape();
+        assert_eq!(m.t_load(&s, 2, 0.0), m.t_load(&s, 2, 1.0));
+    }
+
+    #[test]
+    fn compute_scales_inverse_with_n() {
+        let s = shape();
+        let m1 = TimingModel::new(U250, DieConfig { n: 2, m: 512 }, 16.0);
+        let m2 = TimingModel::new(U250, DieConfig { n: 4, m: 512 }, 16.0);
+        let r = m1.t_compute(&s, 1) / m2.t_compute(&s, 1);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_scales_inverse_with_m() {
+        let s = shape();
+        let m1 = TimingModel::new(U250, DieConfig { n: 2, m: 512 }, 16.0);
+        let m2 = TimingModel::new(U250, DieConfig { n: 2, m: 1024 }, 16.0);
+        let r = m1.t_update(&s, 1) / m2.t_update(&s, 1);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_time_is_pipelined_max() {
+        let m = model();
+        let s = shape();
+        let l = m.layer(&s, 1, 0.8);
+        assert_eq!(l.aggregate_s, l.load_s.max(l.compute_s));
+        assert_eq!(l.layer_s, l.aggregate_s.max(l.update_s));
+    }
+
+    #[test]
+    fn batch_time_composition() {
+        let m = model();
+        let s = shape();
+        let b = m.batch(&s, 0.8, 1.0);
+        assert!((b.gnn_s - (b.fp_s + b.lc_s + b.bp_s)).abs() < 1e-15);
+        assert!(b.fp_s >= b.layers[0].layer_s);
+        assert!(b.gnn_s > 0.0);
+    }
+
+    #[test]
+    fn sage_param_scale_slows_update_bound_configs() {
+        // tiny n so aggregation dominates → param_scale may not matter;
+        // big n / small m so update dominates → param_scale must matter.
+        let s = shape();
+        let m = TimingModel::new(U250, DieConfig { n: 8, m: 64 }, 16.0);
+        let gcn = m.batch(&s, 1.0, 1.0);
+        let sage = m.batch(&s, 1.0, 2.0);
+        assert!(sage.gnn_s > gcn.gnn_s);
+    }
+
+    #[test]
+    fn beta_one_is_never_slower() {
+        let m = model();
+        let s = shape();
+        let fast = m.batch(&s, 1.0, 1.0);
+        let slow = m.batch(&s, 0.3, 1.0);
+        assert!(fast.gnn_s <= slow.gnn_s);
+    }
+}

@@ -1,0 +1,192 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! Vertices are `u32` (the largest paper graph has 2.4M vertices; u32 also
+//! halves memory traffic during sampling, which matters because sampling
+//! is on the host critical path — Eq. 5). Offsets are `usize`.
+
+/// CSR adjacency (out-edges). For GNN sampling we store the graph with
+/// edges pointing from a vertex to the neighbors it *aggregates from*,
+/// i.e. `neighbors(v)` are the candidates for `N_s(v)` in Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list `(src, dst)` meaning "src aggregates from
+    /// dst". Duplicate edges are kept (multi-edges are legal in sampled
+    /// blocks); self loops are kept. Counting-sort construction: O(V+E).
+    pub fn from_edges(num_vertices: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut counts = vec![0usize; num_vertices + 1];
+        for &(s, _) in edges {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..num_vertices {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut adj = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            adj[cursor[s as usize]] = d;
+            cursor[s as usize] += 1;
+        }
+        Csr { offsets, adj }
+    }
+
+    /// Build the symmetrised graph (u→v and v→u for every input edge),
+    /// which is how Reddit/Yelp/Amazon/products are used for GraphSAGE/GCN.
+    pub fn from_edges_symmetric(num_vertices: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut both = Vec::with_capacity(edges.len() * 2);
+        for &(s, d) in edges {
+            both.push((s, d));
+            if s != d {
+                both.push((d, s));
+            }
+        }
+        Csr::from_edges(num_vertices, &both)
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        let v = v as usize;
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let v = v as usize;
+        &self.adj[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Total degree of a vertex set (used by partition balance constraints).
+    pub fn total_degree(&self, vs: &[u32]) -> usize {
+        vs.iter().map(|&v| self.degree(v)).sum()
+    }
+
+    /// Maximum out-degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Structural validation — every target in range, offsets monotone.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.num_vertices() as u32;
+        anyhow::ensure!(
+            self.offsets.windows(2).all(|w| w[0] <= w[1]),
+            "offsets not monotone"
+        );
+        anyhow::ensure!(
+            *self.offsets.last().unwrap() == self.adj.len(),
+            "offsets do not cover adjacency"
+        );
+        if let Some(&bad) = self.adj.iter().find(|&&t| t >= n) {
+            anyhow::bail!("edge target {bad} out of range (n={n})");
+        }
+        Ok(())
+    }
+
+    /// Degree histogram up to `buckets` (last bucket = overflow); used by
+    /// dataset stats reporting.
+    pub fn degree_histogram(&self, buckets: usize) -> Vec<usize> {
+        let mut h = vec![0usize; buckets + 1];
+        for v in 0..self.num_vertices() as u32 {
+            let d = self.degree(v).min(buckets);
+            h[d] += 1;
+        }
+        h
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>() + self.adj.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Csr {
+        // 0→1, 0→2, 1→2, 3→0, 2→2 (self loop)
+        Csr::from_edges(4, &[(0, 1), (0, 2), (1, 2), (3, 0), (2, 2)])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = toy();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(2), 1);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[0]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn unsorted_input_grouped_correctly() {
+        let g = Csr::from_edges(3, &[(2, 0), (0, 1), (2, 1), (0, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 0]);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+    }
+
+    #[test]
+    fn symmetric_doubles_edges_except_self_loops() {
+        let g = Csr::from_edges_symmetric(3, &[(0, 1), (2, 2)]);
+        assert_eq!(g.num_edges(), 3); // 0→1, 1→0, 2→2
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[2]);
+    }
+
+    #[test]
+    fn isolated_vertices_have_zero_degree() {
+        let g = Csr::from_edges(5, &[(0, 1)]);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        // construct a malformed CSR directly
+        let g = Csr { offsets: vec![0, 1], adj: vec![7] };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degree_histogram_counts() {
+        let g = toy();
+        let h = g.degree_histogram(2);
+        // degrees: [2,1,1,1] → bucket1: 3 vertices, bucket2: 1
+        assert_eq!(h[1], 3);
+        assert_eq!(h[2], 1);
+    }
+
+    #[test]
+    fn total_degree_sums() {
+        let g = toy();
+        assert_eq!(g.total_degree(&[0, 3]), 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph substrate: CSR storage, synthetic R-MAT generation, and the
+//! dataset registry mirroring the paper's evaluation set (Table 4).
+//!
+//! The paper trains on Reddit / Yelp / Amazon / ogbn-products. Those
+//! datasets are not redistributable here, so [`datasets`] builds
+//! deterministic R-MAT graphs with the published |V|, |E| and GNN-layer
+//! dimensions (and a `scale` knob for the execution path — see DESIGN.md
+//! §Substitutions). Vertex features/labels come from a planted-centroid
+//! model ([`features`]) so end-to-end training has a learnable signal.
+
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod rmat;
+
+pub use csr::Csr;
+pub use datasets::{Dataset, DatasetSpec, GnnDims};
+pub use features::FeatureGen;

@@ -1,0 +1,35 @@
+//! # HitGNN — high-throughput synchronous GNN training on CPU+Multi-FPGA
+//!
+//! Reproduction of *HitGNN* (Lin, Zhang, Prasanna, 2023): a framework that
+//! maps synchronous mini-batch GNN training algorithms (DistDGL, PaGraph,
+//! P3) and GNN models (GCN, GraphSAGE) onto a CPU + multi-FPGA platform.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3 (this crate)** — the host program / coordinator: graph
+//!   preprocessing, mini-batch sampling, two-stage task scheduling,
+//!   CPU↔FPGA communication accounting, gradient synchronisation, plus the
+//!   FPGA device model, performance model, and DSE engine from the paper.
+//! - **L2** — JAX model (GCN / GraphSAGE fwd+bwd), AOT-lowered to HLO text.
+//! - **L1** — Pallas kernels (aggregate gather-sum, update matmul) called
+//!   from L2.
+//!
+//! The simulated FPGAs execute the real AOT-compiled artifacts through the
+//! PJRT CPU client ([`runtime`]); their *timing* comes from the paper's
+//! analytic model ([`fpga`], [`perf`]). See `DESIGN.md` for the
+//! substitution table and per-experiment index.
+
+pub mod api;
+pub mod comm;
+pub mod coordinator;
+pub mod dse;
+pub mod fpga;
+pub mod graph;
+pub mod partition;
+pub mod perf;
+pub mod runtime;
+pub mod sampling;
+pub mod sched;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,13 @@
+//! `hitgnn` CLI — the launcher for the HitGNN coordinator.
+//!
+//! Subcommands (see `hitgnn help`):
+//! - `train`     run synchronous GNN training on the simulated
+//!               CPU+Multi-FPGA platform (real PJRT execution path)
+//! - `dse`       run the hardware design-space exploration engine
+//! - `simulate`  analytic platform simulation (epoch time / NVTPS)
+//! - `info`      print dataset / platform registries
+
+fn main() {
+    let code = hitgnn::coordinator::cli::main_entry();
+    std::process::exit(code);
+}

@@ -1,0 +1,280 @@
+//! Multi-constraint streaming partitioner — the DistDGL stand-in.
+//!
+//! DistDGL uses METIS with multi-constraint balancing (vertices, edges,
+//! *and* training vertices) while minimising edge cut. A full METIS
+//! implementation is out of scope; what Table 7 / Fig 8 actually depend on
+//! is (a) a low-but-nonzero edge-cut fraction and (b) the residual
+//! imbalance METIS leaves in practice. Linear Deterministic Greedy (LDG,
+//! Stanton & Kliot KDD'12) with multi-constraint penalties reproduces both:
+//! vertices stream in random order and go to the partition with the most
+//! already-placed neighbours, discounted by that partition's fill across
+//! all three constraints.
+
+use super::store::Store;
+use super::Preprocessed;
+use crate::graph::Dataset;
+use crate::util::bitset::Bitset;
+use crate::util::rng::Rng;
+
+/// Tunables for the LDG pass.
+#[derive(Clone, Copy, Debug)]
+pub struct LdgConfig {
+    /// Slack multiplier on per-constraint capacity (1.0 = perfectly tight;
+    /// METIS defaults to ~1.05).
+    pub slack: f64,
+    /// Weight of the balance discount relative to neighbour affinity.
+    pub balance_weight: f64,
+    /// Label-propagation refinement sweeps after the streaming pass
+    /// (KL-lite: move a vertex to its majority-neighbour partition when
+    /// the move respects the slack) — the cheap analogue of METIS's
+    /// refinement phase.
+    pub refine_passes: usize,
+}
+
+impl Default for LdgConfig {
+    fn default() -> Self {
+        // Slack 1.15 reproduces the residual imbalance METIS leaves when
+        // it prioritises edge-cut under multi-constraint balancing (the
+        // paper's Challenge 2 / Table 7 WB motivation: DistDGL's METIS
+        // partitions are ~10–15% uneven in training vertices); the
+        // refinement passes then recover METIS-like locality without
+        // re-balancing.
+        LdgConfig { slack: 1.15, balance_weight: 0.7, refine_passes: 2 }
+    }
+}
+
+/// DistDGL-style preprocessing: LDG partition + partition-based feature
+/// store (FPGA i holds the rows of partition i — Table 1).
+pub fn preprocess(data: &Dataset, p: usize, seed: u64) -> Preprocessed {
+    let part = partition(data, p, LdgConfig::default(), seed);
+    let n = data.graph.num_vertices();
+
+    // train vertices per partition
+    let mut train_parts = vec![Vec::new(); p];
+    for &v in &data.train_vertices {
+        train_parts[part[v as usize] as usize].push(v);
+    }
+
+    // feature store: rows of own partition
+    let stores: Vec<Store> = (0..p)
+        .map(|i| {
+            let mut bits = Bitset::new(n);
+            for v in 0..n {
+                if part[v] as usize == i {
+                    bits.set(v);
+                }
+            }
+            Store::rows_subset(bits, data.spec.dims.f0)
+        })
+        .collect();
+
+    Preprocessed {
+        algo: super::Algorithm::DistDgl,
+        num_parts: p,
+        vertex_part: Some(part),
+        train_parts,
+        stores,
+    }
+}
+
+/// Multi-constraint LDG: returns vertex→partition.
+pub fn partition(data: &Dataset, p: usize, cfg: LdgConfig, seed: u64) -> Vec<u32> {
+    let g = &data.graph;
+    let n = g.num_vertices();
+    if p == 1 {
+        return vec![0; n];
+    }
+
+    // is_train bitmap for the third constraint
+    let mut is_train = Bitset::new(n);
+    for &v in &data.train_vertices {
+        is_train.set(v as usize);
+    }
+
+    // capacities (with slack) for the three constraints
+    let cap_v = (n as f64 / p as f64) * cfg.slack;
+    let cap_e = (g.num_edges() as f64 / p as f64) * cfg.slack;
+    let cap_t = (data.train_vertices.len() as f64 / p as f64) * cfg.slack;
+
+    let mut load_v = vec![0f64; p];
+    let mut load_e = vec![0f64; p];
+    let mut load_t = vec![0f64; p];
+    let mut part = vec![u32::MAX; n];
+
+    // random stream order (LDG quality depends on it; deterministic seed)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(seed ^ 0x1d6);
+    rng.shuffle(&mut order);
+
+    let mut nbr_count = vec![0u32; p];
+    for &v in &order {
+        // count already-placed neighbours per partition
+        for x in nbr_count.iter_mut() {
+            *x = 0;
+        }
+        for &u in g.neighbors(v) {
+            let pu = part[u as usize];
+            if pu != u32::MAX {
+                nbr_count[pu as usize] += 1;
+            }
+        }
+        let deg = g.degree(v) as f64;
+        let t = if is_train.get(v as usize) { 1.0 } else { 0.0 };
+
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for i in 0..p {
+            // multi-constraint fill: the tightest constraint dominates
+            let fill = (load_v[i] / cap_v)
+                .max(load_e[i] / cap_e)
+                .max(if cap_t > 0.0 { load_t[i] / cap_t } else { 0.0 });
+            if fill >= 1.0 {
+                continue; // at capacity under slack
+            }
+            let score =
+                (1.0 + nbr_count[i] as f64) * (1.0 - cfg.balance_weight * fill);
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        if best_score == f64::NEG_INFINITY {
+            // all partitions nominally full (can happen at the very end
+            // with tight slack): place on the least-filled one.
+            best = (0..p)
+                .min_by(|&a, &b| {
+                    let fa = load_v[a] / cap_v;
+                    let fb = load_v[b] / cap_v;
+                    fa.partial_cmp(&fb).unwrap()
+                })
+                .unwrap();
+        }
+        part[v as usize] = best as u32;
+        load_v[best] += 1.0;
+        load_e[best] += deg;
+        load_t[best] += t;
+    }
+
+    // refinement sweeps: move vertices to their majority-neighbour
+    // partition when the balance constraints allow it
+    for _ in 0..cfg.refine_passes {
+        let mut moved = 0usize;
+        for &v in &order {
+            let cur = part[v as usize] as usize;
+            for x in nbr_count.iter_mut() {
+                *x = 0;
+            }
+            let mut best = cur;
+            let mut best_c = 0u32;
+            for &u in g.neighbors(v) {
+                let pu = part[u as usize] as usize;
+                nbr_count[pu] += 1;
+                if nbr_count[pu] > best_c {
+                    best_c = nbr_count[pu];
+                    best = pu;
+                }
+            }
+            if best == cur || nbr_count[best] <= nbr_count[cur] {
+                continue;
+            }
+            let deg = g.degree(v) as f64;
+            let t = if is_train.get(v as usize) { 1.0 } else { 0.0 };
+            let fits = load_v[best] + 1.0 <= cap_v
+                && load_e[best] + deg <= cap_e
+                && (cap_t == 0.0 || load_t[best] + t <= cap_t.max(1.0));
+            if fits {
+                part[v as usize] = best as u32;
+                load_v[cur] -= 1.0;
+                load_e[cur] -= deg;
+                load_t[cur] -= t;
+                load_v[best] += 1.0;
+                load_e[best] += deg;
+                load_t[best] += t;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::partition::Algorithm;
+
+    fn data() -> Dataset {
+        datasets::lookup("ogbn-products").unwrap().build(8, 3)
+    }
+
+    #[test]
+    fn assigns_every_vertex() {
+        let d = data();
+        let part = partition(&d, 4, LdgConfig::default(), 1);
+        assert_eq!(part.len(), d.graph.num_vertices());
+        assert!(part.iter().all(|&x| x < 4));
+    }
+
+    #[test]
+    fn respects_vertex_balance_within_slack() {
+        let d = data();
+        let p = 4;
+        let part = partition(&d, p, LdgConfig::default(), 1);
+        let mut counts = vec![0usize; p];
+        for &x in &part {
+            counts[x as usize] += 1;
+        }
+        let cap = (d.graph.num_vertices() as f64 / p as f64) * 1.15 + 1.0;
+        for &c in &counts {
+            assert!((c as f64) <= cap, "count {c} exceeds cap {cap}");
+        }
+    }
+
+    #[test]
+    fn beats_random_edge_cut() {
+        let d = data();
+        let pre = preprocess(&d, 4, 5);
+        let cut = pre.edge_cut(&d.graph).unwrap();
+        // random 4-way partition has expected cut 0.75
+        assert!(cut < 0.70, "LDG edge cut {cut} not better than random");
+    }
+
+    #[test]
+    fn preprocess_shape_and_store_consistency() {
+        let d = data();
+        let pre = preprocess(&d, 3, 5);
+        assert_eq!(pre.algo, Algorithm::DistDgl);
+        let part = pre.vertex_part.as_ref().unwrap();
+        // store i holds exactly partition i's rows
+        for (i, s) in pre.stores.iter().enumerate() {
+            let expected = part.iter().filter(|&&x| x as usize == i).count();
+            assert_eq!(s.resident_rows(), Some(expected));
+            assert_eq!(s.dim_fraction(), 1.0);
+        }
+        // stores are disjoint and cover all vertices
+        let total: usize = pre.stores.iter().map(|s| s.resident_rows().unwrap()).sum();
+        assert_eq!(total, d.graph.num_vertices());
+    }
+
+    #[test]
+    fn train_imbalance_is_bounded_but_nonzero() {
+        // The paper's Challenge 2: METIS-style partitioning leaves residual
+        // train-vertex imbalance — WB exists because of it. LDG's
+        // multi-constraint discount keeps it within slack, but the default
+        // config deliberately trades balance for locality.
+        let d = data();
+        let pre = preprocess(&d, 4, 5);
+        let imb = pre.train_imbalance();
+        assert!(imb > 1.01 && imb < 1.35, "imbalance {imb}");
+    }
+
+    #[test]
+    fn single_partition_trivial() {
+        let d = data();
+        let part = partition(&d, 1, LdgConfig::default(), 1);
+        assert!(part.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,184 @@
+//! Graph preprocessing: partitioning + feature storing (paper §2.3, Table 1).
+//!
+//! | Algorithm | Partitioning                          | Feature storing          |
+//! |-----------|---------------------------------------|--------------------------|
+//! | DistDGL   | METIS w/ multi-constraints (→ [`ldg`]) | rows of own partition    |
+//! | PaGraph   | greedy balancing #train vertices       | high-out-degree cache    |
+//! | P3        | along the feature dimension            | feature-dim slice        |
+//!
+//! The outputs that matter downstream are captured by [`Preprocessed`]:
+//! which partition every *training* vertex belongs to (drives mini-batch
+//! counts → workload imbalance → the WB optimization) and each FPGA's
+//! [`store::Store`] (drives the local-fetch ratio β in Eq. 7 → the DC
+//! optimization).
+
+pub mod ldg;
+pub mod p3;
+pub mod pagraph;
+pub mod store;
+
+use crate::graph::Dataset;
+pub use store::Store;
+
+/// Synchronous GNN training algorithm selector (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    DistDgl,
+    PaGraph,
+    P3,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> anyhow::Result<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "distdgl" => Ok(Algorithm::DistDgl),
+            "pagraph" => Ok(Algorithm::PaGraph),
+            "p3" => Ok(Algorithm::P3),
+            _ => anyhow::bail!("unknown algorithm '{s}' (distdgl|pagraph|p3)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::DistDgl => "DistDGL",
+            Algorithm::PaGraph => "PaGraph",
+            Algorithm::P3 => "P3",
+        }
+    }
+    pub const ALL: [Algorithm; 3] = [Algorithm::DistDgl, Algorithm::PaGraph, Algorithm::P3];
+}
+
+/// Result of the graph preprocessing stage.
+pub struct Preprocessed {
+    pub algo: Algorithm,
+    pub num_parts: usize,
+    /// Topology assignment vertex→partition. `None` for P3 (every FPGA
+    /// holds the full topology; features are dimension-partitioned).
+    pub vertex_part: Option<Vec<u32>>,
+    /// Training target vertices per partition — the sampler draws from
+    /// these, so their sizes determine the per-partition mini-batch counts.
+    pub train_parts: Vec<Vec<u32>>,
+    /// Per-FPGA feature store (what is resident in FPGA-local DDR).
+    pub stores: Vec<Store>,
+}
+
+impl Preprocessed {
+    /// Number of mini-batches partition `i` yields at batch size `b`
+    /// (ceiling division — a final short batch still counts).
+    pub fn batches_in_part(&self, i: usize, batch_size: usize) -> usize {
+        (self.train_parts[i].len() + batch_size - 1) / batch_size
+    }
+
+    /// Imbalance factor: max/mean of per-partition training-vertex counts.
+    pub fn train_imbalance(&self) -> f64 {
+        let counts: Vec<usize> = self.train_parts.iter().map(|p| p.len()).collect();
+        let max = *counts.iter().max().unwrap_or(&0) as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Fraction of edges whose endpoints live in different partitions
+    /// (edge-cut; not defined for P3's feature-dim partitioning).
+    pub fn edge_cut(&self, graph: &crate::graph::Csr) -> Option<f64> {
+        let part = self.vertex_part.as_ref()?;
+        let mut cut = 0usize;
+        let mut total = 0usize;
+        for v in 0..graph.num_vertices() as u32 {
+            for &u in graph.neighbors(v) {
+                total += 1;
+                if part[v as usize] != part[u as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        Some(if total == 0 { 0.0 } else { cut as f64 / total as f64 })
+    }
+}
+
+/// Run the selected algorithm's graph preprocessing (partitioning +
+/// feature storing) for `num_parts` FPGAs.
+///
+/// `cache_ratio` is the fraction of |V| whose feature rows fit in one
+/// FPGA's DDR budget for caching-style stores (PaGraph); partition-based
+/// stores (DistDGL) ignore it (each partition's rows are assumed resident,
+/// as in the paper).
+pub fn preprocess(
+    algo: Algorithm,
+    data: &Dataset,
+    num_parts: usize,
+    cache_ratio: f64,
+    seed: u64,
+) -> Preprocessed {
+    assert!(num_parts >= 1, "need at least one partition");
+    match algo {
+        Algorithm::DistDgl => ldg::preprocess(data, num_parts, seed),
+        Algorithm::PaGraph => pagraph::preprocess(data, num_parts, cache_ratio, seed),
+        Algorithm::P3 => p3::preprocess(data, num_parts),
+    }
+}
+
+/// Split `vs` round-robin into `p` chunks (helper shared by p3 and tests).
+pub(crate) fn round_robin_split(vs: &[u32], p: usize) -> Vec<Vec<u32>> {
+    let mut parts = vec![Vec::with_capacity(vs.len() / p + 1); p];
+    for (i, &v) in vs.iter().enumerate() {
+        parts[i % p].push(v);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn tiny() -> Dataset {
+        datasets::lookup("reddit").unwrap().build(8, 1)
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("x").is_err());
+    }
+
+    #[test]
+    fn preprocess_all_algorithms_cover_train_vertices() {
+        let d = tiny();
+        for algo in Algorithm::ALL {
+            let pre = preprocess(algo, &d, 4, 0.2, 7);
+            assert_eq!(pre.num_parts, 4);
+            assert_eq!(pre.stores.len(), 4);
+            let total: usize = pre.train_parts.iter().map(|p| p.len()).sum();
+            assert_eq!(total, d.train_vertices.len(), "{algo:?}");
+            // every train vertex appears exactly once
+            let mut seen = std::collections::HashSet::new();
+            for part in &pre.train_parts {
+                for &v in part {
+                    assert!(seen.insert(v), "{algo:?}: duplicate train vertex {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batches_in_part_ceils() {
+        let d = tiny();
+        let pre = preprocess(Algorithm::P3, &d, 2, 0.2, 7);
+        let b = pre.batches_in_part(0, 100);
+        assert_eq!(b, (pre.train_parts[0].len() + 99) / 100);
+    }
+
+    #[test]
+    fn round_robin_split_is_balanced() {
+        let vs: Vec<u32> = (0..103).collect();
+        let parts = round_robin_split(&vs, 4);
+        let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 103);
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! P3-style preprocessing (Table 1).
+//!
+//! P3 (Gandhi & Iyer, OSDI'21) partitions along the *feature dimension*:
+//! every device holds the full graph topology and an `f0/p`-wide slice of
+//! every vertex's feature vector. Training targets are split evenly across
+//! devices (P3 has no topology-induced imbalance). The extra all-to-all
+//! after layer 1 is handled by the coordinator as a special case, exactly
+//! as the paper does (Listing 3, lines 14–19).
+
+use super::store::Store;
+use super::Preprocessed;
+use crate::graph::Dataset;
+
+pub fn preprocess(data: &Dataset, p: usize) -> Preprocessed {
+    let f0 = data.spec.dims.f0;
+    assert!(p <= f0, "P3 needs at least one feature dim per device (p={p}, f0={f0})");
+
+    // even dim slices: width ceil/floor mix so they cover [0, f0) exactly
+    let stores: Vec<Store> = (0..p)
+        .map(|i| {
+            let lo = i * f0 / p;
+            let hi = (i + 1) * f0 / p;
+            Store::dim_slice(lo, hi, f0)
+        })
+        .collect();
+
+    // targets split round-robin — deterministic and balanced
+    let train_parts = super::round_robin_split(&data.train_vertices, p);
+
+    Preprocessed {
+        algo: super::Algorithm::P3,
+        num_parts: p,
+        vertex_part: None, // full topology everywhere
+        train_parts,
+        stores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn slices_cover_feature_range_disjointly() {
+        let d = datasets::lookup("amazon").unwrap().build(9, 5);
+        let p = 4;
+        let pre = preprocess(&d, p);
+        let mut covered = vec![false; d.spec.dims.f0];
+        for s in &pre.stores {
+            for dim in s.dim_lo..s.dim_hi {
+                assert!(!covered[dim], "dim {dim} covered twice");
+                covered[dim] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn train_split_balanced_and_total() {
+        let d = datasets::lookup("amazon").unwrap().build(9, 5);
+        let pre = preprocess(&d, 3);
+        let lens: Vec<usize> = pre.train_parts.iter().map(|t| t.len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), d.train_vertices.len());
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn every_store_holds_every_row_partially() {
+        let d = datasets::lookup("amazon").unwrap().build(9, 5);
+        let pre = preprocess(&d, 4);
+        for s in &pre.stores {
+            assert!(s.holds_row(0));
+            assert!(s.holds_row((d.graph.num_vertices() - 1) as u32));
+            assert!((s.dim_fraction() - 0.25).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn uneven_division_still_covers() {
+        let d = datasets::lookup("ogbn-products").unwrap().build(9, 5); // f0=100
+        let pre = preprocess(&d, 3);
+        let widths: Vec<usize> =
+            pre.stores.iter().map(|s| s.dim_hi - s.dim_lo).collect();
+        assert_eq!(widths.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "P3 needs")]
+    fn too_many_parts_rejected() {
+        let d = datasets::lookup("ogbn-products").unwrap().build(11, 5);
+        preprocess(&d, 101);
+    }
+}

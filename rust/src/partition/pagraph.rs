@@ -1,0 +1,202 @@
+//! PaGraph-style preprocessing (Table 1).
+//!
+//! Partitioning: "a greedy approach which aims to balance the number of
+//! training vertices among partitions" — we implement PaGraph's scoring
+//! rule: a training vertex goes to the partition maximising
+//! `|N(v) ∩ TV_i| · (TV_avail_i / TV_expected)`, i.e. neighbour affinity
+//! damped by remaining train-vertex budget. Non-training vertices follow
+//! their neighbour majority (they only matter for β bookkeeping symmetry).
+//!
+//! Feature storing: "store feature vectors of vertices with high
+//! out-degree" — every FPGA caches the same top-degree `cache_ratio·|V|`
+//! rows (Listing 2 passes the same X to each FPGA), independent of the
+//! partitioning.
+
+use super::store::Store;
+use super::Preprocessed;
+use crate::graph::Dataset;
+use crate::util::bitset::Bitset;
+use crate::util::rng::Rng;
+
+pub fn preprocess(data: &Dataset, p: usize, cache_ratio: f64, seed: u64) -> Preprocessed {
+    let g = &data.graph;
+    let n = g.num_vertices();
+
+    // ---- partition training vertices greedily --------------------------
+    let expected = (data.train_vertices.len() as f64 / p as f64).max(1.0);
+    let mut tv_part: Vec<u32> = vec![u32::MAX; n]; // train-vertex assignment
+    let mut tv_count = vec![0usize; p];
+    let mut order = data.train_vertices.clone();
+    Rng::new(seed ^ 0x9a6).shuffle(&mut order);
+
+    let mut nbr_count = vec![0u32; p];
+    for &v in &order {
+        for x in nbr_count.iter_mut() {
+            *x = 0;
+        }
+        for &u in g.neighbors(v) {
+            let pu = tv_part[u as usize];
+            if pu != u32::MAX {
+                nbr_count[pu as usize] += 1;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for i in 0..p {
+            let avail = (expected * 1.02 - tv_count[i] as f64).max(0.0);
+            let score = (1.0 + nbr_count[i] as f64) * avail / expected;
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        tv_part[v as usize] = best as u32;
+        tv_count[best] += 1;
+    }
+
+    let mut train_parts = vec![Vec::new(); p];
+    for &v in &data.train_vertices {
+        train_parts[tv_part[v as usize] as usize].push(v);
+    }
+
+    // ---- assign remaining vertices by neighbour majority ----------------
+    let mut part: Vec<u32> = tv_part;
+    let mut rr = 0u32;
+    for v in 0..n as u32 {
+        if part[v as usize] != u32::MAX {
+            continue;
+        }
+        for x in nbr_count.iter_mut() {
+            *x = 0;
+        }
+        let mut best = u32::MAX;
+        let mut best_c = 0u32;
+        for &u in g.neighbors(v) {
+            let pu = part[u as usize];
+            if pu != u32::MAX {
+                nbr_count[pu as usize] += 1;
+                if nbr_count[pu as usize] > best_c {
+                    best_c = nbr_count[pu as usize];
+                    best = pu;
+                }
+            }
+        }
+        part[v as usize] = if best != u32::MAX {
+            best
+        } else {
+            rr = (rr + 1) % p as u32;
+            rr
+        };
+    }
+
+    // ---- feature store: top out-degree cache, same on every FPGA --------
+    let cache_rows = ((n as f64) * cache_ratio).round() as usize;
+    let cached = top_degree_rows(data, cache_rows);
+    let stores: Vec<Store> =
+        (0..p).map(|_| Store::rows_subset(cached.clone(), data.spec.dims.f0)).collect();
+
+    Preprocessed {
+        algo: super::Algorithm::PaGraph,
+        num_parts: p,
+        vertex_part: Some(part),
+        train_parts,
+        stores,
+    }
+}
+
+/// Bitmap of the `k` highest-out-degree vertices (ties broken by id, as a
+/// real cache fill from a sorted degree list would).
+pub fn top_degree_rows(data: &Dataset, k: usize) -> Bitset {
+    let g = &data.graph;
+    let n = g.num_vertices();
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.sort_by_key(|&v| std::cmp::Reverse((g.degree(v), std::cmp::Reverse(v))));
+    let mut bits = Bitset::new(n);
+    for &v in idx.iter().take(k.min(n)) {
+        bits.set(v as usize);
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn data() -> Dataset {
+        datasets::lookup("yelp").unwrap().build(8, 11)
+    }
+
+    #[test]
+    fn train_counts_are_tightly_balanced() {
+        let d = data();
+        let pre = preprocess(&d, 4, 0.1, 2);
+        let counts: Vec<usize> = pre.train_parts.iter().map(|t| t.len()).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        // PaGraph's whole point: training vertices are balanced.
+        assert!(
+            (max - min) as f64 <= 0.05 * max as f64 + 2.0,
+            "counts {counts:?}"
+        );
+    }
+
+    #[test]
+    fn all_vertices_assigned() {
+        let d = data();
+        let pre = preprocess(&d, 3, 0.1, 2);
+        let part = pre.vertex_part.as_ref().unwrap();
+        assert!(part.iter().all(|&x| x < 3));
+    }
+
+    #[test]
+    fn stores_identical_and_sized_by_ratio() {
+        let d = data();
+        let ratio = 0.15;
+        let pre = preprocess(&d, 4, ratio, 2);
+        let expect = ((d.graph.num_vertices() as f64) * ratio).round() as usize;
+        for s in &pre.stores {
+            assert_eq!(s.resident_rows(), Some(expect));
+        }
+        // identical caches on every FPGA (Listing 2: same X for each FPGA)
+        let first: Vec<usize> = match &pre.stores[0].rows {
+            super::super::store::Rows::Subset(b) => b.iter_ones().collect(),
+            _ => panic!(),
+        };
+        for s in &pre.stores[1..] {
+            let rows: Vec<usize> = match &s.rows {
+                super::super::store::Rows::Subset(b) => b.iter_ones().collect(),
+                _ => panic!(),
+            };
+            assert_eq!(rows, first);
+        }
+    }
+
+    #[test]
+    fn cache_prefers_high_degree() {
+        let d = data();
+        let bits = top_degree_rows(&d, 100);
+        let g = &d.graph;
+        let cached_min = bits
+            .iter_ones()
+            .map(|v| g.degree(v as u32))
+            .min()
+            .unwrap();
+        // every uncached vertex must have degree <= the minimum cached degree
+        let uncached_max = (0..g.num_vertices())
+            .filter(|&v| !bits.get(v))
+            .map(|v| g.degree(v as u32))
+            .max()
+            .unwrap();
+        assert!(uncached_max <= cached_min);
+    }
+
+    #[test]
+    fn zero_cache_ratio_gives_empty_stores() {
+        let d = data();
+        let pre = preprocess(&d, 2, 0.0, 2);
+        for s in &pre.stores {
+            assert_eq!(s.resident_rows(), Some(0));
+        }
+    }
+}

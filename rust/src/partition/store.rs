@@ -1,0 +1,127 @@
+//! Per-FPGA feature store: which (vertex-row, feature-dim) rectangles of
+//! the global feature matrix X are resident in that FPGA's local DDR.
+//!
+//! The comm layer consults the store for every vertex an FPGA aggregates
+//! from; resident bytes are charged to DDR bandwidth, missing bytes to the
+//! PCIe host-fetch path (Eq. 7's β split).
+
+use crate::util::bitset::Bitset;
+
+/// Which feature rows an FPGA holds locally.
+#[derive(Clone, Debug)]
+pub enum Rows {
+    /// Every vertex's row is present (P3: all rows, but only a dim slice).
+    All,
+    /// Membership bitmap over vertex ids.
+    Subset(Bitset),
+}
+
+/// One FPGA's feature store.
+#[derive(Clone, Debug)]
+pub struct Store {
+    pub rows: Rows,
+    /// Held feature dimension range `[dim_lo, dim_hi)`; full width except
+    /// for P3's dimension partitioning.
+    pub dim_lo: usize,
+    pub dim_hi: usize,
+    /// Total feature width (for fraction computations).
+    pub feat_dim: usize,
+}
+
+impl Store {
+    /// Store holding full-width rows for a vertex subset.
+    pub fn rows_subset(members: Bitset, feat_dim: usize) -> Store {
+        Store { rows: Rows::Subset(members), dim_lo: 0, dim_hi: feat_dim, feat_dim }
+    }
+
+    /// Store holding a feature-dim slice of every row (P3).
+    pub fn dim_slice(dim_lo: usize, dim_hi: usize, feat_dim: usize) -> Store {
+        assert!(dim_lo < dim_hi && dim_hi <= feat_dim);
+        Store { rows: Rows::All, dim_lo, dim_hi, feat_dim }
+    }
+
+    /// Does this store hold vertex `v`'s row (in its dim range)?
+    #[inline]
+    pub fn holds_row(&self, v: u32) -> bool {
+        match &self.rows {
+            Rows::All => true,
+            Rows::Subset(b) => b.get(v as usize),
+        }
+    }
+
+    /// Fraction of the feature width held for a resident row.
+    #[inline]
+    pub fn dim_fraction(&self) -> f64 {
+        (self.dim_hi - self.dim_lo) as f64 / self.feat_dim as f64
+    }
+
+    /// Locally available bytes for vertex `v` out of `row_bytes` total;
+    /// the remainder must come from the host.
+    #[inline]
+    pub fn local_bytes(&self, v: u32, row_bytes: usize) -> usize {
+        if self.holds_row(v) {
+            (row_bytes as f64 * self.dim_fraction()).round() as usize
+        } else {
+            0
+        }
+    }
+
+    /// Number of resident rows (None = all).
+    pub fn resident_rows(&self) -> Option<usize> {
+        match &self.rows {
+            Rows::All => None,
+            Rows::Subset(b) => Some(b.count()),
+        }
+    }
+
+    /// Approximate DDR bytes this store occupies.
+    pub fn footprint_bytes(&self, num_vertices: usize, bytes_per_full_row: usize) -> usize {
+        let rows = self.resident_rows().unwrap_or(num_vertices);
+        (rows as f64 * bytes_per_full_row as f64 * self.dim_fraction()).round() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_store_membership() {
+        let mut b = Bitset::new(10);
+        b.set(3);
+        b.set(7);
+        let s = Store::rows_subset(b, 100);
+        assert!(s.holds_row(3));
+        assert!(!s.holds_row(4));
+        assert_eq!(s.local_bytes(3, 400), 400);
+        assert_eq!(s.local_bytes(4, 400), 0);
+        assert_eq!(s.resident_rows(), Some(2));
+    }
+
+    #[test]
+    fn dim_slice_store_partial_bytes() {
+        let s = Store::dim_slice(0, 25, 100);
+        assert!(s.holds_row(42));
+        assert_eq!(s.dim_fraction(), 0.25);
+        assert_eq!(s.local_bytes(42, 400), 100);
+        assert_eq!(s.resident_rows(), None);
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let mut b = Bitset::new(1000);
+        for i in 0..100 {
+            b.set(i);
+        }
+        let s = Store::rows_subset(b, 64);
+        assert_eq!(s.footprint_bytes(1000, 256), 100 * 256);
+        let p3 = Store::dim_slice(0, 16, 64);
+        assert_eq!(p3.footprint_bytes(1000, 256), 1000 * 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_slice_validates_range() {
+        Store::dim_slice(10, 10, 64);
+    }
+}

@@ -1,0 +1,331 @@
+//! Experiment drivers for the paper's evaluation section: one function per
+//! table/figure, shared by `rust/benches/*` and the examples.
+//!
+//! Methodology (DESIGN.md §Per-experiment index): the *host side* is
+//! measured — the real partitioner, feature stores, and sampler run on a
+//! scaled R-MAT instance of each dataset, yielding β (local-fetch ratio),
+//! train-vertex imbalance, mini-batch dedup factors, and sampling time.
+//! Those measurements parameterise the §6.2 platform model at full scale
+//! (the paper's own evaluation beyond 4 FPGAs is likewise simulator-based,
+//! §7.6). Table 6/7 epochs are full passes over all vertices (this is the
+//! only target-set choice that reproduces the paper's NVTPS magnitudes —
+//! see EXPERIMENTS.md §Table 6).
+
+use crate::fpga::timing::BatchShape;
+use crate::fpga::DieConfig;
+use crate::graph::datasets::{self, DatasetSpec};
+use crate::partition::{preprocess, Algorithm};
+use crate::perf::gpu::{GpuModel, GpuPlatformSpec};
+use crate::perf::{EpochEstimate, PlatformModel, PlatformSpec, Workload};
+use crate::sampling::{FanoutConfig, Sampler, WeightMode};
+use crate::util::rng::Rng;
+
+/// Paper evaluation parameters (§7.1).
+pub const PAPER_BATCH: f64 = 1024.0;
+pub const PAPER_K1: f64 = 25.0;
+pub const PAPER_K2: f64 = 10.0;
+/// The accelerator configuration the DSE selects (Table 5, FPGA-level
+/// (8, 2048) = per-die (2, 512)).
+pub const BEST_DIE: DieConfig = DieConfig { n: 2, m: 512 };
+/// Host sampler threads per FPGA. The paper's host is a dual-socket EPYC
+/// 7763 (128 cores) feeding 4 FPGAs; DistDGL-style loaders run many
+/// sampler workers so per-batch sampling time divides across threads.
+/// Our measurement is single-threaded — scale it down accordingly.
+pub const SAMPLER_THREADS: f64 = 8.0;
+
+/// Host-side measurements from the real partitioner + sampler.
+#[derive(Clone, Debug)]
+pub struct HostMeasurement {
+    /// Mean local-fetch ratio against the executing FPGA's store.
+    pub beta: f64,
+    /// Per-partition share of training batches (sums to 1).
+    pub part_shares: Vec<f64>,
+    /// Dedup factors vs the no-dedup nominal: [v0, v1] (v2 == 1).
+    pub dedup: [f64; 2],
+    /// Measured sampling seconds per batch (scaled graph).
+    pub sampling_s: f64,
+}
+
+/// Measure β / imbalance / dedup on a scaled instance of `spec`.
+///
+/// `shift` trades fidelity for time; 4 (=1/16 scale) keeps the largest
+/// graph (~16M edges) tractable while preserving degree skew.
+pub fn measure_host(
+    spec: &DatasetSpec,
+    algo: Algorithm,
+    model: &str,
+    p: usize,
+    shift: u32,
+    n_batches: usize,
+    seed: u64,
+) -> anyhow::Result<HostMeasurement> {
+    let data = spec.build(shift, seed);
+    let pre = preprocess(algo, &data, p, 0.2, seed);
+    let mode = WeightMode::for_model(model)?;
+    // Scale-matched batch size: dedup depends on the ratio of the sampled
+    // neighborhood capacity to |V|, so shrinking the batch with the graph
+    // (both ÷ 2^shift) keeps the measured dedup factor transferable to
+    // full scale. Fanouts stay at the paper's 25/10.
+    let scaled_batch = ((PAPER_BATCH as usize) >> shift).max(8);
+    let cfg = FanoutConfig { batch_size: scaled_batch, k1: 25, k2: 10 };
+    let mut sampler = Sampler::new(cfg, mode, data.graph.num_vertices(), seed ^ 0x5a);
+
+    let mut rng = Rng::new(seed ^ 0xE0);
+    let mut local = 0u64;
+    let mut total = 0u64;
+    let mut v0_sum = 0f64;
+    let mut v1_sum = 0f64;
+    let mut t_sample = 0f64;
+    let dims = cfg.dims();
+    let row_bytes = data.features.bytes_per_vertex();
+    for b in 0..n_batches {
+        let part = b % p;
+        let tp = &pre.train_parts[part];
+        if tp.is_empty() {
+            continue;
+        }
+        // random contiguous window of targets
+        let start = rng.index(tp.len().saturating_sub(cfg.batch_size).max(1));
+        let end = (start + cfg.batch_size).min(tp.len());
+        let t0 = std::time::Instant::now();
+        let mb = sampler.sample(&data, &tp[start..end], part, b);
+        t_sample += t0.elapsed().as_secs_f64();
+        let traffic = crate::comm::feature_traffic(
+            &mb,
+            &pre.stores[part],
+            row_bytes,
+            crate::comm::CommConfig::default(),
+            pre.vertex_part.as_deref(),
+            part,
+        );
+        local += traffic.local_bytes;
+        total += traffic.total_bytes();
+        v0_sum += mb.n_v0 as f64 / dims.v0_cap as f64;
+        v1_sum += mb.n_v1 as f64 / dims.v1_cap as f64;
+    }
+    let n = n_batches as f64;
+    let share_total: f64 = pre.train_parts.iter().map(|t| t.len() as f64).sum();
+    Ok(HostMeasurement {
+        beta: if total == 0 { 1.0 } else { local as f64 / total as f64 },
+        part_shares: pre
+            .train_parts
+            .iter()
+            .map(|t| t.len() as f64 / share_total)
+            .collect(),
+        dedup: [v0_sum / n, v1_sum / n],
+        // scale measured single-thread sampling cost up to a paper-sized
+        // batch, then across the host's sampler threads
+        sampling_s: t_sample / n * (PAPER_BATCH / scaled_batch as f64) / SAMPLER_THREADS,
+    })
+}
+
+/// Compose the full-scale workload for one (dataset, algo, model) cell.
+pub fn build_workload(
+    spec: &DatasetSpec,
+    algo: Algorithm,
+    model: &str,
+    host: &HostMeasurement,
+    p: usize,
+    wb: bool,
+    dc: bool,
+) -> Workload {
+    let f = [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64];
+    let mut shape = BatchShape::nominal(PAPER_BATCH, PAPER_K1, PAPER_K2, f);
+    // apply measured dedup to the vertex sets (edges |A^l| are unchanged:
+    // every sampled edge is aggregated regardless of row dedup)
+    shape.v[0] *= host.dedup[0];
+    shape.v[1] *= host.dedup[1];
+
+    // Table 6 epochs: full pass over all vertices (see module docs)
+    let total_batches = (spec.vertices as f64 / PAPER_BATCH).ceil();
+    let batches_per_part: Vec<usize> = host
+        .part_shares
+        .iter()
+        .map(|s| (s * total_batches).round().max(1.0) as usize)
+        .collect();
+
+    // P3: feature access is slice-local (β=1) plus the layer-1 all-to-all
+    // of partial activations (Listing 3) — 2(p-1)/p · |V^1|·f^1 floats.
+    let (beta, extra) = if algo == Algorithm::P3 {
+        let bytes = 2.0 * (p as f64 - 1.0) / p as f64 * shape.v[1] * f[1] * 4.0;
+        (1.0, bytes)
+    } else {
+        (host.beta, 0.0)
+    };
+
+    Workload {
+        shape,
+        beta,
+        param_scale: if model == "sage" { 2.0 } else { 1.0 },
+        sampling_s_per_batch: host.sampling_s,
+        batches_per_part,
+        workload_balancing: wb,
+        direct_host_fetch: dc,
+        extra_pcie_bytes_per_batch: extra,
+        prefetch: false,
+    }
+}
+
+/// One Table 6 cell: GPU baseline vs HitGNN.
+#[derive(Clone, Debug)]
+pub struct CrossPlatformRow {
+    pub algo: Algorithm,
+    pub model: String,
+    pub dataset: &'static str,
+    pub gpu: EpochEstimate,
+    pub ours: EpochEstimate,
+}
+
+/// Table 6: 3 algorithms × 2 models × 4 datasets, GPU vs CPU+Multi-FPGA.
+pub fn table6(p: usize, shift: u32, n_batches: usize) -> anyhow::Result<Vec<CrossPlatformRow>> {
+    let mut fpga_spec = PlatformSpec::paper_4fpga();
+    fpga_spec.num_fpgas = p;
+    let mut gpu_spec = GpuPlatformSpec::paper_4gpu();
+    gpu_spec.num_gpus = p;
+    let fpga = PlatformModel::new(fpga_spec, BEST_DIE);
+    let gpu = GpuModel::new(gpu_spec);
+
+    let mut rows = Vec::new();
+    for algo in Algorithm::ALL {
+        for spec in &datasets::REGISTRY {
+            // host statistics (β, shares, dedup) depend on the algorithm
+            // and dataset but not on the GNN model — measure once per pair
+            let host = measure_host(spec, algo, "gcn", p, shift, n_batches, 17)?;
+            for model in ["gcn", "sage"] {
+                // HitGNN: WB + DC on. GPU baseline: unmodified algorithm.
+                let w_ours = build_workload(spec, algo, model, &host, p, true, true);
+                let w_gpu = build_workload(spec, algo, model, &host, p, false, false);
+                rows.push(CrossPlatformRow {
+                    algo,
+                    model: model.to_string(),
+                    dataset: spec.key,
+                    gpu: gpu.epoch(&w_gpu),
+                    ours: fpga.epoch(&w_ours),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// One Table 7 ablation row.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub dataset: &'static str,
+    pub model: String,
+    pub baseline: f64,
+    pub wb: f64,
+    pub wb_dc: f64,
+}
+
+impl AblationRow {
+    pub fn speedup_pct(&self) -> f64 {
+        (self.wb_dc / self.baseline - 1.0) * 100.0
+    }
+}
+
+/// Table 7: DistDGL, throughput with {baseline, +WB, +WB+DC}.
+pub fn table7(p: usize, shift: u32, n_batches: usize) -> anyhow::Result<Vec<AblationRow>> {
+    let mut spec4 = PlatformSpec::paper_4fpga();
+    spec4.num_fpgas = p;
+    let fpga = PlatformModel::new(spec4, BEST_DIE);
+    let mut rows = Vec::new();
+    for spec in &datasets::REGISTRY {
+        let host = measure_host(spec, Algorithm::DistDgl, "gcn", p, shift, n_batches, 17)?;
+        for model in ["gcn", "sage"] {
+            let run = |wb, dc| {
+                fpga.epoch(&build_workload(spec, Algorithm::DistDgl, model, &host, p, wb, dc))
+                    .nvtps
+            };
+            rows.push(AblationRow {
+                dataset: spec.key,
+                model: model.to_string(),
+                baseline: run(false, false),
+                wb: run(true, false),
+                wb_dc: run(true, true),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig 8: speedup vs FPGA count, per algorithm (ogbn-products, GraphSAGE —
+/// the scalability workload).
+///
+/// Methodology follows the paper's simulator (§7.6): per-dataset host
+/// statistics (β, dedup) are measured once on the reference 4-partition
+/// preprocessing and held fixed across p, so the scaling limit is the
+/// platform effect the paper analyses — CPU memory bandwidth saturating
+/// at ~205/16 ≈ 12.8 concurrent PCIe fetchers — rather than partition-
+/// locality drift (which their METIS partitioning also holds roughly
+/// constant on the real datasets).
+pub fn fig8(
+    fpga_counts: &[usize],
+    shift: u32,
+    n_batches: usize,
+) -> anyhow::Result<Vec<(Algorithm, Vec<f64>)>> {
+    let spec = datasets::lookup("ogbn-products")?;
+    let mut out = Vec::new();
+    for algo in Algorithm::ALL {
+        let mut host = measure_host(&spec, algo, "sage", 4, shift, n_batches.max(4), 23)?;
+        let mut nvtps = Vec::new();
+        for &p in fpga_counts {
+            let mut plat = PlatformSpec::paper_4fpga();
+            plat.num_fpgas = p;
+            let fpga = PlatformModel::new(plat, BEST_DIE);
+            // even batch shares at this p (WB absorbs residual imbalance)
+            host.part_shares = vec![1.0 / p as f64; p];
+            let w = build_workload(&spec, algo, "sage", &host, p, true, true);
+            nvtps.push(fpga.epoch(&w).nvtps);
+        }
+        let base = nvtps[0];
+        out.push((algo, nvtps.iter().map(|x| x / base).collect()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_measurement_is_sane() {
+        let spec = datasets::lookup("reddit").unwrap();
+        let h = measure_host(&spec, Algorithm::DistDgl, "gcn", 4, 7, 4, 3).unwrap();
+        assert!(h.beta > 0.0 && h.beta <= 1.0, "beta={}", h.beta);
+        assert!((h.part_shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(h.dedup[0] > 0.0 && h.dedup[0] <= 1.0, "dedup0={}", h.dedup[0]);
+        assert!(h.dedup[1] > 0.0 && h.dedup[1] <= 1.0, "dedup1={}", h.dedup[1]);
+        assert!(h.sampling_s > 0.0);
+    }
+
+    #[test]
+    fn p3_workload_has_full_beta_and_extra_comm() {
+        let spec = datasets::lookup("yelp").unwrap();
+        let h = measure_host(&spec, Algorithm::P3, "gcn", 4, 7, 4, 3).unwrap();
+        let w = build_workload(&spec, Algorithm::P3, "gcn", &h, 4, true, true);
+        assert_eq!(w.beta, 1.0);
+        assert!(w.extra_pcie_bytes_per_batch > 0.0);
+        let w2 = build_workload(
+            &spec,
+            Algorithm::DistDgl,
+            "gcn",
+            &h,
+            4,
+            true,
+            true,
+        );
+        assert_eq!(w2.extra_pcie_bytes_per_batch, 0.0);
+    }
+
+    #[test]
+    fn ablation_ordering_holds() {
+        // WB ≥ baseline and WB+DC ≥ WB on every row (small sample size)
+        let rows = table7(4, 8, 2).unwrap();
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(r.wb >= r.baseline * 0.999, "{r:?}");
+            assert!(r.wb_dc >= r.wb * 0.999, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Typed execution of one AOT artifact on the PJRT CPU client.
+//!
+//! A [`TrainExecutor`] is the per-simulated-FPGA compute engine: it owns a
+//! PJRT client + compiled executable (thread-local; the xla handles are
+//! not `Send`) and turns (parameters, mini-batch buffers) into
+//! (loss, gradients).
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::manifest::ArtifactEntry;
+use crate::sampling::MiniBatch;
+
+/// Flat mini-batch input buffers in artifact order (feat0 gathered by the
+/// comm layer — see `comm::FeatureService`).
+#[derive(Clone, Debug)]
+pub struct BatchBuffers {
+    pub feat0: Vec<f32>,
+    pub idx1: Vec<i32>,
+    pub w1: Vec<f32>,
+    pub idx2: Vec<i32>,
+    pub w2: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl BatchBuffers {
+    /// Assemble from a sampled mini-batch plus the gathered features.
+    pub fn from_minibatch(mb: &MiniBatch, feat0: Vec<f32>, f0: usize) -> BatchBuffers {
+        assert_eq!(feat0.len(), mb.dims.v0_cap * f0, "feat0 buffer size mismatch");
+        BatchBuffers {
+            feat0,
+            idx1: mb.idx1.clone(),
+            w1: mb.w1.clone(),
+            idx2: mb.idx2.clone(),
+            w2: mb.w2.clone(),
+            labels: mb.labels.iter().map(|&l| l as i32).collect(),
+            mask: mb.mask.clone(),
+        }
+    }
+}
+
+/// One train-step result.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Gradients in the artifact's parameter order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// PJRT executor for one artifact (train or predict).
+pub struct TrainExecutor {
+    entry: ArtifactEntry,
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TrainExecutor {
+    /// Parse + compile the artifact's HLO text on a fresh CPU client.
+    pub fn compile(entry: &ArtifactEntry) -> anyhow::Result<TrainExecutor> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.name))?;
+        Ok(TrainExecutor { entry: entry.clone(), _client: client, exe })
+    }
+
+    /// Convenience: load an HLO path directly (integration tests).
+    pub fn compile_path(entry: &ArtifactEntry, path: &Path) -> anyhow::Result<TrainExecutor> {
+        let mut e = entry.clone();
+        e.path = path.to_path_buf();
+        TrainExecutor::compile(&e)
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "buffer len {} != shape {:?}", data.len(), shape);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "buffer len {} != shape {:?}", data.len(), shape);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Build the full literal argument list (params then batch).
+    fn build_args(
+        &self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let d = &self.entry.dims;
+        anyhow::ensure!(
+            params.len() == self.entry.params.len(),
+            "expected {} params, got {}",
+            self.entry.params.len(),
+            params.len()
+        );
+        let mut args = Vec::with_capacity(params.len() + 7);
+        for (buf, (name, shape)) in params.iter().zip(&self.entry.params) {
+            args.push(Self::literal_f32(buf, shape).with_context(|| format!("param {name}"))?);
+        }
+        args.push(Self::literal_f32(&batch.feat0, &[d.v0_cap, d.f0])?);
+        args.push(Self::literal_i32(&batch.idx1, &[d.v1_cap, d.k1 + 1])?);
+        args.push(Self::literal_f32(&batch.w1, &[d.v1_cap, d.k1 + 1])?);
+        args.push(Self::literal_i32(&batch.idx2, &[d.b, d.k2 + 1])?);
+        args.push(Self::literal_f32(&batch.w2, &[d.b, d.k2 + 1])?);
+        args.push(Self::literal_i32(&batch.labels, &[d.b])?);
+        args.push(Self::literal_f32(&batch.mask, &[d.b])?);
+        Ok(args)
+    }
+
+    fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        anyhow::ensure!(
+            result.len() == 1 && result[0].len() == 1,
+            "unexpected replica structure"
+        );
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute a train step: returns loss and per-parameter gradients.
+    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
+        anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
+        let args = self.build_args(params, batch)?;
+        let outs = self.run(&args)?;
+        anyhow::ensure!(
+            outs.len() == 1 + self.entry.params.len(),
+            "expected {} outputs, got {}",
+            1 + self.entry.params.len(),
+            outs.len()
+        );
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let grads = outs[1..]
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Execute inference: returns logits `[b, f2]` row-major.
+    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
+        let args = self.build_args(params, batch)?;
+        let outs = self.run(&args)?;
+        anyhow::ensure!(outs.len() == 1, "predict should return one output");
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}

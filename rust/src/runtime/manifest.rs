@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT
+//! compiler and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Static shapes of one artifact (mirror of python `ModelDims`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactDims {
+    pub b: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub v1_cap: usize,
+    pub v0_cap: usize,
+    pub f0: usize,
+    pub f1: usize,
+    pub f2: usize,
+}
+
+impl ArtifactDims {
+    fn from_json(j: &Json) -> anyhow::Result<ArtifactDims> {
+        let d = ArtifactDims {
+            b: j.req_usize("b")?,
+            k1: j.req_usize("k1")?,
+            k2: j.req_usize("k2")?,
+            v1_cap: j.req_usize("v1_cap")?,
+            v0_cap: j.req_usize("v0_cap")?,
+            f0: j.req_usize("f0")?,
+            f1: j.req_usize("f1")?,
+            f2: j.req_usize("f2")?,
+        };
+        anyhow::ensure!(
+            d.v1_cap == d.b * (d.k2 + 1) && d.v0_cap == d.v1_cap * (d.k1 + 1),
+            "inconsistent artifact dims: {d:?}"
+        );
+        Ok(d)
+    }
+
+    /// Matching sampler configuration.
+    pub fn fanout_config(&self) -> crate::sampling::FanoutConfig {
+        crate::sampling::FanoutConfig { batch_size: self.b, k1: self.k1, k2: self.k2 }
+    }
+}
+
+/// One compiled-artifact descriptor.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "train" or "predict".
+    pub kind: String,
+    /// "gcn" or "sage".
+    pub model: String,
+    pub dataset: String,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+    pub dims: ArtifactDims,
+    /// Parameter names and shapes, in artifact input order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactEntry {
+    /// Total parameter element count (for optimizer state sizing).
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+    pub fn param_bytes(&self) -> u64 {
+        (self.param_elems() * 4) as u64
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate that the artifact files
+    /// exist.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let version = j.req_usize("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut entries = Vec::new();
+        for e in j.req("entries")?.as_arr().unwrap_or(&[]) {
+            let dims = ArtifactDims::from_json(e.req("dims")?)?;
+            let params = e
+                .req("params")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    let name = p.req_str("name")?.to_string();
+                    let shape: Vec<usize> = p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect();
+                    Ok((name, shape))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect();
+            let path = dir.join(e.req_str("file")?);
+            anyhow::ensure!(path.exists(), "artifact file missing: {}", path.display());
+            entries.push(ArtifactEntry {
+                name: e.req_str("name")?.to_string(),
+                kind: e.req_str("kind")?.to_string(),
+                model: e.req_str("model")?.to_string(),
+                dataset: e.req_str("dataset")?.to_string(),
+                path,
+                dims,
+                params,
+                outputs,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an entry by kind/model/dataset.
+    pub fn find(&self, kind: &str, model: &str, dataset: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.model == model && e.dataset == dataset)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for kind={kind} model={model} dataset={dataset} \
+                     (have: {}) — run `make artifacts`",
+                    self.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    /// Default artifacts directory: $HITGNN_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HITGNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        Manifest::default_dir()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() >= 4);
+        let e = m.find("train", "gcn", "tiny").unwrap();
+        assert_eq!(e.dims.b, 32);
+        assert_eq!(e.params[0].0, "w1");
+        assert_eq!(e.outputs[0], "loss");
+        assert_eq!(e.param_elems(), 32 * 16 + 16 + 16 * 8 + 8);
+        assert!(m.find("train", "gcn", "nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_inconsistent_dims() {
+        let tmp = std::env::temp_dir().join(format!("hitgnn_m_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), r#"{"version": 9, "entries": []}"#).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"version": 1, "entries": [{"name":"x","kind":"train","model":"gcn",
+                "dataset":"d","file":"x.hlo.txt","params":[],"outputs":[],
+                "dims":{"b":4,"k1":2,"k2":2,"v1_cap":999,"v0_cap":36,
+                        "f0":4,"f1":4,"f2":4}}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

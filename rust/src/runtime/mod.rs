@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the Rust hot path.
+//!
+//! Python is build-time only — this module reads `artifacts/manifest.json`
+//! plus HLO *text* files, compiles them on the PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile`), and wraps execution behind typed entry points
+//! ([`executor::TrainExecutor`]).
+//!
+//! Thread model: the `xla` crate's handles hold raw pointers (`!Send`), so
+//! each simulated-FPGA worker thread constructs its *own* client and
+//! executable ([`executor`] is cheap to build: one text parse + compile at
+//! startup) and communicates with the coordinator via channels of plain
+//! `Vec<f32>` buffers.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{BatchBuffers, StepOutput, TrainExecutor};
+pub use manifest::{ArtifactDims, ArtifactEntry, Manifest};

@@ -1,0 +1,145 @@
+//! The sampled mini-batch container and its aggregation-weight modes.
+
+/// Static capacities of the padded wire format (must match the AOT
+/// artifact's shapes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchDims {
+    /// Target capacity (batch size B = |V^2| capacity).
+    pub b: usize,
+    /// Layer-1 vertex capacity (B·(k2+1)).
+    pub v1_cap: usize,
+    /// Layer-0 vertex capacity (v1_cap·(k1+1)).
+    pub v0_cap: usize,
+    pub k1: usize,
+    pub k2: usize,
+}
+
+/// How aggregation weights are computed from the sampled block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightMode {
+    /// GCN: symmetric normalisation 1/√(d̂(v)·d̂(u)) with self edge,
+    /// using full-graph degrees (+1 for the self loop).
+    GcnNorm,
+    /// GraphSAGE-mean: neighbor columns weighted 1/k_real, self column
+    /// weight 1 (consumed by the separate W_self path in the model).
+    SageMean,
+}
+
+impl WeightMode {
+    pub fn for_model(model: &str) -> anyhow::Result<WeightMode> {
+        match model.to_ascii_lowercase().as_str() {
+            "gcn" => Ok(WeightMode::GcnNorm),
+            "graphsage" | "sage" | "gsg" => Ok(WeightMode::SageMean),
+            _ => anyhow::bail!("unknown model '{model}' (gcn|graphsage)"),
+        }
+    }
+}
+
+/// One sampled mini-batch in fixed-shape padded form.
+///
+/// Index arrays use `i32` (what the HLO gather expects); padding rows/
+/// columns carry index 0 and weight 0 so they contribute nothing.
+#[derive(Clone, Debug)]
+pub struct MiniBatch {
+    pub dims: BatchDims,
+    /// Partition this batch was sampled from (scheduler bookkeeping).
+    pub part_id: usize,
+    /// Monotonic production index within the epoch (scheduler ordering).
+    pub seq: usize,
+
+    /// Real counts (≤ the corresponding capacity).
+    pub n_targets: usize,
+    pub n_v1: usize,
+    pub n_v0: usize,
+
+    /// Global vertex ids per layer; entries ≥ the real count are padding
+    /// (id 0). `v2` are the targets.
+    pub v2: Vec<u32>,
+    pub v1: Vec<u32>,
+    pub v0: Vec<u32>,
+
+    /// `[v1_cap, k1+1]` row-major positions into `v0`; col 0 = self.
+    pub idx1: Vec<i32>,
+    pub w1: Vec<f32>,
+    /// `[b, k2+1]` row-major positions into `v1`; col 0 = self.
+    pub idx2: Vec<i32>,
+    pub w2: Vec<f32>,
+
+    /// Per-target class labels and loss mask (0 for padding rows).
+    pub labels: Vec<u32>,
+    pub mask: Vec<f32>,
+}
+
+impl MiniBatch {
+    /// Sum over layers of sampled-vertex counts — the unit of the paper's
+    /// NVTPS throughput metric (Eq. 3 numerator, per batch).
+    pub fn vertices_traversed(&self) -> usize {
+        self.n_targets + self.n_v1 + self.n_v0
+    }
+
+    /// Edges in each sampled adjacency (|A^l|), self edges included —
+    /// drives the aggregation compute term (Eq. 8).
+    pub fn edges_layer1(&self) -> usize {
+        self.w1.iter().filter(|&&w| w != 0.0).count()
+    }
+    pub fn edges_layer2(&self) -> usize {
+        self.w2.iter().filter(|&&w| w != 0.0).count()
+    }
+
+    /// Structural invariants; used by tests and debug assertions.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let d = &self.dims;
+        anyhow::ensure!(self.v2.len() == d.b, "v2 len");
+        anyhow::ensure!(self.v1.len() == d.v1_cap, "v1 len");
+        anyhow::ensure!(self.v0.len() == d.v0_cap, "v0 len");
+        anyhow::ensure!(self.idx1.len() == d.v1_cap * (d.k1 + 1), "idx1 len");
+        anyhow::ensure!(self.w1.len() == self.idx1.len(), "w1 len");
+        anyhow::ensure!(self.idx2.len() == d.b * (d.k2 + 1), "idx2 len");
+        anyhow::ensure!(self.w2.len() == self.idx2.len(), "w2 len");
+        anyhow::ensure!(self.labels.len() == d.b && self.mask.len() == d.b, "label/mask len");
+        anyhow::ensure!(
+            self.n_targets <= d.b && self.n_v1 <= d.v1_cap && self.n_v0 <= d.v0_cap,
+            "counts exceed capacity"
+        );
+        for (i, &ix) in self.idx1.iter().enumerate() {
+            anyhow::ensure!(
+                (ix as usize) < self.n_v0.max(1),
+                "idx1[{i}]={ix} out of range (n_v0={})",
+                self.n_v0
+            );
+        }
+        for (i, &ix) in self.idx2.iter().enumerate() {
+            anyhow::ensure!(
+                (ix as usize) < self.n_v1.max(1),
+                "idx2[{i}]={ix} out of range (n_v1={})",
+                self.n_v1
+            );
+        }
+        for t in self.n_targets..d.b {
+            anyhow::ensure!(self.mask[t] == 0.0, "padding target {t} not masked");
+        }
+        Ok(())
+    }
+
+    /// Host-side reference forward aggregation for layer 1 (used by
+    /// integration tests to cross-check the compiled kernel): given
+    /// `feat0 [n rows of v0, f]`, produce `[v1_cap, f]`.
+    pub fn aggregate1_ref(&self, feat0: &[f32], f: usize) -> Vec<f32> {
+        let d = &self.dims;
+        let k = d.k1 + 1;
+        let mut out = vec![0.0f32; d.v1_cap * f];
+        for r in 0..d.v1_cap {
+            for c in 0..k {
+                let w = self.w1[r * k + c];
+                if w == 0.0 {
+                    continue;
+                }
+                let src = self.idx1[r * k + c] as usize;
+                for j in 0..f {
+                    out[r * f + j] += w * feat0[src * f + j];
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,58 @@
+//! Mini-batch neighbor sampling (the paper's sampling stage, host-side).
+//!
+//! Layer-wise fanout sampling exactly as DistDGL/PaGraph/P3 do for
+//! GraphSAGE-style training: B target vertices, fanout `k2` at layer 2 and
+//! `k1` at layer 1 (paper: B=1024, fanouts 25 and 10). The sampled block
+//! is emitted in the **fixed-degree padded format** the AOT-compiled
+//! kernels consume (DESIGN.md §Mini-batch wire format):
+//!
+//! - `v1`, `v0`: deduplicated global-vertex lists per layer (layer L's
+//!   list is the targets themselves);
+//! - `idx_l`: `[|V^l|, k+1]` neighbor positions into layer (l-1)'s list,
+//!   column 0 = the vertex itself (self edge);
+//! - `w_l`: matching aggregation weights (zero = padding).
+//!
+//! Sampling runs on the CPU and is overlapped with FPGA compute (Eq. 5),
+//! so the implementation avoids per-batch allocation: a [`Sampler`] holds
+//! stamped scratch arrays and is reused across batches.
+
+pub mod batch;
+pub mod sampler;
+
+pub use batch::{BatchDims, MiniBatch, WeightMode};
+pub use sampler::{EpochPlan, Sampler};
+
+/// Fanout configuration (paper defaults: B=1024, fanouts 25 and 10).
+#[derive(Clone, Copy, Debug)]
+pub struct FanoutConfig {
+    pub batch_size: usize,
+    /// Layer-1 fanout (neighbors sampled for every layer-1 vertex).
+    pub k1: usize,
+    /// Layer-2 fanout (neighbors sampled for every target).
+    pub k2: usize,
+}
+
+impl FanoutConfig {
+    pub const PAPER: FanoutConfig = FanoutConfig { batch_size: 1024, k1: 25, k2: 10 };
+
+    /// Fixed capacities of the padded wire format.
+    pub fn dims(&self) -> BatchDims {
+        let b = self.batch_size;
+        let v1_cap = b * (self.k2 + 1);
+        let v0_cap = v1_cap * (self.k1 + 1);
+        BatchDims { b, v1_cap, v0_cap, k1: self.k1, k2: self.k2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_dims() {
+        let d = FanoutConfig::PAPER.dims();
+        assert_eq!(d.b, 1024);
+        assert_eq!(d.v1_cap, 1024 * 11);
+        assert_eq!(d.v0_cap, 1024 * 11 * 26);
+    }
+}

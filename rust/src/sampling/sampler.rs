@@ -1,0 +1,378 @@
+//! The neighbor sampler and per-epoch batch planning.
+
+use super::batch::{MiniBatch, WeightMode};
+use super::FanoutConfig;
+use crate::graph::{Csr, Dataset};
+use crate::util::rng::Rng;
+
+/// Reusable sampler with stamped scratch arrays (no per-batch allocation
+/// of |V|-sized structures; sampling sits on the Eq. 5 critical path).
+pub struct Sampler {
+    cfg: FanoutConfig,
+    mode: WeightMode,
+    rng: Rng,
+    /// stamp[v] == tag  ⇒  v already placed in the current layer list.
+    stamp: Vec<u32>,
+    /// position of v in the current layer list (valid when stamped).
+    pos: Vec<i32>,
+    tag: u32,
+    /// scratch for neighbor sampling without replacement
+    pick: Vec<u32>,
+}
+
+impl Sampler {
+    pub fn new(cfg: FanoutConfig, mode: WeightMode, num_vertices: usize, seed: u64) -> Sampler {
+        Sampler {
+            cfg,
+            mode,
+            rng: Rng::new(seed),
+            stamp: vec![0; num_vertices],
+            pos: vec![0; num_vertices],
+            tag: 0,
+            pick: Vec::new(),
+        }
+    }
+
+    /// Sample the 2-layer block for `targets` (≤ batch_size) from `data`.
+    pub fn sample(
+        &mut self,
+        data: &Dataset,
+        targets: &[u32],
+        part_id: usize,
+        seq: usize,
+    ) -> MiniBatch {
+        let dims = self.cfg.dims();
+        assert!(targets.len() <= dims.b, "targets exceed batch capacity");
+        let g = &data.graph;
+        let n_targets = targets.len();
+
+        // ---- layer 2: targets → v1 --------------------------------------
+        let mut v2 = vec![0u32; dims.b];
+        v2[..n_targets].copy_from_slice(targets);
+
+        // v1 begins with the targets themselves (self positions), then
+        // deduplicated sampled neighbors.
+        self.tag += 1;
+        let mut v1: Vec<u32> = Vec::with_capacity(dims.v1_cap);
+        for &t in targets {
+            self.place(t, &mut v1);
+        }
+        let mut idx2 = vec![0i32; dims.b * (dims.k2 + 1)];
+        let mut w2 = vec![0f32; dims.b * (dims.k2 + 1)];
+        for (r, &t) in targets.iter().enumerate() {
+            let row = r * (dims.k2 + 1);
+            let self_pos = self.pos[t as usize];
+            idx2[row] = self_pos;
+            let k_real = self.sample_neighbors(g, t, self.cfg.k2);
+            let picks = std::mem::take(&mut self.pick);
+            w2[row] = self.self_weight(g, t);
+            for (c, &u) in picks.iter().enumerate() {
+                let p = self.place(u, &mut v1);
+                idx2[row + 1 + c] = p;
+                w2[row + 1 + c] = self.neighbor_weight(g, t, u, k_real);
+            }
+            self.pick = picks;
+        }
+        let n_v1 = v1.len();
+        assert!(n_v1 <= dims.v1_cap);
+
+        // ---- layer 1: v1 → v0 --------------------------------------------
+        self.tag += 1;
+        let mut v0: Vec<u32> = Vec::with_capacity(dims.v0_cap);
+        for &v in &v1 {
+            self.place(v, &mut v0);
+        }
+        let mut idx1 = vec![0i32; dims.v1_cap * (dims.k1 + 1)];
+        let mut w1 = vec![0f32; dims.v1_cap * (dims.k1 + 1)];
+        for r in 0..n_v1 {
+            let v = v1[r];
+            let row = r * (dims.k1 + 1);
+            idx1[row] = self.pos[v as usize];
+            let k_real = self.sample_neighbors(g, v, self.cfg.k1);
+            let picks = std::mem::take(&mut self.pick);
+            w1[row] = self.self_weight(g, v);
+            for (c, &u) in picks.iter().enumerate() {
+                let p = self.place(u, &mut v0);
+                idx1[row + 1 + c] = p;
+                w1[row + 1 + c] = self.neighbor_weight(g, v, u, k_real);
+            }
+            self.pick = picks;
+        }
+        let n_v0 = v0.len();
+        assert!(n_v0 <= dims.v0_cap);
+
+        // ---- labels / mask ------------------------------------------------
+        let mut labels = vec![0u32; dims.b];
+        let mut mask = vec![0f32; dims.b];
+        for (r, &t) in targets.iter().enumerate() {
+            labels[r] = data.features.label(t);
+            mask[r] = 1.0;
+        }
+
+        // pad vertex lists to capacity with id 0 (weight-0 rows ignore them)
+        v1.resize(dims.v1_cap, 0);
+        v0.resize(dims.v0_cap, 0);
+
+        MiniBatch {
+            dims,
+            part_id,
+            seq,
+            n_targets,
+            n_v1,
+            n_v0,
+            v2,
+            v1,
+            v0,
+            idx1,
+            w1,
+            idx2,
+            w2,
+            labels,
+            mask,
+        }
+    }
+
+    /// Place `v` in `list` if not already present this layer; return its
+    /// position.
+    #[inline]
+    fn place(&mut self, v: u32, list: &mut Vec<u32>) -> i32 {
+        let vi = v as usize;
+        if self.stamp[vi] == self.tag {
+            return self.pos[vi];
+        }
+        self.stamp[vi] = self.tag;
+        let p = list.len() as i32;
+        self.pos[vi] = p;
+        list.push(v);
+        p
+    }
+
+    /// Sample up to `k` distinct neighbors of `v` into `self.pick`;
+    /// returns the *actual* neighbor count used for mean weighting.
+    fn sample_neighbors(&mut self, g: &Csr, v: u32, k: usize) -> usize {
+        let nbrs = g.neighbors(v);
+        self.pick.clear();
+        if nbrs.is_empty() {
+            return 0;
+        }
+        if nbrs.len() <= k {
+            self.pick.extend_from_slice(nbrs);
+        } else {
+            // Floyd's algorithm over index space
+            let idxs = self.rng.sample_distinct(nbrs.len(), k);
+            self.pick.extend(idxs.into_iter().map(|i| nbrs[i]));
+        }
+        self.pick.len()
+    }
+
+    #[inline]
+    fn self_weight(&self, g: &Csr, v: u32) -> f32 {
+        match self.mode {
+            // GCN Â with self loop: ŵ(v,v) = 1/(deg+1)
+            WeightMode::GcnNorm => 1.0 / (g.degree(v) as f32 + 1.0),
+            // SAGE: the self column feeds the W_self path at weight 1
+            WeightMode::SageMean => 1.0,
+        }
+    }
+
+    #[inline]
+    fn neighbor_weight(&self, g: &Csr, v: u32, u: u32, k_real: usize) -> f32 {
+        match self.mode {
+            WeightMode::GcnNorm => {
+                1.0 / (((g.degree(v) as f32 + 1.0) * (g.degree(u) as f32 + 1.0)).sqrt())
+            }
+            WeightMode::SageMean => 1.0 / k_real as f32,
+        }
+    }
+}
+
+/// Per-epoch batch plan: shuffled training targets per partition, consumed
+/// batch by batch (the two-stage scheduler asks for "next batch from
+/// partition j" — Algorithm 3's `Sample(V[j], E[j])`).
+pub struct EpochPlan {
+    batch_size: usize,
+    order: Vec<Vec<u32>>,
+    cursor: Vec<usize>,
+}
+
+impl EpochPlan {
+    pub fn new(train_parts: &[Vec<u32>], batch_size: usize, rng: &mut Rng) -> EpochPlan {
+        let mut order: Vec<Vec<u32>> = train_parts.to_vec();
+        for part in order.iter_mut() {
+            rng.shuffle(part);
+        }
+        EpochPlan { batch_size, order, cursor: vec![0; train_parts.len()] }
+    }
+
+    /// Batches remaining in partition `i`.
+    pub fn remaining(&self, i: usize) -> usize {
+        let left = self.order[i].len() - self.cursor[i];
+        (left + self.batch_size - 1) / self.batch_size
+    }
+
+    /// Total batches remaining.
+    pub fn total_remaining(&self) -> usize {
+        (0..self.order.len()).map(|i| self.remaining(i)).sum()
+    }
+
+    /// Take the next target slice from partition `i` (None if exhausted).
+    pub fn next_targets(&mut self, i: usize) -> Option<&[u32]> {
+        let left = self.order[i].len() - self.cursor[i];
+        if left == 0 {
+            return None;
+        }
+        let take = left.min(self.batch_size);
+        let start = self.cursor[i];
+        self.cursor[i] += take;
+        Some(&self.order[i][start..start + take])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn data() -> Dataset {
+        datasets::lookup("reddit").unwrap().build(8, 17)
+    }
+
+    fn cfg() -> FanoutConfig {
+        FanoutConfig { batch_size: 64, k1: 5, k2: 3 }
+    }
+
+    #[test]
+    fn sampled_batch_is_structurally_valid() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 1);
+        let targets: Vec<u32> = d.train_vertices[..64].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        mb.validate().unwrap();
+        assert_eq!(mb.n_targets, 64);
+        assert!(mb.n_v1 >= 64); // at least the targets themselves
+        assert!(mb.n_v0 >= mb.n_v1);
+    }
+
+    #[test]
+    fn short_final_batch_masks_padding() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::SageMean, d.graph.num_vertices(), 1);
+        let targets: Vec<u32> = d.train_vertices[..10].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        mb.validate().unwrap();
+        assert_eq!(mb.n_targets, 10);
+        assert_eq!(mb.mask.iter().filter(|&&m| m == 1.0).count(), 10);
+    }
+
+    #[test]
+    fn layer_lists_deduplicate() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 2);
+        let targets: Vec<u32> = d.train_vertices[..64].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        let uniq: std::collections::HashSet<u32> = mb.v1[..mb.n_v1].iter().copied().collect();
+        assert_eq!(uniq.len(), mb.n_v1, "v1 contains duplicates");
+        let uniq0: std::collections::HashSet<u32> = mb.v0[..mb.n_v0].iter().copied().collect();
+        assert_eq!(uniq0.len(), mb.n_v0, "v0 contains duplicates");
+    }
+
+    #[test]
+    fn self_column_points_to_self() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 3);
+        let targets: Vec<u32> = d.train_vertices[..32].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        let k2 = mb.dims.k2 + 1;
+        for (r, &t) in targets.iter().enumerate() {
+            let p = mb.idx2[r * k2] as usize;
+            assert_eq!(mb.v1[p], t, "self column of target {r} wrong");
+        }
+        let k1 = mb.dims.k1 + 1;
+        for r in 0..mb.n_v1 {
+            let p = mb.idx1[r * k1] as usize;
+            assert_eq!(mb.v0[p], mb.v1[r], "self column of v1 row {r} wrong");
+        }
+    }
+
+    #[test]
+    fn sage_mean_weights_sum_to_one_over_neighbors() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::SageMean, d.graph.num_vertices(), 4);
+        let targets: Vec<u32> = d.train_vertices[..16].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        let k2 = mb.dims.k2 + 1;
+        for r in 0..mb.n_targets {
+            let nbr_sum: f32 = mb.w2[r * k2 + 1..(r + 1) * k2].iter().sum();
+            let has_nbrs = mb.w2[r * k2 + 1..(r + 1) * k2].iter().any(|&w| w != 0.0);
+            if has_nbrs {
+                assert!((nbr_sum - 1.0).abs() < 1e-5, "row {r}: {nbr_sum}");
+            }
+            assert_eq!(mb.w2[r * k2], 1.0); // self column
+        }
+    }
+
+    #[test]
+    fn gcn_weights_match_degree_formula() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 5);
+        let targets: Vec<u32> = d.train_vertices[..8].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        let k2 = mb.dims.k2 + 1;
+        for (r, &t) in targets.iter().enumerate() {
+            let dv = d.graph.degree(t) as f32 + 1.0;
+            assert!((mb.w2[r * k2] - 1.0 / dv).abs() < 1e-6);
+            for c in 1..k2 {
+                let w = mb.w2[r * k2 + c];
+                if w != 0.0 {
+                    let u = mb.v1[mb.idx2[r * k2 + c] as usize];
+                    let du = d.graph.degree(u) as f32 + 1.0;
+                    assert!((w - 1.0 / (dv * du).sqrt()).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = data();
+        let targets: Vec<u32> = d.train_vertices[..32].to_vec();
+        let mut s1 = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        let mut s2 = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        let a = s1.sample(&d, &targets, 0, 0);
+        let b = s2.sample(&d, &targets, 0, 0);
+        assert_eq!(a.v0, b.v0);
+        assert_eq!(a.idx1, b.idx1);
+        assert_eq!(a.w2, b.w2);
+    }
+
+    #[test]
+    fn epoch_plan_covers_all_targets_once() {
+        let d = data();
+        let parts = vec![
+            d.train_vertices[..100].to_vec(),
+            d.train_vertices[100..150].to_vec(),
+        ];
+        let mut rng = Rng::new(9);
+        let mut plan = EpochPlan::new(&parts, 32, &mut rng);
+        assert_eq!(plan.remaining(0), 4); // ceil(100/32)
+        assert_eq!(plan.remaining(1), 2);
+        let mut seen = Vec::new();
+        while let Some(t) = plan.next_targets(0) {
+            seen.extend_from_slice(t);
+        }
+        assert_eq!(seen.len(), 100);
+        let set: std::collections::HashSet<u32> = seen.iter().copied().collect();
+        assert_eq!(set.len(), 100);
+        assert_eq!(plan.remaining(0), 0);
+        assert_eq!(plan.total_remaining(), 2);
+    }
+
+    #[test]
+    fn vertices_traversed_counts_all_layers() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 11);
+        let targets: Vec<u32> = d.train_vertices[..64].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        assert_eq!(mb.vertices_traversed(), mb.n_targets + mb.n_v1 + mb.n_v0);
+    }
+}

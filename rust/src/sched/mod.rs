@@ -1,0 +1,244 @@
+//! Two-stage task scheduling — the paper's workload-balancing (WB)
+//! optimization (§5.1, Algorithm 3, Figure 5).
+//!
+//! Synchronous SGD executes `p` mini-batches per iteration (one per FPGA).
+//! Partitions yield different batch counts (Challenge 2), so late in the
+//! epoch some partitions run dry:
+//!
+//! - **Stage 1** (all partitions non-empty): FPGA *i* executes the next
+//!   batch of partition *i*.
+//! - **Stage 2** (some partitions empty): extra batches are sampled from
+//!   the remaining partitions round-robin (`cnt`) and — with WB enabled —
+//!   given to *idle* FPGAs. With WB disabled (the Table 7 baseline) every
+//!   batch stays on its own partition's FPGA, so that FPGA executes
+//!   several batches in one iteration while the others wait.
+//!
+//! The scheduler is pure control logic over "batches remaining per
+//! partition"; the coordinator owns the actual sampling and dispatch.
+
+/// One scheduled task: sample a batch from `part` and run it on `fpga`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub part: usize,
+    pub fpga: usize,
+}
+
+/// Plan for one synchronous iteration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IterationPlan {
+    pub tasks: Vec<Task>,
+}
+
+impl IterationPlan {
+    /// Batches assigned to each FPGA (length p) — the iteration's
+    /// execution time is `max` of these times the per-batch time.
+    pub fn per_fpga_counts(&self, p: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; p];
+        for t in &self.tasks {
+            counts[t.fpga] += 1;
+        }
+        counts
+    }
+
+    /// The makespan multiplier of this iteration (max batches on one FPGA).
+    pub fn makespan_batches(&self, p: usize) -> usize {
+        self.per_fpga_counts(p).into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Two-stage scheduler state (Algorithm 3's `cnt` survives across
+/// iterations so round-robin sampling rotates through partitions).
+#[derive(Clone, Debug)]
+pub struct TwoStageScheduler {
+    p: usize,
+    /// WB optimization on (two-stage) or off (baseline assignment).
+    pub workload_balancing: bool,
+    cnt: usize,
+}
+
+impl TwoStageScheduler {
+    pub fn new(p: usize, workload_balancing: bool) -> TwoStageScheduler {
+        assert!(p >= 1);
+        TwoStageScheduler { p, workload_balancing, cnt: 0 }
+    }
+
+    /// Plan the next iteration given `remaining[i]` = batches left in
+    /// partition i. Consumes up to `p` batches (fewer at the very end of
+    /// the epoch). Returns `None` when the epoch is complete.
+    ///
+    /// The caller must decrement `remaining` according to the returned
+    /// tasks (or use [`TwoStageScheduler::plan_epoch`]).
+    pub fn plan_iteration(&mut self, remaining: &[usize]) -> Option<IterationPlan> {
+        assert_eq!(remaining.len(), self.p, "remaining must have one entry per partition");
+        let total: usize = remaining.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let mut rem = remaining.to_vec();
+        let mut tasks = Vec::with_capacity(self.p);
+
+        if rem.iter().all(|&r| r > 0) {
+            // Stage 1: everyone samples its own partition.
+            for i in 0..self.p {
+                tasks.push(Task { part: i, fpga: i });
+            }
+            return Some(IterationPlan { tasks });
+        }
+
+        // Stage 2. Partitions with batches / idle FPGAs (Algorithm 3
+        // lines 11–17).
+        let avail: Vec<usize> = (0..self.p).filter(|&i| rem[i] > 0).collect();
+        let idle: Vec<usize> = (0..self.p).filter(|&i| rem[i] == 0).collect();
+
+        // Non-idle FPGAs take their own partition's next batch (lines
+        // 18–22 distribute to avail FPGAs).
+        for &i in &avail {
+            if rem[i] > 0 {
+                tasks.push(Task { part: i, fpga: i });
+                rem[i] -= 1;
+            }
+        }
+        // Extra batches for idle FPGAs, sampled round-robin from the
+        // still-available partitions (lines 23–28).
+        for &f in &idle {
+            // advance cnt to a partition that still has batches
+            let still: Vec<usize> = avail.iter().copied().filter(|&j| rem[j] > 0).collect();
+            if still.is_empty() {
+                break;
+            }
+            let j = still[self.cnt % still.len()];
+            self.cnt += 1;
+            rem[j] -= 1;
+            let fpga = if self.workload_balancing {
+                f // WB: idle FPGA takes the extra batch
+            } else {
+                j // baseline: the batch stays on its own partition's FPGA
+            };
+            tasks.push(Task { part: j, fpga });
+        }
+        Some(IterationPlan { tasks })
+    }
+
+    /// Plan a whole epoch; returns the iteration plans and checks the
+    /// exactly-once invariant.
+    pub fn plan_epoch(&mut self, batches_per_part: &[usize]) -> Vec<IterationPlan> {
+        let mut rem = batches_per_part.to_vec();
+        let mut plans = Vec::new();
+        while let Some(plan) = self.plan_iteration(&rem) {
+            for t in &plan.tasks {
+                assert!(rem[t.part] > 0, "scheduler over-consumed partition {}", t.part);
+                rem[t.part] -= 1;
+            }
+            plans.push(plan);
+        }
+        assert!(rem.iter().all(|&r| r == 0));
+        plans
+    }
+}
+
+/// Epoch makespan in batch units: Σ over iterations of the per-iteration
+/// max batch count on one FPGA. This is what WB improves (Table 7).
+pub fn epoch_makespan_batches(plans: &[IterationPlan], p: usize) -> usize {
+    plans.iter().map(|pl| pl.makespan_batches(p)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage1_assigns_own_partition() {
+        let mut s = TwoStageScheduler::new(3, true);
+        let plan = s.plan_iteration(&[5, 5, 5]).unwrap();
+        assert_eq!(
+            plan.tasks,
+            vec![
+                Task { part: 0, fpga: 0 },
+                Task { part: 1, fpga: 1 },
+                Task { part: 2, fpga: 2 }
+            ]
+        );
+    }
+
+    #[test]
+    fn figure5_example() {
+        // p=3, partition batch counts 4/5/3 (mini-batches 1..12 in Fig. 5).
+        let mut s = TwoStageScheduler::new(3, true);
+        let plans = s.plan_epoch(&[4, 5, 3]);
+        // 12 batches, p=3 → with WB exactly ceil(12/3)=4 iterations of
+        // makespan 1.
+        assert_eq!(plans.iter().map(|p| p.tasks.len()).sum::<usize>(), 12);
+        assert_eq!(epoch_makespan_batches(&plans, 3), plans.len());
+        assert_eq!(plans.len(), 4);
+    }
+
+    #[test]
+    fn baseline_is_slower_under_imbalance() {
+        let counts = [10usize, 6, 6];
+        let mut wb = TwoStageScheduler::new(3, true);
+        let mut base = TwoStageScheduler::new(3, false);
+        let m_wb = epoch_makespan_batches(&wb.plan_epoch(&counts), 3);
+        let m_base = epoch_makespan_batches(&base.plan_epoch(&counts), 3);
+        assert!(m_wb < m_base, "wb={m_wb} base={m_base}");
+        // WB achieves the ideal ceil(total/p)
+        assert_eq!(m_wb, (22 + 2) / 3);
+    }
+
+    #[test]
+    fn exactly_once_and_iteration_width() {
+        let counts = [7usize, 3, 5, 1];
+        let mut s = TwoStageScheduler::new(4, true);
+        let plans = s.plan_epoch(&counts);
+        let mut consumed = vec![0usize; 4];
+        for pl in &plans {
+            assert!(pl.tasks.len() <= 4);
+            for t in &pl.tasks {
+                consumed[t.part] += 1;
+            }
+            // with WB each FPGA gets at most 1 batch per iteration
+            assert!(pl.makespan_batches(4) <= 1);
+        }
+        assert_eq!(consumed, counts.to_vec());
+    }
+
+    #[test]
+    fn round_robin_rotates_across_iterations() {
+        // one partition drains immediately; extras must rotate over the
+        // others rather than hammering one partition
+        let mut s = TwoStageScheduler::new(3, true);
+        let mut rem = vec![0usize, 9, 9];
+        let mut sampled_from = vec![0usize; 3];
+        for _ in 0..3 {
+            let plan = s.plan_iteration(&rem).unwrap();
+            for t in &plan.tasks {
+                rem[t.part] -= 1;
+                sampled_from[t.part] += 1;
+            }
+        }
+        assert_eq!(sampled_from[0], 0);
+        // extras alternate between partitions 1 and 2
+        assert!(sampled_from[1] >= 4 && sampled_from[2] >= 4, "{sampled_from:?}");
+    }
+
+    #[test]
+    fn epoch_ends_with_none() {
+        let mut s = TwoStageScheduler::new(2, true);
+        assert!(s.plan_iteration(&[0, 0]).is_none());
+    }
+
+    #[test]
+    fn single_fpga_degenerates_to_sequential() {
+        let mut s = TwoStageScheduler::new(1, true);
+        let plans = s.plan_epoch(&[5]);
+        assert_eq!(plans.len(), 5);
+        assert!(plans.iter().all(|p| p.tasks.len() == 1));
+    }
+
+    #[test]
+    fn tail_iteration_can_be_narrow() {
+        let mut s = TwoStageScheduler::new(4, true);
+        let plans = s.plan_epoch(&[1, 1, 0, 0]);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].tasks.len(), 2);
+    }
+}

@@ -1,0 +1,174 @@
+//! Miniature measurement harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries with `harness = false`; each calls
+//! [`Bench::new`] and registers closures via [`Bench::measure`], or prints
+//! analytic tables directly. Timing methodology: warmup runs, then `iters`
+//! timed runs; report median + IQR, following criterion's spirit.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_s: f64,
+    pub p25_s: f64,
+    pub p75_s: f64,
+    pub iters: usize,
+}
+
+/// Bench context: collects measurements and prints a uniform report.
+pub struct Bench {
+    title: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Bench {
+        // Allow quick runs via env (used by `make test` smoke paths).
+        let iters = std::env::var("HITGNN_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        let warmup = std::env::var("HITGNN_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        println!("\n=== bench: {title} (warmup={warmup}, iters={iters}) ===");
+        Bench { title: title.to_string(), warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f`, which receives the iteration index and must return some
+    /// value to keep the optimizer honest (the value is black-boxed).
+    pub fn measure<T>(&mut self, name: &str, mut f: impl FnMut(usize) -> T) -> &Measurement {
+        for i in 0..self.warmup {
+            black_box(f(i));
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f(i));
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            median_s: stats::median(&samples),
+            p25_s: stats::percentile(&samples, 0.25),
+            p75_s: stats::percentile(&samples, 0.75),
+            iters: self.iters,
+        };
+        println!(
+            "  {:<44} {:>12} [{} .. {}]",
+            m.name,
+            stats::fmt_secs(m.median_s),
+            stats::fmt_secs(m.p25_s),
+            stats::fmt_secs(m.p75_s),
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Emit a throughput line derived from a prior measurement.
+    pub fn throughput(&self, name: &str, units: f64, median_s: f64, unit_name: &str) {
+        println!(
+            "  {:<44} {:>12} {unit_name}/s",
+            name,
+            stats::si(units / median_s)
+        );
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!("=== end bench: {} ===", self.title);
+    }
+}
+
+/// `std::hint::black_box` wrapper (stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown-style table printer used by the table/figure benches so the
+/// output can be pasted into EXPERIMENTS.md directly.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_ordered_quartiles() {
+        std::env::set_var("HITGNN_BENCH_ITERS", "5");
+        std::env::set_var("HITGNN_BENCH_WARMUP", "1");
+        let mut b = Bench::new("unit");
+        let m = b.measure("spin", |_| {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.p25_s <= m.median_s && m.median_s <= m.p75_s);
+        assert!(m.median_s > 0.0);
+        std::env::remove_var("HITGNN_BENCH_ITERS");
+        std::env::remove_var("HITGNN_BENCH_WARMUP");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["dataset", "NVTPS"]);
+        t.row(&["reddit".into(), "32.5 M".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,104 @@
+//! Fixed-size bitset over `u64` words. Used for feature-store membership
+//! (β computation touches it per sampled vertex — keep it branch-light).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    pub fn new(len: usize) -> Bitset {
+        Bitset { words: vec![0; (len + 63) / 64], len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set indices.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(129));
+        b.set(129);
+        b.set(0);
+        b.set(64);
+        assert!(b.get(129) && b.get(0) && b.get(64));
+        assert!(!b.get(1));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn iter_ones_in_order() {
+        let mut b = Bitset::new(200);
+        for i in [3usize, 64, 65, 199] {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let b = Bitset::new(0);
+        assert_eq!(b.count(), 0);
+        let mut f = Bitset::new(67);
+        for i in 0..67 {
+            f.set(i);
+        }
+        assert_eq!(f.count(), 67);
+        assert_eq!(f.iter_ones().count(), 67);
+    }
+}

@@ -1,0 +1,179 @@
+//! Tiny command-line parser (the offline environment has no `clap`).
+//!
+//! Grammar: `prog [subcommand] [--flag] [--key value] [--key=value] [pos...]`.
+//! Typed accessors record which keys were consumed so [`Args::finish`] can
+//! reject typos instead of silently ignoring them.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// First non-flag token, if any (subcommand).
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit token iterator.
+    pub fn parse<I, S>(tokens: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut kv = BTreeMap::new();
+        let mut flags = BTreeSet::new();
+        let mut positional = Vec::new();
+        let mut subcommand = None;
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    kv.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(stripped.to_string());
+                }
+            } else if subcommand.is_none() && positional.is_empty() {
+                subcommand = Some(t.clone());
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Args {
+            subcommand,
+            kv,
+            flags,
+            positional,
+            consumed: std::cell::RefCell::new(BTreeSet::new()),
+        }
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.kv.get(key).cloned()
+    }
+
+    /// Required string option.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<String> {
+        self.mark(key);
+        self.kv
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+
+    /// Typed numeric option with default.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present / absent).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains(key)
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on unconsumed `--options` (typo protection). Call after all
+    /// accessors.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k.as_str()))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown option(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_kv_flags_positional() {
+        let a = Args::parse(["train", "--epochs", "10", "--fast", "--out=run.json", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.num::<usize>("epochs", 1).unwrap(), 10);
+        assert!(a.flag("fast"));
+        assert_eq!(a.str("out", ""), "run.json");
+        assert_eq!(a.positional(), ["extra".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.num::<f64>("lr", 0.1).unwrap(), 0.1);
+        assert!(!a.flag("x"));
+        assert!(a.req_str("needed").is_err());
+    }
+
+    #[test]
+    fn bad_number_reports_key() {
+        let a = Args::parse(["--n", "abc"]);
+        let err = a.num::<usize>("n", 0).unwrap_err().to_string();
+        assert!(err.contains("--n=abc"), "{err}");
+    }
+
+    #[test]
+    fn finish_rejects_unknown() {
+        let a = Args::parse(["cmd", "--typo", "1"]);
+        assert!(a.finish().is_err());
+        let b = Args::parse(["cmd", "--ok", "1"]);
+        b.str("ok", "");
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn double_dash_value_styles_match() {
+        let a = Args::parse(["--k=v"]);
+        let b = Args::parse(["--k", "v"]);
+        assert_eq!(a.str("k", ""), b.str("k", ""));
+    }
+}

@@ -1,0 +1,20 @@
+//! Substrate utilities built in-repo because the offline environment has no
+//! access to `rand`, `serde`, `clap`, `criterion`, or `proptest`.
+//!
+//! - [`rng`]      — xoshiro256** + splitmix64 deterministic PRNG
+//! - [`json`]     — minimal JSON parser / writer (manifest + config exchange)
+//! - [`cli`]      — flag/subcommand parser for the launcher and benches
+//! - [`stats`]    — running statistics, percentiles, geometric mean
+//! - [`bench`]    — tiny criterion-style measurement harness
+//! - [`logging`]  — leveled stderr logger with wall-clock timestamps
+//! - [`proptest`] — miniature property-testing driver (random cases + seed
+//!                  reporting on failure)
+
+pub mod bench;
+pub mod bitset;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,172 @@
+//! Running statistics, percentiles, and the geometric mean used throughout
+//! the benchmark harness and the EXPERIMENTS.md tables.
+
+/// Online mean/variance accumulator (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Running {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample using linear interpolation. `q` in [0,1].
+/// Sorts a copy; fine for bench-sized samples.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median shorthand.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Geometric mean (used for the paper's Table 6 "Geo. Mean" column).
+/// All inputs must be positive.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geo_mean of empty sample");
+    let s: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geo_mean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Human-readable SI formatting for throughput numbers, matching the
+/// paper's style ("97.0 M", "63.4 K").
+pub fn si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e9 {
+        (x / 1e9, " G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, " M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, " K")
+    } else {
+        (x, "")
+    };
+    if v.abs() >= 100.0 {
+        format!("{v:.0}{suffix}")
+    } else {
+        format!("{v:.1}{suffix}")
+    }
+}
+
+/// Duration formatting for the bench harness.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geo_mean_basic() {
+        assert!((geo_mean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geo_mean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geo_mean_rejects_nonpositive() {
+        geo_mean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(97.0e6), "97.0 M");
+        assert_eq!(si(63.4e3), "63.4 K");
+        assert_eq!(si(313.0e3), "313 K");
+        assert_eq!(si(12.0), "12.0");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_secs(5e-9), "5.0 ns");
+    }
+}

@@ -1,0 +1,306 @@
+//! Property-based invariants over the L3 substrates, driven by the
+//! in-repo `util::proptest` helper (seed-reproducible random cases).
+
+use hitgnn::fpga::timing::{BatchShape, TimingModel};
+use hitgnn::fpga::{DieConfig, ResourceModel, U250};
+use hitgnn::graph::datasets;
+use hitgnn::partition::{preprocess, Algorithm};
+use hitgnn::perf::{PlatformModel, PlatformSpec, Workload};
+use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
+use hitgnn::sched::TwoStageScheduler;
+use hitgnn::util::json::Json;
+use hitgnn::util::proptest::{check, require};
+use hitgnn::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// scheduler (Algorithm 3)
+// ---------------------------------------------------------------------
+
+#[test]
+fn scheduler_executes_every_batch_exactly_once() {
+    check("sched exactly-once", 128, |rng| {
+        let p = 1 + rng.index(8);
+        let counts: Vec<usize> = (0..p).map(|_| rng.index(40)).collect();
+        if counts.iter().sum::<usize>() == 0 {
+            return Ok(());
+        }
+        let wb = rng.bool(0.5);
+        let mut sched = TwoStageScheduler::new(p, wb);
+        let plans = sched.plan_epoch(&counts);
+        let mut consumed = vec![0usize; p];
+        for plan in &plans {
+            require(plan.tasks.len() <= p, "iteration wider than p")?;
+            for t in &plan.tasks {
+                require(t.fpga < p && t.part < p, "task indices in range")?;
+                consumed[t.part] += 1;
+            }
+        }
+        require(consumed == counts, &format!("{consumed:?} != {counts:?}"))
+    });
+}
+
+#[test]
+fn wb_epoch_makespan_is_optimal() {
+    check("wb optimal makespan", 64, |rng| {
+        let p = 2 + rng.index(6);
+        let counts: Vec<usize> = (0..p).map(|_| 1 + rng.index(30)).collect();
+        let total: usize = counts.iter().sum();
+        let mut sched = TwoStageScheduler::new(p, true);
+        let plans = sched.plan_epoch(&counts);
+        let makespan = hitgnn::sched::epoch_makespan_batches(&plans, p);
+        // with WB each iteration runs ≤1 batch per FPGA, so the epoch
+        // makespan equals the iteration count and is ≥ ceil(total/p) and
+        // ≤ max(partition counts) (stage-1 forces one batch per available
+        // partition per iteration)
+        let lower = (total + p - 1) / p;
+        let upper = total; // trivial upper bound
+        require(
+            makespan >= lower && makespan <= upper,
+            &format!("makespan {makespan} outside [{lower}, {upper}] for {counts:?}"),
+        )?;
+        // never worse than baseline
+        let mut base = TwoStageScheduler::new(p, false);
+        let base_plans = base.plan_epoch(&counts);
+        let base_makespan = hitgnn::sched::epoch_makespan_batches(&base_plans, p);
+        require(
+            makespan <= base_makespan,
+            &format!("WB {makespan} worse than baseline {base_makespan}"),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// partitioning
+// ---------------------------------------------------------------------
+
+#[test]
+fn partitioners_cover_train_set_disjointly() {
+    let d = datasets::lookup("yelp").unwrap().build(8, 99);
+    check("partition totality", 12, |rng| {
+        let p = 1 + rng.index(6);
+        let algo = match rng.index(3) {
+            0 => Algorithm::DistDgl,
+            1 => Algorithm::PaGraph,
+            _ => Algorithm::P3,
+        };
+        let pre = preprocess(algo, &d, p, rng.f64() * 0.5, rng.next_u64());
+        let total: usize = pre.train_parts.iter().map(|t| t.len()).sum();
+        require(total == d.train_vertices.len(), "train vertices lost/duplicated")?;
+        if let Some(part) = &pre.vertex_part {
+            require(part.iter().all(|&x| (x as usize) < p), "assignment in range")?;
+        }
+        require(pre.stores.len() == p, "one store per FPGA")
+    });
+}
+
+// ---------------------------------------------------------------------
+// sampler
+// ---------------------------------------------------------------------
+
+#[test]
+fn sampled_batches_always_validate() {
+    let d = datasets::lookup("reddit").unwrap().build(8, 55);
+    check("sampler validity", 24, |rng| {
+        let cfg = FanoutConfig {
+            batch_size: 1 + rng.index(96),
+            k1: 1 + rng.index(8),
+            k2: 1 + rng.index(6),
+        };
+        let mode = if rng.bool(0.5) { WeightMode::GcnNorm } else { WeightMode::SageMean };
+        let mut s = Sampler::new(cfg, mode, d.graph.num_vertices(), rng.next_u64());
+        let n = 1 + rng.index(cfg.batch_size.min(d.train_vertices.len()));
+        let start = rng.index(d.train_vertices.len() - n + 1);
+        let targets = &d.train_vertices[start..start + n];
+        let mb = s.sample(&d, targets, 0, 0);
+        mb.validate().map_err(|e| e.to_string())?;
+        require(mb.n_targets == n, "target count")?;
+        // weights non-negative and padded rows fully zero
+        require(mb.w1.iter().all(|&w| w >= 0.0), "w1 non-negative")?;
+        let k1 = mb.dims.k1 + 1;
+        for r in mb.n_v1..mb.dims.v1_cap {
+            let row = &mb.w1[r * k1..(r + 1) * k1];
+            require(row.iter().all(|&w| w == 0.0), "padding rows weightless")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// comm conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn traffic_conserves_bytes_for_all_algorithms() {
+    let d = datasets::lookup("ogbn-products").unwrap().build(8, 77);
+    check("traffic conservation", 12, |rng| {
+        let p = 2 + rng.index(4);
+        let algo = match rng.index(3) {
+            0 => Algorithm::DistDgl,
+            1 => Algorithm::PaGraph,
+            _ => Algorithm::P3,
+        };
+        let pre = preprocess(algo, &d, p, 0.3, rng.next_u64());
+        let cfg = FanoutConfig { batch_size: 32, k1: 4, k2: 3 };
+        let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
+        let part = rng.index(p);
+        if pre.train_parts[part].len() < 32 {
+            return Ok(());
+        }
+        let mb = s.sample(&d, &pre.train_parts[part][..32], part, 0);
+        let dc = rng.bool(0.5);
+        let t = hitgnn::comm::feature_traffic(
+            &mb,
+            &pre.stores[part],
+            d.features.bytes_per_vertex(),
+            hitgnn::comm::CommConfig { direct_host_fetch: dc },
+            pre.vertex_part.as_deref(),
+            part,
+        );
+        let expect = (mb.n_v0 * d.features.bytes_per_vertex()) as u64;
+        require(t.total_bytes() == expect, &format!("{} != {expect}", t.total_bytes()))?;
+        let beta = t.beta();
+        require((0.0..=1.0).contains(&beta), "beta in [0,1]")?;
+        if dc {
+            require(t.f2f_bytes == 0, "DC on → no f2f")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// performance model monotonicity
+// ---------------------------------------------------------------------
+
+#[test]
+fn perf_model_monotone_in_resources_and_beta() {
+    check("perf monotonicity", 64, |rng| {
+        let f0 = 32.0 + rng.index(600) as f64;
+        let shape = BatchShape::nominal(
+            (64 + rng.index(1024)) as f64,
+            (2 + rng.index(24)) as f64,
+            (2 + rng.index(10)) as f64,
+            [f0, 128.0, (8 + rng.index(100)) as f64],
+        );
+        let beta = rng.f64();
+        let n = 1 + rng.index(4) as u32;
+        let m = 32 * (1 + rng.index(16)) as u32;
+        let t1 = TimingModel::new(U250, DieConfig { n, m }, 16.0);
+        let t2 = TimingModel::new(U250, DieConfig { n: n * 2, m: m * 2 }, 16.0);
+        let b1 = t1.batch(&shape, beta, 1.0).gnn_s;
+        let b2 = t2.batch(&shape, beta, 1.0).gnn_s;
+        require(b2 <= b1 + 1e-12, "more PEs must not be slower")?;
+        let hi = t1.batch(&shape, (beta + 0.3).min(1.0), 1.0).gnn_s;
+        require(hi <= b1 + 1e-12, "higher beta must not be slower")
+    });
+}
+
+#[test]
+fn epoch_estimate_scales_with_batches() {
+    check("epoch scaling", 32, |rng| {
+        let p = 1 + rng.index(8);
+        let spec = {
+            let mut s = PlatformSpec::paper_4fpga();
+            s.num_fpgas = p;
+            s
+        };
+        let model = PlatformModel::new(spec, DieConfig { n: 2, m: 512 });
+        let base = 1 + rng.index(32);
+        let w1 = Workload {
+            shape: BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]),
+            beta: 0.5 + rng.f64() * 0.5,
+            param_scale: 1.0,
+            sampling_s_per_batch: 0.0,
+            batches_per_part: vec![base; p],
+            workload_balancing: true,
+            direct_host_fetch: true,
+            extra_pcie_bytes_per_batch: 0.0,
+            prefetch: false,
+        };
+        let mut w2 = w1.clone();
+        w2.batches_per_part = vec![base * 2; p];
+        let e1 = model.epoch(&w1);
+        let e2 = model.epoch(&w2);
+        require(e2.epoch_s > e1.epoch_s, "more batches take longer")?;
+        // NVTPS steady-state is batch-count invariant (same per-iteration
+        // composition, sync amortised identically)
+        require(
+            (e1.nvtps - e2.nvtps).abs() / e1.nvtps < 0.05,
+            &format!("steady-state NVTPS drifted: {} vs {}", e1.nvtps, e2.nvtps),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// resource model
+// ---------------------------------------------------------------------
+
+#[test]
+fn resource_feasibility_is_monotone() {
+    let model = ResourceModel::new(U250);
+    check("resource monotone", 128, |rng| {
+        let n = 1 + rng.index(12) as u32;
+        let m = 1 + rng.index(800) as u32;
+        let c = DieConfig { n, m };
+        if model.check(c) {
+            // any smaller config is also feasible
+            let smaller = DieConfig { n: 1.max(n / 2), m: 1.max(m / 2) };
+            require(model.check(smaller), &format!("{smaller:?} infeasible but {c:?} feasible"))
+        } else {
+            let larger = DieConfig { n: n + 1, m: m + 1 };
+            require(!model.check(larger), &format!("{larger:?} feasible but {c:?} infeasible"))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// json round-trip
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => {
+            // round-trippable numbers: i32-ish or fixed-point halves
+            Json::num((rng.next_u64() as i32 as f64) / 2.0)
+        }
+        3 => {
+            let len = rng.index(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.index(68);
+                    match c {
+                        0..=25 => (b'a' + c as u8) as char,
+                        26..=51 => (b'A' + (c - 26) as u8) as char,
+                        52..=61 => (b'0' + (c - 52) as u8) as char,
+                        62 => '"',
+                        63 => '\\',
+                        64 => '\n',
+                        65 => '\t',
+                        66 => 'é',
+                        _ => ' ',
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.index(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    check("json roundtrip", 256, |rng| {
+        let doc = random_json(rng, 4);
+        for text in [doc.to_string(), doc.pretty()] {
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            require(parsed == doc, &format!("mismatch for {text}"))?;
+        }
+        Ok(())
+    });
+}
