@@ -1,15 +1,20 @@
 //! Scalability study (paper §7.6 / Fig 8): project the training throughput
 //! from 1 to 16 FPGAs and find where CPU memory bandwidth becomes the
-//! limit (205 GB/s ÷ 16 GB/s PCIe ≈ 12.8 concurrent fetchers).
+//! limit (205 GB/s ÷ 16 GB/s PCIe ≈ 12.8 concurrent fetchers). Then a
+//! *measured* host-pipeline sweep: epoch wall-clock over host-threads ×
+//! prefetch-depth on the bundled synthetic dataset.
 //!
-//!     cargo run --release --example scalability [--shift 6]
+//!     cargo run --release --example scalability [--shift 6] [--skip-host]
 
+use hitgnn::coordinator::Trainer;
 use hitgnn::perf::experiments::fig8;
+use hitgnn::util::bench::Table;
 use hitgnn::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let shift: u32 = args.num("shift", 6)?;
+    let skip_host = args.flag("skip-host");
     args.finish()?;
 
     let counts = [1usize, 2, 4, 6, 8, 10, 12, 14, 16];
@@ -41,5 +46,44 @@ fn main() -> anyhow::Result<()> {
             late
         );
     }
+
+    if !skip_host {
+        host_pipeline_sweep();
+    }
     Ok(())
+}
+
+/// Measured host-pipeline scalability: epoch wall-clock for host-threads
+/// × prefetch-depth at 4 simulated FPGAs. (1, 1) reproduces the seed's
+/// serial coordinator. Uses the same canonical measurement as the
+/// micro_host bench (`Trainer::pipeline_bench_epoch_wall`) so the numbers
+/// stay comparable.
+fn host_pipeline_sweep() {
+    println!("\nmeasured host pipeline (tiny, 4 FPGAs, epoch wall seconds):\n");
+    let mut table = Table::new(&["host-threads", "D=1", "D=2", "D=3"]);
+    let mut serial = None;
+    for ht in [1usize, 2, 4] {
+        let mut cells = vec![ht.to_string()];
+        for d in [1usize, 2, 3] {
+            // degrade gracefully (e.g. pjrt build without artifacts):
+            // the analytic projection above is still useful on its own
+            let wall = match Trainer::pipeline_bench_epoch_wall(ht, d) {
+                Ok(w) => w,
+                Err(e) => {
+                    println!("measured sweep skipped: {e:#}");
+                    return;
+                }
+            };
+            if (ht, d) == (1, 1) {
+                serial = Some(wall);
+            }
+            match serial {
+                Some(s) if wall > 0.0 => cells.push(format!("{wall:.4} ({:.2}x)", s / wall)),
+                _ => cells.push(format!("{wall:.4}")),
+            }
+        }
+        table.row(&cells);
+    }
+    table.print();
+    println!("(speedups relative to the serial host path: 1 thread, depth 1)");
 }

@@ -4,11 +4,12 @@
 //! the simulated-FPGA batch time for Eq. 5 to be compute-bound.
 
 use hitgnn::comm::{CommConfig, FeatureService};
+use hitgnn::coordinator::Trainer;
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
 use hitgnn::sched::TwoStageScheduler;
-use hitgnn::util::bench::{black_box, Bench};
+use hitgnn::util::bench::{black_box, Bench, Table};
 use hitgnn::util::json::Json;
 use hitgnn::util::rng::Rng;
 
@@ -43,8 +44,10 @@ fn main() {
         .take(1024)
         .collect();
     let ms = b
-        .measure("sample B=1024 fanout 25/10", |_| {
-            black_box(sampler.sample(&data, &targets, 0, 0))
+        .measure("sample B=1024 fanout 25/10", |i| {
+            // vary seq so every repetition samples a distinct batch (the
+            // keyed RNG would otherwise replay identical neighbor picks)
+            black_box(sampler.sample(&data, &targets, 0, i))
         })
         .median_s;
     let mb = sampler.sample(&data, &targets, 0, 0);
@@ -94,4 +97,53 @@ fn main() {
     });
 
     b.finish();
+
+    pipeline_sweep();
+}
+
+/// Host-pipeline benchmark (ISSUE 1 acceptance): epoch wall-clock over a
+/// host-threads × prefetch-depth grid on the bundled synthetic dataset,
+/// 4 simulated FPGAs. (1, 1) is the seed's serial path; the headline
+/// comparison is (4, 2) vs (1, 1).
+fn pipeline_sweep() {
+    println!("\n=== bench: host pipeline (tiny, 4 FPGAs, full epoch) ===");
+    let serial = match Trainer::pipeline_bench_epoch_wall(1, 1) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("  skipped: {e:#}");
+            return;
+        }
+    };
+    let mut t = Table::new(&["host-threads", "prefetch-depth", "epoch wall (s)", "speedup"]);
+    let mut headline = 0.0f64;
+    for ht in [1usize, 2, 4] {
+        for d in [1usize, 2, 3] {
+            if (ht, d) == (1, 1) {
+                t.row(&["1".into(), "1".into(), format!("{serial:.4}"), "1.00x (serial baseline)".into()]);
+                continue;
+            }
+            match Trainer::pipeline_bench_epoch_wall(ht, d) {
+                Ok(s) => {
+                    let speedup = serial / s;
+                    if (ht, d) == (4, 2) {
+                        headline = speedup;
+                    }
+                    t.row(&[
+                        ht.to_string(),
+                        d.to_string(),
+                        format!("{s:.4}"),
+                        format!("{speedup:.2}x"),
+                    ]);
+                }
+                Err(e) => t.row(&[ht.to_string(), d.to_string(), format!("error: {e:#}"), "-".into()]),
+            }
+        }
+    }
+    t.print();
+    if headline > 0.0 {
+        println!(
+            "  headline: --host-threads 4 --prefetch-depth 2 → {headline:.2}x over the serial path"
+        );
+    }
+    println!("=== end bench: host pipeline ===");
 }

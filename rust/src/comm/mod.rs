@@ -33,6 +33,17 @@ pub struct Traffic {
     pub f2f_bytes: u64,
 }
 
+impl std::ops::AddAssign for Traffic {
+    /// Merge another batch's accounting (the coordinator combines the
+    /// prep threads' per-batch values lock-free, in deterministic (iter,
+    /// tag) order, at the gradient-sync barrier — `coordinator::trainer`).
+    fn add_assign(&mut self, other: Traffic) {
+        self.local_bytes += other.local_bytes;
+        self.host_bytes += other.host_bytes;
+        self.f2f_bytes += other.f2f_bytes;
+    }
+}
+
 impl Traffic {
     /// The paper's β: fraction of feature bytes served locally (Eq. 7).
     pub fn beta(&self) -> f64 {
@@ -133,6 +144,12 @@ pub fn gradient_sync_seconds(param_bytes: u64, p: usize, pcie_gbs: f64, cpu_gbs:
 
 /// Host feature service: the execution-path materialisation of layer-0
 /// features, with identical accounting to [`feature_traffic`].
+///
+/// The service is stateless (`gather` takes `&self`), `Copy`, and `Sync`:
+/// construct it **once** per prep thread and reuse it for every batch —
+/// the per-call [`Traffic`] return value makes the accounting lock-free
+/// (merge with `+=` at the barrier).
+#[derive(Clone, Copy)]
 pub struct FeatureService<'a> {
     features: &'a FeatureGen,
     cfg: CommConfig,
@@ -282,6 +299,20 @@ mod tests {
         assert_eq!(&buf[3 * f0..4 * f0], &expect[..]);
         // padding rows are zero
         assert!(buf[mb.n_v0 * f0..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn feature_service_is_reusable_and_traffic_merges() {
+        let (d, pre, mb) = setup();
+        let svc = FeatureService::new(&d.features, CommConfig::default());
+        let (a, ta) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
+        let (b, tb) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
+        assert_eq!(a, b, "reused service must be deterministic");
+        assert_eq!(ta, tb);
+        let mut sum = Traffic::default();
+        sum += ta;
+        sum += tb;
+        assert_eq!(sum.total_bytes(), 2 * ta.total_bytes());
     }
 
     #[test]

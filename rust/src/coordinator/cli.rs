@@ -30,7 +30,11 @@ TRAIN OPTIONS:
     --scale-shift <s>            graph scaled to |V|/2^s (default 4)
     --cache-ratio <f>            PaGraph cache fraction (default 0.2)
     --no-wb / --no-dc            disable an optimization (ablation)
-    --prefetch                   prepare batch i+1 while i executes (§8)
+    --host-threads <n>           batch-preparation pool size (default 1)
+    --prefetch-depth <d>         bounded prefetch window: up to d-1
+                                 iterations prepare ahead of the one
+                                 executing (default 1 = serial)
+    --prefetch                   legacy alias for --prefetch-depth 2 (§8)
     --max-iterations <n>         cap iterations per epoch
     --seed <u64>                 --artifacts <dir>
     --report <file.json>         write the training report

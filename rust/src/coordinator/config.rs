@@ -27,8 +27,15 @@ pub struct TrainConfig {
     /// DC optimization (direct host fetch).
     pub direct_host_fetch: bool,
     /// §8 future-work extension: prepare iteration i+1's batches (sample +
-    /// feature gather) while the workers execute iteration i.
+    /// feature gather) while the workers execute iteration i. Kept for
+    /// compatibility; equivalent to `prefetch_depth >= 2`.
     pub prefetch: bool,
+    /// Size of the host batch-preparation pool (prep threads). 1 prepares
+    /// each iteration's batches sequentially, as the seed did.
+    pub host_threads: usize,
+    /// Bounded prefetch window depth D: how many iterations may be in
+    /// preparation ahead of the one executing (1 = no prefetch).
+    pub prefetch_depth: usize,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     /// Cap on iterations per epoch (None = full epoch); lets examples and
@@ -51,6 +58,8 @@ impl Default for TrainConfig {
             workload_balancing: true,
             direct_host_fetch: true,
             prefetch: false,
+            host_threads: 1,
+            prefetch_depth: 1,
             seed: 42,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             max_iterations: None,
@@ -75,6 +84,8 @@ impl TrainConfig {
             workload_balancing: !args.flag("no-wb"),
             direct_host_fetch: !args.flag("no-dc"),
             prefetch: args.flag("prefetch"),
+            host_threads: args.num("host-threads", d.host_threads)?,
+            prefetch_depth: args.num("prefetch-depth", d.prefetch_depth)?,
             seed: args.num("seed", d.seed)?,
             artifacts_dir: PathBuf::from(
                 args.str("artifacts", &d.artifacts_dir.display().to_string()),
@@ -83,7 +94,20 @@ impl TrainConfig {
         };
         anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
         anyhow::ensure!(cfg.epochs >= 1, "--epochs must be >= 1");
+        anyhow::ensure!(cfg.host_threads >= 1, "--host-threads must be >= 1");
+        anyhow::ensure!(cfg.prefetch_depth >= 1, "--prefetch-depth must be >= 1");
         Ok(cfg)
+    }
+
+    /// Effective bounded-prefetch window depth: the legacy `--prefetch`
+    /// flag guarantees at least one iteration of lookahead (depth 2).
+    pub fn pipeline_depth(&self) -> usize {
+        let d = self.prefetch_depth.max(1);
+        if self.prefetch {
+            d.max(2)
+        } else {
+            d
+        }
     }
 
     /// JSON round-trip (for the training report and saved runs).
@@ -100,6 +124,8 @@ impl TrainConfig {
             ("cache_ratio", Json::num(self.cache_ratio)),
             ("workload_balancing", Json::Bool(self.workload_balancing)),
             ("direct_host_fetch", Json::Bool(self.direct_host_fetch)),
+            ("host_threads", Json::num(self.host_threads as f64)),
+            ("prefetch_depth", Json::num(self.pipeline_depth() as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -114,6 +140,30 @@ mod tests {
         let c = TrainConfig::default();
         assert_eq!(c.num_fpgas, 4);
         assert!(c.workload_balancing && c.direct_host_fetch);
+        assert_eq!((c.host_threads, c.prefetch_depth), (1, 1));
+        assert_eq!(c.pipeline_depth(), 1);
+    }
+
+    #[test]
+    fn pipeline_depth_honours_legacy_prefetch_flag() {
+        let mut c = TrainConfig::default();
+        c.prefetch = true;
+        assert_eq!(c.pipeline_depth(), 2);
+        c.prefetch_depth = 3;
+        assert_eq!(c.pipeline_depth(), 3);
+        c.prefetch = false;
+        assert_eq!(c.pipeline_depth(), 3);
+    }
+
+    #[test]
+    fn parses_pipeline_options_and_rejects_zero() {
+        let args = Args::parse(["train", "--host-threads", "4", "--prefetch-depth", "2"]);
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!((c.host_threads, c.prefetch_depth), (4, 2));
+        let args = Args::parse(["train", "--host-threads", "0"]);
+        assert!(TrainConfig::from_args(&args).is_err());
+        let args = Args::parse(["train", "--prefetch-depth", "0"]);
+        assert!(TrainConfig::from_args(&args).is_err());
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct EpochMetrics {
     pub gather_seconds: f64,
     pub execute_seconds: f64,
     pub sync_seconds: f64,
+    /// Mean loss of each iteration, in execution order. Reduced in
+    /// deterministic (iteration, tag) order, so for a fixed seed this
+    /// sequence is bit-identical across pipeline configurations
+    /// (`tests/pipeline_determinism.rs`).
+    pub iter_losses: Vec<f64>,
 }
 
 impl EpochMetrics {
@@ -46,6 +51,10 @@ impl EpochMetrics {
             ("gather_seconds", Json::num(self.gather_seconds)),
             ("execute_seconds", Json::num(self.execute_seconds)),
             ("sync_seconds", Json::num(self.sync_seconds)),
+            (
+                "iter_losses",
+                Json::arr(self.iter_losses.iter().map(|&x| Json::num(x)).collect()),
+            ),
         ])
     }
 }

@@ -8,7 +8,9 @@
 //!
 //! - [`config`]  — run configuration (CLI / JSON)
 //! - [`params`]  — parameter set + SGD-with-momentum optimizer
-//! - [`worker`]  — per-FPGA worker threads running the PJRT executors
+//! - [`prep`]    — the host batch-preparation pipeline (PrepPool +
+//!   bounded prefetch window; DESIGN.md §Host pipeline)
+//! - [`worker`]  — per-FPGA worker threads running the executors
 //! - [`trainer`] — the epoch loop tying everything together
 //! - [`metrics`] — per-epoch measurements and the JSON training report
 //! - [`cli`]     — the `hitgnn` launcher
@@ -17,6 +19,7 @@ pub mod cli;
 pub mod config;
 pub mod metrics;
 pub mod params;
+pub mod prep;
 pub mod trainer;
 pub mod worker;
 

@@ -1,0 +1,290 @@
+//! The host batch-preparation pipeline.
+//!
+//! The seed prepared every task of an iteration serially on the
+//! coordinator thread, so host prep scaled O(p) while FPGA execution
+//! scaled O(1) — exactly the imbalance HyScale-GNN / HP-GNN identify as
+//! the limiter on heterogeneous platforms. This module restructures the
+//! epoch into three decoupled stages (DESIGN.md §Host pipeline):
+//!
+//! 1. **Planning** — [`plan_epoch_tasks`] materialises the whole epoch's
+//!    iteration schedule up front: `TwoStageScheduler` task assignment
+//!    plus `EpochPlan` target handout, as plain [`PrepTask`] values. No
+//!    sampling happens here, so planning always runs ahead.
+//! 2. **Preparation** — a pool of `--host-threads` workers
+//!    ([`prep_worker`]) pulls tasks from a shared queue, samples and
+//!    feature-gathers each into a [`PreparedBatch`]. The coordinator
+//!    releases tasks through a **bounded prefetch window** of depth
+//!    `--prefetch-depth`: while iteration *i* executes, iterations
+//!    `i+1 .. i+D-1` may be in preparation (D = 1 reproduces the seed's
+//!    serial behaviour; D = 2 the old `--prefetch` flag).
+//! 3. **Execution** — the `WorkerPool` drains prepared iterations at the
+//!    gradient-sync barrier (`trainer::run_epoch`).
+//!
+//! Determinism: a task's sampling RNG is keyed by (epoch stream,
+//! partition, per-partition seq); prepared batches carry (iter, tag) and
+//! are reassembled in that order; per-batch [`PrepStats`] are merged at
+//! the barrier in the same order. The loss sequence for a given seed is
+//! therefore bit-identical for any `--host-threads` × `--prefetch-depth`
+//! combination, including the serial path (1, 1).
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::comm::{CommConfig, FeatureService, Traffic};
+use crate::graph::Dataset;
+use crate::partition::Preprocessed;
+use crate::runtime::BatchBuffers;
+use crate::sampling::{EpochPlan, MiniBatch, Sampler};
+use crate::sched::TwoStageScheduler;
+
+/// One planned unit of host work: sample batch number `seq` of partition
+/// `part` and gather its features against FPGA `fpga`'s store.
+#[derive(Clone, Debug)]
+pub struct PrepTask {
+    /// Iteration index within the epoch.
+    pub iter: usize,
+    /// Task index within the iteration (reassembly + reduction order).
+    pub tag: usize,
+    pub part: usize,
+    pub fpga: usize,
+    /// Per-partition batch sequence number (RNG stream key).
+    pub seq: usize,
+    pub targets: Vec<u32>,
+}
+
+/// Host-side measurements of one prepared batch. Collected per batch and
+/// merged into `EpochMetrics` in deterministic (iter, tag) order at the
+/// barrier — no shared counters between prep threads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrepStats {
+    pub sample_seconds: f64,
+    pub gather_seconds: f64,
+    pub vertices_traversed: u64,
+    pub traffic: Traffic,
+    /// Measured batch shape [v0, v1, v2, a1, a2].
+    pub shape: [f64; 5],
+}
+
+impl PrepStats {
+    fn measure(mb: &MiniBatch, sample_seconds: f64, gather_seconds: f64, traffic: Traffic) -> PrepStats {
+        PrepStats {
+            sample_seconds,
+            gather_seconds,
+            vertices_traversed: mb.vertices_traversed() as u64,
+            traffic,
+            shape: [
+                mb.n_v0 as f64,
+                mb.n_v1 as f64,
+                mb.n_targets as f64,
+                mb.edges_layer1() as f64,
+                mb.edges_layer2() as f64,
+            ],
+        }
+    }
+}
+
+/// A fully prepared batch, ready for dispatch to its FPGA worker.
+pub struct PreparedBatch {
+    pub iter: usize,
+    pub tag: usize,
+    pub fpga: usize,
+    pub batch: BatchBuffers,
+    pub stats: PrepStats,
+}
+
+/// Planning stage: materialise the epoch's full iteration/task schedule.
+/// Consumes `remaining` via the scheduler and the plan's target handout;
+/// truncates at `max_iterations` so capped runs never plan (and therefore
+/// never prepare or count) batches that would not execute.
+pub fn plan_epoch_tasks(
+    sched: &mut TwoStageScheduler,
+    plan: &mut EpochPlan,
+    remaining: &mut [usize],
+    max_iterations: Option<usize>,
+) -> Vec<Vec<PrepTask>> {
+    let mut iterations: Vec<Vec<PrepTask>> = Vec::new();
+    loop {
+        if let Some(mx) = max_iterations {
+            if iterations.len() >= mx {
+                break;
+            }
+        }
+        let Some(ip) = sched.plan_iteration_consuming(remaining) else {
+            break;
+        };
+        let iter = iterations.len();
+        let mut tasks = Vec::with_capacity(ip.tasks.len());
+        for (tag, t) in ip.tasks.iter().enumerate() {
+            let (seq, targets) = plan
+                .next_targets_seq(t.part)
+                .expect("scheduler consumed beyond the epoch plan");
+            tasks.push(PrepTask {
+                iter,
+                tag,
+                part: t.part,
+                fpga: t.fpga,
+                seq,
+                targets: targets.to_vec(),
+            });
+        }
+        iterations.push(tasks);
+    }
+    iterations
+}
+
+/// Body of one prep-pool worker. Borrows a per-thread [`Sampler`] whose
+/// |V|-sized scratch persists across epochs (usable for any partition —
+/// batch content is keyed, not stateful; only the stream base is re-keyed
+/// here) and one reusable [`FeatureService`], hoisted out of the
+/// per-batch loop. Exits when the task channel closes or the result
+/// receiver is gone. A panic while preparing a batch sends an `Err`
+/// sentinel first so the coordinator fails instead of waiting forever,
+/// then resumes unwinding (the scope rethrows the original panic).
+pub fn prep_worker(
+    data: &Dataset,
+    pre: &Preprocessed,
+    sampler: &mut Sampler,
+    comm: CommConfig,
+    epoch_stream: u64,
+    tasks: &Mutex<mpsc::Receiver<PrepTask>>,
+    done: &mpsc::Sender<anyhow::Result<PreparedBatch>>,
+) {
+    sampler.set_stream(epoch_stream);
+    let svc = FeatureService::new(&data.features, comm);
+    let f0 = data.features.feat_dim();
+    loop {
+        let msg = match tasks.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break, // a sibling panicked while holding the lock
+        };
+        let Ok(task) = msg else { break };
+
+        let prepared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let t0 = Instant::now();
+            let mb = sampler.sample(data, &task.targets, task.part, task.seq);
+            let sample_seconds = t0.elapsed().as_secs_f64();
+
+            let t1 = Instant::now();
+            let (feat0, traffic) = svc.gather(
+                &mb,
+                &pre.stores[task.fpga],
+                pre.vertex_part.as_deref(),
+                task.fpga,
+            );
+            let gather_seconds = t1.elapsed().as_secs_f64();
+
+            let stats = PrepStats::measure(&mb, sample_seconds, gather_seconds, traffic);
+            let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
+            PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, batch, stats }
+        }));
+        match prepared {
+            Ok(pb) => {
+                if done.send(Ok(pb)).is_err() {
+                    break;
+                }
+            }
+            Err(payload) => {
+                let _ = done.send(Err(anyhow::anyhow!(
+                    "prep worker panicked on iter {} tag {} (part {})",
+                    task.iter,
+                    task.tag,
+                    task.part
+                )));
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::partition::{preprocess, Algorithm};
+    use crate::sampling::{FanoutConfig, WeightMode};
+    use crate::util::rng::Rng;
+
+    fn setup(p: usize) -> (Dataset, Preprocessed) {
+        let d = datasets::lookup("tiny").unwrap().build(0, 21);
+        let pre = preprocess(Algorithm::DistDgl, &d, p, 0.2, 21);
+        (d, pre)
+    }
+
+    fn plan_tasks(pre: &Preprocessed, p: usize, mx: Option<usize>) -> Vec<Vec<PrepTask>> {
+        let mut rng = Rng::new(5);
+        let mut plan = EpochPlan::new(&pre.train_parts, 32, &mut rng);
+        let mut sched = TwoStageScheduler::new(p, true);
+        let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+        plan_epoch_tasks(&mut sched, &mut plan, &mut remaining, mx)
+    }
+
+    #[test]
+    fn planning_is_exhaustive_and_ordered() {
+        let p = 2;
+        let (_, pre) = setup(p);
+        let iterations = plan_tasks(&pre, p, None);
+        let total_batches: usize =
+            (0..p).map(|i| (pre.train_parts[i].len() + 31) / 32).sum();
+        assert_eq!(iterations.iter().map(|t| t.len()).sum::<usize>(), total_batches);
+        // tags contiguous, iters consistent, per-partition seqs monotonic
+        let mut next_seq = vec![0usize; p];
+        for (i, tasks) in iterations.iter().enumerate() {
+            for (tag, t) in tasks.iter().enumerate() {
+                assert_eq!(t.iter, i);
+                assert_eq!(t.tag, tag);
+                assert_eq!(t.seq, next_seq[t.part]);
+                next_seq[t.part] += 1;
+                assert!(!t.targets.is_empty() && t.targets.len() <= 32);
+            }
+        }
+    }
+
+    #[test]
+    fn planning_respects_iteration_cap() {
+        let p = 2;
+        let (_, pre) = setup(p);
+        let iterations = plan_tasks(&pre, p, Some(3));
+        assert_eq!(iterations.len(), 3);
+        // stage-1 iterations: one batch per FPGA
+        assert!(iterations.iter().all(|t| t.len() == p));
+    }
+
+    #[test]
+    fn prep_worker_prepares_all_queued_tasks() {
+        let p = 2;
+        let (data, pre) = setup(p);
+        let iterations = plan_tasks(&pre, p, Some(2));
+        let n_tasks: usize = iterations.iter().map(|t| t.len()).sum();
+        let (task_tx, task_rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel();
+        for tasks in iterations {
+            for t in tasks {
+                task_tx.send(t).unwrap();
+            }
+        }
+        drop(task_tx);
+        let fanout = FanoutConfig { batch_size: 32, k1: 3, k2: 2 };
+        let mut sampler =
+            Sampler::new(fanout, WeightMode::GcnNorm, data.graph.num_vertices(), 0);
+        let rx = Mutex::new(task_rx);
+        std::thread::scope(|s| {
+            let done_tx = done_tx.clone();
+            let rxr = &rx;
+            let d = &data;
+            let pr = &pre;
+            let smp = &mut sampler;
+            s.spawn(move || {
+                prep_worker(d, pr, smp, CommConfig::default(), 99, rxr, &done_tx)
+            });
+        });
+        drop(done_tx);
+        let got: Vec<PreparedBatch> = done_rx.iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got.len(), n_tasks);
+        for b in &got {
+            assert!(b.stats.vertices_traversed > 0);
+            assert!(b.stats.traffic.total_bytes() > 0);
+            assert!(b.stats.shape[0] >= b.stats.shape[1]);
+        }
+    }
+}

@@ -1,18 +1,31 @@
-//! The training driver: preprocessing → epochs of (sample → gather →
-//! dispatch → gradient sync → weight update), with full measurement.
+//! The training driver: preprocessing → epochs of (plan → pipelined
+//! sample/gather → dispatch → gradient sync → weight update), with full
+//! measurement.
+//!
+//! The epoch loop is a three-stage pipeline (see [`super::prep`]): the
+//! planning stage materialises the iteration schedule up front, a pool of
+//! `--host-threads` prep workers samples + gathers batches through a
+//! bounded prefetch window of `--prefetch-depth` iterations, and the
+//! coordinator drains prepared iterations into the `WorkerPool` at the
+//! gradient-sync barrier. All reductions happen in deterministic
+//! (iteration, tag) order, so the loss sequence for a given seed does not
+//! depend on the pipeline configuration.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::config::TrainConfig;
 use super::metrics::{EpochMetrics, TrainReport};
 use super::params::{average_grads, ParamSet, Sgd};
+use super::prep;
 use super::worker::{WorkItem, WorkerPool};
 use crate::comm::{CommConfig, FeatureService};
 use crate::graph::{datasets, Dataset};
 use crate::partition::{preprocess, Preprocessed};
 use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
-use crate::sampling::{EpochPlan, MiniBatch, Sampler, WeightMode};
+use crate::sampling::{EpochPlan, Sampler, WeightMode};
 use crate::sched::TwoStageScheduler;
 use crate::util::rng::Rng;
 
@@ -23,9 +36,18 @@ pub struct Trainer {
     pub data: Dataset,
     pub pre: Preprocessed,
     entry: ArtifactEntry,
+    /// Predict artifact, cached at construction so `evaluate` never
+    /// re-reads the manifest from disk.
+    predict_entry: Option<ArtifactEntry>,
+    /// Compiled predict executor, built lazily on the first `evaluate`
+    /// call and reused afterwards (PJRT compilation is not cheap).
+    predict_exe: Option<TrainExecutor>,
     pool: WorkerPool,
     pub params: ParamSet,
     opt: Sgd,
+    mode: WeightMode,
+    /// One sampler per prep thread; the |V|-sized scratch arrays persist
+    /// across epochs (only the RNG stream base is re-keyed per epoch).
     samplers: Vec<Sampler>,
     rng: Rng,
     /// Accumulated mean batch shape [v0, v1, v2, a1, a2].
@@ -36,6 +58,7 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> anyhow::Result<Trainer> {
         let spec = datasets::lookup(&cfg.dataset)?;
+        let mode = WeightMode::for_model(&cfg.model)?;
         let data = spec.build(cfg.scale_shift, cfg.seed);
         crate::log_info!("dataset: {}", data.summary());
 
@@ -47,8 +70,9 @@ impl Trainer {
             pre.edge_cut(&data.graph).map(|c| (c * 1000.0).round() / 1000.0)
         );
 
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let manifest = Manifest::load_or_builtin(&cfg.artifacts_dir)?;
         let entry = manifest.find("train", &cfg.model, &cfg.dataset)?.clone();
+        let predict_entry = manifest.find("predict", &cfg.model, &cfg.dataset).ok().cloned();
         anyhow::ensure!(
             entry.dims.f0 == data.spec.dims.f0,
             "artifact f0 {} != dataset f0 {}",
@@ -59,14 +83,10 @@ impl Trainer {
         let pool = WorkerPool::spawn(&entry, cfg.num_fpgas)?;
         let params = ParamSet::init(&entry, cfg.seed);
         let opt = Sgd::new(cfg.lr, cfg.momentum, &params);
-
-        let mode = WeightMode::for_model(&cfg.model)?;
+        let rng = Rng::new(cfg.seed ^ 0x7a11);
         let fanout = entry.dims.fanout_config();
-        let mut rng = Rng::new(cfg.seed ^ 0x7a11);
-        let samplers = (0..cfg.num_fpgas)
-            .map(|i| {
-                Sampler::new(fanout, mode, data.graph.num_vertices(), rng.fork(i as u64).next_u64())
-            })
+        let samplers = (0..cfg.host_threads.max(1))
+            .map(|_| Sampler::new(fanout, mode, data.graph.num_vertices(), 0))
             .collect();
 
         Ok(Trainer {
@@ -74,9 +94,12 @@ impl Trainer {
             data,
             pre,
             entry,
+            predict_entry,
+            predict_exe: None,
             pool,
             params,
             opt,
+            mode,
             samplers,
             rng,
             shape_acc: [0.0; 5],
@@ -124,172 +147,178 @@ impl Trainer {
         s
     }
 
-    fn record_shape(&mut self, mb: &MiniBatch) {
-        self.shape_acc[0] += mb.n_v0 as f64;
-        self.shape_acc[1] += mb.n_v1 as f64;
-        self.shape_acc[2] += mb.n_targets as f64;
-        self.shape_acc[3] += mb.edges_layer1() as f64;
-        self.shape_acc[4] += mb.edges_layer2() as f64;
-        self.shape_n += 1.0;
-    }
-
-    /// Sample + gather every task of one iteration plan (the host-side
-    /// batch preparation; does not touch `self.params`, so with
-    /// prefetching it can run while the workers execute the previous
-    /// iteration).
-    fn prepare_iteration(
-        &mut self,
-        iter_plan: &crate::sched::IterationPlan,
-        plan: &mut EpochPlan,
-        remaining: &mut [usize],
-        m: &mut EpochMetrics,
-    ) -> anyhow::Result<Vec<(usize, usize, BatchBuffers)>> {
-        let comm = CommConfig { direct_host_fetch: self.cfg.direct_host_fetch };
-        let f0 = self.data.features.feat_dim();
-        let mut items = Vec::with_capacity(iter_plan.tasks.len());
-        for (tag, task) in iter_plan.tasks.iter().enumerate() {
-            remaining[task.part] -= 1;
-            let t0 = Instant::now();
-            let targets = plan
-                .next_targets(task.part)
-                .ok_or_else(|| anyhow::anyhow!("partition {} exhausted early", task.part))?
-                .to_vec();
-            let mb = self.samplers[task.part].sample(&self.data, &targets, task.part, tag);
-            m.sample_seconds += t0.elapsed().as_secs_f64();
-            self.record_shape(&mb);
-            m.vertices_traversed += mb.vertices_traversed() as u64;
-            m.batches += 1;
-
-            // host feature service: gather + traffic accounting against
-            // the *executing* FPGA's store
-            let t1 = Instant::now();
-            let svc = FeatureService::new(&self.data.features, comm);
-            let (feat0, traffic) = svc.gather(
-                &mb,
-                &self.pre.stores[task.fpga],
-                self.pre.vertex_part.as_deref(),
-                task.fpga,
-            );
-            m.gather_seconds += t1.elapsed().as_secs_f64();
-            m.local_bytes += traffic.local_bytes;
-            m.host_bytes += traffic.host_bytes;
-            m.f2f_bytes += traffic.f2f_bytes;
-
-            items.push((task.fpga, tag, BatchBuffers::from_minibatch(&mb, feat0, f0)));
-        }
-        Ok(items)
-    }
-
-    /// One epoch of synchronous training. With `cfg.prefetch` the next
-    /// iteration's batches are prepared while the workers execute the
-    /// current one (§8 future-work extension; `--prefetch` on the CLI).
+    /// One epoch of synchronous training through the host pipeline.
     pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochMetrics> {
         let cfg = self.cfg.clone();
         let p = cfg.num_fpgas;
+        let host_threads = cfg.host_threads.max(1);
+        let depth = cfg.pipeline_depth();
         let t_epoch = Instant::now();
 
-        let mut plan = EpochPlan::new(
-            &self.pre.train_parts,
-            self.entry.dims.b,
-            &mut self.rng,
-        );
+        // ---- planning stage (decoupled from preparation) ----------------
+        let mut plan = EpochPlan::new(&self.pre.train_parts, self.entry.dims.b, &mut self.rng);
+        let epoch_stream = self.rng.next_u64();
         let mut sched = TwoStageScheduler::new(p, cfg.workload_balancing);
+        let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+        let mut iterations =
+            prep::plan_epoch_tasks(&mut sched, &mut plan, &mut remaining, cfg.max_iterations);
+        let sizes: Vec<usize> = iterations.iter().map(|t| t.len()).collect();
+        let n_iters = iterations.len();
 
         let mut m = EpochMetrics { epoch, ..Default::default() };
         let mut loss_sum = 0.0f64;
-        let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+        let mut traffic_total = crate::comm::Traffic::default();
 
-        // prepare the first iteration
-        let mut next_prepared = {
-            match sched.plan_iteration(&remaining) {
-                Some(ip) => {
-                    let items = self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?;
-                    Some(items)
-                }
-                None => None,
-            }
-        };
+        // ---- preparation pool + execution loop ---------------------------
+        let (task_tx, task_rx) = mpsc::channel::<prep::PrepTask>();
+        let (done_tx, done_rx) = mpsc::channel::<anyhow::Result<prep::PreparedBatch>>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
 
-        while let Some(items) = next_prepared.take() {
-            if let Some(maxit) = cfg.max_iterations {
-                if m.iterations >= maxit {
-                    break;
-                }
-            }
-            let params = Arc::new(self.params.data.clone());
-            let submitted = items.len();
-            for (fpga, tag, batch) in items {
-                self.pool.submit(fpga, WorkItem { params: params.clone(), batch, tag })?;
-            }
-
-            // prefetch: prepare iteration i+1 while the workers execute i
-            // (skip when the iteration cap would discard the prepared work)
-            let next_allowed = cfg.max_iterations.map_or(true, |mx| m.iterations + 1 < mx);
-            if cfg.prefetch && next_allowed {
-                if let Some(ip) = sched.plan_iteration(&remaining) {
-                    next_prepared =
-                        Some(self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?);
-                }
-            }
-
-            // gradient synchronisation barrier
-            let t2 = Instant::now();
-            let results = self.pool.collect(submitted)?;
-            let mut grads = Vec::with_capacity(submitted);
-            for r in results {
-                let out = r.result?;
-                m.execute_seconds += r.exec_seconds;
-                loss_sum += out.loss as f64;
-                m.final_loss = out.loss as f64;
-                grads.push(out.grads);
-            }
-            let avg = average_grads(&grads);
-            self.opt.step(&mut self.params, &avg);
-            m.sync_seconds += t2.elapsed().as_secs_f64();
-            m.iterations += 1;
-
-            // non-prefetch path: prepare the next iteration after the sync
-            // (same iteration-cap guard so capped runs don't count
-            // prepared-but-never-executed batches in the metrics)
-            let next_allowed = cfg.max_iterations.map_or(true, |mx| m.iterations < mx);
-            if !cfg.prefetch && next_allowed {
-                if let Some(ip) = sched.plan_iteration(&remaining) {
-                    next_prepared =
-                        Some(self.prepare_iteration(&ip, &mut plan, &mut remaining, &mut m)?);
-                }
-            }
+        // per-thread samplers persist across epochs; grow the pool if the
+        // configuration was raised after construction
+        if self.samplers.len() < host_threads {
+            let fanout = self.entry.dims.fanout_config();
+            let n_vertices = self.data.graph.num_vertices();
+            let mode = self.mode;
+            self.samplers
+                .resize_with(host_threads, || Sampler::new(fanout, mode, n_vertices, 0));
         }
+
+        // disjoint field borrows for the scoped threads vs the coordinator
+        let data = &self.data;
+        let pre = &self.pre;
+        let comm = CommConfig { direct_host_fetch: cfg.direct_host_fetch };
+        let pool = &self.pool;
+        let samplers = &mut self.samplers;
+        let param_set = &mut self.params;
+        let opt = &mut self.opt;
+        let shape_acc = &mut self.shape_acc;
+        let shape_n = &mut self.shape_n;
+
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            for sampler in samplers.iter_mut().take(host_threads) {
+                let task_rx = Arc::clone(&task_rx);
+                let done_tx = done_tx.clone();
+                s.spawn(move || {
+                    prep::prep_worker(data, pre, sampler, comm, epoch_stream, &task_rx, &done_tx)
+                });
+            }
+            // coordinator keeps only the receiver: if every prep worker
+            // dies, recv() errors instead of hanging
+            drop(done_tx);
+
+            let mut issued = 0usize;
+            let mut buffered: BTreeMap<usize, Vec<prep::PreparedBatch>> = BTreeMap::new();
+            for i in 0..n_iters {
+                // bounded prefetch: release tasks for iterations < i + D
+                while issued < n_iters && issued < i + depth {
+                    for t in iterations[issued].drain(..) {
+                        task_tx
+                            .send(t)
+                            .map_err(|_| anyhow::anyhow!("prep pool shut down early"))?;
+                    }
+                    issued += 1;
+                }
+
+                // reassemble iteration i (batches may arrive out of order)
+                while buffered.get(&i).map_or(0, |v| v.len()) < sizes[i] {
+                    let pb = done_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("prep workers disconnected"))??;
+                    buffered.entry(pb.iter).or_default().push(pb);
+                }
+                let mut items = buffered.remove(&i).unwrap_or_default();
+                items.sort_by_key(|b| b.tag);
+
+                // merge host-side stats in deterministic (iter, tag) order
+                for b in &items {
+                    let st = &b.stats;
+                    m.sample_seconds += st.sample_seconds;
+                    m.gather_seconds += st.gather_seconds;
+                    m.vertices_traversed += st.vertices_traversed;
+                    traffic_total += st.traffic;
+                    m.batches += 1;
+                    for (acc, v) in shape_acc.iter_mut().zip(st.shape.iter()) {
+                        *acc += *v;
+                    }
+                    *shape_n += 1.0;
+                }
+
+                // dispatch and wait at the gradient-sync barrier
+                let params = Arc::new(param_set.data.clone());
+                let submitted = items.len();
+                for b in items {
+                    pool.submit(b.fpga, WorkItem { params: params.clone(), batch: b.batch, tag: b.tag })?;
+                }
+                let t2 = Instant::now();
+                let mut results = pool.collect(submitted)?;
+                // reduce in tag order regardless of worker arrival order
+                results.sort_by_key(|r| r.tag);
+                let mut grads = Vec::with_capacity(submitted);
+                let mut iter_loss = 0.0f64;
+                for r in results {
+                    let out = r.result?;
+                    m.execute_seconds += r.exec_seconds;
+                    iter_loss += out.loss as f64;
+                    m.final_loss = out.loss as f64;
+                    grads.push(out.grads);
+                }
+                loss_sum += iter_loss;
+                m.iter_losses.push(iter_loss / submitted.max(1) as f64);
+                let avg = average_grads(&grads);
+                opt.step(param_set, &avg);
+                m.sync_seconds += t2.elapsed().as_secs_f64();
+                m.iterations += 1;
+            }
+            // closing the task channel winds the prep pool down
+            drop(task_tx);
+            Ok(())
+        })?;
 
         m.wall_seconds = t_epoch.elapsed().as_secs_f64();
         m.mean_loss = loss_sum / m.batches.max(1) as f64;
         m.nvtps = m.vertices_traversed as f64 / m.wall_seconds;
-        let total = (m.local_bytes + m.host_bytes + m.f2f_bytes) as f64;
-        m.beta = if total > 0.0 { m.local_bytes as f64 / total } else { 1.0 };
+        m.local_bytes = traffic_total.local_bytes;
+        m.host_bytes = traffic_total.host_bytes;
+        m.f2f_bytes = traffic_total.f2f_bytes;
+        m.beta = traffic_total.beta();
         Ok(m)
     }
 
     /// Evaluate prediction accuracy on up to `n_batches` fresh batches
-    /// (uses the predict artifact on the coordinator thread).
+    /// (uses the cached predict artifact on the coordinator thread).
     pub fn evaluate(&mut self, n_batches: usize) -> anyhow::Result<f64> {
-        let manifest = Manifest::load(&self.cfg.artifacts_dir)?;
-        let pentry = manifest.find("predict", &self.cfg.model, &self.cfg.dataset)?;
-        let exe = TrainExecutor::compile(pentry)?;
+        if self.predict_exe.is_none() {
+            let pentry = self.predict_entry.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no predict artifact for model={} dataset={}",
+                    self.cfg.model,
+                    self.cfg.dataset
+                )
+            })?;
+            self.predict_exe = Some(TrainExecutor::compile(pentry)?);
+        }
+        let exe = self.predict_exe.as_ref().expect("compiled above");
         let comm = CommConfig { direct_host_fetch: self.cfg.direct_host_fetch };
+        // reusable service + sampler, hoisted out of the batch loop
+        let svc = FeatureService::new(&self.data.features, comm);
         let f0 = self.data.features.feat_dim();
         let f2 = self.entry.dims.f2;
         let b = self.entry.dims.b;
+        let mut plan = EpochPlan::new(&self.pre.train_parts, b, &mut self.rng);
+        let eval_stream = self.rng.next_u64();
+        let sampler = &mut self.samplers[0];
+        sampler.set_stream(eval_stream);
 
         let mut correct = 0usize;
         let mut total = 0usize;
-        let mut plan =
-            EpochPlan::new(&self.pre.train_parts, b, &mut self.rng);
         for i in 0..n_batches {
             let part = i % self.cfg.num_fpgas;
-            let Some(targets) = plan.next_targets(part).map(|t| t.to_vec()) else {
+            let Some((seq, targets)) = plan.next_targets_seq(part).map(|(s, t)| (s, t.to_vec()))
+            else {
                 break;
             };
-            let mb = self.samplers[part].sample(&self.data, &targets, part, i);
-            let svc = FeatureService::new(&self.data.features, comm);
+            let mb = sampler.sample(&self.data, &targets, part, seq);
             let (feat0, _) =
                 svc.gather(&mb, &self.pre.stores[part], self.pre.vertex_part.as_deref(), part);
             let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
@@ -315,5 +344,34 @@ impl Trainer {
     /// Shut down the worker pool explicitly (also happens on drop).
     pub fn shutdown(self) {
         self.pool.shutdown();
+    }
+
+    /// Canonical host-pipeline micro-benchmark: wall seconds of one full
+    /// training epoch on the bundled synthetic dataset at 4 simulated
+    /// FPGAs (epoch 0 warms up, epoch 1 is measured; fresh trainer per
+    /// call so worker-pool spawn stays excluded). Shared by
+    /// `benches/micro_host.rs` and `examples/scalability.rs` so the
+    /// pipeline acceptance numbers are measured exactly one way.
+    pub fn pipeline_bench_epoch_wall(
+        host_threads: usize,
+        prefetch_depth: usize,
+    ) -> anyhow::Result<f64> {
+        let cfg = TrainConfig {
+            dataset: "tiny".into(),
+            model: "gcn".into(),
+            algo: crate::partition::Algorithm::DistDgl,
+            num_fpgas: 4,
+            epochs: 2,
+            scale_shift: 0,
+            seed: 11,
+            host_threads,
+            prefetch_depth,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let report = trainer.run()?;
+        let wall = report.epochs.last().map(|e| e.wall_seconds).unwrap_or(f64::NAN);
+        trainer.shutdown();
+        Ok(wall)
     }
 }

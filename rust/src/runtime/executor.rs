@@ -1,15 +1,22 @@
-//! Typed execution of one AOT artifact on the PJRT CPU client.
+//! Typed execution of one AOT artifact, behind a pluggable backend.
 //!
-//! A [`TrainExecutor`] is the per-simulated-FPGA compute engine: it owns a
-//! PJRT client + compiled executable (thread-local; the xla handles are
-//! not `Send`) and turns (parameters, mini-batch buffers) into
-//! (loss, gradients).
+//! A [`TrainExecutor`] is the per-simulated-FPGA compute engine: it turns
+//! (parameters, mini-batch buffers) into (loss, gradients). Two backends:
+//!
+//! - **PJRT** (`--features pjrt`): parses the artifact's HLO text and
+//!   compiles it on the PJRT CPU client (the xla handles are not `Send`,
+//!   so each worker thread owns its own client + executable).
+//! - **Reference** (default): the pure-Rust model implementation in
+//!   [`super::reference`] — same semantics, no external dependencies, no
+//!   artifact files needed. This keeps the crate self-contained offline.
 
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::Context;
 
 use super::manifest::ArtifactEntry;
+use super::reference::RefModel;
 use crate::sampling::MiniBatch;
 
 /// Flat mini-batch input buffers in artifact order (feat0 gathered by the
@@ -49,26 +56,48 @@ pub struct StepOutput {
     pub grads: Vec<Vec<f32>>,
 }
 
-/// PJRT executor for one artifact (train or predict).
+enum Backend {
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        _client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+    },
+    #[allow(dead_code)] // the only variant without `pjrt`
+    Reference(RefModel),
+}
+
+/// Executor for one artifact (train or predict).
 pub struct TrainExecutor {
     entry: ArtifactEntry,
-    _client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
+    backend: Backend,
 }
 
 impl TrainExecutor {
-    /// Parse + compile the artifact's HLO text on a fresh CPU client.
+    /// Build the executor for `entry`. With the `pjrt` feature this parses
+    /// and compiles the HLO text on a fresh CPU client; otherwise it
+    /// validates the entry against the built-in reference models.
     pub fn compile(entry: &ArtifactEntry) -> anyhow::Result<TrainExecutor> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            entry.path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", entry.name))?;
-        Ok(TrainExecutor { entry: entry.clone(), _client: client, exe })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            Ok(TrainExecutor {
+                entry: entry.clone(),
+                backend: Backend::Pjrt { _client: client, exe },
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let model = RefModel::new(entry)?;
+            Ok(TrainExecutor { entry: entry.clone(), backend: Backend::Reference(model) })
+        }
     }
 
     /// Convenience: load an HLO path directly (integration tests).
@@ -82,6 +111,69 @@ impl TrainExecutor {
         &self.entry
     }
 
+    /// Shared argument validation (both backends fail identically).
+    fn check_params(&self, params: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.entry.params.len(),
+            "expected {} params, got {}",
+            self.entry.params.len(),
+            params.len()
+        );
+        for (buf, (name, shape)) in params.iter().zip(&self.entry.params) {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == n,
+                "param {name}: buffer len {} != shape {:?}",
+                buf.len(),
+                shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute a train step: returns loss and per-parameter gradients.
+    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
+        anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
+        self.check_params(params)?;
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { exe, .. } => {
+                let args = self.build_args(params, batch)?;
+                let outs = Self::run_pjrt(exe, &args)?;
+                anyhow::ensure!(
+                    outs.len() == 1 + self.entry.params.len(),
+                    "expected {} outputs, got {}",
+                    1 + self.entry.params.len(),
+                    outs.len()
+                );
+                let loss = outs[0].to_vec::<f32>()?[0];
+                let grads = outs[1..]
+                    .iter()
+                    .map(|l| Ok(l.to_vec::<f32>()?))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Ok(StepOutput { loss, grads })
+            }
+            Backend::Reference(model) => model.train_step(params, batch),
+        }
+    }
+
+    /// Execute inference: returns logits `[b, f2]` row-major.
+    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
+        self.check_params(params)?;
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { exe, .. } => {
+                let args = self.build_args(params, batch)?;
+                let outs = Self::run_pjrt(exe, &args)?;
+                anyhow::ensure!(outs.len() == 1, "predict should return one output");
+                Ok(outs[0].to_vec::<f32>()?)
+            }
+            Backend::Reference(model) => model.predict(params, batch),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
     fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
         let n: usize = shape.iter().product();
         anyhow::ensure!(n == data.len(), "buffer len {} != shape {:?}", data.len(), shape);
@@ -89,6 +181,7 @@ impl TrainExecutor {
         Ok(xla::Literal::vec1(data).reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
         let n: usize = shape.iter().product();
         anyhow::ensure!(n == data.len(), "buffer len {} != shape {:?}", data.len(), shape);
@@ -97,18 +190,13 @@ impl TrainExecutor {
     }
 
     /// Build the full literal argument list (params then batch).
+    #[cfg(feature = "pjrt")]
     fn build_args(
         &self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<Vec<xla::Literal>> {
         let d = &self.entry.dims;
-        anyhow::ensure!(
-            params.len() == self.entry.params.len(),
-            "expected {} params, got {}",
-            self.entry.params.len(),
-            params.len()
-        );
         let mut args = Vec::with_capacity(params.len() + 7);
         for (buf, (name, shape)) in params.iter().zip(&self.entry.params) {
             args.push(Self::literal_f32(buf, shape).with_context(|| format!("param {name}"))?);
@@ -123,41 +211,17 @@ impl TrainExecutor {
         Ok(args)
     }
 
-    fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(args)?;
+    #[cfg(feature = "pjrt")]
+    fn run_pjrt(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(args)?;
         anyhow::ensure!(
             result.len() == 1 && result[0].len() == 1,
             "unexpected replica structure"
         );
         let lit = result[0][0].to_literal_sync()?;
         Ok(lit.to_tuple()?)
-    }
-
-    /// Execute a train step: returns loss and per-parameter gradients.
-    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
-        anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
-        let args = self.build_args(params, batch)?;
-        let outs = self.run(&args)?;
-        anyhow::ensure!(
-            outs.len() == 1 + self.entry.params.len(),
-            "expected {} outputs, got {}",
-            1 + self.entry.params.len(),
-            outs.len()
-        );
-        let loss = outs[0].to_vec::<f32>()?[0];
-        let grads = outs[1..]
-            .iter()
-            .map(|l| Ok(l.to_vec::<f32>()?))
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(StepOutput { loss, grads })
-    }
-
-    /// Execute inference: returns logits `[b, f2]` row-major.
-    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
-        let args = self.build_args(params, batch)?;
-        let outs = self.run(&args)?;
-        anyhow::ensure!(outs.len() == 1, "predict should return one output");
-        Ok(outs[0].to_vec::<f32>()?)
     }
 }

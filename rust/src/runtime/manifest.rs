@@ -142,11 +142,108 @@ impl Manifest {
             })
     }
 
+    /// Load `<dir>/manifest.json`, falling back to the [`Manifest::builtin`]
+    /// synthetic manifest when no artifacts have been generated. The
+    /// reference executor needs only dims + parameter shapes, not HLO
+    /// files, so the coordinator can train without `make artifacts`.
+    /// PJRT builds keep the actionable "run make artifacts" error instead
+    /// of failing later on fabricated entries whose HLO files don't exist.
+    pub fn load_or_builtin(dir: &Path) -> anyhow::Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else if cfg!(feature = "pjrt") {
+            anyhow::bail!(
+                "no artifacts in {} — run `make artifacts` (or build without \
+                 the `pjrt` feature to use the reference executor)",
+                dir.display()
+            )
+        } else {
+            Ok(Manifest::builtin(dir))
+        }
+    }
+
+    /// Synthetic manifest mirroring the `python -m compile.aot` defaults:
+    /// tiny (b=32, fanout 3/2) plus the Table-4 datasets (b=256, fanout
+    /// 10/5), for gcn and sage, train and predict. Entry `path`s point
+    /// into `dir` but are not required to exist (reference backend).
+    pub fn builtin(dir: &Path) -> Manifest {
+        let mut entries = Vec::new();
+        for model in ["gcn", "sage"] {
+            for spec in crate::graph::datasets::REGISTRY.iter() {
+                push_builtin(&mut entries, dir, model, spec.key, 256, 10, 5, spec.dims);
+            }
+            let tiny = crate::graph::datasets::TINY;
+            push_builtin(&mut entries, dir, model, tiny.key, 32, 3, 2, tiny.dims);
+        }
+        Manifest { dir: dir.to_path_buf(), entries }
+    }
+
     /// Default artifacts directory: $HITGNN_ARTIFACTS or ./artifacts.
     pub fn default_dir() -> PathBuf {
         std::env::var("HITGNN_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Append the train + predict builtin entries for one (model, dataset).
+fn push_builtin(
+    entries: &mut Vec<ArtifactEntry>,
+    dir: &Path,
+    model: &str,
+    dataset: &str,
+    b: usize,
+    k1: usize,
+    k2: usize,
+    gd: crate::graph::GnnDims,
+) {
+    let v1_cap = b * (k2 + 1);
+    let dims = ArtifactDims {
+        b,
+        k1,
+        k2,
+        v1_cap,
+        v0_cap: v1_cap * (k1 + 1),
+        f0: gd.f0,
+        f1: gd.f1,
+        f2: gd.f2,
+    };
+    let (f0, f1, f2) = (gd.f0, gd.f1, gd.f2);
+    let params: Vec<(String, Vec<usize>)> = match model {
+        "gcn" => vec![
+            ("w1".into(), vec![f0, f1]),
+            ("b1".into(), vec![f1]),
+            ("w2".into(), vec![f1, f2]),
+            ("b2".into(), vec![f2]),
+        ],
+        _ => vec![
+            ("w1_self".into(), vec![f0, f1]),
+            ("w1_nbr".into(), vec![f0, f1]),
+            ("b1".into(), vec![f1]),
+            ("w2_self".into(), vec![f1, f2]),
+            ("w2_nbr".into(), vec![f1, f2]),
+            ("b2".into(), vec![f2]),
+        ],
+    };
+    for kind in ["train", "predict"] {
+        let name = format!("{kind}_{model}_{}", dataset.replace('-', "_"));
+        let outputs = if kind == "train" {
+            std::iter::once("loss".to_string())
+                .chain(params.iter().map(|(n, _)| format!("grad_{n}")))
+                .collect()
+        } else {
+            vec!["logits".to_string()]
+        };
+        entries.push(ArtifactEntry {
+            name: name.clone(),
+            kind: kind.to_string(),
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            path: dir.join(format!("{name}.hlo.txt")),
+            dims,
+            params: params.clone(),
+            outputs,
+        });
     }
 }
 
@@ -179,6 +276,40 @@ mod tests {
     #[test]
     fn rejects_missing_dir() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn builtin_covers_all_models_and_datasets() {
+        let m = Manifest::builtin(Path::new("/nonexistent"));
+        // 2 models × (4 registry + tiny) × (train, predict)
+        assert_eq!(m.entries.len(), 2 * 5 * 2);
+        let e = m.find("train", "gcn", "tiny").unwrap();
+        assert_eq!(e.dims.b, 32);
+        assert_eq!(e.dims.v1_cap, 32 * 3);
+        assert_eq!(e.dims.v0_cap, 32 * 3 * 4);
+        assert_eq!(e.params[0], ("w1".to_string(), vec![32, 16]));
+        assert_eq!(e.param_elems(), 32 * 16 + 16 + 16 * 8 + 8);
+        let s = m.find("predict", "sage", "ogbn-products").unwrap();
+        assert_eq!(s.params.len(), 6);
+        assert_eq!(s.outputs, vec!["logits".to_string()]);
+        assert_eq!(s.dims.f0, 100);
+    }
+
+    #[test]
+    fn load_or_builtin_prefers_real_manifest() {
+        // missing dir → builtin (reference builds) / clean error (pjrt)
+        let r = Manifest::load_or_builtin(Path::new("/nonexistent"));
+        if cfg!(feature = "pjrt") {
+            assert!(r.is_err());
+        } else {
+            assert!(r.unwrap().find("train", "sage", "reddit").is_ok());
+        }
+        // present but malformed manifest → strict error, no silent fallback
+        let tmp = std::env::temp_dir().join(format!("hitgnn_lob_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load_or_builtin(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
     }
 
     #[test]

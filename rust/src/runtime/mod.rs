@@ -12,9 +12,16 @@
 //! executable ([`executor`] is cheap to build: one text parse + compile at
 //! startup) and communicates with the coordinator via channels of plain
 //! `Vec<f32>` buffers.
+//!
+//! Backends: the PJRT path is behind the `pjrt` cargo feature; the default
+//! build dispatches to the pure-Rust [`reference`] executor, which
+//! implements the same model semantics without the `xla` crate or artifact
+//! files (see DESIGN.md §Execution backends).
 
 pub mod executor;
 pub mod manifest;
+pub mod reference;
 
 pub use executor::{BatchBuffers, StepOutput, TrainExecutor};
 pub use manifest::{ArtifactDims, ArtifactEntry, Manifest};
+pub use reference::RefModel;

@@ -1,0 +1,524 @@
+//! Pure-Rust reference executor — the offline twin of the PJRT backend.
+//!
+//! Implements the exact L2 model semantics (`python/compile/model.py`) for
+//! the two shipped models — 2-layer GCN and GraphSAGE-mean over the padded
+//! mini-batch wire format (DESIGN.md §Mini-batch wire format) — including
+//! the backward pass and the masked softmax cross-entropy loss. This lets
+//! the full coordinator pipeline (and its tests) run in environments
+//! without the `xla` crate or AOT artifacts: build without the `pjrt`
+//! feature and [`super::TrainExecutor`] dispatches here.
+//!
+//! Numerics are plain f32 loops with a fixed accumulation order, so a
+//! training run is bit-reproducible — the property the pipeline
+//! determinism tests (`tests/pipeline_determinism.rs`) assert.
+
+use super::executor::{BatchBuffers, StepOutput};
+use super::manifest::{ArtifactDims, ArtifactEntry};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ModelKind {
+    Gcn,
+    Sage,
+}
+
+/// Reference implementation of one artifact (train or predict).
+pub struct RefModel {
+    kind: ModelKind,
+    dims: ArtifactDims,
+}
+
+impl RefModel {
+    /// Validate the entry against the known model architectures. Mirrors
+    /// what PJRT compilation catches (shape mismatches fail at compile
+    /// time, not mid-epoch).
+    pub fn new(entry: &ArtifactEntry) -> anyhow::Result<RefModel> {
+        let kind = match entry.model.as_str() {
+            "gcn" => ModelKind::Gcn,
+            "sage" => ModelKind::Sage,
+            other => anyhow::bail!(
+                "reference executor supports gcn|sage, not '{other}' \
+                 (enable the `pjrt` feature for arbitrary HLO artifacts)"
+            ),
+        };
+        let d = entry.dims;
+        let expect = expected_params(kind, &d);
+        anyhow::ensure!(
+            entry.params.len() == expect.len(),
+            "artifact '{}' has {} params, {} model needs {}",
+            entry.name,
+            entry.params.len(),
+            entry.model,
+            expect.len()
+        );
+        for ((name, shape), (ename, eshape)) in entry.params.iter().zip(&expect) {
+            anyhow::ensure!(
+                name == ename && shape == eshape,
+                "artifact '{}' param {name}{shape:?} != expected {ename}{eshape:?}",
+                entry.name
+            );
+        }
+        Ok(RefModel { kind, dims: d })
+    }
+
+    /// Forward + backward + masked CE loss (train artifacts).
+    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
+        let fwd = self.forward(params, batch);
+        let d = &self.dims;
+        let denom = batch.mask.iter().sum::<f32>().max(1.0);
+
+        // masked mean softmax cross-entropy and dlogits in one pass
+        let mut loss = 0.0f32;
+        let mut dlogits = vec![0.0f32; d.b * d.f2];
+        for r in 0..d.b {
+            let mk = batch.mask[r];
+            if mk == 0.0 {
+                continue;
+            }
+            let row = &fwd.logits[r * d.f2..(r + 1) * d.f2];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sumexp: f32 = row.iter().map(|&x| (x - max).exp()).sum();
+            let logz = max + sumexp.ln();
+            let label = batch.labels[r] as usize;
+            loss += mk * (logz - row[label]);
+            let scale = mk / denom;
+            for j in 0..d.f2 {
+                let softmax = (row[j] - max).exp() / sumexp;
+                let onehot = if j == label { 1.0 } else { 0.0 };
+                dlogits[r * d.f2 + j] = scale * (softmax - onehot);
+            }
+        }
+        loss /= denom;
+
+        let grads = match self.kind {
+            ModelKind::Gcn => self.backward_gcn(params, batch, &fwd, &dlogits),
+            ModelKind::Sage => self.backward_sage(params, batch, &fwd, &dlogits),
+        };
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Forward only (predict artifacts) → logits `[b, f2]`.
+    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
+        Ok(self.forward(params, batch).logits)
+    }
+
+    // -- forward -----------------------------------------------------------
+
+    fn forward(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Forward {
+        let d = &self.dims;
+        match self.kind {
+            ModelKind::Gcn => {
+                let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
+                // layer 1: aggregate(feat0) → update → relu
+                let agg1 = aggregate(&batch.feat0, &batch.idx1, &batch.w1, d.v1_cap, d.k1 + 1, d.f0, false);
+                let z1 = matmul_bias(&agg1, w1, b1, d.v1_cap, d.f0, d.f1);
+                let h1 = relu(&z1);
+                // layer 2: aggregate(h1) → update
+                let agg2 = aggregate(&h1, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, false);
+                let logits = matmul_bias(&agg2, w2, b2, d.b, d.f1, d.f2);
+                Forward { agg1, z1, agg2, logits, self1: Vec::new(), self2: Vec::new() }
+            }
+            ModelKind::Sage => {
+                let (w1s, w1n, b1, w2s, w2n, b2) =
+                    (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+                // layer 1: self rows through W_self, neighbor mean (col 0
+                // of the weights zeroed) through W_nbr
+                let agg1 = aggregate(&batch.feat0, &batch.idx1, &batch.w1, d.v1_cap, d.k1 + 1, d.f0, true);
+                let self1 = take_rows(&batch.feat0, &batch.idx1, d.v1_cap, d.k1 + 1, d.f0);
+                let mut z1 = matmul_bias(&self1, w1s, b1, d.v1_cap, d.f0, d.f1);
+                add_matmul(&mut z1, &agg1, w1n, d.v1_cap, d.f0, d.f1);
+                let h1 = relu(&z1);
+                // layer 2
+                let agg2 = aggregate(&h1, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, true);
+                let self2 = take_rows(&h1, &batch.idx2, d.b, d.k2 + 1, d.f1);
+                let mut logits = matmul_bias(&self2, w2s, b2, d.b, d.f1, d.f2);
+                add_matmul(&mut logits, &agg2, w2n, d.b, d.f1, d.f2);
+                Forward { agg1, z1, agg2, logits, self1, self2 }
+            }
+        }
+    }
+
+    // -- backward ----------------------------------------------------------
+
+    fn backward_gcn(
+        &self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+        fwd: &Forward,
+        dlogits: &[f32],
+    ) -> Vec<Vec<f32>> {
+        let d = &self.dims;
+        let w2 = &params[2];
+        // layer 2 update: dw2 = agg2ᵀ·dlogits, db2 = Σ rows, dagg2 = dlogits·w2ᵀ
+        let dw2 = matmul_at_b(&fwd.agg2, dlogits, d.b, d.f1, d.f2);
+        let db2 = col_sums(dlogits, d.b, d.f2);
+        let dagg2 = matmul_b_t(dlogits, w2, d.b, d.f2, d.f1);
+        // layer 2 aggregate transpose: scatter into h1 rows
+        let mut dh1 = vec![0.0f32; d.v1_cap * d.f1];
+        scatter_aggregate(&mut dh1, &dagg2, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, false);
+        // relu
+        let dz1 = relu_grad(&fwd.z1, &dh1);
+        // layer 1 update
+        let dw1 = matmul_at_b(&fwd.agg1, &dz1, d.v1_cap, d.f0, d.f1);
+        let db1 = col_sums(&dz1, d.v1_cap, d.f1);
+        vec![dw1, db1, dw2, db2]
+    }
+
+    fn backward_sage(
+        &self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+        fwd: &Forward,
+        dlogits: &[f32],
+    ) -> Vec<Vec<f32>> {
+        let d = &self.dims;
+        let (w2s, w2n) = (&params[3], &params[4]);
+        // layer 2 update
+        let dw2s = matmul_at_b(&fwd.self2, dlogits, d.b, d.f1, d.f2);
+        let dw2n = matmul_at_b(&fwd.agg2, dlogits, d.b, d.f1, d.f2);
+        let db2 = col_sums(dlogits, d.b, d.f2);
+        // into h1: self path + neighbor path
+        let dself2 = matmul_b_t(dlogits, w2s, d.b, d.f2, d.f1);
+        let dnbr2 = matmul_b_t(dlogits, w2n, d.b, d.f2, d.f1);
+        let mut dh1 = vec![0.0f32; d.v1_cap * d.f1];
+        scatter_self(&mut dh1, &dself2, &batch.idx2, d.b, d.k2 + 1, d.f1);
+        scatter_aggregate(&mut dh1, &dnbr2, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, true);
+        // relu
+        let dz1 = relu_grad(&fwd.z1, &dh1);
+        // layer 1 update (no gradient into feat0 needed)
+        let dw1s = matmul_at_b(&fwd.self1, &dz1, d.v1_cap, d.f0, d.f1);
+        let dw1n = matmul_at_b(&fwd.agg1, &dz1, d.v1_cap, d.f0, d.f1);
+        let db1 = col_sums(&dz1, d.v1_cap, d.f1);
+        vec![dw1s, dw1n, db1, dw2s, dw2n, db2]
+    }
+}
+
+/// Forward-pass intermediates kept for the backward pass.
+struct Forward {
+    agg1: Vec<f32>,
+    z1: Vec<f32>,
+    agg2: Vec<f32>,
+    logits: Vec<f32>,
+    /// SAGE only: gathered self rows per layer (empty for GCN).
+    self1: Vec<f32>,
+    self2: Vec<f32>,
+}
+
+/// The canonical parameter list of `python/compile/model.py::init_params`.
+fn expected_params(kind: ModelKind, d: &ArtifactDims) -> Vec<(String, Vec<usize>)> {
+    let (f0, f1, f2) = (d.f0, d.f1, d.f2);
+    match kind {
+        ModelKind::Gcn => vec![
+            ("w1".into(), vec![f0, f1]),
+            ("b1".into(), vec![f1]),
+            ("w2".into(), vec![f1, f2]),
+            ("b2".into(), vec![f2]),
+        ],
+        ModelKind::Sage => vec![
+            ("w1_self".into(), vec![f0, f1]),
+            ("w1_nbr".into(), vec![f0, f1]),
+            ("b1".into(), vec![f1]),
+            ("w2_self".into(), vec![f1, f2]),
+            ("w2_nbr".into(), vec![f1, f2]),
+            ("b2".into(), vec![f2]),
+        ],
+    }
+}
+
+/// `out[r] = Σ_c w[r,c]·h[idx[r,c]]` over feature width `f`; with
+/// `skip_self` the self column (c = 0) is excluded (SAGE neighbor mean).
+fn aggregate(
+    h: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * f];
+    let c0 = usize::from(skip_self);
+    for r in 0..rows {
+        for c in c0..k {
+            let weight = w[r * k + c];
+            if weight == 0.0 {
+                continue;
+            }
+            let src = idx[r * k + c] as usize;
+            let (dst, src_row) = (&mut out[r * f..(r + 1) * f], &h[src * f..(src + 1) * f]);
+            for j in 0..f {
+                dst[j] += weight * src_row[j];
+            }
+        }
+    }
+    out
+}
+
+/// Transpose of [`aggregate`]: `dh[idx[r,c]] += w[r,c]·dout[r]`.
+fn scatter_aggregate(
+    dh: &mut [f32],
+    dout: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) {
+    let c0 = usize::from(skip_self);
+    for r in 0..rows {
+        for c in c0..k {
+            let weight = w[r * k + c];
+            if weight == 0.0 {
+                continue;
+            }
+            let src = idx[r * k + c] as usize;
+            for j in 0..f {
+                dh[src * f + j] += weight * dout[r * f + j];
+            }
+        }
+    }
+}
+
+/// Gather the self rows `h[idx[r,0]]` (SAGE's W_self input).
+fn take_rows(h: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * f];
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        out[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
+    }
+    out
+}
+
+/// Transpose of [`take_rows`]: `dh[idx[r,0]] += dout[r]`.
+fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        for j in 0..f {
+            dh[src * f + j] += dout[r * f + j];
+        }
+    }
+}
+
+/// `x[n, fin] · w[fin, fout] + bias` row-major.
+fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, fin: usize, fout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * fout];
+    for r in 0..n {
+        let orow = &mut out[r * fout..(r + 1) * fout];
+        orow.copy_from_slice(bias);
+        for kk in 0..fin {
+            let xv = x[r * fin + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * fout..(kk + 1) * fout];
+            for j in 0..fout {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `out += x[n, fin] · w[fin, fout]` (second matmul path of a SAGE layer).
+fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
+    for r in 0..n {
+        for kk in 0..fin {
+            let xv = x[r * fin + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * fout..(kk + 1) * fout];
+            let orow = &mut out[r * fout..(r + 1) * fout];
+            for j in 0..fout {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// `aᵀ·b` for `a[n, fa]`, `b[n, fb]` → `[fa, fb]` (weight gradients).
+fn matmul_at_b(a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; fa * fb];
+    for r in 0..n {
+        for kk in 0..fa {
+            let av = a[r * fa + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[r * fb..(r + 1) * fb];
+            let orow = &mut out[kk * fb..(kk + 1) * fb];
+            for j in 0..fb {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `a[n, fa] · wᵀ` for `w[fb, fa]` → `[n, fb]` (input gradients).
+fn matmul_b_t(a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * fb];
+    for r in 0..n {
+        let arow = &a[r * fa..(r + 1) * fa];
+        let orow = &mut out[r * fb..(r + 1) * fb];
+        for kk in 0..fb {
+            let wrow = &w[kk * fa..(kk + 1) * fa];
+            let mut acc = 0.0f32;
+            for j in 0..fa {
+                acc += arow[j] * wrow[j];
+            }
+            orow[kk] = acc;
+        }
+    }
+    out
+}
+
+fn col_sums(x: &[f32], n: usize, f: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; f];
+    for r in 0..n {
+        for j in 0..f {
+            out[j] += x[r * f + j];
+        }
+    }
+    out
+}
+
+fn relu(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// Gradient through relu: pass where the pre-activation was positive
+/// (zero at exactly 0, matching jax.nn.relu's convention).
+fn relu_grad(z: &[f32], dh: &[f32]) -> Vec<f32> {
+    z.iter().zip(dh).map(|(&zv, &dv)| if zv > 0.0 { dv } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
+
+    fn tiny_entry(model: &str, kind: &str) -> ArtifactEntry {
+        Manifest::builtin(std::path::Path::new("/tmp"))
+            .find(kind, model, "tiny")
+            .unwrap()
+            .clone()
+    }
+
+    fn random_batch(d: &ArtifactDims, seed: u64) -> BatchBuffers {
+        let mut rng = Rng::new(seed);
+        let k1 = d.k1 + 1;
+        let k2 = d.k2 + 1;
+        // a self-consistent random padded batch: n real rows per level
+        let n_v0 = d.v0_cap / 2;
+        let n_v1 = d.v1_cap / 2;
+        let n_t = d.b / 2;
+        let feat0: Vec<f32> = (0..d.v0_cap * d.f0).map(|_| rng.f32() - 0.5).collect();
+        let mut idx1 = vec![0i32; d.v1_cap * k1];
+        let mut w1 = vec![0f32; d.v1_cap * k1];
+        for r in 0..n_v1 {
+            for c in 0..k1 {
+                idx1[r * k1 + c] = rng.index(n_v0) as i32;
+                w1[r * k1 + c] = rng.f32();
+            }
+        }
+        let mut idx2 = vec![0i32; d.b * k2];
+        let mut w2 = vec![0f32; d.b * k2];
+        for r in 0..n_t {
+            for c in 0..k2 {
+                idx2[r * k2 + c] = rng.index(n_v1) as i32;
+                w2[r * k2 + c] = rng.f32();
+            }
+        }
+        let labels: Vec<i32> = (0..d.b).map(|_| rng.index(d.f2) as i32).collect();
+        let mut mask = vec![0f32; d.b];
+        for m in mask.iter_mut().take(n_t) {
+            *m = 1.0;
+        }
+        BatchBuffers { feat0, idx1, w1, idx2, w2, labels, mask }
+    }
+
+    fn loss_of(model: &RefModel, params: &[Vec<f32>], batch: &BatchBuffers) -> f64 {
+        model.train_step(params, batch).unwrap().loss as f64
+    }
+
+    /// Central-difference gradient check: the analytic backward pass must
+    /// match numerical differentiation on sampled coordinates.
+    fn grad_check(model_name: &str) {
+        let entry = tiny_entry(model_name, "train");
+        let model = RefModel::new(&entry).unwrap();
+        let params = crate::coordinator::params::ParamSet::init(&entry, 9).data;
+        let batch = random_batch(&entry.dims, 4);
+        let out = model.train_step(&params, &batch).unwrap();
+        let mut rng = Rng::new(77);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for (pi, p) in params.iter().enumerate() {
+            for _ in 0..4 {
+                let i = rng.index(p.len());
+                let mut plus = params.clone();
+                plus[pi][i] += eps;
+                let mut minus = params.clone();
+                minus[pi][i] -= eps;
+                let num = (loss_of(&model, &plus, &batch) - loss_of(&model, &minus, &batch))
+                    / (2.0 * eps as f64);
+                let ana = out.grads[pi][i] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + num.abs().max(ana.abs())),
+                    "{model_name} param {pi}[{i}]: numeric {num} vs analytic {ana}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn gcn_gradients_match_finite_differences() {
+        grad_check("gcn");
+    }
+
+    #[test]
+    fn sage_gradients_match_finite_differences() {
+        grad_check("sage");
+    }
+
+    #[test]
+    fn loss_is_masked_mean_ce() {
+        let entry = tiny_entry("gcn", "train");
+        let model = RefModel::new(&entry).unwrap();
+        let params = crate::coordinator::params::ParamSet::init(&entry, 2).data;
+        let batch = random_batch(&entry.dims, 6);
+        let out = model.train_step(&params, &batch).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        // all-zero mask: loss 0, grads 0
+        let mut b2 = batch;
+        b2.mask.iter_mut().for_each(|m| *m = 0.0);
+        let out2 = model.train_step(&params, &b2).unwrap();
+        assert_eq!(out2.loss, 0.0);
+        assert!(out2.grads.iter().flatten().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_shapes() {
+        let mut entry = tiny_entry("gcn", "train");
+        entry.model = "transformer".into();
+        assert!(RefModel::new(&entry).is_err());
+        let mut entry = tiny_entry("gcn", "train");
+        entry.params[0].1 = vec![1, 1];
+        assert!(RefModel::new(&entry).is_err());
+    }
+
+    #[test]
+    fn deterministic_bitwise() {
+        let entry = tiny_entry("sage", "train");
+        let model = RefModel::new(&entry).unwrap();
+        let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
+        let batch = random_batch(&entry.dims, 8);
+        let a = model.train_step(&params, &batch).unwrap();
+        let b = model.train_step(&params, &batch).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.grads, b.grads);
+    }
+}

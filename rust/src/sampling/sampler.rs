@@ -3,13 +3,22 @@
 use super::batch::{MiniBatch, WeightMode};
 use super::FanoutConfig;
 use crate::graph::{Csr, Dataset};
-use crate::util::rng::Rng;
+use crate::util::rng::{hash64, Rng};
 
 /// Reusable sampler with stamped scratch arrays (no per-batch allocation
 /// of |V|-sized structures; sampling sits on the Eq. 5 critical path).
+///
+/// RNG model: each `sample(part, seq)` call derives its generator from
+/// `(stream, part, seq)` rather than consuming a persistent stream, so a
+/// batch's content depends only on its identity — never on which host
+/// thread prepares it or in what order (the pipeline determinism
+/// requirement, DESIGN.md §Host pipeline). Any two samplers built with
+/// the same `seed` are interchangeable.
 pub struct Sampler {
     cfg: FanoutConfig,
     mode: WeightMode,
+    /// Base of the per-(part, seq) RNG streams.
+    stream: u64,
     rng: Rng,
     /// stamp[v] == tag  ⇒  v already placed in the current layer list.
     stamp: Vec<u32>,
@@ -25,6 +34,7 @@ impl Sampler {
         Sampler {
             cfg,
             mode,
+            stream: seed,
             rng: Rng::new(seed),
             stamp: vec![0; num_vertices],
             pos: vec![0; num_vertices],
@@ -33,7 +43,15 @@ impl Sampler {
         }
     }
 
+    /// Re-key the RNG stream base (e.g. per epoch) without reallocating
+    /// the |V|-sized scratch arrays.
+    pub fn set_stream(&mut self, stream: u64) {
+        self.stream = stream;
+    }
+
     /// Sample the 2-layer block for `targets` (≤ batch_size) from `data`.
+    /// `seq` is the batch's per-partition sequence number; together with
+    /// `part_id` it keys the RNG stream (see the type-level docs).
     pub fn sample(
         &mut self,
         data: &Dataset,
@@ -41,6 +59,8 @@ impl Sampler {
         part_id: usize,
         seq: usize,
     ) -> MiniBatch {
+        self.rng =
+            Rng::new(hash64(self.stream ^ ((part_id as u64) << 32) ^ (seq as u64)));
         let dims = self.cfg.dims();
         assert!(targets.len() <= dims.b, "targets exceed batch capacity");
         let g = &data.graph;
@@ -217,14 +237,23 @@ impl EpochPlan {
 
     /// Take the next target slice from partition `i` (None if exhausted).
     pub fn next_targets(&mut self, i: usize) -> Option<&[u32]> {
+        self.next_targets_seq(i).map(|(_, t)| t)
+    }
+
+    /// Like [`EpochPlan::next_targets`], but also returns the batch's
+    /// per-partition sequence number — the RNG-stream key the pipeline's
+    /// planning stage hands to whichever prep thread samples the batch.
+    pub fn next_targets_seq(&mut self, i: usize) -> Option<(usize, &[u32])> {
         let left = self.order[i].len() - self.cursor[i];
         if left == 0 {
             return None;
         }
         let take = left.min(self.batch_size);
         let start = self.cursor[i];
+        // every earlier take was a full batch, so this is the batch index
+        let seq = start / self.batch_size;
         self.cursor[i] += take;
-        Some(&self.order[i][start..start + take])
+        Some((seq, &self.order[i][start..start + take]))
     }
 }
 
@@ -343,6 +372,42 @@ mod tests {
         assert_eq!(a.v0, b.v0);
         assert_eq!(a.idx1, b.idx1);
         assert_eq!(a.w2, b.w2);
+    }
+
+    #[test]
+    fn sampling_is_independent_of_call_order() {
+        // pipeline determinism: a batch's content depends only on
+        // (seed, part, seq), not on what the sampler did before
+        let d = data();
+        let t1: Vec<u32> = d.train_vertices[..32].to_vec();
+        let t2: Vec<u32> = d.train_vertices[32..64].to_vec();
+        let mut a = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        let mut b = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        // a: (0,0) then (1,5); b: (1,5) then (0,0) — pairwise identical
+        let a00 = a.sample(&d, &t1, 0, 0);
+        let a15 = a.sample(&d, &t2, 1, 5);
+        let b15 = b.sample(&d, &t2, 1, 5);
+        let b00 = b.sample(&d, &t1, 0, 0);
+        assert_eq!(a00.v0, b00.v0);
+        assert_eq!(a00.idx1, b00.idx1);
+        assert_eq!(a15.v0, b15.v0);
+        assert_eq!(a15.w2, b15.w2);
+        // distinct (part, seq) keys give distinct batches
+        assert_ne!(a00.v0, a15.v0);
+    }
+
+    #[test]
+    fn epoch_plan_seq_numbers_batches_per_partition() {
+        let d = data();
+        let parts = vec![d.train_vertices[..100].to_vec()];
+        let mut rng = Rng::new(3);
+        let mut plan = EpochPlan::new(&parts, 32, &mut rng);
+        let mut seqs = Vec::new();
+        while let Some((seq, t)) = plan.next_targets_seq(0) {
+            assert!(!t.is_empty());
+            seqs.push(seq);
+        }
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -119,6 +119,20 @@ impl TwoStageScheduler {
         Some(IterationPlan { tasks })
     }
 
+    /// [`TwoStageScheduler::plan_iteration`] that also consumes the
+    /// planned batches from `remaining`. This is the decoupled planning
+    /// stage of the host pipeline: the coordinator enumerates the whole
+    /// epoch's iteration plans ahead of (and independently of) batch
+    /// preparation, so prep threads can run arbitrarily far ahead.
+    pub fn plan_iteration_consuming(&mut self, remaining: &mut [usize]) -> Option<IterationPlan> {
+        let plan = self.plan_iteration(remaining)?;
+        for t in &plan.tasks {
+            debug_assert!(remaining[t.part] > 0, "scheduler over-consumed partition {}", t.part);
+            remaining[t.part] -= 1;
+        }
+        Some(plan)
+    }
+
     /// Plan a whole epoch; returns the iteration plans and checks the
     /// exactly-once invariant.
     pub fn plan_epoch(&mut self, batches_per_part: &[usize]) -> Vec<IterationPlan> {
@@ -224,6 +238,21 @@ mod tests {
     fn epoch_ends_with_none() {
         let mut s = TwoStageScheduler::new(2, true);
         assert!(s.plan_iteration(&[0, 0]).is_none());
+    }
+
+    #[test]
+    fn consuming_planner_matches_plan_epoch() {
+        let counts = [7usize, 3, 5, 1];
+        let mut a = TwoStageScheduler::new(4, true);
+        let expect = a.plan_epoch(&counts);
+        let mut b = TwoStageScheduler::new(4, true);
+        let mut rem = counts.to_vec();
+        let mut got = Vec::new();
+        while let Some(p) = b.plan_iteration_consuming(&mut rem) {
+            got.push(p);
+        }
+        assert_eq!(got, expect);
+        assert!(rem.iter().all(|&r| r == 0));
     }
 
     #[test]

@@ -6,9 +6,8 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -42,7 +41,7 @@ impl Level {
     }
 }
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
 
 fn max_level() -> u8 {
@@ -73,7 +72,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{t:10.3}s {} {module}] {msg}", level.tag());
 }

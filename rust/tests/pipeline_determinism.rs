@@ -1,0 +1,112 @@
+//! Pipeline determinism: a fixed seed must produce a bit-identical
+//! per-iteration loss sequence and identical Traffic totals for every
+//! `host-threads` × `prefetch-depth` combination — including the serial
+//! path (1, 1) the seed implemented. Also pins down that `max_iterations`
+//! caps *prepared* work, not just executed work (no prepared-but-never-
+//! executed batches may leak into the metrics).
+
+use hitgnn::coordinator::{TrainConfig, Trainer};
+use hitgnn::partition::Algorithm;
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        dataset: "tiny".into(),
+        model: "gcn".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 2,
+        epochs: 2,
+        lr: 0.3,
+        momentum: 0.9,
+        scale_shift: 0,
+        seed: 33,
+        max_iterations: Some(6),
+        ..TrainConfig::default()
+    }
+}
+
+/// (per-iteration losses across epochs, traffic totals, batches, iters).
+fn run(host_threads: usize, prefetch_depth: usize) -> (Vec<f64>, (u64, u64, u64), usize, usize) {
+    let mut cfg = base_cfg();
+    cfg.host_threads = host_threads;
+    cfg.prefetch_depth = prefetch_depth;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    let losses: Vec<f64> = r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect();
+    let traffic = r.epochs.iter().fold((0u64, 0u64, 0u64), |acc, e| {
+        (acc.0 + e.local_bytes, acc.1 + e.host_bytes, acc.2 + e.f2f_bytes)
+    });
+    let batches: usize = r.epochs.iter().map(|e| e.batches).sum();
+    let iters: usize = r.epochs.iter().map(|e| e.iterations).sum();
+    t.shutdown();
+    (losses, traffic, batches, iters)
+}
+
+#[test]
+fn loss_sequence_invariant_across_pipeline_configs() {
+    let base = run(1, 1);
+    assert!(!base.0.is_empty(), "no iterations recorded");
+    assert!(base.0.iter().all(|l| l.is_finite()));
+    for (ht, d) in [(1, 3), (4, 1), (4, 3)] {
+        let got = run(ht, d);
+        assert_eq!(
+            base.0, got.0,
+            "loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+        );
+        assert_eq!(base.1, got.1, "traffic diverged at ({ht}, {d})");
+        assert_eq!(base.2, got.2, "batch count diverged at ({ht}, {d})");
+        assert_eq!(base.3, got.3, "iteration count diverged at ({ht}, {d})");
+    }
+}
+
+#[test]
+fn legacy_prefetch_flag_equals_depth_two() {
+    let mut cfg_flag = base_cfg();
+    cfg_flag.prefetch = true;
+    let mut cfg_depth = base_cfg();
+    cfg_depth.prefetch_depth = 2;
+
+    let losses = |cfg: TrainConfig| {
+        let mut t = Trainer::new(cfg).unwrap();
+        let r = t.run().unwrap();
+        let l: Vec<f64> =
+            r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect();
+        t.shutdown();
+        l
+    };
+    assert_eq!(losses(cfg_flag), losses(cfg_depth));
+}
+
+#[test]
+fn max_iterations_bounds_prepared_batches() {
+    // tiny / DistDGL p=2: both partitions hold well over 3 batches, so the
+    // first 3 iterations are stage-1 (exactly one batch per FPGA). A cap
+    // of 3 must therefore prepare and count exactly 6 batches — a
+    // prepared-but-never-executed extra iteration would show up here.
+    let mut cfg = base_cfg();
+    cfg.epochs = 1;
+    cfg.max_iterations = Some(3);
+    cfg.host_threads = 4;
+    cfg.prefetch_depth = 3; // deep window: over-preparation would be easy
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    let m = &r.epochs[0];
+    assert_eq!(m.iterations, 3);
+    assert_eq!(m.batches, 6, "prepared batches must match executed iterations");
+    assert_eq!(m.iter_losses.len(), 3);
+    t.shutdown();
+}
+
+#[test]
+fn pipelined_trainer_still_evaluates() {
+    let mut cfg = base_cfg();
+    cfg.host_threads = 4;
+    cfg.prefetch_depth = 2;
+    cfg.epochs = 3;
+    cfg.max_iterations = Some(12);
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.last_loss().is_finite());
+    let acc = t.evaluate(4).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    t.shutdown();
+}

@@ -1,0 +1,169 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the exact API surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Differences from the real crate (deliberate, to stay tiny):
+//! - `Error` stores a flattened message string; the source chain is
+//!   rendered eagerly at conversion time instead of being walkable.
+//! - `{:#}` and `{}` print the same (full) message; real anyhow prints
+//!   only the outermost context without the alternate flag.
+//!
+//! Swap back to crates.io anyhow by replacing the path dependency — the
+//! call sites need no changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Flattened error value. Like `anyhow::Error`, it deliberately does NOT
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (used by [`anyhow!`]).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap(context: impl fmt::Display, inner: &Error) -> Error {
+        Error { msg: format!("{context}: {}", inner.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(cause) = src {
+            msg.push_str(&format!(": {cause}"));
+            src = cause.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let inner: Error = e.into();
+            Error::wrap(context, &inner)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let inner: Error = e.into();
+            Error::wrap(f(), &inner)
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(::std::format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return ::std::result::Result::Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("bad thing {}", 7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad thing 7");
+        assert_eq!(format!("{e:#}"), "bad thing 7");
+    }
+
+    #[test]
+    fn ensure_formats() {
+        let r: Result<()> = (|| {
+            ensure!(1 + 1 == 3, "math is broken: {}", 2);
+            Ok(())
+        })();
+        assert!(r.unwrap_err().to_string().contains("math is broken"));
+    }
+
+    #[test]
+    fn std_errors_convert_with_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<usize>().map(|_| ());
+        let e = r.context("parsing count").unwrap_err();
+        assert!(e.to_string().starts_with("parsing count: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let s: Option<u32> = Some(3);
+        assert_eq!(s.with_context(|| "unused").unwrap(), 3);
+    }
+}
