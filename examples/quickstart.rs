@@ -9,13 +9,14 @@
 
 use hitgnn::api::HitGnn;
 use hitgnn::partition::Algorithm;
+use hitgnn::store::CachePolicy;
 
 fn main() -> anyhow::Result<()> {
     // --- Design phase (Listing 1 lines 1–22) ---------------------------
     let design = HitGnn::new()
         .load_input_graph("tiny", 0)          // LoadInputGraph()
         .graph_partition(Algorithm::DistDgl)  // Graph_Partition()
-        .feature_storing(0.2)                 // Feature_Storing()
+        .feature_storing(CachePolicy::Lfu, 0.2) // Feature_Storing(policy, ratio)
         .gnn_computation("gcn")               // GNN_Computation('GCN')
         .gnn_parameters(2, 128)               // GNN_Parameters(L=2, hidden)
         .fpga_metadata(hitgnn::fpga::U250)    // FPGA_Metadata()

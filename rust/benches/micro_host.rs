@@ -7,8 +7,10 @@ use hitgnn::comm::{CommConfig, FeatureService};
 use hitgnn::coordinator::Trainer;
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
+use hitgnn::perf::experiments::measure_host_policy;
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
 use hitgnn::sched::TwoStageScheduler;
+use hitgnn::store::CachePolicy;
 use hitgnn::util::bench::{black_box, Bench, Table};
 use hitgnn::util::json::Json;
 use hitgnn::util::rng::Rng;
@@ -61,7 +63,7 @@ fn main() {
     let svc = FeatureService::new(&data.features, CommConfig::default());
     let mg = b
         .measure("gather feat0 (v0 x 100 f32)", |_| {
-            black_box(svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0))
+            black_box(svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0))
         })
         .median_s;
     b.throughput(
@@ -98,7 +100,70 @@ fn main() {
 
     b.finish();
 
+    cache_policy_sweep();
     pipeline_sweep();
+}
+
+/// Cache-policy sweep (ISSUE 2 acceptance): per-epoch measured β for the
+/// static PaGraph cache vs the dynamic LFU/hotness and sliding-window
+/// policies at equal `cache_ratio`, on the Table-4 datasets. Batches are
+/// keyed by (seed, epoch, batch) only, so the comparison is paired: epoch
+/// 0 is identical across policies and later epochs isolate the
+/// re-ranking. Asserts the LFU policy ends strictly above static PaGraph
+/// on at least two datasets.
+fn cache_policy_sweep() {
+    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let n_batches: usize = std::env::var("HITGNN_BENCH_BATCHES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let epochs = 3usize;
+    let ratio = 0.1f64;
+    println!(
+        "\n=== bench: cache-policy sweep (PaGraph partitioning, cache_ratio {ratio}, shift {shift}, {n_batches} batches x {epochs} epochs) ==="
+    );
+    let mut t = Table::new(&["dataset", "policy", "beta per epoch", "final beta", "vs static"]);
+    let mut lfu_strict_wins = 0usize;
+    for spec in &datasets::REGISTRY {
+        let mut static_beta = f64::NAN;
+        for policy in CachePolicy::ALL {
+            let h = measure_host_policy(
+                spec, Algorithm::PaGraph, "gcn", 4, shift, n_batches, 17, policy, ratio, epochs,
+            )
+            .expect("measure_host_policy");
+            if policy == CachePolicy::Static {
+                static_beta = h.beta;
+            }
+            let delta = if policy == CachePolicy::Static {
+                "-".to_string()
+            } else {
+                format!("{:+.4}", h.beta - static_beta)
+            };
+            if policy == CachePolicy::Lfu && h.beta > static_beta {
+                lfu_strict_wins += 1;
+            }
+            t.row(&[
+                spec.key.to_string(),
+                policy.name().to_string(),
+                h.beta_epochs.iter().map(|b| format!("{b:.4}")).collect::<Vec<_>>().join(" → "),
+                format!("{:.4}", h.beta),
+                delta,
+            ]);
+        }
+    }
+    t.print();
+    assert!(
+        lfu_strict_wins >= 2,
+        "LFU must beat static PaGraph β on ≥2 Table-4 datasets (won on {lfu_strict_wins})"
+    );
+    println!(
+        "  LFU/hotness strictly above static PaGraph on {lfu_strict_wins}/{} datasets ✓",
+        datasets::REGISTRY.len()
+    );
+    println!("=== end bench: cache-policy sweep ===");
 }
 
 /// Host-pipeline benchmark (ISSUE 1 acceptance): epoch wall-clock over a

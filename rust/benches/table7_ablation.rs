@@ -3,7 +3,8 @@
 //!
 //! Paper: WB+DC delivers 51–66% total improvement over the baseline.
 
-use hitgnn::perf::experiments::table7;
+use hitgnn::perf::experiments::table7_with_policy;
+use hitgnn::store::CachePolicy;
 use hitgnn::util::bench::Table;
 use hitgnn::util::stats::si;
 
@@ -16,10 +17,20 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    eprintln!("measuring host statistics at shift {shift}...");
-    let rows = table7(4, shift, n_batches).expect("table7");
+    // β is measured per epoch under the selected feature-store policy;
+    // the steady-state value parameterises Eq. 7 (paper config = static).
+    let policy = std::env::var("HITGNN_CACHE_POLICY")
+        .ok()
+        .map(|s| CachePolicy::parse(&s).expect("HITGNN_CACHE_POLICY"))
+        .unwrap_or(CachePolicy::Static);
+    let epochs = if policy.is_dynamic() { 3 } else { 1 };
+    eprintln!("measuring host statistics at shift {shift} (cache policy {})...", policy.name());
+    let rows = table7_with_policy(4, shift, n_batches, policy, 0.2, epochs).expect("table7");
 
-    println!("\n=== Table 7: throughput improvement due to optimizations (DistDGL) ===");
+    println!(
+        "\n=== Table 7: throughput improvement due to optimizations (DistDGL, {} store) ===",
+        policy.name()
+    );
     let mut t = Table::new(&["Data-Model", "Baseline", "WB", "WB+DC", "Speedup"]);
     for r in &rows {
         let abbrev = match r.dataset {

@@ -8,11 +8,12 @@
 //! ```no_run
 //! use hitgnn::api::HitGnn;
 //! use hitgnn::partition::Algorithm;
+//! use hitgnn::store::CachePolicy;
 //!
 //! let design = HitGnn::new()
 //!     .load_input_graph("ogbn-products", 4)      // LoadInputGraph()
 //!     .graph_partition(Algorithm::DistDgl)        // Graph_Partition()
-//!     .feature_storing(0.2)                       // Feature_Storing()
+//!     .feature_storing(CachePolicy::Lfu, 0.2)     // Feature_Storing()
 //!     .gnn_computation("gcn")                     // GNN_Computation()
 //!     .gnn_parameters(2, 128)                     // GNN_Parameters()
 //!     .fpga_metadata(hitgnn::fpga::U250)          // FPGA_Metadata()
@@ -38,6 +39,7 @@ use crate::fpga::{DieConfig, FpgaSpec};
 use crate::graph::datasets;
 use crate::partition::Algorithm;
 use crate::perf::PlatformSpec;
+use crate::store::CachePolicy;
 use crate::util::json::Json;
 
 /// Builder for a HitGNN design (the "input program" of Fig. 3).
@@ -46,6 +48,7 @@ pub struct HitGnn {
     dataset: Option<String>,
     scale_shift: u32,
     algo: Algorithm,
+    cache_policy: CachePolicy,
     cache_ratio: f64,
     model: Option<String>,
     layers: usize,
@@ -63,6 +66,7 @@ impl Default for HitGnn {
             dataset: None,
             scale_shift: 4,
             algo: Algorithm::DistDgl,
+            cache_policy: CachePolicy::Static,
             cache_ratio: 0.2,
             model: None,
             layers: 2,
@@ -95,8 +99,12 @@ impl HitGnn {
         self
     }
 
-    /// `Feature_Storing()`: cache capacity fraction for caching strategies.
-    pub fn feature_storing(mut self, cache_ratio: f64) -> Self {
+    /// `Feature_Storing()`: the caching policy (the algorithm's static
+    /// Table-1 store, LFU/hotness, or sliding-window recency) and the
+    /// cache capacity fraction for caching strategies. `cache_ratio` must
+    /// be in [0, 1] — validated at `generate_design()`.
+    pub fn feature_storing(mut self, policy: CachePolicy, cache_ratio: f64) -> Self {
+        self.cache_policy = policy;
         self.cache_ratio = cache_ratio;
         self
     }
@@ -156,6 +164,11 @@ impl HitGnn {
             "artifacts are built with hidden=128 (got {}); re-run `make artifacts`",
             self.hidden
         );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.cache_ratio),
+            "feature_storing(): cache_ratio must be in [0, 1] (got {})",
+            self.cache_ratio
+        );
         let spec = datasets::lookup(&dataset)?;
 
         let platform = PlatformSpec {
@@ -164,6 +177,22 @@ impl HitGnn {
             pcie_gbs: self.pcie_gbs,
             cpu_mem_gbs: self.cpu_mem_gbs,
         };
+        // Eq. 7's β, measured (per-epoch) on a scaled instance under the
+        // configured feature-storing policy — the steady-state value feeds
+        // the DSE engine's workload instead of a hard-coded constant.
+        let beta = crate::perf::experiments::measure_host_policy(
+            &spec,
+            self.algo,
+            &model,
+            self.num_fpgas,
+            7,
+            4,
+            self.seed,
+            self.cache_policy,
+            self.cache_ratio,
+            if self.cache_policy.is_dynamic() { 2 } else { 1 },
+        )?
+        .beta;
         // accelerator generator: DSE over this dataset's dims
         let engine = DseEngine::new(platform);
         let dse = engine.explore(&[DseWorkload {
@@ -173,7 +202,7 @@ impl HitGnn {
                 10.0,
                 [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
             ),
-            beta: 0.75,
+            beta,
             param_scale: if model == "sage" { 2.0 } else { 1.0 },
             sampling_s_per_batch: 2e-3,
         }])?;
@@ -185,6 +214,7 @@ impl HitGnn {
             algo: self.algo,
             num_fpgas: self.num_fpgas,
             scale_shift: self.scale_shift,
+            cache_policy: self.cache_policy,
             cache_ratio: self.cache_ratio,
             seed: self.seed,
             ..TrainConfig::default()
@@ -288,6 +318,28 @@ mod tests {
         let (n, m) = d.fpga_parallelism();
         assert!(n >= 4 && m >= 64);
         assert_eq!(d.train.algo, Algorithm::PaGraph);
+    }
+
+    #[test]
+    fn feature_storing_validates_ratio_and_threads_policy() {
+        for bad in [-0.5, 1.5, f64::NAN] {
+            let r = HitGnn::new()
+                .load_input_graph("reddit", 8)
+                .gnn_computation("gcn")
+                .feature_storing(CachePolicy::Lfu, bad)
+                .generate_design();
+            assert!(r.is_err(), "cache_ratio {bad} accepted");
+        }
+        let d = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .graph_partition(Algorithm::PaGraph)
+            .gnn_computation("gcn")
+            .feature_storing(CachePolicy::Window, 0.1)
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.train.cache_policy, CachePolicy::Window);
+        assert_eq!(d.train.cache_ratio, 0.1);
+        assert!(d.estimated_nvtps > 0.0);
     }
 
     #[test]

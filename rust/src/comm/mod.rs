@@ -5,12 +5,21 @@
 //! For every mini-batch an FPGA executes, the features of the sampled
 //! layer-0 vertices must be materialised in FPGA-local memory:
 //!
-//! - bytes already resident in the FPGA's [`Store`] → **local DDR**;
+//! - bytes already resident in the FPGA's [`FeatureStore`] → **local DDR**;
 //! - missing bytes, DC **on** → fetched **directly from host CPU memory**
 //!   over PCIe (the host holds the full X — §4.2);
 //! - missing bytes, DC **off** (baseline) → if the row belongs to another
 //!   FPGA's partition it travels FPGA→shared-host-buffer→FPGA, i.e. two
 //!   PCIe crossings plus an extra CPU-memory copy ([26]); otherwise host.
+//!
+//! On top of the per-batch split, [`IterDedup`] implements
+//! **iteration-level fetch dedup**: within one synchronous iteration the
+//! `p` prepared batches often miss on the same hot vertices, so the host
+//! read is staged once — the first host-path miss of a vertex per
+//! iteration is charged to PCIe, every further copy only to CPU memory
+//! bandwidth ([`Traffic::dedup_saved_bytes`]). The pass runs on the
+//! coordinator at the gradient-sync barrier in (iter, tag) order, which
+//! keeps the accounting bit-identical across pipeline configurations.
 //!
 //! [`FeatureService`] is the execution-path twin: it actually gathers the
 //! feature rows into the executable's input buffer and reports the same
@@ -18,8 +27,8 @@
 //! drift apart.
 
 use crate::graph::FeatureGen;
-use crate::partition::Store;
 use crate::sampling::MiniBatch;
+use crate::store::FeatureStore;
 
 /// Byte-level breakdown of one mini-batch's vertex-feature traffic.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -31,6 +40,15 @@ pub struct Traffic {
     /// FPGA-to-FPGA via the shared host buffer (two PCIe crossings + a
     /// CPU-memory copy) — only nonzero with DC disabled.
     pub f2f_bytes: u64,
+    /// PCIe bytes avoided by iteration-level fetch dedup: duplicate
+    /// host-path misses within one iteration ride the already-staged host
+    /// read, paying only a CPU-memory copy. Zero until [`IterDedup`] runs.
+    pub dedup_saved_bytes: u64,
+    /// Layer-0 rows whose vertex was resident in the store (row-granular
+    /// cache hits; equals β only for full-width stores).
+    pub hit_rows: u64,
+    /// Total layer-0 rows accounted.
+    pub v0_rows: u64,
 }
 
 impl std::ops::AddAssign for Traffic {
@@ -41,13 +59,18 @@ impl std::ops::AddAssign for Traffic {
         self.local_bytes += other.local_bytes;
         self.host_bytes += other.host_bytes;
         self.f2f_bytes += other.f2f_bytes;
+        self.dedup_saved_bytes += other.dedup_saved_bytes;
+        self.hit_rows += other.hit_rows;
+        self.v0_rows += other.v0_rows;
     }
 }
 
 impl Traffic {
     /// The paper's β: fraction of feature bytes served locally (Eq. 7).
+    /// Dedup-saved bytes still move (host copy), so they stay in the
+    /// denominator — dedup changes *where* misses are paid, not β.
     pub fn beta(&self) -> f64 {
-        let total = self.local_bytes + self.host_bytes + self.f2f_bytes;
+        let total = self.total_bytes();
         if total == 0 {
             1.0
         } else {
@@ -55,20 +78,32 @@ impl Traffic {
         }
     }
 
+    /// Row-granular cache hit rate: fraction of layer-0 rows resident in
+    /// the executing FPGA's store (1.0 when nothing was accounted).
+    pub fn hit_rate(&self) -> f64 {
+        if self.v0_rows == 0 {
+            1.0
+        } else {
+            self.hit_rows as f64 / self.v0_rows as f64
+        }
+    }
+
     pub fn total_bytes(&self) -> u64 {
-        self.local_bytes + self.host_bytes + self.f2f_bytes
+        self.local_bytes + self.host_bytes + self.f2f_bytes + self.dedup_saved_bytes
     }
 
     /// Wall-clock seconds to move this traffic, given DDR / PCIe GB/s.
     /// F2F pays two PCIe crossings through the shared host buffer; the
     /// crossings use different links and partially pipeline, so the
     /// effective penalty is [`F2F_PENALTY`]× a direct fetch plus the host
-    /// copy (charged at CPU memory bandwidth `cpu_gbs`).
+    /// copy (charged at CPU memory bandwidth `cpu_gbs`). Dedup-saved
+    /// bytes are pure CPU-memory copies.
     pub fn seconds(&self, ddr_gbs: f64, pcie_gbs: f64, cpu_gbs: f64) -> f64 {
         const G: f64 = 1e9;
         self.local_bytes as f64 / (ddr_gbs * G)
             + self.host_bytes as f64 / (pcie_gbs * G)
             + self.f2f_bytes as f64 * (F2F_PENALTY / (pcie_gbs * G) + 1.0 / (cpu_gbs * G))
+            + self.dedup_saved_bytes as f64 / (cpu_gbs * G)
     }
 }
 
@@ -92,39 +127,126 @@ impl Default for CommConfig {
     }
 }
 
+/// Does a miss on vertex `v` take the host path (vs FPGA-to-FPGA)?
+/// DC on: always. DC off: only when the row is not owned by a remote FPGA.
+#[inline]
+fn miss_is_host_path(
+    cfg: CommConfig,
+    vertex_part: Option<&[u32]>,
+    fpga_id: usize,
+    v: u32,
+) -> bool {
+    if cfg.direct_host_fetch {
+        return true;
+    }
+    !vertex_part.map(|part| part[v as usize] as usize != fpga_id).unwrap_or(false)
+}
+
 /// Account the feature traffic of `mb` executed on FPGA `fpga_id` whose
-/// resident rows are `store`. `vertex_part` (vertex→partition) is needed
-/// only for the DC-off path to decide which misses are remote.
-pub fn feature_traffic(
+/// resident rows are `store` (any [`FeatureStore`]; prep threads pass the
+/// epoch's `Residency` snapshot). `vertex_part` (vertex→partition) is
+/// needed only for the DC-off path to decide which misses are remote.
+pub fn feature_traffic<S: FeatureStore + ?Sized>(
     mb: &MiniBatch,
-    store: &Store,
+    store: &S,
     row_bytes: usize,
     cfg: CommConfig,
     vertex_part: Option<&[u32]>,
     fpga_id: usize,
 ) -> Traffic {
+    let res = store.residency();
     let mut t = Traffic::default();
     for &v in &mb.v0[..mb.n_v0] {
-        let local = store.local_bytes(v, row_bytes) as u64;
+        let local = res.local_bytes(v, row_bytes) as u64;
         let miss = row_bytes as u64 - local;
         t.local_bytes += local;
+        t.v0_rows += 1;
+        if res.holds_row(v) {
+            t.hit_rows += 1;
+        }
         if miss == 0 {
             continue;
         }
-        if cfg.direct_host_fetch {
+        if miss_is_host_path(cfg, vertex_part, fpga_id, v) {
             t.host_bytes += miss;
         } else {
-            let remote = vertex_part
-                .map(|part| part[v as usize] as usize != fpga_id)
-                .unwrap_or(false);
-            if remote {
-                t.f2f_bytes += miss;
-            } else {
-                t.host_bytes += miss;
-            }
+            t.f2f_bytes += miss;
         }
     }
     t
+}
+
+/// Iteration-scoped fetch-dedup state: a |V|-sized stamp array marking
+/// which vertices already had their host read staged this iteration.
+///
+/// Protocol (coordinator only, at the gradient-sync barrier):
+/// call [`next_iteration`](Self::next_iteration) once per iteration, then
+/// [`apply`](Self::apply) for each of the iteration's prepared batches in
+/// tag order, against the same residency snapshot the batch's traffic was
+/// computed from. The pass only reclassifies host-path misses
+/// (`host_bytes` → `dedup_saved_bytes`); local and F2F accounting — i.e.
+/// the DC-on/off semantics — are untouched, and per-batch byte totals are
+/// conserved.
+pub struct IterDedup {
+    stamp: Vec<u32>,
+    cur: u32,
+}
+
+impl IterDedup {
+    pub fn new(num_vertices: usize) -> IterDedup {
+        IterDedup { stamp: vec![0; num_vertices], cur: 0 }
+    }
+
+    /// Open a new iteration window (forget the previous iteration's
+    /// staged reads).
+    pub fn next_iteration(&mut self) {
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            // stamp wrap-around: reset so stale marks can't collide
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.cur = 1;
+        }
+    }
+
+    /// Reclassify this batch's duplicate host-path misses. `v0` is the
+    /// batch's real layer-0 vertex list and `t` its [`feature_traffic`]
+    /// accounting against `store` — both must match, or conservation
+    /// breaks.
+    ///
+    /// Only full-width residencies participate: under dimension slicing
+    /// (P3) each FPGA misses a *different* dim range of the same vertex,
+    /// so a staged host read does not cover a later device's miss — a
+    /// vertex-granular stamp would over-save. Partial-width batches pass
+    /// through untouched.
+    pub fn apply<S: FeatureStore + ?Sized>(
+        &mut self,
+        v0: &[u32],
+        store: &S,
+        row_bytes: usize,
+        cfg: CommConfig,
+        vertex_part: Option<&[u32]>,
+        fpga_id: usize,
+        t: &mut Traffic,
+    ) {
+        assert!(self.cur > 0, "call next_iteration() before apply()");
+        let res = store.residency();
+        if res.dim_fraction() < 1.0 {
+            return;
+        }
+        for &v in v0 {
+            let miss = row_bytes as u64 - res.local_bytes(v, row_bytes) as u64;
+            if miss == 0 || !miss_is_host_path(cfg, vertex_part, fpga_id, v) {
+                continue;
+            }
+            if self.stamp[v as usize] == self.cur {
+                debug_assert!(t.host_bytes >= miss, "dedup applied twice or snapshot mismatch");
+                t.host_bytes -= miss;
+                t.dedup_saved_bytes += miss;
+            } else {
+                self.stamp[v as usize] = self.cur;
+            }
+        }
+    }
 }
 
 /// Gradient-synchronisation traffic per iteration: every FPGA ships its
@@ -162,10 +284,10 @@ impl<'a> FeatureService<'a> {
 
     /// Gather `mb`'s layer-0 feature rows into a `[v0_cap, f0]` buffer and
     /// report the traffic split. Padding rows are zero-filled.
-    pub fn gather(
+    pub fn gather<S: FeatureStore + ?Sized>(
         &self,
         mb: &MiniBatch,
-        store: &Store,
+        store: &S,
         vertex_part: Option<&[u32]>,
         fpga_id: usize,
     ) -> (Vec<f32>, Traffic) {
@@ -214,7 +336,7 @@ mod tests {
         for dc in [true, false] {
             let t = feature_traffic(
                 &mb,
-                &pre.stores[0],
+                pre.stores[0].as_ref(),
                 row,
                 CommConfig { direct_host_fetch: dc },
                 pre.vertex_part.as_deref(),
@@ -222,6 +344,9 @@ mod tests {
             );
             assert_eq!(t.total_bytes(), (mb.n_v0 * row) as u64);
             assert!(t.beta() >= 0.0 && t.beta() <= 1.0);
+            assert_eq!(t.v0_rows, mb.n_v0 as u64);
+            assert!(t.hit_rate() >= 0.0 && t.hit_rate() <= 1.0);
+            assert_eq!(t.dedup_saved_bytes, 0, "plain accounting never dedups");
         }
     }
 
@@ -230,7 +355,7 @@ mod tests {
         let (d, pre, mb) = setup();
         let t = feature_traffic(
             &mb,
-            &pre.stores[0],
+            pre.stores[0].as_ref(),
             d.features.bytes_per_vertex(),
             CommConfig { direct_host_fetch: true },
             pre.vertex_part.as_deref(),
@@ -243,8 +368,8 @@ mod tests {
     fn dc_off_routes_remote_misses_via_f2f_and_is_slower() {
         let (d, pre, mb) = setup();
         let row = d.features.bytes_per_vertex();
-        let on = feature_traffic(&mb, &pre.stores[0], row, CommConfig { direct_host_fetch: true }, pre.vertex_part.as_deref(), 0);
-        let off = feature_traffic(&mb, &pre.stores[0], row, CommConfig { direct_host_fetch: false }, pre.vertex_part.as_deref(), 0);
+        let on = feature_traffic(&mb, pre.stores[0].as_ref(), row, CommConfig { direct_host_fetch: true }, pre.vertex_part.as_deref(), 0);
+        let off = feature_traffic(&mb, pre.stores[0].as_ref(), row, CommConfig { direct_host_fetch: false }, pre.vertex_part.as_deref(), 0);
         // DistDGL stores partition rows locally, so every miss is remote:
         assert_eq!(off.host_bytes, 0);
         assert_eq!(off.f2f_bytes, on.host_bytes);
@@ -254,7 +379,7 @@ mod tests {
     }
 
     #[test]
-    fn p3_store_gives_partial_beta() {
+    fn p3_store_gives_partial_beta_but_full_hit_rate() {
         let d = datasets::lookup("reddit").unwrap().build(8, 23);
         let pre = preprocess(Algorithm::P3, &d, 4, 0.2, 3);
         let mut s = Sampler::new(
@@ -267,7 +392,7 @@ mod tests {
         let mb = s.sample(&d, &targets, 1, 0);
         let t = feature_traffic(
             &mb,
-            &pre.stores[1],
+            pre.stores[1].as_ref(),
             d.features.bytes_per_vertex(),
             CommConfig::default(),
             None,
@@ -275,18 +400,126 @@ mod tests {
         );
         // every row is ~1/4 local under 4-way dimension slicing
         assert!((t.beta() - 0.25).abs() < 0.05, "beta={}", t.beta());
+        // …but every row is (partially) resident: hit rate is row-granular
+        assert_eq!(t.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn iter_dedup_reclassifies_duplicate_host_misses() {
+        let (d, pre, mb) = setup();
+        let row = d.features.bytes_per_vertex();
+        let cfg = CommConfig::default();
+        // the same batch accounted on two FPGAs in one iteration: FPGA 1's
+        // copy of any vertex FPGA 0 already missed rides the staged read
+        let t0 = feature_traffic(&mb, pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0);
+        let t1 = feature_traffic(&mb, pre.stores[1].as_ref(), row, cfg, pre.vertex_part.as_deref(), 1);
+        let mut dd = IterDedup::new(d.graph.num_vertices());
+        dd.next_iteration();
+        let (mut a, mut b) = (t0, t1);
+        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut a);
+        dd.apply(&mb.v0[..mb.n_v0], pre.stores[1].as_ref(), row, cfg, pre.vertex_part.as_deref(), 1, &mut b);
+        // per-batch byte totals conserved; local / f2f untouched
+        assert_eq!(a.total_bytes(), t0.total_bytes());
+        assert_eq!(b.total_bytes(), t1.total_bytes());
+        assert_eq!(a.local_bytes, t0.local_bytes);
+        assert_eq!(b.local_bytes, t1.local_bytes);
+        assert_eq!(a.f2f_bytes, t0.f2f_bytes);
+        assert_eq!(b.f2f_bytes, t1.f2f_bytes);
+        // the first batch stages every read: nothing to dedup yet
+        assert_eq!(a.dedup_saved_bytes, 0);
+        // DistDGL stores are disjoint, so every vertex missing on FPGA 1
+        // but resident on FPGA 0 is NOT a duplicate; shared misses are the
+        // rows resident on neither (partitions 2/3) — those must dedup
+        let shared_miss: u64 = mb.v0[..mb.n_v0]
+            .iter()
+            .filter(|&&v| {
+                !pre.stores[0].residency().holds_row(v) && !pre.stores[1].residency().holds_row(v)
+            })
+            .count() as u64
+            * row as u64;
+        assert_eq!(b.dedup_saved_bytes, shared_miss);
+        // dedup moves host bytes only
+        assert_eq!(b.host_bytes + b.dedup_saved_bytes, t1.host_bytes);
+        // and the deduped split is never slower
+        let (ddr, pcie, cpu) = (19.25, 16.0, 205.0);
+        assert!(b.seconds(ddr, pcie, cpu) <= t1.seconds(ddr, pcie, cpu));
+    }
+
+    #[test]
+    fn iter_dedup_resets_between_iterations() {
+        let (d, pre, mb) = setup();
+        let row = d.features.bytes_per_vertex();
+        let cfg = CommConfig::default();
+        let base = feature_traffic(&mb, pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0);
+        let mut dd = IterDedup::new(d.graph.num_vertices());
+        for _ in 0..3 {
+            dd.next_iteration();
+            let mut t = base;
+            dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
+            // a fresh iteration has no staged reads to ride on
+            assert_eq!(t, base);
+            // …but a second copy within the same iteration dedups fully
+            let mut t2 = base;
+            dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
+            assert_eq!(t2.host_bytes, 0);
+            assert_eq!(t2.dedup_saved_bytes, base.host_bytes);
+            assert_eq!(t2.total_bytes(), base.total_bytes());
+        }
+    }
+
+    #[test]
+    fn iter_dedup_skips_dim_sliced_stores() {
+        // P3: each FPGA misses a different dim range of the same vertex,
+        // so a staged read covers nothing for the next device — the pass
+        // must be a no-op on partial-width residencies
+        let d = datasets::lookup("reddit").unwrap().build(8, 23);
+        let pre = preprocess(Algorithm::P3, &d, 4, 0.2, 3);
+        let mut s = Sampler::new(
+            FanoutConfig { batch_size: 32, k1: 5, k2: 3 },
+            WeightMode::GcnNorm,
+            d.graph.num_vertices(),
+            5,
+        );
+        let mb = s.sample(&d, &pre.train_parts[0][..32], 0, 0);
+        let row = d.features.bytes_per_vertex();
+        let cfg = CommConfig::default();
+        let mut dd = IterDedup::new(d.graph.num_vertices());
+        dd.next_iteration();
+        for fpga in 0..2 {
+            let base = feature_traffic(&mb, pre.stores[fpga].as_ref(), row, cfg, None, fpga);
+            let mut t = base;
+            dd.apply(&mb.v0[..mb.n_v0], pre.stores[fpga].as_ref(), row, cfg, None, fpga, &mut t);
+            assert_eq!(t, base, "partial-width store must pass through untouched");
+        }
+    }
+
+    #[test]
+    fn iter_dedup_preserves_dc_off_f2f_semantics() {
+        let (d, pre, mb) = setup();
+        let row = d.features.bytes_per_vertex();
+        let cfg = CommConfig { direct_host_fetch: false };
+        let base = feature_traffic(&mb, pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0);
+        let mut dd = IterDedup::new(d.graph.num_vertices());
+        dd.next_iteration();
+        let mut t = base;
+        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
+        let mut t2 = base;
+        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
+        // under DistDGL + DC off every miss is F2F: dedup must not touch it
+        assert_eq!(t2.f2f_bytes, base.f2f_bytes);
+        assert_eq!(t2.dedup_saved_bytes, 0);
     }
 
     #[test]
     fn feature_service_matches_traffic_and_featgen() {
         let (d, pre, mb) = setup();
         let svc = FeatureService::new(&d.features, CommConfig::default());
-        let (buf, t) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
+        let (buf, t) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
         let f0 = d.features.feat_dim();
         assert_eq!(buf.len(), mb.dims.v0_cap * f0);
         let t2 = feature_traffic(
             &mb,
-            &pre.stores[0],
+            pre.stores[0].as_ref(),
             d.features.bytes_per_vertex(),
             CommConfig::default(),
             pre.vertex_part.as_deref(),
@@ -305,14 +538,15 @@ mod tests {
     fn feature_service_is_reusable_and_traffic_merges() {
         let (d, pre, mb) = setup();
         let svc = FeatureService::new(&d.features, CommConfig::default());
-        let (a, ta) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
-        let (b, tb) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
+        let (a, ta) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
+        let (b, tb) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
         assert_eq!(a, b, "reused service must be deterministic");
         assert_eq!(ta, tb);
         let mut sum = Traffic::default();
         sum += ta;
         sum += tb;
         assert_eq!(sum.total_bytes(), 2 * ta.total_bytes());
+        assert_eq!(sum.v0_rows, 2 * ta.v0_rows);
     }
 
     #[test]

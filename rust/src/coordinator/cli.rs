@@ -28,8 +28,13 @@ TRAIN OPTIONS:
     --fpgas <p>                  --epochs <n>
     --lr <f>                     --momentum <f>
     --scale-shift <s>            graph scaled to |V|/2^s (default 4)
-    --cache-ratio <f>            PaGraph cache fraction (default 0.2)
+    --cache-ratio <f>            cache fraction of |V|, in [0, 1] (default 0.2)
+    --cache-policy <p>           feature-store policy: static (Table-1
+                                 algorithm default) | lfu (hotness cache,
+                                 re-ranked per epoch from observed access
+                                 counts) | window (sliding-window recency)
     --no-wb / --no-dc            disable an optimization (ablation)
+    --no-dedup                   disable iteration-level fetch dedup
     --host-threads <n>           batch-preparation pool size (default 1)
     --prefetch-depth <d>         bounded prefetch window: up to d-1
                                  iterations prepare ahead of the one

@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use crate::partition::Algorithm;
+use crate::store::CachePolicy;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -20,8 +21,16 @@ pub struct TrainConfig {
     pub momentum: f32,
     /// Dataset scale shift (|V|,|E| ÷ 2^shift) for the execution path.
     pub scale_shift: u32,
-    /// PaGraph cache capacity as a fraction of |V|.
+    /// Cache capacity as a fraction of |V| (PaGraph and the dynamic
+    /// policies). Must be in [0, 1].
     pub cache_ratio: f64,
+    /// Feature-store caching policy: the algorithm's static Table-1 store
+    /// or a dynamic (LFU-hotness / sliding-window) cache re-ranked at the
+    /// epoch barrier from observed accesses.
+    pub cache_policy: CachePolicy,
+    /// Iteration-level fetch dedup: duplicate host-path misses within one
+    /// iteration ride a single staged host read (`comm::IterDedup`).
+    pub fetch_dedup: bool,
     /// WB optimization (two-stage scheduling).
     pub workload_balancing: bool,
     /// DC optimization (direct host fetch).
@@ -55,6 +64,8 @@ impl Default for TrainConfig {
             momentum: 0.9,
             scale_shift: 4,
             cache_ratio: 0.2,
+            cache_policy: CachePolicy::Static,
+            fetch_dedup: true,
             workload_balancing: true,
             direct_host_fetch: true,
             prefetch: false,
@@ -81,6 +92,8 @@ impl TrainConfig {
             momentum: args.num("momentum", d.momentum)?,
             scale_shift: args.num("scale-shift", d.scale_shift)?,
             cache_ratio: args.num("cache-ratio", d.cache_ratio)?,
+            cache_policy: CachePolicy::parse(&args.str("cache-policy", "static"))?,
+            fetch_dedup: !args.flag("no-dedup"),
             workload_balancing: !args.flag("no-wb"),
             direct_host_fetch: !args.flag("no-dc"),
             prefetch: args.flag("prefetch"),
@@ -94,6 +107,11 @@ impl TrainConfig {
         };
         anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
         anyhow::ensure!(cfg.epochs >= 1, "--epochs must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.cache_ratio),
+            "--cache-ratio must be in [0, 1] (got {})",
+            cfg.cache_ratio
+        );
         anyhow::ensure!(cfg.host_threads >= 1, "--host-threads must be >= 1");
         anyhow::ensure!(cfg.prefetch_depth >= 1, "--prefetch-depth must be >= 1");
         Ok(cfg)
@@ -122,6 +140,8 @@ impl TrainConfig {
             ("momentum", Json::num(self.momentum as f64)),
             ("scale_shift", Json::num(self.scale_shift as f64)),
             ("cache_ratio", Json::num(self.cache_ratio)),
+            ("cache_policy", Json::str(self.cache_policy.name())),
+            ("fetch_dedup", Json::Bool(self.fetch_dedup)),
             ("workload_balancing", Json::Bool(self.workload_balancing)),
             ("direct_host_fetch", Json::Bool(self.direct_host_fetch)),
             ("host_threads", Json::num(self.host_threads as f64)),
@@ -188,6 +208,33 @@ mod tests {
         assert!(TrainConfig::from_args(&args).is_err());
         let args = Args::parse(["train", "--algo", "bogus"]);
         assert!(TrainConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn parses_cache_policy_and_dedup_toggle() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert_eq!(c.cache_policy, CachePolicy::Static);
+        assert!(c.fetch_dedup);
+        let c = TrainConfig::from_args(&Args::parse([
+            "train", "--cache-policy", "lfu", "--no-dedup",
+        ]))
+        .unwrap();
+        assert_eq!(c.cache_policy, CachePolicy::Lfu);
+        assert!(!c.fetch_dedup);
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--cache-policy", "bogus"]))
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_cache_ratio_outside_unit_interval() {
+        for bad in ["-0.1", "1.5", "-3"] {
+            let args = Args::parse(["train", "--cache-ratio", bad]);
+            assert!(TrainConfig::from_args(&args).is_err(), "--cache-ratio {bad} accepted");
+        }
+        for ok in ["0", "0.2", "1"] {
+            let args = Args::parse(["train", "--cache-ratio", ok]);
+            assert!(TrainConfig::from_args(&args).is_ok(), "--cache-ratio {ok} rejected");
+        }
     }
 
     #[test]

@@ -17,9 +17,18 @@ pub struct EpochMetrics {
     pub nvtps: f64,
     /// Measured local-fetch ratio (Eq. 7's β) across all batches.
     pub beta: f64,
+    /// Row-granular cache hit rate of the feature stores (fraction of
+    /// layer-0 rows resident; equals β only for full-width stores).
+    pub cache_hit_rate: f64,
     pub local_bytes: u64,
     pub host_bytes: u64,
     pub f2f_bytes: u64,
+    /// PCIe bytes avoided by iteration-level fetch dedup (charged to CPU
+    /// memory bandwidth instead — `comm::IterDedup`).
+    pub dedup_saved_bytes: u64,
+    /// Feature stores whose resident set changed at this epoch's barrier
+    /// (0 for static policies).
+    pub stores_updated: usize,
     /// Host-side time breakdown (seconds, summed over the epoch).
     pub sample_seconds: f64,
     pub gather_seconds: f64,
@@ -44,9 +53,12 @@ impl EpochMetrics {
             ("vertices_traversed", Json::num(self.vertices_traversed as f64)),
             ("nvtps", Json::num(self.nvtps)),
             ("beta", Json::num(self.beta)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate)),
             ("local_bytes", Json::num(self.local_bytes as f64)),
             ("host_bytes", Json::num(self.host_bytes as f64)),
             ("f2f_bytes", Json::num(self.f2f_bytes as f64)),
+            ("dedup_saved_bytes", Json::num(self.dedup_saved_bytes as f64)),
+            ("stores_updated", Json::num(self.stores_updated as f64)),
             ("sample_seconds", Json::num(self.sample_seconds)),
             ("gather_seconds", Json::num(self.gather_seconds)),
             ("execute_seconds", Json::num(self.execute_seconds)),
@@ -102,7 +114,14 @@ mod tests {
     fn report_serialises_and_reparses() {
         let report = TrainReport {
             config: Json::obj(vec![("model", Json::str("gcn"))]),
-            epochs: vec![EpochMetrics { epoch: 0, mean_loss: 1.5, ..Default::default() }],
+            epochs: vec![EpochMetrics {
+                epoch: 0,
+                mean_loss: 1.5,
+                cache_hit_rate: 0.5,
+                dedup_saved_bytes: 4096,
+                stores_updated: 2,
+                ..Default::default()
+            }],
             mean_shape: [5.0, 4.0, 3.0, 2.0, 1.0],
         };
         let text = report.to_json().pretty();
@@ -112,5 +131,10 @@ mod tests {
             parsed.get("config").unwrap().req_str("model").unwrap(),
             "gcn"
         );
+        // the new feature-store observability fields survive the roundtrip
+        let e0 = &parsed.get("epochs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e0.req_usize("dedup_saved_bytes").unwrap(), 4096);
+        assert_eq!(e0.req_usize("stores_updated").unwrap(), 2);
+        assert!(e0.get("cache_hit_rate").is_some());
     }
 }

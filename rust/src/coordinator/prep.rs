@@ -23,9 +23,14 @@
 //! Determinism: a task's sampling RNG is keyed by (epoch stream,
 //! partition, per-partition seq); prepared batches carry (iter, tag) and
 //! are reassembled in that order; per-batch [`PrepStats`] are merged at
-//! the barrier in the same order. The loss sequence for a given seed is
-//! therefore bit-identical for any `--host-threads` × `--prefetch-depth`
-//! combination, including the serial path (1, 1).
+//! the barrier in the same order. Prep workers read an **epoch-versioned
+//! residency snapshot** (`Preprocessed::residency_snapshot`) rather than
+//! the live feature stores, so dynamic cache policies — whose
+//! `observe`/`end_epoch` hooks run only on the coordinator at the
+//! barriers — cannot make prepared traffic depend on preparation order.
+//! The loss sequence for a given seed is therefore bit-identical for any
+//! `--host-threads` × `--prefetch-depth` combination, including the
+//! serial path (1, 1).
 
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -33,10 +38,10 @@ use std::time::Instant;
 
 use crate::comm::{CommConfig, FeatureService, Traffic};
 use crate::graph::Dataset;
-use crate::partition::Preprocessed;
 use crate::runtime::BatchBuffers;
 use crate::sampling::{EpochPlan, MiniBatch, Sampler};
 use crate::sched::TwoStageScheduler;
+use crate::store::Residency;
 
 /// One planned unit of host work: sample batch number `seq` of partition
 /// `part` and gather its features against FPGA `fpga`'s store.
@@ -91,6 +96,10 @@ pub struct PreparedBatch {
     pub fpga: usize,
     pub batch: BatchBuffers,
     pub stats: PrepStats,
+    /// The batch's real (unpadded) layer-0 vertex ids — the coordinator's
+    /// barrier pass feeds them to `comm::IterDedup` and to the feature
+    /// store's `observe` hook.
+    pub v0: Vec<u32>,
 }
 
 /// Planning stage: materialise the epoch's full iteration/task schedule.
@@ -143,7 +152,8 @@ pub fn plan_epoch_tasks(
 /// then resumes unwinding (the scope rethrows the original panic).
 pub fn prep_worker(
     data: &Dataset,
-    pre: &Preprocessed,
+    stores: &[Residency],
+    vertex_part: Option<&[u32]>,
     sampler: &mut Sampler,
     comm: CommConfig,
     epoch_stream: u64,
@@ -166,17 +176,14 @@ pub fn prep_worker(
             let sample_seconds = t0.elapsed().as_secs_f64();
 
             let t1 = Instant::now();
-            let (feat0, traffic) = svc.gather(
-                &mb,
-                &pre.stores[task.fpga],
-                pre.vertex_part.as_deref(),
-                task.fpga,
-            );
+            let (feat0, traffic) =
+                svc.gather(&mb, &stores[task.fpga], vertex_part, task.fpga);
             let gather_seconds = t1.elapsed().as_secs_f64();
 
             let stats = PrepStats::measure(&mb, sample_seconds, gather_seconds, traffic);
+            let v0 = mb.v0[..mb.n_v0].to_vec();
             let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
-            PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, batch, stats }
+            PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, batch, stats, v0 }
         }));
         match prepared {
             Ok(pb) => {
@@ -201,7 +208,7 @@ pub fn prep_worker(
 mod tests {
     use super::*;
     use crate::graph::datasets;
-    use crate::partition::{preprocess, Algorithm};
+    use crate::partition::{preprocess, Algorithm, Preprocessed};
     use crate::sampling::{FanoutConfig, WeightMode};
     use crate::util::rng::Rng;
 
@@ -268,14 +275,16 @@ mod tests {
         let mut sampler =
             Sampler::new(fanout, WeightMode::GcnNorm, data.graph.num_vertices(), 0);
         let rx = Mutex::new(task_rx);
+        let snaps = pre.residency_snapshot();
         std::thread::scope(|s| {
             let done_tx = done_tx.clone();
             let rxr = &rx;
             let d = &data;
-            let pr = &pre;
+            let stores = &snaps[..];
+            let vertex_part = pre.vertex_part.as_deref();
             let smp = &mut sampler;
             s.spawn(move || {
-                prep_worker(d, pr, smp, CommConfig::default(), 99, rxr, &done_tx)
+                prep_worker(d, stores, vertex_part, smp, CommConfig::default(), 99, rxr, &done_tx)
             });
         });
         drop(done_tx);
@@ -285,6 +294,7 @@ mod tests {
             assert!(b.stats.vertices_traversed > 0);
             assert!(b.stats.traffic.total_bytes() > 0);
             assert!(b.stats.shape[0] >= b.stats.shape[1]);
+            assert_eq!(b.v0.len(), b.stats.shape[0] as usize, "unpadded v0 travels with the batch");
         }
     }
 }

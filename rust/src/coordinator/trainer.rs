@@ -10,6 +10,13 @@
 //! gradient-sync barrier. All reductions happen in deterministic
 //! (iteration, tag) order, so the loss sequence for a given seed does not
 //! depend on the pipeline configuration.
+//!
+//! Feature-store integration: prep threads gather against an
+//! epoch-versioned residency snapshot; the coordinator runs the
+//! iteration-level fetch-dedup pass (`comm::IterDedup`) and the cache
+//! policy's `observe` hook at the gradient-sync barrier in (iter, tag)
+//! order, and applies `end_epoch` re-ranking at the epoch barrier — so
+//! dynamic policies keep the determinism law intact.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -21,9 +28,10 @@ use super::metrics::{EpochMetrics, TrainReport};
 use super::params::{average_grads, ParamSet, Sgd};
 use super::prep;
 use super::worker::{WorkItem, WorkerPool};
-use crate::comm::{CommConfig, FeatureService};
+use crate::comm::{CommConfig, FeatureService, IterDedup};
 use crate::graph::{datasets, Dataset};
-use crate::partition::{preprocess, Preprocessed};
+use crate::partition::{preprocess_with_policy, Preprocessed};
+use crate::store::{FeatureStore, Residency};
 use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, Sampler, WeightMode};
 use crate::sched::TwoStageScheduler;
@@ -62,10 +70,23 @@ impl Trainer {
         let data = spec.build(cfg.scale_shift, cfg.seed);
         crate::log_info!("dataset: {}", data.summary());
 
-        let pre = preprocess(cfg.algo, &data, cfg.num_fpgas, cfg.cache_ratio, cfg.seed);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.cache_ratio),
+            "cache_ratio must be in [0, 1] (got {})",
+            cfg.cache_ratio
+        );
+        let pre = preprocess_with_policy(
+            cfg.algo,
+            &data,
+            cfg.num_fpgas,
+            cfg.cache_ratio,
+            cfg.cache_policy,
+            cfg.seed,
+        );
         crate::log_info!(
-            "preprocessed with {}: imbalance={:.3} edge_cut={:?}",
+            "preprocessed with {} (cache policy {}): imbalance={:.3} edge_cut={:?}",
             cfg.algo.name(),
+            cfg.cache_policy.name(),
             pre.train_imbalance(),
             pre.edge_cut(&data.graph).map(|c| (c * 1000.0).round() / 1000.0)
         );
@@ -117,13 +138,16 @@ impl Trainer {
         for epoch in 0..self.cfg.epochs {
             let m = self.run_epoch(epoch)?;
             crate::log_info!(
-                "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3}",
+                "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3} | hit {:.3} | dedup {} | {} stores re-ranked",
                 epoch,
                 m.mean_loss,
                 m.wall_seconds,
                 m.iterations,
                 crate::util::stats::si(m.nvtps),
-                m.beta
+                m.beta,
+                m.cache_hit_rate,
+                crate::util::stats::si(m.dedup_saved_bytes as f64),
+                m.stores_updated
             );
             epochs.push(m);
         }
@@ -169,6 +193,15 @@ impl Trainer {
         let mut loss_sum = 0.0f64;
         let mut traffic_total = crate::comm::Traffic::default();
 
+        // epoch-versioned residency snapshot: prep threads read this
+        // immutable copy for the whole epoch while the coordinator drives
+        // the live stores' observe/end_epoch hooks at the barriers — the
+        // determinism law survives dynamic cache policies by construction
+        let snaps: Vec<Residency> = self.pre.residency_snapshot();
+        let row_bytes = self.data.features.bytes_per_vertex();
+        let mut dedup =
+            if cfg.fetch_dedup { Some(IterDedup::new(self.data.graph.num_vertices())) } else { None };
+
         // ---- preparation pool + execution loop ---------------------------
         let (task_tx, task_rx) = mpsc::channel::<prep::PrepTask>();
         let (done_tx, done_rx) = mpsc::channel::<anyhow::Result<prep::PreparedBatch>>();
@@ -186,7 +219,8 @@ impl Trainer {
 
         // disjoint field borrows for the scoped threads vs the coordinator
         let data = &self.data;
-        let pre = &self.pre;
+        let vertex_part = self.pre.vertex_part.as_deref();
+        let stores = &mut self.pre.stores;
         let comm = CommConfig { direct_host_fetch: cfg.direct_host_fetch };
         let pool = &self.pool;
         let samplers = &mut self.samplers;
@@ -199,8 +233,18 @@ impl Trainer {
             for sampler in samplers.iter_mut().take(host_threads) {
                 let task_rx = Arc::clone(&task_rx);
                 let done_tx = done_tx.clone();
+                let snaps = &snaps[..];
                 s.spawn(move || {
-                    prep::prep_worker(data, pre, sampler, comm, epoch_stream, &task_rx, &done_tx)
+                    prep::prep_worker(
+                        data,
+                        snaps,
+                        vertex_part,
+                        sampler,
+                        comm,
+                        epoch_stream,
+                        &task_rx,
+                        &done_tx,
+                    )
                 });
             }
             // coordinator keeps only the receiver: if every prep worker
@@ -229,6 +273,27 @@ impl Trainer {
                 }
                 let mut items = buffered.remove(&i).unwrap_or_default();
                 items.sort_by_key(|b| b.tag);
+
+                // iteration-scoped barrier pass, in (iter, tag) order:
+                // fetch dedup against the epoch snapshot, then feed the
+                // access stream to the cache policy's observe hook
+                if let Some(dd) = dedup.as_mut() {
+                    dd.next_iteration();
+                    for b in items.iter_mut() {
+                        dd.apply(
+                            &b.v0,
+                            &snaps[b.fpga],
+                            row_bytes,
+                            comm,
+                            vertex_part,
+                            b.fpga,
+                            &mut b.stats.traffic,
+                        );
+                    }
+                }
+                for b in &items {
+                    stores[b.fpga].observe(&b.v0);
+                }
 
                 // merge host-side stats in deterministic (iter, tag) order
                 for b in &items {
@@ -275,13 +340,25 @@ impl Trainer {
             Ok(())
         })?;
 
+        // epoch barrier: dynamic policies re-rank their resident sets —
+        // versioning the snapshot the *next* epoch's prep threads will read
+        let mut stores_updated = 0usize;
+        for s in stores.iter_mut() {
+            if s.end_epoch() {
+                stores_updated += 1;
+            }
+        }
+
         m.wall_seconds = t_epoch.elapsed().as_secs_f64();
         m.mean_loss = loss_sum / m.batches.max(1) as f64;
         m.nvtps = m.vertices_traversed as f64 / m.wall_seconds;
         m.local_bytes = traffic_total.local_bytes;
         m.host_bytes = traffic_total.host_bytes;
         m.f2f_bytes = traffic_total.f2f_bytes;
+        m.dedup_saved_bytes = traffic_total.dedup_saved_bytes;
         m.beta = traffic_total.beta();
+        m.cache_hit_rate = traffic_total.hit_rate();
+        m.stores_updated = stores_updated;
         Ok(m)
     }
 
@@ -319,8 +396,12 @@ impl Trainer {
                 break;
             };
             let mb = sampler.sample(&self.data, &targets, part, seq);
-            let (feat0, _) =
-                svc.gather(&mb, &self.pre.stores[part], self.pre.vertex_part.as_deref(), part);
+            let (feat0, _) = svc.gather(
+                &mb,
+                self.pre.stores[part].as_ref(),
+                self.pre.vertex_part.as_deref(),
+                part,
+            );
             let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
             let logits = exe.predict(&self.params.data, &batch)?;
             for r in 0..mb.n_targets {

@@ -40,6 +40,10 @@ pub struct DseResult {
 #[derive(Clone, Debug)]
 pub struct DseWorkload {
     pub shape: BatchShape,
+    /// Local-fetch ratio β (Eq. 7). `api::generate_design` feeds the
+    /// steady-state per-epoch value measured under the configured
+    /// feature-store policy (`perf::experiments::measure_host_policy`);
+    /// the canned paper workloads use the paper's nominal 0.75.
     pub beta: f64,
     pub param_scale: f64,
     pub sampling_s_per_batch: f64,

@@ -29,6 +29,7 @@ pub mod perf;
 pub mod runtime;
 pub mod sampling;
 pub mod sched;
+pub mod store;
 pub mod util;
 
 /// Crate-wide result type.

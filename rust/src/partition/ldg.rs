@@ -10,9 +10,9 @@
 //! already-placed neighbours, discounted by that partition's fill across
 //! all three constraints.
 
-use super::store::Store;
 use super::Preprocessed;
 use crate::graph::Dataset;
+use crate::store::{FeatureStore, Residency};
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
@@ -56,7 +56,7 @@ pub fn preprocess(data: &Dataset, p: usize, seed: u64) -> Preprocessed {
     }
 
     // feature store: rows of own partition
-    let stores: Vec<Store> = (0..p)
+    let stores: Vec<Box<dyn FeatureStore>> = (0..p)
         .map(|i| {
             let mut bits = Bitset::new(n);
             for v in 0..n {
@@ -64,7 +64,7 @@ pub fn preprocess(data: &Dataset, p: usize, seed: u64) -> Preprocessed {
                     bits.set(v);
                 }
             }
-            Store::rows_subset(bits, data.spec.dims.f0)
+            Box::new(Residency::rows_subset(bits, data.spec.dims.f0)) as Box<dyn FeatureStore>
         })
         .collect();
 
@@ -251,11 +251,12 @@ mod tests {
         // store i holds exactly partition i's rows
         for (i, s) in pre.stores.iter().enumerate() {
             let expected = part.iter().filter(|&&x| x as usize == i).count();
-            assert_eq!(s.resident_rows(), Some(expected));
-            assert_eq!(s.dim_fraction(), 1.0);
+            assert_eq!(s.residency().resident_rows(), Some(expected));
+            assert_eq!(s.residency().dim_fraction(), 1.0);
         }
         // stores are disjoint and cover all vertices
-        let total: usize = pre.stores.iter().map(|s| s.resident_rows().unwrap()).sum();
+        let total: usize =
+            pre.stores.iter().map(|s| s.residency().resident_rows().unwrap()).sum();
         assert_eq!(total, d.graph.num_vertices());
     }
 

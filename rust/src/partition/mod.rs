@@ -9,16 +9,19 @@
 //! The outputs that matter downstream are captured by [`Preprocessed`]:
 //! which partition every *training* vertex belongs to (drives mini-batch
 //! counts → workload imbalance → the WB optimization) and each FPGA's
-//! [`store::Store`] (drives the local-fetch ratio β in Eq. 7 → the DC
-//! optimization).
+//! pluggable [`FeatureStore`] (drives the local-fetch ratio β in Eq. 7 →
+//! the DC optimization). Each algorithm emits its Table-1 static store;
+//! [`preprocess_with_policy`] can swap in a dynamic [`CachePolicy`]
+//! (LFU/hotness or sliding-window recency — `crate::store::dynamic`)
+//! that inherits the algorithm's feature-dim range and is re-ranked at
+//! the epoch barrier from observed accesses.
 
 pub mod ldg;
 pub mod p3;
 pub mod pagraph;
-pub mod store;
 
 use crate::graph::Dataset;
-pub use store::Store;
+pub use crate::store::{CachePolicy, FeatureStore, Residency, Rows};
 
 /// Synchronous GNN training algorithm selector (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,8 +60,10 @@ pub struct Preprocessed {
     /// Training target vertices per partition — the sampler draws from
     /// these, so their sizes determine the per-partition mini-batch counts.
     pub train_parts: Vec<Vec<u32>>,
-    /// Per-FPGA feature store (what is resident in FPGA-local DDR).
-    pub stores: Vec<Store>,
+    /// Per-FPGA pluggable feature store (policy + residency state). The
+    /// coordinator drives `observe`/`end_epoch`; everyone else reads an
+    /// epoch-versioned [`residency_snapshot`](Self::residency_snapshot).
+    pub stores: Vec<Box<dyn FeatureStore>>,
 }
 
 impl Preprocessed {
@@ -96,15 +101,23 @@ impl Preprocessed {
         }
         Some(if total == 0 { 0.0 } else { cut as f64 / total as f64 })
     }
+
+    /// Epoch-versioned snapshot of every FPGA's resident set. Prep threads
+    /// read the snapshot (immutable for the whole epoch) while the
+    /// coordinator mutates the stores at the barriers, which is what keeps
+    /// dynamic policies bit-identical across pipeline configurations.
+    pub fn residency_snapshot(&self) -> Vec<Residency> {
+        self.stores.iter().map(|s| s.residency().clone()).collect()
+    }
 }
 
-/// Run the selected algorithm's graph preprocessing (partitioning +
-/// feature storing) for `num_parts` FPGAs.
+/// Run the selected algorithm's graph preprocessing (partitioning + the
+/// algorithm's static Table-1 feature storing) for `num_parts` FPGAs.
 ///
 /// `cache_ratio` is the fraction of |V| whose feature rows fit in one
-/// FPGA's DDR budget for caching-style stores (PaGraph); partition-based
-/// stores (DistDGL) ignore it (each partition's rows are assumed resident,
-/// as in the paper).
+/// FPGA's DDR budget for caching-style stores (PaGraph and the dynamic
+/// policies); partition-based static stores (DistDGL) ignore it (each
+/// partition's rows are assumed resident, as in the paper).
 pub fn preprocess(
     algo: Algorithm,
     data: &Dataset,
@@ -112,12 +125,50 @@ pub fn preprocess(
     cache_ratio: f64,
     seed: u64,
 ) -> Preprocessed {
+    preprocess_with_policy(algo, data, num_parts, cache_ratio, CachePolicy::Static, seed)
+}
+
+/// [`preprocess`] with an explicit caching policy. Dynamic policies
+/// replace the algorithm's static store with a capacity-bounded
+/// (`cache_ratio·|V|` rows) cache that inherits the static store's
+/// feature-dim range and cold-starts from the top-degree rows.
+pub fn preprocess_with_policy(
+    algo: Algorithm,
+    data: &Dataset,
+    num_parts: usize,
+    cache_ratio: f64,
+    policy: CachePolicy,
+    seed: u64,
+) -> Preprocessed {
     assert!(num_parts >= 1, "need at least one partition");
-    match algo {
+    assert!(
+        (0.0..=1.0).contains(&cache_ratio),
+        "cache_ratio must be in [0, 1] (got {cache_ratio})"
+    );
+    let mut pre = match algo {
         Algorithm::DistDgl => ldg::preprocess(data, num_parts, seed),
         Algorithm::PaGraph => pagraph::preprocess(data, num_parts, cache_ratio, seed),
         Algorithm::P3 => p3::preprocess(data, num_parts),
+    };
+    if policy.is_dynamic() {
+        let rank = crate::store::dynamic::degree_rank(data);
+        let n = data.graph.num_vertices();
+        pre.stores = pre
+            .stores
+            .iter()
+            .map(|s| {
+                let r = s.residency();
+                crate::store::dynamic::dynamic_store(
+                    policy,
+                    n,
+                    cache_ratio,
+                    (r.dim_lo, r.dim_hi, r.feat_dim),
+                    rank.clone(),
+                )
+            })
+            .collect();
     }
+    pre
 }
 
 /// Split `vs` round-robin into `p` chunks (helper shared by p3 and tests).
@@ -163,6 +214,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dynamic_policies_are_capacity_bounded_and_inherit_dims() {
+        let d = tiny();
+        let n = d.graph.num_vertices();
+        let ratio = 0.1;
+        let cap = ((n as f64) * ratio).round() as usize;
+        for algo in Algorithm::ALL {
+            for policy in [CachePolicy::Lfu, CachePolicy::Window] {
+                let pre = preprocess_with_policy(algo, &d, 4, ratio, policy, 7);
+                let static_pre = preprocess(algo, &d, 4, ratio, 7);
+                for (s, st) in pre.stores.iter().zip(&static_pre.stores) {
+                    assert_eq!(s.policy(), policy);
+                    assert_eq!(s.residency().resident_rows(), Some(cap), "{algo:?}");
+                    // feature-dim range inherited from the static store
+                    let (r, rs) = (s.residency(), st.residency());
+                    assert_eq!((r.dim_lo, r.dim_hi, r.feat_dim), (rs.dim_lo, rs.dim_hi, rs.feat_dim));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_policy_matches_plain_preprocess() {
+        let d = tiny();
+        let a = preprocess(Algorithm::PaGraph, &d, 2, 0.15, 3);
+        let b = preprocess_with_policy(Algorithm::PaGraph, &d, 2, 0.15, CachePolicy::Static, 3);
+        assert_eq!(a.residency_snapshot(), b.residency_snapshot());
+        assert_eq!(a.train_parts, b.train_parts);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache_ratio")]
+    fn negative_cache_ratio_rejected() {
+        let d = tiny();
+        preprocess(Algorithm::PaGraph, &d, 2, -0.1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache_ratio")]
+    fn cache_ratio_above_one_rejected() {
+        let d = tiny();
+        preprocess(Algorithm::PaGraph, &d, 2, 1.5, 3);
     }
 
     #[test]

@@ -7,20 +7,20 @@
 //! after layer 1 is handled by the coordinator as a special case, exactly
 //! as the paper does (Listing 3, lines 14–19).
 
-use super::store::Store;
 use super::Preprocessed;
 use crate::graph::Dataset;
+use crate::store::{FeatureStore, Residency};
 
 pub fn preprocess(data: &Dataset, p: usize) -> Preprocessed {
     let f0 = data.spec.dims.f0;
     assert!(p <= f0, "P3 needs at least one feature dim per device (p={p}, f0={f0})");
 
     // even dim slices: width ceil/floor mix so they cover [0, f0) exactly
-    let stores: Vec<Store> = (0..p)
+    let stores: Vec<Box<dyn FeatureStore>> = (0..p)
         .map(|i| {
             let lo = i * f0 / p;
             let hi = (i + 1) * f0 / p;
-            Store::dim_slice(lo, hi, f0)
+            Box::new(Residency::dim_slice(lo, hi, f0)) as Box<dyn FeatureStore>
         })
         .collect();
 
@@ -48,7 +48,8 @@ mod tests {
         let pre = preprocess(&d, p);
         let mut covered = vec![false; d.spec.dims.f0];
         for s in &pre.stores {
-            for dim in s.dim_lo..s.dim_hi {
+            let r = s.residency();
+            for dim in r.dim_lo..r.dim_hi {
                 assert!(!covered[dim], "dim {dim} covered twice");
                 covered[dim] = true;
             }
@@ -70,9 +71,10 @@ mod tests {
         let d = datasets::lookup("amazon").unwrap().build(9, 5);
         let pre = preprocess(&d, 4);
         for s in &pre.stores {
-            assert!(s.holds_row(0));
-            assert!(s.holds_row((d.graph.num_vertices() - 1) as u32));
-            assert!((s.dim_fraction() - 0.25).abs() < 0.05);
+            let r = s.residency();
+            assert!(r.holds_row(0));
+            assert!(r.holds_row((d.graph.num_vertices() - 1) as u32));
+            assert!((r.dim_fraction() - 0.25).abs() < 0.05);
         }
     }
 
@@ -81,7 +83,7 @@ mod tests {
         let d = datasets::lookup("ogbn-products").unwrap().build(9, 5); // f0=100
         let pre = preprocess(&d, 3);
         let widths: Vec<usize> =
-            pre.stores.iter().map(|s| s.dim_hi - s.dim_lo).collect();
+            pre.stores.iter().map(|s| s.residency().dim_hi - s.residency().dim_lo).collect();
         assert_eq!(widths.iter().sum::<usize>(), 100);
     }
 

@@ -12,9 +12,9 @@
 //! rows (Listing 2 passes the same X to each FPGA), independent of the
 //! partitioning.
 
-use super::store::Store;
 use super::Preprocessed;
 use crate::graph::Dataset;
+use crate::store::{FeatureStore, Residency};
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
@@ -92,8 +92,12 @@ pub fn preprocess(data: &Dataset, p: usize, cache_ratio: f64, seed: u64) -> Prep
     // ---- feature store: top out-degree cache, same on every FPGA --------
     let cache_rows = ((n as f64) * cache_ratio).round() as usize;
     let cached = top_degree_rows(data, cache_rows);
-    let stores: Vec<Store> =
-        (0..p).map(|_| Store::rows_subset(cached.clone(), data.spec.dims.f0)).collect();
+    let stores: Vec<Box<dyn FeatureStore>> = (0..p)
+        .map(|_| {
+            Box::new(Residency::rows_subset(cached.clone(), data.spec.dims.f0))
+                as Box<dyn FeatureStore>
+        })
+        .collect();
 
     Preprocessed {
         algo: super::Algorithm::PaGraph,
@@ -104,15 +108,13 @@ pub fn preprocess(data: &Dataset, p: usize, cache_ratio: f64, seed: u64) -> Prep
     }
 }
 
-/// Bitmap of the `k` highest-out-degree vertices (ties broken by id, as a
-/// real cache fill from a sorted degree list would).
+/// Bitmap of the `k` highest-out-degree vertices — the first `k` of the
+/// canonical [`crate::store::dynamic::degree_order`], which the dynamic
+/// cache policies also cold-start from (keeping policy sweeps paired).
 pub fn top_degree_rows(data: &Dataset, k: usize) -> Bitset {
-    let g = &data.graph;
-    let n = g.num_vertices();
-    let mut idx: Vec<u32> = (0..n as u32).collect();
-    idx.sort_by_key(|&v| std::cmp::Reverse((g.degree(v), std::cmp::Reverse(v))));
+    let n = data.graph.num_vertices();
     let mut bits = Bitset::new(n);
-    for &v in idx.iter().take(k.min(n)) {
+    for &v in crate::store::dynamic::degree_order(data).iter().take(k.min(n)) {
         bits.set(v as usize);
     }
     bits
@@ -156,19 +158,18 @@ mod tests {
         let pre = preprocess(&d, 4, ratio, 2);
         let expect = ((d.graph.num_vertices() as f64) * ratio).round() as usize;
         for s in &pre.stores {
-            assert_eq!(s.resident_rows(), Some(expect));
+            assert_eq!(s.residency().resident_rows(), Some(expect));
         }
         // identical caches on every FPGA (Listing 2: same X for each FPGA)
-        let first: Vec<usize> = match &pre.stores[0].rows {
-            super::super::store::Rows::Subset(b) => b.iter_ones().collect(),
-            _ => panic!(),
-        };
-        for s in &pre.stores[1..] {
-            let rows: Vec<usize> = match &s.rows {
-                super::super::store::Rows::Subset(b) => b.iter_ones().collect(),
+        let rows_of = |s: &dyn FeatureStore| -> Vec<usize> {
+            match &s.residency().rows {
+                crate::store::Rows::Subset(b) => b.iter_ones().collect(),
                 _ => panic!(),
-            };
-            assert_eq!(rows, first);
+            }
+        };
+        let first = rows_of(pre.stores[0].as_ref());
+        for s in &pre.stores[1..] {
+            assert_eq!(rows_of(s.as_ref()), first);
         }
     }
 
@@ -196,7 +197,7 @@ mod tests {
         let d = data();
         let pre = preprocess(&d, 2, 0.0, 2);
         for s in &pre.stores {
-            assert_eq!(s.resident_rows(), Some(0));
+            assert_eq!(s.residency().resident_rows(), Some(0));
         }
     }
 }

@@ -14,10 +14,11 @@
 use crate::fpga::timing::BatchShape;
 use crate::fpga::DieConfig;
 use crate::graph::datasets::{self, DatasetSpec};
-use crate::partition::{preprocess, Algorithm};
+use crate::partition::{preprocess_with_policy, Algorithm};
 use crate::perf::gpu::{GpuModel, GpuPlatformSpec};
 use crate::perf::{EpochEstimate, PlatformModel, PlatformSpec, Workload};
 use crate::sampling::{FanoutConfig, Sampler, WeightMode};
+use crate::store::{CachePolicy, FeatureStore};
 use crate::util::rng::Rng;
 
 /// Paper evaluation parameters (§7.1).
@@ -36,8 +37,14 @@ pub const SAMPLER_THREADS: f64 = 8.0;
 /// Host-side measurements from the real partitioner + sampler.
 #[derive(Clone, Debug)]
 pub struct HostMeasurement {
-    /// Mean local-fetch ratio against the executing FPGA's store.
+    /// Steady-state local-fetch ratio against the executing FPGA's store
+    /// — the **last epoch's** measured β (for static policies every epoch
+    /// measures the same residency; for dynamic policies this is the
+    /// re-ranked cache). This is what parameterises Eq. 7.
     pub beta: f64,
+    /// Per-epoch measured β, in epoch order (`beta_epochs[0]` is the
+    /// cold-start / static value).
+    pub beta_epochs: Vec<f64>,
     /// Per-partition share of training batches (sums to 1).
     pub part_shares: Vec<f64>,
     /// Dedup factors vs the no-dedup nominal: [v0, v1] (v2 == 1).
@@ -46,7 +53,9 @@ pub struct HostMeasurement {
     pub sampling_s: f64,
 }
 
-/// Measure β / imbalance / dedup on a scaled instance of `spec`.
+/// Measure β / imbalance / dedup on a scaled instance of `spec` with the
+/// algorithm's static Table-1 store (one epoch — equivalent to
+/// [`measure_host_policy`] at `CachePolicy::Static`).
 ///
 /// `shift` trades fidelity for time; 4 (=1/16 scale) keeps the largest
 /// graph (~16M edges) tractable while preserving degree skew.
@@ -59,8 +68,36 @@ pub fn measure_host(
     n_batches: usize,
     seed: u64,
 ) -> anyhow::Result<HostMeasurement> {
+    measure_host_policy(spec, algo, model, p, shift, n_batches, seed, CachePolicy::Static, 0.2, 1)
+}
+
+/// [`measure_host`] generalised over the feature-store policy: runs
+/// `epochs` simulated epochs of `n_batches` batches each against the
+/// epoch-versioned residency snapshot, feeding every batch's layer-0
+/// access stream to the store's `observe` hook and applying `end_epoch`
+/// re-ranking between epochs — exactly the coordinator's barrier
+/// protocol, so the measured per-epoch β matches what a real training run
+/// reports in `EpochMetrics`.
+///
+/// The sampled batches depend only on `(seed, epoch, batch)` — never on
+/// the policy — so sweeping policies at equal `cache_ratio` is a paired
+/// comparison.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_host_policy(
+    spec: &DatasetSpec,
+    algo: Algorithm,
+    model: &str,
+    p: usize,
+    shift: u32,
+    n_batches: usize,
+    seed: u64,
+    policy: CachePolicy,
+    cache_ratio: f64,
+    epochs: usize,
+) -> anyhow::Result<HostMeasurement> {
+    anyhow::ensure!(epochs >= 1, "need at least one measurement epoch");
     let data = spec.build(shift, seed);
-    let pre = preprocess(algo, &data, p, 0.2, seed);
+    let mut pre = preprocess_with_policy(algo, &data, p, cache_ratio, policy, seed);
     let mode = WeightMode::for_model(model)?;
     // Scale-matched batch size: dedup depends on the ratio of the sampled
     // neighborhood capacity to |V|, so shrinking the batch with the graph
@@ -71,42 +108,55 @@ pub fn measure_host(
     let mut sampler = Sampler::new(cfg, mode, data.graph.num_vertices(), seed ^ 0x5a);
 
     let mut rng = Rng::new(seed ^ 0xE0);
-    let mut local = 0u64;
-    let mut total = 0u64;
     let mut v0_sum = 0f64;
     let mut v1_sum = 0f64;
     let mut t_sample = 0f64;
+    let mut batches_measured = 0usize;
     let dims = cfg.dims();
     let row_bytes = data.features.bytes_per_vertex();
-    for b in 0..n_batches {
-        let part = b % p;
-        let tp = &pre.train_parts[part];
-        if tp.is_empty() {
-            continue;
+    let mut beta_epochs = Vec::with_capacity(epochs);
+    for epoch in 0..epochs {
+        let snaps = pre.residency_snapshot();
+        let vertex_part = pre.vertex_part.as_deref();
+        let mut local = 0u64;
+        let mut total = 0u64;
+        for b in 0..n_batches {
+            let part = b % p;
+            let tp = &pre.train_parts[part];
+            if tp.is_empty() {
+                continue;
+            }
+            // random contiguous window of targets
+            let start = rng.index(tp.len().saturating_sub(cfg.batch_size).max(1));
+            let end = (start + cfg.batch_size).min(tp.len());
+            let t0 = std::time::Instant::now();
+            let mb = sampler.sample(&data, &tp[start..end], part, epoch * n_batches + b);
+            t_sample += t0.elapsed().as_secs_f64();
+            let traffic = crate::comm::feature_traffic(
+                &mb,
+                &snaps[part],
+                row_bytes,
+                crate::comm::CommConfig::default(),
+                vertex_part,
+                part,
+            );
+            pre.stores[part].observe(&mb.v0[..mb.n_v0]);
+            local += traffic.local_bytes;
+            total += traffic.total_bytes();
+            v0_sum += mb.n_v0 as f64 / dims.v0_cap as f64;
+            v1_sum += mb.n_v1 as f64 / dims.v1_cap as f64;
+            batches_measured += 1;
         }
-        // random contiguous window of targets
-        let start = rng.index(tp.len().saturating_sub(cfg.batch_size).max(1));
-        let end = (start + cfg.batch_size).min(tp.len());
-        let t0 = std::time::Instant::now();
-        let mb = sampler.sample(&data, &tp[start..end], part, b);
-        t_sample += t0.elapsed().as_secs_f64();
-        let traffic = crate::comm::feature_traffic(
-            &mb,
-            &pre.stores[part],
-            row_bytes,
-            crate::comm::CommConfig::default(),
-            pre.vertex_part.as_deref(),
-            part,
-        );
-        local += traffic.local_bytes;
-        total += traffic.total_bytes();
-        v0_sum += mb.n_v0 as f64 / dims.v0_cap as f64;
-        v1_sum += mb.n_v1 as f64 / dims.v1_cap as f64;
+        beta_epochs.push(if total == 0 { 1.0 } else { local as f64 / total as f64 });
+        for s in pre.stores.iter_mut() {
+            s.end_epoch();
+        }
     }
-    let n = n_batches as f64;
+    let n = batches_measured.max(1) as f64;
     let share_total: f64 = pre.train_parts.iter().map(|t| t.len() as f64).sum();
     Ok(HostMeasurement {
-        beta: if total == 0 { 1.0 } else { local as f64 / total as f64 },
+        beta: *beta_epochs.last().expect("epochs >= 1"),
+        beta_epochs,
         part_shares: pre
             .train_parts
             .iter()
@@ -224,14 +274,41 @@ impl AblationRow {
     }
 }
 
-/// Table 7: DistDGL, throughput with {baseline, +WB, +WB+DC}.
+/// Table 7: DistDGL, throughput with {baseline, +WB, +WB+DC}, under the
+/// static Table-1 store (the paper's configuration).
 pub fn table7(p: usize, shift: u32, n_batches: usize) -> anyhow::Result<Vec<AblationRow>> {
+    table7_with_policy(p, shift, n_batches, CachePolicy::Static, 0.2, 1)
+}
+
+/// [`table7`] with the Eq. 7 β measured under an explicit cache policy:
+/// `epochs` simulated epochs drive the policy's observe/end_epoch loop
+/// and the steady-state (last-epoch) β parameterises the platform model,
+/// so the ablation reflects what a dynamic cache actually delivers.
+pub fn table7_with_policy(
+    p: usize,
+    shift: u32,
+    n_batches: usize,
+    policy: CachePolicy,
+    cache_ratio: f64,
+    epochs: usize,
+) -> anyhow::Result<Vec<AblationRow>> {
     let mut spec4 = PlatformSpec::paper_4fpga();
     spec4.num_fpgas = p;
     let fpga = PlatformModel::new(spec4, BEST_DIE);
     let mut rows = Vec::new();
     for spec in &datasets::REGISTRY {
-        let host = measure_host(spec, Algorithm::DistDgl, "gcn", p, shift, n_batches, 17)?;
+        let host = measure_host_policy(
+            spec,
+            Algorithm::DistDgl,
+            "gcn",
+            p,
+            shift,
+            n_batches,
+            17,
+            policy,
+            cache_ratio,
+            epochs,
+        )?;
         for model in ["gcn", "sage"] {
             let run = |wb, dc| {
                 fpga.epoch(&build_workload(spec, Algorithm::DistDgl, model, &host, p, wb, dc))
@@ -293,10 +370,65 @@ mod tests {
         let spec = datasets::lookup("reddit").unwrap();
         let h = measure_host(&spec, Algorithm::DistDgl, "gcn", 4, 7, 4, 3).unwrap();
         assert!(h.beta > 0.0 && h.beta <= 1.0, "beta={}", h.beta);
+        assert_eq!(h.beta_epochs, vec![h.beta], "static single-epoch measurement");
         assert!((h.part_shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         assert!(h.dedup[0] > 0.0 && h.dedup[0] <= 1.0, "dedup0={}", h.dedup[0]);
         assert!(h.dedup[1] > 0.0 && h.dedup[1] <= 1.0, "dedup1={}", h.dedup[1]);
         assert!(h.sampling_s > 0.0);
+    }
+
+    #[test]
+    fn policy_sweep_is_paired_and_records_per_epoch_beta() {
+        let spec = datasets::lookup("reddit").unwrap();
+        let st = measure_host_policy(
+            &spec, Algorithm::PaGraph, "gcn", 4, 7, 8, 17, CachePolicy::Static, 0.1, 2,
+        )
+        .unwrap();
+        let lfu = measure_host_policy(
+            &spec, Algorithm::PaGraph, "gcn", 4, 7, 8, 17, CachePolicy::Lfu, 0.1, 2,
+        )
+        .unwrap();
+        assert_eq!(st.beta_epochs.len(), 2);
+        assert_eq!(lfu.beta_epochs.len(), 2);
+        // identical batches + identical cold-start residency ⇒ epoch 0 is
+        // bit-identical across policies (the sweep is a paired comparison)
+        assert_eq!(st.beta_epochs[0], lfu.beta_epochs[0]);
+        for b in lfu.beta_epochs.iter().chain(&st.beta_epochs) {
+            assert!((0.0..=1.0).contains(b), "beta {b} out of range");
+        }
+    }
+
+    #[test]
+    fn lfu_policy_does_not_lose_to_static_pagraph() {
+        // The micro_host cache-policy sweep asserts the strict win at
+        // bench scale; tier-1 pins the invariant that re-ranking from
+        // observed counts never ends up behind the degree-ranked static
+        // fill at equal capacity, and wins strictly somewhere.
+        let mut strict = 0;
+        for key in ["reddit", "ogbn-products"] {
+            let spec = datasets::lookup(key).unwrap();
+            let st = measure_host_policy(
+                &spec, Algorithm::PaGraph, "gcn", 4, 7, 16, 17, CachePolicy::Static, 0.1, 3,
+            )
+            .unwrap();
+            let lfu = measure_host_policy(
+                &spec, Algorithm::PaGraph, "gcn", 4, 7, 16, 17, CachePolicy::Lfu, 0.1, 3,
+            )
+            .unwrap();
+            // tiny tolerance: boundary rows are re-ranked from finite
+            // observations, so allow sampling noise without letting a
+            // real regression through
+            assert!(
+                lfu.beta >= st.beta - 5e-3,
+                "{key}: lfu beta {} < static beta {}",
+                lfu.beta,
+                st.beta
+            );
+            if lfu.beta > st.beta {
+                strict += 1;
+            }
+        }
+        assert!(strict >= 1, "LFU re-ranking changed nothing on any dataset");
     }
 
     #[test]

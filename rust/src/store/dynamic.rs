@@ -1,0 +1,322 @@
+//! Dynamic caching policies: residency re-ranked at the epoch barrier
+//! from accesses observed at the gradient-sync barrier.
+//!
+//! Both policies are capacity-bounded (`cache_ratio·|V|` rows, like
+//! PaGraph's static cache) and start from the same top-out-degree fill, so
+//! a policy sweep at equal `cache_ratio` is a paired comparison: epoch 0
+//! is identical to the static cache, later epochs differ only by the
+//! re-ranking. Tie-breaks always fall back to the initial degree rank and
+//! the update is a strict-total-order top-k selection, so `end_epoch` is
+//! deterministic regardless of selection internals.
+
+use super::{CachePolicy, FeatureStore, Residency, Rows};
+use crate::graph::Dataset;
+use crate::util::bitset::Bitset;
+
+/// THE canonical cache-fill ordering: vertices in degree-descending
+/// order, ties by ascending id. Shared by PaGraph's static cache
+/// (`partition::pagraph::top_degree_rows` takes its first k) and the
+/// dynamic policies' cold start / tie-breaks — one definition, so the
+/// paired-comparison guarantee (dynamic cold start == static fill at
+/// equal capacity) cannot drift.
+pub fn degree_order(data: &Dataset) -> Vec<u32> {
+    let g = &data.graph;
+    let mut idx: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    idx.sort_by_key(|&v| std::cmp::Reverse((g.degree(v), std::cmp::Reverse(v))));
+    idx
+}
+
+/// `rank[v]` = position of `v` in [`degree_order`], used as the
+/// cold-start priority and the deterministic tie-break.
+pub fn degree_rank(data: &Dataset) -> Vec<u32> {
+    let order = degree_order(data);
+    let mut rank = vec![0u32; order.len()];
+    for (i, &v) in order.iter().enumerate() {
+        rank[v as usize] = i as u32;
+    }
+    rank
+}
+
+/// Membership bitmap of the `k` hottest rows under `hotter_first` (a
+/// strict total order ⇒ the selected set is unique/deterministic).
+fn select_top_rows<F>(n: usize, k: usize, hotter_first: F) -> Bitset
+where
+    F: FnMut(&u32, &u32) -> std::cmp::Ordering,
+{
+    let mut bits = Bitset::new(n);
+    let k = k.min(n);
+    if k == 0 {
+        return bits;
+    }
+    if k == n {
+        for v in 0..n {
+            bits.set(v);
+        }
+        return bits;
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.select_nth_unstable_by(k - 1, hotter_first);
+    for &v in &idx[..k] {
+        bits.set(v as usize);
+    }
+    bits
+}
+
+/// Build a capacity-bounded store for `policy`, inheriting the dim range
+/// `(dim_lo, dim_hi, feat_dim)` of the algorithm's static residency (full
+/// width for DistDGL/PaGraph, the slice for P3) and cold-starting from
+/// the top-degree rows.
+pub fn dynamic_store(
+    policy: CachePolicy,
+    num_vertices: usize,
+    cache_ratio: f64,
+    dim: (usize, usize, usize),
+    rank: Vec<u32>,
+) -> Box<dyn FeatureStore> {
+    assert_eq!(rank.len(), num_vertices);
+    let capacity = ((num_vertices as f64) * cache_ratio).round() as usize;
+    let rows =
+        select_top_rows(num_vertices, capacity, |&a, &b| rank[a as usize].cmp(&rank[b as usize]));
+    let residency =
+        Residency { rows: Rows::Subset(rows), dim_lo: dim.0, dim_hi: dim.1, feat_dim: dim.2 };
+    match policy {
+        CachePolicy::Static => Box::new(residency),
+        CachePolicy::Lfu => Box::new(LfuStore::new(residency, capacity, rank)),
+        CachePolicy::Window => Box::new(WindowStore::new(residency, capacity, rank)),
+    }
+}
+
+/// LFU/hotness cache: per-vertex access counts accumulated at the
+/// gradient-sync barrier; at the epoch barrier the `capacity` rows with
+/// the highest counts (tie: degree rank) become resident and all counts
+/// halve, so hotness tracks recent epochs instead of the whole run.
+pub struct LfuStore {
+    residency: Residency,
+    capacity: usize,
+    counts: Vec<u64>,
+    rank: Vec<u32>,
+    dirty: bool,
+}
+
+impl LfuStore {
+    pub fn new(residency: Residency, capacity: usize, rank: Vec<u32>) -> LfuStore {
+        let n = rank.len();
+        LfuStore { residency, capacity, counts: vec![0; n], rank, dirty: false }
+    }
+
+    /// Current access counts (diagnostics/tests).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+impl FeatureStore for LfuStore {
+    fn residency(&self) -> &Residency {
+        &self.residency
+    }
+
+    fn policy(&self) -> CachePolicy {
+        CachePolicy::Lfu
+    }
+
+    fn observe(&mut self, v0: &[u32]) {
+        for &v in v0 {
+            self.counts[v as usize] += 1;
+        }
+        self.dirty = true;
+    }
+
+    fn end_epoch(&mut self) -> bool {
+        if !self.dirty {
+            return false;
+        }
+        self.dirty = false;
+        let (counts, rank) = (&self.counts, &self.rank);
+        let rows = select_top_rows(counts.len(), self.capacity, |&a, &b| {
+            let (a, b) = (a as usize, b as usize);
+            counts[b].cmp(&counts[a]).then(rank[a].cmp(&rank[b]))
+        });
+        for c in &mut self.counts {
+            *c >>= 1;
+        }
+        let changed = self.residency.rows != Rows::Subset(rows.clone());
+        if changed {
+            self.residency.rows = Rows::Subset(rows);
+        }
+        changed
+    }
+}
+
+/// Sliding-window recency cache: a global access clock stamps every
+/// observed row; at the epoch barrier the `capacity` most recently
+/// accessed rows (tie: degree rank for never-seen rows) become resident —
+/// the window slides with the clock, so rows that stop being sampled age
+/// out even if they were hot early in training.
+pub struct WindowStore {
+    residency: Residency,
+    capacity: usize,
+    /// Clock value at each vertex's last access (0 = never accessed).
+    last_seen: Vec<u64>,
+    clock: u64,
+    rank: Vec<u32>,
+    dirty: bool,
+}
+
+impl WindowStore {
+    pub fn new(residency: Residency, capacity: usize, rank: Vec<u32>) -> WindowStore {
+        let n = rank.len();
+        WindowStore { residency, capacity, last_seen: vec![0; n], clock: 0, rank, dirty: false }
+    }
+}
+
+impl FeatureStore for WindowStore {
+    fn residency(&self) -> &Residency {
+        &self.residency
+    }
+
+    fn policy(&self) -> CachePolicy {
+        CachePolicy::Window
+    }
+
+    fn observe(&mut self, v0: &[u32]) {
+        for &v in v0 {
+            self.clock += 1;
+            self.last_seen[v as usize] = self.clock;
+        }
+        self.dirty = true;
+    }
+
+    fn end_epoch(&mut self) -> bool {
+        if !self.dirty {
+            return false;
+        }
+        self.dirty = false;
+        let (seen, rank) = (&self.last_seen, &self.rank);
+        let rows = select_top_rows(seen.len(), self.capacity, |&a, &b| {
+            let (a, b) = (a as usize, b as usize);
+            seen[b].cmp(&seen[a]).then(rank[a].cmp(&rank[b]))
+        });
+        let changed = self.residency.rows != Rows::Subset(rows.clone());
+        if changed {
+            self.residency.rows = Rows::Subset(rows);
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Identity rank: vertex id = priority (lower id = hotter prior).
+    fn id_rank(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    fn resident_set(s: &dyn FeatureStore) -> Vec<usize> {
+        match &s.residency().rows {
+            Rows::Subset(b) => b.iter_ones().collect(),
+            Rows::All => panic!("expected a subset residency"),
+        }
+    }
+
+    #[test]
+    fn lfu_cold_start_follows_rank_then_reranks_to_observed_hot_rows() {
+        let n = 100;
+        let res = Residency::rows_subset(
+            select_top_rows(n, 10, |&a, &b| a.cmp(&b)),
+            16,
+        );
+        let mut s = LfuStore::new(res, 10, id_rank(n));
+        assert_eq!(resident_set(&s), (0..10).collect::<Vec<_>>());
+
+        // barrier observations: rows 50..58 are the hot set
+        for _ in 0..3 {
+            s.observe(&(50..58).collect::<Vec<u32>>());
+        }
+        assert!(s.end_epoch(), "resident set must change");
+        // 8 observed rows + 2 fillers from the degree-rank prior
+        assert_eq!(resident_set(&s), vec![0, 1, 50, 51, 52, 53, 54, 55, 56, 57]);
+        // counts aged: 3 observations halved to 1
+        assert_eq!(s.counts()[50], 1);
+        assert_eq!(s.counts()[0], 0);
+    }
+
+    #[test]
+    fn lfu_without_observations_is_a_no_op() {
+        let n = 20;
+        let res =
+            Residency::rows_subset(select_top_rows(n, 5, |&a, &b| a.cmp(&b)), 8);
+        let before = res.clone();
+        let mut s = LfuStore::new(res, 5, id_rank(n));
+        assert!(!s.end_epoch());
+        assert_eq!(*s.residency(), before);
+    }
+
+    #[test]
+    fn lfu_update_is_deterministic_across_instances() {
+        let n = 64;
+        let mk = || {
+            LfuStore::new(
+                Residency::rows_subset(select_top_rows(n, 8, |&a, &b| a.cmp(&b)), 4),
+                8,
+                id_rank(n),
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for batch in [[3u32, 9, 9, 40], [40, 40, 9, 63], [1, 1, 1, 1]] {
+            a.observe(&batch);
+            b.observe(&batch);
+        }
+        a.end_epoch();
+        b.end_epoch();
+        assert_eq!(resident_set(&a), resident_set(&b));
+    }
+
+    #[test]
+    fn window_keeps_most_recent_rows() {
+        let n = 30;
+        let res = Residency::rows_subset(select_top_rows(n, 3, |&a, &b| a.cmp(&b)), 8);
+        let mut s = WindowStore::new(res, 3, id_rank(n));
+        s.observe(&[10, 11, 12]);
+        s.observe(&[20, 21, 22]);
+        assert!(s.end_epoch());
+        // the window slid past 10..12; only the latest 3 accesses remain
+        assert_eq!(resident_set(&s), vec![20, 21, 22]);
+        // next epoch: fresh accesses displace the old window
+        s.observe(&[5, 6, 7]);
+        assert!(s.end_epoch());
+        assert_eq!(resident_set(&s), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn capacity_edges_zero_and_full() {
+        let n = 16;
+        let z = dynamic_store(CachePolicy::Lfu, n, 0.0, (0, 4, 4), id_rank(n));
+        assert_eq!(z.residency().resident_rows(), Some(0));
+        let f = dynamic_store(CachePolicy::Window, n, 1.0, (0, 4, 4), id_rank(n));
+        assert_eq!(f.residency().resident_rows(), Some(n));
+    }
+
+    #[test]
+    fn dynamic_store_cold_start_matches_pagraph_fill() {
+        let d = crate::graph::datasets::lookup("reddit").unwrap().build(8, 5);
+        let n = d.graph.num_vertices();
+        let ratio = 0.1;
+        let k = ((n as f64) * ratio).round() as usize;
+        let want: Vec<usize> =
+            crate::partition::pagraph::top_degree_rows(&d, k).iter_ones().collect();
+        for policy in [CachePolicy::Lfu, CachePolicy::Window] {
+            let s = dynamic_store(policy, n, ratio, (0, 4, 4), degree_rank(&d));
+            assert_eq!(resident_set(s.as_ref()), want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn dim_range_is_inherited() {
+        let s = dynamic_store(CachePolicy::Lfu, 8, 0.5, (2, 6, 16), id_rank(8));
+        let r = s.residency();
+        assert_eq!((r.dim_lo, r.dim_hi, r.feat_dim), (2, 6, 16));
+        assert_eq!(r.dim_fraction(), 0.25);
+    }
+}

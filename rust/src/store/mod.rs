@@ -1,0 +1,147 @@
+//! Pluggable feature-store subsystem.
+//!
+//! The paper's feature-storing stage (Table 1) decides which vertex rows
+//! are resident in each FPGA's DDR — the β of Eq. 7 and the dominant PCIe
+//! traffic term. The seed hard-coded it as a static, preprocess-time
+//! artifact; here it is a first-class policy:
+//!
+//! - [`Residency`] — the immutable resident-set snapshot the comm layer
+//!   reads (rows bitmap × feature-dim range). One snapshot is taken per
+//!   epoch; all prep threads read the same version, so the PR-1
+//!   determinism law (bit-identical loss/Traffic across `--host-threads`
+//!   × `--prefetch-depth`) is preserved by construction.
+//! - [`FeatureStore`] — the policy trait: a residency query plus a
+//!   deterministic `observe`/`end_epoch` update hook. `observe` is called
+//!   by the coordinator at the gradient-sync barrier in (iter, tag)
+//!   order; `end_epoch` applies the policy's re-ranking at the epoch
+//!   barrier, versioning the next epoch's snapshot.
+//! - [`CachePolicy`] — policy selector (`--cache-policy`,
+//!   `HitGnn::feature_storing(policy, ratio)`): the algorithm-default
+//!   static store, an LFU/hotness cache re-ranked from observed access
+//!   counts (HyScale-GNN-style dynamic caching), or a sliding-window
+//!   recency cache.
+
+pub mod dynamic;
+pub mod residency;
+
+pub use dynamic::{LfuStore, WindowStore};
+pub use residency::{Residency, Rows};
+
+/// Feature-store caching policy selector (Table 2's `Feature_Storing()`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// The algorithm's static Table-1 store: DistDGL partition-resident
+    /// rows, PaGraph top-out-degree cache, P3 feature-dim slice.
+    Static,
+    /// LFU/hotness cache: capacity `cache_ratio·|V|` rows, re-ranked at
+    /// the epoch barrier from access counts observed at the gradient-sync
+    /// barrier (counts age by halving so hotness tracks recent epochs).
+    Lfu,
+    /// Sliding-window recency cache: the `cache_ratio·|V|` most recently
+    /// accessed rows, the window advancing with the global access clock.
+    Window,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<CachePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Ok(CachePolicy::Static),
+            "lfu" | "hotness" => Ok(CachePolicy::Lfu),
+            "window" | "recency" => Ok(CachePolicy::Window),
+            _ => anyhow::bail!("unknown cache policy '{s}' (static|lfu|window)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Static => "static",
+            CachePolicy::Lfu => "lfu",
+            CachePolicy::Window => "window",
+        }
+    }
+
+    /// Does this policy rewrite its resident set at the epoch barrier?
+    pub fn is_dynamic(&self) -> bool {
+        !matches!(self, CachePolicy::Static)
+    }
+
+    pub const ALL: [CachePolicy; 3] =
+        [CachePolicy::Static, CachePolicy::Lfu, CachePolicy::Window];
+}
+
+/// One FPGA's pluggable feature store: the residency snapshot the comm
+/// layer reads plus the policy's deterministic update hooks.
+///
+/// Contract (DESIGN.md §Feature-store subsystem):
+/// - `residency()` is immutable between `end_epoch` calls; callers that
+///   need read access off the coordinator thread clone it (an
+///   epoch-versioned snapshot) rather than sharing the store.
+/// - `observe` must only be called from the coordinator at the
+///   gradient-sync barrier, in (iter, tag) order — policies may be
+///   order-sensitive (recency), and this ordering is what keeps dynamic
+///   runs bit-identical across pipeline configurations.
+/// - `end_epoch` applies the policy update at the epoch barrier and
+///   returns whether the resident set changed.
+pub trait FeatureStore: Send + Sync {
+    /// The resident-set snapshot backing this epoch's reads.
+    fn residency(&self) -> &Residency;
+
+    /// The policy implemented by this store.
+    fn policy(&self) -> CachePolicy;
+
+    /// Record one prepared batch's layer-0 vertex accesses (deduplicated
+    /// vertex ids, real rows only). Default: no-op (static stores).
+    fn observe(&mut self, _v0: &[u32]) {}
+
+    /// Apply the policy's residency update at the epoch barrier; returns
+    /// true if the resident set changed. Default: no-op.
+    fn end_epoch(&mut self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        self.policy().name()
+    }
+}
+
+/// A bare [`Residency`] is itself a valid (static) feature store.
+impl FeatureStore for Residency {
+    fn residency(&self) -> &Residency {
+        self
+    }
+
+    fn policy(&self) -> CachePolicy {
+        CachePolicy::Static
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitset::Bitset;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in CachePolicy::ALL {
+            assert_eq!(CachePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(CachePolicy::parse("hotness").unwrap(), CachePolicy::Lfu);
+        assert_eq!(CachePolicy::parse("recency").unwrap(), CachePolicy::Window);
+        assert!(CachePolicy::parse("bogus").is_err());
+        assert!(!CachePolicy::Static.is_dynamic());
+        assert!(CachePolicy::Lfu.is_dynamic() && CachePolicy::Window.is_dynamic());
+    }
+
+    #[test]
+    fn residency_is_a_static_store() {
+        let mut b = Bitset::new(8);
+        b.set(2);
+        let mut s = Residency::rows_subset(b, 16);
+        assert_eq!(s.policy(), CachePolicy::Static);
+        assert_eq!(FeatureStore::name(&s), "static");
+        let before = s.residency().clone();
+        s.observe(&[0, 1, 2, 3]);
+        assert!(!s.end_epoch(), "static store never changes");
+        assert_eq!(*s.residency(), before);
+    }
+}

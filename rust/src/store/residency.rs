@@ -1,14 +1,17 @@
-//! Per-FPGA feature store: which (vertex-row, feature-dim) rectangles of
-//! the global feature matrix X are resident in that FPGA's local DDR.
+//! The residency snapshot: which (vertex-row, feature-dim) rectangles of
+//! the global feature matrix X are resident in one FPGA's local DDR.
 //!
-//! The comm layer consults the store for every vertex an FPGA aggregates
-//! from; resident bytes are charged to DDR bandwidth, missing bytes to the
-//! PCIe host-fetch path (Eq. 7's β split).
+//! A [`Residency`] is immutable for the duration of one epoch — the comm
+//! layer consults it for every vertex an FPGA aggregates from (resident
+//! bytes are charged to DDR bandwidth, missing bytes to the PCIe
+//! host-fetch path — Eq. 7's β split), while the owning
+//! [`FeatureStore`](super::FeatureStore) policy may swap the resident set
+//! at the epoch barrier.
 
 use crate::util::bitset::Bitset;
 
 /// Which feature rows an FPGA holds locally.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Rows {
     /// Every vertex's row is present (P3: all rows, but only a dim slice).
     All,
@@ -16,9 +19,9 @@ pub enum Rows {
     Subset(Bitset),
 }
 
-/// One FPGA's feature store.
-#[derive(Clone, Debug)]
-pub struct Store {
+/// One FPGA's resident-set snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Residency {
     pub rows: Rows,
     /// Held feature dimension range `[dim_lo, dim_hi)`; full width except
     /// for P3's dimension partitioning.
@@ -28,19 +31,19 @@ pub struct Store {
     pub feat_dim: usize,
 }
 
-impl Store {
-    /// Store holding full-width rows for a vertex subset.
-    pub fn rows_subset(members: Bitset, feat_dim: usize) -> Store {
-        Store { rows: Rows::Subset(members), dim_lo: 0, dim_hi: feat_dim, feat_dim }
+impl Residency {
+    /// Residency holding full-width rows for a vertex subset.
+    pub fn rows_subset(members: Bitset, feat_dim: usize) -> Residency {
+        Residency { rows: Rows::Subset(members), dim_lo: 0, dim_hi: feat_dim, feat_dim }
     }
 
-    /// Store holding a feature-dim slice of every row (P3).
-    pub fn dim_slice(dim_lo: usize, dim_hi: usize, feat_dim: usize) -> Store {
+    /// Residency holding a feature-dim slice of every row (P3).
+    pub fn dim_slice(dim_lo: usize, dim_hi: usize, feat_dim: usize) -> Residency {
         assert!(dim_lo < dim_hi && dim_hi <= feat_dim);
-        Store { rows: Rows::All, dim_lo, dim_hi, feat_dim }
+        Residency { rows: Rows::All, dim_lo, dim_hi, feat_dim }
     }
 
-    /// Does this store hold vertex `v`'s row (in its dim range)?
+    /// Does this residency hold vertex `v`'s row (in its dim range)?
     #[inline]
     pub fn holds_row(&self, v: u32) -> bool {
         match &self.rows {
@@ -74,7 +77,7 @@ impl Store {
         }
     }
 
-    /// Approximate DDR bytes this store occupies.
+    /// Approximate DDR bytes this residency occupies.
     pub fn footprint_bytes(&self, num_vertices: usize, bytes_per_full_row: usize) -> usize {
         let rows = self.resident_rows().unwrap_or(num_vertices);
         (rows as f64 * bytes_per_full_row as f64 * self.dim_fraction()).round() as usize
@@ -86,11 +89,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn subset_store_membership() {
+    fn subset_residency_membership() {
         let mut b = Bitset::new(10);
         b.set(3);
         b.set(7);
-        let s = Store::rows_subset(b, 100);
+        let s = Residency::rows_subset(b, 100);
         assert!(s.holds_row(3));
         assert!(!s.holds_row(4));
         assert_eq!(s.local_bytes(3, 400), 400);
@@ -99,8 +102,8 @@ mod tests {
     }
 
     #[test]
-    fn dim_slice_store_partial_bytes() {
-        let s = Store::dim_slice(0, 25, 100);
+    fn dim_slice_residency_partial_bytes() {
+        let s = Residency::dim_slice(0, 25, 100);
         assert!(s.holds_row(42));
         assert_eq!(s.dim_fraction(), 0.25);
         assert_eq!(s.local_bytes(42, 400), 100);
@@ -113,15 +116,15 @@ mod tests {
         for i in 0..100 {
             b.set(i);
         }
-        let s = Store::rows_subset(b, 64);
+        let s = Residency::rows_subset(b, 64);
         assert_eq!(s.footprint_bytes(1000, 256), 100 * 256);
-        let p3 = Store::dim_slice(0, 16, 64);
+        let p3 = Residency::dim_slice(0, 16, 64);
         assert_eq!(p3.footprint_bytes(1000, 256), 1000 * 64);
     }
 
     #[test]
     #[should_panic]
     fn dim_slice_validates_range() {
-        Store::dim_slice(10, 10, 64);
+        Residency::dim_slice(10, 10, 64);
     }
 }

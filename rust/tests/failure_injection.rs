@@ -200,7 +200,7 @@ fn zero_capacity_cache_still_trains_accounting() {
     let mb = s.sample(&d, &pre.train_parts[0][..16], 0, 0);
     let t = hitgnn::comm::feature_traffic(
         &mb,
-        &pre.stores[0],
+        pre.stores[0].as_ref(),
         d.features.bytes_per_vertex(),
         hitgnn::comm::CommConfig::default(),
         pre.vertex_part.as_deref(),

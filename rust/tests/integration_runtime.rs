@@ -41,7 +41,7 @@ fn tiny_setup(
     let mb = sampler.sample(&data, &targets, 0, 0);
     mb.validate().unwrap();
     let svc = FeatureService::new(&data.features, CommConfig::default());
-    let (feat0, _) = svc.gather(&mb, &pre.stores[0], pre.vertex_part.as_deref(), 0);
+    let (feat0, _) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
     let batch = BatchBuffers::from_minibatch(&mb, feat0, entry.dims.f0);
     (data, pre, mb, batch, entry)
 }

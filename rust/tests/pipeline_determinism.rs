@@ -7,6 +7,7 @@
 
 use hitgnn::coordinator::{TrainConfig, Trainer};
 use hitgnn::partition::Algorithm;
+use hitgnn::store::CachePolicy;
 
 fn base_cfg() -> TrainConfig {
     TrainConfig {
@@ -24,21 +25,34 @@ fn base_cfg() -> TrainConfig {
     }
 }
 
-/// (per-iteration losses across epochs, traffic totals, batches, iters).
-fn run(host_threads: usize, prefetch_depth: usize) -> (Vec<f64>, (u64, u64, u64), usize, usize) {
-    let mut cfg = base_cfg();
+/// (per-iteration losses across epochs, traffic totals incl. dedup,
+/// batches, iters).
+fn run_cfg(
+    mut cfg: TrainConfig,
+    host_threads: usize,
+    prefetch_depth: usize,
+) -> (Vec<f64>, (u64, u64, u64, u64), usize, usize) {
     cfg.host_threads = host_threads;
     cfg.prefetch_depth = prefetch_depth;
     let mut t = Trainer::new(cfg).unwrap();
     let r = t.run().unwrap();
     let losses: Vec<f64> = r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect();
-    let traffic = r.epochs.iter().fold((0u64, 0u64, 0u64), |acc, e| {
-        (acc.0 + e.local_bytes, acc.1 + e.host_bytes, acc.2 + e.f2f_bytes)
+    let traffic = r.epochs.iter().fold((0u64, 0u64, 0u64, 0u64), |acc, e| {
+        (
+            acc.0 + e.local_bytes,
+            acc.1 + e.host_bytes,
+            acc.2 + e.f2f_bytes,
+            acc.3 + e.dedup_saved_bytes,
+        )
     });
     let batches: usize = r.epochs.iter().map(|e| e.batches).sum();
     let iters: usize = r.epochs.iter().map(|e| e.iterations).sum();
     t.shutdown();
     (losses, traffic, batches, iters)
+}
+
+fn run(host_threads: usize, prefetch_depth: usize) -> (Vec<f64>, (u64, u64, u64, u64), usize, usize) {
+    run_cfg(base_cfg(), host_threads, prefetch_depth)
 }
 
 #[test]
@@ -56,6 +70,64 @@ fn loss_sequence_invariant_across_pipeline_configs() {
         assert_eq!(base.2, got.2, "batch count diverged at ({ht}, {d})");
         assert_eq!(base.3, got.3, "iteration count diverged at ({ht}, {d})");
     }
+}
+
+#[test]
+fn dynamic_policy_runs_stay_bit_identical_across_pipeline_configs() {
+    // ISSUE 2 acceptance: dynamic feature-store policies (epoch-snapshot
+    // reads, barrier-ordered observe, epoch-barrier re-rank) plus the
+    // iteration-level fetch dedup must preserve the determinism law.
+    for policy in [CachePolicy::Lfu, CachePolicy::Window] {
+        let cfg = || {
+            let mut c = base_cfg();
+            c.cache_policy = policy;
+            c.cache_ratio = 0.15;
+            c
+        };
+        let base = run_cfg(cfg(), 1, 1);
+        assert!(!base.0.is_empty(), "no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()));
+        for (ht, d) in [(1, 3), (4, 1), (4, 3)] {
+            let got = run_cfg(cfg(), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "{policy:?}: loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+            );
+            assert_eq!(base.1, got.1, "{policy:?}: traffic diverged at ({ht}, {d})");
+            assert_eq!(base.2, got.2, "{policy:?}: batch count diverged at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "{policy:?}: iteration count diverged at ({ht}, {d})");
+        }
+    }
+}
+
+#[test]
+fn fetch_dedup_only_moves_host_bytes_and_defaults_on() {
+    // PaGraph: every FPGA shares the same degree-ranked cache, so the
+    // per-FPGA batches of one iteration miss on the same hot vertices —
+    // the canonical case iteration-level dedup exists for. (DistDGL at
+    // p=2 has provably disjoint miss sets: each FPGA only misses the
+    // other partition's rows.)
+    let cfg = || {
+        let mut c = base_cfg();
+        c.algo = Algorithm::PaGraph;
+        c.cache_ratio = 0.15;
+        c
+    };
+    let mut no_dedup = cfg();
+    no_dedup.fetch_dedup = false;
+    let off = run_cfg(no_dedup, 4, 2);
+    let on = run_cfg(cfg(), 4, 2);
+    // identical work either way
+    assert_eq!(off.0, on.0, "dedup must not touch the numerics");
+    assert_eq!(off.2, on.2);
+    let (l_off, h_off, f_off, s_off) = off.1;
+    let (l_on, h_on, f_on, s_on) = on.1;
+    assert_eq!(s_off, 0, "--no-dedup records no savings");
+    assert_eq!(l_off, l_on);
+    assert_eq!(f_off, f_on);
+    // conservation: dedup reclassifies host bytes, byte-for-byte
+    assert_eq!(h_off, h_on + s_on);
+    assert!(s_on > 0, "expected iteration-level dedup savings");
 }
 
 #[test]

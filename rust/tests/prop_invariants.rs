@@ -4,10 +4,11 @@
 use hitgnn::fpga::timing::{BatchShape, TimingModel};
 use hitgnn::fpga::{DieConfig, ResourceModel, U250};
 use hitgnn::graph::datasets;
-use hitgnn::partition::{preprocess, Algorithm};
+use hitgnn::partition::{preprocess, preprocess_with_policy, Algorithm};
 use hitgnn::perf::{PlatformModel, PlatformSpec, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
 use hitgnn::sched::TwoStageScheduler;
+use hitgnn::store::{CachePolicy, FeatureStore};
 use hitgnn::util::json::Json;
 use hitgnn::util::proptest::{check, require};
 use hitgnn::util::rng::Rng;
@@ -130,7 +131,7 @@ fn sampled_batches_always_validate() {
 // ---------------------------------------------------------------------
 
 #[test]
-fn traffic_conserves_bytes_for_all_algorithms() {
+fn traffic_conserves_bytes_for_all_algorithms_and_policies() {
     let d = datasets::lookup("ogbn-products").unwrap().build(8, 77);
     check("traffic conservation", 12, |rng| {
         let p = 2 + rng.index(4);
@@ -139,7 +140,12 @@ fn traffic_conserves_bytes_for_all_algorithms() {
             1 => Algorithm::PaGraph,
             _ => Algorithm::P3,
         };
-        let pre = preprocess(algo, &d, p, 0.3, rng.next_u64());
+        let policy = match rng.index(3) {
+            0 => CachePolicy::Static,
+            1 => CachePolicy::Lfu,
+            _ => CachePolicy::Window,
+        };
+        let mut pre = preprocess_with_policy(algo, &d, p, 0.3, policy, rng.next_u64());
         let cfg = FanoutConfig { batch_size: 32, k1: 4, k2: 3 };
         let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
         let part = rng.index(p);
@@ -148,21 +154,108 @@ fn traffic_conserves_bytes_for_all_algorithms() {
         }
         let mb = s.sample(&d, &pre.train_parts[part][..32], part, 0);
         let dc = rng.bool(0.5);
+        let row = d.features.bytes_per_vertex();
+        let expect = (mb.n_v0 * row) as u64;
+        let comm = hitgnn::comm::CommConfig { direct_host_fetch: dc };
+        let conserves = |label: &str, t: &hitgnn::comm::Traffic| {
+            require(
+                t.total_bytes() == expect,
+                &format!("{label} {algo:?}/{policy:?}: {} != {expect}", t.total_bytes()),
+            )?;
+            require((0.0..=1.0).contains(&t.beta()), "beta in [0,1]")?;
+            require((0.0..=1.0).contains(&t.hit_rate()), "hit rate in [0,1]")?;
+            if dc {
+                require(t.f2f_bytes == 0, "DC on → no f2f")?;
+            }
+            Ok(())
+        };
+        let snaps = pre.residency_snapshot();
         let t = hitgnn::comm::feature_traffic(
-            &mb,
-            &pre.stores[part],
-            d.features.bytes_per_vertex(),
-            hitgnn::comm::CommConfig { direct_host_fetch: dc },
-            pre.vertex_part.as_deref(),
-            part,
+            &mb, &snaps[part], row, comm, pre.vertex_part.as_deref(), part,
         );
-        let expect = (mb.n_v0 * d.features.bytes_per_vertex()) as u64;
-        require(t.total_bytes() == expect, &format!("{} != {expect}", t.total_bytes()))?;
-        let beta = t.beta();
-        require((0.0..=1.0).contains(&beta), "beta in [0,1]")?;
-        if dc {
-            require(t.f2f_bytes == 0, "DC on → no f2f")?;
+        conserves("cold", &t)?;
+        // drive the dynamic path: observe + end_epoch, then the re-ranked
+        // residency must still conserve bytes
+        pre.stores[part].observe(&mb.v0[..mb.n_v0]);
+        for st in pre.stores.iter_mut() {
+            st.end_epoch();
         }
+        let snaps2 = pre.residency_snapshot();
+        let t2 = hitgnn::comm::feature_traffic(
+            &mb, &snaps2[part], row, comm, pre.vertex_part.as_deref(), part,
+        );
+        conserves("re-ranked", &t2)?;
+        if policy.is_dynamic() {
+            // a capacity-bounded dynamic cache stays capacity-bounded
+            let cap = ((d.graph.num_vertices() as f64) * 0.3).round() as usize;
+            require(
+                snaps2[part].resident_rows() == Some(cap),
+                &format!("capacity drifted: {:?} != {cap}", snaps2[part].resident_rows()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn iteration_dedup_conserves_bytes_for_all_policies() {
+    let d = datasets::lookup("yelp").unwrap().build(8, 31);
+    check("dedup conservation", 12, |rng| {
+        let p = 2 + rng.index(3);
+        let algo = match rng.index(3) {
+            0 => Algorithm::DistDgl,
+            1 => Algorithm::PaGraph,
+            _ => Algorithm::P3,
+        };
+        let policy = match rng.index(3) {
+            0 => CachePolicy::Static,
+            1 => CachePolicy::Lfu,
+            _ => CachePolicy::Window,
+        };
+        let pre = preprocess_with_policy(algo, &d, p, 0.2, policy, rng.next_u64());
+        let cfg = FanoutConfig { batch_size: 24, k1: 4, k2: 3 };
+        let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
+        let dc = rng.bool(0.5);
+        let comm = hitgnn::comm::CommConfig { direct_host_fetch: dc };
+        let row = d.features.bytes_per_vertex();
+        let snaps = pre.residency_snapshot();
+        let mut dd = hitgnn::comm::IterDedup::new(d.graph.num_vertices());
+        dd.next_iteration();
+        // one iteration: a batch per FPGA, dedup applied in tag order
+        let mut saved_total = 0u64;
+        let mut host_total = 0u64;
+        for fpga in 0..p {
+            let tp = &pre.train_parts[fpga];
+            if tp.len() < 24 {
+                continue;
+            }
+            let mb = s.sample(&d, &tp[..24], fpga, 0);
+            let base = hitgnn::comm::feature_traffic(
+                &mb, &snaps[fpga], row, comm, pre.vertex_part.as_deref(), fpga,
+            );
+            let mut t = base;
+            dd.apply(
+                &mb.v0[..mb.n_v0],
+                &snaps[fpga],
+                row,
+                comm,
+                pre.vertex_part.as_deref(),
+                fpga,
+                &mut t,
+            );
+            // dedup only reclassifies host-path bytes; everything else and
+            // the per-batch total are conserved
+            require(t.total_bytes() == base.total_bytes(), "total conserved")?;
+            require(t.local_bytes == base.local_bytes, "local untouched")?;
+            require(t.f2f_bytes == base.f2f_bytes, "f2f untouched (DC semantics)")?;
+            require(
+                t.host_bytes + t.dedup_saved_bytes == base.host_bytes,
+                "moved bytes come from the host term only",
+            )?;
+            host_total += base.host_bytes;
+            saved_total += t.dedup_saved_bytes;
+        }
+        require(saved_total <= host_total, "cannot save more than was host-fetched")?;
         Ok(())
     });
 }
