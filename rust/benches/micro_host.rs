@@ -5,11 +5,14 @@
 
 use hitgnn::comm::{CommConfig, FeatureService};
 use hitgnn::coordinator::Trainer;
+use hitgnn::fpga::parse_fleet;
+use hitgnn::fpga::timing::BatchShape;
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
-use hitgnn::perf::experiments::measure_host_policy;
+use hitgnn::perf::experiments::{measure_host_policy, table7_fleet};
+use hitgnn::perf::{FleetModel, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
-use hitgnn::sched::TwoStageScheduler;
+use hitgnn::sched::{SchedMode, TwoStageScheduler};
 use hitgnn::store::CachePolicy;
 use hitgnn::util::bench::{black_box, Bench, Table};
 use hitgnn::util::json::Json;
@@ -101,7 +104,116 @@ fn main() {
     b.finish();
 
     cache_policy_sweep();
+    scheduler_sweep();
     pipeline_sweep();
+}
+
+/// Scheduler sweep (ISSUE 3 acceptance): simulated epoch makespan-seconds
+/// on heterogeneous fleets under {no WB, batch-count WB, cost-aware WB}.
+/// The fleets mix full U250s with half/quarter-populated cards; the batch
+/// profiles have the stage-2 tails where assignment policy matters
+/// (batch-count hands extras to idle devices in index order — i.e. to the
+/// slow cards first on the `u250-half:2,u250:2` fleet — while cost-aware
+/// assignment picks the least-estimated-finish-time device). Asserts the
+/// cost-aware makespan is strictly below batch-count on every profile.
+fn scheduler_sweep() {
+    println!("\n=== bench: scheduler sweep (heterogeneous fleets, modeled makespan-seconds) ===");
+    let spec = datasets::lookup("ogbn-products").unwrap();
+    let shape = BatchShape::nominal(
+        1024.0,
+        25.0,
+        10.0,
+        [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
+    );
+    let base_w = |batches_per_part: Vec<usize>, wb: bool| Workload {
+        shape,
+        beta: 0.75,
+        param_scale: 1.0,
+        sampling_s_per_batch: 2e-3,
+        batches_per_part,
+        workload_balancing: wb,
+        direct_host_fetch: true,
+        extra_pcie_bytes_per_batch: 0.0,
+        prefetch: false,
+    };
+    // (fleet, per-partition batch counts): tail-heavy profiles — the long
+    // partitions live on *fast* devices, so stage 2 has extras to place
+    let cases: [(&str, Vec<usize>); 2] = [
+        ("u250-half:2,u250:2", vec![6, 6, 20, 6]),
+        ("u250:2,u250-quarter:2", vec![20, 20, 6, 6]),
+    ];
+    let mut t = Table::new(&[
+        "fleet",
+        "batches/part",
+        "no WB (s)",
+        "batch-count WB (s)",
+        "cost WB (s)",
+        "cost vs batch-count",
+    ]);
+    for (fleet_spec, counts) in cases {
+        let fm = FleetModel::new(parse_fleet(fleet_spec).unwrap(), 205.0);
+        let off = fm.epoch(&base_w(counts.clone(), false), SchedMode::BatchCount);
+        let bc = fm.epoch(&base_w(counts.clone(), true), SchedMode::BatchCount);
+        let ca = fm.epoch(&base_w(counts.clone(), true), SchedMode::Cost);
+        assert!(
+            ca.makespan_seconds < bc.makespan_seconds,
+            "{fleet_spec}: cost-aware WB must strictly reduce makespan-seconds \
+             (cost {} !< batch-count {})",
+            ca.makespan_seconds,
+            bc.makespan_seconds
+        );
+        assert!(
+            ca.makespan_seconds <= off.makespan_seconds,
+            "{fleet_spec}: cost-aware WB worse than no WB"
+        );
+        t.row(&[
+            fleet_spec.to_string(),
+            format!("{counts:?}"),
+            format!("{:.4}", off.makespan_seconds),
+            format!("{:.4}", bc.makespan_seconds),
+            format!("{:.4}", ca.makespan_seconds),
+            format!("{:+.2}%", (ca.makespan_seconds / bc.makespan_seconds - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("  cost-aware WB strictly below batch-count WB on every fleet ✓");
+
+    // Table-7 experiment path on the half fleet: measured host statistics
+    // (β, dedup, sampling) per dataset, engineered tail profile
+    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let fleet = parse_fleet("u250-half:2,u250:2").unwrap();
+    let profile = [6usize, 6, 20, 6];
+    let rows = table7_fleet(&fleet, 205.0, shift, 8, Some(&profile[..])).expect("table7_fleet");
+    let mut t = Table::new(&[
+        "Data-Model",
+        "no WB (s)",
+        "batch-count WB (s)",
+        "cost WB (s)",
+        "cost gain",
+    ]);
+    let mut strict = 0usize;
+    for r in &rows {
+        if r.makespan_cost_s < r.makespan_batch_s {
+            strict += 1;
+        }
+        t.row(&[
+            format!("{}-{}", r.dataset, r.model.to_uppercase()),
+            format!("{:.4}", r.makespan_base_s),
+            format!("{:.4}", r.makespan_batch_s),
+            format!("{:.4}", r.makespan_cost_s),
+            format!("{:.2}%", r.cost_gain_pct()),
+        ]);
+    }
+    t.print();
+    assert_eq!(
+        strict,
+        rows.len(),
+        "cost-aware WB must strictly reduce makespan-seconds on every measured row"
+    );
+    println!("=== end bench: scheduler sweep ===");
 }
 
 /// Cache-policy sweep (ISSUE 2 acceptance): per-epoch measured β for the

@@ -35,7 +35,7 @@ use std::path::Path;
 use crate::coordinator::{TrainConfig, TrainReport, Trainer};
 use crate::dse::{DseEngine, DseWorkload};
 use crate::fpga::timing::BatchShape;
-use crate::fpga::{DieConfig, FpgaSpec};
+use crate::fpga::{DeviceSpec, DieConfig, FpgaSpec};
 use crate::graph::datasets;
 use crate::partition::Algorithm;
 use crate::perf::PlatformSpec;
@@ -57,6 +57,9 @@ pub struct HitGnn {
     num_fpgas: usize,
     pcie_gbs: f64,
     cpu_mem_gbs: f64,
+    /// Heterogeneous fleet (per-device metadata); overrides the
+    /// homogeneous `fpga`/`num_fpgas`/`pcie_gbs` trio when set.
+    fleet: Option<Vec<DeviceSpec>>,
     seed: u64,
 }
 
@@ -75,6 +78,7 @@ impl Default for HitGnn {
             num_fpgas: 4,
             pcie_gbs: 16.0,
             cpu_mem_gbs: 205.0,
+            fleet: None,
             seed: 42,
         }
     }
@@ -139,6 +143,19 @@ impl HitGnn {
         self
     }
 
+    /// `Platform_Metadata()` for a heterogeneous fleet: one
+    /// [`DeviceSpec`] per FPGA (mixed generations, partially populated
+    /// dies, per-device PCIe shares — e.g. `fpga::parse_fleet(
+    /// "u250:2,u250-half:2")`). The DSE engine then optimises a die
+    /// configuration per device kind and the trainer schedules with the
+    /// fleet's cost model.
+    pub fn platform(mut self, fleet: Vec<DeviceSpec>, cpu_mem_gbs: f64) -> Self {
+        self.num_fpgas = fleet.len();
+        self.fleet = Some(fleet);
+        self.cpu_mem_gbs = cpu_mem_gbs;
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -169,14 +186,19 @@ impl HitGnn {
             "feature_storing(): cache_ratio must be in [0, 1] (got {})",
             self.cache_ratio
         );
+        if let Some(fleet) = &self.fleet {
+            anyhow::ensure!(!fleet.is_empty(), "platform(): fleet needs at least one device");
+            anyhow::ensure!(
+                fleet.len() == self.num_fpgas,
+                "platform(): fleet has {} devices but num_fpgas is {} (platform_metadata() \
+                 after platform() overrode the count)",
+                fleet.len(),
+                self.num_fpgas
+            );
+        }
+        anyhow::ensure!(self.num_fpgas >= 1, "platform needs at least one FPGA");
         let spec = datasets::lookup(&dataset)?;
 
-        let platform = PlatformSpec {
-            num_fpgas: self.num_fpgas,
-            fpga: self.fpga,
-            pcie_gbs: self.pcie_gbs,
-            cpu_mem_gbs: self.cpu_mem_gbs,
-        };
         // Eq. 7's β, measured (per-epoch) on a scaled instance under the
         // configured feature-storing policy — the steady-state value feeds
         // the DSE engine's workload instead of a hard-coded constant.
@@ -193,9 +215,7 @@ impl HitGnn {
             if self.cache_policy.is_dynamic() { 2 } else { 1 },
         )?
         .beta;
-        // accelerator generator: DSE over this dataset's dims
-        let engine = DseEngine::new(platform);
-        let dse = engine.explore(&[DseWorkload {
+        let workload = DseWorkload {
             shape: BatchShape::nominal(
                 1024.0,
                 25.0,
@@ -205,14 +225,47 @@ impl HitGnn {
             beta,
             param_scale: if model == "sage" { 2.0 } else { 1.0 },
             sampling_s_per_batch: 2e-3,
-        }])?;
+        };
+        // accelerator generator: DSE over this dataset's dims — per
+        // device kind on an explicit fleet, classic Algorithm 4 otherwise
+        let (platform, accelerator, fleet, estimated_nvtps) = match &self.fleet {
+            Some(devices) => {
+                let res =
+                    DseEngine::explore_fleet(devices, self.cpu_mem_gbs, &[workload], 16)?;
+                let first = res.devices[0];
+                let platform = PlatformSpec {
+                    num_fpgas: res.devices.len(),
+                    fpga: first.fpga,
+                    pcie_gbs: first.pcie_gbs,
+                    cpu_mem_gbs: self.cpu_mem_gbs,
+                };
+                (platform, first.die, res.devices, res.throughput)
+            }
+            None => {
+                let platform = PlatformSpec {
+                    num_fpgas: self.num_fpgas,
+                    fpga: self.fpga,
+                    pcie_gbs: self.pcie_gbs,
+                    cpu_mem_gbs: self.cpu_mem_gbs,
+                };
+                let dse = DseEngine::new(platform).explore(&[workload])?;
+                let devices = vec![
+                    DeviceSpec::custom(self.fpga, dse.best.die, self.pcie_gbs);
+                    self.num_fpgas
+                ];
+                (platform, dse.best.die, devices, dse.best.throughput)
+            }
+        };
 
-        // software generator: the host-program configuration
+        // software generator: the host-program configuration (the
+        // scheduler runs cost-aware on the generated fleet by default)
         let train = TrainConfig {
             dataset,
             model,
             algo: self.algo,
             num_fpgas: self.num_fpgas,
+            fleet: Some(fleet.clone()),
+            cpu_mem_gbs: self.cpu_mem_gbs,
             scale_shift: self.scale_shift,
             cache_policy: self.cache_policy,
             cache_ratio: self.cache_ratio,
@@ -222,8 +275,9 @@ impl HitGnn {
 
         Ok(Design {
             platform,
-            accelerator: dse.best.die,
-            estimated_nvtps: dse.best.throughput,
+            accelerator,
+            fleet,
+            estimated_nvtps,
             train,
             trained: RefCell::new(None),
         })
@@ -234,8 +288,11 @@ impl HitGnn {
 /// train (`Start_training()`) and save (`Save_model()`).
 pub struct Design {
     pub platform: PlatformSpec,
-    /// Per-die accelerator configuration chosen by the DSE engine.
+    /// Per-die accelerator configuration chosen by the DSE engine (the
+    /// first device's on a heterogeneous fleet).
     pub accelerator: DieConfig,
+    /// Per-device metadata with each device's DSE-chosen die.
+    pub fleet: Vec<DeviceSpec>,
     pub estimated_nvtps: f64,
     pub train: TrainConfig,
     trained: RefCell<Option<crate::coordinator::params::ParamSet>>,
@@ -340,6 +397,38 @@ mod tests {
         assert_eq!(d.train.cache_policy, CachePolicy::Window);
         assert_eq!(d.train.cache_ratio, 0.1);
         assert!(d.estimated_nvtps > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_platform_generates_per_kind_design() {
+        let fleet = crate::fpga::parse_fleet("u250:1,u250-half:1").unwrap();
+        let d = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .platform(fleet, 205.0)
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.train.num_fpgas, 2);
+        assert_eq!(d.fleet.len(), 2);
+        assert_eq!(d.fleet[0].kind, "u250");
+        assert_eq!(d.fleet[1].kind, "u250-half");
+        assert!(d.estimated_nvtps > 0.0);
+        // the generated host program carries the fleet + cost scheduling
+        let devs = d.train.device_fleet();
+        assert_eq!(devs[1].fpga.dies, 2);
+        assert_eq!(d.train.sched, crate::sched::SchedMode::Cost);
+        assert_eq!(d.accelerator, d.fleet[0].die);
+    }
+
+    #[test]
+    fn homogeneous_design_still_carries_a_fleet() {
+        let d = HitGnn::new()
+            .load_input_graph("ogbn-products", 6)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.fleet.len(), 4);
+        assert!(d.fleet.iter().all(|dev| dev.die == d.accelerator));
     }
 
     #[test]

@@ -4,7 +4,8 @@ use crate::dse::{paper_dse_workloads, DseEngine};
 use crate::fpga::DieConfig;
 use crate::graph::datasets;
 use crate::partition::Algorithm;
-use crate::perf::{PlatformModel, PlatformSpec, Workload};
+use crate::perf::{FleetModel, PlatformModel, PlatformSpec, Workload};
+use crate::sched::SchedMode;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
 use crate::util::stats::si;
@@ -26,6 +27,16 @@ TRAIN OPTIONS:
     --dataset <reddit|yelp|amazon|ogbn-products>   (default ogbn-products)
     --model <gcn|sage>           --algo <distdgl|pagraph|p3>
     --fpgas <p>                  --epochs <n>
+    --fleet <spec>               heterogeneous fleet, comma-separated
+                                 kind:count over u250 | u250-half |
+                                 u250-quarter | u250-shared (e.g.
+                                 u250:2,u250-half:2); implies --fpgas
+    --sched <batch-count|cost>   stage-2 assignment: Algorithm 3's
+                                 batch-count balancing or least-
+                                 estimated-finish-time under the fleet
+                                 cost model (default cost)
+    --cpu-mem <GB/s>             host CPU memory bandwidth for the
+                                 scheduler cost model (default 205)
     --lr <f>                     --momentum <f>
     --scale-shift <s>            graph scaled to |V|/2^s (default 4)
     --cache-ratio <f>            cache fraction of |V|, in [0, 1] (default 0.2)
@@ -49,9 +60,12 @@ DSE OPTIONS:
     --m-step <k>                 update-PE sweep granularity (default 16)
 
 SIMULATE OPTIONS:
-    --dataset --model --algo --fpgas --no-wb --no-dc as above
+    --dataset --model --algo --fpgas --fleet --sched --cpu-mem --no-wb --no-dc
+                                 as above
     --beta <f>                   local-fetch ratio (default 0.75)
     --batch <B> --k1 <k> --k2 <k>  mini-batch configuration (1024/25/10)
+    (with --fleet the estimate runs the per-device fleet model and also
+     reports the epoch makespan-seconds under both scheduler modes)
 ";
 
 /// Entry point used by main.rs; returns the process exit code.
@@ -135,7 +149,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let dataset = args.str("dataset", "ogbn-products");
     let model = args.str("model", "gcn");
     let _algo = Algorithm::parse(&args.str("algo", "distdgl"))?;
-    let p: usize = args.num("fpgas", 4)?;
+    let (fleet, p) = super::config::fleet_args(args, 4)?;
+    let sched = SchedMode::parse(&args.str("sched", "cost"))?;
+    let cpu_mem_gbs: f64 = args.num("cpu-mem", 205.0)?;
     let beta: f64 = args.num("beta", 0.75)?;
     let batch: f64 = args.num("batch", 1024.0)?;
     let k1: f64 = args.num("k1", 25.0)?;
@@ -147,6 +163,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let spec = datasets::lookup(&dataset)?;
     let mut plat = PlatformSpec::paper_4fpga();
     plat.num_fpgas = p;
+    plat.cpu_mem_gbs = cpu_mem_gbs;
     let model_scale = if model == "sage" { 2.0 } else { 1.0 };
     let shape = crate::fpga::timing::BatchShape::nominal(
         batch,
@@ -164,17 +181,47 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         workload_balancing: wb,
         direct_host_fetch: dc,
         extra_pcie_bytes_per_batch: 0.0,
-            prefetch: false,
+        prefetch: false,
     };
-    let pm = PlatformModel::new(plat, DieConfig { n: 2, m: 512 });
-    let est = pm.epoch(&w);
     let mut t = Table::new(&["metric", "value"]);
-    t.row(&["epoch time (s)".into(), format!("{:.3}", est.epoch_s)]);
-    t.row(&["iterations".into(), est.iterations.to_string()]);
-    t.row(&["throughput (NVTPS)".into(), si(est.nvtps)]);
-    t.row(&["BW efficiency (NVTPS/(GB/s))".into(), si(est.bw_efficiency)]);
-    t.row(&["per-batch GNN time (ms)".into(), format!("{:.3}", est.batch_gnn_s * 1e3)]);
-    t.row(&["gradient sync (ms)".into(), format!("{:.3}", est.gradient_sync_s * 1e3)]);
+    if let Some(devices) = fleet {
+        // heterogeneous path: per-device fleet model, scheduler-aware
+        let fm = FleetModel::new(devices, plat.cpu_mem_gbs);
+        let est = fm.epoch(&w, sched);
+        let cost = fm.cost_model(&w);
+        t.row(&["scheduler mode".into(), sched.name().to_string()]);
+        t.row(&["epoch time (s)".into(), format!("{:.3}", est.epoch_s)]);
+        t.row(&["iterations".into(), est.iterations.to_string()]);
+        t.row(&["throughput (NVTPS)".into(), si(est.nvtps)]);
+        t.row(&["makespan (batch units)".into(), est.makespan_batches.to_string()]);
+        t.row(&[
+            format!("makespan (s), {} WB", sched.name()),
+            format!("{:.3}", est.makespan_seconds),
+        ]);
+        for mode in SchedMode::ALL {
+            if mode == sched {
+                continue; // already printed from est
+            }
+            let e = fm.epoch(&w, mode);
+            t.row(&[
+                format!("makespan (s), {} WB", mode.name()),
+                format!("{:.3}", e.makespan_seconds),
+            ]);
+        }
+        t.row(&["gradient sync (ms)".into(), format!("{:.3}", est.gradient_sync_s * 1e3)]);
+        let per_dev: Vec<String> =
+            cost.batch_s.iter().map(|s| format!("{:.2}", s * 1e3)).collect();
+        t.row(&["per-device batch time (ms)".into(), per_dev.join(" / ")]);
+    } else {
+        let pm = PlatformModel::new(plat, DieConfig { n: 2, m: 512 });
+        let est = pm.epoch(&w);
+        t.row(&["epoch time (s)".into(), format!("{:.3}", est.epoch_s)]);
+        t.row(&["iterations".into(), est.iterations.to_string()]);
+        t.row(&["throughput (NVTPS)".into(), si(est.nvtps)]);
+        t.row(&["BW efficiency (NVTPS/(GB/s))".into(), si(est.bw_efficiency)]);
+        t.row(&["per-batch GNN time (ms)".into(), format!("{:.3}", est.batch_gnn_s * 1e3)]);
+        t.row(&["gradient sync (ms)".into(), format!("{:.3}", est.gradient_sync_s * 1e3)]);
+    }
     t.print();
     Ok(())
 }
@@ -234,6 +281,21 @@ mod tests {
     fn info_and_simulate_run() {
         run(&Args::parse(["info"])).unwrap();
         run(&Args::parse(["simulate", "--dataset", "reddit", "--fpgas", "4"])).unwrap();
+    }
+
+    #[test]
+    fn simulate_accepts_fleet_and_sched() {
+        run(&Args::parse([
+            "simulate", "--dataset", "reddit", "--fleet", "u250-half:2,u250:2",
+        ]))
+        .unwrap();
+        run(&Args::parse([
+            "simulate", "--fleet", "u250:2", "--sched", "batch-count",
+        ]))
+        .unwrap();
+        // fleet/fpgas mismatch is rejected
+        assert!(run(&Args::parse(["simulate", "--fleet", "u250:2", "--fpgas", "3"])).is_err());
+        assert!(run(&Args::parse(["simulate", "--fleet", "gpu:2"])).is_err());
     }
 
     #[test]

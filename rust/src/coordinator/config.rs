@@ -2,7 +2,9 @@
 
 use std::path::PathBuf;
 
+use crate::fpga::{self, DeviceSpec};
 use crate::partition::Algorithm;
+use crate::sched::SchedMode;
 use crate::store::CachePolicy;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -16,6 +18,23 @@ pub struct TrainConfig {
     pub algo: Algorithm,
     /// Simulated FPGAs (= partitions = workers).
     pub num_fpgas: usize,
+    /// Per-device platform metadata (`--fleet u250:2,u250-half:2`).
+    /// `None` = `num_fpgas` identical paper U250s; when set, its length
+    /// must equal `num_fpgas` (FPGA *i* executes partition *i* in
+    /// stage 1). Heterogeneity affects the scheduler's cost model and the
+    /// makespan metrics — execution itself is simulated on CPU workers.
+    pub fleet: Option<Vec<DeviceSpec>>,
+    /// Stage-2 assignment mode: Algorithm 3's batch-count balancing or
+    /// least-estimated-finish-time under the fleet cost model
+    /// (`--sched batch-count|cost`). Identical plans on homogeneous
+    /// fleets; paired (same batches per iteration) on heterogeneous ones.
+    pub sched: SchedMode,
+    /// Host CPU memory bandwidth (GB/s) for the scheduler cost model —
+    /// the host-fetch path saturates at `cpu_mem_gbs / num_fpgas`.
+    /// Default: the paper platform's 205 (Table 3); `HitGnn::platform`
+    /// threads its value through so design-time DSE and the trainer use
+    /// the same host metadata.
+    pub cpu_mem_gbs: f64,
     pub epochs: usize,
     pub lr: f32,
     pub momentum: f32,
@@ -59,6 +78,9 @@ impl Default for TrainConfig {
             model: "gcn".into(),
             algo: Algorithm::DistDgl,
             num_fpgas: 4,
+            fleet: None,
+            sched: SchedMode::Cost,
+            cpu_mem_gbs: 205.0,
             epochs: 1,
             lr: 0.05,
             momentum: 0.9,
@@ -78,15 +100,41 @@ impl Default for TrainConfig {
     }
 }
 
+/// Resolve the `--fleet` / `--fpgas` pair consistently (shared by
+/// `train` config parsing and `simulate`): `--fleet` implies the FPGA
+/// count; an explicit `--fpgas` must agree with the fleet size.
+pub fn fleet_args(
+    args: &Args,
+    default_fpgas: usize,
+) -> anyhow::Result<(Option<Vec<DeviceSpec>>, usize)> {
+    let fleet = args.opt_str("fleet").map(|s| fpga::parse_fleet(&s)).transpose()?;
+    let num_fpgas = match args.opt_str("fpgas") {
+        Some(s) => s.parse::<usize>().map_err(|e| anyhow::anyhow!("--fpgas={s}: {e}"))?,
+        None => fleet.as_ref().map_or(default_fpgas, |f| f.len()),
+    };
+    if let Some(f) = &fleet {
+        anyhow::ensure!(
+            f.len() == num_fpgas,
+            "--fleet has {} devices but --fpgas is {num_fpgas}",
+            f.len()
+        );
+    }
+    Ok((fleet, num_fpgas))
+}
+
 impl TrainConfig {
     /// Parse from CLI arguments (shared by `hitgnn train` and examples).
     pub fn from_args(args: &Args) -> anyhow::Result<TrainConfig> {
         let d = TrainConfig::default();
+        let (fleet, num_fpgas) = fleet_args(args, d.num_fpgas)?;
         let cfg = TrainConfig {
             dataset: args.str("dataset", &d.dataset),
             model: args.str("model", &d.model),
             algo: Algorithm::parse(&args.str("algo", "distdgl"))?,
-            num_fpgas: args.num("fpgas", d.num_fpgas)?,
+            num_fpgas,
+            fleet,
+            sched: SchedMode::parse(&args.str("sched", d.sched.name()))?,
+            cpu_mem_gbs: args.num("cpu-mem", d.cpu_mem_gbs)?,
             epochs: args.num("epochs", d.epochs)?,
             lr: args.num("lr", d.lr)?,
             momentum: args.num("momentum", d.momentum)?,
@@ -114,7 +162,18 @@ impl TrainConfig {
         );
         anyhow::ensure!(cfg.host_threads >= 1, "--host-threads must be >= 1");
         anyhow::ensure!(cfg.prefetch_depth >= 1, "--prefetch-depth must be >= 1");
+        anyhow::ensure!(
+            cfg.cpu_mem_gbs.is_finite() && cfg.cpu_mem_gbs > 0.0,
+            "--cpu-mem must be positive (got {})",
+            cfg.cpu_mem_gbs
+        );
         Ok(cfg)
+    }
+
+    /// Resolved per-device fleet: the explicit `--fleet`, or `num_fpgas`
+    /// identical paper U250s.
+    pub fn device_fleet(&self) -> Vec<DeviceSpec> {
+        self.fleet.clone().unwrap_or_else(|| fpga::homogeneous_fleet(self.num_fpgas))
     }
 
     /// Effective bounded-prefetch window depth: the legacy `--prefetch`
@@ -135,6 +194,9 @@ impl TrainConfig {
             ("model", Json::str(&self.model)),
             ("algo", Json::str(self.algo.name())),
             ("num_fpgas", Json::num(self.num_fpgas as f64)),
+            ("fleet", Json::str(&fpga::fleet_spec_string(&self.device_fleet()))),
+            ("sched", Json::str(self.sched.name())),
+            ("cpu_mem_gbs", Json::num(self.cpu_mem_gbs)),
             ("epochs", Json::num(self.epochs as f64)),
             ("lr", Json::num(self.lr as f64)),
             ("momentum", Json::num(self.momentum as f64)),
@@ -243,5 +305,41 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.req_str("algo").unwrap(), "DistDGL");
         assert_eq!(j.req_usize("num_fpgas").unwrap(), 4);
+        assert_eq!(j.req_str("fleet").unwrap(), "u250:4");
+        assert_eq!(j.req_str("sched").unwrap(), "cost");
+    }
+
+    #[test]
+    fn parses_fleet_and_sched_options() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert!(c.fleet.is_none());
+        assert_eq!(c.sched, crate::sched::SchedMode::Cost);
+        assert_eq!(c.device_fleet().len(), 4);
+
+        // --fleet implies --fpgas
+        let c = TrainConfig::from_args(&Args::parse([
+            "train", "--fleet", "u250-half:2,u250:2", "--sched", "batch-count",
+        ]))
+        .unwrap();
+        assert_eq!(c.num_fpgas, 4);
+        assert_eq!(c.sched, crate::sched::SchedMode::BatchCount);
+        let fleet = c.device_fleet();
+        assert_eq!(fleet[0].kind, "u250-half");
+        assert_eq!(fleet[3].kind, "u250");
+
+        // explicit --fpgas must agree with the fleet size
+        let args = Args::parse(["train", "--fleet", "u250:2", "--fpgas", "3"]);
+        assert!(TrainConfig::from_args(&args).is_err());
+        let args = Args::parse(["train", "--fleet", "u250:3", "--fpgas", "3"]);
+        assert_eq!(TrainConfig::from_args(&args).unwrap().num_fpgas, 3);
+        // unknown kinds and modes are rejected
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--fleet", "v100:2"])).is_err());
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--sched", "bogus"])).is_err());
+
+        // host-bandwidth override for the cost model
+        let c = TrainConfig::from_args(&Args::parse(["train", "--cpu-mem", "100"])).unwrap();
+        assert_eq!(c.cpu_mem_gbs, 100.0);
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--cpu-mem", "0"])).is_err());
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--cpu-mem", "-5"])).is_err());
     }
 }

@@ -29,6 +29,14 @@ pub struct EpochMetrics {
     /// Feature stores whose resident set changed at this epoch's barrier
     /// (0 for static policies).
     pub stores_updated: usize,
+    /// Epoch makespan in batch units: Σ over iterations of the max batch
+    /// count on one FPGA (what WB minimises, Table 7).
+    pub epoch_makespan_batches: usize,
+    /// Epoch makespan in seconds under the fleet's per-device §6.2 cost
+    /// model (what cost-aware scheduling minimises on heterogeneous
+    /// fleets). Modeled from the epoch's actual iteration plans — the
+    /// simulated-FPGA wall clock is not this number.
+    pub epoch_makespan_seconds: f64,
     /// Host-side time breakdown (seconds, summed over the epoch).
     pub sample_seconds: f64,
     pub gather_seconds: f64,
@@ -59,6 +67,8 @@ impl EpochMetrics {
             ("f2f_bytes", Json::num(self.f2f_bytes as f64)),
             ("dedup_saved_bytes", Json::num(self.dedup_saved_bytes as f64)),
             ("stores_updated", Json::num(self.stores_updated as f64)),
+            ("epoch_makespan_batches", Json::num(self.epoch_makespan_batches as f64)),
+            ("epoch_makespan_seconds", Json::num(self.epoch_makespan_seconds)),
             ("sample_seconds", Json::num(self.sample_seconds)),
             ("gather_seconds", Json::num(self.gather_seconds)),
             ("execute_seconds", Json::num(self.execute_seconds)),
@@ -120,6 +130,8 @@ mod tests {
                 cache_hit_rate: 0.5,
                 dedup_saved_bytes: 4096,
                 stores_updated: 2,
+                epoch_makespan_batches: 7,
+                epoch_makespan_seconds: 0.25,
                 ..Default::default()
             }],
             mean_shape: [5.0, 4.0, 3.0, 2.0, 1.0],
@@ -136,5 +148,8 @@ mod tests {
         assert_eq!(e0.req_usize("dedup_saved_bytes").unwrap(), 4096);
         assert_eq!(e0.req_usize("stores_updated").unwrap(), 2);
         assert!(e0.get("cache_hit_rate").is_some());
+        // scheduler observability fields survive the roundtrip
+        assert_eq!(e0.req_usize("epoch_makespan_batches").unwrap(), 7);
+        assert!(e0.get("epoch_makespan_seconds").is_some());
     }
 }

@@ -29,13 +29,19 @@ use super::params::{average_grads, ParamSet, Sgd};
 use super::prep;
 use super::worker::{WorkItem, WorkerPool};
 use crate::comm::{CommConfig, FeatureService, IterDedup};
+use crate::fpga::timing::BatchShape;
 use crate::graph::{datasets, Dataset};
 use crate::partition::{preprocess_with_policy, Preprocessed};
+use crate::perf::{FleetModel, Workload};
 use crate::store::{FeatureStore, Residency};
 use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, Sampler, WeightMode};
-use crate::sched::TwoStageScheduler;
+use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
 use crate::util::rng::Rng;
+
+/// Cold-start local-fetch ratio for the scheduler cost model before the
+/// first epoch has measured one (the paper's nominal β).
+const COLD_START_BETA: f64 = 0.75;
 
 /// Everything needed to train; build with [`Trainer::new`], run with
 /// [`Trainer::run`].
@@ -61,12 +67,24 @@ pub struct Trainer {
     /// Accumulated mean batch shape [v0, v1, v2, a1, a2].
     shape_acc: [f64; 5],
     shape_n: f64,
+    /// Last epoch's measured β — drives the next epoch's scheduler cost
+    /// model (deterministic: measured at the barriers, so identical
+    /// across pipeline configurations).
+    last_beta: f64,
 }
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> anyhow::Result<Trainer> {
         let spec = datasets::lookup(&cfg.dataset)?;
         let mode = WeightMode::for_model(&cfg.model)?;
+        if let Some(fleet) = &cfg.fleet {
+            anyhow::ensure!(
+                fleet.len() == cfg.num_fpgas,
+                "fleet has {} devices but num_fpgas is {}",
+                fleet.len(),
+                cfg.num_fpgas
+            );
+        }
         let data = spec.build(cfg.scale_shift, cfg.seed);
         crate::log_info!("dataset: {}", data.summary());
 
@@ -125,6 +143,7 @@ impl Trainer {
             rng,
             shape_acc: [0.0; 5],
             shape_n: 0.0,
+            last_beta: COLD_START_BETA,
         })
     }
 
@@ -138,7 +157,7 @@ impl Trainer {
         for epoch in 0..self.cfg.epochs {
             let m = self.run_epoch(epoch)?;
             crate::log_info!(
-                "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3} | hit {:.3} | dedup {} | {} stores re-ranked",
+                "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3} | hit {:.3} | dedup {} | {} stores re-ranked | makespan {} batches / {:.3}s modeled",
                 epoch,
                 m.mean_loss,
                 m.wall_seconds,
@@ -147,7 +166,9 @@ impl Trainer {
                 m.beta,
                 m.cache_hit_rate,
                 crate::util::stats::si(m.dedup_saved_bytes as f64),
-                m.stores_updated
+                m.stores_updated,
+                m.epoch_makespan_batches,
+                m.epoch_makespan_seconds
             );
             epochs.push(m);
         }
@@ -171,6 +192,36 @@ impl Trainer {
         s
     }
 
+    /// The scheduler's per-device cost model for the *next* epoch:
+    /// per-device §6.2 timing (`perf::FleetModel::cost_model` — the same
+    /// function the DSE engine and `simulate` use) driven by the measured
+    /// mean batch shape and the policy-measured β of the epochs run so
+    /// far (nominal artifact shape and the paper's β before epoch 0).
+    /// All inputs are barrier-measured, so the model — and therefore the
+    /// planned schedule — is identical across pipeline configurations.
+    pub fn fleet_cost(&self) -> CostModel {
+        let d = &self.entry.dims;
+        let f = [d.f0 as f64, d.f1 as f64, d.f2 as f64];
+        let shape = if self.shape_n > 0.0 {
+            let s = self.mean_shape();
+            BatchShape { v: [s[0], s[1], s[2]], a: [s[3], s[4]], f }
+        } else {
+            BatchShape::nominal(d.b as f64, d.k1 as f64, d.k2 as f64, f)
+        };
+        let w = Workload {
+            shape,
+            beta: self.last_beta,
+            param_scale: if self.cfg.model == "sage" { 2.0 } else { 1.0 },
+            sampling_s_per_batch: 0.0,
+            batches_per_part: vec![0; self.cfg.num_fpgas],
+            workload_balancing: self.cfg.workload_balancing,
+            direct_host_fetch: self.cfg.direct_host_fetch,
+            extra_pcie_bytes_per_batch: 0.0,
+            prefetch: false,
+        };
+        FleetModel::new(self.cfg.device_fleet(), self.cfg.cpu_mem_gbs).cost_model(&w)
+    }
+
     /// One epoch of synchronous training through the host pipeline.
     pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochMetrics> {
         let cfg = self.cfg.clone();
@@ -182,14 +233,34 @@ impl Trainer {
         // ---- planning stage (decoupled from preparation) ----------------
         let mut plan = EpochPlan::new(&self.pre.train_parts, self.entry.dims.b, &mut self.rng);
         let epoch_stream = self.rng.next_u64();
-        let mut sched = TwoStageScheduler::new(p, cfg.workload_balancing);
+        let cost = self.fleet_cost();
+        let mut sched =
+            TwoStageScheduler::for_mode(p, cfg.workload_balancing, cfg.sched, Some(cost.clone()));
         let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
         let mut iterations =
             prep::plan_epoch_tasks(&mut sched, &mut plan, &mut remaining, cfg.max_iterations);
         let sizes: Vec<usize> = iterations.iter().map(|t| t.len()).collect();
         let n_iters = iterations.len();
 
-        let mut m = EpochMetrics { epoch, ..Default::default() };
+        // scheduler observability: the planned epoch's makespan in batch
+        // units and in modeled seconds, via the sched module's one
+        // definition of both quantities
+        let mut makespan_batches = 0usize;
+        let mut makespan_seconds = 0.0f64;
+        for tasks in &iterations {
+            let plan = IterationPlan {
+                tasks: tasks.iter().map(|t| Task { part: t.part, fpga: t.fpga }).collect(),
+            };
+            makespan_batches += plan.makespan_batches(p);
+            makespan_seconds += plan.makespan_seconds(&cost);
+        }
+
+        let mut m = EpochMetrics {
+            epoch,
+            epoch_makespan_batches: makespan_batches,
+            epoch_makespan_seconds: makespan_seconds,
+            ..Default::default()
+        };
         let mut loss_sum = 0.0f64;
         let mut traffic_total = crate::comm::Traffic::default();
 
@@ -359,6 +430,10 @@ impl Trainer {
         m.beta = traffic_total.beta();
         m.cache_hit_rate = traffic_total.hit_rate();
         m.stores_updated = stores_updated;
+        if m.batches > 0 {
+            // feed the measured β into the next epoch's cost model
+            self.last_beta = m.beta;
+        }
         Ok(m)
     }
 

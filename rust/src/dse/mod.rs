@@ -9,8 +9,9 @@
 //! with heterogeneous dies).
 
 use crate::fpga::timing::BatchShape;
-use crate::fpga::{DieConfig, ResourceModel, Utilization};
-use crate::perf::{PlatformModel, PlatformSpec, Workload};
+use crate::fpga::{DeviceSpec, DieConfig, ResourceModel, Utilization};
+use crate::perf::{FleetModel, PlatformModel, PlatformSpec, Workload};
+use crate::sched::SchedMode;
 
 /// One evaluated design point.
 #[derive(Clone, Copy, Debug)]
@@ -116,7 +117,11 @@ impl DseEngine {
                         utilization: self.resources.utilization(die),
                         throughput: self.throughput(die, workloads),
                     };
-                    if best.map_or(true, |b| point.throughput > b.throughput) {
+                    let improved = match &best {
+                        Some(b) => point.throughput > b.throughput,
+                        None => true,
+                    };
+                    if improved {
                         best = Some(point);
                     }
                     grid.push(point);
@@ -153,6 +158,129 @@ impl DseEngine {
             utilization: self.resources.utilization(die),
             throughput: self.throughput(die, workloads),
         })
+    }
+}
+
+/// DSE result for a heterogeneous fleet.
+#[derive(Clone, Debug)]
+pub struct FleetDseResult {
+    /// The input fleet with each device's die set to its kind's optimum.
+    pub devices: Vec<DeviceSpec>,
+    /// Chosen die + utilization per distinct device kind, in
+    /// first-appearance order.
+    pub per_kind: Vec<(String, DieConfig, Utilization)>,
+    /// Average fleet NVTPS at the chosen dies under cost-aware WB.
+    pub throughput: f64,
+}
+
+impl DseEngine {
+    /// Algorithm 4 generalised to a heterogeneous fleet: each distinct
+    /// device kind gets its own §6.1 resource model and exhaustive
+    /// (n, m) sweep, but every candidate is scored with the *fleet-level*
+    /// cost model (`perf::FleetModel`, cost-aware scheduling) — the same
+    /// per-device timing the trainer's scheduler uses — so a slow device
+    /// weighs on the estimate exactly as it does at training time. Kinds
+    /// are optimised by one greedy coordinate-descent pass in
+    /// first-appearance order (deterministic; each kind's feasible set is
+    /// independent of the other kinds' choices, only the score couples).
+    pub fn explore_fleet(
+        fleet: &[DeviceSpec],
+        cpu_mem_gbs: f64,
+        workloads: &[DseWorkload],
+        m_step: u32,
+    ) -> anyhow::Result<FleetDseResult> {
+        anyhow::ensure!(!fleet.is_empty(), "fleet DSE needs at least one device");
+        anyhow::ensure!(!workloads.is_empty(), "DSE needs at least one workload");
+        anyhow::ensure!(m_step >= 1, "m_step must be >= 1");
+        let p = fleet.len();
+        let mut devices = fleet.to_vec();
+        let eval = |devs: &[DeviceSpec]| -> f64 {
+            let fm = FleetModel::new(devs.to_vec(), cpu_mem_gbs);
+            let mut sum = 0.0;
+            for w in workloads {
+                sum += fm.epoch(&w.to_workload(p, 32), SchedMode::Cost).nvtps;
+            }
+            sum / workloads.len() as f64
+        };
+
+        let mut kinds: Vec<&'static str> = Vec::new();
+        for d in &devices {
+            if !kinds.contains(&d.kind) {
+                kinds.push(d.kind);
+            }
+        }
+        // standalone per-batch seconds of one device of this kind at a
+        // candidate die, averaged over the workloads — the tie-breaker
+        // below (fleet NVTPS plateaus once another kind is the
+        // bottleneck in the balanced scoring epoch, but a faster die
+        // still matters at training time when stage-2 extras stack on
+        // fast devices)
+        let solo_s = |proto: &DeviceSpec, die: DieConfig| -> f64 {
+            let share = cpu_mem_gbs / p as f64;
+            workloads
+                .iter()
+                .map(|w| {
+                    crate::perf::device_batch_gnn_s(
+                        proto.fpga,
+                        die,
+                        proto.pcie_gbs,
+                        share,
+                        cpu_mem_gbs,
+                        &w.to_workload(p, 32),
+                    )
+                })
+                .sum::<f64>()
+                / workloads.len() as f64
+        };
+
+        let mut per_kind = Vec::new();
+        for kind in kinds {
+            let proto = devices.iter().find(|d| d.kind == kind).copied().expect("kind from fleet");
+            let resources = ResourceModel::new(proto.fpga);
+            let n_max = resources.n_max();
+            let m_max = resources.m_max();
+            let mut best: Option<(DieConfig, f64, f64)> = None;
+            for n in 1..=n_max {
+                let mut m = m_step;
+                while m <= m_max {
+                    let die = DieConfig { n, m };
+                    if resources.check(die) {
+                        let mut cand = devices.clone();
+                        for d in cand.iter_mut() {
+                            if d.kind == kind {
+                                d.die = die;
+                            }
+                        }
+                        let thr = eval(&cand);
+                        let solo = solo_s(&proto, die);
+                        // strictly better fleet score wins; on the
+                        // plateau (another kind bottlenecks the balanced
+                        // scoring epoch) prefer the die that is fastest
+                        // for this kind standalone
+                        let improved = match best {
+                            Some((_, b_thr, b_solo)) => {
+                                thr > b_thr || (thr >= b_thr && solo < b_solo)
+                            }
+                            None => true,
+                        };
+                        if improved {
+                            best = Some((die, thr, solo));
+                        }
+                    }
+                    m += m_step;
+                }
+            }
+            let (die, _, _) = best
+                .ok_or_else(|| anyhow::anyhow!("no feasible design point for kind '{kind}'"))?;
+            for d in devices.iter_mut() {
+                if d.kind == kind {
+                    d.die = die;
+                }
+            }
+            per_kind.push((kind.to_string(), die, resources.utilization(die)));
+        }
+        let throughput = eval(&devices);
+        Ok(FleetDseResult { devices, per_kind, throughput })
     }
 }
 
@@ -230,6 +358,35 @@ mod tests {
     fn empty_workloads_rejected() {
         let e = engine();
         assert!(e.explore(&[]).is_err());
+    }
+
+    #[test]
+    fn fleet_dse_picks_a_die_per_kind() {
+        let fleet = crate::fpga::parse_fleet("u250:2,u250-half:2").unwrap();
+        let w = paper_dse_workloads(2.0);
+        let res = DseEngine::explore_fleet(&fleet, 205.0, &w, 64).unwrap();
+        assert_eq!(res.devices.len(), 4);
+        assert_eq!(res.per_kind.len(), 2);
+        assert!(res.throughput > 0.0);
+        // every device of a kind shares that kind's chosen die, and the
+        // die is feasible on that kind's resources
+        for (kind, die, util) in &res.per_kind {
+            assert!(util.feasible(), "{kind}: {util:?}");
+            for d in res.devices.iter().filter(|d| d.kind == kind.as_str()) {
+                assert_eq!(d.die, *die);
+            }
+        }
+        // kinds keep their fleet positions
+        assert!(res.devices[..2].iter().all(|d| d.kind == "u250"));
+        assert!(res.devices[2..].iter().all(|d| d.kind == "u250-half"));
+    }
+
+    #[test]
+    fn fleet_dse_rejects_empty_inputs() {
+        let w = paper_dse_workloads(1.0);
+        assert!(DseEngine::explore_fleet(&[], 205.0, &w, 16).is_err());
+        let fleet = crate::fpga::parse_fleet("u250").unwrap();
+        assert!(DseEngine::explore_fleet(&fleet, 205.0, &[], 16).is_err());
     }
 
     #[test]

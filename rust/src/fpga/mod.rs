@@ -41,6 +41,35 @@ pub const U250: FpgaSpec = FpgaSpec {
     pe_simd: 16,
 };
 
+/// U250 with only 2 of its 4 SLRs usable (a partially populated /
+/// floorplan-constrained card): half the DDR bandwidth and half the PE
+/// budget of a full U250.
+pub const U250_HALF: FpgaSpec = FpgaSpec {
+    name: "Xilinx Alveo U250 (2-die)",
+    dies: 2,
+    dsp_per_die: 3072,
+    lut_per_die: 423_000,
+    uram_per_die: 320,
+    bram_per_die: 672,
+    ddr_gbs_per_die: 19.25,
+    freq_mhz: 300.0,
+    pe_simd: 16,
+};
+
+/// Single-SLR U250 (one die, one DDR channel) — the smallest member of
+/// the heterogeneous-fleet registry.
+pub const U250_QUARTER: FpgaSpec = FpgaSpec {
+    name: "Xilinx Alveo U250 (1-die)",
+    dies: 1,
+    dsp_per_die: 3072,
+    lut_per_die: 423_000,
+    uram_per_die: 320,
+    bram_per_die: 672,
+    ddr_gbs_per_die: 19.25,
+    freq_mhz: 300.0,
+    pe_simd: 16,
+};
+
 impl FpgaSpec {
     /// Total DDR bandwidth of the card.
     pub fn ddr_gbs_total(&self) -> f64 {
@@ -59,6 +88,108 @@ pub struct DieConfig {
     pub n: u32,
     /// PEs in the update kernel.
     pub m: u32,
+}
+
+/// The die configuration the paper's DSE selects on a U250 (Table 5,
+/// FPGA-level (8, 2048) = per-die (2, 512)) — the registry default.
+pub const DEFAULT_DIE: DieConfig = DieConfig { n: 2, m: 512 };
+
+/// One device of a (possibly heterogeneous) fleet: per-device platform
+/// metadata — the `FPGA_Metadata()` of Table 2 generalised so mixed
+/// generations, partially populated dies and shared PCIe links can be
+/// described per card instead of assuming `p` identical U250s.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceSpec {
+    /// Registry key this device was built from ("u250", "u250-half", …;
+    /// "custom" for API-assembled devices).
+    pub kind: &'static str,
+    pub fpga: FpgaSpec,
+    /// Per-die accelerator configuration (DSE output; registry default
+    /// is the paper's Table-5 pick).
+    pub die: DieConfig,
+    /// This device's host↔FPGA PCIe bandwidth share (GB/s). 16 for a
+    /// dedicated PCIe 3×16 link; less behind a shared switch.
+    pub pcie_gbs: f64,
+}
+
+impl DeviceSpec {
+    /// An API-assembled device (not from the named registry).
+    pub fn custom(fpga: FpgaSpec, die: DieConfig, pcie_gbs: f64) -> DeviceSpec {
+        DeviceSpec { kind: "custom", fpga, die, pcie_gbs }
+    }
+}
+
+/// Look up a named device kind (`--fleet` vocabulary).
+pub fn device_kind(kind: &str) -> anyhow::Result<DeviceSpec> {
+    let d = match kind {
+        "u250" => DeviceSpec { kind: "u250", fpga: U250, die: DEFAULT_DIE, pcie_gbs: 16.0 },
+        "u250-half" => {
+            DeviceSpec { kind: "u250-half", fpga: U250_HALF, die: DEFAULT_DIE, pcie_gbs: 16.0 }
+        }
+        "u250-quarter" => {
+            DeviceSpec { kind: "u250-quarter", fpga: U250_QUARTER, die: DEFAULT_DIE, pcie_gbs: 16.0 }
+        }
+        // full card behind a shared PCIe switch: half the link bandwidth
+        "u250-shared" => {
+            DeviceSpec { kind: "u250-shared", fpga: U250, die: DEFAULT_DIE, pcie_gbs: 8.0 }
+        }
+        other => anyhow::bail!(
+            "unknown device kind '{other}' (u250|u250-half|u250-quarter|u250-shared)"
+        ),
+    };
+    Ok(d)
+}
+
+/// Parse a fleet specification: comma-separated `kind:count` (or bare
+/// `kind` = 1), e.g. `u250:4` or `u250:2,u250-half:2`. Device order is
+/// significant — FPGA *i* of the fleet executes partition *i* in stage 1.
+pub fn parse_fleet(spec: &str) -> anyhow::Result<Vec<DeviceSpec>> {
+    let mut fleet = Vec::new();
+    for group in spec.split(',') {
+        let group = group.trim();
+        anyhow::ensure!(!group.is_empty(), "empty device group in fleet '{spec}'");
+        let (kind, count) = match group.split_once(':') {
+            Some((k, c)) => {
+                let count: usize = c
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad device count '{c}' in '{group}': {e}"))?;
+                (k, count)
+            }
+            None => (group, 1),
+        };
+        anyhow::ensure!(count >= 1, "device count must be >= 1 in '{group}'");
+        let dev = device_kind(kind)?;
+        for _ in 0..count {
+            fleet.push(dev);
+        }
+    }
+    anyhow::ensure!(!fleet.is_empty(), "fleet '{spec}' has no devices");
+    Ok(fleet)
+}
+
+/// The homogeneous paper platform: `p` identical U250s at the Table-5
+/// die configuration on dedicated PCIe 3×16 links.
+pub fn homogeneous_fleet(p: usize) -> Vec<DeviceSpec> {
+    vec![device_kind("u250").expect("registry"); p]
+}
+
+/// Canonical `kind:count` run-length rendering of a fleet for reports
+/// and logs. Display metadata, not a lossless round-trip: API-assembled
+/// devices render as `custom:n` (which [`parse_fleet`] rejects), and
+/// per-device die tuning (DSE output) is not encoded.
+pub fn fleet_spec_string(fleet: &[DeviceSpec]) -> String {
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < fleet.len() {
+        let kind = fleet[i].kind;
+        let mut j = i;
+        while j < fleet.len() && fleet[j].kind == kind {
+            j += 1;
+        }
+        out.push(format!("{kind}:{}", j - i));
+        i = j;
+    }
+    out.join(",")
 }
 
 /// Resource-consumption coefficients (Eqs. 1–2 plus URAM/BRAM analogues).
@@ -242,5 +373,47 @@ mod tests {
     fn u250_totals() {
         assert!((U250.ddr_gbs_total() - 77.0).abs() < 1e-9);
         assert_eq!(U250.freq_hz(), 3.0e8);
+    }
+
+    #[test]
+    fn partial_cards_scale_bandwidth_with_dies() {
+        assert!((U250_HALF.ddr_gbs_total() - 38.5).abs() < 1e-9);
+        assert!((U250_QUARTER.ddr_gbs_total() - 19.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_parses_counts_and_preserves_order() {
+        let fleet = parse_fleet("u250-half:2,u250:2").unwrap();
+        assert_eq!(fleet.len(), 4);
+        assert_eq!(fleet[0].kind, "u250-half");
+        assert_eq!(fleet[1].kind, "u250-half");
+        assert_eq!(fleet[2].kind, "u250");
+        assert_eq!(fleet[0].fpga.dies, 2);
+        assert_eq!(fleet[2].fpga.dies, 4);
+        assert_eq!(fleet_spec_string(&fleet), "u250-half:2,u250:2");
+        // bare kind = count 1
+        let one = parse_fleet("u250-shared").unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].pcie_gbs, 8.0);
+    }
+
+    #[test]
+    fn fleet_rejects_bad_specs() {
+        assert!(parse_fleet("").is_err());
+        assert!(parse_fleet("u9999:2").is_err());
+        assert!(parse_fleet("u250:0").is_err());
+        assert!(parse_fleet("u250:x").is_err());
+        assert!(parse_fleet("u250:2,,u250").is_err());
+    }
+
+    #[test]
+    fn homogeneous_fleet_is_paper_platform() {
+        let fleet = homogeneous_fleet(4);
+        assert_eq!(fleet.len(), 4);
+        assert!(fleet.iter().all(|d| d.kind == "u250"
+            && d.die == DEFAULT_DIE
+            && d.pcie_gbs == 16.0
+            && d.fpga.dies == 4));
+        assert_eq!(fleet_spec_string(&fleet), "u250:4");
     }
 }

@@ -35,8 +35,10 @@ impl BatchShape {
 
     /// Model parameter bytes (f32): Σ_l f^{l-1}·f^l (GCN; SAGE doubles it
     /// via the W_self path — handled by the caller's `param_scale`).
+    /// Rounded to the nearest byte: truncation undercounts whenever the
+    /// f/`param_scale` product is not integral.
     pub fn param_bytes(&self, param_scale: f64) -> u64 {
-        ((self.f[0] * self.f[1] + self.f[1] * self.f[2]) * 4.0 * param_scale) as u64
+        ((self.f[0] * self.f[1] + self.f[1] * self.f[2]) * 4.0 * param_scale).round() as u64
     }
 }
 
@@ -247,6 +249,20 @@ mod tests {
         let gcn = m.batch(&s, 1.0, 1.0);
         let sage = m.batch(&s, 1.0, 2.0);
         assert!(sage.gnn_s > gcn.gnn_s);
+    }
+
+    #[test]
+    fn param_bytes_rounds_instead_of_truncating() {
+        // (1·1 + 1·1)·4 = 8 parameter bytes; a fractional param_scale
+        // used to truncate (0.7 → 5.6 read as 5) instead of rounding
+        let s = BatchShape { v: [1.0; 3], a: [1.0; 2], f: [1.0; 3] };
+        assert_eq!(s.param_bytes(1.0), 8);
+        assert_eq!(s.param_bytes(0.7), 6, "5.6 rounds up, not down");
+        assert_eq!(s.param_bytes(0.3), 2, "2.4 rounds down");
+        // paper shape at GCN/SAGE scales stays exact
+        let paper = BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]);
+        assert_eq!(paper.param_bytes(1.0), (100 * 128 + 128 * 47) * 4);
+        assert_eq!(paper.param_bytes(2.0), 2 * (100 * 128 + 128 * 47) * 4);
     }
 
     #[test]

@@ -12,12 +12,13 @@
 //! see EXPERIMENTS.md §Table 6).
 
 use crate::fpga::timing::BatchShape;
-use crate::fpga::DieConfig;
+use crate::fpga::{DeviceSpec, DieConfig};
 use crate::graph::datasets::{self, DatasetSpec};
 use crate::partition::{preprocess_with_policy, Algorithm};
 use crate::perf::gpu::{GpuModel, GpuPlatformSpec};
-use crate::perf::{EpochEstimate, PlatformModel, PlatformSpec, Workload};
+use crate::perf::{EpochEstimate, FleetModel, PlatformModel, PlatformSpec, Workload};
 use crate::sampling::{FanoutConfig, Sampler, WeightMode};
+use crate::sched::SchedMode;
 use crate::store::{CachePolicy, FeatureStore};
 use crate::util::rng::Rng;
 
@@ -26,8 +27,8 @@ pub const PAPER_BATCH: f64 = 1024.0;
 pub const PAPER_K1: f64 = 25.0;
 pub const PAPER_K2: f64 = 10.0;
 /// The accelerator configuration the DSE selects (Table 5, FPGA-level
-/// (8, 2048) = per-die (2, 512)).
-pub const BEST_DIE: DieConfig = DieConfig { n: 2, m: 512 };
+/// (8, 2048) = per-die (2, 512)) — the fleet registry's default die.
+pub const BEST_DIE: DieConfig = crate::fpga::DEFAULT_DIE;
 /// Host sampler threads per FPGA. The paper's host is a dual-socket EPYC
 /// 7763 (128 cores) feeding 4 FPGAs; DistDGL-style loaders run many
 /// sampler workers so per-batch sampling time divides across threads.
@@ -326,6 +327,73 @@ pub fn table7_with_policy(
     Ok(rows)
 }
 
+/// One scheduler-ablation row (Table-7 experiment path on a
+/// heterogeneous fleet): epoch makespan-seconds under {WB off,
+/// batch-count WB, cost-aware WB}, from the same measured host
+/// statistics that parameterise `table7`.
+#[derive(Clone, Debug)]
+pub struct SchedAblationRow {
+    pub dataset: &'static str,
+    pub model: String,
+    /// WB off (every batch on its own partition's device).
+    pub makespan_base_s: f64,
+    /// WB on, Algorithm 3's batch-count balancing.
+    pub makespan_batch_s: f64,
+    /// WB on, least-estimated-finish-time assignment.
+    pub makespan_cost_s: f64,
+    pub iterations: usize,
+}
+
+impl SchedAblationRow {
+    /// Relative makespan reduction of cost-aware over batch-count WB.
+    pub fn cost_gain_pct(&self) -> f64 {
+        (1.0 - self.makespan_cost_s / self.makespan_batch_s) * 100.0
+    }
+}
+
+/// Table-7-style scheduler ablation on a heterogeneous fleet: measure
+/// host statistics per dataset (as `table7` does), compose the full-scale
+/// workload, then drive the fleet model in each scheduler configuration.
+/// `batches_per_part` overrides the measured shares when given (paired
+/// sweeps over engineered imbalance profiles).
+pub fn table7_fleet(
+    fleet: &[DeviceSpec],
+    cpu_mem_gbs: f64,
+    shift: u32,
+    n_batches: usize,
+    batches_per_part: Option<&[usize]>,
+) -> anyhow::Result<Vec<SchedAblationRow>> {
+    let p = fleet.len();
+    if let Some(b) = batches_per_part {
+        anyhow::ensure!(b.len() == p, "batches_per_part must have one entry per device");
+    }
+    let fm = FleetModel::new(fleet.to_vec(), cpu_mem_gbs);
+    let mut rows = Vec::new();
+    for spec in &datasets::REGISTRY {
+        let host = measure_host(spec, Algorithm::DistDgl, "gcn", p, shift, n_batches, 17)?;
+        for model in ["gcn", "sage"] {
+            let mut w = build_workload(spec, Algorithm::DistDgl, model, &host, p, true, true);
+            if let Some(b) = batches_per_part {
+                w.batches_per_part = b.to_vec();
+            }
+            let wb_batch = fm.epoch(&w, SchedMode::BatchCount);
+            let wb_cost = fm.epoch(&w, SchedMode::Cost);
+            let mut w_off = w.clone();
+            w_off.workload_balancing = false;
+            let base = fm.epoch(&w_off, SchedMode::BatchCount);
+            rows.push(SchedAblationRow {
+                dataset: spec.key,
+                model: model.to_string(),
+                makespan_base_s: base.makespan_seconds,
+                makespan_batch_s: wb_batch.makespan_seconds,
+                makespan_cost_s: wb_cost.makespan_seconds,
+                iterations: wb_cost.iterations,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// Fig 8: speedup vs FPGA count, per algorithm (ogbn-products, GraphSAGE —
 /// the scalability workload).
 ///
@@ -458,6 +526,25 @@ mod tests {
         for r in &rows {
             assert!(r.wb >= r.baseline * 0.999, "{r:?}");
             assert!(r.wb_dc >= r.wb * 0.999, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn fleet_scheduler_ablation_ordering_holds() {
+        // On a heterogeneous fleet, cost-aware WB never exceeds
+        // batch-count WB, which never exceeds the no-WB baseline — and
+        // the engineered tail profile yields a strict cost win.
+        let fleet = crate::fpga::parse_fleet("u250-half:2,u250:2").unwrap();
+        let profile = [6usize, 6, 20, 6];
+        let rows = table7_fleet(&fleet, 205.0, 8, 2, Some(&profile[..])).unwrap();
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(
+                r.makespan_cost_s < r.makespan_batch_s,
+                "cost-aware must strictly win on the tail profile: {r:?}"
+            );
+            assert!(r.makespan_batch_s <= r.makespan_base_s * (1.0 + 1e-9), "{r:?}");
+            assert!(r.cost_gain_pct() > 0.0);
         }
     }
 }

@@ -7,8 +7,8 @@ pub mod experiments;
 pub mod gpu;
 
 use crate::fpga::timing::{BatchShape, TimingModel, S_FEAT};
-use crate::fpga::{DieConfig, FpgaSpec};
-use crate::sched::TwoStageScheduler;
+use crate::fpga::{DeviceSpec, DieConfig, FpgaSpec};
+use crate::sched::{epoch_makespan_batches, epoch_makespan_seconds, CostModel, SchedMode, TwoStageScheduler};
 
 /// Platform metadata (the `Platform_Metadata()` API of Table 2).
 #[derive(Clone, Copy, Debug)]
@@ -98,32 +98,16 @@ impl PlatformModel {
     }
 
     /// Per-batch timing on one FPGA under this workload's communication
-    /// configuration. DC-off reroutes feature misses through the shared
-    /// host buffer: two PCIe crossings plus a CPU copy (§5.2, [26]).
+    /// configuration (see [`device_batch_gnn_s`]).
     pub fn batch_gnn_s(&self, w: &Workload) -> f64 {
-        let mut t = TimingModel::new(self.spec.fpga, self.die, self.spec.pcie_gbs);
-        // host-fetch path: PCIe limited by CPU memory saturation
-        let host_gbs = self.spec.effective_host_fetch_gbs();
-        let miss_gbs = if w.direct_host_fetch {
-            host_gbs
-        } else {
-            // FPGA→host-buffer→FPGA: pipelined crossings + host copy
-            1.0 / (crate::comm::F2F_PENALTY / host_gbs + 1.0 / self.spec.cpu_mem_gbs)
-        };
-        t.bw.pcie_gbs = miss_gbs;
-        let extra = w.extra_pcie_bytes_per_batch / (host_gbs * 1e9);
-        if w.prefetch {
-            // §8 extension: the host-fetch stream for batch i+1 overlaps
-            // batch i's compute. Steady state: per-batch time is the max
-            // of (GNN time with all features staged locally) and the
-            // PCIe/host fetch time of one batch's misses.
-            let gnn_local = t.batch(&w.shape, 1.0, w.param_scale).gnn_s;
-            let miss_bytes = w.shape.v[0] * w.shape.f[0] * S_FEAT * (1.0 - w.beta);
-            let fetch = miss_bytes / (miss_gbs * 1e9) + extra;
-            gnn_local.max(fetch)
-        } else {
-            t.batch(&w.shape, w.beta, w.param_scale).gnn_s + extra
-        }
+        device_batch_gnn_s(
+            self.spec.fpga,
+            self.die,
+            self.spec.pcie_gbs,
+            self.spec.cpu_mem_gbs / self.spec.num_fpgas as f64,
+            self.spec.cpu_mem_gbs,
+            w,
+        )
     }
 
     /// Gradient synchronisation per iteration (Eq. 4's extra term).
@@ -175,6 +159,157 @@ impl PlatformModel {
             nvtps,
             bw_efficiency: nvtps / self.spec.total_bandwidth_gbs(),
             batch_gnn_s,
+            gradient_sync_s: sync_s,
+        }
+    }
+}
+
+/// Per-batch GNN time of one device under workload `w` — the shared
+/// §6.2 per-device model behind `PlatformModel`, [`FleetModel`], the DSE
+/// engine and the trainer's scheduler cost model, so all four agree.
+///
+/// `cpu_share_gbs` is this device's share of host CPU memory bandwidth
+/// (`cpu_mem_gbs / p`): the host-fetch path runs at PCIe speed until `p`
+/// concurrent fetchers saturate CPU memory (the Fig. 8 limiter). DC-off
+/// reroutes feature misses through the shared host buffer: two PCIe
+/// crossings plus a CPU copy (§5.2, [26]).
+pub fn device_batch_gnn_s(
+    fpga: FpgaSpec,
+    die: DieConfig,
+    pcie_gbs: f64,
+    cpu_share_gbs: f64,
+    cpu_mem_gbs: f64,
+    w: &Workload,
+) -> f64 {
+    let mut t = TimingModel::new(fpga, die, pcie_gbs);
+    // host-fetch path: PCIe limited by CPU memory saturation
+    let host_gbs = pcie_gbs.min(cpu_share_gbs);
+    let miss_gbs = if w.direct_host_fetch {
+        host_gbs
+    } else {
+        // FPGA→host-buffer→FPGA: pipelined crossings + host copy
+        1.0 / (crate::comm::F2F_PENALTY / host_gbs + 1.0 / cpu_mem_gbs)
+    };
+    t.bw.pcie_gbs = miss_gbs;
+    let extra = w.extra_pcie_bytes_per_batch / (host_gbs * 1e9);
+    if w.prefetch {
+        // §8 extension: the host-fetch stream for batch i+1 overlaps
+        // batch i's compute. Steady state: per-batch time is the max
+        // of (GNN time with all features staged locally) and the
+        // PCIe/host fetch time of one batch's misses.
+        let gnn_local = t.batch(&w.shape, 1.0, w.param_scale).gnn_s;
+        let miss_bytes = w.shape.v[0] * w.shape.f[0] * S_FEAT * (1.0 - w.beta);
+        let fetch = miss_bytes / (miss_gbs * 1e9) + extra;
+        gnn_local.max(fetch)
+    } else {
+        t.batch(&w.shape, w.beta, w.param_scale).gnn_s + extra
+    }
+}
+
+/// Epoch-level estimate for a heterogeneous fleet.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetEpochEstimate {
+    pub epoch_s: f64,
+    pub iterations: usize,
+    pub nvtps: f64,
+    /// Epoch makespan in batch units (Σ per-iteration max batch count).
+    pub makespan_batches: usize,
+    /// Epoch makespan in seconds (Σ per-iteration slowest-device compute
+    /// time) — the quantity cost-aware scheduling minimises.
+    pub makespan_seconds: f64,
+    pub gradient_sync_s: f64,
+}
+
+/// Analytic model of a heterogeneous CPU+Multi-FPGA fleet: per-device
+/// §6.2 timing models composed through the real two-stage scheduler.
+/// [`PlatformModel`] is the homogeneous special case.
+#[derive(Clone, Debug)]
+pub struct FleetModel {
+    pub devices: Vec<DeviceSpec>,
+    /// Host CPU memory bandwidth (GB/s), shared by all devices.
+    pub cpu_mem_gbs: f64,
+}
+
+impl FleetModel {
+    pub fn new(devices: Vec<DeviceSpec>, cpu_mem_gbs: f64) -> FleetModel {
+        assert!(!devices.is_empty(), "fleet needs at least one device");
+        FleetModel { devices, cpu_mem_gbs }
+    }
+
+    /// Homogeneous fleet from the paper-style platform metadata.
+    pub fn from_platform(spec: PlatformSpec, die: DieConfig) -> FleetModel {
+        let dev = DeviceSpec::custom(spec.fpga, die, spec.pcie_gbs);
+        FleetModel::new(vec![dev; spec.num_fpgas], spec.cpu_mem_gbs)
+    }
+
+    pub fn num_fpgas(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Per-device seconds per mini-batch — the scheduler's cost model.
+    /// Every consumer of per-device timing (trainer scheduling, DSE,
+    /// `simulate`) goes through this one function.
+    pub fn cost_model(&self, w: &Workload) -> CostModel {
+        let p = self.devices.len();
+        let share = self.cpu_mem_gbs / p as f64;
+        CostModel::new(
+            self.devices
+                .iter()
+                .map(|d| device_batch_gnn_s(d.fpga, d.die, d.pcie_gbs, share, self.cpu_mem_gbs, w))
+                .collect(),
+        )
+    }
+
+    /// Gradient synchronisation per iteration: bounded by the slowest
+    /// PCIe link in the fleet (synchronous all-reduce).
+    pub fn gradient_sync_s(&self, w: &Workload) -> f64 {
+        let min_pcie = self.devices.iter().map(|d| d.pcie_gbs).fold(f64::INFINITY, f64::min);
+        crate::comm::gradient_sync_seconds(
+            w.shape.param_bytes(w.param_scale),
+            self.devices.len(),
+            min_pcie,
+            self.cpu_mem_gbs,
+        )
+    }
+
+    /// Eq. 3–5 composed over a full epoch on the fleet, driving the real
+    /// two-stage scheduler in the requested assignment mode so the
+    /// estimate and the trainer plan identically.
+    pub fn epoch(&self, w: &Workload, mode: SchedMode) -> FleetEpochEstimate {
+        let p = self.devices.len();
+        assert_eq!(w.batches_per_part.len(), p, "one partition per device");
+        let cost = self.cost_model(w);
+        let sync_s = self.gradient_sync_s(w);
+
+        let mut sched =
+            TwoStageScheduler::for_mode(p, w.workload_balancing, mode, Some(cost.clone()));
+        let plans = sched.plan_epoch(&w.batches_per_part);
+
+        let mut epoch_s = 0.0;
+        let mut total_batches = 0usize;
+        for plan in &plans {
+            let counts = plan.per_fpga_counts(p);
+            total_batches += plan.tasks.len();
+            // slowest device bounds the iteration; host sampling overlaps
+            let iter_exec = counts
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| {
+                    let gnn = c as f64 * cost.batch_s[i];
+                    let samp = c as f64 * w.sampling_s_per_batch;
+                    gnn.max(samp)
+                })
+                .fold(0.0f64, f64::max);
+            epoch_s += iter_exec + sync_s;
+        }
+
+        let vertices = total_batches as f64 * w.shape.vertices();
+        FleetEpochEstimate {
+            epoch_s,
+            iterations: plans.len(),
+            nvtps: vertices / epoch_s,
+            makespan_batches: epoch_makespan_batches(&plans, p),
+            makespan_seconds: epoch_makespan_seconds(&plans, &cost),
             gradient_sync_s: sync_s,
         }
     }
@@ -288,6 +423,65 @@ mod tests {
         let spec = PlatformSpec::paper_4fpga();
         // 4×77 + 205 = 513 GB/s
         assert!((spec.total_bandwidth_gbs() - 513.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn homogeneous_fleet_matches_platform_model() {
+        let spec = PlatformSpec::paper_4fpga();
+        let die = DieConfig { n: 2, m: 512 };
+        let pm = PlatformModel::new(spec, die);
+        let fm = FleetModel::from_platform(spec, die);
+        let mut w = workload(4);
+        w.batches_per_part = vec![80, 40, 40, 32];
+        let a = pm.epoch(&w);
+        for mode in SchedMode::ALL {
+            let b = fm.epoch(&w, mode);
+            // identical per-device model + identical plans on equal costs
+            assert_eq!(a.epoch_s, b.epoch_s, "{mode:?}");
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(a.nvtps, b.nvtps);
+            assert_eq!(a.gradient_sync_s, b.gradient_sync_s);
+        }
+    }
+
+    #[test]
+    fn cost_mode_reduces_makespan_on_heterogeneous_fleet() {
+        // 2 half-bandwidth devices first (the devices batch-count WB hands
+        // extras to first), 2 full U250s carrying the long partition
+        let fleet = crate::fpga::parse_fleet("u250-half:2,u250:2").unwrap();
+        let fm = FleetModel::new(fleet, 205.0);
+        let mut w = workload(4);
+        w.batches_per_part = vec![6, 6, 20, 6];
+        let bc = fm.epoch(&w, SchedMode::BatchCount);
+        let ca = fm.epoch(&w, SchedMode::Cost);
+        assert!(
+            ca.makespan_seconds < bc.makespan_seconds,
+            "cost {} !< batch-count {}",
+            ca.makespan_seconds,
+            bc.makespan_seconds
+        );
+        assert!(ca.epoch_s < bc.epoch_s);
+        assert!(ca.nvtps > bc.nvtps);
+        // same batches, same iteration structure: the batch-unit makespan
+        // is mode-invariant — only the seconds change
+        assert_eq!(ca.iterations, bc.iterations);
+        assert_eq!(ca.makespan_batches, bc.makespan_batches);
+    }
+
+    #[test]
+    fn fleet_cost_model_orders_devices_by_capability() {
+        let fleet = crate::fpga::parse_fleet("u250,u250-half,u250-quarter").unwrap();
+        let fm = FleetModel::new(fleet, 205.0);
+        let w = workload(3);
+        let cost = fm.cost_model(&w);
+        assert!(cost.batch_s[0] < cost.batch_s[1], "{:?}", cost.batch_s);
+        assert!(cost.batch_s[1] < cost.batch_s[2], "{:?}", cost.batch_s);
+        // shared-PCIe device only pays when it misses (β < 1)
+        let shared = FleetModel::new(crate::fpga::parse_fleet("u250,u250-shared").unwrap(), 205.0);
+        let mut w2 = workload(2);
+        w2.beta = 0.3;
+        let c2 = shared.cost_model(&w2);
+        assert!(c2.batch_s[1] > c2.batch_s[0], "{:?}", c2.batch_s);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Two-stage task scheduling — the paper's workload-balancing (WB)
-//! optimization (§5.1, Algorithm 3, Figure 5).
+//! optimization (§5.1, Algorithm 3, Figure 5), extended with a
+//! cost-model-driven assignment stage for heterogeneous fleets.
 //!
 //! Synchronous SGD executes `p` mini-batches per iteration (one per FPGA).
 //! Partitions yield different batch counts (Challenge 2), so late in the
@@ -8,10 +9,24 @@
 //! - **Stage 1** (all partitions non-empty): FPGA *i* executes the next
 //!   batch of partition *i*.
 //! - **Stage 2** (some partitions empty): extra batches are sampled from
-//!   the remaining partitions round-robin (`cnt`) and — with WB enabled —
-//!   given to *idle* FPGAs. With WB disabled (the Table 7 baseline) every
-//!   batch stays on its own partition's FPGA, so that FPGA executes
-//!   several batches in one iteration while the others wait.
+//!   the remaining partitions round-robin (a persistent cursor over
+//!   partition ids — Algorithm 3's `cnt`) and — with WB enabled — handed
+//!   to other FPGAs. With WB disabled (the Table 7 baseline) every batch
+//!   stays on its own partition's FPGA, so that FPGA executes several
+//!   batches in one iteration while the others wait.
+//!
+//! **Assignment modes** (`--sched`): Algorithm 3 balances *batch counts*
+//! ([`SchedMode::BatchCount`]: one extra per idle FPGA, in index order),
+//! which is only optimal when every FPGA runs every batch at the same
+//! speed. On a heterogeneous fleet (mixed generations, partially
+//! populated dies, shared PCIe) [`SchedMode::Cost`] instead assigns each
+//! extra to the FPGA with the least estimated finish time under a
+//! per-device [`CostModel`] (seconds per batch, from the §6.2 timing
+//! model driven by measured shapes and β). Extras may then stack on a
+//! fast busy device or skip a slow idle one. The *partition* each extra
+//! is sampled from is mode-independent, so the two modes consume
+//! identical (part, seq) streams — a cost/batch-count sweep is a paired
+//! comparison with a bit-identical loss sequence.
 //!
 //! The scheduler is pure control logic over "batches remaining per
 //! partition"; the coordinator owns the actual sampling and dispatch.
@@ -44,22 +59,140 @@ impl IterationPlan {
     pub fn makespan_batches(&self, p: usize) -> usize {
         self.per_fpga_counts(p).into_iter().max().unwrap_or(0)
     }
+
+    /// Iteration makespan in seconds under a per-device cost model: the
+    /// slowest FPGA bounds the synchronous iteration.
+    pub fn makespan_seconds(&self, cost: &CostModel) -> f64 {
+        self.per_fpga_counts(cost.len())
+            .iter()
+            .zip(&cost.batch_s)
+            .map(|(&c, &s)| c as f64 * s)
+            .fold(0.0f64, f64::max)
+    }
 }
 
-/// Two-stage scheduler state (Algorithm 3's `cnt` survives across
-/// iterations so round-robin sampling rotates through partitions).
+/// Stage-2 assignment mode (`--sched`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Algorithm 3 as published: balance batch counts (one extra per idle
+    /// FPGA, idle list walked in index order).
+    BatchCount,
+    /// Least-estimated-finish-time assignment under a per-device
+    /// [`CostModel`] — reduces makespan-*seconds* on heterogeneous
+    /// fleets; identical to `BatchCount` when all devices cost the same.
+    Cost,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> anyhow::Result<SchedMode> {
+        match s {
+            "batch-count" | "batchcount" => Ok(SchedMode::BatchCount),
+            "cost" => Ok(SchedMode::Cost),
+            other => anyhow::bail!("unknown scheduler mode '{other}' (batch-count|cost)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::BatchCount => "batch-count",
+            SchedMode::Cost => "cost",
+        }
+    }
+
+    pub const ALL: [SchedMode; 2] = [SchedMode::BatchCount, SchedMode::Cost];
+}
+
+/// Per-device cost model: estimated seconds per mini-batch on each FPGA.
+/// Built by `perf::FleetModel::cost_model` from the fleet's per-device
+/// §6.2 timing models; the scheduler itself only consumes the seconds.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub batch_s: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn new(batch_s: Vec<f64>) -> CostModel {
+        assert!(!batch_s.is_empty(), "cost model needs at least one device");
+        assert!(
+            batch_s.iter().all(|s| s.is_finite() && *s > 0.0),
+            "per-batch costs must be finite and positive: {batch_s:?}"
+        );
+        CostModel { batch_s }
+    }
+
+    /// Uniform costs — makes [`SchedMode::Cost`] coincide with
+    /// [`SchedMode::BatchCount`] (useful as a homogeneous reference).
+    pub fn uniform(p: usize) -> CostModel {
+        CostModel::new(vec![1.0; p])
+    }
+
+    pub fn len(&self) -> usize {
+        self.batch_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch_s.is_empty()
+    }
+}
+
+/// Two-stage scheduler state. The round-robin cursor (Algorithm 3's
+/// `cnt`) survives across iterations so stage-2 sampling rotates through
+/// partitions.
 #[derive(Clone, Debug)]
 pub struct TwoStageScheduler {
     p: usize,
     /// WB optimization on (two-stage) or off (baseline assignment).
     pub workload_balancing: bool,
-    cnt: usize,
+    /// Persistent round-robin cursor over *partition ids*. Indexing a
+    /// filtered still-available list (`still[cnt % still.len()]`, the
+    /// pre-fix behaviour) skews toward low-index partitions whenever the
+    /// list length changes between picks; a cursor over ids that skips
+    /// empties keeps the rotation fair as partitions drain.
+    cursor: usize,
+    /// `Some` → stage-2 extras use least-estimated-finish-time
+    /// assignment; `None` → Algorithm 3's batch-count balancing.
+    cost: Option<CostModel>,
 }
 
 impl TwoStageScheduler {
     pub fn new(p: usize, workload_balancing: bool) -> TwoStageScheduler {
         assert!(p >= 1);
-        TwoStageScheduler { p, workload_balancing, cnt: 0 }
+        TwoStageScheduler { p, workload_balancing, cursor: 0, cost: None }
+    }
+
+    /// Cost-aware scheduler ([`SchedMode::Cost`]); `cost` must have one
+    /// entry per FPGA.
+    pub fn with_cost(p: usize, workload_balancing: bool, cost: CostModel) -> TwoStageScheduler {
+        assert!(p >= 1);
+        assert_eq!(cost.len(), p, "cost model must have one entry per FPGA");
+        TwoStageScheduler { p, workload_balancing, cursor: 0, cost: Some(cost) }
+    }
+
+    /// Build for a mode (uniform-cost reference when `Cost` is requested
+    /// without a measured model).
+    pub fn for_mode(p: usize, workload_balancing: bool, mode: SchedMode, cost: Option<CostModel>) -> TwoStageScheduler {
+        match (mode, cost) {
+            (SchedMode::Cost, Some(c)) => TwoStageScheduler::with_cost(p, workload_balancing, c),
+            (SchedMode::Cost, None) => {
+                TwoStageScheduler::with_cost(p, workload_balancing, CostModel::uniform(p))
+            }
+            (SchedMode::BatchCount, _) => TwoStageScheduler::new(p, workload_balancing),
+        }
+    }
+
+    /// Advance the persistent cursor to the next partition with batches
+    /// remaining (Algorithm 3's `cnt`, robust to drained partitions).
+    fn next_available(&mut self, rem: &[usize]) -> Option<usize> {
+        if rem.iter().all(|&r| r == 0) {
+            return None;
+        }
+        loop {
+            let j = self.cursor % self.p;
+            self.cursor = self.cursor.wrapping_add(1);
+            if rem[j] > 0 {
+                return Some(j);
+            }
+        }
     }
 
     /// Plan the next iteration given `remaining[i]` = batches left in
@@ -67,7 +200,7 @@ impl TwoStageScheduler {
     /// the epoch). Returns `None` when the epoch is complete.
     ///
     /// The caller must decrement `remaining` according to the returned
-    /// tasks (or use [`TwoStageScheduler::plan_epoch`]).
+    /// tasks (or use [`TwoStageScheduler::plan_iteration_consuming`]).
     pub fn plan_iteration(&mut self, remaining: &[usize]) -> Option<IterationPlan> {
         assert_eq!(remaining.len(), self.p, "remaining must have one entry per partition");
         let total: usize = remaining.iter().sum();
@@ -87,34 +220,59 @@ impl TwoStageScheduler {
 
         // Stage 2. Partitions with batches / idle FPGAs (Algorithm 3
         // lines 11–17).
-        let avail: Vec<usize> = (0..self.p).filter(|&i| rem[i] > 0).collect();
         let idle: Vec<usize> = (0..self.p).filter(|&i| rem[i] == 0).collect();
 
         // Non-idle FPGAs take their own partition's next batch (lines
         // 18–22 distribute to avail FPGAs).
-        for &i in &avail {
+        for i in 0..self.p {
             if rem[i] > 0 {
                 tasks.push(Task { part: i, fpga: i });
                 rem[i] -= 1;
             }
         }
-        // Extra batches for idle FPGAs, sampled round-robin from the
-        // still-available partitions (lines 23–28).
-        for &f in &idle {
-            // advance cnt to a partition that still has batches
-            let still: Vec<usize> = avail.iter().copied().filter(|&j| rem[j] > 0).collect();
-            if still.is_empty() {
+        // Extra batches, sampled round-robin from the still-available
+        // partitions (lines 23–28). The *partition* stream is
+        // mode-independent; only the device each extra lands on differs.
+        let mut extras = Vec::with_capacity(idle.len());
+        for _ in 0..idle.len() {
+            let Some(j) = self.next_available(&rem) else {
                 break;
-            }
-            let j = still[self.cnt % still.len()];
-            self.cnt += 1;
-            rem[j] -= 1;
-            let fpga = if self.workload_balancing {
-                f // WB: idle FPGA takes the extra batch
-            } else {
-                j // baseline: the batch stays on its own partition's FPGA
             };
-            tasks.push(Task { part: j, fpga });
+            rem[j] -= 1;
+            extras.push(j);
+        }
+        if !self.workload_balancing {
+            // baseline: every batch stays on its own partition's FPGA
+            for &j in &extras {
+                tasks.push(Task { part: j, fpga: j });
+            }
+        } else if let Some(cost) = &self.cost {
+            // cost-aware WB: least-estimated-finish-time over *all* FPGAs
+            // (an extra may stack on a fast busy device or leave a slow
+            // idle one empty); ties break toward the lowest index, which
+            // reproduces batch-count assignment on uniform costs.
+            let mut load = vec![0.0f64; self.p];
+            for t in &tasks {
+                load[t.fpga] += cost.batch_s[t.fpga];
+            }
+            for &j in &extras {
+                let mut best = 0usize;
+                let mut best_finish = f64::INFINITY;
+                for (f, &l) in load.iter().enumerate() {
+                    let finish = l + cost.batch_s[f];
+                    if finish < best_finish {
+                        best = f;
+                        best_finish = finish;
+                    }
+                }
+                load[best] += cost.batch_s[best];
+                tasks.push(Task { part: j, fpga: best });
+            }
+        } else {
+            // batch-count WB: idle FPGAs take the extras in index order
+            for (&j, &f) in extras.iter().zip(&idle) {
+                tasks.push(Task { part: j, fpga: f });
+            }
         }
         Some(IterationPlan { tasks })
     }
@@ -154,6 +312,13 @@ impl TwoStageScheduler {
 /// max batch count on one FPGA. This is what WB improves (Table 7).
 pub fn epoch_makespan_batches(plans: &[IterationPlan], p: usize) -> usize {
     plans.iter().map(|pl| pl.makespan_batches(p)).sum()
+}
+
+/// Epoch makespan in seconds under a per-device cost model: Σ over
+/// iterations of the slowest device's estimated compute time. This is
+/// what [`SchedMode::Cost`] improves on heterogeneous fleets.
+pub fn epoch_makespan_seconds(plans: &[IterationPlan], cost: &CostModel) -> f64 {
+    plans.iter().map(|pl| pl.makespan_seconds(cost)).sum()
 }
 
 #[cfg(test)]
@@ -235,6 +400,52 @@ mod tests {
     }
 
     #[test]
+    fn cursor_rotation_survives_partition_drain() {
+        // Regression for the pre-fix `still[cnt % still.len()]` indexing:
+        // when the still-available list shrank between picks the old code
+        // re-picked the same low-index partition back to back. The first
+        // call's extra comes from partition 2; on the next call partition
+        // 1 is back in play but the old indexing picked partition 2 again
+        // — the persistent id cursor must move on to partition 3.
+        let mut s = TwoStageScheduler::new(4, true);
+        let extras_of = |plan: &IterationPlan, rem: &[usize]| -> Vec<usize> {
+            // extras are the tasks beyond the own-partition batches
+            let own: usize = rem.iter().filter(|&&r| r > 0).count();
+            plan.tasks[own..].iter().map(|t| t.part).collect()
+        };
+        let rem1 = [0usize, 1, 2, 2];
+        let plan1 = s.plan_iteration(&rem1).unwrap();
+        assert_eq!(extras_of(&plan1, &rem1), vec![2], "first extra rotates to partition 2");
+        let rem2 = [0usize, 2, 2, 2];
+        let plan2 = s.plan_iteration(&rem2).unwrap();
+        assert_eq!(
+            extras_of(&plan2, &rem2),
+            vec![3],
+            "cursor must advance past partition 2, not re-pick it"
+        );
+    }
+
+    #[test]
+    fn extras_spread_evenly_across_equally_loaded_partitions() {
+        // two drained partitions, three equally loaded ones → the 2
+        // extras per iteration must rotate so no partition is favoured
+        let mut s = TwoStageScheduler::new(5, true);
+        let mut rem = vec![0usize, 0, 30, 30, 30];
+        let mut extras = vec![0usize; 5];
+        for _ in 0..9 {
+            let plan = s.plan_iteration(&rem).unwrap();
+            for (k, t) in plan.tasks.iter().enumerate() {
+                rem[t.part] -= 1;
+                if k >= 3 {
+                    extras[t.part] += 1;
+                }
+            }
+        }
+        // 18 extras over partitions {2,3,4}: exactly 6 each
+        assert_eq!(extras, vec![0, 0, 6, 6, 6], "{extras:?}");
+    }
+
+    #[test]
     fn epoch_ends_with_none() {
         let mut s = TwoStageScheduler::new(2, true);
         assert!(s.plan_iteration(&[0, 0]).is_none());
@@ -269,5 +480,69 @@ mod tests {
         let plans = s.plan_epoch(&[1, 1, 0, 0]);
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].tasks.len(), 2);
+    }
+
+    #[test]
+    fn sched_mode_parse_roundtrip() {
+        for m in SchedMode::ALL {
+            assert_eq!(SchedMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SchedMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn uniform_cost_reproduces_batch_count_plans() {
+        let counts = [9usize, 3, 5, 2];
+        let mut bc = TwoStageScheduler::new(4, true);
+        let mut ca = TwoStageScheduler::with_cost(4, true, CostModel::uniform(4));
+        assert_eq!(bc.plan_epoch(&counts), ca.plan_epoch(&counts));
+    }
+
+    #[test]
+    fn cost_mode_skips_slow_idle_device_for_a_fast_one() {
+        // devices 0 (slow, 2 s/batch) … 3 (fast); partitions 0,2,3 are
+        // drained, one extra is available from partition 1: batch-count
+        // gives it to idle FPGA 0 (the slow one, first in index order),
+        // cost-aware to the fastest idle FPGA.
+        let cost = CostModel::new(vec![2.0, 1.0, 1.0, 1.0]);
+        let rem = [0usize, 2, 0, 0];
+        let mut bc = TwoStageScheduler::new(4, true);
+        let plan_bc = bc.plan_iteration(&rem).unwrap();
+        assert_eq!(plan_bc.tasks[1], Task { part: 1, fpga: 0 });
+        let mut ca = TwoStageScheduler::with_cost(4, true, cost.clone());
+        let plan_ca = ca.plan_iteration(&rem).unwrap();
+        assert_eq!(plan_ca.tasks[1], Task { part: 1, fpga: 2 });
+        assert!(plan_ca.makespan_seconds(&cost) < plan_bc.makespan_seconds(&cost));
+        // identical partition consumption either way (paired modes)
+        let parts = |p: &IterationPlan| {
+            let mut v: Vec<usize> = p.tasks.iter().map(|t| t.part).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(parts(&plan_bc), parts(&plan_ca));
+    }
+
+    #[test]
+    fn cost_mode_stacks_extras_on_fast_busy_device() {
+        // device 3 is >2× slower than device 0: two batches on the fast
+        // busy device beat one on the slow idle one.
+        let cost = CostModel::new(vec![1.0, 1.0, 1.0, 2.5]);
+        let rem = [4usize, 2, 2, 0];
+        let mut ca = TwoStageScheduler::with_cost(4, true, cost.clone());
+        let plan = ca.plan_iteration(&rem).unwrap();
+        let counts = plan.per_fpga_counts(4);
+        assert_eq!(counts[3], 0, "slow idle device stays empty: {counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 4);
+        assert!((plan.makespan_seconds(&cost) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_seconds_matches_batches_under_uniform_cost() {
+        let counts = [7usize, 3, 5, 1];
+        let mut s = TwoStageScheduler::new(4, false);
+        let plans = s.plan_epoch(&counts);
+        let batches = epoch_makespan_batches(&plans, 4) as f64;
+        let seconds = epoch_makespan_seconds(&plans, &CostModel::uniform(4));
+        assert!((batches - seconds).abs() < 1e-12);
     }
 }

@@ -6,7 +6,9 @@
 //! executed batches may leak into the metrics).
 
 use hitgnn::coordinator::{TrainConfig, Trainer};
+use hitgnn::fpga::parse_fleet;
 use hitgnn::partition::Algorithm;
+use hitgnn::sched::SchedMode;
 use hitgnn::store::CachePolicy;
 
 fn base_cfg() -> TrainConfig {
@@ -128,6 +130,51 @@ fn fetch_dedup_only_moves_host_bytes_and_defaults_on() {
     // conservation: dedup reclassifies host bytes, byte-for-byte
     assert_eq!(h_off, h_on + s_on);
     assert!(s_on > 0, "expected iteration-level dedup savings");
+}
+
+#[test]
+fn determinism_holds_across_sched_modes_on_heterogeneous_fleet() {
+    // ISSUE 3 acceptance: the determinism law (bit-identical loss and
+    // Traffic across pipeline configurations) must hold in *both*
+    // scheduler modes on a heterogeneous fleet. Full epochs (no cap) so
+    // the stage-2 tail — where the modes actually assign differently —
+    // is exercised.
+    let cfg_for = |mode: SchedMode| {
+        let mut c = base_cfg();
+        c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+        c.sched = mode;
+        // one full (uncapped) epoch reaches the end-of-epoch tail
+        c.epochs = 1;
+        c.max_iterations = None;
+        c
+    };
+    let mut per_mode = Vec::new();
+    for mode in SchedMode::ALL {
+        let base = run_cfg(cfg_for(mode), 1, 1);
+        assert!(!base.0.is_empty(), "no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()));
+        for (ht, d) in [(4, 1), (4, 3)] {
+            let got = run_cfg(cfg_for(mode), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "{mode:?}: loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+            );
+            assert_eq!(base.1, got.1, "{mode:?}: traffic diverged at ({ht}, {d})");
+            assert_eq!(base.2, got.2, "{mode:?}: batch count diverged at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "{mode:?}: iteration count diverged at ({ht}, {d})");
+        }
+        per_mode.push(base);
+    }
+    // the modes are paired ablations: identical (part, seq) consumption
+    // per iteration means a bit-identical loss sequence and identical
+    // batch/iteration counts — only the device assignment (and therefore
+    // the Traffic split) may move between them
+    assert_eq!(
+        per_mode[0].0, per_mode[1].0,
+        "batch-count and cost modes must produce bit-identical losses"
+    );
+    assert_eq!(per_mode[0].2, per_mode[1].2);
+    assert_eq!(per_mode[0].3, per_mode[1].3);
 }
 
 #[test]

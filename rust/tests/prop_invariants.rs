@@ -7,7 +7,7 @@ use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, preprocess_with_policy, Algorithm};
 use hitgnn::perf::{PlatformModel, PlatformSpec, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
-use hitgnn::sched::TwoStageScheduler;
+use hitgnn::sched::{epoch_makespan_seconds, CostModel, TwoStageScheduler};
 use hitgnn::store::{CachePolicy, FeatureStore};
 use hitgnn::util::json::Json;
 use hitgnn::util::proptest::{check, require};
@@ -26,7 +26,14 @@ fn scheduler_executes_every_batch_exactly_once() {
             return Ok(());
         }
         let wb = rng.bool(0.5);
-        let mut sched = TwoStageScheduler::new(p, wb);
+        // cover both assignment modes: batch-count and cost-aware over a
+        // random heterogeneous fleet
+        let mut sched = if rng.bool(0.5) {
+            TwoStageScheduler::new(p, wb)
+        } else {
+            let batch_s: Vec<f64> = (0..p).map(|_| 0.5 + rng.f64() * 4.0).collect();
+            TwoStageScheduler::with_cost(p, wb, CostModel::new(batch_s))
+        };
         let plans = sched.plan_epoch(&counts);
         let mut consumed = vec![0usize; p];
         for plan in &plans {
@@ -37,6 +44,42 @@ fn scheduler_executes_every_batch_exactly_once() {
             }
         }
         require(consumed == counts, &format!("{consumed:?} != {counts:?}"))
+    });
+}
+
+#[test]
+fn cost_aware_makespan_seconds_never_worse_than_batch_count() {
+    check("cost dominance", 96, |rng| {
+        let p = 2 + rng.index(6);
+        let counts: Vec<usize> = (0..p).map(|_| rng.index(30)).collect();
+        if counts.iter().sum::<usize>() == 0 {
+            return Ok(());
+        }
+        // random heterogeneous fleet: per-device batch seconds in [0.5, 4.5)
+        let batch_s: Vec<f64> = (0..p).map(|_| 0.5 + rng.f64() * 4.0).collect();
+        let cost = CostModel::new(batch_s);
+        let mut bc = TwoStageScheduler::new(p, true);
+        let mut ca = TwoStageScheduler::with_cost(p, true, cost.clone());
+        let plans_bc = bc.plan_epoch(&counts);
+        let plans_ca = ca.plan_epoch(&counts);
+        let m_bc = epoch_makespan_seconds(&plans_bc, &cost);
+        let m_ca = epoch_makespan_seconds(&plans_ca, &cost);
+        require(
+            m_ca <= m_bc + 1e-9,
+            &format!("cost {m_ca} worse than batch-count {m_bc} for {counts:?}"),
+        )?;
+        // the two modes are paired: same iteration count and the same
+        // partition multiset per iteration (only device assignment moves)
+        require(plans_bc.len() == plans_ca.len(), "iteration structure diverged")?;
+        for (a, b) in plans_bc.iter().zip(&plans_ca) {
+            let parts = |pl: &hitgnn::sched::IterationPlan| {
+                let mut v: Vec<usize> = pl.tasks.iter().map(|t| t.part).collect();
+                v.sort_unstable();
+                v
+            };
+            require(parts(a) == parts(b), "per-iteration partition stream diverged")?;
+        }
+        Ok(())
     });
 }
 
