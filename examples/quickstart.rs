@@ -13,12 +13,16 @@ use hitgnn::store::CachePolicy;
 
 fn main() -> anyhow::Result<()> {
     // --- Design phase (Listing 1 lines 1–22) ---------------------------
+    // Depth is one line of user code: fanouts() sets L and the per-layer
+    // fanouts (input-side hop first, DESIGN.md §Mini-batch wire format) —
+    // here a 3-layer GraphSAGE-style recipe scaled to the tiny dataset.
     let design = HitGnn::new()
         .load_input_graph("tiny", 0)          // LoadInputGraph()
         .graph_partition(Algorithm::DistDgl)  // Graph_Partition()
         .feature_storing(CachePolicy::Lfu, 0.2) // Feature_Storing(policy, ratio)
         .gnn_computation("gcn")               // GNN_Computation('GCN')
-        .gnn_parameters(2, 128)               // GNN_Parameters(L=2, hidden)
+        .gnn_parameters(3, 128)               // GNN_Parameters(L=3, hidden)
+        .fanouts(&[3, 2, 2])                  // per-layer fanouts (sets L)
         .fpga_metadata(hitgnn::fpga::U250)    // FPGA_Metadata()
         .platform_metadata(2, 16.0, 205.0)    // Platform_Metadata()
         .seed(7)
@@ -32,6 +36,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- Runtime phase (Listing 1 lines 24–28) ---------------------------
+    // the host program trains the 3-layer model end to end on the
+    // reference executor (the entry is synthesized from the fanouts)
     let report = design.start_training(3)?; // Start_training(epochs=3)
     for e in &report.epochs {
         println!(

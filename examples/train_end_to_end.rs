@@ -10,7 +10,8 @@
 //! PJRT CPU client; Python is not involved. The recorded run lives in
 //! EXPERIMENTS.md §End-to-end.
 //!
-//! Flags: --dataset --model --epochs --fpgas --scale-shift --report <file>
+//! Flags: --dataset --model --fanouts --epochs --fpgas --scale-shift
+//!        --report <file>
 
 use hitgnn::coordinator::{TrainConfig, Trainer};
 use hitgnn::util::cli::Args;
@@ -21,6 +22,12 @@ fn main() -> anyhow::Result<()> {
     let cfg = TrainConfig {
         dataset: args.str("dataset", "ogbn-products"),
         model: args.str("model", "gcn"),
+        // e.g. --fanouts 15,10,5 trains the 3-layer DistDGL recipe on the
+        // reference executor; default = the dataset artifact's depth
+        fanouts: args
+            .opt_str("fanouts")
+            .map(|s| hitgnn::sampling::parse_fanouts(&s))
+            .transpose()?,
         num_fpgas: args.num("fpgas", 4)?,
         epochs: args.num("epochs", 10)?,
         lr: args.num("lr", 0.1)?,
@@ -81,8 +88,8 @@ fn main() -> anyhow::Result<()> {
         m0.sample_seconds, m0.gather_seconds, m0.execute_seconds, m0.sync_seconds
     );
     println!(
-        "  measured mean batch shape [v0 v1 v2 a1 a2] = {:?}",
-        report.mean_shape.map(|x| x.round())
+        "  measured mean batch shape [v_0..v_L a_1..a_L] = {:?}",
+        report.mean_shape.iter().map(|x| x.round()).collect::<Vec<_>>()
     );
 
     if let Some(path) = report_path {

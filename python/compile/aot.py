@@ -7,6 +7,12 @@ instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
 parser reassigns ids and round-trips cleanly (see
 /opt/xla-example/README.md).
 
+Depth: `--fanouts 15,10,5` builds L-layer artifacts (one idx/w input pair
+per layer; DESIGN.md §Mini-batch wire format order — input-side hop
+first). `--k1/--k2` remain as 2-layer aliases. A 3-layer SAGE tiny
+artifact is exported alongside the tiny pair, mirroring the Rust builtin
+manifest.
+
 Run from python/:  python -m compile.aot --out-dir ../artifacts
 `make artifacts` is a no-op if the outputs are newer than the inputs.
 """
@@ -20,8 +26,8 @@ import sys
 import jax
 
 from .model import (
-    BATCH_ORDER,
     ModelDims,
+    batch_order,
     example_args,
     init_params,
     make_predict,
@@ -43,6 +49,11 @@ TINY = dict(f0=32, f1=16, f2=8)
 MODELS = ["gcn", "sage"]
 
 
+def feature_widths(d, layers):
+    """[f0, f1 × (L-1), f2] — one width per level."""
+    return [d["f0"]] + [d["f1"]] * (layers - 1) + [d["f2"]]
+
+
 def to_hlo_text(fn, specs) -> str:
     """jitted fn + example shapes -> HLO text via stablehlo."""
     from jax._src.lib import xla_client as xc
@@ -55,19 +66,35 @@ def to_hlo_text(fn, specs) -> str:
     return comp.as_hlo_text()
 
 
-def entry_name(kind: str, model: str, dataset: str) -> str:
-    return f"{kind}_{model}_{dataset.replace('-', '_')}"
+def entry_name(kind: str, model: str, dataset: str, layers: int = 2) -> str:
+    base = f"{kind}_{model}_{dataset.replace('-', '_')}"
+    return base if layers == 2 else f"{base}_l{layers}"
+
+
+def dims_dict(dims: ModelDims):
+    """Manifest dims: the depth-L keys, plus the legacy 2-layer keys so
+    older runtimes keep parsing default-depth artifacts."""
+    d = {
+        "b": dims.b,
+        "fanouts": list(dims.fanouts),
+        "caps": list(dims.caps),
+        "f": list(dims.f),
+    }
+    if dims.layers == 2:
+        d.update(k1=dims.k1, k2=dims.k2, v1_cap=dims.v1_cap, v0_cap=dims.v0_cap,
+                 f0=dims.f0, f1=dims.f1, f2=dims.f2)
+    return d
 
 
 def export_entry(kind, model, dataset, dims: ModelDims, out_dir):
     fn = make_train_step(model, dims) if kind == "train" else make_predict(model, dims)
     specs = example_args(model, dims)
     text = to_hlo_text(fn, specs)
-    name = entry_name(kind, model, dataset)
+    name = entry_name(kind, model, dataset, dims.layers)
     fname = f"{name}.hlo.txt"
     with open(os.path.join(out_dir, fname), "w") as f:
         f.write(text)
-    pnames = param_order(model)
+    pnames = param_order(model, dims.layers)
     params = init_params(model, dims)
     outputs = ["loss"] + [f"grad_{n}" for n in pnames] if kind == "train" else ["logits"]
     return {
@@ -76,12 +103,22 @@ def export_entry(kind, model, dataset, dims: ModelDims, out_dir):
         "model": model,
         "dataset": dataset,
         "file": fname,
-        "dims": dims.__dict__,
+        "dims": dims_dict(dims),
         "params": [{"name": n, "shape": list(params[n].shape)} for n in pnames],
-        "inputs": pnames + BATCH_ORDER,
+        "inputs": pnames + batch_order(dims.layers),
         "outputs": outputs,
         "hlo_sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
     }
+
+
+def parse_fanouts(text):
+    try:
+        fanouts = [int(t.strip()) for t in text.split(",")]
+    except ValueError as e:
+        raise SystemExit(f"--fanouts '{text}': {e}")
+    if not fanouts or any(k < 1 for k in fanouts):
+        raise SystemExit(f"--fanouts '{text}': every fanout must be >= 1")
+    return fanouts
 
 
 def main(argv=None) -> int:
@@ -89,16 +126,22 @@ def main(argv=None) -> int:
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--batch", type=int, default=256,
                     help="target capacity B of the execution-path artifacts")
-    ap.add_argument("--k1", type=int, default=10, help="layer-1 fanout")
-    ap.add_argument("--k2", type=int, default=5, help="layer-2 fanout")
+    ap.add_argument("--fanouts", default=None,
+                    help="per-layer fanouts, input-side hop first "
+                         "(e.g. 15,10,5); default 10,5")
+    ap.add_argument("--k1", type=int, default=10,
+                    help="legacy 2-layer alias: layer-1 fanout")
+    ap.add_argument("--k2", type=int, default=5,
+                    help="legacy 2-layer alias: layer-2 fanout")
     ap.add_argument("--datasets", default="all",
                     help="comma list or 'all' or 'tiny-only'")
     ap.add_argument("--models", default="gcn,sage")
     ap.add_argument("--no-tiny", action="store_true",
-                    help="skip the tiny test artifact")
+                    help="skip the tiny test artifacts (incl. the 3-layer one)")
     args = ap.parse_args(argv)
 
     os.makedirs(args.out_dir, exist_ok=True)
+    fanouts = parse_fanouts(args.fanouts) if args.fanouts else [args.k1, args.k2]
     models = [m.strip() for m in args.models.split(",") if m.strip()]
     if args.datasets == "all":
         datasets = list(DATASETS)
@@ -111,23 +154,30 @@ def main(argv=None) -> int:
     for model in models:
         for ds in datasets:
             f = DATASETS[ds]
-            dims = ModelDims.from_batch(args.batch, args.k1, args.k2,
-                                        f["f0"], f["f1"], f["f2"])
+            dims = ModelDims.from_fanouts(args.batch, fanouts,
+                                          feature_widths(f, len(fanouts)))
             for kind in ("train", "predict"):
                 e = export_entry(kind, model, ds, dims, args.out_dir)
                 entries.append(e)
                 print(f"wrote {e['file']}", file=sys.stderr)
         if not args.no_tiny:
-            dims = ModelDims.from_batch(32, 3, 2, TINY["f0"], TINY["f1"], TINY["f2"])
+            dims = ModelDims.from_fanouts(32, (3, 2), feature_widths(TINY, 2))
             for kind in ("train", "predict"):
                 e = export_entry(kind, model, "tiny", dims, args.out_dir)
                 entries.append(e)
                 print(f"wrote {e['file']}", file=sys.stderr)
+    if not args.no_tiny and "sage" in models:
+        # 3-layer SAGE tiny artifact (mirrors the Rust builtin manifest)
+        dims = ModelDims.from_fanouts(32, (3, 2, 2), feature_widths(TINY, 3))
+        for kind in ("train", "predict"):
+            e = export_entry(kind, "sage", "tiny", dims, args.out_dir)
+            entries.append(e)
+            print(f"wrote {e['file']}", file=sys.stderr)
 
     manifest = {
         "version": 1,
         "jax": jax.__version__,
-        "batch": {"b": args.batch, "k1": args.k1, "k2": args.k2},
+        "batch": {"b": args.batch, "fanouts": fanouts},
         "entries": entries,
     }
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:

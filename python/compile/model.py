@@ -2,15 +2,18 @@
 train steps over the fixed-shape padded mini-batch wire format
 (DESIGN.md §Mini-batch wire format), calling the L1 Pallas kernels.
 
+Depth is a first-class parameter: an L-layer model consumes one
+(idx, w) pair per layer. Levels are numbered 0..L (level L = targets,
+level 0 = input features); ``fanouts[l-1]`` is the layer-l fanout with
+the input-side hop first — the order is documented once in DESIGN.md.
 The Rust sampler emits, per batch:
 
-    feat0  [v0_cap, f0] f32   layer-0 features (gathered by the host)
-    idx1   [v1_cap, k1+1] i32 positions into feat0 rows; col 0 = self
-    w1     [v1_cap, k1+1] f32 aggregation weights (0 = padding)
-    idx2   [b, k2+1] i32      positions into layer-1 rows; col 0 = self
-    w2     [b, k2+1] f32
-    labels [b] i32
-    mask   [b] f32            1 for real targets, 0 for padding
+    feat0    [caps[0], f0] f32            level-0 features (host-gathered)
+    idx{l}   [caps[l], fanouts[l-1]+1] i32  positions into level l-1 rows;
+                                            col 0 = self   (l = 1..L)
+    w{l}a    [caps[l], fanouts[l-1]+1] f32  aggregation weights (0 = pad)
+    labels   [b] i32
+    mask     [b] f32                      1 for real targets, 0 for padding
 
 GCN uses the full (k+1)-wide weighted sum (self edge included in w by the
 sampler, symmetric normalisation). GraphSAGE splits self and neighbors:
@@ -32,22 +35,68 @@ from .kernels import aggregate, matmul, update
 
 @dataclass(frozen=True)
 class ModelDims:
-    """Static shapes of one artifact (must match the Rust sampler config)."""
+    """Static shapes of one artifact (must match the Rust sampler config).
+
+    ``fanouts``/``caps``/``f`` are per-layer/per-level tuples as in the
+    Rust ``ArtifactDims`` (caps[L] == b; f[0] input width, f[L] classes).
+    """
 
     b: int
-    k1: int
-    k2: int
-    v1_cap: int
-    v0_cap: int
-    f0: int
-    f1: int
-    f2: int
+    fanouts: Tuple[int, ...]
+    caps: Tuple[int, ...]
+    f: Tuple[int, ...]
+
+    @property
+    def layers(self) -> int:
+        return len(self.fanouts)
+
+    # -- legacy 2-layer accessors (tests, older tooling) -------------------
+    @property
+    def k1(self) -> int:
+        return self.fanouts[0]
+
+    @property
+    def k2(self) -> int:
+        return self.fanouts[1]
+
+    @property
+    def v1_cap(self) -> int:
+        return self.caps[1]
+
+    @property
+    def v0_cap(self) -> int:
+        return self.caps[0]
+
+    @property
+    def f0(self) -> int:
+        return self.f[0]
+
+    @property
+    def f1(self) -> int:
+        return self.f[1]
+
+    @property
+    def f2(self) -> int:
+        return self.f[-1]
+
+    @staticmethod
+    def from_fanouts(b: int, fanouts, f) -> "ModelDims":
+        """Depth-L constructor: capacities follow the wire-format
+        recurrence caps[l-1] = caps[l]·(fanouts[l-1]+1)."""
+        fanouts = tuple(fanouts)
+        f = tuple(f)
+        assert len(f) == len(fanouts) + 1, "need one feature width per level"
+        assert fanouts and all(k >= 1 for k in fanouts), fanouts
+        caps = [0] * (len(fanouts) + 1)
+        caps[len(fanouts)] = b
+        for l in range(len(fanouts), 0, -1):
+            caps[l - 1] = caps[l] * (fanouts[l - 1] + 1)
+        return ModelDims(b, fanouts, tuple(caps), f)
 
     @staticmethod
     def from_batch(b: int, k1: int, k2: int, f0: int, f1: int, f2: int) -> "ModelDims":
-        v1_cap = b * (k2 + 1)
-        v0_cap = v1_cap * (k1 + 1)
-        return ModelDims(b, k1, k2, v1_cap, v0_cap, f0, f1, f2)
+        """Legacy 2-layer constructor."""
+        return ModelDims.from_fanouts(b, (k1, k2), (f0, f1, f2))
 
 
 # ---------------------------------------------------------------------------
@@ -63,37 +112,49 @@ def _glorot(key, shape):
 def init_params(model: str, dims: ModelDims, seed: int = 0) -> Dict[str, jnp.ndarray]:
     """Deterministic parameter pytree (dict, insertion-ordered)."""
     key = jax.random.PRNGKey(seed)
-    ks = jax.random.split(key, 4)
-    f0, f1, f2 = dims.f0, dims.f1, dims.f2
+    L = dims.layers
     if model == "gcn":
-        return {
-            "w1": _glorot(ks[0], (f0, f1)),
-            "b1": jnp.zeros((f1,), jnp.float32),
-            "w2": _glorot(ks[1], (f1, f2)),
-            "b2": jnp.zeros((f2,), jnp.float32),
-        }
+        ks = jax.random.split(key, L)
+        params = {}
+        for l in range(1, L + 1):
+            params[f"w{l}"] = _glorot(ks[l - 1], (dims.f[l - 1], dims.f[l]))
+            params[f"b{l}"] = jnp.zeros((dims.f[l],), jnp.float32)
+        return params
     if model == "sage":
-        return {
-            "w1_self": _glorot(ks[0], (f0, f1)),
-            "w1_nbr": _glorot(ks[1], (f0, f1)),
-            "b1": jnp.zeros((f1,), jnp.float32),
-            "w2_self": _glorot(ks[2], (f1, f2)),
-            "w2_nbr": _glorot(ks[3], (f1, f2)),
-            "b2": jnp.zeros((f2,), jnp.float32),
-        }
+        ks = jax.random.split(key, 2 * L)
+        params = {}
+        for l in range(1, L + 1):
+            params[f"w{l}_self"] = _glorot(ks[2 * (l - 1)], (dims.f[l - 1], dims.f[l]))
+            params[f"w{l}_nbr"] = _glorot(ks[2 * (l - 1) + 1], (dims.f[l - 1], dims.f[l]))
+            params[f"b{l}"] = jnp.zeros((dims.f[l],), jnp.float32)
+        return params
     raise ValueError(f"unknown model '{model}' (gcn|sage)")
 
 
-def param_order(model: str) -> List[str]:
+def param_order(model: str, layers: int = 2) -> List[str]:
     """Canonical flat ordering used by the AOT artifact interface."""
-    if model == "gcn":
-        return ["w1", "b1", "w2", "b2"]
-    if model == "sage":
-        return ["w1_self", "w1_nbr", "b1", "w2_self", "w2_nbr", "b2"]
-    raise ValueError(model)
+    names: List[str] = []
+    for l in range(1, layers + 1):
+        if model == "gcn":
+            names += [f"w{l}", f"b{l}"]
+        elif model == "sage":
+            names += [f"w{l}_self", f"w{l}_nbr", f"b{l}"]
+        else:
+            raise ValueError(model)
+    return names
 
 
-BATCH_ORDER = ["feat0", "idx1", "w1a", "idx2", "w2a", "labels", "mask"]
+def batch_order(layers: int = 2) -> List[str]:
+    """Flat batch-input ordering: feat0, per-layer (idx, w) from the
+    input side up, labels, mask."""
+    names = ["feat0"]
+    for l in range(1, layers + 1):
+        names += [f"idx{l}", f"w{l}a"]
+    return names + ["labels", "mask"]
+
+
+# Legacy alias: the 2-layer batch order (older tests/tools import this).
+BATCH_ORDER = batch_order(2)
 
 
 # ---------------------------------------------------------------------------
@@ -107,12 +168,14 @@ def _gcn_layer(h, idx, w, wmat, bias, act):
 
 
 def gcn_forward(params, batch) -> jnp.ndarray:
-    """2-layer GCN → logits [b, f2]."""
-    h1 = _gcn_layer(batch["feat0"], batch["idx1"], batch["w1a"],
-                    params["w1"], params["b1"], jax.nn.relu)
-    logits = _gcn_layer(h1, batch["idx2"], batch["w2a"],
-                        params["w2"], params["b2"], lambda x: x)
-    return logits
+    """L-layer GCN → logits [b, f[L]] (L inferred from the params)."""
+    L = len(params) // 2
+    h = batch["feat0"]
+    for l in range(1, L + 1):
+        act = jax.nn.relu if l < L else (lambda x: x)
+        h = _gcn_layer(h, batch[f"idx{l}"], batch[f"w{l}a"],
+                       params[f"w{l}"], params[f"b{l}"], act)
+    return h
 
 
 def _sage_layer(h, idx, w, w_self, w_nbr, bias, act):
@@ -125,13 +188,15 @@ def _sage_layer(h, idx, w, w_self, w_nbr, bias, act):
 
 
 def sage_forward(params, batch) -> jnp.ndarray:
-    """2-layer GraphSAGE-mean → logits [b, f2]."""
-    h1 = _sage_layer(batch["feat0"], batch["idx1"], batch["w1a"],
-                     params["w1_self"], params["w1_nbr"], params["b1"], jax.nn.relu)
-    logits = _sage_layer(h1, batch["idx2"], batch["w2a"],
-                         params["w2_self"], params["w2_nbr"], params["b2"],
-                         lambda x: x)
-    return logits
+    """L-layer GraphSAGE-mean → logits [b, f[L]]."""
+    L = len(params) // 3
+    h = batch["feat0"]
+    for l in range(1, L + 1):
+        act = jax.nn.relu if l < L else (lambda x: x)
+        h = _sage_layer(h, batch[f"idx{l}"], batch[f"w{l}a"],
+                        params[f"w{l}_self"], params[f"w{l}_nbr"],
+                        params[f"b{l}"], act)
+    return h
 
 
 FORWARD = {"gcn": gcn_forward, "sage": sage_forward}
@@ -152,16 +217,18 @@ def loss_fn(params, batch, model: str, num_classes: int) -> jnp.ndarray:
 
 def make_train_step(model: str, dims: ModelDims):
     """Flat-signature train step for AOT lowering:
-    (*params, feat0, idx1, w1a, idx2, w2a, labels, mask) -> (loss, *grads).
+    (*params, feat0, idx1, w1a, .., idxL, wLa, labels, mask)
+    -> (loss, *grads).
     """
-    names = param_order(model)
+    names = param_order(model, dims.layers)
+    border = batch_order(dims.layers)
 
     def train_step(*args):
         params = dict(zip(names, args[: len(names)]))
         fvals = args[len(names):]
-        batch = dict(zip(BATCH_ORDER, fvals))
+        batch = dict(zip(border, fvals))
         loss, grads = jax.value_and_grad(
-            lambda p: loss_fn(p, batch, model, dims.f2)
+            lambda p: loss_fn(p, batch, model, dims.f[-1])
         )(params)
         return (loss,) + tuple(grads[n] for n in names)
 
@@ -170,11 +237,12 @@ def make_train_step(model: str, dims: ModelDims):
 
 def make_predict(model: str, dims: ModelDims):
     """Flat-signature inference: (*params, feat0..mask) -> (logits,)."""
-    names = param_order(model)
+    names = param_order(model, dims.layers)
+    border = batch_order(dims.layers)
 
     def predict(*args):
         params = dict(zip(names, args[: len(names)]))
-        batch = dict(zip(BATCH_ORDER, args[len(names):]))
+        batch = dict(zip(border, args[len(names):]))
         logits = FORWARD[model](params, batch)
         # keep labels/mask alive in the jaxpr so the lowered artifact has
         # the same input arity as the train step (jax.jit prunes unused
@@ -190,14 +258,12 @@ def example_args(model: str, dims: ModelDims):
     s = jax.ShapeDtypeStruct
     f32, i32 = jnp.float32, jnp.int32
     params = init_params(model, dims)
-    specs = [s(params[n].shape, f32) for n in param_order(model)]
-    specs += [
-        s((dims.v0_cap, dims.f0), f32),           # feat0
-        s((dims.v1_cap, dims.k1 + 1), i32),       # idx1
-        s((dims.v1_cap, dims.k1 + 1), f32),       # w1a
-        s((dims.b, dims.k2 + 1), i32),            # idx2
-        s((dims.b, dims.k2 + 1), f32),            # w2a
-        s((dims.b,), i32),                        # labels
-        s((dims.b,), f32),                        # mask
-    ]
+    specs = [s(params[n].shape, f32) for n in param_order(model, dims.layers)]
+    specs.append(s((dims.caps[0], dims.f[0]), f32))          # feat0
+    for l in range(1, dims.layers + 1):
+        rows, k = dims.caps[l], dims.fanouts[l - 1] + 1
+        specs.append(s((rows, k), i32))                      # idx{l}
+        specs.append(s((rows, k), f32))                      # w{l}a
+    specs.append(s((dims.b,), i32))                          # labels
+    specs.append(s((dims.b,), f32))                          # mask
     return specs

@@ -28,14 +28,27 @@ def test_manifest_schema(tiny_artifacts):
     assert m["version"] == 1
     names = {e["name"] for e in m["entries"]}
     assert names == {"train_gcn_tiny", "predict_gcn_tiny",
-                     "train_sage_tiny", "predict_sage_tiny"}
+                     "train_sage_tiny", "predict_sage_tiny",
+                     "train_sage_tiny_l3", "predict_sage_tiny_l3"}
     for e in m["entries"]:
         assert (tiny_artifacts / e["file"]).exists()
         d = e["dims"]
-        assert d["v1_cap"] == d["b"] * (d["k2"] + 1)
-        assert d["v0_cap"] == d["v1_cap"] * (d["k1"] + 1)
-        assert e["inputs"][-7:] == ["feat0", "idx1", "w1a", "idx2", "w2a",
-                                    "labels", "mask"]
+        # depth-L recurrence: caps[L] == b, caps[l-1] = caps[l]·(k_l+1)
+        L = len(d["fanouts"])
+        assert len(d["caps"]) == L + 1 and len(d["f"]) == L + 1
+        assert d["caps"][L] == d["b"]
+        for l in range(L, 0, -1):
+            assert d["caps"][l - 1] == d["caps"][l] * (d["fanouts"][l - 1] + 1)
+        if L == 2:
+            # legacy keys remain for older runtimes
+            assert d["v1_cap"] == d["b"] * (d["k2"] + 1)
+            assert d["v0_cap"] == d["v1_cap"] * (d["k1"] + 1)
+        # wire order: feat0, per-layer (idx, w), labels, mask
+        tail = ["feat0"]
+        for l in range(1, L + 1):
+            tail += [f"idx{l}", f"w{l}a"]
+        tail += ["labels", "mask"]
+        assert e["inputs"][-len(tail):] == tail
         if e["kind"] == "train":
             assert e["outputs"][0] == "loss"
             assert len(e["outputs"]) == 1 + len(e["params"])
@@ -60,3 +73,16 @@ def test_gcn_param_shapes_in_manifest(tiny_artifacts):
     e = next(x for x in m["entries"] if x["name"] == "train_gcn_tiny")
     shapes = {p["name"]: p["shape"] for p in e["params"]}
     assert shapes == {"w1": [32, 16], "b1": [16], "w2": [16, 8], "b2": [8]}
+
+
+def test_three_layer_sage_param_shapes(tiny_artifacts):
+    with open(tiny_artifacts / "manifest.json") as f:
+        m = json.load(f)
+    e = next(x for x in m["entries"] if x["name"] == "train_sage_tiny_l3")
+    assert e["dims"]["fanouts"] == [3, 2, 2]
+    shapes = {p["name"]: p["shape"] for p in e["params"]}
+    assert shapes == {
+        "w1_self": [32, 16], "w1_nbr": [32, 16], "b1": [16],
+        "w2_self": [16, 16], "w2_nbr": [16, 16], "b2": [16],
+        "w3_self": [16, 8], "w3_nbr": [16, 8], "b3": [8],
+    }

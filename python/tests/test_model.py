@@ -10,6 +10,7 @@ from compile.kernels.ref import aggregate_ref, update_ref
 from compile.model import (
     BATCH_ORDER,
     ModelDims,
+    batch_order,
     example_args,
     gcn_forward,
     init_params,
@@ -24,23 +25,25 @@ DIMS = ModelDims.from_batch(8, 3, 2, 12, 10, 5)
 
 
 def rand_batch(dims: ModelDims, seed=0, n_real=None):
-    """Random but structurally valid batch (self col 0, in-range indices)."""
+    """Random but structurally valid batch (self col 0, in-range indices)
+    at any depth L."""
     rng = np.random.default_rng(seed)
     n_real = dims.b if n_real is None else n_real
-    feat0 = rng.normal(size=(dims.v0_cap, dims.f0)).astype(np.float32)
-    idx1 = rng.integers(0, dims.v0_cap, size=(dims.v1_cap, dims.k1 + 1)).astype(np.int32)
-    idx1[:, 0] = np.arange(dims.v1_cap) % dims.v0_cap  # self column
-    w1 = rng.uniform(0.1, 1.0, size=idx1.shape).astype(np.float32)
-    idx2 = rng.integers(0, dims.v1_cap, size=(dims.b, dims.k2 + 1)).astype(np.int32)
-    idx2[:, 0] = np.arange(dims.b) % dims.v1_cap
-    w2 = rng.uniform(0.1, 1.0, size=idx2.shape).astype(np.float32)
-    labels = rng.integers(0, dims.f2, size=(dims.b,)).astype(np.int32)
+    batch = {"feat0": jnp.asarray(
+        rng.normal(size=(dims.caps[0], dims.f[0])).astype(np.float32))}
+    for l in range(1, dims.layers + 1):
+        rows, k = dims.caps[l], dims.fanouts[l - 1] + 1
+        idx = rng.integers(0, dims.caps[l - 1], size=(rows, k)).astype(np.int32)
+        idx[:, 0] = np.arange(rows) % dims.caps[l - 1]  # self column
+        w = rng.uniform(0.1, 1.0, size=idx.shape).astype(np.float32)
+        batch[f"idx{l}"] = jnp.asarray(idx)
+        batch[f"w{l}a"] = jnp.asarray(w)
+    labels = rng.integers(0, dims.f[-1], size=(dims.b,)).astype(np.int32)
     mask = np.zeros((dims.b,), np.float32)
     mask[:n_real] = 1.0
-    return dict(feat0=jnp.asarray(feat0), idx1=jnp.asarray(idx1),
-                w1a=jnp.asarray(w1), idx2=jnp.asarray(idx2),
-                w2a=jnp.asarray(w2), labels=jnp.asarray(labels),
-                mask=jnp.asarray(mask))
+    batch["labels"] = jnp.asarray(labels)
+    batch["mask"] = jnp.asarray(mask)
+    return batch
 
 
 def gcn_forward_ref(params, batch):
@@ -163,3 +166,59 @@ def test_example_args_match_flat_signature():
         flat = [params[n] for n in names] + [batch[k] for k in BATCH_ORDER]
         (logits,) = step(*flat)
         assert logits.shape == (DIMS.b, DIMS.f2)
+
+
+DIMS3 = ModelDims.from_fanouts(6, (2, 2, 2), (9, 7, 7, 4))
+
+
+@pytest.mark.parametrize("model,fwd", [("gcn", gcn_forward), ("sage", sage_forward)])
+def test_three_layer_forward_shapes(model, fwd):
+    params = init_params(model, DIMS3, seed=20)
+    batch = rand_batch(DIMS3, seed=21)
+    logits = fwd(params, batch)
+    assert logits.shape == (DIMS3.b, DIMS3.f[-1])
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_three_layer_train_step_and_grad_shapes(model):
+    params = init_params(model, DIMS3, seed=22)
+    batch = rand_batch(DIMS3, seed=23)
+    step = make_train_step(model, DIMS3)
+    names = param_order(model, DIMS3.layers)
+    flat = [params[n] for n in names] + [batch[k] for k in batch_order(DIMS3.layers)]
+    out = step(*flat)
+    assert len(out) == 1 + len(names)
+    assert jnp.isfinite(out[0])
+    for n, g in zip(names, out[1:]):
+        assert g.shape == params[n].shape, n
+        assert jnp.isfinite(g).all(), n
+
+
+def test_three_layer_gcn_gradient_finite_difference():
+    params = init_params("gcn", DIMS3, seed=24)
+    batch = rand_batch(DIMS3, seed=25)
+    loss = lambda p: loss_fn(p, batch, "gcn", DIMS3.f[-1])
+    grads = jax.grad(loss)(params)
+    eps = 1e-3
+    rng = np.random.default_rng(1)
+    for name in ("w1", "w2", "w3"):
+        i = rng.integers(0, params[name].shape[0])
+        j = rng.integers(0, params[name].shape[1])
+        pp = {k: v.copy() for k, v in params.items()}
+        pp[name] = pp[name].at[i, j].add(eps)
+        pm = {k: v.copy() for k, v in params.items()}
+        pm[name] = pm[name].at[i, j].add(-eps)
+        fd = (loss(pp) - loss(pm)) / (2 * eps)
+        np.testing.assert_allclose(grads[name][i, j], fd, rtol=5e-2, atol=1e-4)
+
+
+def test_batch_order_and_dims_recurrence():
+    assert batch_order(2) == BATCH_ORDER
+    assert batch_order(3) == ["feat0", "idx1", "w1a", "idx2", "w2a",
+                              "idx3", "w3a", "labels", "mask"]
+    assert DIMS3.caps == (6 * 3 * 3 * 3, 6 * 3 * 3, 6 * 3, 6)
+    assert param_order("sage", 3)[-1] == "b3"
+    # the 2-layer legacy accessors still line up
+    assert DIMS.v1_cap == DIMS.b * (DIMS.k2 + 1)
+    assert DIMS.v0_cap == DIMS.v1_cap * (DIMS.k1 + 1)

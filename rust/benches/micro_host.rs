@@ -41,7 +41,7 @@ fn main() {
 
     // --- sampler (the Eq. 5 critical path) ------------------------------
     let pre = preprocess(Algorithm::DistDgl, &data, 4, 0.2, 17);
-    let cfg = FanoutConfig { batch_size: 1024, k1: 25, k2: 10 };
+    let cfg = FanoutConfig::new(1024, &[25, 10]);
     let mut sampler = Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 3);
     let targets: Vec<u32> = pre.train_parts[0]
         .iter()
@@ -71,7 +71,7 @@ fn main() {
         .median_s;
     b.throughput(
         "  gather",
-        (mb.n_v0 * data.features.bytes_per_vertex()) as f64,
+        (mb.n[0] * data.features.bytes_per_vertex()) as f64,
         mg,
         "bytes",
     );
@@ -105,6 +105,7 @@ fn main() {
 
     cache_policy_sweep();
     scheduler_sweep();
+    depth_sweep();
     pipeline_sweep();
 }
 
@@ -121,12 +122,11 @@ fn scheduler_sweep() {
     let spec = datasets::lookup("ogbn-products").unwrap();
     let shape = BatchShape::nominal(
         1024.0,
-        25.0,
-        10.0,
-        [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
+        &[25.0, 10.0],
+        &[spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
     );
     let base_w = |batches_per_part: Vec<usize>, wb: bool| Workload {
-        shape,
+        shape: shape.clone(),
         beta: 0.75,
         param_scale: 1.0,
         sampling_s_per_batch: 2e-3,
@@ -276,6 +276,67 @@ fn cache_policy_sweep() {
         datasets::REGISTRY.len()
     );
     println!("=== end bench: cache-policy sweep ===");
+}
+
+/// Depth sweep (ISSUE 4): sampling cost and modeled per-batch FPGA time
+/// at L ∈ {2, 3} holding per-batch work roughly equal — [25, 10] gives a
+/// level-0 capacity of B·11·26 = 286·B rows, [9, 5, 4] gives
+/// B·5·6·10 = 300·B rows — so the comparison isolates *depth*, not
+/// volume. Depth is thereby visible in the experiment drivers: deeper
+/// models pay one more aggregate/update stage in the §6.2 model and one
+/// more dedup pass in the sampler.
+fn depth_sweep() {
+    println!("\n=== bench: depth sweep (equal per-batch work, ogbn-products shift 5) ===");
+    let spec = datasets::lookup("ogbn-products").unwrap();
+    let data = spec.build(5, 17);
+    let pre = preprocess(Algorithm::DistDgl, &data, 4, 0.2, 17);
+    let widths2 = [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64];
+    let widths3 =
+        [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64];
+    let cases: [(&str, Vec<usize>, &[f64]); 2] = [
+        ("L=2 [25,10]", vec![25, 10], &widths2),
+        ("L=3 [9,5,4]", vec![9, 5, 4], &widths3),
+    ];
+    let timing = hitgnn::fpga::timing::TimingModel::new(
+        hitgnn::fpga::U250,
+        hitgnn::fpga::DEFAULT_DIE,
+        16.0,
+    );
+    let mut t = Table::new(&[
+        "depth",
+        "v0_cap",
+        "sample (ms)",
+        "verts/batch",
+        "modeled FPGA batch (ms)",
+    ]);
+    for (label, fanouts, widths) in cases {
+        let cfg = FanoutConfig::new(1024, &fanouts);
+        cfg.validate().expect("bench fanouts");
+        let dims = cfg.dims();
+        let mut sampler =
+            Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 3);
+        let targets: Vec<u32> = pre.train_parts[0].iter().copied().take(1024).collect();
+        let mut bench = Bench::new("depth");
+        let ms = bench
+            .measure(&format!("sample {label}"), |i| {
+                black_box(sampler.sample(&data, &targets, 0, i))
+            })
+            .median_s;
+        let mb = sampler.sample(&data, &targets, 0, 0);
+        let fanouts_f: Vec<f64> = fanouts.iter().map(|&k| k as f64).collect();
+        let shape = BatchShape::nominal(1024.0, &fanouts_f, widths);
+        let gnn_s = timing.batch(&shape, 0.75, 1.0).gnn_s;
+        assert!(gnn_s > 0.0);
+        t.row(&[
+            label.to_string(),
+            dims.v0_cap().to_string(),
+            format!("{:.2}", ms * 1e3),
+            mb.vertices_traversed().to_string(),
+            format!("{:.3}", gnn_s * 1e3),
+        ]);
+    }
+    t.print();
+    println!("=== end bench: depth sweep ===");
 }
 
 /// Host-pipeline benchmark (ISSUE 1 acceptance): epoch wall-clock over a

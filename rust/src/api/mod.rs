@@ -51,8 +51,14 @@ pub struct HitGnn {
     cache_policy: CachePolicy,
     cache_ratio: f64,
     model: Option<String>,
-    layers: usize,
+    /// Explicit `GNN_Parameters()` depth; reconciled with `fanouts` at
+    /// `generate_design` (order-independent).
+    layers: Option<usize>,
     hidden: usize,
+    /// Per-layer fanouts (DESIGN.md §Mini-batch wire format order). None
+    /// = the paper's 2-layer `[25, 10]` design point / the dataset
+    /// artifact's default at training time.
+    fanouts: Option<Vec<usize>>,
     fpga: FpgaSpec,
     num_fpgas: usize,
     pcie_gbs: f64,
@@ -72,8 +78,9 @@ impl Default for HitGnn {
             cache_policy: CachePolicy::Static,
             cache_ratio: 0.2,
             model: None,
-            layers: 2,
+            layers: None,
             hidden: 128,
+            fanouts: None,
             fpga: crate::fpga::U250,
             num_fpgas: 4,
             pcie_gbs: 16.0,
@@ -119,13 +126,23 @@ impl HitGnn {
         self
     }
 
-    /// `GNN_Parameters()`: L and hidden dim. This reproduction ships L=2
-    /// artifacts with hidden 128 (the paper's evaluation configuration);
-    /// other values are validated against the artifact set at
-    /// `generate_design` time.
+    /// `GNN_Parameters()`: L and hidden dim. Hidden is pinned at 128 (the
+    /// artifact set's width); depth is free — pair any L ≥ 1 with a
+    /// matching [`HitGnn::fanouts`] call (L = 2 defaults to the paper's
+    /// `[25, 10]`). Consistency is validated at `generate_design` time.
     pub fn gnn_parameters(mut self, layers: usize, hidden: usize) -> Self {
-        self.layers = layers;
+        self.layers = Some(layers);
         self.hidden = hidden;
+        self
+    }
+
+    /// Per-layer sampling fanouts (DESIGN.md §Mini-batch wire format
+    /// order: input-side hop first — e.g. `&[15, 10, 5]` is DistDGL's
+    /// canonical 3-layer GraphSAGE recipe). Implies L; a `gnn_parameters`
+    /// call — before or after — must agree (checked at
+    /// `generate_design`).
+    pub fn fanouts(mut self, fanouts: &[usize]) -> Self {
+        self.fanouts = Some(fanouts.to_vec());
         self
     }
 
@@ -171,10 +188,35 @@ impl HitGnn {
             .model
             .clone()
             .ok_or_else(|| anyhow::anyhow!("call gnn_computation() before generate_design()"))?;
+        let fanouts: Vec<usize> = match &self.fanouts {
+            Some(f) => {
+                // order-independent consistency: whichever of
+                // gnn_parameters()/fanouts() came last, they must agree
+                if let Some(layers) = self.layers {
+                    anyhow::ensure!(
+                        f.len() == layers,
+                        "gnn_parameters(L={layers}) disagrees with fanouts({f:?})"
+                    );
+                }
+                f.clone()
+            }
+            None => {
+                let layers = self.layers.unwrap_or(2);
+                anyhow::ensure!(
+                    layers == 2,
+                    "call fanouts() to pick the per-layer fanouts for L={layers} \
+                     (only L=2 has a paper default, [25, 10])"
+                );
+                crate::sampling::PAPER_FANOUTS.to_vec()
+            }
+        };
+        // structural validation only: the level-0 memory bound depends on
+        // the training batch size, which the artifact (not the builder)
+        // owns — Trainer::new enforces it against the real b
         anyhow::ensure!(
-            self.layers == 2,
-            "this reproduction ships 2-layer artifacts (got L={})",
-            self.layers
+            !fanouts.is_empty() && fanouts.iter().all(|&k| k >= 1),
+            "fanouts() must list one fanout >= 1 per layer (got {:?})",
+            fanouts
         );
         anyhow::ensure!(
             self.hidden == 128,
@@ -215,13 +257,13 @@ impl HitGnn {
             if self.cache_policy.is_dynamic() { 2 } else { 1 },
         )?
         .beta;
+        let fanouts_f: Vec<f64> = fanouts.iter().map(|&k| k as f64).collect();
+        let widths: Vec<f64> = crate::runtime::manifest::feature_widths(spec.dims, fanouts.len())
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
         let workload = DseWorkload {
-            shape: BatchShape::nominal(
-                1024.0,
-                25.0,
-                10.0,
-                [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
-            ),
+            shape: BatchShape::nominal(1024.0, &fanouts_f, &widths),
             beta,
             param_scale: if model == "sage" { 2.0 } else { 1.0 },
             sampling_s_per_batch: 2e-3,
@@ -262,6 +304,9 @@ impl HitGnn {
         let train = TrainConfig {
             dataset,
             model,
+            // only an explicit fanouts() call overrides the dataset
+            // artifact's default depth at training time
+            fanouts: self.fanouts.clone(),
             algo: self.algo,
             num_fpgas: self.num_fpgas,
             fleet: Some(fleet.clone()),
@@ -355,12 +400,64 @@ mod tests {
 
     #[test]
     fn builder_validates_artifact_coverage() {
+        // L=3 without an explicit fanout vector has no default
         let r = HitGnn::new()
             .load_input_graph("reddit", 6)
             .gnn_computation("gcn")
             .gnn_parameters(3, 128)
             .generate_design();
-        assert!(r.is_err()); // L=3 not shipped
+        assert!(r.is_err());
+        // hidden width is pinned by the artifact set
+        let r = HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .gnn_computation("gcn")
+            .gnn_parameters(2, 64)
+            .generate_design();
+        assert!(r.is_err());
+        // inconsistent layers × fanouts is rejected in either call order
+        let r = HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .gnn_computation("gcn")
+            .fanouts(&[15, 10, 5])
+            .gnn_parameters(2, 128)
+            .generate_design();
+        assert!(r.is_err());
+        let r = HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .gnn_computation("gcn")
+            .gnn_parameters(3, 128)
+            .fanouts(&[15, 10])
+            .generate_design();
+        assert!(r.is_err(), "gnn_parameters before fanouts must not be silently dropped");
+        // degenerate fanouts are rejected at the API entry point
+        let r = HitGnn::new()
+            .load_input_graph("reddit", 6)
+            .gnn_computation("gcn")
+            .fanouts(&[15, 0])
+            .generate_design();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn three_layer_design_prices_depth_and_carries_fanouts() {
+        let d2 = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        let d3 = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .fanouts(&[15, 10, 5])
+            .generate_design()
+            .unwrap();
+        assert_eq!(d3.train.fanouts, Some(vec![15, 10, 5]));
+        assert!(d2.train.fanouts.is_none());
+        // a third layer adds work: the modeled throughput in vertices/s
+        // rises (more vertices per batch) but never for free — the DSE
+        // estimate must differ from the 2-layer design point
+        assert!(d3.estimated_nvtps > 0.0);
+        assert_ne!(d2.estimated_nvtps, d3.estimated_nvtps);
     }
 
     #[test]

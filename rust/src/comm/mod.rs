@@ -156,7 +156,7 @@ pub fn feature_traffic<S: FeatureStore + ?Sized>(
 ) -> Traffic {
     let res = store.residency();
     let mut t = Traffic::default();
-    for &v in &mb.v0[..mb.n_v0] {
+    for &v in mb.level0() {
         let local = res.local_bytes(v, row_bytes) as u64;
         let miss = row_bytes as u64 - local;
         t.local_bytes += local;
@@ -292,8 +292,8 @@ impl<'a> FeatureService<'a> {
         fpga_id: usize,
     ) -> (Vec<f32>, Traffic) {
         let f0 = self.features.feat_dim();
-        let mut buf = vec![0f32; mb.dims.v0_cap * f0];
-        for (row, &v) in mb.v0[..mb.n_v0].iter().enumerate() {
+        let mut buf = vec![0f32; mb.dims.v0_cap() * f0];
+        for (row, &v) in mb.level0().iter().enumerate() {
             self.features.write_features(v, &mut buf[row * f0..(row + 1) * f0]);
         }
         let traffic = feature_traffic(
@@ -319,7 +319,7 @@ mod tests {
         let d = datasets::lookup("reddit").unwrap().build(8, 23);
         let pre = preprocess(Algorithm::DistDgl, &d, 4, 0.2, 3);
         let mut s = Sampler::new(
-            FanoutConfig { batch_size: 32, k1: 5, k2: 3 },
+            FanoutConfig::new(32, &[5, 3]),
             WeightMode::GcnNorm,
             d.graph.num_vertices(),
             5,
@@ -342,9 +342,9 @@ mod tests {
                 pre.vertex_part.as_deref(),
                 0,
             );
-            assert_eq!(t.total_bytes(), (mb.n_v0 * row) as u64);
+            assert_eq!(t.total_bytes(), (mb.n[0] * row) as u64);
             assert!(t.beta() >= 0.0 && t.beta() <= 1.0);
-            assert_eq!(t.v0_rows, mb.n_v0 as u64);
+            assert_eq!(t.v0_rows, mb.n[0] as u64);
             assert!(t.hit_rate() >= 0.0 && t.hit_rate() <= 1.0);
             assert_eq!(t.dedup_saved_bytes, 0, "plain accounting never dedups");
         }
@@ -383,7 +383,7 @@ mod tests {
         let d = datasets::lookup("reddit").unwrap().build(8, 23);
         let pre = preprocess(Algorithm::P3, &d, 4, 0.2, 3);
         let mut s = Sampler::new(
-            FanoutConfig { batch_size: 32, k1: 5, k2: 3 },
+            FanoutConfig::new(32, &[5, 3]),
             WeightMode::GcnNorm,
             d.graph.num_vertices(),
             5,
@@ -416,8 +416,8 @@ mod tests {
         let mut dd = IterDedup::new(d.graph.num_vertices());
         dd.next_iteration();
         let (mut a, mut b) = (t0, t1);
-        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut a);
-        dd.apply(&mb.v0[..mb.n_v0], pre.stores[1].as_ref(), row, cfg, pre.vertex_part.as_deref(), 1, &mut b);
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut a);
+        dd.apply(mb.level0(), pre.stores[1].as_ref(), row, cfg, pre.vertex_part.as_deref(), 1, &mut b);
         // per-batch byte totals conserved; local / f2f untouched
         assert_eq!(a.total_bytes(), t0.total_bytes());
         assert_eq!(b.total_bytes(), t1.total_bytes());
@@ -430,7 +430,8 @@ mod tests {
         // DistDGL stores are disjoint, so every vertex missing on FPGA 1
         // but resident on FPGA 0 is NOT a duplicate; shared misses are the
         // rows resident on neither (partitions 2/3) — those must dedup
-        let shared_miss: u64 = mb.v0[..mb.n_v0]
+        let shared_miss: u64 = mb
+            .level0()
             .iter()
             .filter(|&&v| {
                 !pre.stores[0].residency().holds_row(v) && !pre.stores[1].residency().holds_row(v)
@@ -455,12 +456,12 @@ mod tests {
         for _ in 0..3 {
             dd.next_iteration();
             let mut t = base;
-            dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
+            dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
             // a fresh iteration has no staged reads to ride on
             assert_eq!(t, base);
             // …but a second copy within the same iteration dedups fully
             let mut t2 = base;
-            dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
+            dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
             assert_eq!(t2.host_bytes, 0);
             assert_eq!(t2.dedup_saved_bytes, base.host_bytes);
             assert_eq!(t2.total_bytes(), base.total_bytes());
@@ -475,7 +476,7 @@ mod tests {
         let d = datasets::lookup("reddit").unwrap().build(8, 23);
         let pre = preprocess(Algorithm::P3, &d, 4, 0.2, 3);
         let mut s = Sampler::new(
-            FanoutConfig { batch_size: 32, k1: 5, k2: 3 },
+            FanoutConfig::new(32, &[5, 3]),
             WeightMode::GcnNorm,
             d.graph.num_vertices(),
             5,
@@ -488,7 +489,7 @@ mod tests {
         for fpga in 0..2 {
             let base = feature_traffic(&mb, pre.stores[fpga].as_ref(), row, cfg, None, fpga);
             let mut t = base;
-            dd.apply(&mb.v0[..mb.n_v0], pre.stores[fpga].as_ref(), row, cfg, None, fpga, &mut t);
+            dd.apply(mb.level0(), pre.stores[fpga].as_ref(), row, cfg, None, fpga, &mut t);
             assert_eq!(t, base, "partial-width store must pass through untouched");
         }
     }
@@ -502,9 +503,9 @@ mod tests {
         let mut dd = IterDedup::new(d.graph.num_vertices());
         dd.next_iteration();
         let mut t = base;
-        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
         let mut t2 = base;
-        dd.apply(&mb.v0[..mb.n_v0], pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
         // under DistDGL + DC off every miss is F2F: dedup must not touch it
         assert_eq!(t2.f2f_bytes, base.f2f_bytes);
         assert_eq!(t2.dedup_saved_bytes, 0);
@@ -516,7 +517,7 @@ mod tests {
         let svc = FeatureService::new(&d.features, CommConfig::default());
         let (buf, t) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
         let f0 = d.features.feat_dim();
-        assert_eq!(buf.len(), mb.dims.v0_cap * f0);
+        assert_eq!(buf.len(), mb.dims.v0_cap() * f0);
         let t2 = feature_traffic(
             &mb,
             pre.stores[0].as_ref(),
@@ -528,10 +529,10 @@ mod tests {
         assert_eq!(t, t2);
         // row contents match the generator
         let mut expect = vec![0f32; f0];
-        d.features.write_features(mb.v0[3], &mut expect);
+        d.features.write_features(mb.v[0][3], &mut expect);
         assert_eq!(&buf[3 * f0..4 * f0], &expect[..]);
         // padding rows are zero
-        assert!(buf[mb.n_v0 * f0..].iter().all(|&x| x == 0.0));
+        assert!(buf[mb.n[0] * f0..].iter().all(|&x| x == 0.0));
     }
 
     #[test]

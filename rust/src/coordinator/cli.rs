@@ -26,6 +26,10 @@ SUBCOMMANDS:
 TRAIN OPTIONS:
     --dataset <reddit|yelp|amazon|ogbn-products>   (default ogbn-products)
     --model <gcn|sage>           --algo <distdgl|pagraph|p3>
+    --fanouts <k1,..,kL>         per-layer fanouts, input-side hop first
+                                 (DESIGN.md §Mini-batch wire format; e.g.
+                                 15,10,5 = 3-layer GraphSAGE recipe).
+                                 Default: the dataset artifact's depth
     --fpgas <p>                  --epochs <n>
     --fleet <spec>               heterogeneous fleet, comma-separated
                                  kind:count over u250 | u250-half |
@@ -63,7 +67,8 @@ SIMULATE OPTIONS:
     --dataset --model --algo --fpgas --fleet --sched --cpu-mem --no-wb --no-dc
                                  as above
     --beta <f>                   local-fetch ratio (default 0.75)
-    --batch <B> --k1 <k> --k2 <k>  mini-batch configuration (1024/25/10)
+    --batch <B> --fanouts <list> mini-batch configuration (1024, 25,10);
+                                 --k1/--k2 remain as 2-layer aliases
     (with --fleet the estimate runs the per-device fleet model and also
      reports the epoch makespan-seconds under both scheduler modes)
 ";
@@ -156,6 +161,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let batch: f64 = args.num("batch", 1024.0)?;
     let k1: f64 = args.num("k1", 25.0)?;
     let k2: f64 = args.num("k2", 10.0)?;
+    let fanouts: Vec<f64> = match args.opt_str("fanouts") {
+        Some(list) => {
+            let f = crate::sampling::parse_fanouts(&list)?;
+            crate::sampling::FanoutConfig::new(batch.max(1.0) as usize, &f).validate()?;
+            f.iter().map(|&k| k as f64).collect()
+        }
+        // legacy 2-layer aliases
+        None => vec![k1, k2],
+    };
     let wb = !args.flag("no-wb");
     let dc = !args.flag("no-dc");
     args.finish()?;
@@ -165,12 +179,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     plat.num_fpgas = p;
     plat.cpu_mem_gbs = cpu_mem_gbs;
     let model_scale = if model == "sage" { 2.0 } else { 1.0 };
-    let shape = crate::fpga::timing::BatchShape::nominal(
-        batch,
-        k1,
-        k2,
-        [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
-    );
+    let widths: Vec<f64> = crate::runtime::manifest::feature_widths(spec.dims, fanouts.len())
+        .iter()
+        .map(|&x| x as f64)
+        .collect();
+    let shape = crate::fpga::timing::BatchShape::nominal(batch, &fanouts, &widths);
     let batches = (spec.vertices as f64 * spec.train_frac / batch).ceil() as usize;
     let w = Workload {
         shape,
@@ -296,6 +309,14 @@ mod tests {
         // fleet/fpgas mismatch is rejected
         assert!(run(&Args::parse(["simulate", "--fleet", "u250:2", "--fpgas", "3"])).is_err());
         assert!(run(&Args::parse(["simulate", "--fleet", "gpu:2"])).is_err());
+    }
+
+    #[test]
+    fn simulate_accepts_fanouts_list() {
+        run(&Args::parse(["simulate", "--dataset", "reddit", "--fanouts", "15,10,5"])).unwrap();
+        run(&Args::parse(["simulate", "--fleet", "u250:2", "--fanouts", "8,4"])).unwrap();
+        assert!(run(&Args::parse(["simulate", "--fanouts", "0,5"])).is_err());
+        assert!(run(&Args::parse(["simulate", "--fanouts", "abc"])).is_err());
     }
 
     #[test]

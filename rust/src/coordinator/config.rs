@@ -15,6 +15,12 @@ pub struct TrainConfig {
     pub dataset: String,
     /// "gcn" | "sage".
     pub model: String,
+    /// Per-layer fanouts (`--fanouts 15,10,5`, DESIGN.md §Mini-batch wire
+    /// format order: input-side hop first). `None` = the dataset
+    /// artifact's default depth/fanouts. With the reference executor any
+    /// depth trains (the entry is synthesized); PJRT builds require an
+    /// artifact compiled at the requested fanouts.
+    pub fanouts: Option<Vec<usize>>,
     pub algo: Algorithm,
     /// Simulated FPGAs (= partitions = workers).
     pub num_fpgas: usize,
@@ -76,6 +82,7 @@ impl Default for TrainConfig {
         TrainConfig {
             dataset: "ogbn-products".into(),
             model: "gcn".into(),
+            fanouts: None,
             algo: Algorithm::DistDgl,
             num_fpgas: 4,
             fleet: None,
@@ -130,6 +137,10 @@ impl TrainConfig {
         let cfg = TrainConfig {
             dataset: args.str("dataset", &d.dataset),
             model: args.str("model", &d.model),
+            fanouts: args
+                .opt_str("fanouts")
+                .map(|s| crate::sampling::parse_fanouts(&s))
+                .transpose()?,
             algo: Algorithm::parse(&args.str("algo", "distdgl"))?,
             num_fpgas,
             fleet,
@@ -162,6 +173,15 @@ impl TrainConfig {
         );
         anyhow::ensure!(cfg.host_threads >= 1, "--host-threads must be >= 1");
         anyhow::ensure!(cfg.prefetch_depth >= 1, "--prefetch-depth must be >= 1");
+        if let Some(fanouts) = &cfg.fanouts {
+            // full validation (incl. the level-0 memory bound) re-runs in
+            // Trainer::new against the artifact's batch size; reject the
+            // obviously degenerate lists right at the CLI
+            anyhow::ensure!(
+                !fanouts.is_empty() && fanouts.iter().all(|&k| k >= 1),
+                "--fanouts must list one fanout >= 1 per layer (got {fanouts:?})"
+            );
+        }
         anyhow::ensure!(
             cfg.cpu_mem_gbs.is_finite() && cfg.cpu_mem_gbs > 0.0,
             "--cpu-mem must be positive (got {})",
@@ -192,6 +212,13 @@ impl TrainConfig {
         Json::obj(vec![
             ("dataset", Json::str(&self.dataset)),
             ("model", Json::str(&self.model)),
+            (
+                "fanouts",
+                match &self.fanouts {
+                    Some(f) => Json::arr(f.iter().map(|&k| Json::num(k as f64)).collect()),
+                    None => Json::Null,
+                },
+            ),
             ("algo", Json::str(self.algo.name())),
             ("num_fpgas", Json::num(self.num_fpgas as f64)),
             ("fleet", Json::str(&fpga::fleet_spec_string(&self.device_fleet()))),
@@ -297,6 +324,23 @@ mod tests {
             let args = Args::parse(["train", "--cache-ratio", ok]);
             assert!(TrainConfig::from_args(&args).is_ok(), "--cache-ratio {ok} rejected");
         }
+    }
+
+    #[test]
+    fn parses_and_validates_fanouts() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert!(c.fanouts.is_none());
+        let c = TrainConfig::from_args(&Args::parse(["train", "--fanouts", "15,10,5"])).unwrap();
+        assert_eq!(c.fanouts, Some(vec![15, 10, 5]));
+        for bad in ["", "0,5", "a,b", "10,,5"] {
+            let args = Args::parse(["train", "--fanouts", bad]);
+            assert!(TrainConfig::from_args(&args).is_err(), "--fanouts '{bad}' accepted");
+        }
+        // json carries the list (null when unset)
+        let j = c.to_json();
+        assert_eq!(j.req("fanouts").unwrap().as_arr().unwrap().len(), 3);
+        let d = TrainConfig::default().to_json();
+        assert_eq!(d.req("fanouts").unwrap(), &Json::Null);
     }
 
     #[test]

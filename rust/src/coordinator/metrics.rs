@@ -86,8 +86,9 @@ impl EpochMetrics {
 pub struct TrainReport {
     pub config: Json,
     pub epochs: Vec<EpochMetrics>,
-    /// Mean measured mini-batch shape: [v0, v1, v2, a1, a2].
-    pub mean_shape: [f64; 5],
+    /// Mean measured mini-batch shape: [v_0..v_L, a_1..a_L] (2L+1
+    /// entries; [v0, v1, v2, a1, a2] at the default depth 2).
+    pub mean_shape: Vec<f64>,
 }
 
 impl TrainReport {
@@ -134,7 +135,7 @@ mod tests {
                 epoch_makespan_seconds: 0.25,
                 ..Default::default()
             }],
-            mean_shape: [5.0, 4.0, 3.0, 2.0, 1.0],
+            mean_shape: vec![5.0, 4.0, 3.0, 2.0, 1.0],
         };
         let text = report.to_json().pretty();
         let parsed = Json::parse(&text).unwrap();

@@ -118,9 +118,7 @@ mod tests {
             model: "gcn".into(),
             dataset: "tiny".into(),
             path: PathBuf::from("/dev/null"),
-            dims: crate::runtime::ArtifactDims {
-                b: 4, k1: 2, k2: 1, v1_cap: 8, v0_cap: 24, f0: 6, f1: 5, f2: 3,
-            },
+            dims: crate::runtime::ArtifactDims::from_batch(4, &[2, 1], &[6, 5, 3]),
             params: vec![
                 ("w1".into(), vec![6, 5]),
                 ("b1".into(), vec![5]),

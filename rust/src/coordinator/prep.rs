@@ -61,30 +61,31 @@ pub struct PrepTask {
 /// Host-side measurements of one prepared batch. Collected per batch and
 /// merged into `EpochMetrics` in deterministic (iter, tag) order at the
 /// barrier — no shared counters between prep threads.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PrepStats {
     pub sample_seconds: f64,
     pub gather_seconds: f64,
     pub vertices_traversed: u64,
     pub traffic: Traffic,
-    /// Measured batch shape [v0, v1, v2, a1, a2].
-    pub shape: [f64; 5],
+    /// Measured batch shape [v_0..v_L, a_1..a_L] (2L+1 entries).
+    pub shape: Vec<f64>,
 }
 
 impl PrepStats {
-    fn measure(mb: &MiniBatch, sample_seconds: f64, gather_seconds: f64, traffic: Traffic) -> PrepStats {
+    fn measure(
+        mb: &MiniBatch,
+        sample_seconds: f64,
+        gather_seconds: f64,
+        traffic: Traffic,
+    ) -> PrepStats {
+        let mut shape: Vec<f64> = mb.n.iter().map(|&x| x as f64).collect();
+        shape.extend((1..=mb.layers()).map(|l| mb.edges(l) as f64));
         PrepStats {
             sample_seconds,
             gather_seconds,
             vertices_traversed: mb.vertices_traversed() as u64,
             traffic,
-            shape: [
-                mb.n_v0 as f64,
-                mb.n_v1 as f64,
-                mb.n_targets as f64,
-                mb.edges_layer1() as f64,
-                mb.edges_layer2() as f64,
-            ],
+            shape,
         }
     }
 }
@@ -181,7 +182,7 @@ pub fn prep_worker(
             let gather_seconds = t1.elapsed().as_secs_f64();
 
             let stats = PrepStats::measure(&mb, sample_seconds, gather_seconds, traffic);
-            let v0 = mb.v0[..mb.n_v0].to_vec();
+            let v0 = mb.level0().to_vec();
             let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
             PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, batch, stats, v0 }
         }));
@@ -271,7 +272,7 @@ mod tests {
             }
         }
         drop(task_tx);
-        let fanout = FanoutConfig { batch_size: 32, k1: 3, k2: 2 };
+        let fanout = FanoutConfig::new(32, &[3, 2]);
         let mut sampler =
             Sampler::new(fanout, WeightMode::GcnNorm, data.graph.num_vertices(), 0);
         let rx = Mutex::new(task_rx);

@@ -35,7 +35,7 @@ use crate::partition::{preprocess_with_policy, Preprocessed};
 use crate::perf::{FleetModel, Workload};
 use crate::store::{FeatureStore, Residency};
 use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
-use crate::sampling::{EpochPlan, Sampler, WeightMode};
+use crate::sampling::{EpochPlan, FanoutConfig, Sampler, WeightMode};
 use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
 use crate::util::rng::Rng;
 
@@ -64,8 +64,9 @@ pub struct Trainer {
     /// across epochs (only the RNG stream base is re-keyed per epoch).
     samplers: Vec<Sampler>,
     rng: Rng,
-    /// Accumulated mean batch shape [v0, v1, v2, a1, a2].
-    shape_acc: [f64; 5],
+    /// Accumulated mean batch shape [v_0..v_L, a_1..a_L] (2L+1 entries,
+    /// level/layer order per DESIGN.md §Mini-batch wire format).
+    shape_acc: Vec<f64>,
     shape_n: f64,
     /// Last epoch's measured β — drives the next epoch's scheduler cost
     /// model (deterministic: measured at the barriers, so identical
@@ -110,12 +111,57 @@ impl Trainer {
         );
 
         let manifest = Manifest::load_or_builtin(&cfg.artifacts_dir)?;
-        let entry = manifest.find("train", &cfg.model, &cfg.dataset)?.clone();
-        let predict_entry = manifest.find("predict", &cfg.model, &cfg.dataset).ok().cloned();
+        let mut entry = manifest.find("train", &cfg.model, &cfg.dataset)?.clone();
+        let mut predict_entry = manifest.find("predict", &cfg.model, &cfg.dataset).ok().cloned();
+        if let Some(fanouts) = &cfg.fanouts {
+            // --fanouts overrides the artifact's depth/fanouts: prefer a
+            // manifest entry compiled at exactly this configuration (e.g.
+            // the builtin 3-layer SAGE artifact); otherwise synthesize one
+            // for the reference executor. PJRT artifacts have fixed
+            // compiled shapes, so there the mismatch stays a clean error.
+            FanoutConfig::new(entry.dims.b, fanouts).validate()?;
+            if *fanouts != entry.dims.fanouts {
+                match manifest.find_fanouts("train", &cfg.model, &cfg.dataset, fanouts) {
+                    Some(e) => {
+                        entry = e.clone();
+                        predict_entry = manifest
+                            .find_fanouts("predict", &cfg.model, &cfg.dataset, fanouts)
+                            .cloned();
+                    }
+                    None if cfg!(feature = "pjrt") => anyhow::bail!(
+                        "no artifact for model={} dataset={} fanouts={fanouts:?} — \
+                         re-run `make artifacts` at that depth (or build without \
+                         the `pjrt` feature to use the reference executor)",
+                        cfg.model,
+                        cfg.dataset
+                    ),
+                    None => {
+                        entry = crate::runtime::manifest::synth_entry(
+                            &cfg.artifacts_dir,
+                            "train",
+                            &cfg.model,
+                            &cfg.dataset,
+                            entry.dims.b,
+                            fanouts,
+                            data.spec.dims,
+                        );
+                        predict_entry = Some(crate::runtime::manifest::synth_entry(
+                            &cfg.artifacts_dir,
+                            "predict",
+                            &cfg.model,
+                            &cfg.dataset,
+                            entry.dims.b,
+                            fanouts,
+                            data.spec.dims,
+                        ));
+                    }
+                }
+            }
+        }
         anyhow::ensure!(
-            entry.dims.f0 == data.spec.dims.f0,
+            entry.dims.f0() == data.spec.dims.f0,
             "artifact f0 {} != dataset f0 {}",
-            entry.dims.f0,
+            entry.dims.f0(),
             data.spec.dims.f0
         );
 
@@ -125,8 +171,9 @@ impl Trainer {
         let rng = Rng::new(cfg.seed ^ 0x7a11);
         let fanout = entry.dims.fanout_config();
         let samplers = (0..cfg.host_threads.max(1))
-            .map(|_| Sampler::new(fanout, mode, data.graph.num_vertices(), 0))
+            .map(|_| Sampler::new(fanout.clone(), mode, data.graph.num_vertices(), 0))
             .collect();
+        let shape_acc = vec![0.0; 2 * entry.dims.layers() + 1];
 
         Ok(Trainer {
             cfg,
@@ -141,7 +188,7 @@ impl Trainer {
             mode,
             samplers,
             rng,
-            shape_acc: [0.0; 5],
+            shape_acc,
             shape_n: 0.0,
             last_beta: COLD_START_BETA,
         })
@@ -179,13 +226,13 @@ impl Trainer {
         })
     }
 
-    /// Mean measured batch shape [v0, v1, v2, a1, a2] over all batches so
+    /// Mean measured batch shape [v_0..v_L, a_1..a_L] over all batches so
     /// far (drives the analytic benches with real dedup statistics).
-    pub fn mean_shape(&self) -> [f64; 5] {
+    pub fn mean_shape(&self) -> Vec<f64> {
         if self.shape_n == 0.0 {
-            return [0.0; 5];
+            return vec![0.0; self.shape_acc.len()];
         }
-        let mut s = self.shape_acc;
+        let mut s = self.shape_acc.clone();
         for x in s.iter_mut() {
             *x /= self.shape_n;
         }
@@ -201,12 +248,14 @@ impl Trainer {
     /// planned schedule — is identical across pipeline configurations.
     pub fn fleet_cost(&self) -> CostModel {
         let d = &self.entry.dims;
-        let f = [d.f0 as f64, d.f1 as f64, d.f2 as f64];
+        let lcount = d.layers();
+        let f: Vec<f64> = d.f.iter().map(|&x| x as f64).collect();
         let shape = if self.shape_n > 0.0 {
             let s = self.mean_shape();
-            BatchShape { v: [s[0], s[1], s[2]], a: [s[3], s[4]], f }
+            BatchShape { v: s[..=lcount].to_vec(), a: s[lcount + 1..].to_vec(), f }
         } else {
-            BatchShape::nominal(d.b as f64, d.k1 as f64, d.k2 as f64, f)
+            let fanouts: Vec<f64> = d.fanouts.iter().map(|&k| k as f64).collect();
+            BatchShape::nominal(d.b as f64, &fanouts, &f)
         };
         let w = Workload {
             shape,
@@ -285,7 +334,7 @@ impl Trainer {
             let n_vertices = self.data.graph.num_vertices();
             let mode = self.mode;
             self.samplers
-                .resize_with(host_threads, || Sampler::new(fanout, mode, n_vertices, 0));
+                .resize_with(host_threads, || Sampler::new(fanout.clone(), mode, n_vertices, 0));
         }
 
         // disjoint field borrows for the scoped threads vs the coordinator
@@ -455,7 +504,7 @@ impl Trainer {
         // reusable service + sampler, hoisted out of the batch loop
         let svc = FeatureService::new(&self.data.features, comm);
         let f0 = self.data.features.feat_dim();
-        let f2 = self.entry.dims.f2;
+        let f2 = self.entry.dims.classes();
         let b = self.entry.dims.b;
         let mut plan = EpochPlan::new(&self.pre.train_parts, b, &mut self.rng);
         let eval_stream = self.rng.next_u64();
@@ -479,7 +528,7 @@ impl Trainer {
             );
             let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
             let logits = exe.predict(&self.params.data, &batch)?;
-            for r in 0..mb.n_targets {
+            for r in 0..mb.n_targets() {
                 let row = &logits[r * f2..(r + 1) * f2];
                 let pred = row
                     .iter()

@@ -53,7 +53,7 @@ pub struct DseWorkload {
 impl DseWorkload {
     fn to_workload(&self, p: usize, batches: usize) -> Workload {
         Workload {
-            shape: self.shape,
+            shape: self.shape.clone(),
             beta: self.beta,
             param_scale: self.param_scale,
             sampling_s_per_batch: self.sampling_s_per_batch,
@@ -292,9 +292,8 @@ pub fn paper_dse_workloads(param_scale: f64) -> Vec<DseWorkload> {
         .map(|spec| DseWorkload {
             shape: BatchShape::nominal(
                 1024.0,
-                25.0,
-                10.0,
-                [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
+                &[25.0, 10.0],
+                &[spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
             ),
             beta: 0.75,
             param_scale,

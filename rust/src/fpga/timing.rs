@@ -1,31 +1,47 @@
-//! Kernel timing model — §6.2, Eqs. 5–9.
+//! Kernel timing model — §6.2, Eqs. 5–9, generalized to L layers.
 //!
 //! All times are per mini-batch on one FPGA. The model works on a
 //! [`BatchShape`] (the |V^l| / |A^l| / f^l statistics of a sampled
 //! mini-batch) so it can be driven either by the paper's nominal
-//! parameters or by *measured* shapes from the real sampler.
+//! parameters or by *measured* shapes from the real sampler. Depth is a
+//! first-class input: every per-layer quantity is a vector indexed as in
+//! DESIGN.md §Mini-batch wire format, and the batch time sums L
+//! aggregate/update stages instead of two hard-coded ones.
 
 use super::{DieConfig, FpgaSpec};
 
-/// Mini-batch shape statistics for a 2-layer GNN.
-#[derive(Clone, Copy, Debug)]
+/// Mini-batch shape statistics for an L-layer GNN.
+#[derive(Clone, Debug)]
 pub struct BatchShape {
-    /// Sampled vertex counts per layer: |V^0|, |V^1|, |V^2|.
-    pub v: [f64; 3],
-    /// Sampled edge counts per layer: |A^1|, |A^2| (self edges included).
-    pub a: [f64; 2],
-    /// Feature widths: f^0, f^1, f^2.
-    pub f: [f64; 3],
+    /// Sampled vertex counts per level: `v[l]`, l = 0..=L (`v[L]` targets).
+    pub v: Vec<f64>,
+    /// Sampled edge counts per layer: `a[l-1]` = |A^l| (self edges
+    /// included), l = 1..=L.
+    pub a: Vec<f64>,
+    /// Feature widths per level: `f[l]`, l = 0..=L.
+    pub f: Vec<f64>,
 }
 
 impl BatchShape {
-    /// Nominal paper shape: B targets, fanouts (k1, k2), dedup ignored
-    /// (upper bound — matches how the paper sizes its DSE input).
-    pub fn nominal(batch: f64, k1: f64, k2: f64, f: [f64; 3]) -> BatchShape {
-        let v2 = batch;
-        let v1 = v2 * (k2 + 1.0);
-        let v0 = v1 * (k1 + 1.0);
-        BatchShape { v: [v0, v1, v2], a: [v1 * (k1 + 1.0), v2 * (k2 + 1.0)], f }
+    /// Nominal paper shape: B targets, one fanout per layer (DESIGN.md
+    /// §Mini-batch wire format order — input-side hop first), dedup
+    /// ignored (upper bound — matches how the paper sizes its DSE input).
+    pub fn nominal(batch: f64, fanouts: &[f64], f: &[f64]) -> BatchShape {
+        let lcount = fanouts.len();
+        assert_eq!(f.len(), lcount + 1, "need one feature width per level");
+        let mut v = vec![0.0; lcount + 1];
+        let mut a = vec![0.0; lcount];
+        v[lcount] = batch;
+        for l in (1..=lcount).rev() {
+            v[l - 1] = v[l] * (fanouts[l - 1] + 1.0);
+            a[l - 1] = v[l] * (fanouts[l - 1] + 1.0);
+        }
+        BatchShape { v, a, f: f.to_vec() }
+    }
+
+    /// Number of GNN layers L.
+    pub fn layers(&self) -> usize {
+        self.a.len()
     }
 
     /// Total sampled vertices (the NVTPS numerator contribution).
@@ -38,7 +54,8 @@ impl BatchShape {
     /// Rounded to the nearest byte: truncation undercounts whenever the
     /// f/`param_scale` product is not integral.
     pub fn param_bytes(&self, param_scale: f64) -> u64 {
-        ((self.f[0] * self.f[1] + self.f[1] * self.f[2]) * 4.0 * param_scale).round() as u64
+        let elems: f64 = (1..self.f.len()).map(|l| self.f[l - 1] * self.f[l]).sum();
+        (elems * 4.0 * param_scale).round() as u64
     }
 }
 
@@ -63,9 +80,10 @@ pub struct LayerTiming {
 }
 
 /// Timing for one mini-batch (forward + loss + backward).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct BatchTiming {
-    pub layers: [LayerTiming; 2],
+    /// One entry per layer, layer 1 (input side) first.
+    pub layers: Vec<LayerTiming>,
     pub fp_s: f64,
     pub lc_s: f64,
     pub bp_s: f64,
@@ -101,8 +119,8 @@ impl TimingModel {
     }
 
     /// Eq. 7: vertex-feature loading time for layer `l` (1-based).
-    /// β is the local-fetch ratio; layer 2 reads the layer-1 results that
-    /// are already on-card, so β is forced to 1 there.
+    /// β is the local-fetch ratio; layers ≥ 2 read the previous layer's
+    /// results that are already on-card, so β is forced to 1 there.
     pub fn t_load(&self, shape: &BatchShape, l: usize, beta: f64) -> f64 {
         let (rows, width) = (shape.v[l - 1], shape.f[l - 1]);
         let beta = if l >= 2 { 1.0 } else { beta };
@@ -130,30 +148,28 @@ impl TimingModel {
         LayerTiming { load_s, compute_s, aggregate_s, update_s, layer_s: aggregate_s.max(update_s) }
     }
 
-    /// Full mini-batch timing (Eq. 5). `param_scale` = 1 for GCN, 2 for
-    /// GraphSAGE (separate self/neighbor weights double the update work).
+    /// Full mini-batch timing (Eq. 5): Σ over the L layers of the
+    /// pipelined layer time, plus loss calculation and the mirrored
+    /// backward pass. `param_scale` = 1 for GCN, 2 for GraphSAGE
+    /// (separate self/neighbor weights double the update work).
     pub fn batch(&self, shape: &BatchShape, beta: f64, param_scale: f64) -> BatchTiming {
-        let l1 = self.layer(shape, 1, beta);
-        let mut l2 = self.layer(shape, 2, beta);
-        l2.update_s *= param_scale;
-        l1_scaled_layer(&mut l2);
-        let mut l1 = l1;
-        l1.update_s *= param_scale;
-        l1_scaled_layer(&mut l1);
-
-        let fp_s = l1.layer_s + l2.layer_s;
-        // loss calculation: softmax+CE over |V^2|·f^2, on the update PEs
-        let lc_s = shape.v[2] * shape.f[2] / (self.m_total() * self.spec.freq_hz());
+        let lcount = shape.layers();
+        let mut layers = Vec::with_capacity(lcount);
+        let mut fp_s = 0.0;
+        for l in 1..=lcount {
+            let mut lt = self.layer(shape, l, beta);
+            lt.update_s *= param_scale;
+            lt.layer_s = lt.aggregate_s.max(lt.update_s);
+            fp_s += lt.layer_s;
+            layers.push(lt);
+        }
+        // loss calculation: softmax+CE over |V^L|·f^L, on the update PEs
+        let lc_s = shape.v[lcount] * shape.f[lcount] / (self.m_total() * self.spec.freq_hz());
         // backward pass: same dataflow reversed (paper: "similar
         // computation as forward propagation but in the reverse direction")
         let bp_s = fp_s;
-        BatchTiming { layers: [l1, l2], fp_s, lc_s, bp_s, gnn_s: fp_s + lc_s + bp_s }
+        BatchTiming { layers, fp_s, lc_s, bp_s, gnn_s: fp_s + lc_s + bp_s }
     }
-}
-
-/// Recompute the pipelined layer time after an update-stage adjustment.
-fn l1_scaled_layer(l: &mut LayerTiming) {
-    l.layer_s = l.aggregate_s.max(l.update_s);
 }
 
 #[cfg(test)]
@@ -166,18 +182,31 @@ mod tests {
     }
 
     fn shape() -> BatchShape {
-        // paper nominal: B=1024, fanouts 25/10, products dims
-        BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0])
+        // paper nominal: B=1024, fanouts [25, 10], products dims
+        BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0])
     }
 
     #[test]
     fn nominal_shape_counts() {
         let s = shape();
+        assert_eq!(s.layers(), 2);
         assert_eq!(s.v[2], 1024.0);
         assert_eq!(s.v[1], 1024.0 * 11.0);
         assert_eq!(s.v[0], 1024.0 * 11.0 * 26.0);
         assert_eq!(s.a[0], s.v[0]);
         assert_eq!(s.a[1], s.v[1]);
+    }
+
+    #[test]
+    fn three_layer_nominal_shape_counts() {
+        let s = BatchShape::nominal(1024.0, &[15.0, 10.0, 5.0], &[100.0, 128.0, 128.0, 47.0]);
+        assert_eq!(s.layers(), 3);
+        assert_eq!(s.v[3], 1024.0);
+        assert_eq!(s.v[2], 1024.0 * 6.0);
+        assert_eq!(s.v[1], 1024.0 * 6.0 * 11.0);
+        assert_eq!(s.v[0], 1024.0 * 6.0 * 11.0 * 16.0);
+        assert_eq!(s.a[2], s.v[2]);
+        assert_eq!(s.a[0], s.v[0]);
     }
 
     #[test]
@@ -197,10 +226,12 @@ mod tests {
     }
 
     #[test]
-    fn layer2_load_is_always_local() {
+    fn upper_layer_loads_are_always_local() {
         let m = model();
-        let s = shape();
-        assert_eq!(m.t_load(&s, 2, 0.0), m.t_load(&s, 2, 1.0));
+        let s = BatchShape::nominal(256.0, &[8.0, 5.0, 3.0], &[100.0, 128.0, 128.0, 47.0]);
+        for l in 2..=3 {
+            assert_eq!(m.t_load(&s, l, 0.0), m.t_load(&s, l, 1.0), "layer {l}");
+        }
     }
 
     #[test]
@@ -235,9 +266,25 @@ mod tests {
         let m = model();
         let s = shape();
         let b = m.batch(&s, 0.8, 1.0);
+        assert_eq!(b.layers.len(), 2);
         assert!((b.gnn_s - (b.fp_s + b.lc_s + b.bp_s)).abs() < 1e-15);
         assert!(b.fp_s >= b.layers[0].layer_s);
         assert!(b.gnn_s > 0.0);
+    }
+
+    #[test]
+    fn batch_time_sums_all_layers_at_depth_three() {
+        let m = model();
+        let s = BatchShape::nominal(256.0, &[8.0, 5.0, 3.0], &[100.0, 128.0, 128.0, 47.0]);
+        let b = m.batch(&s, 0.8, 1.0);
+        assert_eq!(b.layers.len(), 3);
+        let sum: f64 = b.layers.iter().map(|l| l.layer_s).sum();
+        assert!((b.fp_s - sum).abs() < 1e-15);
+        // a third layer at positive work strictly increases the total vs
+        // the same shape truncated to 2 layers
+        let s2 = BatchShape { v: s.v[..3].to_vec(), a: s.a[..2].to_vec(), f: s.f[..3].to_vec() };
+        let b2 = m.batch(&s2, 0.8, 1.0);
+        assert!(b.fp_s > b2.fp_s);
     }
 
     #[test]
@@ -255,14 +302,17 @@ mod tests {
     fn param_bytes_rounds_instead_of_truncating() {
         // (1·1 + 1·1)·4 = 8 parameter bytes; a fractional param_scale
         // used to truncate (0.7 → 5.6 read as 5) instead of rounding
-        let s = BatchShape { v: [1.0; 3], a: [1.0; 2], f: [1.0; 3] };
+        let s = BatchShape { v: vec![1.0; 3], a: vec![1.0; 2], f: vec![1.0; 3] };
         assert_eq!(s.param_bytes(1.0), 8);
         assert_eq!(s.param_bytes(0.7), 6, "5.6 rounds up, not down");
         assert_eq!(s.param_bytes(0.3), 2, "2.4 rounds down");
         // paper shape at GCN/SAGE scales stays exact
-        let paper = BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]);
+        let paper = BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]);
         assert_eq!(paper.param_bytes(1.0), (100 * 128 + 128 * 47) * 4);
         assert_eq!(paper.param_bytes(2.0), 2 * (100 * 128 + 128 * 47) * 4);
+        // depth adds a term per layer
+        let deep = BatchShape::nominal(1024.0, &[15.0, 10.0, 5.0], &[100.0, 128.0, 128.0, 47.0]);
+        assert_eq!(deep.param_bytes(1.0), (100 * 128 + 128 * 128 + 128 * 47) * 4);
     }
 
     #[test]

@@ -24,8 +24,9 @@ use crate::util::rng::Rng;
 
 /// Paper evaluation parameters (§7.1).
 pub const PAPER_BATCH: f64 = 1024.0;
-pub const PAPER_K1: f64 = 25.0;
-pub const PAPER_K2: f64 = 10.0;
+/// Paper fanouts in DESIGN.md §Mini-batch wire format order (input-side
+/// hop first): the f64 twin of `sampling::PAPER_FANOUTS`.
+pub const PAPER_FANOUTS_F: [f64; 2] = [25.0, 10.0];
 /// The accelerator configuration the DSE selects (Table 5, FPGA-level
 /// (8, 2048) = per-die (2, 512)) — the fleet registry's default die.
 pub const BEST_DIE: DieConfig = crate::fpga::DEFAULT_DIE;
@@ -105,8 +106,8 @@ pub fn measure_host_policy(
     // (both ÷ 2^shift) keeps the measured dedup factor transferable to
     // full scale. Fanouts stay at the paper's 25/10.
     let scaled_batch = ((PAPER_BATCH as usize) >> shift).max(8);
-    let cfg = FanoutConfig { batch_size: scaled_batch, k1: 25, k2: 10 };
-    let mut sampler = Sampler::new(cfg, mode, data.graph.num_vertices(), seed ^ 0x5a);
+    let cfg = FanoutConfig::new(scaled_batch, &crate::sampling::PAPER_FANOUTS);
+    let mut sampler = Sampler::new(cfg.clone(), mode, data.graph.num_vertices(), seed ^ 0x5a);
 
     let mut rng = Rng::new(seed ^ 0xE0);
     let mut v0_sum = 0f64;
@@ -141,11 +142,11 @@ pub fn measure_host_policy(
                 vertex_part,
                 part,
             );
-            pre.stores[part].observe(&mb.v0[..mb.n_v0]);
+            pre.stores[part].observe(mb.level0());
             local += traffic.local_bytes;
             total += traffic.total_bytes();
-            v0_sum += mb.n_v0 as f64 / dims.v0_cap as f64;
-            v1_sum += mb.n_v1 as f64 / dims.v1_cap as f64;
+            v0_sum += mb.n[0] as f64 / dims.caps[0] as f64;
+            v1_sum += mb.n[1] as f64 / dims.caps[1] as f64;
             batches_measured += 1;
         }
         beta_epochs.push(if total == 0 { 1.0 } else { local as f64 / total as f64 });
@@ -181,7 +182,7 @@ pub fn build_workload(
     dc: bool,
 ) -> Workload {
     let f = [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64];
-    let mut shape = BatchShape::nominal(PAPER_BATCH, PAPER_K1, PAPER_K2, f);
+    let mut shape = BatchShape::nominal(PAPER_BATCH, &PAPER_FANOUTS_F, &f);
     // apply measured dedup to the vertex sets (edges |A^l| are unchanged:
     // every sampled edge is aggregated regardless of row dedup)
     shape.v[0] *= host.dedup[0];

@@ -90,13 +90,13 @@ impl GpuModel {
         // aggregation: per edge, read f + accumulate f + write back
         // (3 touches), bandwidth-bound at gather efficiency
         let mut t_agg = 0.0;
-        for l in 1..=2 {
+        for l in 1..=s.layers() {
             t_agg += s.a[l - 1] * s.f[l - 1] * S_FEAT * 3.0 / (hbm * self.eff.gather);
         }
 
         // update GEMMs: 2·|V^l|·f^{l-1}·f^l MACs per layer
         let mut t_upd = 0.0;
-        for l in 1..=2 {
+        for l in 1..=s.layers() {
             t_upd += 2.0 * s.v[l] * s.f[l - 1] * s.f[l] * w.param_scale
                 / (flops * self.eff.gemm);
         }
@@ -164,7 +164,7 @@ mod tests {
 
     fn workload() -> Workload {
         Workload {
-            shape: BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]),
+            shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.7,
             param_scale: 1.0,
             sampling_s_per_batch: 0.001,
@@ -197,7 +197,7 @@ mod tests {
         let m = GpuModel::new(GpuPlatformSpec::paper_4gpu());
         let mut w = workload();
         let t_small = m.batch_s(&w);
-        w.shape = BatchShape::nominal(1024.0, 25.0, 10.0, [602.0, 128.0, 41.0]);
+        w.shape = BatchShape::nominal(1024.0, &[25.0, 10.0], &[602.0, 128.0, 41.0]);
         let t_big = m.batch_s(&w);
         assert!(t_big > 2.0 * t_small);
     }

@@ -333,7 +333,7 @@ mod tests {
     use super::*;
     fn workload(p: usize) -> Workload {
         Workload {
-            shape: BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]),
+            shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.8,
             param_scale: 1.0,
             sampling_s_per_batch: 0.001,

@@ -20,14 +20,14 @@ use super::reference::RefModel;
 use crate::sampling::MiniBatch;
 
 /// Flat mini-batch input buffers in artifact order (feat0 gathered by the
-/// comm layer — see `comm::FeatureService`).
+/// comm layer — see `comm::FeatureService`). `idx[l-1]`/`w[l-1]` carry
+/// layer l's positions/weights, layer 1 (input side) first — the same
+/// level lists as [`MiniBatch`] (DESIGN.md §Mini-batch wire format).
 #[derive(Clone, Debug)]
 pub struct BatchBuffers {
     pub feat0: Vec<f32>,
-    pub idx1: Vec<i32>,
-    pub w1: Vec<f32>,
-    pub idx2: Vec<i32>,
-    pub w2: Vec<f32>,
+    pub idx: Vec<Vec<i32>>,
+    pub w: Vec<Vec<f32>>,
     pub labels: Vec<i32>,
     pub mask: Vec<f32>,
 }
@@ -35,13 +35,11 @@ pub struct BatchBuffers {
 impl BatchBuffers {
     /// Assemble from a sampled mini-batch plus the gathered features.
     pub fn from_minibatch(mb: &MiniBatch, feat0: Vec<f32>, f0: usize) -> BatchBuffers {
-        assert_eq!(feat0.len(), mb.dims.v0_cap * f0, "feat0 buffer size mismatch");
+        assert_eq!(feat0.len(), mb.dims.v0_cap() * f0, "feat0 buffer size mismatch");
         BatchBuffers {
             feat0,
-            idx1: mb.idx1.clone(),
-            w1: mb.w1.clone(),
-            idx2: mb.idx2.clone(),
-            w2: mb.w2.clone(),
+            idx: mb.idx.clone(),
+            w: mb.w.clone(),
             labels: mb.labels.iter().map(|&l| l as i32).collect(),
             mask: mb.mask.clone(),
         }
@@ -132,7 +130,11 @@ impl TrainExecutor {
     }
 
     /// Execute a train step: returns loss and per-parameter gradients.
-    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
+    pub fn train_step(
+        &self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<StepOutput> {
         anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
         self.check_params(params)?;
         match &self.backend {
@@ -157,7 +159,7 @@ impl TrainExecutor {
         }
     }
 
-    /// Execute inference: returns logits `[b, f2]` row-major.
+    /// Execute inference: returns logits `[b, classes]` row-major.
     pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
         self.check_params(params)?;
@@ -189,7 +191,8 @@ impl TrainExecutor {
         Ok(xla::Literal::vec1(data).reshape(&dims)?)
     }
 
-    /// Build the full literal argument list (params then batch).
+    /// Build the full literal argument list (params, feat0, per-layer
+    /// idx/w from the input side up, labels, mask).
     #[cfg(feature = "pjrt")]
     fn build_args(
         &self,
@@ -197,15 +200,18 @@ impl TrainExecutor {
         batch: &BatchBuffers,
     ) -> anyhow::Result<Vec<xla::Literal>> {
         let d = &self.entry.dims;
-        let mut args = Vec::with_capacity(params.len() + 7);
+        let lcount = d.layers();
+        let mut args = Vec::with_capacity(params.len() + 3 + 2 * lcount);
         for (buf, (name, shape)) in params.iter().zip(&self.entry.params) {
             args.push(Self::literal_f32(buf, shape).with_context(|| format!("param {name}"))?);
         }
-        args.push(Self::literal_f32(&batch.feat0, &[d.v0_cap, d.f0])?);
-        args.push(Self::literal_i32(&batch.idx1, &[d.v1_cap, d.k1 + 1])?);
-        args.push(Self::literal_f32(&batch.w1, &[d.v1_cap, d.k1 + 1])?);
-        args.push(Self::literal_i32(&batch.idx2, &[d.b, d.k2 + 1])?);
-        args.push(Self::literal_f32(&batch.w2, &[d.b, d.k2 + 1])?);
+        args.push(Self::literal_f32(&batch.feat0, &[d.caps[0], d.f[0]])?);
+        for l in 1..=lcount {
+            let rows = d.caps[l];
+            let k = d.fanouts[l - 1] + 1;
+            args.push(Self::literal_i32(&batch.idx[l - 1], &[rows, k])?);
+            args.push(Self::literal_f32(&batch.w[l - 1], &[rows, k])?);
+        }
         args.push(Self::literal_i32(&batch.labels, &[d.b])?);
         args.push(Self::literal_f32(&batch.mask, &[d.b])?);
         Ok(args)

@@ -3,44 +3,106 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::graph::GnnDims;
 use crate::util::json::Json;
 
-/// Static shapes of one artifact (mirror of python `ModelDims`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Static shapes of one artifact (mirror of python `ModelDims`),
+/// generalized to arbitrary depth L (see DESIGN.md §Mini-batch wire
+/// format for the level numbering and the fanout-vector order).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ArtifactDims {
+    /// Target capacity (batch size B).
     pub b: usize,
-    pub k1: usize,
-    pub k2: usize,
-    pub v1_cap: usize,
-    pub v0_cap: usize,
-    pub f0: usize,
-    pub f1: usize,
-    pub f2: usize,
+    /// Per-layer fanouts (`fanouts[l-1]` = layer-l fanout; length L).
+    pub fanouts: Vec<usize>,
+    /// Per-level vertex capacities (`caps[L] = b`).
+    pub caps: Vec<usize>,
+    /// Per-level feature widths (`f[0]` input, `f[L]` classes).
+    pub f: Vec<usize>,
 }
 
 impl ArtifactDims {
+    /// Compute the capacity recurrence from (b, fanouts, feature widths).
+    pub fn from_batch(b: usize, fanouts: &[usize], f: &[usize]) -> ArtifactDims {
+        assert_eq!(f.len(), fanouts.len() + 1, "need one feature width per level");
+        let lcount = fanouts.len();
+        let mut caps = vec![0usize; lcount + 1];
+        caps[lcount] = b;
+        for l in (1..=lcount).rev() {
+            caps[l - 1] = caps[l] * (fanouts[l - 1] + 1);
+        }
+        ArtifactDims { b, fanouts: fanouts.to_vec(), caps, f: f.to_vec() }
+    }
+
+    /// Number of GNN layers L.
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Input feature width f^0.
+    pub fn f0(&self) -> usize {
+        self.f[0]
+    }
+
+    /// Output classes f^L.
+    pub fn classes(&self) -> usize {
+        *self.f.last().expect("non-empty feature widths")
+    }
+
+    /// Level-0 (feature-gather) capacity.
+    pub fn v0_cap(&self) -> usize {
+        self.caps[0]
+    }
+
     fn from_json(j: &Json) -> anyhow::Result<ArtifactDims> {
-        let d = ArtifactDims {
-            b: j.req_usize("b")?,
-            k1: j.req_usize("k1")?,
-            k2: j.req_usize("k2")?,
-            v1_cap: j.req_usize("v1_cap")?,
-            v0_cap: j.req_usize("v0_cap")?,
-            f0: j.req_usize("f0")?,
-            f1: j.req_usize("f1")?,
-            f2: j.req_usize("f2")?,
+        let (b, fanouts, f) = if j.get("fanouts").is_some() {
+            // depth-L format: {b, fanouts: [..], f: [..]} (+ optional caps)
+            let fanouts = req_usize_arr(j, "fanouts")?;
+            let f = req_usize_arr(j, "f")?;
+            anyhow::ensure!(
+                f.len() == fanouts.len() + 1,
+                "artifact dims: f has {} entries for {} layers",
+                f.len(),
+                fanouts.len()
+            );
+            (j.req_usize("b")?, fanouts, f)
+        } else {
+            // legacy 2-layer format: {b, k1, k2, v1_cap, v0_cap, f0, f1, f2}
+            (
+                j.req_usize("b")?,
+                vec![j.req_usize("k1")?, j.req_usize("k2")?],
+                vec![j.req_usize("f0")?, j.req_usize("f1")?, j.req_usize("f2")?],
+            )
         };
-        anyhow::ensure!(
-            d.v1_cap == d.b * (d.k2 + 1) && d.v0_cap == d.v1_cap * (d.k1 + 1),
-            "inconsistent artifact dims: {d:?}"
-        );
+        // manifest load is a fanout entry point: reject degenerate shapes
+        // (and usize-overflowing capacity products — validate's recurrence
+        // is checked) *before* the unchecked from_batch recurrence runs
+        crate::sampling::FanoutConfig::new(b, &fanouts).validate()?;
+        let d = ArtifactDims::from_batch(b, &fanouts, &f);
+        if j.get("caps").is_some() {
+            let caps = req_usize_arr(j, "caps")?;
+            anyhow::ensure!(caps == d.caps, "inconsistent artifact dims: {d:?}");
+        }
+        if j.get("v1_cap").is_some() {
+            anyhow::ensure!(
+                d.caps[1] == j.req_usize("v1_cap")? && d.caps[0] == j.req_usize("v0_cap")?,
+                "inconsistent artifact dims: {d:?}"
+            );
+        }
         Ok(d)
     }
 
     /// Matching sampler configuration.
     pub fn fanout_config(&self) -> crate::sampling::FanoutConfig {
-        crate::sampling::FanoutConfig { batch_size: self.b, k1: self.k1, k2: self.k2 }
+        crate::sampling::FanoutConfig::new(self.b, &self.fanouts)
     }
+}
+
+fn req_usize_arr(j: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
+    let arr = j.req(key)?.as_arr().unwrap_or(&[]);
+    let vals: Vec<usize> = arr.iter().filter_map(|x| x.as_usize()).collect();
+    anyhow::ensure!(vals.len() == arr.len() && !vals.is_empty(), "bad '{key}' array");
+    Ok(vals)
 }
 
 /// One compiled-artifact descriptor.
@@ -67,6 +129,81 @@ impl ArtifactEntry {
     }
     pub fn param_bytes(&self) -> u64 {
         (self.param_elems() * 4) as u64
+    }
+}
+
+/// The canonical per-layer parameter list of
+/// `python/compile/model.py::init_params` for an L-layer model: GCN has
+/// (w_l, b_l) per layer, SAGE (w_l_self, w_l_nbr, b_l). At L = 2 this is
+/// exactly the seed's parameter order.
+pub fn param_specs(model: &str, dims: &ArtifactDims) -> Vec<(String, Vec<usize>)> {
+    let mut params = Vec::new();
+    for l in 1..=dims.layers() {
+        let (fin, fout) = (dims.f[l - 1], dims.f[l]);
+        match model {
+            "gcn" => {
+                params.push((format!("w{l}"), vec![fin, fout]));
+                params.push((format!("b{l}"), vec![fout]));
+            }
+            _ => {
+                params.push((format!("w{l}_self"), vec![fin, fout]));
+                params.push((format!("w{l}_nbr"), vec![fin, fout]));
+                params.push((format!("b{l}"), vec![fout]));
+            }
+        }
+    }
+    params
+}
+
+/// Per-level feature widths for an L-layer model on a dataset: input
+/// width, then the hidden width for every interior level, then classes.
+pub fn feature_widths(gd: GnnDims, layers: usize) -> Vec<usize> {
+    let mut f = Vec::with_capacity(layers + 1);
+    f.push(gd.f0);
+    for _ in 1..layers {
+        f.push(gd.f1);
+    }
+    f.push(gd.f2);
+    f
+}
+
+/// Synthesize one artifact entry (reference-executor backend: dims +
+/// parameter shapes are all it needs; the `path` is not required to
+/// exist). Non-2-layer entries get an `_l{L}` name suffix so names stay
+/// unique next to the default-depth artifact of the same dataset.
+pub fn synth_entry(
+    dir: &Path,
+    kind: &str,
+    model: &str,
+    dataset: &str,
+    b: usize,
+    fanouts: &[usize],
+    gd: GnnDims,
+) -> ArtifactEntry {
+    let dims = ArtifactDims::from_batch(b, fanouts, &feature_widths(gd, fanouts.len()));
+    let params = param_specs(model, &dims);
+    let ds = dataset.replace('-', "_");
+    let name = if fanouts.len() == 2 {
+        format!("{kind}_{model}_{ds}")
+    } else {
+        format!("{kind}_{model}_{ds}_l{}", fanouts.len())
+    };
+    let outputs = if kind == "train" {
+        std::iter::once("loss".to_string())
+            .chain(params.iter().map(|(n, _)| format!("grad_{n}")))
+            .collect()
+    } else {
+        vec!["logits".to_string()]
+    };
+    ArtifactEntry {
+        name: name.clone(),
+        kind: kind.to_string(),
+        model: model.to_string(),
+        dataset: dataset.to_string(),
+        path: dir.join(format!("{name}.hlo.txt")),
+        dims,
+        params,
+        outputs,
     }
 }
 
@@ -128,7 +265,8 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
 
-    /// Find an entry by kind/model/dataset.
+    /// Find an entry by kind/model/dataset (the first match — i.e. the
+    /// dataset's default-depth artifact; see [`Manifest::find_fanouts`]).
     pub fn find(&self, kind: &str, model: &str, dataset: &str) -> anyhow::Result<&ArtifactEntry> {
         self.entries
             .iter()
@@ -140,6 +278,21 @@ impl Manifest {
                     self.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
                 )
             })
+    }
+
+    /// Find an entry at an exact fanout configuration (e.g. the builtin
+    /// 3-layer SAGE artifact that shares its dataset key with the
+    /// default-depth one).
+    pub fn find_fanouts(
+        &self,
+        kind: &str,
+        model: &str,
+        dataset: &str,
+        fanouts: &[usize],
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == kind && e.model == model && e.dataset == dataset && e.dims.fanouts == fanouts
+        })
     }
 
     /// Load `<dir>/manifest.json`, falling back to the [`Manifest::builtin`]
@@ -163,18 +316,22 @@ impl Manifest {
     }
 
     /// Synthetic manifest mirroring the `python -m compile.aot` defaults:
-    /// tiny (b=32, fanout 3/2) plus the Table-4 datasets (b=256, fanout
-    /// 10/5), for gcn and sage, train and predict. Entry `path`s point
-    /// into `dir` but are not required to exist (reference backend).
+    /// tiny (b=32, fanouts [3, 2]) plus the Table-4 datasets (b=256,
+    /// fanouts [10, 5]), for gcn and sage, train and predict — plus a
+    /// 3-layer SAGE tiny entry (fanouts [3, 2, 2], DistDGL's deeper
+    /// recipe scaled down). Entry `path`s point into `dir` but are not
+    /// required to exist (reference backend).
     pub fn builtin(dir: &Path) -> Manifest {
         let mut entries = Vec::new();
         for model in ["gcn", "sage"] {
             for spec in crate::graph::datasets::REGISTRY.iter() {
-                push_builtin(&mut entries, dir, model, spec.key, 256, 10, 5, spec.dims);
+                push_builtin(&mut entries, dir, model, spec.key, 256, &[10, 5], spec.dims);
             }
             let tiny = crate::graph::datasets::TINY;
-            push_builtin(&mut entries, dir, model, tiny.key, 32, 3, 2, tiny.dims);
+            push_builtin(&mut entries, dir, model, tiny.key, 32, &[3, 2], tiny.dims);
         }
+        let tiny = crate::graph::datasets::TINY;
+        push_builtin(&mut entries, dir, "sage", tiny.key, 32, &[3, 2, 2], tiny.dims);
         Manifest { dir: dir.to_path_buf(), entries }
     }
 
@@ -193,57 +350,11 @@ fn push_builtin(
     model: &str,
     dataset: &str,
     b: usize,
-    k1: usize,
-    k2: usize,
-    gd: crate::graph::GnnDims,
+    fanouts: &[usize],
+    gd: GnnDims,
 ) {
-    let v1_cap = b * (k2 + 1);
-    let dims = ArtifactDims {
-        b,
-        k1,
-        k2,
-        v1_cap,
-        v0_cap: v1_cap * (k1 + 1),
-        f0: gd.f0,
-        f1: gd.f1,
-        f2: gd.f2,
-    };
-    let (f0, f1, f2) = (gd.f0, gd.f1, gd.f2);
-    let params: Vec<(String, Vec<usize>)> = match model {
-        "gcn" => vec![
-            ("w1".into(), vec![f0, f1]),
-            ("b1".into(), vec![f1]),
-            ("w2".into(), vec![f1, f2]),
-            ("b2".into(), vec![f2]),
-        ],
-        _ => vec![
-            ("w1_self".into(), vec![f0, f1]),
-            ("w1_nbr".into(), vec![f0, f1]),
-            ("b1".into(), vec![f1]),
-            ("w2_self".into(), vec![f1, f2]),
-            ("w2_nbr".into(), vec![f1, f2]),
-            ("b2".into(), vec![f2]),
-        ],
-    };
     for kind in ["train", "predict"] {
-        let name = format!("{kind}_{model}_{}", dataset.replace('-', "_"));
-        let outputs = if kind == "train" {
-            std::iter::once("loss".to_string())
-                .chain(params.iter().map(|(n, _)| format!("grad_{n}")))
-                .collect()
-        } else {
-            vec!["logits".to_string()]
-        };
-        entries.push(ArtifactEntry {
-            name: name.clone(),
-            kind: kind.to_string(),
-            model: model.to_string(),
-            dataset: dataset.to_string(),
-            path: dir.join(format!("{name}.hlo.txt")),
-            dims,
-            params: params.clone(),
-            outputs,
-        });
+        entries.push(synth_entry(dir, kind, model, dataset, b, fanouts, gd));
     }
 }
 
@@ -281,18 +392,37 @@ mod tests {
     #[test]
     fn builtin_covers_all_models_and_datasets() {
         let m = Manifest::builtin(Path::new("/nonexistent"));
-        // 2 models × (4 registry + tiny) × (train, predict)
-        assert_eq!(m.entries.len(), 2 * 5 * 2);
+        // 2 models × (4 registry + tiny) × (train, predict) + the
+        // 3-layer SAGE tiny pair
+        assert_eq!(m.entries.len(), 2 * 5 * 2 + 2);
         let e = m.find("train", "gcn", "tiny").unwrap();
         assert_eq!(e.dims.b, 32);
-        assert_eq!(e.dims.v1_cap, 32 * 3);
-        assert_eq!(e.dims.v0_cap, 32 * 3 * 4);
+        assert_eq!(e.dims.caps[1], 32 * 3);
+        assert_eq!(e.dims.caps[0], 32 * 3 * 4);
         assert_eq!(e.params[0], ("w1".to_string(), vec![32, 16]));
         assert_eq!(e.param_elems(), 32 * 16 + 16 + 16 * 8 + 8);
         let s = m.find("predict", "sage", "ogbn-products").unwrap();
         assert_eq!(s.params.len(), 6);
         assert_eq!(s.outputs, vec!["logits".to_string()]);
-        assert_eq!(s.dims.f0, 100);
+        assert_eq!(s.dims.f0(), 100);
+    }
+
+    #[test]
+    fn builtin_has_a_three_layer_sage_entry() {
+        let m = Manifest::builtin(Path::new("/nonexistent"));
+        // the plain find keeps returning the default-depth entry…
+        assert_eq!(m.find("train", "sage", "tiny").unwrap().dims.layers(), 2);
+        // …and the 3-layer one is reachable by exact fanouts
+        let e = m.find_fanouts("train", "sage", "tiny", &[3, 2, 2]).unwrap();
+        assert_eq!(e.name, "train_sage_tiny_l3");
+        assert_eq!(e.dims.layers(), 3);
+        assert_eq!(e.dims.caps, vec![32 * 3 * 3 * 4, 32 * 3 * 3, 32 * 3, 32]);
+        assert_eq!(e.dims.f, vec![32, 16, 16, 8]);
+        // SAGE: 3 params per layer, names suffixed per layer
+        assert_eq!(e.params.len(), 9);
+        assert_eq!(e.params[6].0, "w3_self");
+        assert!(m.find_fanouts("train", "sage", "tiny", &[9, 9]).is_none());
+        assert!(m.find_fanouts("predict", "sage", "tiny", &[3, 2, 2]).is_some());
     }
 
     #[test]
@@ -328,5 +458,36 @@ mod tests {
         .unwrap();
         assert!(Manifest::load(&tmp).is_err());
         std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn parses_depth_l_dims_and_rejects_zero_fanouts() {
+        // new-format dims parse and agree with the recurrence
+        let j = Json::parse(
+            r#"{"b": 8, "fanouts": [3, 2, 2], "f": [12, 16, 16, 5],
+                "caps": [288, 72, 24, 8]}"#,
+        )
+        .unwrap();
+        let d = ArtifactDims::from_json(&j).unwrap();
+        assert_eq!(d.layers(), 3);
+        assert_eq!(d.caps, vec![288, 72, 24, 8]);
+        assert_eq!(d.fanout_config().fanouts, vec![3, 2, 2]);
+        // wrong caps are rejected
+        let j = Json::parse(r#"{"b": 8, "fanouts": [3], "f": [12, 5], "caps": [99, 8]}"#).unwrap();
+        assert!(ArtifactDims::from_json(&j).is_err());
+        // zero / empty fanouts are rejected at manifest load
+        let j = Json::parse(r#"{"b": 8, "fanouts": [3, 0], "f": [12, 16, 5]}"#).unwrap();
+        assert!(ArtifactDims::from_json(&j).is_err());
+        let j = Json::parse(r#"{"b": 8, "fanouts": [], "f": [12]}"#).unwrap();
+        assert!(ArtifactDims::from_json(&j).is_err());
+        // legacy dims still parse
+        let j = Json::parse(
+            r#"{"b":4,"k1":1,"k2":1,"v1_cap":8,"v0_cap":16,"f0":4,"f1":4,"f2":4}"#,
+        )
+        .unwrap();
+        let d = ArtifactDims::from_json(&j).unwrap();
+        assert_eq!(d.fanouts, vec![1, 1]);
+        assert_eq!(d.caps, vec![16, 8, 4]);
+        assert_eq!(d.f, vec![4, 4, 4]);
     }
 }

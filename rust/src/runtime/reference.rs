@@ -1,19 +1,25 @@
 //! Pure-Rust reference executor — the offline twin of the PJRT backend.
 //!
 //! Implements the exact L2 model semantics (`python/compile/model.py`) for
-//! the two shipped models — 2-layer GCN and GraphSAGE-mean over the padded
-//! mini-batch wire format (DESIGN.md §Mini-batch wire format) — including
-//! the backward pass and the masked softmax cross-entropy loss. This lets
-//! the full coordinator pipeline (and its tests) run in environments
-//! without the `xla` crate or AOT artifacts: build without the `pjrt`
-//! feature and [`super::TrainExecutor`] dispatches here.
+//! the two shipped model families — L-layer GCN and GraphSAGE-mean over
+//! the padded mini-batch wire format (DESIGN.md §Mini-batch wire format)
+//! — including the backward pass and the masked softmax cross-entropy
+//! loss. Depth comes from the artifact's fanout vector; each layer is one
+//! aggregate→update stage forward and the transposed pair backward, so
+//! the executor prices any L ≥ 1 (gradients are finite-difference-checked
+//! at L ∈ {1, 2, 3} in the unit tests). This lets the full coordinator
+//! pipeline (and its tests) run in environments without the `xla` crate
+//! or AOT artifacts: build without the `pjrt` feature and
+//! [`super::TrainExecutor`] dispatches here.
 //!
 //! Numerics are plain f32 loops with a fixed accumulation order, so a
 //! training run is bit-reproducible — the property the pipeline
-//! determinism tests (`tests/pipeline_determinism.rs`) assert.
+//! determinism tests (`tests/pipeline_determinism.rs`) assert. At L = 2
+//! the loop unrolls to exactly the seed's operation sequence, keeping the
+//! golden-equivalence guarantee.
 
 use super::executor::{BatchBuffers, StepOutput};
-use super::manifest::{ArtifactDims, ArtifactEntry};
+use super::manifest::{param_specs, ArtifactDims, ArtifactEntry};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum ModelKind {
@@ -40,13 +46,14 @@ impl RefModel {
                  (enable the `pjrt` feature for arbitrary HLO artifacts)"
             ),
         };
-        let d = entry.dims;
-        let expect = expected_params(kind, &d);
+        let d = entry.dims.clone();
+        let expect = param_specs(&entry.model, &d);
         anyhow::ensure!(
             entry.params.len() == expect.len(),
-            "artifact '{}' has {} params, {} model needs {}",
+            "artifact '{}' has {} params, {}-layer {} model needs {}",
             entry.name,
             entry.params.len(),
+            d.layers(),
             entry.model,
             expect.len()
         );
@@ -61,85 +68,114 @@ impl RefModel {
     }
 
     /// Forward + backward + masked CE loss (train artifacts).
-    pub fn train_step(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<StepOutput> {
+    pub fn train_step(
+        &self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<StepOutput> {
         let fwd = self.forward(params, batch);
         let d = &self.dims;
+        let classes = d.classes();
         let denom = batch.mask.iter().sum::<f32>().max(1.0);
 
         // masked mean softmax cross-entropy and dlogits in one pass
         let mut loss = 0.0f32;
-        let mut dlogits = vec![0.0f32; d.b * d.f2];
+        let mut dlogits = vec![0.0f32; d.b * classes];
         for r in 0..d.b {
             let mk = batch.mask[r];
             if mk == 0.0 {
                 continue;
             }
-            let row = &fwd.logits[r * d.f2..(r + 1) * d.f2];
+            let row = &fwd.logits()[r * classes..(r + 1) * classes];
             let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let sumexp: f32 = row.iter().map(|&x| (x - max).exp()).sum();
             let logz = max + sumexp.ln();
             let label = batch.labels[r] as usize;
             loss += mk * (logz - row[label]);
             let scale = mk / denom;
-            for j in 0..d.f2 {
+            for j in 0..classes {
                 let softmax = (row[j] - max).exp() / sumexp;
                 let onehot = if j == label { 1.0 } else { 0.0 };
-                dlogits[r * d.f2 + j] = scale * (softmax - onehot);
+                dlogits[r * classes + j] = scale * (softmax - onehot);
             }
         }
         loss /= denom;
 
-        let grads = match self.kind {
-            ModelKind::Gcn => self.backward_gcn(params, batch, &fwd, &dlogits),
-            ModelKind::Sage => self.backward_sage(params, batch, &fwd, &dlogits),
-        };
+        let grads = self.backward(params, batch, &fwd, &dlogits);
         Ok(StepOutput { loss, grads })
     }
 
-    /// Forward only (predict artifacts) → logits `[b, f2]`.
+    /// Forward only (predict artifacts) → logits `[b, classes]`.
     pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
-        Ok(self.forward(params, batch).logits)
+        let mut fwd = self.forward(params, batch);
+        Ok(fwd.zs.pop().expect("at least one layer"))
+    }
+
+    /// Parameters-per-layer of this model kind.
+    fn ppl(&self) -> usize {
+        match self.kind {
+            ModelKind::Gcn => 2,
+            ModelKind::Sage => 3,
+        }
     }
 
     // -- forward -----------------------------------------------------------
 
+    /// L aggregate→update stages; relu between layers, linear output.
+    /// Layer 1 reads `feat0` by reference (no copy of the batch's largest
+    /// buffer); the output layer's pre-activation doubles as the logits.
     fn forward(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Forward {
         let d = &self.dims;
-        match self.kind {
-            ModelKind::Gcn => {
-                let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
-                // layer 1: aggregate(feat0) → update → relu
-                let agg1 = aggregate(&batch.feat0, &batch.idx1, &batch.w1, d.v1_cap, d.k1 + 1, d.f0, false);
-                let z1 = matmul_bias(&agg1, w1, b1, d.v1_cap, d.f0, d.f1);
-                let h1 = relu(&z1);
-                // layer 2: aggregate(h1) → update
-                let agg2 = aggregate(&h1, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, false);
-                let logits = matmul_bias(&agg2, w2, b2, d.b, d.f1, d.f2);
-                Forward { agg1, z1, agg2, logits, self1: Vec::new(), self2: Vec::new() }
+        let lcount = d.layers();
+        let ppl = self.ppl();
+        let mut aggs = Vec::with_capacity(lcount);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(lcount);
+        let mut selfs = Vec::with_capacity(lcount);
+        let mut h: Vec<f32> = Vec::new();
+        for l in 1..=lcount {
+            let rows = d.caps[l];
+            let k = d.fanouts[l - 1] + 1;
+            let (fin, fout) = (d.f[l - 1], d.f[l]);
+            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &h };
+            let z = match self.kind {
+                ModelKind::Gcn => {
+                    let (wl, bl) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
+                    let agg = aggregate(hin, idx, w, rows, k, fin, false);
+                    let z = matmul_bias(&agg, wl, bl, rows, fin, fout);
+                    aggs.push(agg);
+                    z
+                }
+                ModelKind::Sage => {
+                    // self rows through W_self, neighbor mean (col 0 of the
+                    // weights zeroed) through W_nbr
+                    let (ws, wn, bl) = (
+                        &params[ppl * (l - 1)],
+                        &params[ppl * (l - 1) + 1],
+                        &params[ppl * (l - 1) + 2],
+                    );
+                    let agg = aggregate(hin, idx, w, rows, k, fin, true);
+                    let selfr = take_rows(hin, idx, rows, k, fin);
+                    let mut z = matmul_bias(&selfr, ws, bl, rows, fin, fout);
+                    add_matmul(&mut z, &agg, wn, rows, fin, fout);
+                    aggs.push(agg);
+                    selfs.push(selfr);
+                    z
+                }
+            };
+            if l < lcount {
+                h = relu(&z);
             }
-            ModelKind::Sage => {
-                let (w1s, w1n, b1, w2s, w2n, b2) =
-                    (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
-                // layer 1: self rows through W_self, neighbor mean (col 0
-                // of the weights zeroed) through W_nbr
-                let agg1 = aggregate(&batch.feat0, &batch.idx1, &batch.w1, d.v1_cap, d.k1 + 1, d.f0, true);
-                let self1 = take_rows(&batch.feat0, &batch.idx1, d.v1_cap, d.k1 + 1, d.f0);
-                let mut z1 = matmul_bias(&self1, w1s, b1, d.v1_cap, d.f0, d.f1);
-                add_matmul(&mut z1, &agg1, w1n, d.v1_cap, d.f0, d.f1);
-                let h1 = relu(&z1);
-                // layer 2
-                let agg2 = aggregate(&h1, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, true);
-                let self2 = take_rows(&h1, &batch.idx2, d.b, d.k2 + 1, d.f1);
-                let mut logits = matmul_bias(&self2, w2s, b2, d.b, d.f1, d.f2);
-                add_matmul(&mut logits, &agg2, w2n, d.b, d.f1, d.f2);
-                Forward { agg1, z1, agg2, logits, self1, self2 }
-            }
+            zs.push(z);
         }
+        Forward { aggs, zs, selfs }
     }
 
     // -- backward ----------------------------------------------------------
 
-    fn backward_gcn(
+    /// Transposed stages, layer L down to 1 (the dataflow of the seed's
+    /// explicit 2-layer backward, looped).
+    fn backward(
         &self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
@@ -147,80 +183,60 @@ impl RefModel {
         dlogits: &[f32],
     ) -> Vec<Vec<f32>> {
         let d = &self.dims;
-        let w2 = &params[2];
-        // layer 2 update: dw2 = agg2ᵀ·dlogits, db2 = Σ rows, dagg2 = dlogits·w2ᵀ
-        let dw2 = matmul_at_b(&fwd.agg2, dlogits, d.b, d.f1, d.f2);
-        let db2 = col_sums(dlogits, d.b, d.f2);
-        let dagg2 = matmul_b_t(dlogits, w2, d.b, d.f2, d.f1);
-        // layer 2 aggregate transpose: scatter into h1 rows
-        let mut dh1 = vec![0.0f32; d.v1_cap * d.f1];
-        scatter_aggregate(&mut dh1, &dagg2, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, false);
-        // relu
-        let dz1 = relu_grad(&fwd.z1, &dh1);
-        // layer 1 update
-        let dw1 = matmul_at_b(&fwd.agg1, &dz1, d.v1_cap, d.f0, d.f1);
-        let db1 = col_sums(&dz1, d.v1_cap, d.f1);
-        vec![dw1, db1, dw2, db2]
-    }
-
-    fn backward_sage(
-        &self,
-        params: &[Vec<f32>],
-        batch: &BatchBuffers,
-        fwd: &Forward,
-        dlogits: &[f32],
-    ) -> Vec<Vec<f32>> {
-        let d = &self.dims;
-        let (w2s, w2n) = (&params[3], &params[4]);
-        // layer 2 update
-        let dw2s = matmul_at_b(&fwd.self2, dlogits, d.b, d.f1, d.f2);
-        let dw2n = matmul_at_b(&fwd.agg2, dlogits, d.b, d.f1, d.f2);
-        let db2 = col_sums(dlogits, d.b, d.f2);
-        // into h1: self path + neighbor path
-        let dself2 = matmul_b_t(dlogits, w2s, d.b, d.f2, d.f1);
-        let dnbr2 = matmul_b_t(dlogits, w2n, d.b, d.f2, d.f1);
-        let mut dh1 = vec![0.0f32; d.v1_cap * d.f1];
-        scatter_self(&mut dh1, &dself2, &batch.idx2, d.b, d.k2 + 1, d.f1);
-        scatter_aggregate(&mut dh1, &dnbr2, &batch.idx2, &batch.w2, d.b, d.k2 + 1, d.f1, true);
-        // relu
-        let dz1 = relu_grad(&fwd.z1, &dh1);
-        // layer 1 update (no gradient into feat0 needed)
-        let dw1s = matmul_at_b(&fwd.self1, &dz1, d.v1_cap, d.f0, d.f1);
-        let dw1n = matmul_at_b(&fwd.agg1, &dz1, d.v1_cap, d.f0, d.f1);
-        let db1 = col_sums(&dz1, d.v1_cap, d.f1);
-        vec![dw1s, dw1n, db1, dw2s, dw2n, db2]
+        let lcount = d.layers();
+        let ppl = self.ppl();
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); ppl * lcount];
+        let mut dz = dlogits.to_vec();
+        for l in (1..=lcount).rev() {
+            let rows = d.caps[l];
+            let k = d.fanouts[l - 1] + 1;
+            let (fin, fout) = (d.f[l - 1], d.f[l]);
+            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
+            match self.kind {
+                ModelKind::Gcn => {
+                    let wl = &params[ppl * (l - 1)];
+                    grads[ppl * (l - 1)] = matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 1] = col_sums(&dz, rows, fout);
+                    if l > 1 {
+                        let dagg = matmul_b_t(&dz, wl, rows, fout, fin);
+                        let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
+                        scatter_aggregate(&mut dh, &dagg, idx, w, rows, k, fin, false);
+                        dz = relu_grad(&fwd.zs[l - 2], &dh);
+                    }
+                }
+                ModelKind::Sage => {
+                    let (ws, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
+                    grads[ppl * (l - 1)] = matmul_at_b(&fwd.selfs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 1] = matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 2] = col_sums(&dz, rows, fout);
+                    if l > 1 {
+                        let dself = matmul_b_t(&dz, ws, rows, fout, fin);
+                        let dnbr = matmul_b_t(&dz, wn, rows, fout, fin);
+                        let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
+                        scatter_self(&mut dh, &dself, idx, rows, k, fin);
+                        scatter_aggregate(&mut dh, &dnbr, idx, w, rows, k, fin, true);
+                        dz = relu_grad(&fwd.zs[l - 2], &dh);
+                    }
+                }
+            }
+        }
+        grads
     }
 }
 
-/// Forward-pass intermediates kept for the backward pass.
+/// Forward-pass intermediates kept for the backward pass (one entry per
+/// layer; `selfs` is SAGE-only).
 struct Forward {
-    agg1: Vec<f32>,
-    z1: Vec<f32>,
-    agg2: Vec<f32>,
-    logits: Vec<f32>,
-    /// SAGE only: gathered self rows per layer (empty for GCN).
-    self1: Vec<f32>,
-    self2: Vec<f32>,
+    aggs: Vec<Vec<f32>>,
+    /// Pre-activations z_l; z_L *is* the logits (no relu on the output
+    /// layer), see [`Forward::logits`].
+    zs: Vec<Vec<f32>>,
+    selfs: Vec<Vec<f32>>,
 }
 
-/// The canonical parameter list of `python/compile/model.py::init_params`.
-fn expected_params(kind: ModelKind, d: &ArtifactDims) -> Vec<(String, Vec<usize>)> {
-    let (f0, f1, f2) = (d.f0, d.f1, d.f2);
-    match kind {
-        ModelKind::Gcn => vec![
-            ("w1".into(), vec![f0, f1]),
-            ("b1".into(), vec![f1]),
-            ("w2".into(), vec![f1, f2]),
-            ("b2".into(), vec![f2]),
-        ],
-        ModelKind::Sage => vec![
-            ("w1_self".into(), vec![f0, f1]),
-            ("w1_nbr".into(), vec![f0, f1]),
-            ("b1".into(), vec![f1]),
-            ("w2_self".into(), vec![f1, f2]),
-            ("w2_nbr".into(), vec![f1, f2]),
-            ("b2".into(), vec![f2]),
-        ],
+impl Forward {
+    fn logits(&self) -> &[f32] {
+        self.zs.last().expect("at least one layer")
     }
 }
 
@@ -396,6 +412,7 @@ fn relu_grad(z: &[f32], dh: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::synth_entry;
     use crate::runtime::Manifest;
     use crate::util::rng::Rng;
 
@@ -406,37 +423,40 @@ mod tests {
             .clone()
     }
 
+    /// Synthetic entry at an arbitrary depth (b=8 keeps the fd check fast).
+    fn depth_entry(model: &str, fanouts: &[usize]) -> ArtifactEntry {
+        let gd = crate::graph::GnnDims { f0: 12, f1: 10, f2: 5 };
+        synth_entry(std::path::Path::new("/tmp"), "train", model, "tiny", 8, fanouts, gd)
+    }
+
     fn random_batch(d: &ArtifactDims, seed: u64) -> BatchBuffers {
         let mut rng = Rng::new(seed);
-        let k1 = d.k1 + 1;
-        let k2 = d.k2 + 1;
+        let lcount = d.layers();
+        let classes = d.classes();
         // a self-consistent random padded batch: n real rows per level
-        let n_v0 = d.v0_cap / 2;
-        let n_v1 = d.v1_cap / 2;
-        let n_t = d.b / 2;
-        let feat0: Vec<f32> = (0..d.v0_cap * d.f0).map(|_| rng.f32() - 0.5).collect();
-        let mut idx1 = vec![0i32; d.v1_cap * k1];
-        let mut w1 = vec![0f32; d.v1_cap * k1];
-        for r in 0..n_v1 {
-            for c in 0..k1 {
-                idx1[r * k1 + c] = rng.index(n_v0) as i32;
-                w1[r * k1 + c] = rng.f32();
+        let n: Vec<usize> = d.caps.iter().map(|&c| (c / 2).max(1)).collect();
+        let feat0: Vec<f32> = (0..d.caps[0] * d.f[0]).map(|_| rng.f32() - 0.5).collect();
+        let mut idx = Vec::with_capacity(lcount);
+        let mut w = Vec::with_capacity(lcount);
+        for l in 1..=lcount {
+            let k = d.fanouts[l - 1] + 1;
+            let mut il = vec![0i32; d.caps[l] * k];
+            let mut wl = vec![0f32; d.caps[l] * k];
+            for r in 0..n[l] {
+                for c in 0..k {
+                    il[r * k + c] = rng.index(n[l - 1]) as i32;
+                    wl[r * k + c] = rng.f32();
+                }
             }
+            idx.push(il);
+            w.push(wl);
         }
-        let mut idx2 = vec![0i32; d.b * k2];
-        let mut w2 = vec![0f32; d.b * k2];
-        for r in 0..n_t {
-            for c in 0..k2 {
-                idx2[r * k2 + c] = rng.index(n_v1) as i32;
-                w2[r * k2 + c] = rng.f32();
-            }
-        }
-        let labels: Vec<i32> = (0..d.b).map(|_| rng.index(d.f2) as i32).collect();
+        let labels: Vec<i32> = (0..d.b).map(|_| rng.index(classes) as i32).collect();
         let mut mask = vec![0f32; d.b];
-        for m in mask.iter_mut().take(n_t) {
+        for m in mask.iter_mut().take(n[lcount]) {
             *m = 1.0;
         }
-        BatchBuffers { feat0, idx1, w1, idx2, w2, labels, mask }
+        BatchBuffers { feat0, idx, w, labels, mask }
     }
 
     fn loss_of(model: &RefModel, params: &[Vec<f32>], batch: &BatchBuffers) -> f64 {
@@ -445,10 +465,9 @@ mod tests {
 
     /// Central-difference gradient check: the analytic backward pass must
     /// match numerical differentiation on sampled coordinates.
-    fn grad_check(model_name: &str) {
-        let entry = tiny_entry(model_name, "train");
-        let model = RefModel::new(&entry).unwrap();
-        let params = crate::coordinator::params::ParamSet::init(&entry, 9).data;
+    fn grad_check_entry(entry: &ArtifactEntry, tag: &str) {
+        let model = RefModel::new(entry).unwrap();
+        let params = crate::coordinator::params::ParamSet::init(entry, 9).data;
         let batch = random_batch(&entry.dims, 4);
         let out = model.train_step(&params, &batch).unwrap();
         let mut rng = Rng::new(77);
@@ -466,12 +485,16 @@ mod tests {
                 let ana = out.grads[pi][i] as f64;
                 assert!(
                     (num - ana).abs() < 2e-2 * (1.0 + num.abs().max(ana.abs())),
-                    "{model_name} param {pi}[{i}]: numeric {num} vs analytic {ana}"
+                    "{tag} param {pi}[{i}]: numeric {num} vs analytic {ana}"
                 );
                 checked += 1;
             }
         }
         assert!(checked > 0);
+    }
+
+    fn grad_check(model_name: &str) {
+        grad_check_entry(&tiny_entry(model_name, "train"), model_name);
     }
 
     #[test]
@@ -482,6 +505,25 @@ mod tests {
     #[test]
     fn sage_gradients_match_finite_differences() {
         grad_check("sage");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_at_depths_one_and_three() {
+        for model in ["gcn", "sage"] {
+            for fanouts in [vec![3usize], vec![3, 2, 2]] {
+                let entry = depth_entry(model, &fanouts);
+                grad_check_entry(&entry, &format!("{model} L={}", fanouts.len()));
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_three_layer_sage_entry_gradcheck() {
+        // the manifest's shipped 3-layer artifact, end to end through the
+        // same validation path the trainer uses
+        let m = Manifest::builtin(std::path::Path::new("/tmp"));
+        let entry = m.find_fanouts("train", "sage", "tiny", &[3, 2, 2]).unwrap().clone();
+        grad_check_entry(&entry, "builtin sage l3");
     }
 
     #[test]
@@ -507,6 +549,10 @@ mod tests {
         assert!(RefModel::new(&entry).is_err());
         let mut entry = tiny_entry("gcn", "train");
         entry.params[0].1 = vec![1, 1];
+        assert!(RefModel::new(&entry).is_err());
+        // a 3-layer entry with a 2-layer parameter list is caught
+        let mut entry = depth_entry("gcn", &[3, 2, 2]);
+        entry.params.truncate(4);
         assert!(RefModel::new(&entry).is_err());
     }
 

@@ -1,17 +1,40 @@
 //! The sampled mini-batch container and its aggregation-weight modes.
 
 /// Static capacities of the padded wire format (must match the AOT
-/// artifact's shapes).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// artifact's shapes), generalized to arbitrary depth L.
+///
+/// Levels are numbered 0..=L: level L holds the targets, level 0 the
+/// input-feature rows. Layer l (1-based) aggregates level l-1 into level
+/// l. The fanout-vector order is defined **once** in DESIGN.md
+/// §Mini-batch wire format: `fanouts[l-1]` is the layer-l fanout, so the
+/// input-side hop comes first and the target-side hop last (DistDGL's
+/// `--fan-out 15,10,5` order; the paper's 2-layer default is `[25, 10]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BatchDims {
-    /// Target capacity (batch size B = |V^2| capacity).
+    /// Target capacity (batch size B = |V^L| capacity).
     pub b: usize,
-    /// Layer-1 vertex capacity (B·(k2+1)).
-    pub v1_cap: usize,
-    /// Layer-0 vertex capacity (v1_cap·(k1+1)).
-    pub v0_cap: usize,
-    pub k1: usize,
-    pub k2: usize,
+    /// Per-layer fanouts; length L (see the type-level docs for order).
+    pub fanouts: Vec<usize>,
+    /// Per-level vertex capacities: `caps[L] = b` and
+    /// `caps[l-1] = caps[l]·(fanouts[l-1]+1)`.
+    pub caps: Vec<usize>,
+}
+
+impl BatchDims {
+    /// Number of GNN layers L.
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Level-0 (input) vertex capacity — the feature-gather buffer rows.
+    pub fn v0_cap(&self) -> usize {
+        self.caps[0]
+    }
+
+    /// Width of layer l's idx/w rows: fanout plus the self column.
+    pub fn row_width(&self, l: usize) -> usize {
+        self.fanouts[l - 1] + 1
+    }
 }
 
 /// How aggregation weights are computed from the sampled block.
@@ -38,7 +61,8 @@ impl WeightMode {
 /// One sampled mini-batch in fixed-shape padded form.
 ///
 /// Index arrays use `i32` (what the HLO gather expects); padding rows/
-/// columns carry index 0 and weight 0 so they contribute nothing.
+/// columns carry index 0 and weight 0 so they contribute nothing. Field
+/// layout follows DESIGN.md §Mini-batch wire format.
 #[derive(Clone, Debug)]
 pub struct MiniBatch {
     pub dims: BatchDims,
@@ -47,23 +71,16 @@ pub struct MiniBatch {
     /// Monotonic production index within the epoch (scheduler ordering).
     pub seq: usize,
 
-    /// Real counts (≤ the corresponding capacity).
-    pub n_targets: usize,
-    pub n_v1: usize,
-    pub n_v0: usize,
-
-    /// Global vertex ids per layer; entries ≥ the real count are padding
-    /// (id 0). `v2` are the targets.
-    pub v2: Vec<u32>,
-    pub v1: Vec<u32>,
-    pub v0: Vec<u32>,
-
-    /// `[v1_cap, k1+1]` row-major positions into `v0`; col 0 = self.
-    pub idx1: Vec<i32>,
-    pub w1: Vec<f32>,
-    /// `[b, k2+1]` row-major positions into `v1`; col 0 = self.
-    pub idx2: Vec<i32>,
-    pub w2: Vec<f32>,
+    /// Real counts per level (`n[l]` ≤ `dims.caps[l]`); `n[L]` targets.
+    pub n: Vec<usize>,
+    /// Global vertex ids per level, padded to `caps[l]` with id 0.
+    /// `v[L]` are the targets, `v[0]` the feature-gather rows.
+    pub v: Vec<Vec<u32>>,
+    /// `idx[l-1]`: `[caps[l], fanouts[l-1]+1]` row-major positions into
+    /// level (l-1)'s list; column 0 = self.
+    pub idx: Vec<Vec<i32>>,
+    /// Matching aggregation weights (zero = padding).
+    pub w: Vec<Vec<f32>>,
 
     /// Per-target class labels and loss mask (0 for padding rows).
     pub labels: Vec<u32>,
@@ -71,72 +88,86 @@ pub struct MiniBatch {
 }
 
 impl MiniBatch {
-    /// Sum over layers of sampled-vertex counts — the unit of the paper's
-    /// NVTPS throughput metric (Eq. 3 numerator, per batch).
-    pub fn vertices_traversed(&self) -> usize {
-        self.n_targets + self.n_v1 + self.n_v0
+    /// Number of GNN layers L.
+    pub fn layers(&self) -> usize {
+        self.dims.layers()
     }
 
-    /// Edges in each sampled adjacency (|A^l|), self edges included —
-    /// drives the aggregation compute term (Eq. 8).
-    pub fn edges_layer1(&self) -> usize {
-        self.w1.iter().filter(|&&w| w != 0.0).count()
+    /// Real target count (`n[L]`).
+    pub fn n_targets(&self) -> usize {
+        self.n[self.dims.layers()]
     }
-    pub fn edges_layer2(&self) -> usize {
-        self.w2.iter().filter(|&&w| w != 0.0).count()
+
+    /// The real (unpadded) level-0 vertex ids — what the comm layer
+    /// accounts feature traffic for.
+    pub fn level0(&self) -> &[u32] {
+        &self.v[0][..self.n[0]]
+    }
+
+    /// Sum over levels of sampled-vertex counts — the unit of the paper's
+    /// NVTPS throughput metric (Eq. 3 numerator, per batch).
+    pub fn vertices_traversed(&self) -> usize {
+        self.n.iter().sum()
+    }
+
+    /// Edges in layer l's sampled adjacency (|A^l|), self edges included —
+    /// drives the aggregation compute term (Eq. 8).
+    pub fn edges(&self, l: usize) -> usize {
+        self.w[l - 1].iter().filter(|&&w| w != 0.0).count()
     }
 
     /// Structural invariants; used by tests and debug assertions.
     pub fn validate(&self) -> anyhow::Result<()> {
         let d = &self.dims;
-        anyhow::ensure!(self.v2.len() == d.b, "v2 len");
-        anyhow::ensure!(self.v1.len() == d.v1_cap, "v1 len");
-        anyhow::ensure!(self.v0.len() == d.v0_cap, "v0 len");
-        anyhow::ensure!(self.idx1.len() == d.v1_cap * (d.k1 + 1), "idx1 len");
-        anyhow::ensure!(self.w1.len() == self.idx1.len(), "w1 len");
-        anyhow::ensure!(self.idx2.len() == d.b * (d.k2 + 1), "idx2 len");
-        anyhow::ensure!(self.w2.len() == self.idx2.len(), "w2 len");
+        let lcount = d.layers();
+        anyhow::ensure!(lcount >= 1, "batch needs at least one layer");
+        anyhow::ensure!(d.caps.len() == lcount + 1 && d.caps[lcount] == d.b, "caps shape");
+        anyhow::ensure!(self.v.len() == lcount + 1 && self.n.len() == lcount + 1, "level count");
+        anyhow::ensure!(self.idx.len() == lcount && self.w.len() == lcount, "layer count");
+        for l in 0..=lcount {
+            anyhow::ensure!(self.v[l].len() == d.caps[l], "v[{l}] len");
+            anyhow::ensure!(self.n[l] <= d.caps[l], "n[{l}] exceeds capacity");
+        }
         anyhow::ensure!(self.labels.len() == d.b && self.mask.len() == d.b, "label/mask len");
-        anyhow::ensure!(
-            self.n_targets <= d.b && self.n_v1 <= d.v1_cap && self.n_v0 <= d.v0_cap,
-            "counts exceed capacity"
-        );
-        for (i, &ix) in self.idx1.iter().enumerate() {
-            anyhow::ensure!(
-                (ix as usize) < self.n_v0.max(1),
-                "idx1[{i}]={ix} out of range (n_v0={})",
-                self.n_v0
-            );
+        for l in 1..=lcount {
+            let k = d.row_width(l);
+            anyhow::ensure!(self.idx[l - 1].len() == d.caps[l] * k, "idx[{}] len", l - 1);
+            anyhow::ensure!(self.w[l - 1].len() == self.idx[l - 1].len(), "w[{}] len", l - 1);
+            let below = self.n[l - 1].max(1);
+            for (i, &ix) in self.idx[l - 1].iter().enumerate() {
+                anyhow::ensure!(
+                    (ix as usize) < below,
+                    "idx[{}][{i}]={ix} out of range (n[{}]={})",
+                    l - 1,
+                    l - 1,
+                    self.n[l - 1]
+                );
+            }
         }
-        for (i, &ix) in self.idx2.iter().enumerate() {
-            anyhow::ensure!(
-                (ix as usize) < self.n_v1.max(1),
-                "idx2[{i}]={ix} out of range (n_v1={})",
-                self.n_v1
-            );
-        }
-        for t in self.n_targets..d.b {
+        for t in self.n[lcount]..d.b {
             anyhow::ensure!(self.mask[t] == 0.0, "padding target {t} not masked");
         }
         Ok(())
     }
 
-    /// Host-side reference forward aggregation for layer 1 (used by
+    /// Host-side reference forward aggregation for layer `l` (used by
     /// integration tests to cross-check the compiled kernel): given
-    /// `feat0 [n rows of v0, f]`, produce `[v1_cap, f]`.
-    pub fn aggregate1_ref(&self, feat0: &[f32], f: usize) -> Vec<f32> {
+    /// `h [n rows of level l-1, f]`, produce `[caps[l], f]`.
+    pub fn aggregate_ref(&self, l: usize, h: &[f32], f: usize) -> Vec<f32> {
         let d = &self.dims;
-        let k = d.k1 + 1;
-        let mut out = vec![0.0f32; d.v1_cap * f];
-        for r in 0..d.v1_cap {
+        let k = d.row_width(l);
+        let rows = d.caps[l];
+        let (idx, w) = (&self.idx[l - 1], &self.w[l - 1]);
+        let mut out = vec![0.0f32; rows * f];
+        for r in 0..rows {
             for c in 0..k {
-                let w = self.w1[r * k + c];
-                if w == 0.0 {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
                     continue;
                 }
-                let src = self.idx1[r * k + c] as usize;
+                let src = idx[r * k + c] as usize;
                 for j in 0..f {
-                    out[r * f + j] += w * feat0[src * f + j];
+                    out[r * f + j] += weight * h[src * f + j];
                 }
             }
         }

@@ -1,16 +1,20 @@
 //! Mini-batch neighbor sampling (the paper's sampling stage, host-side).
 //!
 //! Layer-wise fanout sampling exactly as DistDGL/PaGraph/P3 do for
-//! GraphSAGE-style training: B target vertices, fanout `k2` at layer 2 and
-//! `k1` at layer 1 (paper: B=1024, fanouts 25 and 10). The sampled block
-//! is emitted in the **fixed-degree padded format** the AOT-compiled
-//! kernels consume (DESIGN.md §Mini-batch wire format):
+//! GraphSAGE-style training, generalized to arbitrary depth L: B target
+//! vertices and one fanout per layer (paper default: B=1024, fanouts
+//! `[25, 10]`). The fanout-vector order and the padded wire format are
+//! defined **once** in DESIGN.md §Mini-batch wire format — in short:
+//! `fanouts[l-1]` is the layer-l fanout, input-side hop first, target-side
+//! hop last (DistDGL's `--fan-out 15,10,5` order). The sampled block is
+//! emitted in the fixed-degree padded format the AOT-compiled kernels
+//! consume:
 //!
-//! - `v1`, `v0`: deduplicated global-vertex lists per layer (layer L's
+//! - `v[l]`: deduplicated global-vertex lists per level 0..=L (level L's
 //!   list is the targets themselves);
-//! - `idx_l`: `[|V^l|, k+1]` neighbor positions into layer (l-1)'s list,
-//!   column 0 = the vertex itself (self edge);
-//! - `w_l`: matching aggregation weights (zero = padding).
+//! - `idx[l-1]`: `[caps[l], fanouts[l-1]+1]` neighbor positions into level
+//!   (l-1)'s list, column 0 = the vertex itself (self edge);
+//! - `w[l-1]`: matching aggregation weights (zero = padding).
 //!
 //! Sampling runs on the CPU and is overlapped with FPGA compute (Eq. 5),
 //! so the implementation avoids per-batch allocation: a [`Sampler`] holds
@@ -22,26 +26,107 @@ pub mod sampler;
 pub use batch::{BatchDims, MiniBatch, WeightMode};
 pub use sampler::{EpochPlan, Sampler};
 
-/// Fanout configuration (paper defaults: B=1024, fanouts 25 and 10).
-#[derive(Clone, Copy, Debug)]
+/// The paper's evaluation fanouts (2-layer GraphSAGE recipe, layer order
+/// per DESIGN.md §Mini-batch wire format).
+pub const PAPER_FANOUTS: [usize; 2] = [25, 10];
+
+/// Sanity bound on the level-0 (feature-gather) capacity: deep fanout
+/// products grow geometrically and a padded batch buffer beyond this many
+/// rows cannot fit host or device memory at any Table-4 feature width.
+pub const MAX_V0_CAP: usize = 1 << 24;
+
+/// Fanout configuration: batch size plus one fanout per layer (see the
+/// module docs / DESIGN.md for the vector order; paper default B=1024,
+/// fanouts `[25, 10]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FanoutConfig {
     pub batch_size: usize,
-    /// Layer-1 fanout (neighbors sampled for every layer-1 vertex).
-    pub k1: usize,
-    /// Layer-2 fanout (neighbors sampled for every target).
-    pub k2: usize,
+    pub fanouts: Vec<usize>,
 }
 
 impl FanoutConfig {
-    pub const PAPER: FanoutConfig = FanoutConfig { batch_size: 1024, k1: 25, k2: 10 };
+    pub fn new(batch_size: usize, fanouts: &[usize]) -> FanoutConfig {
+        FanoutConfig { batch_size, fanouts: fanouts.to_vec() }
+    }
+
+    /// The paper's evaluation configuration (B=1024, fanouts [25, 10]).
+    pub fn paper() -> FanoutConfig {
+        FanoutConfig::new(1024, &PAPER_FANOUTS)
+    }
+
+    /// Number of GNN layers L.
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Reject configurations every entry point must refuse: empty fanout
+    /// lists, zero fanouts, zero batch size, and fanout products whose
+    /// padded level-0 buffer exceeds [`MAX_V0_CAP`] rows.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.batch_size >= 1, "batch size must be >= 1");
+        anyhow::ensure!(
+            !self.fanouts.is_empty(),
+            "fanout list must name at least one layer (e.g. --fanouts 25,10)"
+        );
+        anyhow::ensure!(
+            self.fanouts.iter().all(|&k| k >= 1),
+            "every fanout must be >= 1 (got {:?})",
+            self.fanouts
+        );
+        let caps = self.try_caps()?;
+        anyhow::ensure!(
+            caps[0] <= MAX_V0_CAP,
+            "level-0 capacity {} exceeds the sane memory bound {} \
+             (batch {} × fanouts {:?}); lower the batch size or fanouts",
+            caps[0],
+            MAX_V0_CAP,
+            self.batch_size,
+            self.fanouts
+        );
+        Ok(())
+    }
+
+    fn try_caps(&self) -> anyhow::Result<Vec<usize>> {
+        let lcount = self.fanouts.len();
+        let mut caps = vec![0usize; lcount + 1];
+        caps[lcount] = self.batch_size;
+        for l in (1..=lcount).rev() {
+            caps[l - 1] = caps[l].checked_mul(self.fanouts[l - 1] + 1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fanout capacities overflow usize (batch {} × fanouts {:?})",
+                    self.batch_size,
+                    self.fanouts
+                )
+            })?;
+        }
+        Ok(caps)
+    }
 
     /// Fixed capacities of the padded wire format.
     pub fn dims(&self) -> BatchDims {
-        let b = self.batch_size;
-        let v1_cap = b * (self.k2 + 1);
-        let v0_cap = v1_cap * (self.k1 + 1);
-        BatchDims { b, v1_cap, v0_cap, k1: self.k1, k2: self.k2 }
+        let caps = self
+            .try_caps()
+            .expect("fanout capacities overflow usize — FanoutConfig::validate rejects these");
+        BatchDims { b: self.batch_size, fanouts: self.fanouts.clone(), caps }
     }
+}
+
+/// Parse a `--fanouts 15,10,5`-style list (layer order per DESIGN.md
+/// §Mini-batch wire format: input-side hop first, target hop last).
+pub fn parse_fanouts(s: &str) -> anyhow::Result<Vec<usize>> {
+    let fanouts: Vec<usize> = s
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--fanouts '{s}': bad entry '{t}': {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(
+        fanouts.iter().all(|&k| k >= 1),
+        "--fanouts '{s}': every fanout must be >= 1"
+    );
+    Ok(fanouts)
 }
 
 #[cfg(test)]
@@ -50,9 +135,46 @@ mod tests {
 
     #[test]
     fn paper_config_dims() {
-        let d = FanoutConfig::PAPER.dims();
+        let d = FanoutConfig::paper().dims();
         assert_eq!(d.b, 1024);
-        assert_eq!(d.v1_cap, 1024 * 11);
-        assert_eq!(d.v0_cap, 1024 * 11 * 26);
+        assert_eq!(d.layers(), 2);
+        assert_eq!(d.caps[2], 1024);
+        assert_eq!(d.caps[1], 1024 * 11);
+        assert_eq!(d.caps[0], 1024 * 11 * 26);
+        assert_eq!(d.v0_cap(), d.caps[0]);
+    }
+
+    #[test]
+    fn three_layer_dims_follow_the_recurrence() {
+        let d = FanoutConfig::new(1024, &[15, 10, 5]).dims();
+        assert_eq!(d.layers(), 3);
+        assert_eq!(d.caps[3], 1024);
+        assert_eq!(d.caps[2], 1024 * 6);
+        assert_eq!(d.caps[1], 1024 * 6 * 11);
+        assert_eq!(d.caps[0], 1024 * 6 * 11 * 16);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(FanoutConfig::new(0, &[5]).validate().is_err(), "zero batch");
+        assert!(FanoutConfig::new(32, &[]).validate().is_err(), "empty fanouts");
+        assert!(FanoutConfig::new(32, &[5, 0]).validate().is_err(), "zero fanout");
+        // geometric blowup beyond the memory bound
+        assert!(FanoutConfig::new(1024, &[63, 63, 63, 63]).validate().is_err());
+        // overflow-sized fanouts are an error, not a panic
+        assert!(FanoutConfig::new(usize::MAX / 2, &[3, 3]).validate().is_err());
+        assert!(FanoutConfig::paper().validate().is_ok());
+        assert!(FanoutConfig::new(1024, &[15, 10, 5]).validate().is_ok());
+    }
+
+    #[test]
+    fn parse_fanouts_accepts_lists_and_rejects_garbage() {
+        assert_eq!(parse_fanouts("25,10").unwrap(), vec![25, 10]);
+        assert_eq!(parse_fanouts("15, 10, 5").unwrap(), vec![15, 10, 5]);
+        assert_eq!(parse_fanouts("4").unwrap(), vec![4]);
+        assert!(parse_fanouts("").is_err());
+        assert!(parse_fanouts("a,b").is_err());
+        assert!(parse_fanouts("10,,5").is_err());
+        assert!(parse_fanouts("0,5").is_err());
     }
 }

@@ -14,15 +14,21 @@ use crate::util::rng::{hash64, Rng};
 /// thread prepares it or in what order (the pipeline determinism
 /// requirement, DESIGN.md §Host pipeline). Any two samplers built with
 /// the same `seed` are interchangeable.
+///
+/// Depth: the sampler is fully generic over the fanout vector (see
+/// DESIGN.md §Mini-batch wire format for the layer order); at
+/// `fanouts = [k1, k2]` it consumes the RNG stream in exactly the order
+/// the seed's 2-layer implementation did, so the generalization is a
+/// provable no-op at L = 2 (`tests/golden_equivalence.rs`).
 pub struct Sampler {
     cfg: FanoutConfig,
     mode: WeightMode,
     /// Base of the per-(part, seq) RNG streams.
     stream: u64,
     rng: Rng,
-    /// stamp[v] == tag  ⇒  v already placed in the current layer list.
+    /// stamp[v] == tag  ⇒  v already placed in the current level list.
     stamp: Vec<u32>,
-    /// position of v in the current layer list (valid when stamped).
+    /// position of v in the current level list (valid when stamped).
     pos: Vec<i32>,
     tag: u32,
     /// scratch for neighbor sampling without replacement
@@ -49,7 +55,7 @@ impl Sampler {
         self.stream = stream;
     }
 
-    /// Sample the 2-layer block for `targets` (≤ batch_size) from `data`.
+    /// Sample the L-layer block for `targets` (≤ batch_size) from `data`.
     /// `seq` is the batch's per-partition sequence number; together with
     /// `part_id` it keys the RNG stream (see the type-level docs).
     pub fn sample(
@@ -59,67 +65,57 @@ impl Sampler {
         part_id: usize,
         seq: usize,
     ) -> MiniBatch {
-        self.rng =
-            Rng::new(hash64(self.stream ^ ((part_id as u64) << 32) ^ (seq as u64)));
+        self.rng = Rng::new(hash64(self.stream ^ ((part_id as u64) << 32) ^ (seq as u64)));
         let dims = self.cfg.dims();
+        let lcount = dims.layers();
         assert!(targets.len() <= dims.b, "targets exceed batch capacity");
         let g = &data.graph;
         let n_targets = targets.len();
 
-        // ---- layer 2: targets → v1 --------------------------------------
-        let mut v2 = vec![0u32; dims.b];
-        v2[..n_targets].copy_from_slice(targets);
+        let mut n = vec![0usize; lcount + 1];
+        let mut v: Vec<Vec<u32>> = dims.caps.iter().map(|&c| Vec::with_capacity(c)).collect();
+        n[lcount] = n_targets;
+        v[lcount].extend_from_slice(targets);
 
-        // v1 begins with the targets themselves (self positions), then
-        // deduplicated sampled neighbors.
-        self.tag += 1;
-        let mut v1: Vec<u32> = Vec::with_capacity(dims.v1_cap);
-        for &t in targets {
-            self.place(t, &mut v1);
+        // idx[l-1] / w[l-1] describe layer l (positions into level l-1)
+        let mut idx: Vec<Vec<i32>> = Vec::with_capacity(lcount);
+        let mut w: Vec<Vec<f32>> = Vec::with_capacity(lcount);
+        for l in 1..=lcount {
+            idx.push(vec![0i32; dims.caps[l] * dims.row_width(l)]);
+            w.push(vec![0f32; dims.caps[l] * dims.row_width(l)]);
         }
-        let mut idx2 = vec![0i32; dims.b * (dims.k2 + 1)];
-        let mut w2 = vec![0f32; dims.b * (dims.k2 + 1)];
-        for (r, &t) in targets.iter().enumerate() {
-            let row = r * (dims.k2 + 1);
-            let self_pos = self.pos[t as usize];
-            idx2[row] = self_pos;
-            let k_real = self.sample_neighbors(g, t, self.cfg.k2);
-            let picks = std::mem::take(&mut self.pick);
-            w2[row] = self.self_weight(g, t);
-            for (c, &u) in picks.iter().enumerate() {
-                let p = self.place(u, &mut v1);
-                idx2[row + 1 + c] = p;
-                w2[row + 1 + c] = self.neighbor_weight(g, t, u, k_real);
-            }
-            self.pick = picks;
-        }
-        let n_v1 = v1.len();
-        assert!(n_v1 <= dims.v1_cap);
 
-        // ---- layer 1: v1 → v0 --------------------------------------------
-        self.tag += 1;
-        let mut v0: Vec<u32> = Vec::with_capacity(dims.v0_cap);
-        for &v in &v1 {
-            self.place(v, &mut v0);
-        }
-        let mut idx1 = vec![0i32; dims.v1_cap * (dims.k1 + 1)];
-        let mut w1 = vec![0f32; dims.v1_cap * (dims.k1 + 1)];
-        for r in 0..n_v1 {
-            let v = v1[r];
-            let row = r * (dims.k1 + 1);
-            idx1[row] = self.pos[v as usize];
-            let k_real = self.sample_neighbors(g, v, self.cfg.k1);
-            let picks = std::mem::take(&mut self.pick);
-            w1[row] = self.self_weight(g, v);
-            for (c, &u) in picks.iter().enumerate() {
-                let p = self.place(u, &mut v0);
-                idx1[row + 1 + c] = p;
-                w1[row + 1 + c] = self.neighbor_weight(g, v, u, k_real);
+        // ---- layers L..1: level l → level l-1 ---------------------------
+        // Level l-1 begins with level l's vertices themselves (self
+        // positions), then deduplicated sampled neighbors — the same
+        // two-phase structure (and therefore RNG order) as the seed's
+        // explicit layer-2/layer-1 code.
+        for l in (1..=lcount).rev() {
+            let k = dims.fanouts[l - 1];
+            let kw = k + 1;
+            self.tag += 1;
+            let (lower, upper) = v.split_at_mut(l);
+            let cur = &upper[0];
+            let dst = &mut lower[l - 1];
+            for &vv in cur.iter() {
+                self.place(vv, dst);
             }
-            self.pick = picks;
+            for (r, &vv) in cur.iter().enumerate() {
+                let row = r * kw;
+                idx[l - 1][row] = self.pos[vv as usize];
+                let k_real = self.sample_neighbors(g, vv, k);
+                let picks = std::mem::take(&mut self.pick);
+                w[l - 1][row] = self.self_weight(g, vv);
+                for (c, &u) in picks.iter().enumerate() {
+                    let p = self.place(u, dst);
+                    idx[l - 1][row + 1 + c] = p;
+                    w[l - 1][row + 1 + c] = self.neighbor_weight(g, vv, u, k_real);
+                }
+                self.pick = picks;
+            }
+            n[l - 1] = dst.len();
+            assert!(n[l - 1] <= dims.caps[l - 1]);
         }
-        let n_v0 = v0.len();
-        assert!(n_v0 <= dims.v0_cap);
 
         // ---- labels / mask ------------------------------------------------
         let mut labels = vec![0u32; dims.b];
@@ -130,29 +126,14 @@ impl Sampler {
         }
 
         // pad vertex lists to capacity with id 0 (weight-0 rows ignore them)
-        v1.resize(dims.v1_cap, 0);
-        v0.resize(dims.v0_cap, 0);
-
-        MiniBatch {
-            dims,
-            part_id,
-            seq,
-            n_targets,
-            n_v1,
-            n_v0,
-            v2,
-            v1,
-            v0,
-            idx1,
-            w1,
-            idx2,
-            w2,
-            labels,
-            mask,
+        for (list, &cap) in v.iter_mut().zip(dims.caps.iter()) {
+            list.resize(cap, 0);
         }
+
+        MiniBatch { dims, part_id, seq, n, v, idx, w, labels, mask }
     }
 
-    /// Place `v` in `list` if not already present this layer; return its
+    /// Place `v` in `list` if not already present this level; return its
     /// position.
     #[inline]
     fn place(&mut self, v: u32, list: &mut Vec<u32>) -> i32 {
@@ -267,7 +248,7 @@ mod tests {
     }
 
     fn cfg() -> FanoutConfig {
-        FanoutConfig { batch_size: 64, k1: 5, k2: 3 }
+        FanoutConfig::new(64, &[5, 3])
     }
 
     #[test]
@@ -277,9 +258,27 @@ mod tests {
         let targets: Vec<u32> = d.train_vertices[..64].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
         mb.validate().unwrap();
-        assert_eq!(mb.n_targets, 64);
-        assert!(mb.n_v1 >= 64); // at least the targets themselves
-        assert!(mb.n_v0 >= mb.n_v1);
+        assert_eq!(mb.n_targets(), 64);
+        assert!(mb.n[1] >= 64); // at least the targets themselves
+        assert!(mb.n[0] >= mb.n[1]);
+    }
+
+    #[test]
+    fn depth_one_and_three_batches_validate() {
+        let d = data();
+        for fanouts in [vec![4], vec![4, 3, 2]] {
+            let cfg = FanoutConfig::new(32, &fanouts);
+            let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), 9);
+            let targets: Vec<u32> = d.train_vertices[..32].to_vec();
+            let mb = s.sample(&d, &targets, 0, 0);
+            mb.validate().unwrap();
+            assert_eq!(mb.layers(), fanouts.len());
+            assert_eq!(mb.n_targets(), 32);
+            // each level holds at least the level above (self placement)
+            for l in (1..=mb.layers()).rev() {
+                assert!(mb.n[l - 1] >= mb.n[l], "level {l}: {:?}", mb.n);
+            }
+        }
     }
 
     #[test]
@@ -289,7 +288,7 @@ mod tests {
         let targets: Vec<u32> = d.train_vertices[..10].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
         mb.validate().unwrap();
-        assert_eq!(mb.n_targets, 10);
+        assert_eq!(mb.n_targets(), 10);
         assert_eq!(mb.mask.iter().filter(|&&m| m == 1.0).count(), 10);
     }
 
@@ -299,10 +298,11 @@ mod tests {
         let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 2);
         let targets: Vec<u32> = d.train_vertices[..64].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
-        let uniq: std::collections::HashSet<u32> = mb.v1[..mb.n_v1].iter().copied().collect();
-        assert_eq!(uniq.len(), mb.n_v1, "v1 contains duplicates");
-        let uniq0: std::collections::HashSet<u32> = mb.v0[..mb.n_v0].iter().copied().collect();
-        assert_eq!(uniq0.len(), mb.n_v0, "v0 contains duplicates");
+        for l in 0..mb.layers() {
+            let uniq: std::collections::HashSet<u32> =
+                mb.v[l][..mb.n[l]].iter().copied().collect();
+            assert_eq!(uniq.len(), mb.n[l], "v[{l}] contains duplicates");
+        }
     }
 
     #[test]
@@ -311,15 +311,12 @@ mod tests {
         let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 3);
         let targets: Vec<u32> = d.train_vertices[..32].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
-        let k2 = mb.dims.k2 + 1;
-        for (r, &t) in targets.iter().enumerate() {
-            let p = mb.idx2[r * k2] as usize;
-            assert_eq!(mb.v1[p], t, "self column of target {r} wrong");
-        }
-        let k1 = mb.dims.k1 + 1;
-        for r in 0..mb.n_v1 {
-            let p = mb.idx1[r * k1] as usize;
-            assert_eq!(mb.v0[p], mb.v1[r], "self column of v1 row {r} wrong");
+        for l in 1..=mb.layers() {
+            let k = mb.dims.row_width(l);
+            for r in 0..mb.n[l] {
+                let p = mb.idx[l - 1][r * k] as usize;
+                assert_eq!(mb.v[l - 1][p], mb.v[l][r], "self column of level-{l} row {r}");
+            }
         }
     }
 
@@ -329,14 +326,16 @@ mod tests {
         let mut s = Sampler::new(cfg(), WeightMode::SageMean, d.graph.num_vertices(), 4);
         let targets: Vec<u32> = d.train_vertices[..16].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
-        let k2 = mb.dims.k2 + 1;
-        for r in 0..mb.n_targets {
-            let nbr_sum: f32 = mb.w2[r * k2 + 1..(r + 1) * k2].iter().sum();
-            let has_nbrs = mb.w2[r * k2 + 1..(r + 1) * k2].iter().any(|&w| w != 0.0);
+        let l = mb.layers();
+        let k2 = mb.dims.row_width(l);
+        let w2 = &mb.w[l - 1];
+        for r in 0..mb.n_targets() {
+            let nbr_sum: f32 = w2[r * k2 + 1..(r + 1) * k2].iter().sum();
+            let has_nbrs = w2[r * k2 + 1..(r + 1) * k2].iter().any(|&w| w != 0.0);
             if has_nbrs {
                 assert!((nbr_sum - 1.0).abs() < 1e-5, "row {r}: {nbr_sum}");
             }
-            assert_eq!(mb.w2[r * k2], 1.0); // self column
+            assert_eq!(w2[r * k2], 1.0); // self column
         }
     }
 
@@ -346,14 +345,15 @@ mod tests {
         let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 5);
         let targets: Vec<u32> = d.train_vertices[..8].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
-        let k2 = mb.dims.k2 + 1;
+        let l = mb.layers();
+        let k2 = mb.dims.row_width(l);
         for (r, &t) in targets.iter().enumerate() {
             let dv = d.graph.degree(t) as f32 + 1.0;
-            assert!((mb.w2[r * k2] - 1.0 / dv).abs() < 1e-6);
+            assert!((mb.w[l - 1][r * k2] - 1.0 / dv).abs() < 1e-6);
             for c in 1..k2 {
-                let w = mb.w2[r * k2 + c];
+                let w = mb.w[l - 1][r * k2 + c];
                 if w != 0.0 {
-                    let u = mb.v1[mb.idx2[r * k2 + c] as usize];
+                    let u = mb.v[l - 1][mb.idx[l - 1][r * k2 + c] as usize];
                     let du = d.graph.degree(u) as f32 + 1.0;
                     assert!((w - 1.0 / (dv * du).sqrt()).abs() < 1e-6);
                 }
@@ -369,9 +369,9 @@ mod tests {
         let mut s2 = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
         let a = s1.sample(&d, &targets, 0, 0);
         let b = s2.sample(&d, &targets, 0, 0);
-        assert_eq!(a.v0, b.v0);
-        assert_eq!(a.idx1, b.idx1);
-        assert_eq!(a.w2, b.w2);
+        assert_eq!(a.v[0], b.v[0]);
+        assert_eq!(a.idx[0], b.idx[0]);
+        assert_eq!(a.w[1], b.w[1]);
     }
 
     #[test]
@@ -388,12 +388,12 @@ mod tests {
         let a15 = a.sample(&d, &t2, 1, 5);
         let b15 = b.sample(&d, &t2, 1, 5);
         let b00 = b.sample(&d, &t1, 0, 0);
-        assert_eq!(a00.v0, b00.v0);
-        assert_eq!(a00.idx1, b00.idx1);
-        assert_eq!(a15.v0, b15.v0);
-        assert_eq!(a15.w2, b15.w2);
+        assert_eq!(a00.v[0], b00.v[0]);
+        assert_eq!(a00.idx[0], b00.idx[0]);
+        assert_eq!(a15.v[0], b15.v[0]);
+        assert_eq!(a15.w[1], b15.w[1]);
         // distinct (part, seq) keys give distinct batches
-        assert_ne!(a00.v0, a15.v0);
+        assert_ne!(a00.v[0], a15.v[0]);
     }
 
     #[test]
@@ -433,11 +433,11 @@ mod tests {
     }
 
     #[test]
-    fn vertices_traversed_counts_all_layers() {
+    fn vertices_traversed_counts_all_levels() {
         let d = data();
         let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 11);
         let targets: Vec<u32> = d.train_vertices[..64].to_vec();
         let mb = s.sample(&d, &targets, 0, 0);
-        assert_eq!(mb.vertices_traversed(), mb.n_targets + mb.n_v1 + mb.n_v0);
+        assert_eq!(mb.vertices_traversed(), mb.n[0] + mb.n[1] + mb.n[2]);
     }
 }

@@ -59,16 +59,7 @@ fn corrupt_hlo_text_fails_at_compile_not_execute() {
         model: "gcn".into(),
         dataset: "tiny".into(),
         path: dir.join("garbage.hlo.txt"),
-        dims: hitgnn::runtime::ArtifactDims {
-            b: 4,
-            k1: 1,
-            k2: 1,
-            v1_cap: 8,
-            v0_cap: 16,
-            f0: 4,
-            f1: 4,
-            f2: 4,
-        },
+        dims: hitgnn::runtime::ArtifactDims::from_batch(4, &[1, 1], &[4, 4, 4]),
         params: vec![],
         outputs: vec!["loss".into()],
     };
@@ -180,13 +171,13 @@ fn sampler_handles_isolated_vertices() {
     // overwrite with an almost-empty graph
     d.graph = Csr::from_edges(d.graph.num_vertices(), &[(0, 1), (1, 0)]);
     d.features = FeatureGen::new(3, spec.dims.f0, spec.dims.f2);
-    let cfg = FanoutConfig { batch_size: 8, k1: 3, k2: 2 };
+    let cfg = FanoutConfig::new(8, &[3, 2]);
     let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), 1);
     let targets: Vec<u32> = (0..8u32).collect();
     let mb = s.sample(&d, &targets, 0, 0);
     mb.validate().unwrap();
     // isolated targets aggregate only themselves
-    assert!(mb.n_v0 >= mb.n_targets);
+    assert!(mb.n[0] >= mb.n_targets());
 }
 
 #[test]
@@ -195,7 +186,7 @@ fn zero_capacity_cache_still_trains_accounting() {
     // 100% remote, beta == 0
     let d = datasets::lookup("tiny").unwrap().build(0, 9);
     let pre = preprocess(Algorithm::PaGraph, &d, 2, 0.0, 9);
-    let cfg = FanoutConfig { batch_size: 16, k1: 2, k2: 2 };
+    let cfg = FanoutConfig::new(16, &[2, 2]);
     let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), 2);
     let mb = s.sample(&d, &pre.train_parts[0][..16], 0, 0);
     let t = hitgnn::comm::feature_traffic(
@@ -218,4 +209,50 @@ fn cli_rejects_malformed_invocations() {
     assert!(run(&Args::parse(["train", "--fpgas", "zero"])).is_err());
     assert!(run(&Args::parse(["simulate", "--typo-flag", "1"])).is_err());
     assert!(run(&Args::parse(["dse", "--model"])).is_ok() || true); // flag-style --model consumed safely
+}
+
+#[test]
+fn fanout_config_rejects_degenerate_values_at_every_entry_point() {
+    use hitgnn::coordinator::cli::run;
+    use hitgnn::util::cli::Args;
+    // library entry point
+    assert!(FanoutConfig::new(0, &[5]).validate().is_err());
+    assert!(FanoutConfig::new(32, &[]).validate().is_err());
+    assert!(FanoutConfig::new(32, &[5, 0]).validate().is_err());
+    assert!(FanoutConfig::new(1024, &[63, 63, 63, 63]).validate().is_err(), "memory bound");
+    // CLI entry point: rejected at parse, before any training state
+    assert!(run(&Args::parse(["train", "--fanouts", "0,5"])).is_err());
+    assert!(run(&Args::parse(["train", "--fanouts", "abc"])).is_err());
+    assert!(run(&Args::parse(["train", "--fanouts", ""])).is_err());
+    // trainer entry point: the level-0 memory bound uses the artifact's
+    // batch size (tiny b=32 × these fanouts blows the cap)
+    let cfg = TrainConfig {
+        dataset: "tiny".into(),
+        fanouts: Some(vec![127, 127, 127, 127]),
+        num_fpgas: 2,
+        scale_shift: 0,
+        ..TrainConfig::default()
+    };
+    let err = Trainer::new(cfg).unwrap_err().to_string();
+    assert!(err.contains("level-0 capacity"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_zero_and_empty_fanouts() {
+    let dir = tmpdir("badfanout");
+    std::fs::write(dir.join("t.hlo.txt"), "HloModule t").unwrap();
+    for dims in [
+        r#"{"b":4,"fanouts":[3,0],"f":[4,4,4]}"#,
+        r#"{"b":4,"fanouts":[],"f":[4]}"#,
+        r#"{"b":0,"fanouts":[3],"f":[4,4]}"#,
+    ] {
+        let manifest = format!(
+            r#"{{"version":1,"entries":[{{"name":"t","kind":"train","model":"gcn",
+                "dataset":"tiny","file":"t.hlo.txt","params":[],"outputs":["loss"],
+                "dims":{dims}}}]}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        assert!(Manifest::load(&dir).is_err(), "dims {dims} accepted");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

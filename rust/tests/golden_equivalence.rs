@@ -1,0 +1,264 @@
+//! Golden-equivalence guard (ISSUE 4): the depth-L generalization at
+//! `fanouts = [k1, k2]` must be a provable no-op against the seed's
+//! 2-layer behaviour — bit-identical `MiniBatch` contents and
+//! bit-identical per-iteration training losses for the same seed on the
+//! same dataset.
+//!
+//! The oracle below is the seed's 2-layer `Sampler::sample` transcribed
+//! verbatim (same scratch structures, same RNG keying, same draw order),
+//! so any reordering of RNG consumption or dedup bookkeeping in the
+//! generalized level loop fails this test bit-exactly.
+
+use hitgnn::coordinator::{TrainConfig, Trainer};
+use hitgnn::graph::{Csr, Dataset};
+use hitgnn::partition::Algorithm;
+use hitgnn::sampling::{FanoutConfig, MiniBatch, Sampler, WeightMode};
+use hitgnn::util::rng::{hash64, Rng};
+
+/// The seed's 2-layer sampler, kept as the golden oracle.
+struct SeedSampler {
+    batch_size: usize,
+    k1: usize,
+    k2: usize,
+    mode: WeightMode,
+    stream: u64,
+    rng: Rng,
+    stamp: Vec<u32>,
+    pos: Vec<i32>,
+    tag: u32,
+    pick: Vec<u32>,
+}
+
+/// The seed's flat 2-layer batch (field names as in the seed).
+struct SeedBatch {
+    n_targets: usize,
+    n_v1: usize,
+    n_v0: usize,
+    v2: Vec<u32>,
+    v1: Vec<u32>,
+    v0: Vec<u32>,
+    idx1: Vec<i32>,
+    w1: Vec<f32>,
+    idx2: Vec<i32>,
+    w2: Vec<f32>,
+    labels: Vec<u32>,
+    mask: Vec<f32>,
+}
+
+impl SeedSampler {
+    fn new(batch_size: usize, k1: usize, k2: usize, mode: WeightMode, nv: usize, seed: u64) -> Self {
+        SeedSampler {
+            batch_size,
+            k1,
+            k2,
+            mode,
+            stream: seed,
+            rng: Rng::new(seed),
+            stamp: vec![0; nv],
+            pos: vec![0; nv],
+            tag: 0,
+            pick: Vec::new(),
+        }
+    }
+
+    fn sample(&mut self, data: &Dataset, targets: &[u32], part_id: usize, seq: usize) -> SeedBatch {
+        self.rng = Rng::new(hash64(self.stream ^ ((part_id as u64) << 32) ^ (seq as u64)));
+        let b = self.batch_size;
+        let v1_cap = b * (self.k2 + 1);
+        let v0_cap = v1_cap * (self.k1 + 1);
+        assert!(targets.len() <= b);
+        let g = &data.graph;
+        let n_targets = targets.len();
+
+        // ---- layer 2: targets → v1 --------------------------------------
+        let mut v2 = vec![0u32; b];
+        v2[..n_targets].copy_from_slice(targets);
+        self.tag += 1;
+        let mut v1: Vec<u32> = Vec::with_capacity(v1_cap);
+        for &t in targets {
+            self.place(t, &mut v1);
+        }
+        let mut idx2 = vec![0i32; b * (self.k2 + 1)];
+        let mut w2 = vec![0f32; b * (self.k2 + 1)];
+        for (r, &t) in targets.iter().enumerate() {
+            let row = r * (self.k2 + 1);
+            let self_pos = self.pos[t as usize];
+            idx2[row] = self_pos;
+            let k_real = self.sample_neighbors(g, t, self.k2);
+            let picks = std::mem::take(&mut self.pick);
+            w2[row] = self.self_weight(g, t);
+            for (c, &u) in picks.iter().enumerate() {
+                let p = self.place(u, &mut v1);
+                idx2[row + 1 + c] = p;
+                w2[row + 1 + c] = self.neighbor_weight(g, t, u, k_real);
+            }
+            self.pick = picks;
+        }
+        let n_v1 = v1.len();
+
+        // ---- layer 1: v1 → v0 --------------------------------------------
+        self.tag += 1;
+        let mut v0: Vec<u32> = Vec::with_capacity(v0_cap);
+        for &v in &v1 {
+            self.place(v, &mut v0);
+        }
+        let mut idx1 = vec![0i32; v1_cap * (self.k1 + 1)];
+        let mut w1 = vec![0f32; v1_cap * (self.k1 + 1)];
+        for r in 0..n_v1 {
+            let v = v1[r];
+            let row = r * (self.k1 + 1);
+            idx1[row] = self.pos[v as usize];
+            let k_real = self.sample_neighbors(g, v, self.k1);
+            let picks = std::mem::take(&mut self.pick);
+            w1[row] = self.self_weight(g, v);
+            for (c, &u) in picks.iter().enumerate() {
+                let p = self.place(u, &mut v0);
+                idx1[row + 1 + c] = p;
+                w1[row + 1 + c] = self.neighbor_weight(g, v, u, k_real);
+            }
+            self.pick = picks;
+        }
+        let n_v0 = v0.len();
+
+        // ---- labels / mask ------------------------------------------------
+        let mut labels = vec![0u32; b];
+        let mut mask = vec![0f32; b];
+        for (r, &t) in targets.iter().enumerate() {
+            labels[r] = data.features.label(t);
+            mask[r] = 1.0;
+        }
+        v1.resize(v1_cap, 0);
+        v0.resize(v0_cap, 0);
+        SeedBatch { n_targets, n_v1, n_v0, v2, v1, v0, idx1, w1, idx2, w2, labels, mask }
+    }
+
+    fn place(&mut self, v: u32, list: &mut Vec<u32>) -> i32 {
+        let vi = v as usize;
+        if self.stamp[vi] == self.tag {
+            return self.pos[vi];
+        }
+        self.stamp[vi] = self.tag;
+        let p = list.len() as i32;
+        self.pos[vi] = p;
+        list.push(v);
+        p
+    }
+
+    fn sample_neighbors(&mut self, g: &Csr, v: u32, k: usize) -> usize {
+        let nbrs = g.neighbors(v);
+        self.pick.clear();
+        if nbrs.is_empty() {
+            return 0;
+        }
+        if nbrs.len() <= k {
+            self.pick.extend_from_slice(nbrs);
+        } else {
+            let idxs = self.rng.sample_distinct(nbrs.len(), k);
+            self.pick.extend(idxs.into_iter().map(|i| nbrs[i]));
+        }
+        self.pick.len()
+    }
+
+    fn self_weight(&self, g: &Csr, v: u32) -> f32 {
+        match self.mode {
+            WeightMode::GcnNorm => 1.0 / (g.degree(v) as f32 + 1.0),
+            WeightMode::SageMean => 1.0,
+        }
+    }
+
+    fn neighbor_weight(&self, g: &Csr, v: u32, u: u32, k_real: usize) -> f32 {
+        match self.mode {
+            WeightMode::GcnNorm => {
+                1.0 / (((g.degree(v) as f32 + 1.0) * (g.degree(u) as f32 + 1.0)).sqrt())
+            }
+            WeightMode::SageMean => 1.0 / k_real as f32,
+        }
+    }
+}
+
+fn assert_bit_identical(mb: &MiniBatch, seed: &SeedBatch, tag: &str) {
+    assert_eq!(mb.layers(), 2, "{tag}");
+    assert_eq!(mb.n[2], seed.n_targets, "{tag}: n_targets");
+    assert_eq!(mb.n[1], seed.n_v1, "{tag}: n_v1");
+    assert_eq!(mb.n[0], seed.n_v0, "{tag}: n_v0");
+    assert_eq!(mb.v[2], seed.v2, "{tag}: v2");
+    assert_eq!(mb.v[1], seed.v1, "{tag}: v1");
+    assert_eq!(mb.v[0], seed.v0, "{tag}: v0");
+    assert_eq!(mb.idx[0], seed.idx1, "{tag}: idx1");
+    assert_eq!(mb.idx[1], seed.idx2, "{tag}: idx2");
+    // weights compared bit-exactly, not approximately
+    let bits = |w: &[f32]| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&mb.w[0]), bits(&seed.w1), "{tag}: w1");
+    assert_eq!(bits(&mb.w[1]), bits(&seed.w2), "{tag}: w2");
+    assert_eq!(mb.labels, seed.labels, "{tag}: labels");
+    assert_eq!(bits(&mb.mask), bits(&seed.mask), "{tag}: mask");
+}
+
+#[test]
+fn generalized_sampler_is_bit_identical_to_seed_at_depth_two() {
+    let data = hitgnn::graph::datasets::lookup("reddit").unwrap().build(8, 17);
+    let nv = data.graph.num_vertices();
+    for (mode, rng_seed) in [(WeightMode::GcnNorm, 7u64), (WeightMode::SageMean, 23u64)] {
+        let mut gen = Sampler::new(FanoutConfig::new(64, &[5, 3]), mode, nv, rng_seed);
+        let mut oracle = SeedSampler::new(64, 5, 3, mode, nv, rng_seed);
+        // several (part, seq) keys, including a short final batch, and in
+        // an order that exercises the persistent stamp/pos scratch reuse
+        let cases: [(usize, usize, usize, usize); 4] =
+            [(0, 0, 0, 64), (1, 5, 64, 128), (0, 1, 128, 192), (2, 0, 300, 310)];
+        for (part, seq, lo, hi) in cases {
+            let targets: Vec<u32> = data.train_vertices[lo..hi].to_vec();
+            let mb = gen.sample(&data, &targets, part, seq);
+            let sb = oracle.sample(&data, &targets, part, seq);
+            mb.validate().unwrap();
+            assert_bit_identical(&mb, &sb, &format!("{mode:?} part={part} seq={seq}"));
+        }
+    }
+}
+
+/// (per-iteration losses, traffic totals) of a short tiny-dataset run.
+fn run_losses(fanouts: Option<Vec<usize>>) -> (Vec<f64>, (u64, u64, u64, u64)) {
+    let cfg = TrainConfig {
+        dataset: "tiny".into(),
+        model: "gcn".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 2,
+        epochs: 2,
+        lr: 0.3,
+        momentum: 0.9,
+        scale_shift: 0,
+        seed: 33,
+        max_iterations: Some(6),
+        fanouts,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    let losses: Vec<f64> =
+        r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect();
+    let traffic = r.epochs.iter().fold((0u64, 0u64, 0u64, 0u64), |acc, e| {
+        (
+            acc.0 + e.local_bytes,
+            acc.1 + e.host_bytes,
+            acc.2 + e.f2f_bytes,
+            acc.3 + e.dedup_saved_bytes,
+        )
+    });
+    t.shutdown();
+    (losses, traffic)
+}
+
+#[test]
+fn explicit_default_fanouts_reproduce_the_seed_training_run() {
+    // `--fanouts 3,2` (the tiny artifact's own fanouts) must take the
+    // exact same path as no override: bit-identical per-iteration losses
+    // and Traffic totals — the refactor is a no-op at L = 2.
+    let base = run_losses(None);
+    let explicit = run_losses(Some(vec![3, 2]));
+    assert!(!base.0.is_empty());
+    assert_eq!(
+        base.0.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        explicit.0.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "losses diverged between default and explicit [3, 2] fanouts"
+    );
+    assert_eq!(base.1, explicit.1, "traffic diverged");
+}

@@ -42,7 +42,7 @@ fn tiny_setup(
     mb.validate().unwrap();
     let svc = FeatureService::new(&data.features, CommConfig::default());
     let (feat0, _) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
-    let batch = BatchBuffers::from_minibatch(&mb, feat0, entry.dims.f0);
+    let batch = BatchBuffers::from_minibatch(&mb, feat0, entry.dims.f0());
     (data, pre, mb, batch, entry)
 }
 
@@ -75,41 +75,43 @@ fn predict_logits_match_host_reference_for_gcn() {
     let params = ParamSet::init(&pentry, 3);
     let logits = exe.predict(&params.data, &batch).unwrap();
 
-    let d = entry.dims;
+    let d = &entry.dims;
+    let (f0, f1, f2) = (d.f[0], d.f[1], d.f[2]);
+    let v1_cap = d.caps[1];
     let (w1, b1, w2, b2) = (&params.data[0], &params.data[1], &params.data[2], &params.data[3]);
     // layer 1: aggregate(feat0) -> update -> relu
-    let agg1 = mb.aggregate1_ref(&batch.feat0, d.f0); // [v1_cap, f0]
-    let mut h1 = vec![0f32; d.v1_cap * d.f1];
-    for r in 0..d.v1_cap {
-        for j in 0..d.f1 {
+    let agg1 = mb.aggregate_ref(1, &batch.feat0, f0); // [v1_cap, f0]
+    let mut h1 = vec![0f32; v1_cap * f1];
+    for r in 0..v1_cap {
+        for j in 0..f1 {
             let mut acc = b1[j];
-            for k in 0..d.f0 {
-                acc += agg1[r * d.f0 + k] * w1[k * d.f1 + j];
+            for k in 0..f0 {
+                acc += agg1[r * f0 + k] * w1[k * f1 + j];
             }
-            h1[r * d.f1 + j] = acc.max(0.0);
+            h1[r * f1 + j] = acc.max(0.0);
         }
     }
-    // layer 2: aggregate(h1 by idx2/w2) -> update
-    let k2 = d.k2 + 1;
-    let mut want = vec![0f32; d.b * d.f2];
+    // layer 2: aggregate(h1 by idx[1]/w[1]) -> update
+    let k2 = d.fanouts[1] + 1;
+    let mut want = vec![0f32; d.b * f2];
     for r in 0..d.b {
-        let mut agg = vec![0f32; d.f1];
+        let mut agg = vec![0f32; f1];
         for c in 0..k2 {
-            let w = batch.w2[r * k2 + c];
+            let w = batch.w[1][r * k2 + c];
             if w == 0.0 {
                 continue;
             }
-            let src = batch.idx2[r * k2 + c] as usize;
-            for j in 0..d.f1 {
-                agg[j] += w * h1[src * d.f1 + j];
+            let src = batch.idx[1][r * k2 + c] as usize;
+            for j in 0..f1 {
+                agg[j] += w * h1[src * f1 + j];
             }
         }
-        for j in 0..d.f2 {
+        for j in 0..f2 {
             let mut acc = b2[j];
-            for k in 0..d.f1 {
-                acc += agg[k] * w2[k * d.f2 + j];
+            for k in 0..f1 {
+                acc += agg[k] * w2[k * f2 + j];
             }
-            want[r * d.f2 + j] = acc;
+            want[r * f2 + j] = acc;
         }
     }
     assert_eq!(logits.len(), want.len());
@@ -161,7 +163,7 @@ fn mask_zero_targets_do_not_affect_loss() {
     batch.mask[entry.dims.b - 1] = 0.0;
     let a = exe.train_step(&params.data, &batch).unwrap();
     batch.labels[entry.dims.b - 1] =
-        (batch.labels[entry.dims.b - 1] + 1) % entry.dims.f2 as i32;
+        (batch.labels[entry.dims.b - 1] + 1) % entry.dims.classes() as i32;
     let b = exe.train_step(&params.data, &batch).unwrap();
     assert!(
         (a.loss - b.loss).abs() < 1e-6,

@@ -178,6 +178,42 @@ fn determinism_holds_across_sched_modes_on_heterogeneous_fleet() {
 }
 
 #[test]
+fn determinism_holds_at_depth_three_across_pipeline_and_sched() {
+    // ISSUE 4 acceptance: the determinism law must hold at L = 3 — a
+    // fanout override changes the wire format everywhere (sampler,
+    // gather, executor), none of which may depend on pipeline config or
+    // scheduler mode. Heterogeneous fleet so the modes actually differ.
+    let cfg_for = |mode: SchedMode| {
+        let mut c = base_cfg();
+        c.fanouts = Some(vec![3, 2, 2]);
+        c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+        c.sched = mode;
+        c
+    };
+    let mut per_mode = Vec::new();
+    for mode in SchedMode::ALL {
+        let base = run_cfg(cfg_for(mode), 1, 1);
+        assert!(!base.0.is_empty(), "no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()));
+        for (ht, d) in [(1, 3), (4, 1), (4, 3)] {
+            let got = run_cfg(cfg_for(mode), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "{mode:?} L=3: loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+            );
+            assert_eq!(base.1, got.1, "{mode:?} L=3: traffic diverged at ({ht}, {d})");
+            assert_eq!(base.2, got.2, "{mode:?} L=3: batch count diverged at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "{mode:?} L=3: iteration count diverged at ({ht}, {d})");
+        }
+        per_mode.push(base);
+    }
+    // scheduler modes stay paired ablations at depth 3
+    assert_eq!(per_mode[0].0, per_mode[1].0, "sched modes must pair bit-identically at L=3");
+    assert_eq!(per_mode[0].2, per_mode[1].2);
+    assert_eq!(per_mode[0].3, per_mode[1].3);
+}
+
+#[test]
 fn legacy_prefetch_flag_equals_depth_two() {
     let mut cfg_flag = base_cfg();
     cfg_flag.prefetch = true;

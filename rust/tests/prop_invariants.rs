@@ -145,25 +145,28 @@ fn partitioners_cover_train_set_disjointly() {
 fn sampled_batches_always_validate() {
     let d = datasets::lookup("reddit").unwrap().build(8, 55);
     check("sampler validity", 24, |rng| {
-        let cfg = FanoutConfig {
-            batch_size: 1 + rng.index(96),
-            k1: 1 + rng.index(8),
-            k2: 1 + rng.index(6),
-        };
+        // random depth 1..=3 with random per-layer fanouts
+        let lcount = 1 + rng.index(3);
+        let fanouts: Vec<usize> = (0..lcount).map(|_| 1 + rng.index(7)).collect();
+        let cfg = FanoutConfig::new(1 + rng.index(64), &fanouts);
+        cfg.validate().map_err(|e| e.to_string())?;
         let mode = if rng.bool(0.5) { WeightMode::GcnNorm } else { WeightMode::SageMean };
+        let batch_size = cfg.batch_size;
         let mut s = Sampler::new(cfg, mode, d.graph.num_vertices(), rng.next_u64());
-        let n = 1 + rng.index(cfg.batch_size.min(d.train_vertices.len()));
+        let n = 1 + rng.index(batch_size.min(d.train_vertices.len()));
         let start = rng.index(d.train_vertices.len() - n + 1);
         let targets = &d.train_vertices[start..start + n];
         let mb = s.sample(&d, targets, 0, 0);
         mb.validate().map_err(|e| e.to_string())?;
-        require(mb.n_targets == n, "target count")?;
-        // weights non-negative and padded rows fully zero
-        require(mb.w1.iter().all(|&w| w >= 0.0), "w1 non-negative")?;
-        let k1 = mb.dims.k1 + 1;
-        for r in mb.n_v1..mb.dims.v1_cap {
-            let row = &mb.w1[r * k1..(r + 1) * k1];
-            require(row.iter().all(|&w| w == 0.0), "padding rows weightless")?;
+        require(mb.n_targets() == n, "target count")?;
+        // weights non-negative and padded rows fully zero, at every layer
+        for l in 1..=lcount {
+            let k = mb.dims.row_width(l);
+            require(mb.w[l - 1].iter().all(|&w| w >= 0.0), "weights non-negative")?;
+            for r in mb.n[l]..mb.dims.caps[l] {
+                let row = &mb.w[l - 1][r * k..(r + 1) * k];
+                require(row.iter().all(|&w| w == 0.0), "padding rows weightless")?;
+            }
         }
         Ok(())
     });
@@ -189,7 +192,7 @@ fn traffic_conserves_bytes_for_all_algorithms_and_policies() {
             _ => CachePolicy::Window,
         };
         let mut pre = preprocess_with_policy(algo, &d, p, 0.3, policy, rng.next_u64());
-        let cfg = FanoutConfig { batch_size: 32, k1: 4, k2: 3 };
+        let cfg = FanoutConfig::new(32, &[4, 3]);
         let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
         let part = rng.index(p);
         if pre.train_parts[part].len() < 32 {
@@ -198,7 +201,7 @@ fn traffic_conserves_bytes_for_all_algorithms_and_policies() {
         let mb = s.sample(&d, &pre.train_parts[part][..32], part, 0);
         let dc = rng.bool(0.5);
         let row = d.features.bytes_per_vertex();
-        let expect = (mb.n_v0 * row) as u64;
+        let expect = (mb.n[0] * row) as u64;
         let comm = hitgnn::comm::CommConfig { direct_host_fetch: dc };
         let conserves = |label: &str, t: &hitgnn::comm::Traffic| {
             require(
@@ -219,7 +222,7 @@ fn traffic_conserves_bytes_for_all_algorithms_and_policies() {
         conserves("cold", &t)?;
         // drive the dynamic path: observe + end_epoch, then the re-ranked
         // residency must still conserve bytes
-        pre.stores[part].observe(&mb.v0[..mb.n_v0]);
+        pre.stores[part].observe(mb.level0());
         for st in pre.stores.iter_mut() {
             st.end_epoch();
         }
@@ -256,7 +259,7 @@ fn iteration_dedup_conserves_bytes_for_all_policies() {
             _ => CachePolicy::Window,
         };
         let pre = preprocess_with_policy(algo, &d, p, 0.2, policy, rng.next_u64());
-        let cfg = FanoutConfig { batch_size: 24, k1: 4, k2: 3 };
+        let cfg = FanoutConfig::new(24, &[4, 3]);
         let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
         let dc = rng.bool(0.5);
         let comm = hitgnn::comm::CommConfig { direct_host_fetch: dc };
@@ -278,7 +281,7 @@ fn iteration_dedup_conserves_bytes_for_all_policies() {
             );
             let mut t = base;
             dd.apply(
-                &mb.v0[..mb.n_v0],
+                mb.level0(),
                 &snaps[fpga],
                 row,
                 comm,
@@ -311,12 +314,17 @@ fn iteration_dedup_conserves_bytes_for_all_policies() {
 fn perf_model_monotone_in_resources_and_beta() {
     check("perf monotonicity", 64, |rng| {
         let f0 = 32.0 + rng.index(600) as f64;
-        let shape = BatchShape::nominal(
-            (64 + rng.index(1024)) as f64,
-            (2 + rng.index(24)) as f64,
-            (2 + rng.index(10)) as f64,
-            [f0, 128.0, (8 + rng.index(100)) as f64],
-        );
+        let lcount = 1 + rng.index(3);
+        let mut fanouts: Vec<f64> = vec![(2 + rng.index(24)) as f64];
+        for _ in 1..lcount {
+            fanouts.push((2 + rng.index(10)) as f64);
+        }
+        let mut f = vec![f0];
+        for _ in 1..lcount {
+            f.push(128.0);
+        }
+        f.push((8 + rng.index(100)) as f64);
+        let shape = BatchShape::nominal((64 + rng.index(1024)) as f64, &fanouts, &f);
         let beta = rng.f64();
         let n = 1 + rng.index(4) as u32;
         let m = 32 * (1 + rng.index(16)) as u32;
@@ -342,7 +350,7 @@ fn epoch_estimate_scales_with_batches() {
         let model = PlatformModel::new(spec, DieConfig { n: 2, m: 512 });
         let base = 1 + rng.index(32);
         let w1 = Workload {
-            shape: BatchShape::nominal(1024.0, 25.0, 10.0, [100.0, 128.0, 47.0]),
+            shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.5 + rng.f64() * 0.5,
             param_scale: 1.0,
             sampling_s_per_batch: 0.0,
