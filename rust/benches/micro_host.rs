@@ -103,10 +103,116 @@ fn main() {
 
     b.finish();
 
+    kernel_sweep();
     cache_policy_sweep();
     scheduler_sweep();
     depth_sweep();
     pipeline_sweep();
+}
+
+/// Kernel sweep (ISSUE 5 acceptance): per-batch reference-executor
+/// train-step latency, scalar oracle vs blocked/workspace path, at the
+/// default 2-layer [25, 10] and 3-layer [9, 5, 4] fanout shapes (B=256,
+/// real sampled batches on the bundled tiny dataset). Asserts the blocked
+/// executor delivers ≥ 2× the scalar throughput, then reports the
+/// sampler+gather steady-state allocation count (0 with the buffer-pooled
+/// hot path; measured exactly when built with `--features alloc-count`).
+fn kernel_sweep() {
+    use hitgnn::coordinator::params::ParamSet;
+    use hitgnn::runtime::manifest::synth_entry;
+    use hitgnn::runtime::{BatchBuffers, RefModel};
+
+    println!("\n=== bench: kernel sweep (scalar vs blocked reference executor) ===");
+    let data = datasets::lookup("tiny").unwrap().build(0, 17);
+    let pre = preprocess(Algorithm::DistDgl, &data, 2, 0.2, 17);
+    let svc = FeatureService::new(&data.features, CommConfig::default());
+    let b_size = 256usize;
+    let cases: [(&str, Vec<usize>); 2] =
+        [("L=2 [25,10]", vec![25, 10]), ("L=3 [9,5,4]", vec![9, 5, 4])];
+    let mut t = Table::new(&["shape", "scalar (ms)", "blocked (ms)", "speedup"]);
+    for (label, fanouts) in cases {
+        let entry = synth_entry(
+            std::path::Path::new("/tmp"),
+            "train",
+            "gcn",
+            "tiny",
+            b_size,
+            &fanouts,
+            data.spec.dims,
+        );
+        let mut model = RefModel::new(&entry).expect("reference model");
+        let params = ParamSet::init(&entry, 7).data;
+        let cfg = FanoutConfig::new(b_size, &fanouts);
+        cfg.validate().expect("bench fanouts");
+        let mut sampler = Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 3);
+        let take = pre.train_parts[0].len().min(b_size);
+        let targets: Vec<u32> = pre.train_parts[0][..take].to_vec();
+        let mb = sampler.sample(&data, &targets, 0, 0);
+        let (feat0, _) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
+        let batch = BatchBuffers::from_minibatch(&mb, feat0, entry.dims.f0());
+
+        let mut bench = Bench::new(&format!("kernels {label}"));
+        let scalar_s = bench
+            .measure("scalar train_step", |_| {
+                black_box(model.train_step_scalar(&params, &batch).unwrap())
+            })
+            .median_s;
+        let blocked_s = bench
+            .measure("blocked train_step", |_| {
+                black_box(model.train_step(&params, &batch).unwrap())
+            })
+            .median_s;
+        bench.finish();
+        let speedup = scalar_s / blocked_s;
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}", scalar_s * 1e3),
+            format!("{:.3}", blocked_s * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        assert!(
+            speedup >= 2.0,
+            "{label}: blocked executor must be ≥2x the scalar path (got {speedup:.2}x)"
+        );
+    }
+    t.print();
+    println!("  blocked reference executor ≥2x over the scalar oracle on every shape ✓");
+    alloc_report(&data, &pre);
+    println!("=== end bench: kernel sweep ===");
+}
+
+/// Sampler+gather steady-state allocation count, measured through the
+/// counting global allocator when built with `--features alloc-count`
+/// (same canonical protocol as `tests/alloc_steady_state.rs` — see
+/// `comm::audit_sampler_gather_allocs`).
+#[cfg(feature = "alloc-count")]
+fn alloc_report(data: &hitgnn::graph::Dataset, pre: &hitgnn::partition::Preprocessed) {
+    let take = pre.train_parts[0].len().min(128);
+    let targets = &pre.train_parts[0][..take];
+    let iters = 32usize;
+    let allocs = hitgnn::comm::audit_sampler_gather_allocs(
+        data,
+        pre.stores[0].as_ref(),
+        pre.vertex_part.as_deref(),
+        FanoutConfig::new(128, &[10, 5]),
+        targets,
+        5,
+        4,
+        iters,
+    );
+    println!(
+        "  sampler+gather steady-state allocations/iteration: {} ({allocs} over {iters} iters)",
+        allocs as f64 / iters as f64
+    );
+    assert_eq!(allocs, 0, "sampler+gather steady state must be allocation-free");
+}
+
+#[cfg(not(feature = "alloc-count"))]
+fn alloc_report(_data: &hitgnn::graph::Dataset, _pre: &hitgnn::partition::Preprocessed) {
+    println!(
+        "  sampler+gather steady-state allocations/iteration: rebuild with \
+         --features alloc-count to measure (asserted 0 in tests/alloc_steady_state.rs)"
+    );
 }
 
 /// Scheduler sweep (ISSUE 3 acceptance): simulated epoch makespan-seconds

@@ -291,21 +291,78 @@ impl<'a> FeatureService<'a> {
         vertex_part: Option<&[u32]>,
         fpga_id: usize,
     ) -> (Vec<f32>, Traffic) {
+        let mut buf = Vec::new();
+        let traffic = self.gather_into(mb, store, vertex_part, fpga_id, &mut buf);
+        (buf, traffic)
+    }
+
+    /// [`FeatureService::gather`] into a caller-owned (recycled) buffer —
+    /// the zero-allocation hot path. The buffer is resized to
+    /// `[v0_cap, f0]` once and then fully overwritten each call: real
+    /// rows by the generator, the padding tail explicitly zeroed, so a
+    /// recycled buffer can never leak a previous batch's rows (DESIGN.md
+    /// §Hot-path memory & kernels).
+    pub fn gather_into<S: FeatureStore + ?Sized>(
+        &self,
+        mb: &MiniBatch,
+        store: &S,
+        vertex_part: Option<&[u32]>,
+        fpga_id: usize,
+        buf: &mut Vec<f32>,
+    ) -> Traffic {
         let f0 = self.features.feat_dim();
-        let mut buf = vec![0f32; mb.dims.v0_cap() * f0];
+        buf.resize(mb.dims.v0_cap() * f0, 0.0);
         for (row, &v) in mb.level0().iter().enumerate() {
             self.features.write_features(v, &mut buf[row * f0..(row + 1) * f0]);
         }
-        let traffic = feature_traffic(
+        buf[mb.n[0] * f0..].fill(0.0);
+        feature_traffic(
             mb,
             store,
             self.features.bytes_per_vertex(),
             self.cfg,
             vertex_part,
             fpga_id,
-        );
-        (buf, traffic)
+        )
     }
+}
+
+/// The canonical sampler+gather steady-state allocation audit (feature
+/// `alloc-count`): drive `Sampler::sample_into` + `gather_into` through
+/// recycled buffers for `warmup` iterations, then measure `iters` more
+/// through the counting global allocator and return the heap-allocation
+/// event count (the zero-allocation contract expects 0). One protocol,
+/// two consumers — `tests/alloc_steady_state.rs` asserts on it and the
+/// `micro_host` kernel sweep reports it — so the audit can never drift
+/// between CI and the bench.
+#[cfg(feature = "alloc-count")]
+#[allow(clippy::too_many_arguments)]
+pub fn audit_sampler_gather_allocs<S: FeatureStore + ?Sized>(
+    data: &crate::graph::Dataset,
+    store: &S,
+    vertex_part: Option<&[u32]>,
+    fanout: crate::sampling::FanoutConfig,
+    targets: &[u32],
+    seed: u64,
+    warmup: usize,
+    iters: usize,
+) -> u64 {
+    use crate::sampling::{Sampler, WeightMode};
+    use crate::util::alloc::allocation_count;
+    let svc = FeatureService::new(&data.features, CommConfig::default());
+    let mut sampler = Sampler::new(fanout, WeightMode::GcnNorm, data.graph.num_vertices(), seed);
+    let mut mb = sampler.new_batch();
+    let mut feat0 = Vec::new();
+    for seq in 0..warmup {
+        sampler.sample_into(&mut mb, data, targets, 0, seq);
+        std::hint::black_box(svc.gather_into(&mb, store, vertex_part, 0, &mut feat0));
+    }
+    let before = allocation_count();
+    for seq in warmup..warmup + iters {
+        sampler.sample_into(&mut mb, data, targets, 0, seq);
+        std::hint::black_box(svc.gather_into(&mb, store, vertex_part, 0, &mut feat0));
+    }
+    allocation_count() - before
 }
 
 #[cfg(test)]
@@ -466,6 +523,59 @@ mod tests {
             assert_eq!(t2.dedup_saved_bytes, base.host_bytes);
             assert_eq!(t2.total_bytes(), base.total_bytes());
         }
+    }
+
+    #[test]
+    fn iter_dedup_survives_stamp_wraparound() {
+        // regression (ISSUE 5 satellite): after ~2^32 iterations the u32
+        // stamp counter wraps and restarts at 1 — the stamp array must be
+        // cleared on the wrap, or vertices staged back when the counter
+        // was first at 1 would falsely dedup in the fresh iteration
+        let (d, pre, mb) = setup();
+        let row = d.features.bytes_per_vertex();
+        let cfg = CommConfig::default();
+        let base = feature_traffic(&mb, pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0);
+        assert!(base.host_bytes > 0, "test needs host-path misses");
+        let mut dd = IterDedup::new(d.graph.num_vertices());
+        dd.next_iteration(); // cur == 1: stage this batch's reads
+        let mut t = base;
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t);
+        assert_eq!(t, base, "first apply only stages");
+        // fast-forward to the wrap: the next iteration must restart at 1
+        dd.cur = u32::MAX;
+        dd.next_iteration();
+        assert_eq!(dd.cur, 1, "counter restarts at 1 after the wrap");
+        let mut t2 = base;
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t2);
+        assert_eq!(t2, base, "stale stamps from the old cur==1 era must not alias");
+        // dedup still works within the post-wrap iteration
+        let mut t3 = base;
+        dd.apply(mb.level0(), pre.stores[0].as_ref(), row, cfg, pre.vertex_part.as_deref(), 0, &mut t3);
+        assert_eq!(t3.dedup_saved_bytes, base.host_bytes);
+        assert_eq!(t3.host_bytes, 0);
+    }
+
+    #[test]
+    fn gather_into_recycled_buffer_matches_fresh_gather() {
+        // dirty buffer reuse across different batches must be invisible:
+        // same bytes, same traffic as an allocating gather
+        let (d, pre, mb) = setup();
+        let svc = FeatureService::new(&d.features, CommConfig::default());
+        let mut s = Sampler::new(
+            FanoutConfig::new(32, &[5, 3]),
+            WeightMode::GcnNorm,
+            d.graph.num_vertices(),
+            5,
+        );
+        let other = s.sample(&d, &pre.train_parts[1][..20], 1, 2);
+        let mut buf = Vec::new();
+        let t_other =
+            svc.gather_into(&other, pre.stores[1].as_ref(), pre.vertex_part.as_deref(), 1, &mut buf);
+        assert!(t_other.total_bytes() > 0);
+        let t = svc.gather_into(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0, &mut buf);
+        let (want, t_want) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
+        assert_eq!(buf, want, "recycled gather buffer leaked state");
+        assert_eq!(t, t_want);
     }
 
     #[test]

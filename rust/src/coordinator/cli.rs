@@ -55,6 +55,9 @@ TRAIN OPTIONS:
                                  iterations prepare ahead of the one
                                  executing (default 1 = serial)
     --prefetch                   legacy alias for --prefetch-depth 2 (§8)
+    --no-pool                    disable prepared-batch buffer recycling
+                                 (debug/ablation; results are bit-identical
+                                 either way)
     --max-iterations <n>         cap iterations per epoch
     --seed <u64>                 --artifacts <dir>
     --report <file.json>         write the training report

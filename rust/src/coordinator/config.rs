@@ -70,6 +70,12 @@ pub struct TrainConfig {
     /// Bounded prefetch window depth D: how many iterations may be in
     /// preparation ahead of the one executing (1 = no prefetch).
     pub prefetch_depth: usize,
+    /// Recycle consumed batch buffers back to the prep pool (the
+    /// zero-allocation steady state, DESIGN.md §Hot-path memory &
+    /// kernels). `--no-pool` disables it — the debug/ablation escape
+    /// hatch; results are bit-identical either way (the determinism
+    /// suite asserts it).
+    pub buffer_pool: bool,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     /// Cap on iterations per epoch (None = full epoch); lets examples and
@@ -100,6 +106,7 @@ impl Default for TrainConfig {
             prefetch: false,
             host_threads: 1,
             prefetch_depth: 1,
+            buffer_pool: true,
             seed: 42,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             max_iterations: None,
@@ -158,6 +165,7 @@ impl TrainConfig {
             prefetch: args.flag("prefetch"),
             host_threads: args.num("host-threads", d.host_threads)?,
             prefetch_depth: args.num("prefetch-depth", d.prefetch_depth)?,
+            buffer_pool: !args.flag("no-pool"),
             seed: args.num("seed", d.seed)?,
             artifacts_dir: PathBuf::from(
                 args.str("artifacts", &d.artifacts_dir.display().to_string()),
@@ -235,6 +243,7 @@ impl TrainConfig {
             ("direct_host_fetch", Json::Bool(self.direct_host_fetch)),
             ("host_threads", Json::num(self.host_threads as f64)),
             ("prefetch_depth", Json::num(self.pipeline_depth() as f64)),
+            ("buffer_pool", Json::Bool(self.buffer_pool)),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -269,6 +278,10 @@ mod tests {
         let args = Args::parse(["train", "--host-threads", "4", "--prefetch-depth", "2"]);
         let c = TrainConfig::from_args(&args).unwrap();
         assert_eq!((c.host_threads, c.prefetch_depth), (4, 2));
+        assert!(c.buffer_pool, "buffer recycling defaults on");
+        let c = TrainConfig::from_args(&Args::parse(["train", "--no-pool"])).unwrap();
+        assert!(!c.buffer_pool);
+        assert_eq!(c.to_json().req("buffer_pool").unwrap(), &Json::Bool(false));
         let args = Args::parse(["train", "--host-threads", "0"]);
         assert!(TrainConfig::from_args(&args).is_err());
         let args = Args::parse(["train", "--prefetch-depth", "0"]);

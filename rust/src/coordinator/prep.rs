@@ -95,12 +95,32 @@ pub struct PreparedBatch {
     pub iter: usize,
     pub tag: usize,
     pub fpga: usize,
+    /// The sampled block. Kept with the batch so the coordinator's
+    /// barrier pass can read `mb.level0()` (fetch dedup + the store's
+    /// `observe` hook) and then recycle the buffers via the return
+    /// channel instead of dropping them.
+    pub mb: MiniBatch,
     pub batch: BatchBuffers,
     pub stats: PrepStats,
-    /// The batch's real (unpadded) layer-0 vertex ids — the coordinator's
-    /// barrier pass feeds them to `comm::IterDedup` and to the feature
-    /// store's `observe` hook.
-    pub v0: Vec<u32>,
+}
+
+/// A consumed batch's reusable buffers, cycled back to the prep pool by
+/// the coordinator (DESIGN.md §Hot-path memory & kernels). The pool is
+/// self-bounding: workers only allocate a fresh carcass when the return
+/// channel is empty, so the number of live carcasses never exceeds the
+/// pipeline's in-flight window (≈ `prefetch_depth · p + p` batches plus
+/// one per prep thread).
+pub struct BatchCarcass {
+    pub mb: MiniBatch,
+    pub bufs: BatchBuffers,
+}
+
+/// Drain every prepared batch from a closed result channel, propagating
+/// the first worker error to the caller instead of panicking.
+pub fn drain_prepared(
+    rx: &mpsc::Receiver<anyhow::Result<PreparedBatch>>,
+) -> anyhow::Result<Vec<PreparedBatch>> {
+    rx.iter().collect()
 }
 
 /// Planning stage: materialise the epoch's full iteration/task schedule.
@@ -147,10 +167,15 @@ pub fn plan_epoch_tasks(
 /// |V|-sized scratch persists across epochs (usable for any partition —
 /// batch content is keyed, not stateful; only the stream base is re-keyed
 /// here) and one reusable [`FeatureService`], hoisted out of the
-/// per-batch loop. Exits when the task channel closes or the result
-/// receiver is gone. A panic while preparing a batch sends an `Err`
-/// sentinel first so the coordinator fails instead of waiting forever,
-/// then resumes unwinding (the scope rethrows the original panic).
+/// per-batch loop. Each task is prepared into a recycled [`BatchCarcass`]
+/// pulled (non-blocking) from `recycle` — the coordinator's return
+/// channel — falling back to a fresh allocation when the pool is empty;
+/// steady state is therefore allocation-free. Exits when the task channel
+/// closes or the result receiver is gone. A panic while preparing a batch
+/// is converted to a clean `Err` for the coordinator (which aborts the
+/// epoch through the error path, not a poisoned join) and the worker
+/// keeps serving remaining tasks.
+#[allow(clippy::too_many_arguments)]
 pub fn prep_worker(
     data: &Dataset,
     stores: &[Residency],
@@ -160,6 +185,7 @@ pub fn prep_worker(
     epoch_stream: u64,
     tasks: &Mutex<mpsc::Receiver<PrepTask>>,
     done: &mpsc::Sender<anyhow::Result<PreparedBatch>>,
+    recycle: Option<&Mutex<mpsc::Receiver<BatchCarcass>>>,
 ) {
     sampler.set_stream(epoch_stream);
     let svc = FeatureService::new(&data.features, comm);
@@ -171,36 +197,48 @@ pub fn prep_worker(
         };
         let Ok(task) = msg else { break };
 
+        let carcass = recycle
+            .and_then(|rx| rx.lock().ok().and_then(|guard| guard.try_recv().ok()))
+            .unwrap_or_else(|| BatchCarcass {
+                mb: sampler.new_batch(),
+                bufs: BatchBuffers::empty(),
+            });
+        let BatchCarcass { mut mb, mut bufs } = carcass;
+
         let prepared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let t0 = Instant::now();
-            let mb = sampler.sample(data, &task.targets, task.part, task.seq);
+            sampler.sample_into(&mut mb, data, &task.targets, task.part, task.seq);
             let sample_seconds = t0.elapsed().as_secs_f64();
 
             let t1 = Instant::now();
-            let (feat0, traffic) =
-                svc.gather(&mb, &stores[task.fpga], vertex_part, task.fpga);
+            let traffic =
+                svc.gather_into(&mb, &stores[task.fpga], vertex_part, task.fpga, &mut bufs.feat0);
             let gather_seconds = t1.elapsed().as_secs_f64();
+            bufs.fill_from(&mb, f0);
 
             let stats = PrepStats::measure(&mb, sample_seconds, gather_seconds, traffic);
-            let v0 = mb.level0().to_vec();
-            let batch = BatchBuffers::from_minibatch(&mb, feat0, f0);
-            PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, batch, stats, v0 }
+            PreparedBatch { iter: task.iter, tag: task.tag, fpga: task.fpga, mb, batch: bufs, stats }
         }));
-        match prepared {
-            Ok(pb) => {
-                if done.send(Ok(pb)).is_err() {
-                    break;
-                }
-            }
+        let send_failed = match prepared {
+            Ok(pb) => done.send(Ok(pb)).is_err(),
             Err(payload) => {
-                let _ = done.send(Err(anyhow::anyhow!(
-                    "prep worker panicked on iter {} tag {} (part {})",
+                // keep the original panic text in the propagated error
+                let msg = payload
+                    .downcast_ref::<&'static str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                done.send(Err(anyhow::anyhow!(
+                    "prep worker panicked on iter {} tag {} (part {}): {msg}",
                     task.iter,
                     task.tag,
                     task.part
-                )));
-                std::panic::resume_unwind(payload);
+                )))
+                .is_err()
             }
+        };
+        if send_failed {
+            break;
         }
     }
 }
@@ -285,17 +323,118 @@ mod tests {
             let vertex_part = pre.vertex_part.as_deref();
             let smp = &mut sampler;
             s.spawn(move || {
-                prep_worker(d, stores, vertex_part, smp, CommConfig::default(), 99, rxr, &done_tx)
+                prep_worker(
+                    d,
+                    stores,
+                    vertex_part,
+                    smp,
+                    CommConfig::default(),
+                    99,
+                    rxr,
+                    &done_tx,
+                    None,
+                )
             });
         });
         drop(done_tx);
-        let got: Vec<PreparedBatch> = done_rx.iter().map(|r| r.unwrap()).collect();
+        let got: Vec<PreparedBatch> = drain_prepared(&done_rx).unwrap();
         assert_eq!(got.len(), n_tasks);
         for b in &got {
             assert!(b.stats.vertices_traversed > 0);
             assert!(b.stats.traffic.total_bytes() > 0);
             assert!(b.stats.shape[0] >= b.stats.shape[1]);
-            assert_eq!(b.v0.len(), b.stats.shape[0] as usize, "unpadded v0 travels with the batch");
+            assert_eq!(
+                b.mb.level0().len(),
+                b.stats.shape[0] as usize,
+                "unpadded level-0 ids travel with the batch"
+            );
+            assert_eq!(b.batch.n, b.mb.n, "executor buffers carry the real row counts");
         }
+    }
+
+    #[test]
+    fn recycled_carcasses_produce_identical_batches() {
+        // run the same task list twice — once allocating fresh buffers,
+        // once through a recycle channel pre-seeded with dirty carcasses —
+        // and require bit-identical prepared output (the determinism law
+        // survives buffer reuse)
+        let p = 2;
+        let (data, pre) = setup(p);
+        let iterations = plan_tasks(&pre, p, Some(2));
+        let fanout = FanoutConfig::new(32, &[3, 2]);
+        let snaps = pre.residency_snapshot();
+
+        let run = |recycle: Option<&Mutex<mpsc::Receiver<BatchCarcass>>>| {
+            let (task_tx, task_rx) = mpsc::channel();
+            let (done_tx, done_rx) = mpsc::channel();
+            for tasks in iterations.clone() {
+                for t in tasks {
+                    task_tx.send(t).unwrap();
+                }
+            }
+            drop(task_tx);
+            let mut sampler =
+                Sampler::new(fanout.clone(), WeightMode::GcnNorm, data.graph.num_vertices(), 0);
+            let rx = Mutex::new(task_rx);
+            std::thread::scope(|s| {
+                let done_tx = done_tx.clone();
+                let rxr = &rx;
+                let d = &data;
+                let stores = &snaps[..];
+                let vertex_part = pre.vertex_part.as_deref();
+                let smp = &mut sampler;
+                s.spawn(move || {
+                    prep_worker(
+                        d,
+                        stores,
+                        vertex_part,
+                        smp,
+                        CommConfig::default(),
+                        99,
+                        rxr,
+                        &done_tx,
+                        recycle,
+                    )
+                });
+            });
+            drop(done_tx);
+            let mut got = drain_prepared(&done_rx).unwrap();
+            got.sort_by_key(|b| (b.iter, b.tag));
+            got
+        };
+
+        let fresh = run(None);
+
+        // dirty carcasses: sample an unrelated batch into each first
+        let (rec_tx, rec_rx) = mpsc::channel();
+        let mut dirty_sampler =
+            Sampler::new(fanout.clone(), WeightMode::GcnNorm, data.graph.num_vertices(), 7);
+        for seq in 0..2 {
+            let mut mb = dirty_sampler.new_batch();
+            dirty_sampler.sample_into(&mut mb, &data, &pre.train_parts[0][..5], 0, seq + 100);
+            let svc = FeatureService::new(&data.features, CommConfig::default());
+            let mut bufs = BatchBuffers::empty();
+            let _ = svc.gather_into(&mb, &snaps[0], pre.vertex_part.as_deref(), 0, &mut bufs.feat0);
+            bufs.fill_from(&mb, data.features.feat_dim());
+            rec_tx.send(BatchCarcass { mb, bufs }).unwrap();
+        }
+        drop(rec_tx);
+        let rec_rx = Mutex::new(rec_rx);
+        let recycled = run(Some(&rec_rx));
+
+        assert_eq!(fresh.len(), recycled.len());
+        for (a, b) in fresh.iter().zip(&recycled) {
+            assert_eq!((a.iter, a.tag, a.fpga), (b.iter, b.tag, b.fpga));
+            assert_eq!(a.batch.feat0, b.batch.feat0, "feat0 diverged under recycling");
+            assert_eq!(a.batch.idx, b.batch.idx);
+            assert_eq!(a.batch.w, b.batch.w);
+            assert_eq!(a.batch.labels, b.batch.labels);
+            assert_eq!(a.batch.mask, b.batch.mask);
+            assert_eq!(a.batch.n, b.batch.n);
+            assert_eq!(a.stats.shape, b.stats.shape);
+            assert_eq!(a.stats.traffic, b.stats.traffic);
+        }
+        // the pre-seeded carcasses were consumed
+        assert!(rec_rx.lock().unwrap().try_recv().is_err());
     }
 }

@@ -63,6 +63,13 @@ pub struct Trainer {
     /// One sampler per prep thread; the |V|-sized scratch arrays persist
     /// across epochs (only the RNG stream base is re-keyed per epoch).
     samplers: Vec<Sampler>,
+    /// Cross-epoch carcass pool (ISSUE 5 tentpole): consumed batch
+    /// buffers flow back to the prep workers through this channel
+    /// instead of being dropped. Hoisted onto the trainer — like the
+    /// samplers — so the zero-allocation steady state survives epoch
+    /// boundaries, not just iterations within one.
+    recycle_tx: mpsc::Sender<prep::BatchCarcass>,
+    recycle_rx: Mutex<mpsc::Receiver<prep::BatchCarcass>>,
     rng: Rng,
     /// Accumulated mean batch shape [v_0..v_L, a_1..a_L] (2L+1 entries,
     /// level/layer order per DESIGN.md §Mini-batch wire format).
@@ -174,6 +181,7 @@ impl Trainer {
             .map(|_| Sampler::new(fanout.clone(), mode, data.graph.num_vertices(), 0))
             .collect();
         let shape_acc = vec![0.0; 2 * entry.dims.layers() + 1];
+        let (recycle_tx, recycle_rx) = mpsc::channel();
 
         Ok(Trainer {
             cfg,
@@ -187,6 +195,8 @@ impl Trainer {
             opt,
             mode,
             samplers,
+            recycle_tx,
+            recycle_rx: Mutex::new(recycle_rx),
             rng,
             shape_acc,
             shape_n: 0.0,
@@ -326,6 +336,10 @@ impl Trainer {
         let (task_tx, task_rx) = mpsc::channel::<prep::PrepTask>();
         let (done_tx, done_rx) = mpsc::channel::<anyhow::Result<prep::PreparedBatch>>();
         let task_rx = Arc::new(Mutex::new(task_rx));
+        // buffer recycling: the persistent carcass pool (see the field
+        // docs) — `--no-pool` disables the return path (workers then
+        // allocate fresh buffers per batch, the debug/ablation mode)
+        let use_pool = cfg.buffer_pool;
 
         // per-thread samplers persist across epochs; grow the pool if the
         // configuration was raised after construction
@@ -338,6 +352,8 @@ impl Trainer {
         }
 
         // disjoint field borrows for the scoped threads vs the coordinator
+        let recycle_tx = &self.recycle_tx;
+        let recycle_rx = &self.recycle_rx;
         let data = &self.data;
         let vertex_part = self.pre.vertex_part.as_deref();
         let stores = &mut self.pre.stores;
@@ -354,6 +370,7 @@ impl Trainer {
                 let task_rx = Arc::clone(&task_rx);
                 let done_tx = done_tx.clone();
                 let snaps = &snaps[..];
+                let recycle = use_pool.then_some(recycle_rx);
                 s.spawn(move || {
                     prep::prep_worker(
                         data,
@@ -364,6 +381,7 @@ impl Trainer {
                         epoch_stream,
                         &task_rx,
                         &done_tx,
+                        recycle,
                     )
                 });
             }
@@ -400,19 +418,20 @@ impl Trainer {
                 if let Some(dd) = dedup.as_mut() {
                     dd.next_iteration();
                     for b in items.iter_mut() {
+                        let (mb, traffic) = (&b.mb, &mut b.stats.traffic);
                         dd.apply(
-                            &b.v0,
+                            mb.level0(),
                             &snaps[b.fpga],
                             row_bytes,
                             comm,
                             vertex_part,
                             b.fpga,
-                            &mut b.stats.traffic,
+                            traffic,
                         );
                     }
                 }
                 for b in &items {
-                    stores[b.fpga].observe(&b.v0);
+                    stores[b.fpga].observe(b.mb.level0());
                 }
 
                 // merge host-side stats in deterministic (iter, tag) order
@@ -429,10 +448,16 @@ impl Trainer {
                     *shape_n += 1.0;
                 }
 
-                // dispatch and wait at the gradient-sync barrier
+                // dispatch and wait at the gradient-sync barrier; the
+                // sampled blocks stay behind (tag order) so their buffers
+                // can be recycled once the workers hand the input
+                // carcasses back
                 let params = Arc::new(param_set.data.clone());
                 let submitted = items.len();
+                let mut sampled: Vec<(usize, crate::sampling::MiniBatch)> =
+                    Vec::with_capacity(submitted);
                 for b in items {
+                    sampled.push((b.tag, b.mb));
                     pool.submit(b.fpga, WorkItem { params: params.clone(), batch: b.batch, tag: b.tag })?;
                 }
                 let t2 = Instant::now();
@@ -441,12 +466,17 @@ impl Trainer {
                 results.sort_by_key(|r| r.tag);
                 let mut grads = Vec::with_capacity(submitted);
                 let mut iter_loss = 0.0f64;
-                for r in results {
+                for (r, (tag, mb)) in results.into_iter().zip(sampled) {
+                    debug_assert_eq!(r.tag, tag, "carcass pairing out of order");
                     let out = r.result?;
                     m.execute_seconds += r.exec_seconds;
                     iter_loss += out.loss as f64;
                     m.final_loss = out.loss as f64;
                     grads.push(out.grads);
+                    if use_pool {
+                        // return the consumed buffers to the prep pool
+                        let _ = recycle_tx.send(prep::BatchCarcass { mb, bufs: r.batch });
+                    }
                 }
                 loss_sum += iter_loss;
                 m.iter_losses.push(iter_loss / submitted.max(1) as f64);
@@ -499,7 +529,7 @@ impl Trainer {
             })?;
             self.predict_exe = Some(TrainExecutor::compile(pentry)?);
         }
-        let exe = self.predict_exe.as_ref().expect("compiled above");
+        let exe = self.predict_exe.as_mut().expect("compiled above");
         let comm = CommConfig { direct_host_fetch: self.cfg.direct_host_fetch };
         // reusable service + sampler, hoisted out of the batch loop
         let svc = FeatureService::new(&self.data.features, comm);

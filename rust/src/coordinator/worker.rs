@@ -29,6 +29,10 @@ pub struct WorkResult {
     pub result: anyhow::Result<crate::runtime::StepOutput>,
     /// Pure execute wall time (excludes queueing).
     pub exec_seconds: f64,
+    /// The consumed input buffers, returned so the coordinator can send
+    /// the carcass back to the prep pool (DESIGN.md §Hot-path memory &
+    /// kernels) instead of paying an allocate/free per batch.
+    pub batch: BatchBuffers,
 }
 
 enum Msg {
@@ -59,7 +63,7 @@ impl WorkerPool {
             let result_tx = result_tx.clone();
             let ready_tx = ready_tx.clone();
             handles.push(std::thread::spawn(move || {
-                let exe = match TrainExecutor::compile(&entry) {
+                let mut exe = match TrainExecutor::compile(&entry) {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok(()));
                         e
@@ -77,6 +81,7 @@ impl WorkerPool {
                         tag: item.tag,
                         result,
                         exec_seconds: t0.elapsed().as_secs_f64(),
+                        batch: item.batch,
                     });
                 }
             }));

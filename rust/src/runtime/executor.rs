@@ -23,6 +23,11 @@ use crate::sampling::MiniBatch;
 /// comm layer — see `comm::FeatureService`). `idx[l-1]`/`w[l-1]` carry
 /// layer l's positions/weights, layer 1 (input side) first — the same
 /// level lists as [`MiniBatch`] (DESIGN.md §Mini-batch wire format).
+///
+/// The buffers are recyclable: [`BatchBuffers::fill_from`] overwrites an
+/// existing instance in place (no allocation once the capacities are
+/// grown), which is how the prep pool reuses consumed batches
+/// (DESIGN.md §Hot-path memory & kernels).
 #[derive(Clone, Debug)]
 pub struct BatchBuffers {
     pub feat0: Vec<f32>,
@@ -30,19 +35,57 @@ pub struct BatchBuffers {
     pub w: Vec<Vec<f32>>,
     pub labels: Vec<i32>,
     pub mask: Vec<f32>,
+    /// Real (unpadded) per-level row counts `n[0..=L]` — lets the
+    /// reference executor skip padding rows. Empty = unknown (legacy
+    /// construction; the executor then sweeps full capacities).
+    pub n: Vec<usize>,
 }
 
 impl BatchBuffers {
+    /// An unsized carcass for the recycling pool; [`BatchBuffers::fill_from`]
+    /// (after a feature gather into `feat0`) makes it a real batch.
+    pub fn empty() -> BatchBuffers {
+        BatchBuffers {
+            feat0: Vec::new(),
+            idx: Vec::new(),
+            w: Vec::new(),
+            labels: Vec::new(),
+            mask: Vec::new(),
+            n: Vec::new(),
+        }
+    }
+
     /// Assemble from a sampled mini-batch plus the gathered features.
     pub fn from_minibatch(mb: &MiniBatch, feat0: Vec<f32>, f0: usize) -> BatchBuffers {
-        assert_eq!(feat0.len(), mb.dims.v0_cap() * f0, "feat0 buffer size mismatch");
-        BatchBuffers {
-            feat0,
-            idx: mb.idx.clone(),
-            w: mb.w.clone(),
-            labels: mb.labels.iter().map(|&l| l as i32).collect(),
-            mask: mb.mask.clone(),
+        let mut b = BatchBuffers::empty();
+        b.feat0 = feat0;
+        b.fill_from(mb, f0);
+        b
+    }
+
+    /// Overwrite every field (except `feat0`, which the comm layer's
+    /// `gather_into` fills beforehand) from a sampled mini-batch. All
+    /// copies are full-buffer, so a recycled instance carries no state
+    /// from its previous batch.
+    pub fn fill_from(&mut self, mb: &MiniBatch, f0: usize) {
+        assert_eq!(self.feat0.len(), mb.dims.v0_cap() * f0, "feat0 buffer size mismatch");
+        let lcount = mb.layers();
+        self.idx.resize(lcount, Vec::new());
+        self.w.resize(lcount, Vec::new());
+        for (dst, src) in self.idx.iter_mut().zip(&mb.idx) {
+            dst.clear();
+            dst.extend_from_slice(src);
         }
+        for (dst, src) in self.w.iter_mut().zip(&mb.w) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        self.labels.clear();
+        self.labels.extend(mb.labels.iter().map(|&l| l as i32));
+        self.mask.clear();
+        self.mask.extend_from_slice(&mb.mask);
+        self.n.clear();
+        self.n.extend_from_slice(&mb.n);
     }
 }
 
@@ -130,17 +173,19 @@ impl TrainExecutor {
     }
 
     /// Execute a train step: returns loss and per-parameter gradients.
+    /// `&mut self`: the reference backend writes its intermediates into a
+    /// per-instance scratch workspace (no per-step allocation).
     pub fn train_step(
-        &self,
+        &mut self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<StepOutput> {
         anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
         self.check_params(params)?;
-        match &self.backend {
+        match &mut self.backend {
             #[cfg(feature = "pjrt")]
             Backend::Pjrt { exe, .. } => {
-                let args = self.build_args(params, batch)?;
+                let args = Self::build_args(&self.entry, params, batch)?;
                 let outs = Self::run_pjrt(exe, &args)?;
                 anyhow::ensure!(
                     outs.len() == 1 + self.entry.params.len(),
@@ -160,13 +205,17 @@ impl TrainExecutor {
     }
 
     /// Execute inference: returns logits `[b, classes]` row-major.
-    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
+    pub fn predict(
+        &mut self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
         self.check_params(params)?;
-        match &self.backend {
+        match &mut self.backend {
             #[cfg(feature = "pjrt")]
             Backend::Pjrt { exe, .. } => {
-                let args = self.build_args(params, batch)?;
+                let args = Self::build_args(&self.entry, params, batch)?;
                 let outs = Self::run_pjrt(exe, &args)?;
                 anyhow::ensure!(outs.len() == 1, "predict should return one output");
                 Ok(outs[0].to_vec::<f32>()?)
@@ -192,17 +241,18 @@ impl TrainExecutor {
     }
 
     /// Build the full literal argument list (params, feat0, per-layer
-    /// idx/w from the input side up, labels, mask).
+    /// idx/w from the input side up, labels, mask). Associated fn so the
+    /// caller can hold `backend` mutably while borrowing only the entry.
     #[cfg(feature = "pjrt")]
     fn build_args(
-        &self,
+        entry: &ArtifactEntry,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<Vec<xla::Literal>> {
-        let d = &self.entry.dims;
+        let d = &entry.dims;
         let lcount = d.layers();
         let mut args = Vec::with_capacity(params.len() + 3 + 2 * lcount);
-        for (buf, (name, shape)) in params.iter().zip(&self.entry.params) {
+        for (buf, (name, shape)) in params.iter().zip(&entry.params) {
             args.push(Self::literal_f32(buf, shape).with_context(|| format!("param {name}"))?);
         }
         args.push(Self::literal_f32(&batch.feat0, &[d.caps[0], d.f[0]])?);

@@ -1,0 +1,711 @@
+//! The reference executor's compute kernels: cache-blocked, register-tiled
+//! dense math plus the padded-wire-format gather/scatter primitives — all
+//! with write-into-`&mut [f32]` signatures so the executor's [`Workspace`]
+//! (`super::workspace`) owns every intermediate and the steady-state hot
+//! path performs no heap allocation.
+//!
+//! Blocking scheme (DESIGN.md §Hot-path memory & kernels): the matmul
+//! family processes the k-dimension in tiles of [`KT`] values per pass
+//! over a full output row, so each output element is loaded/stored once
+//! per tile instead of once per k — an autovectorizer-friendly shape
+//! (the inner loops are plain indexed f32 FMA chains over contiguous
+//! rows). A whole-tile zero test keeps the wire format's padding-row
+//! sparsity shortcut: an all-zero x tile (every padded row) skips the
+//! row entirely, exactly like the scalar kernels' per-element skip.
+//!
+//! The original scalar kernels live in [`scalar`] — allocation-per-call,
+//! one-k-at-a-time — and stay the numerics oracle: the unit tests below
+//! assert the blocked matmuls match them within FP-reassociation
+//! tolerance and the gather/scatter kernels match them bit-exactly
+//! (identical accumulation order).
+//!
+//! [`Workspace`]: super::workspace::Workspace
+
+/// k-dimension register-tile width of the blocked matmuls.
+pub const KT: usize = 4;
+
+/// `orow += xrow · w` for one output row — the shared inner kernel of
+/// [`matmul_bias`] / [`add_matmul`]: k-tiles of [`KT`] with a whole-tile
+/// zero shortcut.
+#[inline]
+fn axpy_row(orow: &mut [f32], xrow: &[f32], w: &[f32], fin: usize, fout: usize) {
+    let mut kk = 0;
+    while kk + KT <= fin {
+        let (x0, x1, x2, x3) = (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
+        if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+            let w0 = &w[kk * fout..(kk + 1) * fout];
+            let w1 = &w[(kk + 1) * fout..(kk + 2) * fout];
+            let w2 = &w[(kk + 2) * fout..(kk + 3) * fout];
+            let w3 = &w[(kk + 3) * fout..(kk + 4) * fout];
+            for j in 0..fout {
+                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            }
+        }
+        kk += KT;
+    }
+    while kk < fin {
+        let xv = xrow[kk];
+        if xv != 0.0 {
+            let wrow = &w[kk * fout..(kk + 1) * fout];
+            for j in 0..fout {
+                orow[j] += xv * wrow[j];
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// `out[n, fout] = x[n, fin] · w[fin, fout] + bias`, row-major.
+pub fn matmul_bias(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    fin: usize,
+    fout: usize,
+) {
+    debug_assert!(out.len() >= n * fout && x.len() >= n * fin);
+    debug_assert!(w.len() == fin * fout && bias.len() == fout);
+    for r in 0..n {
+        let orow = &mut out[r * fout..(r + 1) * fout];
+        orow.copy_from_slice(bias);
+        axpy_row(orow, &x[r * fin..(r + 1) * fin], w, fin, fout);
+    }
+}
+
+/// `out[n, fout] += x[n, fin] · w[fin, fout]` (second matmul path of a
+/// SAGE layer).
+pub fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
+    debug_assert!(out.len() >= n * fout && x.len() >= n * fin && w.len() == fin * fout);
+    for r in 0..n {
+        axpy_row(&mut out[r * fout..(r + 1) * fout], &x[r * fin..(r + 1) * fin], w, fin, fout);
+    }
+}
+
+/// `out[fa, fb] = aᵀ·b` for `a[n, fa]`, `b[n, fb]` (weight gradients).
+/// Overwrites `out`; the n-dimension is tiled by [`KT`] rows so each
+/// output row is touched once per row tile.
+pub fn matmul_at_b(out: &mut [f32], a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) {
+    debug_assert!(out.len() == fa * fb && a.len() >= n * fa && b.len() >= n * fb);
+    out.fill(0.0);
+    let mut r = 0;
+    while r + KT <= n {
+        for kk in 0..fa {
+            let a0 = a[r * fa + kk];
+            let a1 = a[(r + 1) * fa + kk];
+            let a2 = a[(r + 2) * fa + kk];
+            let a3 = a[(r + 3) * fa + kk];
+            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                let b0 = &b[r * fb..(r + 1) * fb];
+                let b1 = &b[(r + 1) * fb..(r + 2) * fb];
+                let b2 = &b[(r + 2) * fb..(r + 3) * fb];
+                let b3 = &b[(r + 3) * fb..(r + 4) * fb];
+                let orow = &mut out[kk * fb..(kk + 1) * fb];
+                for j in 0..fb {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+        }
+        r += KT;
+    }
+    while r < n {
+        for kk in 0..fa {
+            let av = a[r * fa + kk];
+            if av != 0.0 {
+                let brow = &b[r * fb..(r + 1) * fb];
+                let orow = &mut out[kk * fb..(kk + 1) * fb];
+                for j in 0..fb {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        r += 1;
+    }
+}
+
+/// `out[n, fb] = a[n, fa] · wᵀ` for `w[fb, fa]` (input gradients).
+/// [`KT`] dot products share each load of the `a` row.
+pub fn matmul_b_t(out: &mut [f32], a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) {
+    debug_assert!(out.len() >= n * fb && a.len() >= n * fa && w.len() == fb * fa);
+    for r in 0..n {
+        let arow = &a[r * fa..(r + 1) * fa];
+        let orow = &mut out[r * fb..(r + 1) * fb];
+        let mut kb = 0;
+        while kb + KT <= fb {
+            let w0 = &w[kb * fa..(kb + 1) * fa];
+            let w1 = &w[(kb + 1) * fa..(kb + 2) * fa];
+            let w2 = &w[(kb + 2) * fa..(kb + 3) * fa];
+            let w3 = &w[(kb + 3) * fa..(kb + 4) * fa];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for j in 0..fa {
+                let av = arow[j];
+                s0 += av * w0[j];
+                s1 += av * w1[j];
+                s2 += av * w2[j];
+                s3 += av * w3[j];
+            }
+            orow[kb] = s0;
+            orow[kb + 1] = s1;
+            orow[kb + 2] = s2;
+            orow[kb + 3] = s3;
+            kb += KT;
+        }
+        while kb < fb {
+            let wrow = &w[kb * fa..(kb + 1) * fa];
+            let mut acc = 0.0f32;
+            for j in 0..fa {
+                acc += arow[j] * wrow[j];
+            }
+            orow[kb] = acc;
+            kb += 1;
+        }
+    }
+}
+
+/// `out[j] = Σ_r x[r, j]` over the first `n` rows (bias gradients).
+pub fn col_sums(out: &mut [f32], x: &[f32], n: usize, f: usize) {
+    debug_assert!(out.len() == f && x.len() >= n * f);
+    out.fill(0.0);
+    for r in 0..n {
+        let xrow = &x[r * f..(r + 1) * f];
+        for j in 0..f {
+            out[j] += xrow[j];
+        }
+    }
+}
+
+/// `out[..len] = max(z[..len], 0)`.
+pub fn relu(out: &mut [f32], z: &[f32], len: usize) {
+    for (o, &v) in out[..len].iter_mut().zip(&z[..len]) {
+        *o = v.max(0.0);
+    }
+}
+
+/// In-place relu backward: zero `dz` where the pre-activation was not
+/// positive (zero at exactly 0, matching jax.nn.relu's convention).
+pub fn relu_mask(dz: &mut [f32], z: &[f32], len: usize) {
+    for (d, &v) in dz[..len].iter_mut().zip(&z[..len]) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// `out[r] = Σ_c w[r,c]·h[idx[r,c]]` over feature width `f`; with
+/// `skip_self` the self column (c = 0) is excluded (SAGE neighbor mean).
+/// Zeroes the first `rows·f` of `out` first; accumulation order is
+/// identical to [`scalar::aggregate`] (bit-exact).
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate(
+    out: &mut [f32],
+    h: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) {
+    debug_assert!(out.len() >= rows * f);
+    out[..rows * f].fill(0.0);
+    let c0 = usize::from(skip_self);
+    for r in 0..rows {
+        let dst = &mut out[r * f..(r + 1) * f];
+        for c in c0..k {
+            let weight = w[r * k + c];
+            if weight == 0.0 {
+                continue;
+            }
+            let src = idx[r * k + c] as usize;
+            let src_row = &h[src * f..(src + 1) * f];
+            for j in 0..f {
+                dst[j] += weight * src_row[j];
+            }
+        }
+    }
+}
+
+/// Fused SAGE input gather: one walk of layer-l's idx/w rows fills both
+/// the neighbor mean (self column skipped) and the gathered self rows —
+/// the two inputs [`scalar::aggregate`] + [`scalar::take_rows`] built in
+/// two passes.
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate_with_self(
+    agg: &mut [f32],
+    selfr: &mut [f32],
+    h: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+) {
+    debug_assert!(agg.len() >= rows * f && selfr.len() >= rows * f);
+    agg[..rows * f].fill(0.0);
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        selfr[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
+        let dst = &mut agg[r * f..(r + 1) * f];
+        for c in 1..k {
+            let weight = w[r * k + c];
+            if weight == 0.0 {
+                continue;
+            }
+            let s = idx[r * k + c] as usize;
+            let src_row = &h[s * f..(s + 1) * f];
+            for j in 0..f {
+                dst[j] += weight * src_row[j];
+            }
+        }
+    }
+}
+
+/// Transpose of [`aggregate`]: `dh[idx[r,c]] += w[r,c]·dout[r]`. The
+/// caller zeroes the live region of `dh`; accumulation order matches
+/// [`scalar::scatter_aggregate`] (bit-exact).
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_aggregate(
+    dh: &mut [f32],
+    dout: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) {
+    let c0 = usize::from(skip_self);
+    for r in 0..rows {
+        for c in c0..k {
+            let weight = w[r * k + c];
+            if weight == 0.0 {
+                continue;
+            }
+            let src = idx[r * k + c] as usize;
+            for j in 0..f {
+                dh[src * f + j] += weight * dout[r * f + j];
+            }
+        }
+    }
+}
+
+/// Gather the self rows `h[idx[r,0]]` (SAGE's W_self input) into `out`.
+pub fn take_rows(out: &mut [f32], h: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
+    debug_assert!(out.len() >= rows * f);
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        out[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
+    }
+}
+
+/// Transpose of [`take_rows`]: `dh[idx[r,0]] += dout[r]`.
+pub fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        for j in 0..f {
+            dh[src * f + j] += dout[r * f + j];
+        }
+    }
+}
+
+pub mod scalar {
+    //! The seed's scalar kernels — allocation per call, one k at a time —
+    //! kept verbatim as the numerics oracle for the blocked kernels and
+    //! as the baseline of the `micro_host` kernel-sweep bench.
+
+    /// See [`super::aggregate`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn aggregate(
+        h: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        skip_self: bool,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * f];
+        let c0 = usize::from(skip_self);
+        for r in 0..rows {
+            for c in c0..k {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
+                    continue;
+                }
+                let src = idx[r * k + c] as usize;
+                let (dst, src_row) = (&mut out[r * f..(r + 1) * f], &h[src * f..(src + 1) * f]);
+                for j in 0..f {
+                    dst[j] += weight * src_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// See [`super::scatter_aggregate`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn scatter_aggregate(
+        dh: &mut [f32],
+        dout: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        skip_self: bool,
+    ) {
+        let c0 = usize::from(skip_self);
+        for r in 0..rows {
+            for c in c0..k {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
+                    continue;
+                }
+                let src = idx[r * k + c] as usize;
+                for j in 0..f {
+                    dh[src * f + j] += weight * dout[r * f + j];
+                }
+            }
+        }
+    }
+
+    /// See [`super::take_rows`].
+    pub fn take_rows(h: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * f];
+        for r in 0..rows {
+            let src = idx[r * k] as usize;
+            out[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
+        }
+        out
+    }
+
+    /// See [`super::scatter_self`].
+    pub fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
+        for r in 0..rows {
+            let src = idx[r * k] as usize;
+            for j in 0..f {
+                dh[src * f + j] += dout[r * f + j];
+            }
+        }
+    }
+
+    /// See [`super::matmul_bias`].
+    pub fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        n: usize,
+        fin: usize,
+        fout: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * fout];
+        for r in 0..n {
+            let orow = &mut out[r * fout..(r + 1) * fout];
+            orow.copy_from_slice(bias);
+            for kk in 0..fin {
+                let xv = x[r * fin + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * fout..(kk + 1) * fout];
+                for j in 0..fout {
+                    orow[j] += xv * wrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// See [`super::add_matmul`].
+    pub fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
+        for r in 0..n {
+            for kk in 0..fin {
+                let xv = x[r * fin + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * fout..(kk + 1) * fout];
+                let orow = &mut out[r * fout..(r + 1) * fout];
+                for j in 0..fout {
+                    orow[j] += xv * wrow[j];
+                }
+            }
+        }
+    }
+
+    /// See [`super::matmul_at_b`].
+    pub fn matmul_at_b(a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; fa * fb];
+        for r in 0..n {
+            for kk in 0..fa {
+                let av = a[r * fa + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[r * fb..(r + 1) * fb];
+                let orow = &mut out[kk * fb..(kk + 1) * fb];
+                for j in 0..fb {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// See [`super::matmul_b_t`].
+    pub fn matmul_b_t(a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * fb];
+        for r in 0..n {
+            let arow = &a[r * fa..(r + 1) * fa];
+            let orow = &mut out[r * fb..(r + 1) * fb];
+            for kk in 0..fb {
+                let wrow = &w[kk * fa..(kk + 1) * fa];
+                let mut acc = 0.0f32;
+                for j in 0..fa {
+                    acc += arow[j] * wrow[j];
+                }
+                orow[kk] = acc;
+            }
+        }
+        out
+    }
+
+    /// See [`super::col_sums`].
+    pub fn col_sums(x: &[f32], n: usize, f: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; f];
+        for r in 0..n {
+            for j in 0..f {
+                out[j] += x[r * f + j];
+            }
+        }
+        out
+    }
+
+    /// See [`super::relu`].
+    pub fn relu(x: &[f32]) -> Vec<f32> {
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+
+    /// See [`super::relu_mask`]: gradient through relu as a fresh buffer.
+    pub fn relu_grad(z: &[f32], dh: &[f32]) -> Vec<f32> {
+        z.iter().zip(dh).map(|(&zv, &dv)| if zv > 0.0 { dv } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random dense matrix with a sprinkling of exact zeros and (when
+    /// `zero_rows`) whole all-zero rows — the padded wire format's shape.
+    fn rand_mat(rng: &mut Rng, n: usize, f: usize, zero_rows: bool) -> Vec<f32> {
+        let mut out: Vec<f32> = (0..n * f)
+            .map(|_| {
+                if rng.bool(0.2) {
+                    0.0
+                } else {
+                    rng.f32() - 0.5
+                }
+            })
+            .collect();
+        if zero_rows {
+            for r in 0..n {
+                if rng.bool(0.3) {
+                    out[r * f..(r + 1) * f].fill(0.0);
+                }
+            }
+        }
+        out
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let scale = 1.0 + g.abs().max(w.abs());
+            assert!((g - w).abs() <= tol * scale, "{tag}[{i}]: {g} vs {w}");
+        }
+    }
+
+    /// Shapes deliberately off the KT=4 tile grid, plus degenerate rows=0
+    /// and width-1 cases.
+    const SHAPES: [(usize, usize, usize); 7] = [
+        (0, 5, 7),
+        (1, 1, 1),
+        (3, 4, 8),
+        (5, 7, 9),
+        (8, 16, 4),
+        (13, 33, 6),
+        (6, 2, 31),
+    ];
+
+    #[test]
+    fn blocked_matmul_bias_matches_scalar_oracle() {
+        let mut rng = Rng::new(1);
+        for (n, fin, fout) in SHAPES {
+            let x = rand_mat(&mut rng, n, fin, true);
+            let w = rand_mat(&mut rng, fin, fout, false);
+            let bias = rand_mat(&mut rng, 1, fout, false);
+            let want = scalar::matmul_bias(&x, &w, &bias, n, fin, fout);
+            let mut got = vec![f32::NAN; n * fout]; // dirty: must be overwritten
+            matmul_bias(&mut got, &x, &w, &bias, n, fin, fout);
+            assert_close(&got, &want, 1e-5, &format!("matmul_bias {n}x{fin}x{fout}"));
+        }
+    }
+
+    #[test]
+    fn blocked_add_matmul_matches_scalar_oracle() {
+        let mut rng = Rng::new(2);
+        for (n, fin, fout) in SHAPES {
+            let x = rand_mat(&mut rng, n, fin, true);
+            let w = rand_mat(&mut rng, fin, fout, false);
+            let base = rand_mat(&mut rng, n, fout, false);
+            let mut want = base.clone();
+            scalar::add_matmul(&mut want, &x, &w, n, fin, fout);
+            let mut got = base;
+            add_matmul(&mut got, &x, &w, n, fin, fout);
+            assert_close(&got, &want, 1e-5, &format!("add_matmul {n}x{fin}x{fout}"));
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_at_b_matches_scalar_oracle() {
+        let mut rng = Rng::new(3);
+        for (n, fa, fb) in SHAPES {
+            let a = rand_mat(&mut rng, n, fa, true);
+            let b = rand_mat(&mut rng, n, fb, false);
+            let want = scalar::matmul_at_b(&a, &b, n, fa, fb);
+            let mut got = vec![f32::NAN; fa * fb];
+            matmul_at_b(&mut got, &a, &b, n, fa, fb);
+            assert_close(&got, &want, 1e-5, &format!("matmul_at_b {n}x{fa}x{fb}"));
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_b_t_matches_scalar_oracle() {
+        let mut rng = Rng::new(4);
+        for (n, fa, fb) in SHAPES {
+            let a = rand_mat(&mut rng, n, fa, true);
+            let w = rand_mat(&mut rng, fb, fa, false);
+            let want = scalar::matmul_b_t(&a, &w, n, fa, fb);
+            let mut got = vec![f32::NAN; n * fb];
+            matmul_b_t(&mut got, &a, &w, n, fa, fb);
+            assert_close(&got, &want, 1e-5, &format!("matmul_b_t {n}x{fa}x{fb}"));
+        }
+    }
+
+    #[test]
+    fn col_sums_and_relu_match_scalar_exactly() {
+        let mut rng = Rng::new(5);
+        for (n, f, _) in SHAPES {
+            let x = rand_mat(&mut rng, n, f, true);
+            let want = scalar::col_sums(&x, n, f);
+            let mut got = vec![f32::NAN; f];
+            col_sums(&mut got, &x, n, f);
+            assert_eq!(got, want, "col_sums {n}x{f}");
+
+            let want = scalar::relu(&x);
+            let mut got = vec![f32::NAN; x.len()];
+            relu(&mut got, &x, x.len());
+            assert_eq!(got, want, "relu {n}x{f}");
+
+            let z = rand_mat(&mut rng, n, f, false);
+            let want = scalar::relu_grad(&z, &x);
+            let mut got = x.clone();
+            relu_mask(&mut got, &z, x.len());
+            assert_eq!(got, want, "relu_mask {n}x{f}");
+        }
+    }
+
+    /// Random padded (idx, w) block over `n_src` source rows; some rows
+    /// fully zero-weighted (padding rows), some columns zero.
+    fn rand_block(
+        rng: &mut Rng,
+        rows: usize,
+        k: usize,
+        n_src: usize,
+    ) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = vec![0i32; rows * k];
+        let mut w = vec![0f32; rows * k];
+        for r in 0..rows {
+            let padded = rng.bool(0.25);
+            for c in 0..k {
+                idx[r * k + c] = rng.index(n_src) as i32;
+                if !padded && !rng.bool(0.2) {
+                    w[r * k + c] = rng.f32() + 0.01;
+                }
+            }
+        }
+        (idx, w)
+    }
+
+    #[test]
+    fn gather_scatter_kernels_match_scalar_bit_exactly() {
+        let mut rng = Rng::new(6);
+        for (rows, k, f) in [(0, 3, 4), (4, 1, 5), (7, 4, 3), (12, 6, 8), (9, 5, 1)] {
+            let n_src = (2 * rows).max(4);
+            let h = rand_mat(&mut rng, n_src, f, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            for skip_self in [false, true] {
+                let want = scalar::aggregate(&h, &idx, &w, rows, k, f, skip_self);
+                let mut got = vec![f32::NAN; rows * f];
+                aggregate(&mut got, &h, &idx, &w, rows, k, f, skip_self);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "aggregate skip_self={skip_self}");
+            }
+
+            let want = scalar::take_rows(&h, &idx, rows, k, f);
+            let mut got = vec![f32::NAN; rows * f];
+            take_rows(&mut got, &h, &idx, rows, k, f);
+            assert_eq!(got, want, "take_rows");
+
+            let dout = rand_mat(&mut rng, rows, f, false);
+            for skip_self in [false, true] {
+                let mut want = vec![0f32; n_src * f];
+                scalar::scatter_aggregate(&mut want, &dout, &idx, &w, rows, k, f, skip_self);
+                let mut got = vec![0f32; n_src * f];
+                scatter_aggregate(&mut got, &dout, &idx, &w, rows, k, f, skip_self);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "scatter_aggregate skip_self={skip_self}");
+            }
+
+            let mut want = vec![0f32; n_src * f];
+            scalar::scatter_self(&mut want, &dout, &idx, rows, k, f);
+            let mut got = vec![0f32; n_src * f];
+            scatter_self(&mut got, &dout, &idx, rows, k, f);
+            assert_eq!(got, want, "scatter_self");
+        }
+    }
+
+    #[test]
+    fn fused_aggregate_with_self_matches_two_pass_oracle() {
+        let mut rng = Rng::new(7);
+        for (rows, k, f) in [(5, 3, 4), (8, 6, 7), (1, 1, 2), (0, 4, 3)] {
+            let n_src = (2 * rows).max(4);
+            let h = rand_mat(&mut rng, n_src, f, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            let want_agg = scalar::aggregate(&h, &idx, &w, rows, k, f, true);
+            let want_self = scalar::take_rows(&h, &idx, rows, k, f);
+            let mut agg = vec![f32::NAN; rows * f];
+            let mut selfr = vec![f32::NAN; rows * f];
+            aggregate_with_self(&mut agg, &mut selfr, &h, &idx, &w, rows, k, f);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&agg), bits(&want_agg), "fused agg {rows}x{k}x{f}");
+            assert_eq!(selfr, want_self, "fused self rows {rows}x{k}x{f}");
+        }
+    }
+
+    #[test]
+    fn all_zero_weight_rows_produce_zero_output() {
+        // padding rows: weights all zero → aggregate output must be
+        // exactly 0 regardless of idx garbage, in both implementations
+        let h = vec![1.5f32; 8 * 3];
+        let idx = vec![2i32; 4 * 5];
+        let w = vec![0f32; 4 * 5];
+        let mut got = vec![f32::NAN; 4 * 3];
+        aggregate(&mut got, &h, &idx, &w, 4, 5, 3, false);
+        assert!(got.iter().all(|&x| x == 0.0));
+        assert_eq!(got, scalar::aggregate(&h, &idx, &w, 4, 5, 3, false));
+    }
+}

@@ -19,9 +19,12 @@
 //! files (see DESIGN.md §Execution backends).
 
 pub mod executor;
+pub mod kernels;
 pub mod manifest;
 pub mod reference;
+pub mod workspace;
 
 pub use executor::{BatchBuffers, StepOutput, TrainExecutor};
 pub use manifest::{ArtifactDims, ArtifactEntry, Manifest};
 pub use reference::RefModel;
+pub use workspace::Workspace;

@@ -12,14 +12,27 @@
 //! or AOT artifacts: build without the `pjrt` feature and
 //! [`super::TrainExecutor`] dispatches here.
 //!
-//! Numerics are plain f32 loops with a fixed accumulation order, so a
-//! training run is bit-reproducible — the property the pipeline
-//! determinism tests (`tests/pipeline_determinism.rs`) assert. At L = 2
-//! the loop unrolls to exactly the seed's operation sequence, keeping the
-//! golden-equivalence guarantee.
+//! Hot path (DESIGN.md §Hot-path memory & kernels): every intermediate
+//! lives in a per-instance [`Workspace`] and the math runs on the
+//! blocked, write-into kernels of [`super::kernels`] — no per-step heap
+//! allocation beyond the gradient output, and training steps touch only
+//! the batch's *real* row counts (`BatchBuffers::n`), not the padded
+//! capacities. Padding rows are never observable: the wire format
+//! guarantees no index references them and the loss mask excludes them,
+//! so the restriction is semantics-preserving (the scalar oracle path
+//! [`RefModel::train_step_scalar`], kept as the seed's full-capacity
+//! implementation, pins this in the unit tests). Prediction keeps the
+//! full-capacity sweep so its logits match compiled artifacts row for
+//! row.
+//!
+//! Numerics are f32 loops with a fixed accumulation order, so a training
+//! run is bit-reproducible — the property the pipeline determinism tests
+//! (`tests/pipeline_determinism.rs`) assert.
 
 use super::executor::{BatchBuffers, StepOutput};
+use super::kernels::{self, scalar};
 use super::manifest::{param_specs, ArtifactDims, ArtifactEntry};
+use super::workspace::Workspace;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum ModelKind {
@@ -31,6 +44,8 @@ enum ModelKind {
 pub struct RefModel {
     kind: ModelKind,
     dims: ArtifactDims,
+    /// Pre-sized scratch arena owning every per-step intermediate.
+    ws: Workspace,
 }
 
 impl RefModel {
@@ -64,16 +79,259 @@ impl RefModel {
                 entry.name
             );
         }
-        Ok(RefModel { kind, dims: d })
+        let ws = Workspace::new(&d, kind == ModelKind::Sage);
+        Ok(RefModel { kind, dims: d, ws })
+    }
+
+    /// Parameters-per-layer of this model kind.
+    fn ppl(&self) -> usize {
+        match self.kind {
+            ModelKind::Gcn => 2,
+            ModelKind::Sage => 3,
+        }
+    }
+
+    /// Set the per-level rows the next step computes: the batch's `n`
+    /// clamped to the capacities, or the full capacities when the caller
+    /// did not carry counts (legacy construction — full-padding sweep,
+    /// still correct). Writes the workspace's `rows` lane in place.
+    fn set_rows(&mut self, batch: &BatchBuffers) {
+        let d = &self.dims;
+        let ws = &mut self.ws;
+        if batch.n.len() == d.caps.len() {
+            for (r, (&n, &c)) in ws.rows.iter_mut().zip(batch.n.iter().zip(&d.caps)) {
+                *r = n.min(c);
+            }
+        } else {
+            ws.rows.copy_from_slice(&d.caps);
+        }
     }
 
     /// Forward + backward + masked CE loss (train artifacts).
     pub fn train_step(
+        &mut self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<StepOutput> {
+        self.set_rows(batch);
+        self.forward(params, batch);
+        let loss = self.loss_and_dlogits(batch);
+        let grads = self.backward(params, batch);
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Forward only (predict artifacts) → logits `[b, classes]`. Runs the
+    /// full-capacity sweep so padding rows carry the same bias-propagated
+    /// values a compiled artifact produces.
+    pub fn predict(
+        &mut self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.ws.rows.copy_from_slice(&self.dims.caps);
+        self.forward(params, batch);
+        Ok(self.ws.z[self.dims.layers() - 1].clone())
+    }
+
+    // -- forward -----------------------------------------------------------
+
+    /// L aggregate→update stages over the first `ws.rows[l]` rows per
+    /// level; relu between layers, linear output (`z[L-1]` is the logits).
+    fn forward(&mut self, params: &[Vec<f32>], batch: &BatchBuffers) {
+        let ppl = self.ppl();
+        let kind = self.kind;
+        let d = &self.dims;
+        let ws = &mut self.ws;
+        let lcount = d.layers();
+        for l in 1..=lcount {
+            let n = ws.rows[l];
+            let k = d.fanouts[l - 1] + 1;
+            let (fin, fout) = (d.f[l - 1], d.f[l]);
+            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
+            match kind {
+                ModelKind::Gcn => {
+                    let (wl, bl) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
+                    {
+                        let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+                        kernels::aggregate(&mut ws.agg[l - 1], hin, idx, w, n, k, fin, false);
+                    }
+                    kernels::matmul_bias(&mut ws.z[l - 1], &ws.agg[l - 1], wl, bl, n, fin, fout);
+                }
+                ModelKind::Sage => {
+                    // self rows through W_self, neighbor mean (self column
+                    // skipped) through W_nbr — one fused walk of idx/w
+                    let (wsf, wn, bl) = (
+                        &params[ppl * (l - 1)],
+                        &params[ppl * (l - 1) + 1],
+                        &params[ppl * (l - 1) + 2],
+                    );
+                    {
+                        let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+                        kernels::aggregate_with_self(
+                            &mut ws.agg[l - 1],
+                            &mut ws.selfr[l - 1],
+                            hin,
+                            idx,
+                            w,
+                            n,
+                            k,
+                            fin,
+                        );
+                    }
+                    kernels::matmul_bias(&mut ws.z[l - 1], &ws.selfr[l - 1], wsf, bl, n, fin, fout);
+                    kernels::add_matmul(&mut ws.z[l - 1], &ws.agg[l - 1], wn, n, fin, fout);
+                }
+            }
+            if l < lcount {
+                kernels::relu(&mut ws.h[l - 1], &ws.z[l - 1], n * fout);
+            }
+        }
+    }
+
+    /// Masked mean softmax cross-entropy over the computed logits, with
+    /// dlogits written into `ws.dz[L-1]` (fully zeroed first, so padding
+    /// target rows contribute nothing to the backward pass).
+    fn loss_and_dlogits(&mut self, batch: &BatchBuffers) -> f32 {
+        let d = &self.dims;
+        let ws = &mut self.ws;
+        let lcount = d.layers();
+        let classes = d.classes();
+        let n_t = ws.rows[lcount].min(d.b);
+        let denom = batch.mask.iter().sum::<f32>().max(1.0);
+        let logits = &ws.z[lcount - 1];
+        let dl = &mut ws.dz[lcount - 1];
+        dl.fill(0.0);
+        let mut loss = 0.0f32;
+        for r in 0..n_t {
+            let mk = batch.mask[r];
+            if mk == 0.0 {
+                continue;
+            }
+            let row = &logits[r * classes..(r + 1) * classes];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sumexp: f32 = row.iter().map(|&x| (x - max).exp()).sum();
+            let logz = max + sumexp.ln();
+            let label = batch.labels[r] as usize;
+            loss += mk * (logz - row[label]);
+            let scale = mk / denom;
+            for j in 0..classes {
+                let softmax = (row[j] - max).exp() / sumexp;
+                let onehot = if j == label { 1.0 } else { 0.0 };
+                dl[r * classes + j] = scale * (softmax - onehot);
+            }
+        }
+        loss / denom
+    }
+
+    // -- backward ----------------------------------------------------------
+
+    /// Transposed stages, layer L down to 1 (the dataflow of the seed's
+    /// explicit 2-layer backward, looped). `ws.dz[L-1]` must hold the
+    /// dlogits on entry; gradients come back in artifact parameter order.
+    fn backward(&mut self, params: &[Vec<f32>], batch: &BatchBuffers) -> Vec<Vec<f32>> {
+        let ppl = self.ppl();
+        let kind = self.kind;
+        let d = &self.dims;
+        let ws = &mut self.ws;
+        let lcount = d.layers();
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(ppl * lcount);
+        for l in 1..=lcount {
+            let (fin, fout) = (d.f[l - 1], d.f[l]);
+            grads.push(vec![0.0f32; fin * fout]);
+            if kind == ModelKind::Sage {
+                grads.push(vec![0.0f32; fin * fout]);
+            }
+            grads.push(vec![0.0f32; fout]);
+        }
+        for l in (1..=lcount).rev() {
+            let n = ws.rows[l];
+            let k = d.fanouts[l - 1] + 1;
+            let (fin, fout) = (d.f[l - 1], d.f[l]);
+            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
+            match kind {
+                ModelKind::Gcn => {
+                    let wl = &params[ppl * (l - 1)];
+                    kernels::matmul_at_b(
+                        &mut grads[ppl * (l - 1)],
+                        &ws.agg[l - 1],
+                        &ws.dz[l - 1],
+                        n,
+                        fin,
+                        fout,
+                    );
+                    kernels::col_sums(&mut grads[ppl * (l - 1) + 1], &ws.dz[l - 1], n, fout);
+                    if l > 1 {
+                        kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wl, n, fout, fin);
+                        let below = ws.rows[l - 1];
+                        ws.dz[l - 2][..below * fin].fill(0.0);
+                        kernels::scatter_aggregate(
+                            &mut ws.dz[l - 2],
+                            &ws.dx[l - 1],
+                            idx,
+                            w,
+                            n,
+                            k,
+                            fin,
+                            false,
+                        );
+                        kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+                    }
+                }
+                ModelKind::Sage => {
+                    let (wsf, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
+                    kernels::matmul_at_b(
+                        &mut grads[ppl * (l - 1)],
+                        &ws.selfr[l - 1],
+                        &ws.dz[l - 1],
+                        n,
+                        fin,
+                        fout,
+                    );
+                    kernels::matmul_at_b(
+                        &mut grads[ppl * (l - 1) + 1],
+                        &ws.agg[l - 1],
+                        &ws.dz[l - 1],
+                        n,
+                        fin,
+                        fout,
+                    );
+                    kernels::col_sums(&mut grads[ppl * (l - 1) + 2], &ws.dz[l - 1], n, fout);
+                    if l > 1 {
+                        kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wsf, n, fout, fin);
+                        kernels::matmul_b_t(&mut ws.dx2[l - 1], &ws.dz[l - 1], wn, n, fout, fin);
+                        let below = ws.rows[l - 1];
+                        ws.dz[l - 2][..below * fin].fill(0.0);
+                        kernels::scatter_self(&mut ws.dz[l - 2], &ws.dx[l - 1], idx, n, k, fin);
+                        kernels::scatter_aggregate(
+                            &mut ws.dz[l - 2],
+                            &ws.dx2[l - 1],
+                            idx,
+                            w,
+                            n,
+                            k,
+                            fin,
+                            true,
+                        );
+                        kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+                    }
+                }
+            }
+        }
+        grads
+    }
+
+    // -- scalar oracle path ------------------------------------------------
+
+    /// The seed's scalar, allocation-per-call implementation over the full
+    /// padded capacities — kept as the numerics oracle for the blocked
+    /// path (unit tests) and as the baseline of the `micro_host` kernel
+    /// sweep. Semantically identical to [`RefModel::train_step`].
+    pub fn train_step_scalar(
         &self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<StepOutput> {
-        let fwd = self.forward(params, batch);
+        let fwd = self.forward_scalar(params, batch);
         let d = &self.dims;
         let classes = d.classes();
         let denom = batch.mask.iter().sum::<f32>().max(1.0);
@@ -101,30 +359,12 @@ impl RefModel {
         }
         loss /= denom;
 
-        let grads = self.backward(params, batch, &fwd, &dlogits);
+        let grads = self.backward_scalar(params, batch, &fwd, &dlogits);
         Ok(StepOutput { loss, grads })
     }
 
-    /// Forward only (predict artifacts) → logits `[b, classes]`.
-    pub fn predict(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> anyhow::Result<Vec<f32>> {
-        let mut fwd = self.forward(params, batch);
-        Ok(fwd.zs.pop().expect("at least one layer"))
-    }
-
-    /// Parameters-per-layer of this model kind.
-    fn ppl(&self) -> usize {
-        match self.kind {
-            ModelKind::Gcn => 2,
-            ModelKind::Sage => 3,
-        }
-    }
-
-    // -- forward -----------------------------------------------------------
-
-    /// L aggregate→update stages; relu between layers, linear output.
-    /// Layer 1 reads `feat0` by reference (no copy of the batch's largest
-    /// buffer); the output layer's pre-activation doubles as the logits.
-    fn forward(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Forward {
+    /// L aggregate→update stages over the full capacities (scalar oracle).
+    fn forward_scalar(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Forward {
         let d = &self.dims;
         let lcount = d.layers();
         let ppl = self.ppl();
@@ -141,41 +381,36 @@ impl RefModel {
             let z = match self.kind {
                 ModelKind::Gcn => {
                     let (wl, bl) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    let agg = aggregate(hin, idx, w, rows, k, fin, false);
-                    let z = matmul_bias(&agg, wl, bl, rows, fin, fout);
+                    let agg = scalar::aggregate(hin, idx, w, rows, k, fin, false);
+                    let z = scalar::matmul_bias(&agg, wl, bl, rows, fin, fout);
                     aggs.push(agg);
                     z
                 }
                 ModelKind::Sage => {
-                    // self rows through W_self, neighbor mean (col 0 of the
-                    // weights zeroed) through W_nbr
-                    let (ws, wn, bl) = (
+                    let (wsf, wn, bl) = (
                         &params[ppl * (l - 1)],
                         &params[ppl * (l - 1) + 1],
                         &params[ppl * (l - 1) + 2],
                     );
-                    let agg = aggregate(hin, idx, w, rows, k, fin, true);
-                    let selfr = take_rows(hin, idx, rows, k, fin);
-                    let mut z = matmul_bias(&selfr, ws, bl, rows, fin, fout);
-                    add_matmul(&mut z, &agg, wn, rows, fin, fout);
+                    let agg = scalar::aggregate(hin, idx, w, rows, k, fin, true);
+                    let selfr = scalar::take_rows(hin, idx, rows, k, fin);
+                    let mut z = scalar::matmul_bias(&selfr, wsf, bl, rows, fin, fout);
+                    scalar::add_matmul(&mut z, &agg, wn, rows, fin, fout);
                     aggs.push(agg);
                     selfs.push(selfr);
                     z
                 }
             };
             if l < lcount {
-                h = relu(&z);
+                h = scalar::relu(&z);
             }
             zs.push(z);
         }
         Forward { aggs, zs, selfs }
     }
 
-    // -- backward ----------------------------------------------------------
-
-    /// Transposed stages, layer L down to 1 (the dataflow of the seed's
-    /// explicit 2-layer backward, looped).
-    fn backward(
+    /// Transposed stages over the full capacities (scalar oracle).
+    fn backward_scalar(
         &self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
@@ -195,27 +430,30 @@ impl RefModel {
             match self.kind {
                 ModelKind::Gcn => {
                     let wl = &params[ppl * (l - 1)];
-                    grads[ppl * (l - 1)] = matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 1] = col_sums(&dz, rows, fout);
+                    grads[ppl * (l - 1)] =
+                        scalar::matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 1] = scalar::col_sums(&dz, rows, fout);
                     if l > 1 {
-                        let dagg = matmul_b_t(&dz, wl, rows, fout, fin);
+                        let dagg = scalar::matmul_b_t(&dz, wl, rows, fout, fin);
                         let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
-                        scatter_aggregate(&mut dh, &dagg, idx, w, rows, k, fin, false);
-                        dz = relu_grad(&fwd.zs[l - 2], &dh);
+                        scalar::scatter_aggregate(&mut dh, &dagg, idx, w, rows, k, fin, false);
+                        dz = scalar::relu_grad(&fwd.zs[l - 2], &dh);
                     }
                 }
                 ModelKind::Sage => {
-                    let (ws, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    grads[ppl * (l - 1)] = matmul_at_b(&fwd.selfs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 1] = matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 2] = col_sums(&dz, rows, fout);
+                    let (wsf, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
+                    grads[ppl * (l - 1)] =
+                        scalar::matmul_at_b(&fwd.selfs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 1] =
+                        scalar::matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
+                    grads[ppl * (l - 1) + 2] = scalar::col_sums(&dz, rows, fout);
                     if l > 1 {
-                        let dself = matmul_b_t(&dz, ws, rows, fout, fin);
-                        let dnbr = matmul_b_t(&dz, wn, rows, fout, fin);
+                        let dself = scalar::matmul_b_t(&dz, wsf, rows, fout, fin);
+                        let dnbr = scalar::matmul_b_t(&dz, wn, rows, fout, fin);
                         let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
-                        scatter_self(&mut dh, &dself, idx, rows, k, fin);
-                        scatter_aggregate(&mut dh, &dnbr, idx, w, rows, k, fin, true);
-                        dz = relu_grad(&fwd.zs[l - 2], &dh);
+                        scalar::scatter_self(&mut dh, &dself, idx, rows, k, fin);
+                        scalar::scatter_aggregate(&mut dh, &dnbr, idx, w, rows, k, fin, true);
+                        dz = scalar::relu_grad(&fwd.zs[l - 2], &dh);
                     }
                 }
             }
@@ -224,8 +462,8 @@ impl RefModel {
     }
 }
 
-/// Forward-pass intermediates kept for the backward pass (one entry per
-/// layer; `selfs` is SAGE-only).
+/// Scalar-path forward intermediates kept for the backward pass (one
+/// entry per layer; `selfs` is SAGE-only).
 struct Forward {
     aggs: Vec<Vec<f32>>,
     /// Pre-activations z_l; z_L *is* the logits (no relu on the output
@@ -238,175 +476,6 @@ impl Forward {
     fn logits(&self) -> &[f32] {
         self.zs.last().expect("at least one layer")
     }
-}
-
-/// `out[r] = Σ_c w[r,c]·h[idx[r,c]]` over feature width `f`; with
-/// `skip_self` the self column (c = 0) is excluded (SAGE neighbor mean).
-fn aggregate(
-    h: &[f32],
-    idx: &[i32],
-    w: &[f32],
-    rows: usize,
-    k: usize,
-    f: usize,
-    skip_self: bool,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; rows * f];
-    let c0 = usize::from(skip_self);
-    for r in 0..rows {
-        for c in c0..k {
-            let weight = w[r * k + c];
-            if weight == 0.0 {
-                continue;
-            }
-            let src = idx[r * k + c] as usize;
-            let (dst, src_row) = (&mut out[r * f..(r + 1) * f], &h[src * f..(src + 1) * f]);
-            for j in 0..f {
-                dst[j] += weight * src_row[j];
-            }
-        }
-    }
-    out
-}
-
-/// Transpose of [`aggregate`]: `dh[idx[r,c]] += w[r,c]·dout[r]`.
-fn scatter_aggregate(
-    dh: &mut [f32],
-    dout: &[f32],
-    idx: &[i32],
-    w: &[f32],
-    rows: usize,
-    k: usize,
-    f: usize,
-    skip_self: bool,
-) {
-    let c0 = usize::from(skip_self);
-    for r in 0..rows {
-        for c in c0..k {
-            let weight = w[r * k + c];
-            if weight == 0.0 {
-                continue;
-            }
-            let src = idx[r * k + c] as usize;
-            for j in 0..f {
-                dh[src * f + j] += weight * dout[r * f + j];
-            }
-        }
-    }
-}
-
-/// Gather the self rows `h[idx[r,0]]` (SAGE's W_self input).
-fn take_rows(h: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; rows * f];
-    for r in 0..rows {
-        let src = idx[r * k] as usize;
-        out[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
-    }
-    out
-}
-
-/// Transpose of [`take_rows`]: `dh[idx[r,0]] += dout[r]`.
-fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
-    for r in 0..rows {
-        let src = idx[r * k] as usize;
-        for j in 0..f {
-            dh[src * f + j] += dout[r * f + j];
-        }
-    }
-}
-
-/// `x[n, fin] · w[fin, fout] + bias` row-major.
-fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, fin: usize, fout: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * fout];
-    for r in 0..n {
-        let orow = &mut out[r * fout..(r + 1) * fout];
-        orow.copy_from_slice(bias);
-        for kk in 0..fin {
-            let xv = x[r * fin + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * fout..(kk + 1) * fout];
-            for j in 0..fout {
-                orow[j] += xv * wrow[j];
-            }
-        }
-    }
-    out
-}
-
-/// `out += x[n, fin] · w[fin, fout]` (second matmul path of a SAGE layer).
-fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
-    for r in 0..n {
-        for kk in 0..fin {
-            let xv = x[r * fin + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * fout..(kk + 1) * fout];
-            let orow = &mut out[r * fout..(r + 1) * fout];
-            for j in 0..fout {
-                orow[j] += xv * wrow[j];
-            }
-        }
-    }
-}
-
-/// `aᵀ·b` for `a[n, fa]`, `b[n, fb]` → `[fa, fb]` (weight gradients).
-fn matmul_at_b(a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; fa * fb];
-    for r in 0..n {
-        for kk in 0..fa {
-            let av = a[r * fa + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[r * fb..(r + 1) * fb];
-            let orow = &mut out[kk * fb..(kk + 1) * fb];
-            for j in 0..fb {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// `a[n, fa] · wᵀ` for `w[fb, fa]` → `[n, fb]` (input gradients).
-fn matmul_b_t(a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * fb];
-    for r in 0..n {
-        let arow = &a[r * fa..(r + 1) * fa];
-        let orow = &mut out[r * fb..(r + 1) * fb];
-        for kk in 0..fb {
-            let wrow = &w[kk * fa..(kk + 1) * fa];
-            let mut acc = 0.0f32;
-            for j in 0..fa {
-                acc += arow[j] * wrow[j];
-            }
-            orow[kk] = acc;
-        }
-    }
-    out
-}
-
-fn col_sums(x: &[f32], n: usize, f: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; f];
-    for r in 0..n {
-        for j in 0..f {
-            out[j] += x[r * f + j];
-        }
-    }
-    out
-}
-
-fn relu(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| v.max(0.0)).collect()
-}
-
-/// Gradient through relu: pass where the pre-activation was positive
-/// (zero at exactly 0, matching jax.nn.relu's convention).
-fn relu_grad(z: &[f32], dh: &[f32]) -> Vec<f32> {
-    z.iter().zip(dh).map(|(&zv, &dv)| if zv > 0.0 { dv } else { 0.0 }).collect()
 }
 
 #[cfg(test)]
@@ -456,17 +525,18 @@ mod tests {
         for m in mask.iter_mut().take(n[lcount]) {
             *m = 1.0;
         }
-        BatchBuffers { feat0, idx, w, labels, mask }
+        BatchBuffers { feat0, idx, w, labels, mask, n }
     }
 
-    fn loss_of(model: &RefModel, params: &[Vec<f32>], batch: &BatchBuffers) -> f64 {
+    fn loss_of(model: &mut RefModel, params: &[Vec<f32>], batch: &BatchBuffers) -> f64 {
         model.train_step(params, batch).unwrap().loss as f64
     }
 
     /// Central-difference gradient check: the analytic backward pass must
-    /// match numerical differentiation on sampled coordinates.
+    /// match numerical differentiation on sampled coordinates. Runs on
+    /// the blocked workspace path.
     fn grad_check_entry(entry: &ArtifactEntry, tag: &str) {
-        let model = RefModel::new(entry).unwrap();
+        let mut model = RefModel::new(entry).unwrap();
         let params = crate::coordinator::params::ParamSet::init(entry, 9).data;
         let batch = random_batch(&entry.dims, 4);
         let out = model.train_step(&params, &batch).unwrap();
@@ -480,7 +550,8 @@ mod tests {
                 plus[pi][i] += eps;
                 let mut minus = params.clone();
                 minus[pi][i] -= eps;
-                let num = (loss_of(&model, &plus, &batch) - loss_of(&model, &minus, &batch))
+                let num = (loss_of(&mut model, &plus, &batch)
+                    - loss_of(&mut model, &minus, &batch))
                     / (2.0 * eps as f64);
                 let ana = out.grads[pi][i] as f64;
                 assert!(
@@ -527,9 +598,46 @@ mod tests {
     }
 
     #[test]
+    fn blocked_path_matches_scalar_oracle_at_depths_one_two_three() {
+        // ISSUE 5 tentpole guard: the workspace/blocked executor must be
+        // numerically interchangeable with the seed's scalar path on
+        // both model families at every supported depth — identical loss
+        // and gradients within FP-reassociation tolerance.
+        for model_name in ["gcn", "sage"] {
+            for fanouts in [vec![3usize], vec![3, 2], vec![3, 2, 2]] {
+                let entry = depth_entry(model_name, &fanouts);
+                let mut model = RefModel::new(&entry).unwrap();
+                let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
+                let batch = random_batch(&entry.dims, 11);
+                let blocked = model.train_step(&params, &batch).unwrap();
+                let oracle = model.train_step_scalar(&params, &batch).unwrap();
+                let tag = format!("{model_name} L={}", fanouts.len());
+                let lscale = 1.0 + oracle.loss.abs();
+                assert!(
+                    (blocked.loss - oracle.loss).abs() < 1e-5 * lscale,
+                    "{tag}: loss {} vs oracle {}",
+                    blocked.loss,
+                    oracle.loss
+                );
+                assert_eq!(blocked.grads.len(), oracle.grads.len(), "{tag}");
+                for (pi, (g, og)) in blocked.grads.iter().zip(&oracle.grads).enumerate() {
+                    assert_eq!(g.len(), og.len(), "{tag} param {pi}");
+                    for (i, (a, b)) in g.iter().zip(og).enumerate() {
+                        let scale = 1.0 + a.abs().max(b.abs());
+                        assert!(
+                            (a - b).abs() < 1e-4 * scale,
+                            "{tag} grad {pi}[{i}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn loss_is_masked_mean_ce() {
         let entry = tiny_entry("gcn", "train");
-        let model = RefModel::new(&entry).unwrap();
+        let mut model = RefModel::new(&entry).unwrap();
         let params = crate::coordinator::params::ParamSet::init(&entry, 2).data;
         let batch = random_batch(&entry.dims, 6);
         let out = model.train_step(&params, &batch).unwrap();
@@ -559,12 +667,32 @@ mod tests {
     #[test]
     fn deterministic_bitwise() {
         let entry = tiny_entry("sage", "train");
-        let model = RefModel::new(&entry).unwrap();
+        let mut model = RefModel::new(&entry).unwrap();
         let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
         let batch = random_batch(&entry.dims, 8);
         let a = model.train_step(&params, &batch).unwrap();
         let b = model.train_step(&params, &batch).unwrap();
         assert_eq!(a.loss.to_bits(), b.loss.to_bits());
         assert_eq!(a.grads, b.grads);
+    }
+
+    #[test]
+    fn recycled_workspace_cannot_leak_between_batches() {
+        // two different batches alternated through one model instance:
+        // results must match a fresh instance's on every step (the
+        // workspace is fully overwritten per step over the live region)
+        let entry = tiny_entry("sage", "train");
+        let mut reused = RefModel::new(&entry).unwrap();
+        let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
+        let batches = [random_batch(&entry.dims, 8), random_batch(&entry.dims, 9)];
+        // dirty the workspace with batch 1 first, then replay both
+        let _ = reused.train_step(&params, &batches[1]).unwrap();
+        for b in &batches {
+            let mut fresh = RefModel::new(&entry).unwrap();
+            let want = fresh.train_step(&params, b).unwrap();
+            let got = reused.train_step(&params, b).unwrap();
+            assert_eq!(got.loss.to_bits(), want.loss.to_bits());
+            assert_eq!(got.grads, want.grads);
+        }
     }
 }

@@ -1,0 +1,117 @@
+//! Shape-keyed scratch arena for the reference executor.
+//!
+//! Every intermediate a train/predict step needs — per-layer
+//! aggregations, pre- and post-activations, backward gradients and the
+//! matmul scratch they flow through — is allocated **once** per
+//! [`RefModel`](super::reference::RefModel) from the artifact's static
+//! [`ArtifactDims`], then rewritten in place on every step. This is what
+//! makes the reference executor's steady state allocation-free (modulo
+//! the small per-step gradient output the optimizer consumes) and is the
+//! executor half of the zero-allocation hot path (DESIGN.md §Hot-path
+//! memory & kernels).
+//!
+//! Ownership map (layer l = 1..=L stored at index l-1; shapes are the
+//! padded wire-format capacities, but kernels only touch the batch's
+//! real row counts):
+//!
+//! | buffer      | shape                | role                               |
+//! |-------------|----------------------|------------------------------------|
+//! | `agg[l-1]`  | `[caps[l], f[l-1]]`  | neighbor aggregation input         |
+//! | `selfr[l-1]`| `[caps[l], f[l-1]]`  | gathered self rows (SAGE only)     |
+//! | `z[l-1]`    | `[caps[l], f[l]]`    | pre-activation; `z[L-1]` = logits  |
+//! | `h[l-1]`    | `[caps[l], f[l]]`    | post-relu activation (l < L)       |
+//! | `dz[l-1]`   | `[caps[l], f[l]]`    | ∂loss/∂z; `dz[L-1]` starts as dlogits |
+//! | `dx[l-1]`   | `[caps[l], f[l-1]]`  | backward matmul scratch (l > 1)    |
+//! | `dx2[l-1]`  | `[caps[l], f[l-1]]`  | second scratch (SAGE ∂nbr, l > 1)  |
+
+use super::manifest::ArtifactDims;
+
+/// Pre-sized executor scratch; see the module docs for the ownership map.
+pub struct Workspace {
+    pub agg: Vec<Vec<f32>>,
+    pub selfr: Vec<Vec<f32>>,
+    pub z: Vec<Vec<f32>>,
+    pub h: Vec<Vec<f32>>,
+    pub dz: Vec<Vec<f32>>,
+    pub dx: Vec<Vec<f32>>,
+    pub dx2: Vec<Vec<f32>>,
+    /// Per-level row counts the current step computes (`n` clamped to the
+    /// capacities for training; the full capacities for prediction).
+    /// Lives in the workspace so a step allocates nothing but its
+    /// gradient output.
+    pub rows: Vec<usize>,
+}
+
+impl Workspace {
+    /// Allocate every buffer an L-layer model of these dims will touch
+    /// (`sage` additionally sizes the self-row and second-scratch lanes).
+    pub fn new(dims: &ArtifactDims, sage: bool) -> Workspace {
+        let lcount = dims.layers();
+        let mut ws = Workspace {
+            agg: Vec::with_capacity(lcount),
+            selfr: Vec::with_capacity(lcount),
+            z: Vec::with_capacity(lcount),
+            h: Vec::with_capacity(lcount),
+            dz: Vec::with_capacity(lcount),
+            dx: Vec::with_capacity(lcount),
+            dx2: Vec::with_capacity(lcount),
+            rows: dims.caps.clone(),
+        };
+        for l in 1..=lcount {
+            let rows = dims.caps[l];
+            let (fin, fout) = (dims.f[l - 1], dims.f[l]);
+            ws.agg.push(vec![0.0; rows * fin]);
+            ws.selfr.push(if sage { vec![0.0; rows * fin] } else { Vec::new() });
+            ws.z.push(vec![0.0; rows * fout]);
+            ws.h.push(if l < lcount { vec![0.0; rows * fout] } else { Vec::new() });
+            ws.dz.push(vec![0.0; rows * fout]);
+            ws.dx.push(if l > 1 { vec![0.0; rows * fin] } else { Vec::new() });
+            ws.dx2.push(if sage && l > 1 { vec![0.0; rows * fin] } else { Vec::new() });
+        }
+        ws
+    }
+
+    /// Total resident bytes (observability; the arena never grows).
+    pub fn bytes(&self) -> usize {
+        let lanes = [&self.agg, &self.selfr, &self.z, &self.h, &self.dz, &self.dx, &self.dx2];
+        lanes
+            .iter()
+            .map(|lane| lane.iter().map(|b| b.len() * 4).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ArtifactDims {
+        ArtifactDims::from_batch(8, &[3, 2], &[6, 5, 4])
+    }
+
+    #[test]
+    fn gcn_workspace_shapes_follow_the_dims() {
+        let d = dims();
+        let ws = Workspace::new(&d, false);
+        assert_eq!(ws.agg[0].len(), d.caps[1] * d.f[0]);
+        assert_eq!(ws.agg[1].len(), d.caps[2] * d.f[1]);
+        assert_eq!(ws.z[1].len(), d.b * d.classes());
+        assert_eq!(ws.dz[1].len(), d.b * d.classes());
+        assert_eq!(ws.h[0].len(), d.caps[1] * d.f[1]);
+        assert!(ws.h[1].is_empty(), "no relu after the output layer");
+        assert!(ws.selfr.iter().all(|b| b.is_empty()), "selfr is SAGE-only");
+        assert!(ws.dx[0].is_empty(), "layer 1 has no input gradient");
+        assert_eq!(ws.dx[1].len(), d.caps[2] * d.f[1]);
+        assert!(ws.bytes() > 0);
+    }
+
+    #[test]
+    fn sage_workspace_adds_self_and_second_scratch_lanes() {
+        let d = dims();
+        let ws = Workspace::new(&d, true);
+        assert_eq!(ws.selfr[0].len(), d.caps[1] * d.f[0]);
+        assert_eq!(ws.dx2[1].len(), d.caps[2] * d.f[1]);
+        assert!(ws.dx2[0].is_empty());
+        assert!(ws.bytes() > Workspace::new(&d, false).bytes());
+    }
+}

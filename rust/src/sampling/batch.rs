@@ -88,6 +88,28 @@ pub struct MiniBatch {
 }
 
 impl MiniBatch {
+    /// An all-padding batch with capacity-sized buffers — the recyclable
+    /// carcass `Sampler::sample_into` writes into. Level lists are empty
+    /// (capacity reserved), index/weight blocks zeroed; `validate` only
+    /// holds after a sample pass fills it.
+    pub fn empty(dims: BatchDims) -> MiniBatch {
+        let lcount = dims.layers();
+        let v = dims.caps.iter().map(|&c| Vec::with_capacity(c)).collect();
+        let idx = (1..=lcount).map(|l| vec![0i32; dims.caps[l] * dims.row_width(l)]).collect();
+        let w = (1..=lcount).map(|l| vec![0f32; dims.caps[l] * dims.row_width(l)]).collect();
+        MiniBatch {
+            part_id: 0,
+            seq: 0,
+            n: vec![0; lcount + 1],
+            v,
+            idx,
+            w,
+            labels: vec![0; dims.b],
+            mask: vec![0.0; dims.b],
+            dims,
+        }
+    }
+
     /// Number of GNN layers L.
     pub fn layers(&self) -> usize {
         self.dims.layers()

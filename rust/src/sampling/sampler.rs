@@ -1,6 +1,6 @@
 //! The neighbor sampler and per-epoch batch planning.
 
-use super::batch::{MiniBatch, WeightMode};
+use super::batch::{BatchDims, MiniBatch, WeightMode};
 use super::FanoutConfig;
 use crate::graph::{Csr, Dataset};
 use crate::util::rng::{hash64, Rng};
@@ -21,7 +21,9 @@ use crate::util::rng::{hash64, Rng};
 /// the seed's 2-layer implementation did, so the generalization is a
 /// provable no-op at L = 2 (`tests/golden_equivalence.rs`).
 pub struct Sampler {
-    cfg: FanoutConfig,
+    /// Wire-format capacities, fixed at construction (no per-batch
+    /// recomputation — the caps vector would allocate).
+    dims: BatchDims,
     mode: WeightMode,
     /// Base of the per-(part, seq) RNG streams.
     stream: u64,
@@ -33,20 +35,30 @@ pub struct Sampler {
     tag: u32,
     /// scratch for neighbor sampling without replacement
     pick: Vec<u32>,
+    /// scratch for Floyd's distinct-index draw (capacity = max fanout)
+    pick_idx: Vec<usize>,
 }
 
 impl Sampler {
     pub fn new(cfg: FanoutConfig, mode: WeightMode, num_vertices: usize, seed: u64) -> Sampler {
+        let kmax = cfg.fanouts.iter().copied().max().unwrap_or(0);
         Sampler {
-            cfg,
+            dims: cfg.dims(),
             mode,
             stream: seed,
             rng: Rng::new(seed),
             stamp: vec![0; num_vertices],
             pos: vec![0; num_vertices],
             tag: 0,
-            pick: Vec::new(),
+            pick: Vec::with_capacity(kmax),
+            pick_idx: Vec::with_capacity(kmax),
         }
+    }
+
+    /// A fresh all-padding batch matching this sampler's wire format —
+    /// the carcass [`Sampler::sample_into`] recycles.
+    pub fn new_batch(&self) -> MiniBatch {
+        MiniBatch::empty(self.dims.clone())
     }
 
     /// Re-key the RNG stream base (e.g. per epoch) without reallocating
@@ -65,36 +77,60 @@ impl Sampler {
         part_id: usize,
         seq: usize,
     ) -> MiniBatch {
+        let mut mb = self.new_batch();
+        self.sample_into(&mut mb, data, targets, part_id, seq);
+        mb
+    }
+
+    /// [`Sampler::sample`] into a recycled [`MiniBatch`] — the
+    /// zero-allocation hot path (DESIGN.md §Hot-path memory & kernels).
+    /// Every field of `mb` is fully overwritten (level lists cleared and
+    /// re-padded, index/weight blocks zeroed before writing), so batch
+    /// content still depends only on `(stream, part, seq)` — recycling is
+    /// observationally invisible, preserving the determinism law.
+    pub fn sample_into(
+        &mut self,
+        mb: &mut MiniBatch,
+        data: &Dataset,
+        targets: &[u32],
+        part_id: usize,
+        seq: usize,
+    ) {
         self.rng = Rng::new(hash64(self.stream ^ ((part_id as u64) << 32) ^ (seq as u64)));
-        let dims = self.cfg.dims();
-        let lcount = dims.layers();
-        assert!(targets.len() <= dims.b, "targets exceed batch capacity");
+        let lcount = self.dims.layers();
+        assert!(targets.len() <= self.dims.b, "targets exceed batch capacity");
+        assert_eq!(mb.dims, self.dims, "recycled batch dims mismatch");
         let g = &data.graph;
-        let n_targets = targets.len();
+        mb.part_id = part_id;
+        mb.seq = seq;
 
-        let mut n = vec![0usize; lcount + 1];
-        let mut v: Vec<Vec<u32>> = dims.caps.iter().map(|&c| Vec::with_capacity(c)).collect();
-        n[lcount] = n_targets;
-        v[lcount].extend_from_slice(targets);
-
-        // idx[l-1] / w[l-1] describe layer l (positions into level l-1)
-        let mut idx: Vec<Vec<i32>> = Vec::with_capacity(lcount);
-        let mut w: Vec<Vec<f32>> = Vec::with_capacity(lcount);
-        for l in 1..=lcount {
-            idx.push(vec![0i32; dims.caps[l] * dims.row_width(l)]);
-            w.push(vec![0f32; dims.caps[l] * dims.row_width(l)]);
+        // fully reset the carcass: no state may survive from a previous
+        // batch (padding rows/columns must read as index 0 / weight 0)
+        for list in mb.v.iter_mut() {
+            list.clear();
         }
+        for block in mb.idx.iter_mut() {
+            block.fill(0);
+        }
+        for block in mb.w.iter_mut() {
+            block.fill(0.0);
+        }
+        mb.n.fill(0);
+
+        mb.n[lcount] = targets.len();
+        mb.v[lcount].extend_from_slice(targets);
 
         // ---- layers L..1: level l → level l-1 ---------------------------
         // Level l-1 begins with level l's vertices themselves (self
         // positions), then deduplicated sampled neighbors — the same
         // two-phase structure (and therefore RNG order) as the seed's
-        // explicit layer-2/layer-1 code.
+        // explicit layer-2/layer-1 code. idx[l-1] / w[l-1] describe layer
+        // l (positions into level l-1).
         for l in (1..=lcount).rev() {
-            let k = dims.fanouts[l - 1];
+            let k = self.dims.fanouts[l - 1];
             let kw = k + 1;
-            self.tag += 1;
-            let (lower, upper) = v.split_at_mut(l);
+            self.bump_tag();
+            let (lower, upper) = mb.v.split_at_mut(l);
             let cur = &upper[0];
             let dst = &mut lower[l - 1];
             for &vv in cur.iter() {
@@ -102,35 +138,46 @@ impl Sampler {
             }
             for (r, &vv) in cur.iter().enumerate() {
                 let row = r * kw;
-                idx[l - 1][row] = self.pos[vv as usize];
+                mb.idx[l - 1][row] = self.pos[vv as usize];
                 let k_real = self.sample_neighbors(g, vv, k);
                 let picks = std::mem::take(&mut self.pick);
-                w[l - 1][row] = self.self_weight(g, vv);
+                mb.w[l - 1][row] = self.self_weight(g, vv);
                 for (c, &u) in picks.iter().enumerate() {
                     let p = self.place(u, dst);
-                    idx[l - 1][row + 1 + c] = p;
-                    w[l - 1][row + 1 + c] = self.neighbor_weight(g, vv, u, k_real);
+                    mb.idx[l - 1][row + 1 + c] = p;
+                    mb.w[l - 1][row + 1 + c] = self.neighbor_weight(g, vv, u, k_real);
                 }
                 self.pick = picks;
             }
-            n[l - 1] = dst.len();
-            assert!(n[l - 1] <= dims.caps[l - 1]);
+            mb.n[l - 1] = dst.len();
+            assert!(mb.n[l - 1] <= self.dims.caps[l - 1]);
         }
 
         // ---- labels / mask ------------------------------------------------
-        let mut labels = vec![0u32; dims.b];
-        let mut mask = vec![0f32; dims.b];
+        mb.labels.fill(0);
+        mb.mask.fill(0.0);
         for (r, &t) in targets.iter().enumerate() {
-            labels[r] = data.features.label(t);
-            mask[r] = 1.0;
+            mb.labels[r] = data.features.label(t);
+            mb.mask[r] = 1.0;
         }
 
         // pad vertex lists to capacity with id 0 (weight-0 rows ignore them)
-        for (list, &cap) in v.iter_mut().zip(dims.caps.iter()) {
+        for (list, &cap) in mb.v.iter_mut().zip(self.dims.caps.iter()) {
             list.resize(cap, 0);
         }
+    }
 
-        MiniBatch { dims, part_id, seq, n, v, idx, w, labels, mask }
+    /// Advance the level stamp. On u32 wrap-around the stamp array is
+    /// cleared and the counter restarts at 1, so a stale stamp from ~2^32
+    /// levels ago can never alias the fresh one and corrupt the dedup
+    /// (`comm::IterDedup::next_iteration` applies the same protocol).
+    #[inline]
+    fn bump_tag(&mut self) {
+        self.tag = self.tag.wrapping_add(1);
+        if self.tag == 0 {
+            self.stamp.fill(0);
+            self.tag = 1;
+        }
     }
 
     /// Place `v` in `list` if not already present this level; return its
@@ -159,11 +206,18 @@ impl Sampler {
         if nbrs.len() <= k {
             self.pick.extend_from_slice(nbrs);
         } else {
-            // Floyd's algorithm over index space
-            let idxs = self.rng.sample_distinct(nbrs.len(), k);
-            self.pick.extend(idxs.into_iter().map(|i| nbrs[i]));
+            // Floyd's algorithm over index space, into the persistent
+            // scratch (same draw sequence as `Rng::sample_distinct`)
+            self.rng.sample_distinct_into(nbrs.len(), k, &mut self.pick_idx);
+            self.pick.extend(self.pick_idx.iter().map(|&i| nbrs[i]));
         }
         self.pick.len()
+    }
+
+    /// Test hook: force the level stamp near the wrap-around boundary.
+    #[cfg(test)]
+    fn force_tag(&mut self, tag: u32) {
+        self.tag = tag;
     }
 
     #[inline]
@@ -430,6 +484,58 @@ mod tests {
         assert_eq!(set.len(), 100);
         assert_eq!(plan.remaining(0), 0);
         assert_eq!(plan.total_remaining(), 2);
+    }
+
+    fn assert_batches_identical(a: &MiniBatch, b: &MiniBatch, tag: &str) {
+        let bits = |w: &[f32]| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(a.n, b.n, "{tag}: n");
+        assert_eq!(a.v, b.v, "{tag}: v");
+        assert_eq!(a.idx, b.idx, "{tag}: idx");
+        for (l, (aw, bw)) in a.w.iter().zip(&b.w).enumerate() {
+            assert_eq!(bits(aw), bits(bw), "{tag}: w[{l}]");
+        }
+        assert_eq!(a.labels, b.labels, "{tag}: labels");
+        assert_eq!(bits(&a.mask), bits(&b.mask), "{tag}: mask");
+        assert_eq!((a.part_id, a.seq), (b.part_id, b.seq), "{tag}: identity");
+    }
+
+    #[test]
+    fn sample_into_recycled_batch_is_fully_overwritten() {
+        // a dirty carcass from a *different* (longer) batch must produce
+        // bit-identical content to a fresh sample of the same (part, seq)
+        let d = data();
+        let long: Vec<u32> = d.train_vertices[..64].to_vec();
+        let short: Vec<u32> = d.train_vertices[64..74].to_vec();
+        let mut s = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 13);
+        let mut mb = s.new_batch();
+        s.sample_into(&mut mb, &d, &long, 0, 0);
+        s.sample_into(&mut mb, &d, &short, 1, 4);
+        let mut fresh = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 13);
+        let expect = fresh.sample(&d, &short, 1, 4);
+        mb.validate().unwrap();
+        assert_batches_identical(&mb, &expect, "recycled vs fresh");
+    }
+
+    #[test]
+    fn tag_wraparound_clears_stale_stamps() {
+        // regression (ISSUE 5 satellite): the u32 level stamp wrapping
+        // past 0 used to leave stale stamp entries that alias the fresh
+        // tag and corrupt level dedup. After the fix a sampler driven
+        // across the wrap produces bit-identical batches to a fresh one.
+        let d = data();
+        let targets: Vec<u32> = d.train_vertices[..32].to_vec();
+        let mut near = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        let _ = near.sample(&d, &targets, 0, 0); // populate stamp/pos scratch
+        near.force_tag(u32::MAX - 1); // L=2 levels: tags MAX, then wrap → 1
+        let wrapped = near.sample(&d, &targets, 1, 3);
+        wrapped.validate().unwrap();
+        let mut fresh = Sampler::new(cfg(), WeightMode::GcnNorm, d.graph.num_vertices(), 7);
+        let expect = fresh.sample(&d, &targets, 1, 3);
+        assert_batches_identical(&wrapped, &expect, "across tag wrap");
+        // and the sampler keeps working after the wrap
+        let after = near.sample(&d, &targets, 0, 9);
+        let expect = fresh.sample(&d, &targets, 0, 9);
+        assert_batches_identical(&after, &expect, "after tag wrap");
     }
 
     #[test]

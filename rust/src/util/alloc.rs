@@ -1,0 +1,64 @@
+//! Counting global allocator (feature `alloc-count`) — the measurement
+//! harness behind the zero-allocation hot-path guarantee (DESIGN.md
+//! §Hot-path memory & kernels).
+//!
+//! With `--features alloc-count` the crate installs a [`GlobalAlloc`]
+//! wrapper around the system allocator that counts every `alloc` /
+//! `alloc_zeroed` / `realloc` process-wide. `tests/alloc_steady_state.rs`
+//! (the only test in its binary, so no concurrent test threads pollute
+//! the counter) drives the sampler + feature-gather steady state through
+//! it and asserts **zero** allocations per iteration after warm-up; the
+//! `micro_host` kernel sweep reports the same number. The feature is
+//! measurement-only: it changes no behavior and is off by default.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System-allocator wrapper counting allocation events (not bytes —
+/// the hot-path contract is "no allocator traffic at all").
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Total allocation events (alloc + alloc_zeroed + realloc) since process
+/// start. Subtract two readings to audit a region of code.
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_observes_heap_traffic() {
+        let before = allocation_count();
+        let v: Vec<u64> = (0..128).collect();
+        std::hint::black_box(&v);
+        assert!(allocation_count() > before, "Vec allocation must be counted");
+    }
+}

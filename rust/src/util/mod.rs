@@ -9,7 +9,11 @@
 //! - [`logging`]  — leveled stderr logger with wall-clock timestamps
 //! - [`proptest`] — miniature property-testing driver (random cases + seed
 //!                  reporting on failure)
+//! - `alloc`      — counting global allocator (feature `alloc-count`) for
+//!                  the zero-allocation hot-path audit
 
+#[cfg(feature = "alloc-count")]
+pub mod alloc;
 pub mod bench;
 pub mod bitset;
 pub mod cli;

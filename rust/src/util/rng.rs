@@ -109,16 +109,25 @@ impl Rng {
 
     /// Sample `k` distinct indices from `[0, n)` (k <= n) — Floyd's algorithm.
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n, "sample_distinct: k={k} > n={n}");
-        let mut chosen = std::collections::HashSet::with_capacity(k);
         let mut out = Vec::with_capacity(k);
+        self.sample_distinct_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_distinct`] into a caller-owned scratch vector
+    /// (cleared first) — allocation-free once the scratch has capacity,
+    /// which is what the sampler hot path needs. Membership is a linear
+    /// scan of the chosen set (k is a fanout, ≤ a few dozen), consuming
+    /// the exact same draw sequence and producing the exact same output
+    /// order as the original HashSet-based implementation.
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        out.clear();
         for j in (n - k)..n {
             let t = self.index(j + 1);
-            let v = if chosen.contains(&t) { j } else { t };
-            chosen.insert(v);
+            let v = if out.contains(&t) { j } else { t };
             out.push(v);
         }
-        out
     }
 }
 

@@ -1,0 +1,42 @@
+//! Zero-allocation steady-state audit (ISSUE 5 acceptance): after
+//! warm-up, the sampler + feature-gather hot path — `Sampler::sample_into`
+//! writing a recycled `MiniBatch` and `FeatureService::gather_into`
+//! writing a recycled feature buffer — must perform **zero** heap
+//! allocations per iteration. The measurement protocol lives in
+//! `comm::audit_sampler_gather_allocs`, shared with the `micro_host`
+//! kernel sweep so CI and the bench can never measure different things.
+//!
+//! Only built with `--features alloc-count` (the counting global
+//! allocator), and deliberately the only test in this binary: the
+//! counter is process-wide, so concurrent test threads would pollute it.
+#![cfg(feature = "alloc-count")]
+
+use hitgnn::comm::audit_sampler_gather_allocs;
+use hitgnn::graph::datasets;
+use hitgnn::partition::{preprocess, Algorithm};
+use hitgnn::sampling::FanoutConfig;
+
+#[test]
+fn sampler_and_gather_steady_state_is_allocation_free() {
+    let data = datasets::lookup("tiny").unwrap().build(0, 21);
+    let pre = preprocess(Algorithm::DistDgl, &data, 2, 0.2, 21);
+    let take = pre.train_parts[0].len().min(64);
+    let targets = &pre.train_parts[0][..take];
+    let iters = 32usize;
+    let allocs = audit_sampler_gather_allocs(
+        &data,
+        pre.stores[0].as_ref(),
+        pre.vertex_part.as_deref(),
+        FanoutConfig::new(64, &[5, 3]),
+        targets,
+        9,
+        4,
+        iters,
+    );
+    assert_eq!(
+        allocs, 0,
+        "sampler+gather steady state allocated {allocs} times over {iters} iterations \
+         ({} allocations/iteration)",
+        allocs as f64 / iters as f64
+    );
+}

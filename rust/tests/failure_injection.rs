@@ -202,6 +202,99 @@ fn zero_capacity_cache_still_trains_accounting() {
 }
 
 #[test]
+fn prep_worker_errors_propagate_instead_of_panicking() {
+    // ISSUE 5 satellite: a failure inside a prep worker (here: a task
+    // whose target list exceeds the batch capacity, which panics in the
+    // sampler) must surface to the coordinator as a clean `Err` — not a
+    // poisoned thread join — and the worker must keep serving tasks.
+    use hitgnn::coordinator::prep::{drain_prepared, prep_worker, PrepTask};
+    use std::sync::{mpsc, Mutex};
+
+    let d = datasets::lookup("tiny").unwrap().build(0, 11);
+    let pre = preprocess(Algorithm::DistDgl, &d, 2, 0.2, 11);
+    let cfg = FanoutConfig::new(8, &[3, 2]); // batch capacity 8
+    let mut sampler = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), 1);
+    let good: Vec<u32> = pre.train_parts[0][..8.min(pre.train_parts[0].len())].to_vec();
+
+    let (task_tx, task_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    let oversized: Vec<u32> = (0..64u32).collect();
+    task_tx
+        .send(PrepTask { iter: 0, tag: 0, part: 0, fpga: 0, seq: 0, targets: oversized })
+        .unwrap();
+    task_tx
+        .send(PrepTask { iter: 0, tag: 1, part: 0, fpga: 0, seq: 1, targets: good })
+        .unwrap();
+    drop(task_tx);
+
+    let rx = Mutex::new(task_rx);
+    let snaps = pre.residency_snapshot();
+    std::thread::scope(|s| {
+        let done_tx = done_tx.clone();
+        let rxr = &rx;
+        let data = &d;
+        let stores = &snaps[..];
+        let vertex_part = pre.vertex_part.as_deref();
+        let smp = &mut sampler;
+        s.spawn(move || {
+            prep_worker(
+                data,
+                stores,
+                vertex_part,
+                smp,
+                hitgnn::comm::CommConfig::default(),
+                3,
+                rxr,
+                &done_tx,
+                None,
+            )
+        });
+    });
+    drop(done_tx);
+
+    let results: Vec<_> = done_rx.iter().collect();
+    assert_eq!(results.len(), 2, "both tasks must produce a result");
+    match &results[0] {
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("iter 0 tag 0"), "{msg}");
+        }
+        Ok(_) => panic!("oversized batch must surface as Err"),
+    }
+    assert!(results[1].is_ok(), "worker must keep serving after an error");
+
+    // the drain helper propagates worker errors to the caller
+    let (tx, rx) = mpsc::channel();
+    tx.send(Err(anyhow::anyhow!("injected prep failure"))).unwrap();
+    drop(tx);
+    assert!(drain_prepared(&rx).is_err());
+}
+
+#[test]
+fn trainer_surfaces_prep_failures_as_errors_not_hangs() {
+    // end-to-end twin of the case above: poison a partition with an
+    // out-of-range vertex id so a prep worker panics mid-epoch inside a
+    // fully pipelined run. The coordinator must come back with a clean
+    // `Err` (winding the pool down), not hang on the prefetch window or
+    // re-raise the panic through the scoped join.
+    let cfg = TrainConfig {
+        dataset: "tiny".into(),
+        num_fpgas: 2,
+        epochs: 1,
+        scale_shift: 0,
+        host_threads: 2,
+        prefetch_depth: 2,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).expect("trainer builds");
+    let bogus = t.data.graph.num_vertices() as u32 + 1_000;
+    t.pre.train_parts[0][0] = bogus; // sampler will index out of range
+    let err = t.run().expect_err("poisoned partition must fail the epoch");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("prep worker panicked"), "{msg}");
+}
+
+#[test]
 fn cli_rejects_malformed_invocations() {
     use hitgnn::coordinator::cli::run;
     use hitgnn::util::cli::Args;

@@ -50,7 +50,7 @@ fn tiny_setup(
 fn train_step_executes_and_returns_finite_grads() {
     for model in ["gcn", "sage"] {
         let (_, _, _, batch, entry) = tiny_setup(model);
-        let exe = TrainExecutor::compile(&entry).unwrap();
+        let mut exe = TrainExecutor::compile(&entry).unwrap();
         let params = ParamSet::init(&entry, 3);
         let out = exe.train_step(&params.data, &batch).unwrap();
         assert!(out.loss.is_finite(), "{model}: loss {}", out.loss);
@@ -71,7 +71,7 @@ fn predict_logits_match_host_reference_for_gcn() {
     let (_, _, mb, batch, entry) = tiny_setup("gcn");
     let m = manifest();
     let pentry = m.find("predict", "gcn", "tiny").unwrap().clone();
-    let exe = TrainExecutor::compile(&pentry).unwrap();
+    let mut exe = TrainExecutor::compile(&pentry).unwrap();
     let params = ParamSet::init(&pentry, 3);
     let logits = exe.predict(&params.data, &batch).unwrap();
 
@@ -125,7 +125,7 @@ fn predict_logits_match_host_reference_for_gcn() {
 #[test]
 fn gradient_step_reduces_loss_through_pjrt() {
     let (_, _, _, batch, entry) = tiny_setup("gcn");
-    let exe = TrainExecutor::compile(&entry).unwrap();
+    let mut exe = TrainExecutor::compile(&entry).unwrap();
     let mut params = ParamSet::init(&entry, 5);
     let first = exe.train_step(&params.data, &batch).unwrap();
     let mut opt = hitgnn::coordinator::params::Sgd::new(0.5, 0.9, &params);
@@ -147,7 +147,7 @@ fn gradient_step_reduces_loss_through_pjrt() {
 #[test]
 fn executor_rejects_wrong_param_count_and_kind() {
     let (_, _, _, batch, entry) = tiny_setup("gcn");
-    let exe = TrainExecutor::compile(&entry).unwrap();
+    let mut exe = TrainExecutor::compile(&entry).unwrap();
     let params = ParamSet::init(&entry, 3);
     assert!(exe.train_step(&params.data[..2].to_vec(), &batch).is_err());
     assert!(exe.predict(&params.data, &batch).is_err()); // train artifact
@@ -158,7 +158,7 @@ fn mask_zero_targets_do_not_affect_loss() {
     // two runs identical except for a masked-off target's label —
     // the masked loss must not change
     let (_, _, _, mut batch, entry) = tiny_setup("gcn");
-    let exe = TrainExecutor::compile(&entry).unwrap();
+    let mut exe = TrainExecutor::compile(&entry).unwrap();
     let params = ParamSet::init(&entry, 3);
     batch.mask[entry.dims.b - 1] = 0.0;
     let a = exe.train_step(&params.data, &batch).unwrap();

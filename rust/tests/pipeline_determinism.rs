@@ -214,6 +214,41 @@ fn determinism_holds_at_depth_three_across_pipeline_and_sched() {
 }
 
 #[test]
+fn buffer_pool_recycling_is_observationally_invisible() {
+    // ISSUE 5 acceptance: recycled batch buffers (sampler carcasses,
+    // gather buffers, executor input buffers) may never leak state
+    // between batches. Per-iteration losses and Traffic totals must be
+    // bit-identical with the pool on and off (--no-pool), at L = 2 (the
+    // tiny artifact's [3, 2]) and L = 3, across host-threads ×
+    // prefetch-depth — so buffer reuse is observationally invisible.
+    for fanouts in [None, Some(vec![3usize, 2, 2])] {
+        let cfg_for = |pool: bool| {
+            let mut c = base_cfg();
+            c.fanouts = fanouts.clone();
+            c.buffer_pool = pool;
+            c
+        };
+        let base = run_cfg(cfg_for(true), 1, 1);
+        assert!(!base.0.is_empty(), "no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()));
+        let cases = [(false, 1, 1), (true, 4, 2), (false, 4, 2), (true, 2, 3), (false, 2, 3)];
+        for (pool, ht, d) in cases {
+            let got = run_cfg(cfg_for(pool), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "fanouts={fanouts:?} pool={pool}: losses diverged at ({ht}, {d})"
+            );
+            assert_eq!(
+                base.1, got.1,
+                "fanouts={fanouts:?} pool={pool}: traffic diverged at ({ht}, {d})"
+            );
+            assert_eq!(base.2, got.2, "fanouts={fanouts:?} pool={pool}: batches at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "fanouts={fanouts:?} pool={pool}: iters at ({ht}, {d})");
+        }
+    }
+}
+
+#[test]
 fn legacy_prefetch_flag_equals_depth_two() {
     let mut cfg_flag = base_cfg();
     cfg_flag.prefetch = true;
