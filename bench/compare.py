@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Diff two sets of BENCH_*.json perf-trajectory files.
+
+Usage:
+    bench/compare.py BASELINE_DIR CURRENT_DIR [--threshold 0.10] [--check]
+
+Both directories hold files written by `cargo bench --bench trajectory`
+(schema ``hitgnn-bench-v1``: ``{schema, area, git_rev, quick, benches:
+[{title, measurements: [{name, median_s, ...}], derived: [...]}]}``).
+Measurements are matched by (file name, bench title, measurement name);
+for each match the median-seconds delta is printed. With ``--check`` the
+exit status is non-zero if any matched measurement regressed (slowed
+down) by more than ``--threshold`` (fractional, default 0.10 = +10%).
+
+Entries present on only one side are reported as added/removed, never as
+regressions — a new bench must not fail the gate that would have
+recorded its first baseline.
+
+stdlib only; no third-party dependencies.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_medians(path: Path) -> dict[tuple[str, str], float]:
+    """(bench title, measurement name) -> median seconds for one file."""
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != "hitgnn-bench-v1":
+        raise SystemExit(f"{path}: unsupported schema {doc.get('schema')!r}")
+    out: dict[tuple[str, str], float] = {}
+    for bench in doc.get("benches", []):
+        title = bench.get("title", "?")
+        for m in bench.get("measurements", []):
+            out[(title, m["name"])] = float(m["median_s"])
+    return out
+
+
+def fmt_secs(s: float) -> str:
+    if s < 1e-6:
+        return f"{s * 1e9:.1f} ns"
+    if s < 1e-3:
+        return f"{s * 1e6:.1f} us"
+    if s < 1.0:
+        return f"{s * 1e3:.2f} ms"
+    return f"{s:.3f} s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path, help="directory with baseline BENCH_*.json")
+    ap.add_argument("current", type=Path, help="directory with current BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="fractional slowdown that counts as a regression (default 0.10)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero if any measurement regressed past the threshold",
+    )
+    args = ap.parse_args()
+
+    base_files = {p.name: p for p in sorted(args.baseline.glob("BENCH_*.json"))}
+    cur_files = {p.name: p for p in sorted(args.current.glob("BENCH_*.json"))}
+    if not cur_files:
+        raise SystemExit(f"no BENCH_*.json files in {args.current}")
+
+    regressions: list[str] = []
+    for name in sorted(set(base_files) | set(cur_files)):
+        if name not in base_files:
+            print(f"{name}: new file (no baseline) — skipped")
+            continue
+        if name not in cur_files:
+            print(f"{name}: missing from current run")
+            continue
+        base = load_medians(base_files[name])
+        cur = load_medians(cur_files[name])
+        print(f"\n== {name} (threshold +{args.threshold * 100:.0f}%) ==")
+        width = max((len(f"{t} / {m}") for t, m in (set(base) | set(cur))), default=20)
+        for key in sorted(set(base) | set(cur)):
+            label = f"{key[0]} / {key[1]}"
+            if key not in base:
+                print(f"  {label:<{width}}  {'—':>10} -> {fmt_secs(cur[key]):>10}  (new)")
+                continue
+            if key not in cur:
+                print(f"  {label:<{width}}  {fmt_secs(base[key]):>10} -> {'—':>10}  (removed)")
+                continue
+            b, c = base[key], cur[key]
+            delta = (c - b) / b if b > 0 else 0.0
+            marker = ""
+            if delta > args.threshold:
+                marker = "  REGRESSION"
+                regressions.append(f"{name}: {label}: {fmt_secs(b)} -> {fmt_secs(c)} ({delta:+.1%})")
+            elif delta < -args.threshold:
+                marker = "  improved"
+            print(
+                f"  {label:<{width}}  {fmt_secs(b):>10} -> {fmt_secs(c):>10}  ({delta:+.1%}){marker}"
+            )
+
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) past the threshold:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        if args.check:
+            return 1
+    else:
+        print("\nno regressions past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

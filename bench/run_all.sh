@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Run the full bench matrix and collect the machine-readable perf
+# trajectory (BENCH_*.json) for this checkout.
+#
+# Usage:
+#   bench/run_all.sh [out-dir]          # full run (default out: bench/out)
+#   HITGNN_BENCH_QUICK=1 bench/run_all.sh   # CI smoke scale
+#
+# The trajectory runner (benches/trajectory.rs) writes BENCH_host.json,
+# BENCH_kernels.json and BENCH_tune.json into $HITGNN_BENCH_OUT; the
+# remaining benches print their human-readable tables to stdout. Diff two
+# trajectory sets with bench/compare.py.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-bench/out}"
+mkdir -p "$OUT"
+export HITGNN_BENCH_OUT="$OUT"
+
+echo "== trajectory (BENCH_*.json -> $OUT) =="
+(cd rust && cargo bench --bench trajectory)
+
+echo "== table/figure benches (stdout) =="
+for bench in micro_host e2e_execution fig7_dse_sweep fig8_scalability \
+             table5_resource table6_cross_platform table7_ablation \
+             ablation_design; do
+  echo "---- $bench ----"
+  (cd rust && cargo bench --bench "$bench")
+done
+
+echo "BENCH_*.json written to $OUT:"
+ls -l "$OUT"/BENCH_*.json

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization recipe for the hitgnn crate.
+#
+# Three phases:
+#   1. build instrumented (-Cprofile-generate) and run the trajectory
+#      bench as the training workload,
+#   2. merge the raw profiles with llvm-profdata,
+#   3. rebuild optimized against the merged profile (-Cprofile-use).
+#
+# Usage: bench/run_pgo.sh [profile-dir]   (default: bench/pgo-data)
+#
+# Requires llvm-profdata — from the rustup toolchain's llvm-tools
+# (`rustup component add llvm-tools`) or the system LLVM. The trajectory
+# bench is the profiling workload because it exercises the full hot path:
+# sampling, gather, scheduling, the blocked kernels and the epoch loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="$(pwd)/${1:-bench/pgo-data}"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+# locate llvm-profdata: toolchain llvm-tools first, then PATH
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+if [ -z "$PROFDATA" ]; then
+  PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+  echo "error: llvm-profdata not found — run 'rustup component add llvm-tools'" >&2
+  exit 1
+fi
+
+echo "== 1/3: instrumented build + profiling run =="
+(
+  cd rust
+  RUSTFLAGS="-Cprofile-generate=$PGO_DIR" cargo bench --bench trajectory
+)
+
+echo "== 2/3: merging profiles =="
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"/*.profraw
+
+echo "== 3/3: optimized rebuild =="
+(
+  cd rust
+  RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" cargo build --release
+)
+
+echo "PGO build done (profile: $PGO_DIR/merged.profdata)."
+echo "Run benches against it with the same RUSTFLAGS, e.g.:"
+echo "  RUSTFLAGS=\"-Cprofile-use=$PGO_DIR/merged.profdata\" bench/run_all.sh"

@@ -10,6 +10,7 @@
 use hitgnn::api::HitGnn;
 use hitgnn::partition::Algorithm;
 use hitgnn::store::CachePolicy;
+use hitgnn::tune::AutoTuneMode;
 
 fn main() -> anyhow::Result<()> {
     // --- Design phase (Listing 1 lines 1–22) ---------------------------
@@ -25,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         .fanouts(&[3, 2, 2])                  // per-layer fanouts (sets L)
         .fpga_metadata(hitgnn::fpga::U250)    // FPGA_Metadata()
         .platform_metadata(2, 16.0, 205.0)    // Platform_Metadata()
+        .auto_tune(AutoTuneMode::On)          // DESIGN.md §Adaptive control
         .seed(7)
         .generate_design()?; // Generate_Design()
 
@@ -40,8 +42,14 @@ fn main() -> anyhow::Result<()> {
     // reference executor (the entry is synthesized from the fanouts)
     let report = design.start_training(3)?; // Start_training(epochs=3)
     for e in &report.epochs {
+        // the closed-loop controller logs one decision per epoch
+        let tune = e
+            .tune
+            .as_ref()
+            .and_then(|t| t.req_str("action").ok().map(|a| format!(" [tune: {a}]")))
+            .unwrap_or_default();
         println!(
-            "epoch {}: loss {:.4} ({} iterations, {:.2}s)",
+            "epoch {}: loss {:.4} ({} iterations, {:.2}s){tune}",
             e.epoch, e.mean_loss, e.iterations, e.wall_seconds
         );
     }

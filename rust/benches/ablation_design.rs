@@ -12,14 +12,11 @@ use hitgnn::graph::datasets;
 use hitgnn::partition::Algorithm;
 use hitgnn::perf::experiments::{build_workload, measure_host, BEST_DIE};
 use hitgnn::perf::{PlatformModel, PlatformSpec};
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{env_knob, Table};
 use hitgnn::util::stats::si;
 
 fn main() {
-    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(5);
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 5, 6) as u32;
 
     // ---- 1. sampling overlap (analytic, Eq. 5) -------------------------
     let spec = datasets::lookup("ogbn-products").unwrap();

@@ -6,11 +6,11 @@
 
 use hitgnn::coordinator::{TrainConfig, Trainer};
 use hitgnn::partition::Algorithm;
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{self, Table};
 use hitgnn::util::stats::si;
 
 fn main() {
-    let quick = std::env::var("HITGNN_BENCH_QUICK").is_ok();
+    let quick = bench::quick();
     let mut t = Table::new(&[
         "dataset",
         "model",

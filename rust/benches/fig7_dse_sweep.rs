@@ -4,12 +4,14 @@
 
 use hitgnn::dse::{paper_dse_workloads, DseEngine};
 use hitgnn::perf::PlatformSpec;
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{self, Table};
 use hitgnn::util::stats::si;
 
 fn main() {
     let mut engine = DseEngine::new(PlatformSpec::paper_4fpga());
-    engine.m_step = 32; // per-die m granularity for the printed grid
+    // per-die m granularity for the printed grid (coarser under
+    // HITGNN_BENCH_QUICK: same optimum region, far fewer points)
+    engine.m_step = if bench::quick() { 128 } else { 32 };
     let workloads = paper_dse_workloads(2.0);
     let res = engine.explore(&workloads).expect("sweep");
 

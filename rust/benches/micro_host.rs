@@ -14,7 +14,7 @@ use hitgnn::perf::{FleetModel, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
 use hitgnn::sched::{SchedMode, TwoStageScheduler};
 use hitgnn::store::CachePolicy;
-use hitgnn::util::bench::{black_box, Bench, Table};
+use hitgnn::util::bench::{black_box, env_knob, Bench, Table};
 use hitgnn::util::json::Json;
 use hitgnn::util::rng::Rng;
 
@@ -22,13 +22,14 @@ fn main() {
     let mut b = Bench::new("micro_host");
 
     // --- dataset build (R-MAT + CSR) -----------------------------------
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 5, 6) as u32;
     let spec = datasets::lookup("ogbn-products").unwrap();
     let m = b
-        .measure("build ogbn-products shift=5 (R-MAT+CSR)", |i| {
-            black_box(spec.build(5, i as u64))
+        .measure(&format!("build ogbn-products shift={shift} (R-MAT+CSR)"), |i| {
+            black_box(spec.build(shift, i as u64))
         })
         .median_s;
-    let data = spec.build(5, 17);
+    let data = spec.build(shift, 17);
     b.throughput("  edge construction", data.graph.num_edges() as f64, m, "edges");
 
     // --- partitioner ----------------------------------------------------
@@ -286,13 +287,12 @@ fn scheduler_sweep() {
 
     // Table-7 experiment path on the half fleet: measured host statistics
     // (β, dedup, sampling) per dataset, engineered tail profile
-    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(5);
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 5, 6) as u32;
+    let n_batches = env_knob("HITGNN_BENCH_BATCHES", 8, 4);
     let fleet = parse_fleet("u250-half:2,u250:2").unwrap();
     let profile = [6usize, 6, 20, 6];
-    let rows = table7_fleet(&fleet, 205.0, shift, 8, Some(&profile[..])).expect("table7_fleet");
+    let rows =
+        table7_fleet(&fleet, 205.0, shift, n_batches, Some(&profile[..])).expect("table7_fleet");
     let mut t = Table::new(&[
         "Data-Model",
         "no WB (s)",
@@ -330,14 +330,8 @@ fn scheduler_sweep() {
 /// re-ranking. Asserts the LFU policy ends strictly above static PaGraph
 /// on at least two datasets.
 fn cache_policy_sweep() {
-    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(5);
-    let n_batches: usize = std::env::var("HITGNN_BENCH_BATCHES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(24);
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 5, 6) as u32;
+    let n_batches = env_knob("HITGNN_BENCH_BATCHES", 24, 12);
     let epochs = 3usize;
     let ratio = 0.1f64;
     println!(
@@ -392,9 +386,10 @@ fn cache_policy_sweep() {
 /// models pay one more aggregate/update stage in the §6.2 model and one
 /// more dedup pass in the sampler.
 fn depth_sweep() {
-    println!("\n=== bench: depth sweep (equal per-batch work, ogbn-products shift 5) ===");
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 5, 6) as u32;
+    println!("\n=== bench: depth sweep (equal per-batch work, ogbn-products shift {shift}) ===");
     let spec = datasets::lookup("ogbn-products").unwrap();
-    let data = spec.build(5, 17);
+    let data = spec.build(shift, 17);
     let pre = preprocess(Algorithm::DistDgl, &data, 4, 0.2, 17);
     let widths2 = [spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64];
     let widths3 =

@@ -7,10 +7,14 @@
 
 use hitgnn::dse::{paper_dse_workloads, DseEngine};
 use hitgnn::perf::PlatformSpec;
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{self, Table};
 use hitgnn::util::stats::si;
 
 fn main() {
+    if bench::quick() {
+        // nothing to shrink: two analytic design-point evaluations
+        println!("(HITGNN_BENCH_QUICK: analytic bench, already smoke-scale)");
+    }
     let engine = DseEngine::new(PlatformSpec::paper_4fpga());
     let workloads = paper_dse_workloads(2.0); // GraphSAGE
     let configs = [(8u32, 2048u32), (16u32, 1024u32)];

@@ -11,18 +11,12 @@
 
 use hitgnn::partition::Algorithm;
 use hitgnn::perf::experiments::{table6, CrossPlatformRow};
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{env_knob, Table};
 use hitgnn::util::stats::{geo_mean, si};
 
 fn main() {
-    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4);
-    let n_batches: usize = std::env::var("HITGNN_BENCH_BATCHES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8);
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 4, 6) as u32;
+    let n_batches = env_knob("HITGNN_BENCH_BATCHES", 8, 4);
     eprintln!("measuring host statistics at shift {shift} ({n_batches} batches/cell)...");
     let rows = table6(4, shift, n_batches).expect("table6");
 

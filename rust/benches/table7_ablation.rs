@@ -5,18 +5,12 @@
 
 use hitgnn::perf::experiments::table7_with_policy;
 use hitgnn::store::CachePolicy;
-use hitgnn::util::bench::Table;
+use hitgnn::util::bench::{env_knob, Table};
 use hitgnn::util::stats::si;
 
 fn main() {
-    let shift: u32 = std::env::var("HITGNN_BENCH_SHIFT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4);
-    let n_batches: usize = std::env::var("HITGNN_BENCH_BATCHES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8);
+    let shift = env_knob("HITGNN_BENCH_SHIFT", 4, 6) as u32;
+    let n_batches = env_knob("HITGNN_BENCH_BATCHES", 8, 4);
     // β is measured per epoch under the selected feature-store policy;
     // the steady-state value parameterises Eq. 7 (paper config = static).
     let policy = std::env::var("HITGNN_CACHE_POLICY")

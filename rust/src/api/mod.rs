@@ -40,6 +40,7 @@ use crate::graph::datasets;
 use crate::partition::Algorithm;
 use crate::perf::PlatformSpec;
 use crate::store::CachePolicy;
+use crate::tune::AutoTuneMode;
 use crate::util::json::Json;
 
 /// Builder for a HitGNN design (the "input program" of Fig. 3).
@@ -66,6 +67,7 @@ pub struct HitGnn {
     /// Heterogeneous fleet (per-device metadata); overrides the
     /// homogeneous `fpga`/`num_fpgas`/`pcie_gbs` trio when set.
     fleet: Option<Vec<DeviceSpec>>,
+    auto_tune: AutoTuneMode,
     seed: u64,
 }
 
@@ -86,6 +88,7 @@ impl Default for HitGnn {
             pcie_gbs: 16.0,
             cpu_mem_gbs: 205.0,
             fleet: None,
+            auto_tune: AutoTuneMode::Off,
             seed: 42,
         }
     }
@@ -170,6 +173,16 @@ impl HitGnn {
         self.num_fpgas = fleet.len();
         self.fleet = Some(fleet);
         self.cpu_mem_gbs = cpu_mem_gbs;
+        self
+    }
+
+    /// Between-epoch closed-loop tuning of the runtime-safe knobs
+    /// (DESIGN.md §Adaptive control): `On` lets the controller refine the
+    /// DSE design online from each epoch's barrier measurements, `Freeze`
+    /// observes and logs without changing anything, `Off` (the default)
+    /// disables it. Loss sequences are unaffected either way.
+    pub fn auto_tune(mut self, mode: AutoTuneMode) -> Self {
+        self.auto_tune = mode;
         self
     }
 
@@ -314,6 +327,7 @@ impl HitGnn {
             scale_shift: self.scale_shift,
             cache_policy: self.cache_policy,
             cache_ratio: self.cache_ratio,
+            auto_tune: self.auto_tune,
             seed: self.seed,
             ..TrainConfig::default()
         };
@@ -515,6 +529,24 @@ mod tests {
         assert_eq!(devs[1].fpga.dies, 2);
         assert_eq!(d.train.sched, crate::sched::SchedMode::Cost);
         assert_eq!(d.accelerator, d.fleet[0].die);
+    }
+
+    #[test]
+    fn auto_tune_threads_into_the_generated_design() {
+        let d = HitGnn::new()
+            .load_input_graph("ogbn-products", 6)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.train.auto_tune, AutoTuneMode::Off, "off by default");
+        let d = HitGnn::new()
+            .load_input_graph("ogbn-products", 6)
+            .gnn_computation("gcn")
+            .auto_tune(AutoTuneMode::On)
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.train.auto_tune, AutoTuneMode::On);
+        assert_eq!(d.train.to_json().req_str("auto_tune").unwrap(), "on");
     }
 
     #[test]

@@ -58,6 +58,13 @@ TRAIN OPTIONS:
     --no-pool                    disable prepared-batch buffer recycling
                                  (debug/ablation; results are bit-identical
                                  either way)
+    --auto-tune <on|off|freeze>  closed-loop epoch auto-tuning (DESIGN.md
+                                 §Adaptive control): retunes host-threads,
+                                 prefetch-depth, sched, and (dynamic
+                                 policies) cache-ratio between epochs;
+                                 freeze observes/logs without retuning.
+                                 Losses are bit-identical either way
+                                 (default off)
     --max-iterations <n>         cap iterations per epoch
     --seed <u64>                 --artifacts <dir>
     --report <file.json>         write the training report

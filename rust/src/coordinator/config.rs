@@ -6,6 +6,7 @@ use crate::fpga::{self, DeviceSpec};
 use crate::partition::Algorithm;
 use crate::sched::SchedMode;
 use crate::store::CachePolicy;
+use crate::tune::AutoTuneMode;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -76,6 +77,12 @@ pub struct TrainConfig {
     /// hatch; results are bit-identical either way (the determinism
     /// suite asserts it).
     pub buffer_pool: bool,
+    /// Between-epoch closed-loop tuning of the runtime-safe knobs
+    /// (`--auto-tune on|off|freeze`, DESIGN.md §Adaptive control). `on`
+    /// lets the controller retune host_threads / prefetch_depth / sched /
+    /// cache_ratio; `freeze` runs the controller observe-and-log only;
+    /// `off` skips it entirely. Never affects the loss sequence.
+    pub auto_tune: AutoTuneMode,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
     /// Cap on iterations per epoch (None = full epoch); lets examples and
@@ -107,6 +114,7 @@ impl Default for TrainConfig {
             host_threads: 1,
             prefetch_depth: 1,
             buffer_pool: true,
+            auto_tune: AutoTuneMode::Off,
             seed: 42,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             max_iterations: None,
@@ -166,6 +174,7 @@ impl TrainConfig {
             host_threads: args.num("host-threads", d.host_threads)?,
             prefetch_depth: args.num("prefetch-depth", d.prefetch_depth)?,
             buffer_pool: !args.flag("no-pool"),
+            auto_tune: AutoTuneMode::parse(&args.str("auto-tune", d.auto_tune.name()))?,
             seed: args.num("seed", d.seed)?,
             artifacts_dir: PathBuf::from(
                 args.str("artifacts", &d.artifacts_dir.display().to_string()),
@@ -244,6 +253,7 @@ impl TrainConfig {
             ("host_threads", Json::num(self.host_threads as f64)),
             ("prefetch_depth", Json::num(self.pipeline_depth() as f64)),
             ("buffer_pool", Json::Bool(self.buffer_pool)),
+            ("auto_tune", Json::str(self.auto_tune.name())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -354,6 +364,20 @@ mod tests {
         assert_eq!(j.req("fanouts").unwrap().as_arr().unwrap().len(), 3);
         let d = TrainConfig::default().to_json();
         assert_eq!(d.req("fanouts").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn parses_auto_tune_mode() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert_eq!(c.auto_tune, AutoTuneMode::Off);
+        for (s, m) in
+            [("on", AutoTuneMode::On), ("off", AutoTuneMode::Off), ("freeze", AutoTuneMode::Freeze)]
+        {
+            let c = TrainConfig::from_args(&Args::parse(["train", "--auto-tune", s])).unwrap();
+            assert_eq!(c.auto_tune, m, "--auto-tune {s}");
+            assert_eq!(c.to_json().req_str("auto_tune").unwrap(), s);
+        }
+        assert!(TrainConfig::from_args(&Args::parse(["train", "--auto-tune", "maybe"])).is_err());
     }
 
     #[test]

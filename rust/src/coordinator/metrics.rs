@@ -42,16 +42,27 @@ pub struct EpochMetrics {
     pub gather_seconds: f64,
     pub execute_seconds: f64,
     pub sync_seconds: f64,
+    /// Coordinator time blocked waiting for batch preparation (the
+    /// reassembly `recv` loop) — the prep-vs-execute stall split the
+    /// auto-tuner steers by. Disjoint from `execute_stall_seconds`.
+    pub prep_stall_seconds: f64,
+    /// Coordinator time blocked at the gradient-sync collect barrier
+    /// (subset of `sync_seconds`, which also counts the reduction).
+    pub execute_stall_seconds: f64,
     /// Mean loss of each iteration, in execution order. Reduced in
     /// deterministic (iteration, tag) order, so for a fixed seed this
     /// sequence is bit-identical across pipeline configurations
     /// (`tests/pipeline_determinism.rs`).
     pub iter_losses: Vec<f64>,
+    /// The auto-tuner's decision after this epoch
+    /// (`tune::TuneDecision::to_json`) — present when `--auto-tune` is
+    /// `on` or `freeze`, so every knob change is auditable in the report.
+    pub tune: Option<Json>,
 }
 
 impl EpochMetrics {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("epoch", Json::num(self.epoch as f64)),
             ("mean_loss", Json::num(self.mean_loss)),
             ("final_loss", Json::num(self.final_loss)),
@@ -73,11 +84,17 @@ impl EpochMetrics {
             ("gather_seconds", Json::num(self.gather_seconds)),
             ("execute_seconds", Json::num(self.execute_seconds)),
             ("sync_seconds", Json::num(self.sync_seconds)),
+            ("prep_stall_seconds", Json::num(self.prep_stall_seconds)),
+            ("execute_stall_seconds", Json::num(self.execute_stall_seconds)),
             (
                 "iter_losses",
                 Json::arr(self.iter_losses.iter().map(|&x| Json::num(x)).collect()),
             ),
-        ])
+        ];
+        if let Some(t) = &self.tune {
+            fields.push(("tune", t.clone()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -133,6 +150,8 @@ mod tests {
                 stores_updated: 2,
                 epoch_makespan_batches: 7,
                 epoch_makespan_seconds: 0.25,
+                prep_stall_seconds: 0.125,
+                tune: Some(Json::obj(vec![("action", Json::str("hold"))])),
                 ..Default::default()
             }],
             mean_shape: vec![5.0, 4.0, 3.0, 2.0, 1.0],
@@ -152,5 +171,9 @@ mod tests {
         // scheduler observability fields survive the roundtrip
         assert_eq!(e0.req_usize("epoch_makespan_batches").unwrap(), 7);
         assert!(e0.get("epoch_makespan_seconds").is_some());
+        // stall counters + the tune decision log survive the roundtrip
+        assert!((e0.req_f64("prep_stall_seconds").unwrap() - 0.125).abs() < 1e-12);
+        assert!(e0.get("execute_stall_seconds").is_some());
+        assert_eq!(e0.req("tune").unwrap().req_str("action").unwrap(), "hold");
     }
 }

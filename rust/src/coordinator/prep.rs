@@ -31,6 +31,13 @@
 //! The loss sequence for a given seed is therefore bit-identical for any
 //! `--host-threads` × `--prefetch-depth` combination, including the
 //! serial path (1, 1).
+//!
+//! Both pipeline knobs (pool size and window depth) are owned by the
+//! online auto-tuner when `--auto-tune on` (DESIGN.md §Adaptive control):
+//! the trainer re-reads them at every epoch start, and the time the
+//! coordinator spends blocked in the reassembly recv loop waiting for
+//! this stage is surfaced as `EpochMetrics::prep_stall_seconds` — the
+//! signal that drives the tuner's grow steps on these axes.
 
 use std::sync::mpsc;
 use std::sync::Mutex;

@@ -37,6 +37,7 @@ use crate::store::{FeatureStore, Residency};
 use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, FanoutConfig, Sampler, WeightMode};
 use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
+use crate::tune::{AutoTuneMode, AutoTuner, EpochObservation, Knobs, TunePrior};
 use crate::util::rng::Rng;
 
 /// Cold-start local-fetch ratio for the scheduler cost model before the
@@ -209,10 +210,40 @@ impl Trainer {
     }
 
     /// Run the configured number of epochs; returns the full report.
+    ///
+    /// With `--auto-tune on` the between-epoch controller
+    /// ([`crate::tune::AutoTuner`]) consumes each epoch's barrier-measured
+    /// metrics and retunes the runtime-safe knobs for the next epoch;
+    /// `freeze` runs the controller observe-and-log only. Either way every
+    /// decision is recorded in `EpochMetrics::tune`.
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
+        let mut tuner = self.make_tuner();
         let mut epochs = Vec::new();
         for epoch in 0..self.cfg.epochs {
-            let m = self.run_epoch(epoch)?;
+            let mut m = self.run_epoch(epoch)?;
+            if let Some(t) = tuner.as_mut() {
+                let obs = EpochObservation {
+                    wall_seconds: m.wall_seconds,
+                    modeled_makespan_seconds: m.epoch_makespan_seconds,
+                    prep_stall_seconds: m.prep_stall_seconds,
+                    execute_stall_seconds: m.execute_stall_seconds,
+                    beta: m.beta,
+                    cache_hit_rate: m.cache_hit_rate,
+                };
+                let d = t.observe(epoch, &obs);
+                if t.mode() == AutoTuneMode::On {
+                    if d.action != "hold" {
+                        crate::log_info!(
+                            "auto-tune epoch {epoch}: {} ({}, score {:.4}s)",
+                            d.action,
+                            d.outcome,
+                            d.score_s
+                        );
+                    }
+                    self.apply_knobs(d.knobs);
+                }
+                m.tune = Some(d.to_json());
+            }
             crate::log_info!(
                 "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3} | hit {:.3} | dedup {} | {} stores re-ranked | makespan {} batches / {:.3}s modeled",
                 epoch,
@@ -249,14 +280,11 @@ impl Trainer {
         s
     }
 
-    /// The scheduler's per-device cost model for the *next* epoch:
-    /// per-device §6.2 timing (`perf::FleetModel::cost_model` — the same
-    /// function the DSE engine and `simulate` use) driven by the measured
-    /// mean batch shape and the policy-measured β of the epochs run so
-    /// far (nominal artifact shape and the paper's β before epoch 0).
-    /// All inputs are barrier-measured, so the model — and therefore the
-    /// planned schedule — is identical across pipeline configurations.
-    pub fn fleet_cost(&self) -> CostModel {
+    /// The §6.2 fleet workload for the current measured state: mean
+    /// measured batch shape (nominal before epoch 0) and the
+    /// policy-measured β. Shared by the scheduler cost model and the
+    /// auto-tuner's modeled prior so both see the same platform.
+    fn fleet_workload(&self, batches_per_part: Vec<usize>) -> Workload {
         let d = &self.entry.dims;
         let lcount = d.layers();
         let f: Vec<f64> = d.f.iter().map(|&x| x as f64).collect();
@@ -267,18 +295,81 @@ impl Trainer {
             let fanouts: Vec<f64> = d.fanouts.iter().map(|&k| k as f64).collect();
             BatchShape::nominal(d.b as f64, &fanouts, &f)
         };
-        let w = Workload {
+        Workload {
             shape,
             beta: self.last_beta,
             param_scale: if self.cfg.model == "sage" { 2.0 } else { 1.0 },
             sampling_s_per_batch: 0.0,
-            batches_per_part: vec![0; self.cfg.num_fpgas],
+            batches_per_part,
             workload_balancing: self.cfg.workload_balancing,
             direct_host_fetch: self.cfg.direct_host_fetch,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
-        };
+        }
+    }
+
+    /// The scheduler's per-device cost model for the *next* epoch:
+    /// per-device §6.2 timing (`perf::FleetModel::cost_model` — the same
+    /// function the DSE engine and `simulate` use) driven by the measured
+    /// mean batch shape and the policy-measured β of the epochs run so
+    /// far (nominal artifact shape and the paper's β before epoch 0).
+    /// All inputs are barrier-measured, so the model — and therefore the
+    /// planned schedule — is identical across pipeline configurations.
+    pub fn fleet_cost(&self) -> CostModel {
+        let w = self.fleet_workload(vec![0; self.cfg.num_fpgas]);
         FleetModel::new(self.cfg.device_fleet(), self.cfg.cpu_mem_gbs).cost_model(&w)
+    }
+
+    /// The auto-tuner's design-time prior: the scheduler mode the fleet's
+    /// modeled cost prefers for this run's actual per-partition batch
+    /// counts (the DSE design picked the fleet; this is the same §6.2
+    /// model asking which stage-2 assignment suits it).
+    pub fn tune_prior(&self) -> TunePrior {
+        let b = self.entry.dims.b;
+        let batches: Vec<usize> =
+            self.pre.train_parts.iter().map(|p| p.len().div_ceil(b)).collect();
+        let w = self.fleet_workload(batches);
+        let fm = FleetModel::new(self.cfg.device_fleet(), self.cfg.cpu_mem_gbs);
+        TunePrior { preferred_sched: fm.preferred_sched(&w) }
+    }
+
+    /// Build the between-epoch controller per `--auto-tune` (None = off).
+    fn make_tuner(&self) -> Option<AutoTuner> {
+        if self.cfg.auto_tune == AutoTuneMode::Off {
+            return None;
+        }
+        let initial = Knobs {
+            host_threads: self.cfg.host_threads.max(1),
+            prefetch_depth: self.cfg.pipeline_depth(),
+            sched: self.cfg.sched,
+            cache_ratio: self.cfg.cache_ratio,
+        };
+        Some(
+            AutoTuner::new(self.cfg.auto_tune, initial, self.cfg.cache_policy.is_dynamic())
+                .with_prior(self.tune_prior()),
+        )
+    }
+
+    /// Apply an accepted knob vector for the next epoch. `run_epoch`
+    /// re-reads every knob per epoch: the sampler pool grows/shrinks with
+    /// `host_threads`, the prefetch window with `prefetch_depth`, the
+    /// scheduler with `sched`; a `cache_ratio` change retargets the live
+    /// stores' capacity right here at the epoch boundary — the same
+    /// barrier `end_epoch` re-snapshots at, so the next epoch's prep
+    /// threads read one consistent residency version.
+    fn apply_knobs(&mut self, k: Knobs) {
+        self.cfg.host_threads = k.host_threads;
+        self.cfg.prefetch_depth = k.prefetch_depth;
+        // the knob owns the effective depth from here on
+        self.cfg.prefetch = false;
+        self.cfg.sched = k.sched;
+        if (k.cache_ratio - self.cfg.cache_ratio).abs() > 1e-12 {
+            self.cfg.cache_ratio = k.cache_ratio;
+            let rows = ((self.data.graph.num_vertices() as f64) * k.cache_ratio).round() as usize;
+            for s in self.pre.stores.iter_mut() {
+                s.set_capacity(rows);
+            }
+        }
     }
 
     /// One epoch of synchronous training through the host pipeline.
@@ -402,13 +493,17 @@ impl Trainer {
                     issued += 1;
                 }
 
-                // reassemble iteration i (batches may arrive out of order)
+                // reassemble iteration i (batches may arrive out of order);
+                // time blocked here is the prep-stall the auto-tuner uses
+                // to detect a preparation-bound pipeline
+                let t1 = Instant::now();
                 while buffered.get(&i).map_or(0, |v| v.len()) < sizes[i] {
                     let pb = done_rx
                         .recv()
                         .map_err(|_| anyhow::anyhow!("prep workers disconnected"))??;
                     buffered.entry(pb.iter).or_default().push(pb);
                 }
+                m.prep_stall_seconds += t1.elapsed().as_secs_f64();
                 let mut items = buffered.remove(&i).unwrap_or_default();
                 items.sort_by_key(|b| b.tag);
 
@@ -462,6 +557,9 @@ impl Trainer {
                 }
                 let t2 = Instant::now();
                 let mut results = pool.collect(submitted)?;
+                // time blocked at the collect barrier (execute-stall; the
+                // reduction below is counted in sync_seconds only)
+                m.execute_stall_seconds += t2.elapsed().as_secs_f64();
                 // reduce in tag order regardless of worker arrival order
                 results.sort_by_key(|r| r.tag);
                 let mut grads = Vec::with_capacity(submitted);

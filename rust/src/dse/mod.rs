@@ -171,6 +171,11 @@ pub struct FleetDseResult {
     pub per_kind: Vec<(String, DieConfig, Utilization)>,
     /// Average fleet NVTPS at the chosen dies under cost-aware WB.
     pub throughput: f64,
+    /// Scheduler mode the fleet-level §6.2 model prefers at the chosen
+    /// dies (lower mean modeled makespan across the workloads; Cost on
+    /// ties). Seeds the online auto-tuner's prior so it skips the sched
+    /// flip the model already rules out (`Trainer::tune_prior`).
+    pub preferred_sched: SchedMode,
 }
 
 impl DseEngine {
@@ -280,7 +285,21 @@ impl DseEngine {
             per_kind.push((kind.to_string(), die, resources.utilization(die)));
         }
         let throughput = eval(&devices);
-        Ok(FleetDseResult { devices, per_kind, throughput })
+        let fm = FleetModel::new(devices.clone(), cpu_mem_gbs);
+        let mean_makespan = |mode: SchedMode| -> f64 {
+            workloads
+                .iter()
+                .map(|w| fm.epoch(&w.to_workload(p, 32), mode).makespan_seconds)
+                .sum::<f64>()
+                / workloads.len() as f64
+        };
+        let preferred_sched =
+            if mean_makespan(SchedMode::BatchCount) < mean_makespan(SchedMode::Cost) {
+                SchedMode::BatchCount
+            } else {
+                SchedMode::Cost
+            };
+        Ok(FleetDseResult { devices, per_kind, throughput, preferred_sched })
     }
 }
 
@@ -367,6 +386,9 @@ mod tests {
         assert_eq!(res.devices.len(), 4);
         assert_eq!(res.per_kind.len(), 2);
         assert!(res.throughput > 0.0);
+        // a het fleet never prefers batch-count scheduling (cost-aware
+        // WB is at worst a tie, and ties resolve to Cost)
+        assert_eq!(res.preferred_sched, SchedMode::Cost);
         // every device of a kind shares that kind's chosen die, and the
         // die is feasible on that kind's resources
         for (kind, die, util) in &res.per_kind {

@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod sched;
 pub mod store;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result type.

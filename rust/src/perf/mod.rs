@@ -313,6 +313,21 @@ impl FleetModel {
             gradient_sync_s: sync_s,
         }
     }
+
+    /// The stage-2 assignment mode this fleet's cost model prefers for
+    /// workload `w` — the auto-tuner's modeled scheduling prior
+    /// (`tune::TunePrior`). `Cost` on ties: it plans identically to
+    /// batch-count whenever per-device costs agree, so the tuner then
+    /// skips the flip trial entirely.
+    pub fn preferred_sched(&self, w: &Workload) -> SchedMode {
+        let bc = self.epoch(w, SchedMode::BatchCount).makespan_seconds;
+        let cost = self.epoch(w, SchedMode::Cost).makespan_seconds;
+        if bc < cost {
+            SchedMode::BatchCount
+        } else {
+            SchedMode::Cost
+        }
+    }
 }
 
 /// Eq. 7-style β estimate for a nominal workload where a fraction
@@ -466,6 +481,18 @@ mod tests {
         // is mode-invariant — only the seconds change
         assert_eq!(ca.iterations, bc.iterations);
         assert_eq!(ca.makespan_batches, bc.makespan_batches);
+    }
+
+    #[test]
+    fn preferred_sched_is_cost_on_het_fleets_and_on_homogeneous_ties() {
+        let het = FleetModel::new(crate::fpga::parse_fleet("u250-half:2,u250:2").unwrap(), 205.0);
+        let mut w = workload(4);
+        w.batches_per_part = vec![6, 6, 20, 6];
+        assert_eq!(het.preferred_sched(&w), SchedMode::Cost);
+        // homogeneous: both modes plan identically → tie → Cost
+        let hom =
+            FleetModel::from_platform(PlatformSpec::paper_4fpga(), DieConfig { n: 2, m: 512 });
+        assert_eq!(hom.preferred_sched(&w), SchedMode::Cost);
     }
 
     #[test]

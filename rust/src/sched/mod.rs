@@ -99,6 +99,15 @@ impl SchedMode {
         }
     }
 
+    /// The other assignment mode — the auto-tuner's sched axis is a
+    /// single flip between the two.
+    pub fn other(&self) -> SchedMode {
+        match self {
+            SchedMode::BatchCount => SchedMode::Cost,
+            SchedMode::Cost => SchedMode::BatchCount,
+        }
+    }
+
     pub const ALL: [SchedMode; 2] = [SchedMode::BatchCount, SchedMode::Cost];
 }
 

@@ -145,6 +145,21 @@ impl FeatureStore for LfuStore {
         }
         changed
     }
+
+    fn set_capacity(&mut self, rows: usize) -> bool {
+        self.capacity = rows.min(self.counts.len());
+        // re-snapshot immediately from current hotness (counts are not
+        // aged — this is a capacity retarget, not an epoch update)
+        let (counts, rank) = (&self.counts, &self.rank);
+        let selected = select_top_rows(counts.len(), self.capacity, |&a, &b| {
+            let (a, b) = (a as usize, b as usize);
+            counts[b].cmp(&counts[a]).then(rank[a].cmp(&rank[b]))
+        });
+        if self.residency.rows != Rows::Subset(selected.clone()) {
+            self.residency.rows = Rows::Subset(selected);
+        }
+        true
+    }
 }
 
 /// Sliding-window recency cache: a global access clock stamps every
@@ -201,6 +216,19 @@ impl FeatureStore for WindowStore {
             self.residency.rows = Rows::Subset(rows);
         }
         changed
+    }
+
+    fn set_capacity(&mut self, rows: usize) -> bool {
+        self.capacity = rows.min(self.last_seen.len());
+        let (seen, rank) = (&self.last_seen, &self.rank);
+        let selected = select_top_rows(seen.len(), self.capacity, |&a, &b| {
+            let (a, b) = (a as usize, b as usize);
+            seen[b].cmp(&seen[a]).then(rank[a].cmp(&rank[b]))
+        });
+        if self.residency.rows != Rows::Subset(selected.clone()) {
+            self.residency.rows = Rows::Subset(selected);
+        }
+        true
     }
 }
 
@@ -287,6 +315,34 @@ mod tests {
         s.observe(&[5, 6, 7]);
         assert!(s.end_epoch());
         assert_eq!(resident_set(&s), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn set_capacity_resnapshots_immediately() {
+        let n = 40;
+        let res = Residency::rows_subset(select_top_rows(n, 4, |&a, &b| a.cmp(&b)), 8);
+        let mut s = LfuStore::new(res, 4, id_rank(n));
+        s.observe(&[30, 31, 30, 31]);
+        // grow: observed-hot rows enter, prior rows fill the rest
+        assert!(s.set_capacity(6));
+        assert_eq!(resident_set(&s), vec![0, 1, 2, 3, 30, 31]);
+        // shrink: hotness order wins, ties fall back to the rank prior
+        assert!(s.set_capacity(2));
+        assert_eq!(resident_set(&s), vec![30, 31]);
+        // window store honours it too
+        let resw = Residency::rows_subset(select_top_rows(n, 4, |&a, &b| a.cmp(&b)), 8);
+        let mut w = WindowStore::new(resw, 4, id_rank(n));
+        w.observe(&[20, 21]);
+        assert!(w.set_capacity(3));
+        assert_eq!(resident_set(&w), vec![0, 20, 21]);
+    }
+
+    #[test]
+    fn static_store_refuses_capacity_retarget() {
+        let mut r = Residency::rows_subset(select_top_rows(8, 2, |&a, &b| a.cmp(&b)), 4);
+        let before = r.clone();
+        assert!(!FeatureStore::set_capacity(&mut r, 5));
+        assert_eq!(r, before);
     }
 
     #[test]

@@ -99,6 +99,16 @@ pub trait FeatureStore: Send + Sync {
         false
     }
 
+    /// Retarget the cache capacity to `rows` resident rows and re-snapshot
+    /// immediately. Called only at the epoch barrier (the auto-tuner's
+    /// cache-ratio axis), where `end_epoch` already versions the next
+    /// epoch's snapshot, so the determinism law is unaffected. Returns
+    /// true if the store honoured the request; static stores (the
+    /// algorithm's Table-1 residency is not a tunable cache) refuse it.
+    fn set_capacity(&mut self, _rows: usize) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str {
         self.policy().name()
     }

@@ -1,0 +1,541 @@
+//! Closed-loop epoch auto-tuning (ROADMAP item 5a).
+//!
+//! The DSE engine picks design parameters once, offline, from platform
+//! metadata; this module corrects the *runtime-safe* subset online, between
+//! epochs, from the quantities the trainer already measures at its barriers
+//! (β, modeled makespan, stall split, cache hit rate). The knob set is
+//! exactly the four axes the determinism tests prove loss-invariant —
+//! `--host-threads`, `--prefetch-depth`, `--sched`, and (for dynamic cache
+//! policies) `--cache-ratio` — so the controller can never change a loss
+//! sequence, only how fast it is produced (DESIGN.md §Adaptive control).
+//!
+//! Control law: a guarded hill-climb with hysteresis. Each proposal changes
+//! one knob, runs for one epoch, and is scored by
+//! `wall_seconds + epoch_makespan_seconds` (measured host pipeline +
+//! modeled fleet compute — the simulated FPGAs contribute through the
+//! modeled term, real ones would move the measured term too). A grow step
+//! must *improve* the score by [`ACCEPT_MARGIN`] or it is reverted and that
+//! (axis, direction) is blocked for the rest of the run; a shrink step is
+//! accepted if it is *no worse* than the margin (it frees host resources at
+//! equal speed). Blocks are permanent, every axis has a hard cap, and
+//! nothing here consumes randomness or wall-clock identity, so the
+//! controller always quiesces and two runs with the same seed take the same
+//! decisions whenever their measured scores order the same way.
+
+use crate::sched::SchedMode;
+use crate::util::json::Json;
+
+/// Relative score margin a grow step must win by (and a shrink step must
+/// not lose by) to be accepted.
+pub const ACCEPT_MARGIN: f64 = 0.01;
+
+/// Prep-stall fraction of epoch wall above which the host pipeline is
+/// considered preparation-bound and worth widening.
+pub const STALL_HIGH: f64 = 0.05;
+
+/// Prep-stall fraction below which the pipeline is considered saturated
+/// and shrink probes are worth trying.
+pub const STALL_LOW: f64 = 0.01;
+
+/// `--auto-tune` setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AutoTuneMode {
+    /// No controller at all.
+    #[default]
+    Off,
+    /// Controller observes, proposes, and applies knob changes.
+    On,
+    /// Controller observes and logs but never changes a knob — the paired
+    /// baseline for the determinism tests and for A/B runs.
+    Freeze,
+}
+
+impl AutoTuneMode {
+    pub fn parse(s: &str) -> anyhow::Result<AutoTuneMode> {
+        match s {
+            "off" => Ok(AutoTuneMode::Off),
+            "on" => Ok(AutoTuneMode::On),
+            "freeze" => Ok(AutoTuneMode::Freeze),
+            other => anyhow::bail!("unknown auto-tune mode '{other}' (on|off|freeze)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoTuneMode::Off => "off",
+            AutoTuneMode::On => "on",
+            AutoTuneMode::Freeze => "freeze",
+        }
+    }
+
+    pub const ALL: [AutoTuneMode; 3] = [AutoTuneMode::Off, AutoTuneMode::On, AutoTuneMode::Freeze];
+}
+
+/// The runtime-safe knob vector the controller owns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Knobs {
+    pub host_threads: usize,
+    pub prefetch_depth: usize,
+    pub sched: SchedMode,
+    pub cache_ratio: f64,
+}
+
+impl Knobs {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("host_threads", Json::num(self.host_threads as f64)),
+            ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
+            ("sched", Json::str(self.sched.name())),
+            ("cache_ratio", Json::num(self.cache_ratio)),
+        ])
+    }
+}
+
+/// What the controller sees after each epoch — a plain projection of
+/// `EpochMetrics` so this module does not depend on the coordinator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochObservation {
+    pub wall_seconds: f64,
+    /// Modeled epoch makespan under the fleet cost model (seconds).
+    pub modeled_makespan_seconds: f64,
+    /// Coordinator time blocked waiting on batch preparation.
+    pub prep_stall_seconds: f64,
+    /// Coordinator time blocked at the gradient-sync barrier.
+    pub execute_stall_seconds: f64,
+    pub beta: f64,
+    pub cache_hit_rate: f64,
+}
+
+impl EpochObservation {
+    /// The objective the hill-climb minimises: measured host wall plus
+    /// modeled fleet compute.
+    pub fn score(&self) -> f64 {
+        self.wall_seconds + self.modeled_makespan_seconds
+    }
+
+    fn prep_stall_fraction(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.prep_stall_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Modeled prior seeded from the DSE design (`perf::FleetModel`): which
+/// scheduler mode the cost model prefers for this fleet. Saves the one
+/// trial epoch the sched axis would otherwise cost when the fleet is
+/// homogeneous (both modes plan identically there).
+#[derive(Clone, Copy, Debug)]
+pub struct TunePrior {
+    pub preferred_sched: SchedMode,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Axis {
+    HostThreads,
+    PrefetchDepth,
+    Sched,
+    CacheRatio,
+}
+
+impl Axis {
+    fn index(self) -> usize {
+        match self {
+            Axis::HostThreads => 0,
+            Axis::PrefetchDepth => 1,
+            Axis::Sched => 2,
+            Axis::CacheRatio => 3,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Axis::HostThreads => "host_threads",
+            Axis::PrefetchDepth => "prefetch_depth",
+            Axis::Sched => "sched",
+            Axis::CacheRatio => "cache_ratio",
+        }
+    }
+}
+
+/// One audit-log entry: what the controller concluded from this epoch's
+/// observation and which knobs the *next* epoch will run with. Attached to
+/// `EpochMetrics.tune` and therefore to the saved `TrainReport`.
+#[derive(Clone, Debug)]
+pub struct TuneDecision {
+    pub epoch: usize,
+    /// Resolution of the knobs that just ran: `baseline` (no trial was
+    /// pending), `accept`, `revert`, or `freeze`.
+    pub outcome: String,
+    /// Step taken for the next epoch, e.g. `host_threads 1 -> 2`, or
+    /// `hold` when the controller is quiescent.
+    pub action: String,
+    /// This epoch's objective (`wall_seconds + epoch_makespan_seconds`).
+    pub score_s: f64,
+    /// Best accepted objective so far.
+    pub best_score_s: f64,
+    /// Knobs in effect for the next epoch.
+    pub knobs: Knobs,
+}
+
+impl TuneDecision {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("outcome", Json::str(self.outcome.clone())),
+            ("action", Json::str(self.action.clone())),
+            ("score_s", Json::num(self.score_s)),
+            ("best_score_s", Json::num(self.best_score_s)),
+            ("knobs", self.knobs.to_json()),
+        ])
+    }
+}
+
+struct Trial {
+    axis: Axis,
+    /// +1 grow, -1 shrink.
+    dir: i8,
+    knobs: Knobs,
+    action: String,
+}
+
+/// The between-epoch controller. Drive it with [`AutoTuner::observe`]
+/// after every epoch and apply the returned decision's `knobs` before the
+/// next one (the trainer does both in `Trainer::run`).
+pub struct AutoTuner {
+    mode: AutoTuneMode,
+    /// Best accepted configuration.
+    current: Knobs,
+    best_score: Option<f64>,
+    trial: Option<Trial>,
+    /// Permanently blocked (axis, direction) steps: `[axis][0]`=shrink,
+    /// `[axis][1]`=grow.
+    blocked: [[bool; 2]; 4],
+    /// The sched axis is a single flip trial; resolved at most once.
+    sched_tried: bool,
+    /// Whether the cache-ratio axis is live (dynamic cache policy).
+    cache_dynamic: bool,
+    max_host_threads: usize,
+    max_prefetch_depth: usize,
+    max_cache_ratio: f64,
+}
+
+impl AutoTuner {
+    pub fn new(mode: AutoTuneMode, initial: Knobs, cache_dynamic: bool) -> AutoTuner {
+        AutoTuner {
+            mode,
+            current: initial,
+            best_score: None,
+            trial: None,
+            blocked: [[false; 2]; 4],
+            sched_tried: false,
+            cache_dynamic,
+            max_host_threads: 8,
+            max_prefetch_depth: 4,
+            max_cache_ratio: 0.95,
+        }
+    }
+
+    /// Seed the controller with the DSE/perf-model prior: if the modeled
+    /// fleet already prefers the current scheduler mode, the flip trial is
+    /// known-useless and skipped.
+    pub fn with_prior(mut self, prior: TunePrior) -> AutoTuner {
+        if prior.preferred_sched == self.current.sched {
+            self.sched_tried = true;
+        }
+        self
+    }
+
+    pub fn mode(&self) -> AutoTuneMode {
+        self.mode
+    }
+
+    /// Knobs currently in effect (the pending trial's, if one is running).
+    pub fn knobs(&self) -> Knobs {
+        self.trial.as_ref().map(|t| t.knobs).unwrap_or(self.current)
+    }
+
+    fn blocked_step(&self, axis: Axis, dir: i8) -> bool {
+        self.blocked[axis.index()][if dir > 0 { 1 } else { 0 }]
+    }
+
+    fn block(&mut self, axis: Axis, dir: i8) {
+        self.blocked[axis.index()][if dir > 0 { 1 } else { 0 }] = true;
+    }
+
+    /// Consume one epoch's observation (measured under [`Self::knobs`])
+    /// and decide the next epoch's configuration.
+    pub fn observe(&mut self, epoch: usize, obs: &EpochObservation) -> TuneDecision {
+        let score = obs.score();
+        let outcome = match self.trial.take() {
+            None => {
+                // fresh measurement of the accepted configuration
+                self.best_score = Some(score);
+                if self.mode == AutoTuneMode::Freeze { "freeze" } else { "baseline" }
+            }
+            Some(t) => {
+                let best = self.best_score.expect("trial implies a baseline score");
+                let win = score <= best * (1.0 - ACCEPT_MARGIN);
+                let hold = score <= best * (1.0 + ACCEPT_MARGIN);
+                if (t.dir > 0 && win) || (t.dir < 0 && hold) {
+                    self.current = t.knobs;
+                    self.best_score = Some(score.min(best));
+                    "accept"
+                } else {
+                    self.block(t.axis, t.dir);
+                    "revert"
+                }
+            }
+        };
+
+        // After a revert the next epoch re-measures the restored baseline
+        // (outcome `baseline`) before any new trial, so a fresh trial is
+        // never scored against a stale reference.
+        let action = if self.mode == AutoTuneMode::On && outcome != "revert" {
+            match self.propose(obs) {
+                Some(t) => {
+                    let a = t.action.clone();
+                    self.trial = Some(t);
+                    a
+                }
+                None => "hold".to_string(),
+            }
+        } else {
+            "hold".to_string()
+        };
+
+        TuneDecision {
+            epoch,
+            outcome: outcome.to_string(),
+            action,
+            score_s: score,
+            best_score_s: self.best_score.unwrap_or(score),
+            knobs: self.knobs(),
+        }
+    }
+
+    /// Signal-directed single-knob proposal, or `None` when quiescent.
+    fn propose(&mut self, obs: &EpochObservation) -> Option<Trial> {
+        let k = self.current;
+        let stall = obs.prep_stall_fraction();
+
+        // 1. Scheduler flip: one trial, taken early — the modeled makespan
+        //    term responds deterministically, so one epoch settles it.
+        if !self.sched_tried && !self.blocked_step(Axis::Sched, 1) {
+            self.sched_tried = true;
+            let flipped = k.sched.other();
+            return Some(Trial {
+                axis: Axis::Sched,
+                dir: 1,
+                knobs: Knobs { sched: flipped, ..k },
+                action: format!("sched {} -> {}", k.sched.name(), flipped.name()),
+            });
+        }
+
+        // 2. Preparation-bound: widen the prep pool first (doubling), then
+        //    deepen the prefetch window.
+        if stall > STALL_HIGH {
+            if k.host_threads < self.max_host_threads && !self.blocked_step(Axis::HostThreads, 1) {
+                let next = (k.host_threads * 2).min(self.max_host_threads);
+                return Some(Trial {
+                    axis: Axis::HostThreads,
+                    dir: 1,
+                    knobs: Knobs { host_threads: next, ..k },
+                    action: format!("host_threads {} -> {}", k.host_threads, next),
+                });
+            }
+            if k.prefetch_depth < self.max_prefetch_depth
+                && !self.blocked_step(Axis::PrefetchDepth, 1)
+            {
+                let next = k.prefetch_depth + 1;
+                return Some(Trial {
+                    axis: Axis::PrefetchDepth,
+                    dir: 1,
+                    knobs: Knobs { prefetch_depth: next, ..k },
+                    action: format!("prefetch_depth {} -> {}", k.prefetch_depth, next),
+                });
+            }
+        }
+
+        // 3. Dynamic cache policies only: grow the resident set while rows
+        //    still miss (re-snapshot happens at the epoch barrier).
+        if self.cache_dynamic
+            && obs.cache_hit_rate < 0.95
+            && k.cache_ratio + 0.05 <= self.max_cache_ratio + 1e-9
+            && !self.blocked_step(Axis::CacheRatio, 1)
+        {
+            let next = k.cache_ratio + 0.05;
+            return Some(Trial {
+                axis: Axis::CacheRatio,
+                dir: 1,
+                knobs: Knobs { cache_ratio: next, ..k },
+                action: format!("cache_ratio {:.2} -> {:.2}", k.cache_ratio, next),
+            });
+        }
+
+        // 4. Saturated pipeline: probe shrinking (accepted only if no
+        //    worse than the margin — frees host resources at equal speed).
+        if stall < STALL_LOW {
+            if k.prefetch_depth > 1 && !self.blocked_step(Axis::PrefetchDepth, -1) {
+                let next = k.prefetch_depth - 1;
+                return Some(Trial {
+                    axis: Axis::PrefetchDepth,
+                    dir: -1,
+                    knobs: Knobs { prefetch_depth: next, ..k },
+                    action: format!("prefetch_depth {} -> {}", k.prefetch_depth, next),
+                });
+            }
+            if k.host_threads > 1 && !self.blocked_step(Axis::HostThreads, -1) {
+                let next = k.host_threads / 2;
+                return Some(Trial {
+                    axis: Axis::HostThreads,
+                    dir: -1,
+                    knobs: Knobs { host_threads: next, ..k },
+                    action: format!("host_threads {} -> {}", k.host_threads, next),
+                });
+            }
+        }
+
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> Knobs {
+        Knobs {
+            host_threads: 1,
+            prefetch_depth: 1,
+            sched: SchedMode::BatchCount,
+            cache_ratio: 0.2,
+        }
+    }
+
+    fn obs(wall: f64, makespan: f64, prep_stall: f64) -> EpochObservation {
+        EpochObservation {
+            wall_seconds: wall,
+            modeled_makespan_seconds: makespan,
+            prep_stall_seconds: prep_stall,
+            execute_stall_seconds: 0.0,
+            beta: 0.8,
+            cache_hit_rate: 0.5,
+        }
+    }
+
+    #[test]
+    fn mode_parses_and_round_trips() {
+        for m in AutoTuneMode::ALL {
+            assert_eq!(AutoTuneMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(AutoTuneMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn freeze_never_changes_knobs() {
+        let mut t = AutoTuner::new(AutoTuneMode::Freeze, knobs(), false);
+        for e in 0..5 {
+            let d = t.observe(e, &obs(1.0 - 0.1 * e as f64, 0.5, 0.9));
+            assert_eq!(d.outcome, "freeze");
+            assert_eq!(d.action, "hold");
+            assert_eq!(d.knobs, knobs());
+        }
+    }
+
+    #[test]
+    fn sched_flip_is_trialed_first_and_accepted_on_improvement() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false);
+        let d0 = t.observe(0, &obs(1.0, 1.0, 0.0));
+        assert_eq!(d0.outcome, "baseline");
+        assert_eq!(d0.action, "sched batch-count -> cost");
+        assert_eq!(d0.knobs.sched, SchedMode::Cost);
+        // the flip shrinks the modeled makespan → accept
+        let d1 = t.observe(1, &obs(1.0, 0.7, 0.0));
+        assert_eq!(d1.outcome, "accept");
+        assert_eq!(t.current.sched, SchedMode::Cost);
+    }
+
+    #[test]
+    fn regressing_step_is_reverted_and_blocked() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        // prep-bound baseline → proposes host_threads 1 -> 2
+        let d0 = t.observe(0, &obs(1.0, 0.1, 0.5));
+        assert_eq!(d0.action, "host_threads 1 -> 2");
+        // trial regresses → revert, axis+direction blocked, no new trial
+        // until the restored baseline has been re-measured
+        let d1 = t.observe(1, &obs(1.3, 0.1, 0.5));
+        assert_eq!(d1.outcome, "revert");
+        assert_eq!(d1.action, "hold");
+        assert_eq!(d1.knobs.host_threads, 1);
+        // still prep-bound, but host-threads growth is blocked → prefetch
+        let d2 = t.observe(2, &obs(1.0, 0.1, 0.5));
+        assert_eq!(d2.outcome, "baseline");
+        assert_eq!(d2.action, "prefetch_depth 1 -> 2");
+    }
+
+    #[test]
+    fn prior_skips_the_useless_sched_flip() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        let d0 = t.observe(0, &obs(1.0, 0.1, 0.5));
+        assert!(d0.action.starts_with("host_threads"), "{}", d0.action);
+    }
+
+    #[test]
+    fn climbs_to_cap_then_quiesces() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        // every grow step wins big and stays prep-bound: 1→2→4→8, capped
+        let mut wall = 2.0;
+        let mut d = t.observe(0, &obs(wall, 0.1, wall * 0.8));
+        for e in 1..4 {
+            wall *= 0.6;
+            d = t.observe(e, &obs(wall, 0.1, wall * 0.8));
+            assert_eq!(d.outcome, "accept");
+        }
+        assert_eq!(t.current.host_threads, 8);
+        // still prep-bound but the axis is capped → prefetch grows next
+        assert_eq!(d.action, "prefetch_depth 1 -> 2");
+    }
+
+    #[test]
+    fn shrink_probe_accepts_on_equal_score() {
+        let start = Knobs { host_threads: 4, prefetch_depth: 2, ..knobs() };
+        let mut t = AutoTuner::new(AutoTuneMode::On, start, false)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        // saturated pipeline (no prep stall) → shrink prefetch first
+        let d0 = t.observe(0, &obs(1.0, 0.1, 0.0));
+        assert_eq!(d0.action, "prefetch_depth 2 -> 1");
+        // equal score → accepted (frees resources at no cost)
+        let d1 = t.observe(1, &obs(1.0, 0.1, 0.0));
+        assert_eq!(d1.outcome, "accept");
+        assert_eq!(t.current.prefetch_depth, 1);
+    }
+
+    #[test]
+    fn cache_axis_only_moves_for_dynamic_policies() {
+        let sat = |t: &mut AutoTuner, e| t.observe(e, &obs(1.0, 0.1, 0.02));
+        let mut s = AutoTuner::new(AutoTuneMode::On, knobs(), false)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        let d = sat(&mut s, 0);
+        assert_eq!(d.action, "hold", "static cache policy must not move cache_ratio");
+        let mut dynp = AutoTuner::new(AutoTuneMode::On, knobs(), true)
+            .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
+        let d = sat(&mut dynp, 0);
+        assert_eq!(d.action, "cache_ratio 0.20 -> 0.25");
+    }
+
+    #[test]
+    fn decision_serialises() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false);
+        let d = t.observe(0, &obs(1.0, 0.5, 0.0));
+        let j = d.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.req_str("outcome").unwrap(), "baseline");
+        assert!(parsed.get("knobs").unwrap().get("sched").is_some());
+        assert!((parsed.req_f64("score_s").unwrap() - 1.5).abs() < 1e-12);
+    }
+}

@@ -4,10 +4,74 @@
 //! [`Bench::new`] and registers closures via [`Bench::measure`], or prints
 //! analytic tables directly. Timing methodology: warmup runs, then `iters`
 //! timed runs; report median + IQR, following criterion's spirit.
+//!
+//! Two cross-cutting services live here so every bench behaves uniformly:
+//!
+//! - **Quick mode** — [`quick`] / [`env_knob`] give all benches one
+//!   interpretation of `HITGNN_BENCH_QUICK`: when it is set, iteration
+//!   counts, graph scale shifts, and batch counts fall back to small
+//!   smoke-run defaults unless explicitly overridden. CI uses this to run
+//!   the full bench matrix in seconds.
+//! - **Machine-readable output** — a [`BenchSuite`] collects every
+//!   [`Bench`]'s measurement table (plus derived throughput lines) and
+//!   writes it as `BENCH_<area>.json` (schema `hitgnn-bench-v1`, see
+//!   `bench/compare.py`), so perf trajectories diff across commits
+//!   without scraping stdout.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
+
+/// True when `HITGNN_BENCH_QUICK` is set (any value): benches shrink
+/// their workloads to smoke-run scale.
+pub fn quick() -> bool {
+    std::env::var_os("HITGNN_BENCH_QUICK").is_some()
+}
+
+/// Resolve a numeric bench knob from the environment with distinct
+/// full-run and quick-run defaults. Unparseable values warn and fall back
+/// to the applicable default instead of being silently swallowed.
+pub fn env_knob(var: &str, full_default: usize, quick_default: usize) -> usize {
+    let default = if quick() { quick_default } else { full_default };
+    parse_knob(var, std::env::var(var).ok().as_deref(), default)
+}
+
+fn parse_knob(var: &str, raw: Option<&str>, default: usize) -> usize {
+    match raw {
+        None => default,
+        Some(s) => match s.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("warning: ignoring unparseable {var}={s:?}; using {default}");
+                default
+            }
+        },
+    }
+}
+
+/// The current git revision for bench provenance: `git rev-parse --short
+/// HEAD`, falling back to `HITGNN_GIT_REV`, then `"unknown"` (benches
+/// must run outside a checkout too, e.g. from an unpacked artifact).
+pub fn git_rev() -> String {
+    let git = std::process::Command::new("git").args(["rev-parse", "--short", "HEAD"]).output();
+    if let Ok(out) = git {
+        if out.status.success() {
+            let rev = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !rev.is_empty() {
+                return rev;
+            }
+        }
+    }
+    std::env::var("HITGNN_GIT_REV").unwrap_or_else(|_| "unknown".to_string())
+}
+
+/// Directory BENCH_*.json files are written to (`HITGNN_BENCH_OUT`,
+/// default the working directory).
+pub fn out_dir() -> PathBuf {
+    PathBuf::from(std::env::var("HITGNN_BENCH_OUT").unwrap_or_else(|_| ".".to_string()))
+}
 
 /// One measured result.
 #[derive(Clone, Debug)]
@@ -19,27 +83,54 @@ pub struct Measurement {
     pub iters: usize,
 }
 
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("median_s", Json::num(self.median_s)),
+            ("p25_s", Json::num(self.p25_s)),
+            ("p75_s", Json::num(self.p75_s)),
+            ("iters", Json::num(self.iters as f64)),
+        ])
+    }
+}
+
+/// A derived rate (e.g. NVTPS) computed from a measurement.
+#[derive(Clone, Debug)]
+pub struct Derived {
+    pub name: String,
+    pub per_s: f64,
+    pub unit: String,
+}
+
 /// Bench context: collects measurements and prints a uniform report.
 pub struct Bench {
     title: String,
     warmup: usize,
     iters: usize,
     results: Vec<Measurement>,
+    derived: Vec<Derived>,
 }
 
 impl Bench {
     pub fn new(title: &str) -> Bench {
-        // Allow quick runs via env (used by `make test` smoke paths).
-        let iters = std::env::var("HITGNN_BENCH_ITERS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(10);
-        let warmup = std::env::var("HITGNN_BENCH_WARMUP")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(3);
+        // Allow quick runs via env (used by `make test` smoke paths and
+        // the CI trajectory job). `iters` is clamped to >= 1 — a zero
+        // sample count would make median/IQR undefined.
+        let iters = env_knob("HITGNN_BENCH_ITERS", 10, 3).max(1);
+        let warmup = env_knob("HITGNN_BENCH_WARMUP", 3, 1);
         println!("\n=== bench: {title} (warmup={warmup}, iters={iters}) ===");
-        Bench { title: title.to_string(), warmup, iters, results: Vec::new() }
+        Bench { title: title.to_string(), warmup, iters, results: Vec::new(), derived: Vec::new() }
+    }
+
+    /// The configured timed-repetition count (for callers that collect
+    /// their own samples and report them via [`Bench::record`]).
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    pub fn warmup(&self) -> usize {
+        self.warmup
     }
 
     /// Time `f`, which receives the iteration index and must return some
@@ -54,12 +145,21 @@ impl Bench {
             black_box(f(i));
             samples.push(t0.elapsed().as_secs_f64());
         }
+        self.record(name, &samples)
+    }
+
+    /// Record a measurement from externally-collected samples (seconds) —
+    /// for benches whose timed quantity is reported by the workload
+    /// itself (e.g. an epoch wall clock measured inside the trainer,
+    /// excluding setup).
+    pub fn record(&mut self, name: &str, samples: &[f64]) -> &Measurement {
+        assert!(!samples.is_empty(), "record needs at least one sample");
         let m = Measurement {
             name: name.to_string(),
-            median_s: stats::median(&samples),
-            p25_s: stats::percentile(&samples, 0.25),
-            p75_s: stats::percentile(&samples, 0.75),
-            iters: self.iters,
+            median_s: stats::median(samples),
+            p25_s: stats::percentile(samples, 0.25),
+            p75_s: stats::percentile(samples, 0.75),
+            iters: samples.len(),
         };
         println!(
             "  {:<44} {:>12} [{} .. {}]",
@@ -72,21 +172,108 @@ impl Bench {
         self.results.last().unwrap()
     }
 
-    /// Emit a throughput line derived from a prior measurement.
-    pub fn throughput(&self, name: &str, units: f64, median_s: f64, unit_name: &str) {
-        println!(
-            "  {:<44} {:>12} {unit_name}/s",
-            name,
-            stats::si(units / median_s)
-        );
+    /// Emit (and record) a throughput line derived from a prior
+    /// measurement.
+    pub fn throughput(&mut self, name: &str, units: f64, median_s: f64, unit_name: &str) {
+        let per_s = units / median_s;
+        println!("  {:<44} {:>12} {unit_name}/s", name, stats::si(per_s));
+        self.derived.push(Derived {
+            name: name.to_string(),
+            per_s,
+            unit: unit_name.to_string(),
+        });
     }
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
 
+    /// This bench's entry in the `hitgnn-bench-v1` report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("warmup", Json::num(self.warmup as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            (
+                "measurements",
+                Json::arr(self.results.iter().map(Measurement::to_json).collect()),
+            ),
+            (
+                "derived",
+                Json::arr(
+                    self.derived
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("name", Json::str(&d.name)),
+                                ("per_s", Json::num(d.per_s)),
+                                ("unit", Json::str(&d.unit)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
     pub fn finish(self) {
         println!("=== end bench: {} ===", self.title);
+    }
+}
+
+/// Collector for one BENCH_<area>.json perf-trajectory file.
+///
+/// Schema (`hitgnn-bench-v1`): `{schema, area, git_rev, quick,
+/// benches: [Bench::to_json()...]}` plus any extra top-level sections
+/// added via [`BenchSuite::extra`] (e.g. the auto-tune trajectory).
+/// `bench/compare.py` diffs the `benches` measurements between two such
+/// files.
+pub struct BenchSuite {
+    area: String,
+    benches: Vec<Json>,
+    extras: Vec<(String, Json)>,
+}
+
+impl BenchSuite {
+    pub fn new(area: &str) -> BenchSuite {
+        BenchSuite { area: area.to_string(), benches: Vec::new(), extras: Vec::new() }
+    }
+
+    /// Record a finished bench's measurement table. Call after the last
+    /// `measure`/`throughput` on it (before `finish`, which consumes it).
+    pub fn add(&mut self, bench: &Bench) {
+        self.benches.push(bench.to_json());
+    }
+
+    /// Attach an extra top-level section (ignored by the generic
+    /// measurement differ, but part of the trajectory record).
+    pub fn extra(&mut self, key: &str, value: Json) {
+        self.extras.push((key.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schema", Json::str("hitgnn-bench-v1")),
+            ("area", Json::str(&self.area)),
+            ("git_rev", Json::str(git_rev())),
+            ("quick", Json::Bool(quick())),
+            ("benches", Json::arr(self.benches.clone())),
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), v.clone()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Write `BENCH_<area>.json` under `dir` and return the path.
+    pub fn write(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.area));
+        std::fs::write(&path, self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+        Ok(path)
     }
 }
 
@@ -156,6 +343,68 @@ mod tests {
         assert!(m.median_s > 0.0);
         std::env::remove_var("HITGNN_BENCH_ITERS");
         std::env::remove_var("HITGNN_BENCH_WARMUP");
+    }
+
+    #[test]
+    fn knob_parser_handles_garbage_and_absence() {
+        assert_eq!(parse_knob("X", None, 10), 10);
+        assert_eq!(parse_knob("X", Some("7"), 10), 7);
+        assert_eq!(parse_knob("X", Some("0"), 10), 0); // clamp is the caller's
+        assert_eq!(parse_knob("X", Some("seven"), 10), 10);
+        assert_eq!(parse_knob("X", Some(""), 10), 10);
+        assert_eq!(parse_knob("X", Some("-3"), 10), 10);
+        // Bench::new clamps iters to >= 1 so the median is always over a
+        // non-empty sample set (regression test for ITERS=0 panicking in
+        // stats::percentile).
+        assert_eq!(parse_knob("HITGNN_BENCH_ITERS", Some("0"), 10).max(1), 1);
+    }
+
+    #[test]
+    fn bench_report_serialises_measurements_and_derived() {
+        let mut b = Bench {
+            title: "t".into(),
+            warmup: 0,
+            iters: 2,
+            results: Vec::new(),
+            derived: Vec::new(),
+        };
+        b.measure("noop", |i| i);
+        b.throughput("rate", 100.0, 0.5, "V");
+        let j = b.to_json();
+        assert_eq!(j.req_str("title").unwrap(), "t");
+        let ms = j.req("measurements").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].req_str("name").unwrap(), "noop");
+        assert_eq!(ms[0].req_usize("iters").unwrap(), 2);
+        let ds = j.req("derived").unwrap().as_arr().unwrap();
+        assert_eq!(ds.len(), 1);
+        assert!((ds[0].req_f64("per_s").unwrap() - 200.0).abs() < 1e-9);
+        assert_eq!(ds[0].req_str("unit").unwrap(), "V");
+    }
+
+    #[test]
+    fn suite_writes_schema_v1_file() {
+        let mut suite = BenchSuite::new("unit_suite");
+        let mut b = Bench {
+            title: "t".into(),
+            warmup: 0,
+            iters: 1,
+            results: Vec::new(),
+            derived: Vec::new(),
+        };
+        b.measure("noop", |i| i);
+        suite.add(&b);
+        suite.extra("note", Json::str("hello"));
+        let dir = std::env::temp_dir().join(format!("hitgnn_bench_suite_{}", std::process::id()));
+        let path = suite.write(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit_suite.json");
+        let back = Json::from_file(&path).unwrap();
+        assert_eq!(back.req_str("schema").unwrap(), "hitgnn-bench-v1");
+        assert_eq!(back.req_str("area").unwrap(), "unit_suite");
+        assert!(!back.req_str("git_rev").unwrap().is_empty());
+        assert_eq!(back.req("benches").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(back.req_str("note").unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -10,6 +10,7 @@ use hitgnn::fpga::parse_fleet;
 use hitgnn::partition::Algorithm;
 use hitgnn::sched::SchedMode;
 use hitgnn::store::CachePolicy;
+use hitgnn::tune::AutoTuneMode;
 
 fn base_cfg() -> TrainConfig {
     TrainConfig {
@@ -211,6 +212,52 @@ fn determinism_holds_at_depth_three_across_pipeline_and_sched() {
     assert_eq!(per_mode[0].0, per_mode[1].0, "sched modes must pair bit-identically at L=3");
     assert_eq!(per_mode[0].2, per_mode[1].2);
     assert_eq!(per_mode[0].3, per_mode[1].3);
+}
+
+#[test]
+fn auto_tuner_preserves_loss_sequence_at_depth_two_and_three() {
+    // ISSUE 6 acceptance: the closed-loop controller only moves
+    // loss-invariant knobs (host-threads, prefetch-depth, sched,
+    // cache-ratio) at epoch boundaries, so `--auto-tune on` must produce
+    // a bit-identical per-iteration loss sequence to `freeze` (observe /
+    // log, never retune) and `off`. Heterogeneous fleet and enough
+    // epochs that the controller actually takes steps; traffic may move
+    // (sched flips re-split bytes across devices) but work may not.
+    for fanouts in [None, Some(vec![3usize, 2, 2])] {
+        let cfg_for = |mode: AutoTuneMode| {
+            let mut c = base_cfg();
+            c.fanouts = fanouts.clone();
+            c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+            c.epochs = 5;
+            c.auto_tune = mode;
+            c
+        };
+        let run_mode = |mode: AutoTuneMode| {
+            let mut t = Trainer::new(cfg_for(mode)).unwrap();
+            let r = t.run().unwrap();
+            t.shutdown();
+            r
+        };
+        let frozen = run_mode(AutoTuneMode::Freeze);
+        let tuned = run_mode(AutoTuneMode::On);
+        let off = run_mode(AutoTuneMode::Off);
+        let losses = |r: &hitgnn::coordinator::TrainReport| -> Vec<f64> {
+            r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect()
+        };
+        let base = losses(&frozen);
+        assert!(!base.is_empty(), "no iterations recorded");
+        assert!(base.iter().all(|l| l.is_finite()));
+        assert_eq!(base, losses(&tuned), "fanouts={fanouts:?}: auto-tune on diverged from freeze");
+        assert_eq!(base, losses(&off), "fanouts={fanouts:?}: freeze diverged from off");
+        for (a, b) in frozen.epochs.iter().zip(tuned.epochs.iter()) {
+            assert_eq!(a.batches, b.batches, "fanouts={fanouts:?}: batch count moved");
+            assert_eq!(a.iterations, b.iterations, "fanouts={fanouts:?}: iteration count moved");
+        }
+        // both controller modes log a decision every epoch; off logs none
+        assert!(tuned.epochs.iter().all(|e| e.tune.is_some()));
+        assert!(frozen.epochs.iter().all(|e| e.tune.is_some()));
+        assert!(off.epochs.iter().all(|e| e.tune.is_none()));
+    }
 }
 
 #[test]
