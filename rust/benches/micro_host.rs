@@ -111,26 +111,34 @@ fn main() {
     pipeline_sweep();
 }
 
-/// Kernel sweep (ISSUE 5 acceptance): per-batch reference-executor
-/// train-step latency, scalar oracle vs blocked/workspace path, at the
-/// default 2-layer [25, 10] and 3-layer [9, 5, 4] fanout shapes (B=256,
-/// real sampled batches on the bundled tiny dataset). Asserts the blocked
-/// executor delivers ≥ 2× the scalar throughput, then reports the
-/// sampler+gather steady-state allocation count (0 with the buffer-pooled
-/// hot path; measured exactly when built with `--features alloc-count`).
+/// Kernel sweep (ISSUE 5 + ISSUE 7 acceptance): per-batch
+/// reference-executor train-step latency — scalar oracle vs the blocked
+/// portable path vs the AVX2+FMA SIMD tier — at the default 2-layer
+/// [25, 10] and 3-layer [9, 5, 4] fanout shapes (B=256, real sampled
+/// batches on the bundled tiny dataset). The dispatcher resolves to SIMD
+/// by default where supported, so each column pins the tier explicitly
+/// via `kernels::set_tier`. Asserts blocked ≥ 2× scalar and (where
+/// AVX2+FMA is detected) SIMD ≥ 1.5× blocked, then reports the
+/// steady-state allocation counts (0 with the pooled hot path; measured
+/// exactly when built with `--features alloc-count`).
 fn kernel_sweep() {
     use hitgnn::coordinator::params::ParamSet;
+    use hitgnn::runtime::kernels::{self, Tier};
     use hitgnn::runtime::manifest::synth_entry;
     use hitgnn::runtime::{BatchBuffers, RefModel};
 
-    println!("\n=== bench: kernel sweep (scalar vs blocked reference executor) ===");
+    println!("\n=== bench: kernel sweep (scalar vs blocked vs SIMD reference executor) ===");
     let data = datasets::lookup("tiny").unwrap().build(0, 17);
     let pre = preprocess(Algorithm::DistDgl, &data, 2, 0.2, 17);
     let svc = FeatureService::new(&data.features, CommConfig::default());
     let b_size = 256usize;
+    // the resolved tier honors both CPU detection and HITGNN_NO_SIMD
+    let entry_tier = kernels::active_tier();
+    let simd = entry_tier == Tier::Avx2Fma;
     let cases: [(&str, Vec<usize>); 2] =
         [("L=2 [25,10]", vec![25, 10]), ("L=3 [9,5,4]", vec![9, 5, 4])];
-    let mut t = Table::new(&["shape", "scalar (ms)", "blocked (ms)", "speedup"]);
+    let mut t =
+        Table::new(&["shape", "scalar (ms)", "blocked (ms)", "simd (ms)", "simd/blocked"]);
     for (label, fanouts) in cases {
         let entry = synth_entry(
             std::path::Path::new("/tmp"),
@@ -158,26 +166,54 @@ fn kernel_sweep() {
                 black_box(model.train_step_scalar(&params, &batch).unwrap())
             })
             .median_s;
+        assert!(kernels::set_tier(Tier::Blocked), "blocked tier always available");
         let blocked_s = bench
             .measure("blocked train_step", |_| {
                 black_box(model.train_step(&params, &batch).unwrap())
             })
             .median_s;
+        let simd_s = if simd {
+            assert!(kernels::set_tier(Tier::Avx2Fma), "detected SIMD tier refused");
+            Some(
+                bench
+                    .measure("simd train_step", |_| {
+                        black_box(model.train_step(&params, &batch).unwrap())
+                    })
+                    .median_s,
+            )
+        } else {
+            None
+        };
         bench.finish();
         let speedup = scalar_s / blocked_s;
+        let simd_ratio = simd_s.map(|s| blocked_s / s);
         t.row(&[
             label.to_string(),
             format!("{:.3}", scalar_s * 1e3),
             format!("{:.3}", blocked_s * 1e3),
-            format!("{speedup:.2}x"),
+            simd_s.map_or("n/a".into(), |s| format!("{:.3}", s * 1e3)),
+            simd_ratio.map_or("n/a".into(), |r| format!("{r:.2}x")),
         ]);
         assert!(
             speedup >= 2.0,
             "{label}: blocked executor must be ≥2x the scalar path (got {speedup:.2}x)"
         );
+        if let Some(r) = simd_ratio {
+            assert!(
+                r >= 1.5,
+                "{label}: SIMD tier must be ≥1.5x the blocked path (got {r:.2}x)"
+            );
+        }
     }
+    // restore whatever tier the process entered with
+    assert!(kernels::set_tier(entry_tier));
     t.print();
-    println!("  blocked reference executor ≥2x over the scalar oracle on every shape ✓");
+    println!("  blocked ≥2x scalar on every shape ✓");
+    if simd {
+        println!("  AVX2+FMA tier ≥1.5x blocked on every shape ✓");
+    } else {
+        println!("  SIMD column skipped (AVX2+FMA unavailable or HITGNN_NO_SIMD set)");
+    }
     alloc_report(&data, &pre);
     println!("=== end bench: kernel sweep ===");
 }
@@ -206,12 +242,20 @@ fn alloc_report(data: &hitgnn::graph::Dataset, pre: &hitgnn::partition::Preproce
         allocs as f64 / iters as f64
     );
     assert_eq!(allocs, 0, "sampler+gather steady state must be allocation-free");
+    // ISSUE 7: the whole iteration, gradients and fused sync included
+    let iters = 16usize;
+    let allocs = hitgnn::coordinator::audit::audit_full_iteration_allocs(2, 4, iters);
+    println!(
+        "  full-iteration steady-state allocations/iteration: {} ({allocs} over {iters} iters)",
+        allocs as f64 / iters as f64
+    );
+    assert_eq!(allocs, 0, "full training iteration steady state must be allocation-free");
 }
 
 #[cfg(not(feature = "alloc-count"))]
 fn alloc_report(_data: &hitgnn::graph::Dataset, _pre: &hitgnn::partition::Preprocessed) {
     println!(
-        "  sampler+gather steady-state allocations/iteration: rebuild with \
+        "  sampler+gather / full-iteration steady-state allocations: rebuild with \
          --features alloc-count to measure (asserted 0 in tests/alloc_steady_state.rs)"
     );
 }

@@ -1,12 +1,19 @@
 //! Perf-trajectory harness: the canonical machine-readable benchmark run.
 //!
-//! Emits three `hitgnn-bench-v1` JSON files (into `HITGNN_BENCH_OUT`,
+//! Emits four `hitgnn-bench-v1` JSON files (into `HITGNN_BENCH_OUT`,
 //! default the working directory; see `bench/compare.py` for diffing):
 //!
 //! - `BENCH_host.json`    — host-pipeline epoch wall clock over the
 //!   (host-threads × prefetch-depth) grid, plus measured NVTPS.
-//! - `BENCH_kernels.json` — scalar vs blocked reference-executor
-//!   train-step latency at L ∈ {2, 3}.
+//! - `BENCH_kernels.json` — scalar vs blocked vs AVX2+FMA SIMD
+//!   reference-executor train-step latency at L ∈ {2, 3} (the SIMD rows
+//!   appear only where the tier is available and not disabled via
+//!   `HITGNN_NO_SIMD`).
+//! - `BENCH_sync.json`    — the gradient-sync tail: serial
+//!   `average_grads` + `Sgd::step` baseline vs the fused
+//!   `GradReducer::reduce` + `Sgd::step_fused` path at 1 and N reduction
+//!   threads, on a ~1M-element synthetic parameter set, plus the
+//!   pooled-vs-unpooled (`--no-pool`) gradient-buffer ablation.
 //! - `BENCH_tune.json`    — the closed-loop auto-tune acceptance sweep: a
 //!   hand-swept static (host-threads × prefetch-depth × sched) grid on a
 //!   `u250:2,u250-half:2` fleet vs an 8-epoch `--auto-tune on` trajectory
@@ -29,6 +36,7 @@ fn main() {
     let out = bench::out_dir();
     host_suite(&out).expect("host suite");
     kernels_suite(&out).expect("kernels suite");
+    sync_suite(&out).expect("sync suite");
     tune_suite(&out).expect("tune suite");
 }
 
@@ -80,14 +88,17 @@ fn host_suite(out: &std::path::Path) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// BENCH_kernels.json: scalar vs blocked reference-executor train step
-/// (same protocol as the micro_host kernel sweep, minus the assertions —
-/// this file is for trajectory diffing, not acceptance).
+/// BENCH_kernels.json: scalar vs blocked vs SIMD reference-executor
+/// train step (same protocol as the micro_host kernel sweep, minus the
+/// assertions — this file is for trajectory diffing, not acceptance).
+/// The dispatcher resolves to SIMD by default where supported, so each
+/// column pins the tier explicitly via `kernels::set_tier`.
 fn kernels_suite(out: &std::path::Path) -> anyhow::Result<()> {
     use hitgnn::comm::{CommConfig, FeatureService};
     use hitgnn::coordinator::params::ParamSet;
     use hitgnn::graph::datasets;
     use hitgnn::partition::preprocess;
+    use hitgnn::runtime::kernels::{self, Tier};
     use hitgnn::runtime::manifest::synth_entry;
     use hitgnn::runtime::{BatchBuffers, RefModel};
     use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
@@ -97,6 +108,16 @@ fn kernels_suite(out: &std::path::Path) -> anyhow::Result<()> {
     let pre = preprocess(Algorithm::DistDgl, &data, 2, 0.2, 17);
     let svc = FeatureService::new(&data.features, CommConfig::default());
     let b_size = 256usize;
+    // the resolved tier honors both CPU detection and HITGNN_NO_SIMD
+    let entry_tier = kernels::active_tier();
+    let simd = entry_tier == Tier::Avx2Fma;
+    suite.extra(
+        "kernel_dispatch",
+        Json::obj(vec![
+            ("resolved_tier", Json::str(entry_tier.name())),
+            ("simd_column", Json::Bool(simd)),
+        ]),
+    );
     let cases: Vec<(&str, Vec<usize>)> = if bench::quick() {
         vec![("L=2 [25,10]", vec![25, 10])]
     } else {
@@ -129,22 +150,183 @@ fn kernels_suite(out: &std::path::Path) -> anyhow::Result<()> {
                 black_box(model.train_step_scalar(&params, &batch).unwrap())
             })
             .median_s;
+        assert!(kernels::set_tier(Tier::Blocked));
         let blocked_s = bk
             .measure(&format!("blocked train_step {label}"), |_| {
                 black_box(model.train_step(&params, &batch).unwrap())
             })
             .median_s;
+        let simd_s = if simd {
+            assert!(kernels::set_tier(Tier::Avx2Fma));
+            Some(
+                bk.measure(&format!("simd train_step {label}"), |_| {
+                    black_box(model.train_step(&params, &batch).unwrap())
+                })
+                .median_s,
+            )
+        } else {
+            None
+        };
+        assert!(kernels::set_tier(entry_tier));
         bk.throughput(
             &format!("blocked throughput {label}"),
             mb.vertices_traversed() as f64,
             blocked_s,
             "vertices",
         );
-        println!("  speedup {label}: {:.2}x", scalar_s / blocked_s);
+        println!("  speedup {label}: blocked {:.2}x over scalar", scalar_s / blocked_s);
+        if let Some(s) = simd_s {
+            println!("  speedup {label}: simd {:.2}x over blocked", blocked_s / s);
+        }
         suite.add(&bk);
         bk.finish();
     }
     suite.write(out)?;
+    Ok(())
+}
+
+/// BENCH_sync.json: the gradient-synchronisation tail in isolation
+/// (ISSUE 7 acceptance). A synthetic ~1M-element parameter set and p = 4
+/// worker gradients; three sync implementations over the same inputs:
+///
+/// - `serial_average` — the seed's `average_grads` + `Sgd::step`
+///   (allocates a fresh averaged gradient every call);
+/// - `fused t=1`      — `GradReducer::reduce` (serial path) +
+///   `Sgd::step_fused` (zero-alloc);
+/// - `fused t=N`      — the scoped-thread reduce at N = min(4, cores).
+///
+/// Asserts the parallel fused path is ≥ 2× the serial baseline — gated
+/// on ≥ 4 available cores and skipped under `HITGNN_BENCH_QUICK`
+/// (single-run CI boxes are too noisy for a tight ratio assert).
+fn sync_suite(out: &std::path::Path) -> anyhow::Result<()> {
+    use hitgnn::coordinator::params::{average_grads, GradReducer, ParamSet, Sgd};
+    use hitgnn::runtime::GradBuffers;
+    use hitgnn::util::rng::Rng;
+
+    let quick = bench::quick();
+    // ~1.08M elements: two conv layers + biases at paper-ish widths
+    let shapes: Vec<Vec<usize>> =
+        vec![vec![602, 1024], vec![1024], vec![1024, 441], vec![441]];
+    let mut rng = Rng::new(29);
+    let data: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            (0..n).map(|_| rng.f32() - 0.5).collect()
+        })
+        .collect();
+    let names = (0..shapes.len()).map(|i| format!("p{i}")).collect();
+    let params = ParamSet { names, shapes, data };
+    let workers = 4usize;
+    let grads: Vec<GradBuffers> = (0..workers)
+        .map(|_| {
+            params
+                .data
+                .iter()
+                .map(|d| d.iter().map(|_| rng.f32() - 0.5).collect())
+                .collect::<Vec<Vec<f32>>>()
+                .into()
+        })
+        .collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let par_threads = cores.min(4);
+
+    let mut suite = BenchSuite::new("sync");
+    let mut b = Bench::new("grad_sync");
+    let serial_s = {
+        let mut p = params.clone();
+        let mut opt = Sgd::new(0.1, 0.9, &p);
+        b.measure("serial_average p=4", |_| {
+            let avg = average_grads(&grads);
+            opt.step(&mut p, &avg);
+            black_box(p.data[0][0])
+        })
+        .median_s
+    };
+    let fused_serial_s = {
+        let mut p = params.clone();
+        let mut opt = Sgd::new(0.1, 0.9, &p);
+        let mut red = GradReducer::new(&params, 1);
+        b.measure("fused reduce+step t=1 p=4", |_| {
+            red.reduce(&grads);
+            opt.step_fused(&mut p, red.acc(), workers);
+            black_box(p.data[0][0])
+        })
+        .median_s
+    };
+    let fused_par_s = {
+        let mut p = params.clone();
+        let mut opt = Sgd::new(0.1, 0.9, &p);
+        let mut red = GradReducer::new(&params, par_threads);
+        b.measure(&format!("fused reduce+step t={par_threads} p=4"), |_| {
+            red.reduce(&grads);
+            opt.step_fused(&mut p, red.acc(), workers);
+            black_box(p.data[0][0])
+        })
+        .median_s
+    };
+    let fused_gain = serial_s / fused_par_s;
+    println!(
+        "  grad sync ({} elems, p=4): serial {:.3} ms | fused t=1 {:.3} ms | fused t={} {:.3} ms \
+         ({fused_gain:.2}x over serial)",
+        params.num_elems(),
+        serial_s * 1e3,
+        fused_serial_s * 1e3,
+        par_threads,
+        fused_par_s * 1e3,
+    );
+    suite.extra(
+        "sync",
+        Json::obj(vec![
+            ("param_elems", Json::num(params.num_elems() as f64)),
+            ("workers", Json::num(workers as f64)),
+            ("reduce_threads", Json::num(par_threads as f64)),
+            ("serial_average_s", Json::num(serial_s)),
+            ("fused_serial_s", Json::num(fused_serial_s)),
+            ("fused_parallel_s", Json::num(fused_par_s)),
+            ("fused_gain_vs_serial", Json::num(fused_gain)),
+        ]),
+    );
+
+    // pooled vs unpooled gradient buffers through the real trainer
+    // (the --no-pool ablation also re-allocates batch buffers, so this
+    // measures the whole carcass-recycling story end to end)
+    let pool_cfg = |pool: bool| TrainConfig {
+        dataset: "tiny".into(),
+        model: "gcn".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 4,
+        epochs: 2,
+        scale_shift: 0,
+        seed: 11,
+        host_threads: 4,
+        prefetch_depth: 2,
+        buffer_pool: pool,
+        max_iterations: if quick { Some(6) } else { None },
+        ..TrainConfig::default()
+    };
+    for pool in [true, false] {
+        let mut samples = Vec::with_capacity(b.iters());
+        for _ in 0..b.iters() {
+            let mut tr = Trainer::new(pool_cfg(pool))?;
+            let report = tr.run()?;
+            samples.push(report.epochs.last().expect("two epochs").wall_seconds);
+            tr.shutdown();
+        }
+        b.record(&format!("epoch_wall pool={pool}"), &samples);
+    }
+
+    suite.add(&b);
+    b.finish();
+    suite.write(out)?;
+    if !quick && cores >= 4 {
+        assert!(
+            fused_gain >= 2.0,
+            "parallel fused gradient sync must be ≥2x the serial average_grads baseline \
+             at p=4 (got {fused_gain:.2}x over {:.3} ms)",
+            serial_s * 1e3
+        );
+    }
     Ok(())
 }
 

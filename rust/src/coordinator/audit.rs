@@ -1,0 +1,119 @@
+//! Full-iteration steady-state allocation audit (ISSUE 7 acceptance,
+//! feature `alloc-count`).
+//!
+//! Extends the sampler+gather audit (`comm::audit_sampler_gather_allocs`)
+//! to the *whole* training iteration: sample → feature gather → batch
+//! assembly → p reference train steps into recycled [`GradBuffers`] →
+//! [`GradReducer::reduce`] → [`Sgd::step_fused`]. After warm-up the
+//! entire loop must perform **zero** heap allocations per iteration. One
+//! protocol, two consumers — `tests/alloc_steady_state.rs` asserts on it
+//! and the `micro_host` kernel sweep reports it — so the audit can never
+//! drift between CI and the bench.
+//!
+//! The reduction deliberately runs its serial path: tiny's parameter set
+//! sits far below [`PAR_MIN_ELEMS`], and `std::thread::scope` spawns
+//! allocate by design, so the scoped parallel path is outside the
+//! zero-allocation contract. What the audit pins is that the per-element
+//! work — summation, fused update, buffer recycling — never touches the
+//! heap.
+//!
+//! [`GradBuffers`]: crate::runtime::GradBuffers
+//! [`GradReducer::reduce`]: super::params::GradReducer::reduce
+//! [`Sgd::step_fused`]: super::params::Sgd::step_fused
+//! [`PAR_MIN_ELEMS`]: super::params::PAR_MIN_ELEMS
+
+/// Drive `iters` full training iterations (after `warmup` warm-up
+/// iterations) on the bundled tiny dataset with `num_fpgas` simulated
+/// workers, and return the heap-allocation event count of the measured
+/// window (the zero-allocation contract expects 0).
+pub fn audit_full_iteration_allocs(num_fpgas: usize, warmup: usize, iters: usize) -> u64 {
+    use crate::comm::{CommConfig, FeatureService};
+    use crate::coordinator::params::{GradReducer, ParamSet, Sgd};
+    use crate::graph::datasets;
+    use crate::partition::{preprocess, Algorithm};
+    use crate::runtime::manifest::synth_entry;
+    use crate::runtime::{BatchBuffers, GradBuffers, RefModel};
+    use crate::sampling::{FanoutConfig, MiniBatch, Sampler, WeightMode};
+    use crate::util::alloc::allocation_count;
+
+    /// One simulated-FPGA lane: its sampler, recycled batch carcasses,
+    /// reference executor, and recycled gradient buffers.
+    struct Lane {
+        sampler: Sampler,
+        mb: MiniBatch,
+        targets: Vec<u32>,
+        model: RefModel,
+        bufs: BatchBuffers,
+        grads: GradBuffers,
+    }
+
+    let b_size = 64usize;
+    let fanouts = [5usize, 3];
+    let data = datasets::lookup("tiny").expect("tiny dataset").build(0, 21);
+    let pre = preprocess(Algorithm::DistDgl, &data, num_fpgas, 0.2, 21);
+    let svc = FeatureService::new(&data.features, CommConfig::default());
+    let entry = synth_entry(
+        std::path::Path::new("/tmp"),
+        "train",
+        "gcn",
+        "tiny",
+        b_size,
+        &fanouts,
+        data.spec.dims,
+    );
+    let f0 = entry.dims.f0();
+    let mut params = ParamSet::init(&entry, 7);
+    let mut opt = Sgd::new(0.1, 0.9, &params);
+    // threads = 1: always the serial reduce path (see module docs)
+    let mut reducer = GradReducer::new(&params, 1);
+    let mut lanes: Vec<Lane> = (0..num_fpgas)
+        .map(|w| {
+            let cfg = FanoutConfig::new(b_size, &fanouts);
+            let sampler =
+                Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 9 + w as u64);
+            let mb = sampler.new_batch();
+            let take = pre.train_parts[w].len().min(b_size);
+            Lane {
+                mb,
+                targets: pre.train_parts[w][..take].to_vec(),
+                model: RefModel::new(&entry).expect("reference model"),
+                bufs: BatchBuffers::empty(),
+                grads: GradBuffers::empty(),
+                sampler,
+            }
+        })
+        .collect();
+    let mut grad_scratch: Vec<GradBuffers> = Vec::with_capacity(num_fpgas);
+
+    let mut before = 0u64;
+    for seq in 0..warmup + iters {
+        if seq == warmup {
+            before = allocation_count();
+        }
+        grad_scratch.clear();
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            lane.sampler.sample_into(&mut lane.mb, &data, &lane.targets, w, seq);
+            std::hint::black_box(svc.gather_into(
+                &lane.mb,
+                pre.stores[w].as_ref(),
+                pre.vertex_part.as_deref(),
+                w,
+                &mut lane.bufs.feat0,
+            ));
+            lane.bufs.fill_from(&lane.mb, f0);
+            let loss = lane
+                .model
+                .train_step_into(&params.data, &lane.bufs, &mut lane.grads)
+                .expect("train step");
+            std::hint::black_box(loss);
+            grad_scratch.push(std::mem::take(&mut lane.grads));
+        }
+        reducer.reduce(&grad_scratch);
+        opt.step_fused(&mut params, reducer.acc(), grad_scratch.len());
+        // hand the carcasses back, exactly like the trainer's grad pool
+        for (lane, g) in lanes.iter_mut().zip(grad_scratch.drain(..)) {
+            lane.grads = g;
+        }
+    }
+    allocation_count() - before
+}

@@ -55,9 +55,12 @@ TRAIN OPTIONS:
                                  iterations prepare ahead of the one
                                  executing (default 1 = serial)
     --prefetch                   legacy alias for --prefetch-depth 2 (§8)
-    --no-pool                    disable prepared-batch buffer recycling
+    --no-pool                    disable batch + gradient buffer recycling
                                  (debug/ablation; results are bit-identical
                                  either way)
+    --reduce-threads <n>         scoped threads for the gradient reduction
+                                 (default 4; 1 = serial; bit-identical at
+                                 any value)
     --auto-tune <on|off|freeze>  closed-loop epoch auto-tuning (DESIGN.md
                                  §Adaptive control): retunes host-threads,
                                  prefetch-depth, sched, and (dynamic

@@ -71,6 +71,11 @@ pub struct TrainConfig {
     /// Bounded prefetch window depth D: how many iterations may be in
     /// preparation ahead of the one executing (1 = no prefetch).
     pub prefetch_depth: usize,
+    /// Scoped threads for the gradient reduction (`--reduce-threads`,
+    /// DESIGN.md §SIMD dispatch & gradient sync). 1 = serial; any value
+    /// produces bit-identical losses (per-element sums stay in worker
+    /// tag order), so this knob is runtime-safe like `host_threads`.
+    pub reduce_threads: usize,
     /// Recycle consumed batch buffers back to the prep pool (the
     /// zero-allocation steady state, DESIGN.md §Hot-path memory &
     /// kernels). `--no-pool` disables it — the debug/ablation escape
@@ -113,6 +118,7 @@ impl Default for TrainConfig {
             prefetch: false,
             host_threads: 1,
             prefetch_depth: 1,
+            reduce_threads: 4,
             buffer_pool: true,
             auto_tune: AutoTuneMode::Off,
             seed: 42,
@@ -173,6 +179,7 @@ impl TrainConfig {
             prefetch: args.flag("prefetch"),
             host_threads: args.num("host-threads", d.host_threads)?,
             prefetch_depth: args.num("prefetch-depth", d.prefetch_depth)?,
+            reduce_threads: args.num("reduce-threads", d.reduce_threads)?,
             buffer_pool: !args.flag("no-pool"),
             auto_tune: AutoTuneMode::parse(&args.str("auto-tune", d.auto_tune.name()))?,
             seed: args.num("seed", d.seed)?,
@@ -190,6 +197,7 @@ impl TrainConfig {
         );
         anyhow::ensure!(cfg.host_threads >= 1, "--host-threads must be >= 1");
         anyhow::ensure!(cfg.prefetch_depth >= 1, "--prefetch-depth must be >= 1");
+        anyhow::ensure!(cfg.reduce_threads >= 1, "--reduce-threads must be >= 1");
         if let Some(fanouts) = &cfg.fanouts {
             // full validation (incl. the level-0 memory bound) re-runs in
             // Trainer::new against the artifact's batch size; reject the
@@ -252,6 +260,7 @@ impl TrainConfig {
             ("direct_host_fetch", Json::Bool(self.direct_host_fetch)),
             ("host_threads", Json::num(self.host_threads as f64)),
             ("prefetch_depth", Json::num(self.pipeline_depth() as f64)),
+            ("reduce_threads", Json::num(self.reduce_threads as f64)),
             ("buffer_pool", Json::Bool(self.buffer_pool)),
             ("auto_tune", Json::str(self.auto_tune.name())),
             ("seed", Json::num(self.seed as f64)),
@@ -295,6 +304,17 @@ mod tests {
         let args = Args::parse(["train", "--host-threads", "0"]);
         assert!(TrainConfig::from_args(&args).is_err());
         let args = Args::parse(["train", "--prefetch-depth", "0"]);
+        assert!(TrainConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn parses_reduce_threads_and_rejects_zero() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert_eq!(c.reduce_threads, 4, "defaults to a small reduction pool");
+        let c = TrainConfig::from_args(&Args::parse(["train", "--reduce-threads", "2"])).unwrap();
+        assert_eq!(c.reduce_threads, 2);
+        assert_eq!(c.to_json().req_usize("reduce_threads").unwrap(), 2);
+        let args = Args::parse(["train", "--reduce-threads", "0"]);
         assert!(TrainConfig::from_args(&args).is_err());
     }
 

@@ -6,6 +6,8 @@
 //! workers, gradient synchronisation, and the weight update — synchronous
 //! SGD across `p` devices (Algorithm 2 + §2.3).
 //!
+//! - `audit`     — full-iteration zero-allocation audit (feature
+//!   `alloc-count`)
 //! - [`config`]  — run configuration (CLI / JSON)
 //! - [`params`]  — parameter set + SGD-with-momentum optimizer
 //! - [`prep`]    — the host batch-preparation pipeline (PrepPool +
@@ -15,6 +17,8 @@
 //! - [`metrics`] — per-epoch measurements and the JSON training report
 //! - [`cli`]     — the `hitgnn` launcher
 
+#[cfg(feature = "alloc-count")]
+pub mod audit;
 pub mod cli;
 pub mod config;
 pub mod metrics;

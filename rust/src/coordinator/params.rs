@@ -1,11 +1,21 @@
 //! Model parameters and the synchronous-SGD weight update.
 //!
 //! Parameters live on the host in artifact order; after every iteration
-//! the coordinator averages the per-FPGA gradients (gradient
+//! the coordinator reduces the per-FPGA gradients (gradient
 //! synchronisation, §4.2) and applies SGD with momentum, then broadcasts
 //! the updated weights (in the simulation: shares the new `Arc`).
+//!
+//! The hot path is [`GradReducer::reduce`] + [`Sgd::step_fused`]
+//! (DESIGN.md §SIMD dispatch & gradient sync): an in-place sum over a
+//! persistent flat accumulator, split by parameter tensor and row chunk
+//! across a small scoped thread pool, followed by one fused
+//! scale-by-1/p + momentum + weight-update pass. Per-element summation
+//! stays in tag order across the p worker gradients regardless of the
+//! reduction-thread count, so the result is bit-identical to the serial
+//! [`average_grads`] baseline (kept as the oracle) and the PR-1
+//! determinism law holds unchanged.
 
-use crate::runtime::ArtifactEntry;
+use crate::runtime::{ArtifactEntry, GradBuffers};
 use crate::util::rng::Rng;
 
 /// Flat parameter set in artifact order.
@@ -54,11 +64,14 @@ impl ParamSet {
     }
 }
 
-/// Average gradients across workers (synchronous SGD's reduction).
-pub fn average_grads(grads: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+/// Average gradients across workers — the seed's serial, allocating
+/// reduction, kept as the bitwise oracle for [`GradReducer`] (property
+/// tests) and as the BENCH_sync baseline. The hot path uses
+/// [`GradReducer::reduce`] + [`Sgd::step_fused`] instead.
+pub fn average_grads(grads: &[GradBuffers]) -> Vec<Vec<f32>> {
     assert!(!grads.is_empty());
     let p = grads.len() as f32;
-    let mut avg: Vec<Vec<f32>> = grads[0].clone();
+    let mut avg: Vec<Vec<f32>> = grads[0].to_vec();
     for g in &grads[1..] {
         assert_eq!(g.len(), avg.len(), "gradient arity mismatch");
         for (a, gi) in avg.iter_mut().zip(g) {
@@ -74,6 +87,167 @@ pub fn average_grads(grads: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
         }
     }
     avg
+}
+
+/// Below this many total parameter elements the reduction stays serial
+/// (scoped-thread spawn overhead would dominate the elementwise sums).
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Persistent gradient-sum accumulator: the zero-allocation, parallel
+/// replacement for [`average_grads`].
+///
+/// The accumulator is one flat `Vec<f32>` over every parameter tensor
+/// (artifact order, prefix offsets in `offsets`). `reduce` splits it
+/// into at most `threads` contiguous chunks, cut only at row boundaries
+/// (`bounds`), and sums the p worker gradients into each chunk on a
+/// scoped thread. Each element is owned by exactly one chunk and is
+/// summed `g0 + g1 + … + g_{p-1}` in tag order, so the result does not
+/// depend on the thread count — the determinism-law property the params
+/// unit tests pin bitwise against [`average_grads`].
+///
+/// The sum is deliberately *not* pre-scaled by 1/p: [`Sgd::step_fused`]
+/// folds the division into the weight update, matching the oracle's
+/// "sum then divide" rounding exactly.
+#[derive(Clone, Debug)]
+pub struct GradReducer {
+    acc: Vec<f32>,
+    /// Prefix offsets of each tensor in `acc` (`len = ntensors + 1`).
+    offsets: Vec<usize>,
+    /// Legal chunk cut points: every tensor start plus every row start
+    /// within rank ≥ 2 tensors (ascending; ends with the total).
+    bounds: Vec<usize>,
+    threads: usize,
+    /// Serial-path cutoff (total elements); [`PAR_MIN_ELEMS`] unless
+    /// overridden for tests/benches via [`GradReducer::set_par_min`].
+    par_min: usize,
+}
+
+impl GradReducer {
+    /// Build an accumulator shaped like `params`, reducing on up to
+    /// `threads` scoped threads (1 = always serial).
+    pub fn new(params: &ParamSet, threads: usize) -> GradReducer {
+        let mut offsets = Vec::with_capacity(params.data.len() + 1);
+        let mut bounds = Vec::new();
+        let mut total = 0usize;
+        offsets.push(0);
+        for (shape, data) in params.shapes.iter().zip(&params.data) {
+            let len = data.len();
+            let row = if shape.len() >= 2 { shape[shape.len() - 1].max(1) } else { len.max(1) };
+            let mut r = 0;
+            while r < len {
+                bounds.push(total + r);
+                r += row;
+            }
+            total += len;
+            offsets.push(total);
+        }
+        bounds.push(total);
+        // Test/debug override for the serial cutoff: lets
+        // tests/pipeline_determinism.rs force the scoped-thread path on
+        // parameter sets far below `PAR_MIN_ELEMS`.
+        let par_min = std::env::var("HITGNN_REDUCE_PAR_MIN")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(PAR_MIN_ELEMS);
+        GradReducer {
+            acc: vec![0.0; total],
+            offsets,
+            bounds,
+            threads: threads.max(1),
+            par_min,
+        }
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Override the serial cutoff (tests/benches: force the parallel
+    /// path on small parameter sets).
+    pub fn set_par_min(&mut self, par_min: usize) {
+        self.par_min = par_min;
+    }
+
+    /// The summed (un-averaged) gradients of the last [`GradReducer::reduce`].
+    pub fn acc(&self) -> &[f32] {
+        &self.acc
+    }
+
+    /// Sum the p worker gradients into the accumulator, overwriting it.
+    /// Allocation-free (the chunk list lives on the stack per call via
+    /// fixed-capacity splitting; scoped threads borrow, never move).
+    pub fn reduce(&mut self, grads: &[GradBuffers]) {
+        assert!(!grads.is_empty(), "reduce over zero workers");
+        let ntensors = self.offsets.len() - 1;
+        for g in grads {
+            assert_eq!(g.len(), ntensors, "gradient arity mismatch");
+            for (ti, gt) in g.into_iter().enumerate() {
+                assert_eq!(
+                    gt.len(),
+                    self.offsets[ti + 1] - self.offsets[ti],
+                    "gradient shape mismatch (tensor {ti})"
+                );
+            }
+        }
+        let total = self.acc.len();
+        let t = self.threads.min(total.max(1));
+        if t <= 1 || total < self.par_min {
+            reduce_range(&mut self.acc, &self.offsets, grads, 0);
+            return;
+        }
+        // cut points: ideal even split rounded up to the next row bound
+        let offsets = &self.offsets;
+        let mut rest: &mut [f32] = &mut self.acc;
+        let mut consumed = 0usize;
+        std::thread::scope(|s| {
+            for wi in 1..=t {
+                let end = if wi == t {
+                    total
+                } else {
+                    let target = total * wi / t;
+                    match self.bounds.binary_search(&target) {
+                        Ok(j) => self.bounds[j],
+                        Err(j) => *self.bounds.get(j).unwrap_or(&total),
+                    }
+                    .max(consumed)
+                };
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - consumed);
+                rest = tail;
+                let start = consumed;
+                consumed = end;
+                if !chunk.is_empty() {
+                    s.spawn(move || reduce_range(chunk, offsets, grads, start));
+                }
+            }
+        });
+    }
+}
+
+/// Sum the workers' gradients over the accumulator slice that begins at
+/// flat offset `start` — per element strictly `g0 + g1 + …` in worker
+/// tag order (the order [`average_grads`] uses).
+fn reduce_range(chunk: &mut [f32], offsets: &[usize], grads: &[GradBuffers], start: usize) {
+    let end = start + chunk.len();
+    let mut s = start;
+    let mut ti = match offsets.binary_search(&s) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    while s < end {
+        let e = offsets[ti + 1].min(end);
+        if e > s {
+            let o = offsets[ti];
+            let dst = &mut chunk[s - start..e - start];
+            dst.copy_from_slice(&grads[0][ti][s - o..e - o]);
+            for g in &grads[1..] {
+                for (d, x) in dst.iter_mut().zip(&g[ti][s - o..e - o]) {
+                    *d += *x;
+                }
+            }
+        }
+        s = e;
+        ti += 1;
+    }
 }
 
 /// SGD with momentum.
@@ -103,6 +277,28 @@ impl Sgd {
                 w[i] -= self.lr * v[i];
             }
         }
+    }
+
+    /// Fused sync tail over a [`GradReducer`] accumulator: per element
+    /// `g = acc/p; v = μ·v + g; w -= lr·v` in one pass — the same three
+    /// expressions (division, not reciprocal multiply; no manual FMA) in
+    /// the same order as [`average_grads`] + [`Sgd::step`], so the
+    /// result is bit-identical to that serial baseline. Allocation-free.
+    pub fn step_fused(&mut self, params: &mut ParamSet, acc: &[f32], num_workers: usize) {
+        assert!(num_workers >= 1, "step_fused over zero workers");
+        let p = num_workers as f32;
+        let mut off = 0usize;
+        for (w, v) in params.data.iter_mut().zip(&mut self.velocity) {
+            assert_eq!(w.len(), v.len());
+            let a = &acc[off..off + w.len()];
+            for i in 0..w.len() {
+                let g = a[i] / p;
+                v[i] = self.momentum * v[i] + g;
+                w[i] -= self.lr * v[i];
+            }
+            off += w.len();
+        }
+        assert_eq!(off, acc.len(), "accumulator/param element-count mismatch");
     }
 }
 
@@ -143,8 +339,8 @@ mod tests {
 
     #[test]
     fn average_is_elementwise_mean() {
-        let g1 = vec![vec![1.0f32, 2.0], vec![0.0]];
-        let g2 = vec![vec![3.0f32, 6.0], vec![2.0]];
+        let g1: GradBuffers = vec![vec![1.0f32, 2.0], vec![0.0]].into();
+        let g2: GradBuffers = vec![vec![3.0f32, 6.0], vec![2.0]].into();
         let avg = average_grads(&[g1, g2]);
         assert_eq!(avg, vec![vec![2.0, 4.0], vec![1.0]]);
     }
@@ -173,6 +369,108 @@ mod tests {
     #[test]
     #[should_panic]
     fn average_rejects_mismatched_arity() {
-        average_grads(&[vec![vec![1.0]], vec![vec![1.0], vec![2.0]]]);
+        average_grads(&[vec![vec![1.0]].into(), vec![vec![1.0], vec![2.0]].into()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reducer_rejects_mismatched_arity() {
+        let p = ParamSet::init(&entry(), 1);
+        let mut red = GradReducer::new(&p, 2);
+        red.reduce(&[vec![vec![1.0]].into()]);
+    }
+
+    /// A parameter set big enough (> [`PAR_MIN_ELEMS`]) that `reduce`
+    /// takes the scoped-thread path without a `par_min` override.
+    fn big_params(seed: u64) -> ParamSet {
+        let shapes =
+            vec![vec![128usize, 400], vec![400], vec![400, 64], vec![64], vec![37]];
+        let mut rng = Rng::new(seed);
+        let data: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                (0..n).map(|_| rng.f32() - 0.5).collect()
+            })
+            .collect();
+        let names = (0..shapes.len()).map(|i| format!("p{i}")).collect();
+        let p = ParamSet { names, shapes, data };
+        assert!(p.num_elems() > PAR_MIN_ELEMS);
+        p
+    }
+
+    fn random_grads(p: &ParamSet, workers: usize, seed: u64) -> Vec<GradBuffers> {
+        let mut rng = Rng::new(seed);
+        (0..workers)
+            .map(|_| {
+                p.data
+                    .iter()
+                    .map(|d| d.iter().map(|_| rng.f32() - 0.5).collect())
+                    .collect::<Vec<Vec<f32>>>()
+                    .into()
+            })
+            .collect()
+    }
+
+    /// The ISSUE-7 property sweep: `GradReducer::reduce` + `step_fused`
+    /// must be elementwise bit-identical to the serial `average_grads` +
+    /// `step` baseline across worker counts 1–8 and reduction-thread
+    /// counts 1–4, on both the serial small-tensor path and the scoped
+    /// parallel path.
+    #[test]
+    fn parallel_reduce_and_fused_step_match_serial_baseline_bitwise() {
+        for (params, tag) in [(ParamSet::init(&entry(), 7), "small"), (big_params(5), "big")] {
+            for workers in 1..=8usize {
+                let grads = random_grads(&params, workers, 100 + workers as u64);
+                let avg = average_grads(&grads);
+                let mut p1 = params.clone();
+                let mut o1 = Sgd::new(0.2, 0.9, &p1);
+                o1.step(&mut p1, &avg);
+                for threads in 1..=4usize {
+                    let mut red = GradReducer::new(&params, threads);
+                    // exercise the parallel path on the small set too
+                    red.set_par_min(1);
+                    red.reduce(&grads);
+                    let mut off = 0;
+                    for (ti, a) in avg.iter().enumerate() {
+                        for (i, v) in a.iter().enumerate() {
+                            let got = red.acc()[off + i] / workers as f32;
+                            assert_eq!(
+                                got.to_bits(),
+                                v.to_bits(),
+                                "{tag} w={workers} t={threads} tensor {ti}[{i}]: {got} vs {v}"
+                            );
+                        }
+                        off += a.len();
+                    }
+                    let mut p2 = params.clone();
+                    let mut o2 = Sgd::new(0.2, 0.9, &p2);
+                    o2.step_fused(&mut p2, red.acc(), workers);
+                    for (ti, (w1, w2)) in p1.data.iter().zip(&p2.data).enumerate() {
+                        for (i, (x, y)) in w1.iter().zip(w2).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{tag} w={workers} t={threads} param {ti}[{i}]: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reducer_recycles_without_growth() {
+        // the accumulator never re-allocates across reduces
+        let p = big_params(9);
+        let mut red = GradReducer::new(&p, 4);
+        let cap_ptr = red.acc().as_ptr();
+        for seed in 0..3 {
+            let grads = random_grads(&p, 4, seed);
+            red.reduce(&grads);
+        }
+        assert_eq!(red.acc().as_ptr(), cap_ptr);
+        assert_eq!(red.acc().len(), p.num_elems());
     }
 }

@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use super::config::TrainConfig;
 use super::metrics::{EpochMetrics, TrainReport};
-use super::params::{average_grads, ParamSet, Sgd};
+use super::params::{GradReducer, ParamSet, Sgd};
 use super::prep;
 use super::worker::{WorkItem, WorkerPool};
 use crate::comm::{CommConfig, FeatureService, IterDedup};
@@ -34,7 +34,7 @@ use crate::graph::{datasets, Dataset};
 use crate::partition::{preprocess_with_policy, Preprocessed};
 use crate::perf::{FleetModel, Workload};
 use crate::store::{FeatureStore, Residency};
-use crate::runtime::{ArtifactEntry, BatchBuffers, Manifest, TrainExecutor};
+use crate::runtime::{ArtifactEntry, BatchBuffers, GradBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, FanoutConfig, Sampler, WeightMode};
 use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
 use crate::tune::{AutoTuneMode, AutoTuner, EpochObservation, Knobs, TunePrior};
@@ -60,6 +60,18 @@ pub struct Trainer {
     pool: WorkerPool,
     pub params: ParamSet,
     opt: Sgd,
+    /// Persistent gradient-sum accumulator (`--reduce-threads` scoped
+    /// reduction; DESIGN.md §SIMD dispatch & gradient sync).
+    reducer: GradReducer,
+    /// Cross-iteration gradient carcass pool: consumed [`GradBuffers`]
+    /// return here after the reduction and ride back to the workers in
+    /// the next `WorkItem` — the gradient-side mirror of the batch
+    /// carcass channel below. `--no-pool` disables reuse (ablation).
+    grad_pool: Vec<GradBuffers>,
+    /// Reduction staging: the current iteration's gradients in tag
+    /// order. Persistent so the per-iteration collect loop never
+    /// allocates the outer vector.
+    grad_scratch: Vec<GradBuffers>,
     mode: WeightMode,
     /// One sampler per prep thread; the |V|-sized scratch arrays persist
     /// across epochs (only the RNG stream base is re-keyed per epoch).
@@ -176,6 +188,7 @@ impl Trainer {
         let pool = WorkerPool::spawn(&entry, cfg.num_fpgas)?;
         let params = ParamSet::init(&entry, cfg.seed);
         let opt = Sgd::new(cfg.lr, cfg.momentum, &params);
+        let reducer = GradReducer::new(&params, cfg.reduce_threads);
         let rng = Rng::new(cfg.seed ^ 0x7a11);
         let fanout = entry.dims.fanout_config();
         let samplers = (0..cfg.host_threads.max(1))
@@ -194,6 +207,9 @@ impl Trainer {
             pool,
             params,
             opt,
+            reducer,
+            grad_pool: Vec::new(),
+            grad_scratch: Vec::new(),
             mode,
             samplers,
             recycle_tx,
@@ -453,8 +469,14 @@ impl Trainer {
         let samplers = &mut self.samplers;
         let param_set = &mut self.params;
         let opt = &mut self.opt;
+        let reducer = &mut self.reducer;
+        let grad_pool = &mut self.grad_pool;
+        let grad_scratch = &mut self.grad_scratch;
         let shape_acc = &mut self.shape_acc;
         let shape_n = &mut self.shape_n;
+        // runtime-safe knob: any thread count reduces in the same
+        // per-element order (see GradReducer), so retuning is free
+        reducer.set_threads(cfg.reduce_threads.max(1));
 
         std::thread::scope(|s| -> anyhow::Result<()> {
             for sampler in samplers.iter_mut().take(host_threads) {
@@ -553,16 +575,23 @@ impl Trainer {
                     Vec::with_capacity(submitted);
                 for b in items {
                     sampled.push((b.tag, b.mb));
-                    pool.submit(b.fpga, WorkItem { params: params.clone(), batch: b.batch, tag: b.tag })?;
+                    // each work item carries a recycled gradient carcass
+                    // (empty on a cold pool — the worker sizes it once)
+                    let grads = grad_pool.pop().unwrap_or_default();
+                    pool.submit(
+                        b.fpga,
+                        WorkItem { params: params.clone(), batch: b.batch, grads, tag: b.tag },
+                    )?;
                 }
                 let t2 = Instant::now();
                 let mut results = pool.collect(submitted)?;
-                // time blocked at the collect barrier (execute-stall; the
-                // reduction below is counted in sync_seconds only)
+                // time blocked at the collect barrier (execute-stall;
+                // sync_seconds below starts a fresh timer, so the two
+                // stages are disjoint — no double counting)
                 m.execute_stall_seconds += t2.elapsed().as_secs_f64();
                 // reduce in tag order regardless of worker arrival order
                 results.sort_by_key(|r| r.tag);
-                let mut grads = Vec::with_capacity(submitted);
+                grad_scratch.clear();
                 let mut iter_loss = 0.0f64;
                 for (r, (tag, mb)) in results.into_iter().zip(sampled) {
                     debug_assert_eq!(r.tag, tag, "carcass pairing out of order");
@@ -570,7 +599,7 @@ impl Trainer {
                     m.execute_seconds += r.exec_seconds;
                     iter_loss += out.loss as f64;
                     m.final_loss = out.loss as f64;
-                    grads.push(out.grads);
+                    grad_scratch.push(out.grads);
                     if use_pool {
                         // return the consumed buffers to the prep pool
                         let _ = recycle_tx.send(prep::BatchCarcass { mb, bufs: r.batch });
@@ -578,9 +607,21 @@ impl Trainer {
                 }
                 loss_sum += iter_loss;
                 m.iter_losses.push(iter_loss / submitted.max(1) as f64);
-                let avg = average_grads(&grads);
-                opt.step(param_set, &avg);
-                m.sync_seconds += t2.elapsed().as_secs_f64();
+                // gradient sync: in-place parallel sum + fused scale/
+                // momentum/update — bit-identical to the retired serial
+                // average_grads + step (the params tests pin this)
+                let t3 = Instant::now();
+                if !grad_scratch.is_empty() {
+                    reducer.reduce(grad_scratch);
+                    opt.step_fused(param_set, reducer.acc(), grad_scratch.len());
+                }
+                m.sync_seconds += t3.elapsed().as_secs_f64();
+                if use_pool {
+                    // consumed gradient carcasses ride back to the workers
+                    grad_pool.append(grad_scratch);
+                } else {
+                    grad_scratch.clear();
+                }
                 m.iterations += 1;
             }
             // closing the task channel winds the prep pool down

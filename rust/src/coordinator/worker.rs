@@ -11,13 +11,17 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::runtime::{ArtifactEntry, BatchBuffers, TrainExecutor};
+use crate::runtime::{ArtifactEntry, BatchBuffers, GradBuffers, StepOutput, TrainExecutor};
 
 /// One unit of work for a worker.
 pub struct WorkItem {
     /// Current parameters (shared snapshot — the "broadcast" of §4.2).
     pub params: Arc<Vec<Vec<f32>>>,
     pub batch: BatchBuffers,
+    /// Recycled gradient buffers the step writes into (the gradient-side
+    /// carcass pool, mirroring `batch` — DESIGN.md §SIMD dispatch &
+    /// gradient sync). `GradBuffers::empty()` on first use.
+    pub grads: GradBuffers,
     /// Coordinator-side correlation tag (iteration-local task index).
     pub tag: usize,
 }
@@ -73,9 +77,11 @@ impl WorkerPool {
                         return;
                     }
                 };
-                while let Ok(Msg::Work(item)) = work_rx.recv() {
+                while let Ok(Msg::Work(mut item)) = work_rx.recv() {
                     let t0 = std::time::Instant::now();
-                    let result = exe.train_step(&item.params, &item.batch);
+                    let result = exe
+                        .train_step_into(&item.params, &item.batch, &mut item.grads)
+                        .map(|loss| StepOutput { loss, grads: std::mem::take(&mut item.grads) });
                     let _ = result_tx.send(WorkResult {
                         worker,
                         tag: item.tag,

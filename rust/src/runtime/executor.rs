@@ -89,12 +89,71 @@ impl BatchBuffers {
     }
 }
 
+/// Per-parameter gradient buffers in the artifact's parameter order —
+/// the gradient-side analogue of [`BatchBuffers`]. Recyclable: the
+/// trainer keeps a pool of consumed instances and threads them back to
+/// the workers through `WorkItem`, so [`TrainExecutor::train_step_into`]
+/// only allocates on first use (DESIGN.md §SIMD dispatch & gradient
+/// sync).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GradBuffers {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl GradBuffers {
+    /// An unsized carcass for the recycling pool; `train_step_into`
+    /// sizes it to the artifact's parameter shapes on first use.
+    pub fn empty() -> GradBuffers {
+        GradBuffers { bufs: Vec::new() }
+    }
+
+    /// Resize to `count` tensors, each sized by `len(i)`. Existing
+    /// buffers of the right length are kept as-is (contents stale — the
+    /// caller must fully overwrite); growth allocates, shrink keeps
+    /// capacity.
+    pub fn resize_with(&mut self, count: usize, len: impl Fn(usize) -> usize) {
+        self.bufs.resize(count, Vec::new());
+        for (i, buf) in self.bufs.iter_mut().enumerate() {
+            buf.resize(len(i), 0.0);
+        }
+    }
+}
+
+impl std::ops::Deref for GradBuffers {
+    type Target = [Vec<f32>];
+    fn deref(&self) -> &[Vec<f32>] {
+        &self.bufs
+    }
+}
+
+impl std::ops::DerefMut for GradBuffers {
+    fn deref_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.bufs
+    }
+}
+
+impl From<Vec<Vec<f32>>> for GradBuffers {
+    fn from(bufs: Vec<Vec<f32>>) -> GradBuffers {
+        GradBuffers { bufs }
+    }
+}
+
+/// Deref does not satisfy generic `IntoIterator` bounds (e.g. `zip`),
+/// so borrow-iteration is provided directly.
+impl<'a> IntoIterator for &'a GradBuffers {
+    type Item = &'a Vec<f32>;
+    type IntoIter = std::slice::Iter<'a, Vec<f32>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.bufs.iter()
+    }
+}
+
 /// One train-step result.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
     pub loss: f32,
     /// Gradients in the artifact's parameter order.
-    pub grads: Vec<Vec<f32>>,
+    pub grads: GradBuffers,
 }
 
 enum Backend {
@@ -173,13 +232,28 @@ impl TrainExecutor {
     }
 
     /// Execute a train step: returns loss and per-parameter gradients.
-    /// `&mut self`: the reference backend writes its intermediates into a
-    /// per-instance scratch workspace (no per-step allocation).
+    /// Allocating wrapper over [`TrainExecutor::train_step_into`] for
+    /// tests and one-shot callers.
     pub fn train_step(
         &mut self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<StepOutput> {
+        let mut grads = GradBuffers::empty();
+        let loss = self.train_step_into(params, batch, &mut grads)?;
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Execute a train step, writing the gradients into a recycled
+    /// [`GradBuffers`] (sized on first use; allocation-free thereafter).
+    /// `&mut self`: the reference backend writes its intermediates into a
+    /// per-instance scratch workspace (no per-step allocation).
+    pub fn train_step_into(
+        &mut self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+        grads: &mut GradBuffers,
+    ) -> anyhow::Result<f32> {
         anyhow::ensure!(self.entry.kind == "train", "not a train artifact");
         self.check_params(params)?;
         match &mut self.backend {
@@ -194,13 +268,15 @@ impl TrainExecutor {
                     outs.len()
                 );
                 let loss = outs[0].to_vec::<f32>()?[0];
-                let grads = outs[1..]
-                    .iter()
-                    .map(|l| Ok(l.to_vec::<f32>()?))
-                    .collect::<anyhow::Result<Vec<_>>>()?;
-                Ok(StepOutput { loss, grads })
+                grads.resize_with(outs.len() - 1, |_| 0);
+                for (dst, lit) in grads.iter_mut().zip(&outs[1..]) {
+                    let v = lit.to_vec::<f32>()?;
+                    dst.clear();
+                    dst.extend_from_slice(&v);
+                }
+                Ok(loss)
             }
-            Backend::Reference(model) => model.train_step(params, batch),
+            Backend::Reference(model) => model.train_step_into(params, batch, grads),
         }
     }
 

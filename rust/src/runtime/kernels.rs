@@ -19,10 +19,121 @@
 //! tolerance and the gather/scatter kernels match them bit-exactly
 //! (identical accumulation order).
 //!
+//! SIMD dispatch (DESIGN.md §SIMD dispatch & gradient sync): on x86-64
+//! hosts with AVX2+FMA (checked once via `is_x86_feature_detected!`),
+//! the matmul family and the gather/scatter family dispatch to the
+//! width-8 microkernels in [`x86`]; everywhere else — and under
+//! `HITGNN_NO_SIMD` — the blocked kernels above remain the portable
+//! fallback. The matmul microkernels use FMA (covered by the oracle's
+//! FP tolerance); the gather/scatter microkernels vectorize over the
+//! feature dimension with separate mul+add, so each lane reproduces the
+//! scalar oracle's per-element rounding exactly and the bit-exactness
+//! tests hold on every tier. The resolved tier is logged once and can
+//! be overridden in-process via [`set_tier`] (bench A/B only — the tier
+//! must stay constant while train steps run, or the PR-1 bitwise
+//! determinism law breaks).
+//!
 //! [`Workspace`]: super::workspace::Workspace
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// k-dimension register-tile width of the blocked matmuls.
 pub const KT: usize = 4;
+
+/// Which kernel implementation the public entry points dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Width-8 `std::arch` AVX2+FMA microkernels ([`x86`]).
+    Avx2Fma,
+    /// The portable cache-blocked kernels (every platform).
+    Blocked,
+}
+
+impl Tier {
+    /// Stable name for logs and bench JSON columns.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Blocked => "blocked",
+        }
+    }
+}
+
+/// 0 = unresolved, 1 = Avx2Fma, 2 = Blocked.
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+#[cold]
+fn resolve_tier() -> u8 {
+    let tier = if simd_supported() && !no_simd_env() { Tier::Avx2Fma } else { Tier::Blocked };
+    let code = match tier {
+        Tier::Avx2Fma => 1,
+        Tier::Blocked => 2,
+    };
+    // First resolution wins the race; the log line fires at most once
+    // per process (per-thread duplicates are possible only on a tie).
+    if TIER.compare_exchange(0, code, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+        crate::log_info!("kernel dispatch tier: {}", tier.name());
+        code
+    } else {
+        TIER.load(Ordering::Relaxed)
+    }
+}
+
+/// Whether this host can run the [`Tier::Avx2Fma`] microkernels.
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn no_simd_env() -> bool {
+    std::env::var_os("HITGNN_NO_SIMD").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+#[inline]
+fn tier_code() -> u8 {
+    let v = TIER.load(Ordering::Relaxed);
+    if v != 0 {
+        v
+    } else {
+        resolve_tier()
+    }
+}
+
+/// The tier the public kernels currently dispatch to.
+pub fn active_tier() -> Tier {
+    if tier_code() == 1 {
+        Tier::Avx2Fma
+    } else {
+        Tier::Blocked
+    }
+}
+
+/// Force the dispatch tier (bench/test A/B only). Returns `false` —
+/// leaving the tier unchanged — if [`Tier::Avx2Fma`] is requested on a
+/// host without AVX2+FMA. Process-global: never flip it while train
+/// steps are in flight, or within-process bitwise determinism breaks.
+pub fn set_tier(tier: Tier) -> bool {
+    if tier == Tier::Avx2Fma && !simd_supported() {
+        return false;
+    }
+    let code = match tier {
+        Tier::Avx2Fma => 1,
+        Tier::Blocked => 2,
+    };
+    TIER.store(code, Ordering::Relaxed);
+    true
+}
+
+#[inline]
+fn use_simd() -> bool {
+    cfg!(target_arch = "x86_64") && tier_code() == 1
+}
 
 /// `orow += xrow · w` for one output row — the shared inner kernel of
 /// [`matmul_bias`] / [`add_matmul`]: k-tiles of [`KT`] with a whole-tile
@@ -67,6 +178,24 @@ pub fn matmul_bias(
 ) {
     debug_assert!(out.len() >= n * fout && x.len() >= n * fin);
     debug_assert!(w.len() == fin * fout && bias.len() == fout);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::matmul_bias(out, x, w, bias, n, fin, fout) };
+        return;
+    }
+    matmul_bias_blocked(out, x, w, bias, n, fin, fout)
+}
+
+fn matmul_bias_blocked(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    fin: usize,
+    fout: usize,
+) {
     for r in 0..n {
         let orow = &mut out[r * fout..(r + 1) * fout];
         orow.copy_from_slice(bias);
@@ -78,6 +207,16 @@ pub fn matmul_bias(
 /// SAGE layer).
 pub fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
     debug_assert!(out.len() >= n * fout && x.len() >= n * fin && w.len() == fin * fout);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::add_matmul(out, x, w, n, fin, fout) };
+        return;
+    }
+    add_matmul_blocked(out, x, w, n, fin, fout)
+}
+
+fn add_matmul_blocked(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, fout: usize) {
     for r in 0..n {
         axpy_row(&mut out[r * fout..(r + 1) * fout], &x[r * fin..(r + 1) * fin], w, fin, fout);
     }
@@ -88,6 +227,16 @@ pub fn add_matmul(out: &mut [f32], x: &[f32], w: &[f32], n: usize, fin: usize, f
 /// output row is touched once per row tile.
 pub fn matmul_at_b(out: &mut [f32], a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) {
     debug_assert!(out.len() == fa * fb && a.len() >= n * fa && b.len() >= n * fb);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::matmul_at_b(out, a, b, n, fa, fb) };
+        return;
+    }
+    matmul_at_b_blocked(out, a, b, n, fa, fb)
+}
+
+fn matmul_at_b_blocked(out: &mut [f32], a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) {
     out.fill(0.0);
     let mut r = 0;
     while r + KT <= n {
@@ -128,6 +277,16 @@ pub fn matmul_at_b(out: &mut [f32], a: &[f32], b: &[f32], n: usize, fa: usize, f
 /// [`KT`] dot products share each load of the `a` row.
 pub fn matmul_b_t(out: &mut [f32], a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) {
     debug_assert!(out.len() >= n * fb && a.len() >= n * fa && w.len() == fb * fa);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::matmul_b_t(out, a, w, n, fa, fb) };
+        return;
+    }
+    matmul_b_t_blocked(out, a, w, n, fa, fb)
+}
+
+fn matmul_b_t_blocked(out: &mut [f32], a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) {
     for r in 0..n {
         let arow = &a[r * fa..(r + 1) * fa];
         let orow = &mut out[r * fb..(r + 1) * fb];
@@ -208,6 +367,26 @@ pub fn aggregate(
     skip_self: bool,
 ) {
     debug_assert!(out.len() >= rows * f);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::aggregate(out, h, idx, w, rows, k, f, skip_self) };
+        return;
+    }
+    aggregate_blocked(out, h, idx, w, rows, k, f, skip_self)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn aggregate_blocked(
+    out: &mut [f32],
+    h: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) {
     out[..rows * f].fill(0.0);
     let c0 = usize::from(skip_self);
     for r in 0..rows {
@@ -242,6 +421,26 @@ pub fn aggregate_with_self(
     f: usize,
 ) {
     debug_assert!(agg.len() >= rows * f && selfr.len() >= rows * f);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::aggregate_with_self(agg, selfr, h, idx, w, rows, k, f) };
+        return;
+    }
+    aggregate_with_self_blocked(agg, selfr, h, idx, w, rows, k, f)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn aggregate_with_self_blocked(
+    agg: &mut [f32],
+    selfr: &mut [f32],
+    h: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+) {
     agg[..rows * f].fill(0.0);
     for r in 0..rows {
         let src = idx[r * k] as usize;
@@ -266,6 +465,26 @@ pub fn aggregate_with_self(
 /// [`scalar::scatter_aggregate`] (bit-exact).
 #[allow(clippy::too_many_arguments)]
 pub fn scatter_aggregate(
+    dh: &mut [f32],
+    dout: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    skip_self: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::scatter_aggregate(dh, dout, idx, w, rows, k, f, skip_self) };
+        return;
+    }
+    scatter_aggregate_blocked(dh, dout, idx, w, rows, k, f, skip_self)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scatter_aggregate_blocked(
     dh: &mut [f32],
     dout: &[f32],
     idx: &[i32],
@@ -301,10 +520,398 @@ pub fn take_rows(out: &mut [f32], h: &[f32], idx: &[i32], rows: usize, k: usize,
 
 /// Transpose of [`take_rows`]: `dh[idx[r,0]] += dout[r]`.
 pub fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: usize, f: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::scatter_self(dh, dout, idx, rows, k, f) };
+        return;
+    }
     for r in 0..rows {
         let src = idx[r * k] as usize;
         for j in 0..f {
             dh[src * f + j] += dout[r * f + j];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! Width-8 AVX2+FMA microkernels ([`super::Tier::Avx2Fma`]).
+    //!
+    //! Every function carries `#[target_feature(enable = "avx2,fma")]`
+    //! and is therefore `unsafe`: the caller (the dispatchers in the
+    //! parent module, or the tests) must have confirmed AVX2+FMA via
+    //! `is_x86_feature_detected!`. The matmul family accumulates with
+    //! `_mm256_fmadd_ps` (one rounding per multiply-add — covered by
+    //! the scalar oracle's FP tolerance); the gather/scatter family
+    //! deliberately uses separate `_mm256_mul_ps` + `_mm256_add_ps` so
+    //! each lane rounds exactly like the scalar oracle and stays
+    //! bit-exact with it. Feature-dimension tails (`f % 8`) fall back
+    //! to the same per-element expression the vector body computes.
+
+    // Safety contract is module-wide (header above): callers must have
+    // verified AVX2+FMA at runtime before entering any fn in here.
+    #![allow(clippy::missing_safety_doc)]
+
+    use super::KT;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of all 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// `orow += xrow · w`: the shared AVX2 inner kernel of
+    /// [`matmul_bias`] / [`add_matmul`] — k-tiles of [`KT`] broadcasts,
+    /// eight output columns per FMA chain.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_row(orow: &mut [f32], xrow: &[f32], w: &[f32], fin: usize, fout: usize) {
+        let f8 = fout & !7;
+        let op = orow.as_mut_ptr();
+        let mut kk = 0;
+        while kk + KT <= fin {
+            let (x0, x1, x2, x3) = (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
+            if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+                let (v0, v1, v2, v3) = (
+                    _mm256_set1_ps(x0),
+                    _mm256_set1_ps(x1),
+                    _mm256_set1_ps(x2),
+                    _mm256_set1_ps(x3),
+                );
+                let w0 = w.as_ptr().add(kk * fout);
+                let w1 = w.as_ptr().add((kk + 1) * fout);
+                let w2 = w.as_ptr().add((kk + 2) * fout);
+                let w3 = w.as_ptr().add((kk + 3) * fout);
+                let mut j = 0;
+                while j < f8 {
+                    let mut acc = _mm256_loadu_ps(op.add(j));
+                    acc = _mm256_fmadd_ps(v0, _mm256_loadu_ps(w0.add(j)), acc);
+                    acc = _mm256_fmadd_ps(v1, _mm256_loadu_ps(w1.add(j)), acc);
+                    acc = _mm256_fmadd_ps(v2, _mm256_loadu_ps(w2.add(j)), acc);
+                    acc = _mm256_fmadd_ps(v3, _mm256_loadu_ps(w3.add(j)), acc);
+                    _mm256_storeu_ps(op.add(j), acc);
+                    j += 8;
+                }
+                for j in f8..fout {
+                    orow[j] += x0 * *w0.add(j) + x1 * *w1.add(j) + x2 * *w2.add(j) + x3 * *w3.add(j);
+                }
+            }
+            kk += KT;
+        }
+        while kk < fin {
+            let xv = xrow[kk];
+            if xv != 0.0 {
+                let v = _mm256_set1_ps(xv);
+                let wr = w.as_ptr().add(kk * fout);
+                let mut j = 0;
+                while j < f8 {
+                    let acc =
+                        _mm256_fmadd_ps(v, _mm256_loadu_ps(wr.add(j)), _mm256_loadu_ps(op.add(j)));
+                    _mm256_storeu_ps(op.add(j), acc);
+                    j += 8;
+                }
+                for j in f8..fout {
+                    orow[j] += xv * *wr.add(j);
+                }
+            }
+            kk += 1;
+        }
+    }
+
+    /// See [`super::matmul_bias`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_bias(
+        out: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        n: usize,
+        fin: usize,
+        fout: usize,
+    ) {
+        for r in 0..n {
+            let orow = &mut out[r * fout..(r + 1) * fout];
+            orow.copy_from_slice(bias);
+            axpy_row(orow, &x[r * fin..(r + 1) * fin], w, fin, fout);
+        }
+    }
+
+    /// See [`super::add_matmul`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn add_matmul(
+        out: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        n: usize,
+        fin: usize,
+        fout: usize,
+    ) {
+        for r in 0..n {
+            axpy_row(&mut out[r * fout..(r + 1) * fout], &x[r * fin..(r + 1) * fin], w, fin, fout);
+        }
+    }
+
+    /// See [`super::matmul_at_b`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_at_b(out: &mut [f32], a: &[f32], b: &[f32], n: usize, fa: usize, fb: usize) {
+        out.fill(0.0);
+        let f8 = fb & !7;
+        let mut r = 0;
+        while r + KT <= n {
+            for kk in 0..fa {
+                let a0 = a[r * fa + kk];
+                let a1 = a[(r + 1) * fa + kk];
+                let a2 = a[(r + 2) * fa + kk];
+                let a3 = a[(r + 3) * fa + kk];
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let (v0, v1, v2, v3) = (
+                        _mm256_set1_ps(a0),
+                        _mm256_set1_ps(a1),
+                        _mm256_set1_ps(a2),
+                        _mm256_set1_ps(a3),
+                    );
+                    let b0 = b.as_ptr().add(r * fb);
+                    let b1 = b.as_ptr().add((r + 1) * fb);
+                    let b2 = b.as_ptr().add((r + 2) * fb);
+                    let b3 = b.as_ptr().add((r + 3) * fb);
+                    let op = out.as_mut_ptr().add(kk * fb);
+                    let mut j = 0;
+                    while j < f8 {
+                        let mut acc = _mm256_loadu_ps(op.add(j));
+                        acc = _mm256_fmadd_ps(v0, _mm256_loadu_ps(b0.add(j)), acc);
+                        acc = _mm256_fmadd_ps(v1, _mm256_loadu_ps(b1.add(j)), acc);
+                        acc = _mm256_fmadd_ps(v2, _mm256_loadu_ps(b2.add(j)), acc);
+                        acc = _mm256_fmadd_ps(v3, _mm256_loadu_ps(b3.add(j)), acc);
+                        _mm256_storeu_ps(op.add(j), acc);
+                        j += 8;
+                    }
+                    for j in f8..fb {
+                        *op.add(j) +=
+                            a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                    }
+                }
+            }
+            r += KT;
+        }
+        while r < n {
+            for kk in 0..fa {
+                let av = a[r * fa + kk];
+                if av != 0.0 {
+                    let v = _mm256_set1_ps(av);
+                    let br = b.as_ptr().add(r * fb);
+                    let op = out.as_mut_ptr().add(kk * fb);
+                    let mut j = 0;
+                    while j < f8 {
+                        let acc = _mm256_fmadd_ps(
+                            v,
+                            _mm256_loadu_ps(br.add(j)),
+                            _mm256_loadu_ps(op.add(j)),
+                        );
+                        _mm256_storeu_ps(op.add(j), acc);
+                        j += 8;
+                    }
+                    for j in f8..fb {
+                        *op.add(j) += av * *br.add(j);
+                    }
+                }
+            }
+            r += 1;
+        }
+    }
+
+    /// See [`super::matmul_b_t`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_b_t(out: &mut [f32], a: &[f32], w: &[f32], n: usize, fa: usize, fb: usize) {
+        let f8 = fa & !7;
+        for r in 0..n {
+            let ap = a.as_ptr().add(r * fa);
+            let orow = &mut out[r * fb..(r + 1) * fb];
+            let mut kb = 0;
+            while kb + KT <= fb {
+                let w0 = w.as_ptr().add(kb * fa);
+                let w1 = w.as_ptr().add((kb + 1) * fa);
+                let w2 = w.as_ptr().add((kb + 2) * fa);
+                let w3 = w.as_ptr().add((kb + 3) * fa);
+                let mut s0 = _mm256_setzero_ps();
+                let mut s1 = _mm256_setzero_ps();
+                let mut s2 = _mm256_setzero_ps();
+                let mut s3 = _mm256_setzero_ps();
+                let mut j = 0;
+                while j < f8 {
+                    let av = _mm256_loadu_ps(ap.add(j));
+                    s0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(w0.add(j)), s0);
+                    s1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(w1.add(j)), s1);
+                    s2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(w2.add(j)), s2);
+                    s3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(w3.add(j)), s3);
+                    j += 8;
+                }
+                let (mut r0, mut r1, mut r2, mut r3) = (hsum(s0), hsum(s1), hsum(s2), hsum(s3));
+                for j in f8..fa {
+                    let av = *ap.add(j);
+                    r0 += av * *w0.add(j);
+                    r1 += av * *w1.add(j);
+                    r2 += av * *w2.add(j);
+                    r3 += av * *w3.add(j);
+                }
+                orow[kb] = r0;
+                orow[kb + 1] = r1;
+                orow[kb + 2] = r2;
+                orow[kb + 3] = r3;
+                kb += KT;
+            }
+            while kb < fb {
+                let wr = w.as_ptr().add(kb * fa);
+                let mut s = _mm256_setzero_ps();
+                let mut j = 0;
+                while j < f8 {
+                    s = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(wr.add(j)), s);
+                    j += 8;
+                }
+                let mut acc = hsum(s);
+                for j in f8..fa {
+                    acc += *ap.add(j) * *wr.add(j);
+                }
+                orow[kb] = acc;
+                kb += 1;
+            }
+        }
+    }
+
+    /// `dst[..f] += weight · src[..f]`, separate mul+add per lane so the
+    /// per-element rounding matches the scalar oracle bit-exactly.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn weighted_add_row(dst: *mut f32, src: *const f32, weight: f32, f: usize) {
+        let f8 = f & !7;
+        let wv = _mm256_set1_ps(weight);
+        let mut j = 0;
+        while j < f8 {
+            let acc = _mm256_add_ps(
+                _mm256_loadu_ps(dst.add(j)),
+                _mm256_mul_ps(wv, _mm256_loadu_ps(src.add(j))),
+            );
+            _mm256_storeu_ps(dst.add(j), acc);
+            j += 8;
+        }
+        for j in f8..f {
+            *dst.add(j) += weight * *src.add(j);
+        }
+    }
+
+    /// See [`super::aggregate`] (bit-exact with the scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn aggregate(
+        out: &mut [f32],
+        h: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        skip_self: bool,
+    ) {
+        out[..rows * f].fill(0.0);
+        let c0 = usize::from(skip_self);
+        for r in 0..rows {
+            let dst = out.as_mut_ptr().add(r * f);
+            for c in c0..k {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
+                    continue;
+                }
+                let src = idx[r * k + c] as usize;
+                weighted_add_row(dst, h.as_ptr().add(src * f), weight, f);
+            }
+        }
+    }
+
+    /// See [`super::aggregate_with_self`] (bit-exact with the two-pass
+    /// scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn aggregate_with_self(
+        agg: &mut [f32],
+        selfr: &mut [f32],
+        h: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+    ) {
+        agg[..rows * f].fill(0.0);
+        for r in 0..rows {
+            let src = idx[r * k] as usize;
+            selfr[r * f..(r + 1) * f].copy_from_slice(&h[src * f..(src + 1) * f]);
+            let dst = agg.as_mut_ptr().add(r * f);
+            for c in 1..k {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
+                    continue;
+                }
+                let s = idx[r * k + c] as usize;
+                weighted_add_row(dst, h.as_ptr().add(s * f), weight, f);
+            }
+        }
+    }
+
+    /// See [`super::scatter_aggregate`] (bit-exact with the scalar
+    /// oracle).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scatter_aggregate(
+        dh: &mut [f32],
+        dout: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        skip_self: bool,
+    ) {
+        let c0 = usize::from(skip_self);
+        for r in 0..rows {
+            let dr = dout.as_ptr().add(r * f);
+            for c in c0..k {
+                let weight = w[r * k + c];
+                if weight == 0.0 {
+                    continue;
+                }
+                let src = idx[r * k + c] as usize;
+                weighted_add_row(dh.as_mut_ptr().add(src * f), dr, weight, f);
+            }
+        }
+    }
+
+    /// See [`super::scatter_self`] (bit-exact: pure lane-wise adds).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scatter_self(
+        dh: &mut [f32],
+        dout: &[f32],
+        idx: &[i32],
+        rows: usize,
+        k: usize,
+        f: usize,
+    ) {
+        let f8 = f & !7;
+        for r in 0..rows {
+            let src = idx[r * k] as usize;
+            let dst = dh.as_mut_ptr().add(src * f);
+            let dr = dout.as_ptr().add(r * f);
+            let mut j = 0;
+            while j < f8 {
+                let acc = _mm256_add_ps(_mm256_loadu_ps(dst.add(j)), _mm256_loadu_ps(dr.add(j)));
+                _mm256_storeu_ps(dst.add(j), acc);
+                j += 8;
+            }
+            for j in f8..f {
+                *dst.add(j) += *dr.add(j);
+            }
         }
     }
 }
@@ -707,5 +1314,134 @@ mod tests {
         aggregate(&mut got, &h, &idx, &w, 4, 5, 3, false);
         assert!(got.iter().all(|&x| x == 0.0));
         assert_eq!(got, scalar::aggregate(&h, &idx, &w, 4, 5, 3, false));
+    }
+
+    #[test]
+    fn tier_resolves_and_rejects_unsupported_override() {
+        let t = active_tier();
+        assert!(matches!(t, Tier::Avx2Fma | Tier::Blocked));
+        assert!(!t.name().is_empty());
+        if !simd_supported() {
+            // the override must refuse to enable microkernels the host
+            // cannot execute, leaving the blocked tier active
+            assert!(!set_tier(Tier::Avx2Fma));
+            assert_eq!(active_tier(), Tier::Blocked);
+        }
+    }
+
+    /// Shapes deliberately off the 8-lane grid (`cols % 8 ≠ 0`), plus
+    /// rows = 0, the exact-lane case, and width-1 degenerates — the
+    /// satellite property sweep for the SIMD microkernels. The x86
+    /// module is exercised directly (not via [`set_tier`]) so the
+    /// process-global dispatch tier never flips under concurrent tests.
+    #[cfg(target_arch = "x86_64")]
+    const SIMD_SHAPES: [(usize, usize, usize); 8] = [
+        (0, 5, 7),
+        (1, 1, 1),
+        (2, 9, 3),
+        (5, 7, 9),
+        (4, 8, 8),
+        (13, 33, 6),
+        (7, 12, 17),
+        (6, 2, 31),
+    ];
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_matmuls_match_scalar_oracle_on_off_lane_shapes() {
+        if !simd_supported() {
+            return; // fallback hosts: the blocked tests above cover it
+        }
+        let mut rng = Rng::new(8);
+        for (n, fin, fout) in SIMD_SHAPES {
+            // rand_mat's zero_rows sprinkles whole all-zero x tiles, the
+            // padded wire format's shape the kernels shortcut on
+            let x = rand_mat(&mut rng, n, fin, true);
+            let w = rand_mat(&mut rng, fin, fout, false);
+            let bias = rand_mat(&mut rng, 1, fout, false);
+            let tag = format!("simd {n}x{fin}x{fout}");
+
+            let want = scalar::matmul_bias(&x, &w, &bias, n, fin, fout);
+            let mut got = vec![f32::NAN; n * fout];
+            unsafe { x86::matmul_bias(&mut got, &x, &w, &bias, n, fin, fout) };
+            assert_close(&got, &want, 1e-5, &format!("{tag} matmul_bias"));
+
+            let base = rand_mat(&mut rng, n, fout, false);
+            let mut want = base.clone();
+            scalar::add_matmul(&mut want, &x, &w, n, fin, fout);
+            let mut got = base;
+            unsafe { x86::add_matmul(&mut got, &x, &w, n, fin, fout) };
+            assert_close(&got, &want, 1e-5, &format!("{tag} add_matmul"));
+
+            let (fa, fb) = (fin, fout);
+            let a = rand_mat(&mut rng, n, fa, true);
+            let b = rand_mat(&mut rng, n, fb, false);
+            let want = scalar::matmul_at_b(&a, &b, n, fa, fb);
+            let mut got = vec![f32::NAN; fa * fb];
+            unsafe { x86::matmul_at_b(&mut got, &a, &b, n, fa, fb) };
+            assert_close(&got, &want, 1e-5, &format!("{tag} matmul_at_b"));
+
+            let wt = rand_mat(&mut rng, fb, fa, false);
+            let want = scalar::matmul_b_t(&a, &wt, n, fa, fb);
+            let mut got = vec![f32::NAN; n * fb];
+            unsafe { x86::matmul_b_t(&mut got, &a, &wt, n, fa, fb) };
+            assert_close(&got, &want, 1e-5, &format!("{tag} matmul_b_t"));
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_gather_scatter_match_scalar_oracle_bit_exactly() {
+        if !simd_supported() {
+            return;
+        }
+        let mut rng = Rng::new(9);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (rows, k, f) in [(0, 3, 4), (4, 1, 5), (7, 4, 3), (12, 6, 8), (9, 5, 1), (5, 3, 19)] {
+            let n_src = (2 * rows).max(4);
+            let h = rand_mat(&mut rng, n_src, f, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            let tag = format!("simd {rows}x{k}x{f}");
+
+            for skip_self in [false, true] {
+                let want = scalar::aggregate(&h, &idx, &w, rows, k, f, skip_self);
+                let mut got = vec![f32::NAN; rows * f];
+                unsafe { x86::aggregate(&mut got, &h, &idx, &w, rows, k, f, skip_self) };
+                assert_eq!(bits(&got), bits(&want), "{tag} aggregate skip_self={skip_self}");
+            }
+
+            let want_agg = scalar::aggregate(&h, &idx, &w, rows, k, f, true);
+            let want_self = scalar::take_rows(&h, &idx, rows, k, f);
+            let mut agg = vec![f32::NAN; rows * f];
+            let mut selfr = vec![f32::NAN; rows * f];
+            unsafe { x86::aggregate_with_self(&mut agg, &mut selfr, &h, &idx, &w, rows, k, f) };
+            assert_eq!(bits(&agg), bits(&want_agg), "{tag} fused agg");
+            assert_eq!(selfr, want_self, "{tag} fused self rows");
+
+            let dout = rand_mat(&mut rng, rows, f, false);
+            for skip_self in [false, true] {
+                let mut want = vec![0f32; n_src * f];
+                scalar::scatter_aggregate(&mut want, &dout, &idx, &w, rows, k, f, skip_self);
+                let mut got = vec![0f32; n_src * f];
+                unsafe {
+                    x86::scatter_aggregate(&mut got, &dout, &idx, &w, rows, k, f, skip_self)
+                };
+                assert_eq!(bits(&got), bits(&want), "{tag} scatter skip_self={skip_self}");
+            }
+
+            let mut want = vec![0f32; n_src * f];
+            scalar::scatter_self(&mut want, &dout, &idx, rows, k, f);
+            let mut got = vec![0f32; n_src * f];
+            unsafe { x86::scatter_self(&mut got, &dout, &idx, rows, k, f) };
+            assert_eq!(bits(&got), bits(&want), "{tag} scatter_self");
+        }
+
+        // all-zero weight tiles (pure padding rows) must yield exact zeros
+        let h = vec![1.5f32; 8 * 11];
+        let idx = vec![2i32; 4 * 5];
+        let w = vec![0f32; 4 * 5];
+        let mut got = vec![f32::NAN; 4 * 11];
+        unsafe { x86::aggregate(&mut got, &h, &idx, &w, 4, 5, 11, false) };
+        assert!(got.iter().all(|&v| v == 0.0), "zero-tile aggregate");
     }
 }

@@ -24,7 +24,7 @@ pub mod manifest;
 pub mod reference;
 pub mod workspace;
 
-pub use executor::{BatchBuffers, StepOutput, TrainExecutor};
+pub use executor::{BatchBuffers, GradBuffers, StepOutput, TrainExecutor};
 pub use manifest::{ArtifactDims, ArtifactEntry, Manifest};
 pub use reference::RefModel;
 pub use workspace::Workspace;

@@ -29,7 +29,7 @@
 //! run is bit-reproducible — the property the pipeline determinism tests
 //! (`tests/pipeline_determinism.rs`) assert.
 
-use super::executor::{BatchBuffers, StepOutput};
+use super::executor::{BatchBuffers, GradBuffers, StepOutput};
 use super::kernels::{self, scalar};
 use super::manifest::{param_specs, ArtifactDims, ArtifactEntry};
 use super::workspace::Workspace;
@@ -107,17 +107,33 @@ impl RefModel {
         }
     }
 
-    /// Forward + backward + masked CE loss (train artifacts).
+    /// Forward + backward + masked CE loss (train artifacts). Allocating
+    /// wrapper over [`RefModel::train_step_into`].
     pub fn train_step(
         &mut self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<StepOutput> {
+        let mut grads = GradBuffers::empty();
+        let loss = self.train_step_into(params, batch, &mut grads)?;
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Forward + backward + masked CE loss, writing the gradients into a
+    /// recycled [`GradBuffers`]: sized on first use, allocation-free on
+    /// every reuse (the backward kernels fully overwrite each tensor, so
+    /// stale contents cannot leak).
+    pub fn train_step_into(
+        &mut self,
+        params: &[Vec<f32>],
+        batch: &BatchBuffers,
+        grads: &mut GradBuffers,
+    ) -> anyhow::Result<f32> {
         self.set_rows(batch);
         self.forward(params, batch);
         let loss = self.loss_and_dlogits(batch);
-        let grads = self.backward(params, batch);
-        Ok(StepOutput { loss, grads })
+        self.backward_into(params, batch, grads);
+        Ok(loss)
     }
 
     /// Forward only (predict artifacts) → logits `[b, classes]`. Runs the
@@ -227,22 +243,27 @@ impl RefModel {
 
     /// Transposed stages, layer L down to 1 (the dataflow of the seed's
     /// explicit 2-layer backward, looped). `ws.dz[L-1]` must hold the
-    /// dlogits on entry; gradients come back in artifact parameter order.
-    fn backward(&mut self, params: &[Vec<f32>], batch: &BatchBuffers) -> Vec<Vec<f32>> {
+    /// dlogits on entry; gradients land in `grads` in artifact parameter
+    /// order. Every tensor is fully overwritten (`matmul_at_b` and
+    /// `col_sums` zero their outputs first), so recycled buffers carry
+    /// nothing across steps.
+    fn backward_into(&mut self, params: &[Vec<f32>], batch: &BatchBuffers, grads: &mut GradBuffers) {
         let ppl = self.ppl();
         let kind = self.kind;
         let d = &self.dims;
-        let ws = &mut self.ws;
         let lcount = d.layers();
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(ppl * lcount);
-        for l in 1..=lcount {
+        // layer l owns slots ppl*(l-1) .. ppl*l: weight tensors [fin, fout]
+        // then the bias [fout]
+        grads.resize_with(ppl * lcount, |gi| {
+            let l = gi / ppl + 1;
             let (fin, fout) = (d.f[l - 1], d.f[l]);
-            grads.push(vec![0.0f32; fin * fout]);
-            if kind == ModelKind::Sage {
-                grads.push(vec![0.0f32; fin * fout]);
+            if gi % ppl == ppl - 1 {
+                fout
+            } else {
+                fin * fout
             }
-            grads.push(vec![0.0f32; fout]);
-        }
+        });
+        let ws = &mut self.ws;
         for l in (1..=lcount).rev() {
             let n = ws.rows[l];
             let k = d.fanouts[l - 1] + 1;
@@ -317,7 +338,6 @@ impl RefModel {
                 }
             }
         }
-        grads
     }
 
     // -- scalar oracle path ------------------------------------------------
@@ -360,7 +380,7 @@ impl RefModel {
         loss /= denom;
 
         let grads = self.backward_scalar(params, batch, &fwd, &dlogits);
-        Ok(StepOutput { loss, grads })
+        Ok(StepOutput { loss, grads: grads.into() })
     }
 
     /// L aggregate→update stages over the full capacities (scalar oracle).
@@ -685,14 +705,16 @@ mod tests {
         let mut reused = RefModel::new(&entry).unwrap();
         let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
         let batches = [random_batch(&entry.dims, 8), random_batch(&entry.dims, 9)];
-        // dirty the workspace with batch 1 first, then replay both
-        let _ = reused.train_step(&params, &batches[1]).unwrap();
+        // dirty the workspace AND the recycled gradient buffers with
+        // batch 1 first, then replay both
+        let mut grads = GradBuffers::empty();
+        let _ = reused.train_step_into(&params, &batches[1], &mut grads).unwrap();
         for b in &batches {
             let mut fresh = RefModel::new(&entry).unwrap();
             let want = fresh.train_step(&params, b).unwrap();
-            let got = reused.train_step(&params, b).unwrap();
-            assert_eq!(got.loss.to_bits(), want.loss.to_bits());
-            assert_eq!(got.grads, want.grads);
+            let loss = reused.train_step_into(&params, b, &mut grads).unwrap();
+            assert_eq!(loss.to_bits(), want.loss.to_bits());
+            assert_eq!(grads, want.grads);
         }
     }
 }

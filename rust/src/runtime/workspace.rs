@@ -4,11 +4,11 @@
 //! aggregations, pre- and post-activations, backward gradients and the
 //! matmul scratch they flow through — is allocated **once** per
 //! [`RefModel`](super::reference::RefModel) from the artifact's static
-//! [`ArtifactDims`], then rewritten in place on every step. This is what
-//! makes the reference executor's steady state allocation-free (modulo
-//! the small per-step gradient output the optimizer consumes) and is the
+//! [`ArtifactDims`], then rewritten in place on every step. Gradients
+//! leave through a recycled `GradBuffers` the trainer pools, so the
+//! reference executor's steady state is fully allocation-free — the
 //! executor half of the zero-allocation hot path (DESIGN.md §Hot-path
-//! memory & kernels).
+//! memory & kernels and §SIMD dispatch & gradient sync).
 //!
 //! Ownership map (layer l = 1..=L stored at index l-1; shapes are the
 //! padded wire-format capacities, but kernels only touch the batch's

@@ -1,10 +1,12 @@
-//! Zero-allocation steady-state audit (ISSUE 5 acceptance): after
-//! warm-up, the sampler + feature-gather hot path — `Sampler::sample_into`
-//! writing a recycled `MiniBatch` and `FeatureService::gather_into`
-//! writing a recycled feature buffer — must perform **zero** heap
-//! allocations per iteration. The measurement protocol lives in
-//! `comm::audit_sampler_gather_allocs`, shared with the `micro_host`
-//! kernel sweep so CI and the bench can never measure different things.
+//! Zero-allocation steady-state audit (ISSUE 5 + ISSUE 7 acceptance):
+//! after warm-up, the training hot path must perform **zero** heap
+//! allocations per iteration — first the sampler + feature-gather stage
+//! alone (`comm::audit_sampler_gather_allocs`), then the *full*
+//! iteration including batch assembly, p reference train steps into
+//! recycled `GradBuffers`, the `GradReducer` sum, and the fused
+//! optimizer step (`coordinator::audit::audit_full_iteration_allocs`).
+//! Both protocols are shared with the `micro_host` kernel sweep so CI
+//! and the bench can never measure different things.
 //!
 //! Only built with `--features alloc-count` (the counting global
 //! allocator), and deliberately the only test in this binary: the
@@ -12,6 +14,7 @@
 #![cfg(feature = "alloc-count")]
 
 use hitgnn::comm::audit_sampler_gather_allocs;
+use hitgnn::coordinator::audit::audit_full_iteration_allocs;
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
 use hitgnn::sampling::FanoutConfig;
@@ -36,6 +39,18 @@ fn sampler_and_gather_steady_state_is_allocation_free() {
     assert_eq!(
         allocs, 0,
         "sampler+gather steady state allocated {allocs} times over {iters} iterations \
+         ({} allocations/iteration)",
+        allocs as f64 / iters as f64
+    );
+
+    // ISSUE 7: the whole iteration — sample → gather → assemble → p train
+    // steps (recycled GradBuffers) → serial reduce → fused SGD — stays
+    // allocation-free once warm.
+    let iters = 16usize;
+    let allocs = audit_full_iteration_allocs(2, 4, iters);
+    assert_eq!(
+        allocs, 0,
+        "full training iteration allocated {allocs} times over {iters} iterations \
          ({} allocations/iteration)",
         allocs as f64 / iters as f64
     );

@@ -296,6 +296,39 @@ fn buffer_pool_recycling_is_observationally_invisible() {
 }
 
 #[test]
+fn reduce_thread_count_never_changes_the_loss_sequence() {
+    // ISSUE 7 acceptance: the parallel gradient reduction keeps every
+    // per-element sum in worker tag order (g0 + g1 + ... + g_{p-1}), so
+    // the reduction-thread count is a pure throughput knob — losses,
+    // traffic, and work must stay bit-identical across it. Force the
+    // scoped-thread path even on tiny's small parameter set (which sits
+    // far below PAR_MIN_ELEMS and would otherwise reduce serially); the
+    // override only moves the serial cutoff, which by the same law is
+    // invisible to every other test in this binary.
+    std::env::set_var("HITGNN_REDUCE_PAR_MIN", "1");
+    let cfg_for = |rt: usize| {
+        let mut c = base_cfg();
+        c.reduce_threads = rt;
+        c
+    };
+    let base = run_cfg(cfg_for(1), 1, 1);
+    assert!(!base.0.is_empty(), "no iterations recorded");
+    assert!(base.0.iter().all(|l| l.is_finite()));
+    for rt in [2, 4] {
+        for (ht, d) in [(1, 1), (4, 2)] {
+            let got = run_cfg(cfg_for(rt), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "loss sequence diverged at reduce-threads={rt} host-threads={ht} depth={d}"
+            );
+            assert_eq!(base.1, got.1, "traffic diverged at reduce-threads={rt} ({ht}, {d})");
+            assert_eq!(base.2, got.2, "batch count diverged at reduce-threads={rt} ({ht}, {d})");
+            assert_eq!(base.3, got.3, "iteration count diverged at reduce-threads={rt} ({ht}, {d})");
+        }
+    }
+}
+
+#[test]
 fn legacy_prefetch_flag_equals_depth_two() {
     let mut cfg_flag = base_cfg();
     cfg_flag.prefetch = true;
