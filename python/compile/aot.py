@@ -11,7 +11,8 @@ Depth: `--fanouts 15,10,5` builds L-layer artifacts (one idx/w input pair
 per layer; DESIGN.md §Mini-batch wire format order — input-side hop
 first). `--k1/--k2` remain as 2-layer aliases. A 3-layer SAGE tiny
 artifact is exported alongside the tiny pair, mirroring the Rust builtin
-manifest.
+manifest. `--model gat|gin` (via `--models`) export tiny artifacts only,
+again mirroring the builtin manifest's zoo coverage.
 
 Run from python/:  python -m compile.aot --out-dir ../artifacts
 `make artifacts` is a no-op if the outputs are newer than the inputs.
@@ -26,6 +27,7 @@ import sys
 import jax
 
 from .model import (
+    MODEL_NAMES,
     ModelDims,
     batch_order,
     example_args,
@@ -46,7 +48,11 @@ DATASETS = {
 # Small dims for runtime integration tests / quickstart.
 TINY = dict(f0=32, f1=16, f2=8)
 
-MODELS = ["gcn", "sage"]
+MODELS = list(MODEL_NAMES)
+
+# gat/gin ship tiny-only artifacts (mirrors the Rust builtin manifest:
+# the Table-4 dataset sweep stays gcn/sage).
+TINY_ONLY_MODELS = {"gat", "gin"}
 
 
 def feature_widths(d, layers):
@@ -135,7 +141,9 @@ def main(argv=None) -> int:
                     help="legacy 2-layer alias: layer-2 fanout")
     ap.add_argument("--datasets", default="all",
                     help="comma list or 'all' or 'tiny-only'")
-    ap.add_argument("--models", default="gcn,sage")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma list out of " + "|".join(MODEL_NAMES)
+                         + " (gat/gin export tiny artifacts only)")
     ap.add_argument("--no-tiny", action="store_true",
                     help="skip the tiny test artifacts (incl. the 3-layer one)")
     args = ap.parse_args(argv)
@@ -143,6 +151,11 @@ def main(argv=None) -> int:
     os.makedirs(args.out_dir, exist_ok=True)
     fanouts = parse_fanouts(args.fanouts) if args.fanouts else [args.k1, args.k2]
     models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in MODEL_NAMES:
+            raise SystemExit(
+                f"unknown model '{m}', expected one of {'|'.join(MODEL_NAMES)}"
+            )
     if args.datasets == "all":
         datasets = list(DATASETS)
     elif args.datasets == "tiny-only":
@@ -152,7 +165,7 @@ def main(argv=None) -> int:
 
     entries = []
     for model in models:
-        for ds in datasets:
+        for ds in (datasets if model not in TINY_ONLY_MODELS else []):
             f = DATASETS[ds]
             dims = ModelDims.from_fanouts(args.batch, fanouts,
                                           feature_widths(f, len(fanouts)))

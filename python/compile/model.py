@@ -1,4 +1,4 @@
-"""L2: the paper's GNN models (GCN, GraphSAGE) as JAX forward/backward
+"""L2: the model zoo (GCN, GraphSAGE, GAT, GIN) as JAX forward/backward
 train steps over the fixed-shape padded mini-batch wire format
 (DESIGN.md §Mini-batch wire format), calling the L1 Pallas kernels.
 
@@ -18,7 +18,15 @@ The Rust sampler emits, per batch:
 GCN uses the full (k+1)-wide weighted sum (self edge included in w by the
 sampler, symmetric normalisation). GraphSAGE splits self and neighbors:
 the neighbor mean flows through W_nbr, the self row through W_self —
-equivalent to the concat formulation but keeps one kernel API.
+equivalent to the concat formulation but keeps one kernel API. GAT
+(single-head, GATv1) and GIN-ε receive *unit* wire weights (the Rust
+sampler's ``WeightMode::Unit`` — w marks real vs padding only): GAT
+computes per-edge attention from the transformed features and
+softmaxes over each ragged neighbor list; GIN sums neighbors, adds
+``(1+ε)·self``, and updates through a 2-layer MLP. The semantics here
+are the forward-parity reference for the Rust ``model_ops`` stages
+(``rust/src/runtime/model_ops.rs``), which are cross-checked against
+their own scalar oracle and finite differences.
 
 `train_step` = masked softmax cross-entropy + gradients in one jitted
 function; this is the module that gets AOT-lowered per (model, dims).
@@ -31,6 +39,13 @@ import jax
 import jax.numpy as jnp
 
 from .kernels import aggregate, matmul, update
+
+# Canonical model names (mirrors rust runtime::MODEL_NAMES).
+MODEL_NAMES = ("gcn", "sage", "gat", "gin")
+
+# LeakyReLU slope of the GAT attention logits (the GAT paper's 0.2;
+# mirrors rust model_ops::LEAKY_SLOPE).
+LEAKY_SLOPE = 0.2
 
 
 @dataclass(frozen=True)
@@ -128,7 +143,28 @@ def init_params(model: str, dims: ModelDims, seed: int = 0) -> Dict[str, jnp.nda
             params[f"w{l}_nbr"] = _glorot(ks[2 * (l - 1) + 1], (dims.f[l - 1], dims.f[l]))
             params[f"b{l}"] = jnp.zeros((dims.f[l],), jnp.float32)
         return params
-    raise ValueError(f"unknown model '{model}' (gcn|sage)")
+    if model == "gat":
+        # rank-1 tensors (attention vectors, bias) start at zero, same as
+        # the Rust ParamSet::init convention
+        ks = jax.random.split(key, L)
+        params = {}
+        for l in range(1, L + 1):
+            params[f"w{l}"] = _glorot(ks[l - 1], (dims.f[l - 1], dims.f[l]))
+            params[f"a{l}_self"] = jnp.zeros((dims.f[l],), jnp.float32)
+            params[f"a{l}_nbr"] = jnp.zeros((dims.f[l],), jnp.float32)
+            params[f"b{l}"] = jnp.zeros((dims.f[l],), jnp.float32)
+        return params
+    if model == "gin":
+        ks = jax.random.split(key, 2 * L)
+        params = {}
+        for l in range(1, L + 1):
+            params[f"w{l}_1"] = _glorot(ks[2 * (l - 1)], (dims.f[l - 1], dims.f[l]))
+            params[f"b{l}_1"] = jnp.zeros((dims.f[l],), jnp.float32)
+            params[f"w{l}_2"] = _glorot(ks[2 * (l - 1) + 1], (dims.f[l], dims.f[l]))
+            params[f"b{l}_2"] = jnp.zeros((dims.f[l],), jnp.float32)
+            params[f"eps{l}"] = jnp.zeros((1,), jnp.float32)  # GIN-0 at step 0
+        return params
+    raise ValueError(f"unknown model '{model}', expected one of {'|'.join(MODEL_NAMES)}")
 
 
 def param_order(model: str, layers: int = 2) -> List[str]:
@@ -139,8 +175,14 @@ def param_order(model: str, layers: int = 2) -> List[str]:
             names += [f"w{l}", f"b{l}"]
         elif model == "sage":
             names += [f"w{l}_self", f"w{l}_nbr", f"b{l}"]
+        elif model == "gat":
+            names += [f"w{l}", f"a{l}_self", f"a{l}_nbr", f"b{l}"]
+        elif model == "gin":
+            names += [f"w{l}_1", f"b{l}_1", f"w{l}_2", f"b{l}_2", f"eps{l}"]
         else:
-            raise ValueError(model)
+            raise ValueError(
+                f"unknown model '{model}', expected one of {'|'.join(MODEL_NAMES)}"
+            )
     return names
 
 
@@ -199,7 +241,69 @@ def sage_forward(params, batch) -> jnp.ndarray:
     return h
 
 
-FORWARD = {"gcn": gcn_forward, "sage": sage_forward}
+def _gat_layer(h, idx, w, wmat, a_self, a_nbr, bias, act):
+    # single-head GATv1 over the padded block: transform every below-level
+    # row once, score per vertex, softmax the LeakyReLU'd logits over each
+    # ragged (w != 0) neighbor list. Wire weights are the padding mask
+    # only (WeightMode::Unit) — attention replaces fixed normalisation.
+    ht = matmul(h, wmat)
+    sself = ht @ a_self                       # [below]
+    snbr = ht @ a_nbr
+    logits = sself[idx[:, 0]][:, None] + snbr[idx]
+    logits = jnp.where(logits > 0.0, logits, LEAKY_SLOPE * logits)
+    real = w != 0.0
+    masked = jnp.where(real, logits, -jnp.inf)
+    m = jnp.max(masked, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)    # all-padding rows
+    e = jnp.where(real, jnp.exp(masked - m), 0.0)
+    denom = e.sum(axis=1, keepdims=True)
+    alpha = jnp.where(denom > 0.0, e / jnp.maximum(denom, 1e-38), 0.0)
+    out = aggregate(ht, idx, alpha) + bias[None, :]
+    return act(out)
+
+
+def gat_forward(params, batch) -> jnp.ndarray:
+    """L-layer single-head GAT → logits [b, f[L]]."""
+    L = len(params) // 4
+    h = batch["feat0"]
+    for l in range(1, L + 1):
+        act = jax.nn.relu if l < L else (lambda x: x)
+        h = _gat_layer(h, batch[f"idx{l}"], batch[f"w{l}a"],
+                       params[f"w{l}"], params[f"a{l}_self"],
+                       params[f"a{l}_nbr"], params[f"b{l}"], act)
+    return h
+
+
+def _gin_layer(h, idx, w, w1, b1, w2, b2, eps, act):
+    # injective sum: neighbors (cols 1..k) plus (1+eps)·self, then the
+    # 2-layer MLP update (relu inside the MLP, act between GNN layers)
+    w_n = w.at[:, 0].set(0.0)
+    s = aggregate(h, idx, w_n)
+    self_rows = jnp.take(h, idx[:, 0], axis=0)
+    s = s + (1.0 + eps[0]) * self_rows
+    h1 = jax.nn.relu(update(s, w1, b1))
+    return act(update(h1, w2, b2))
+
+
+def gin_forward(params, batch) -> jnp.ndarray:
+    """L-layer GIN-ε → logits [b, f[L]]."""
+    L = len(params) // 5
+    h = batch["feat0"]
+    for l in range(1, L + 1):
+        act = jax.nn.relu if l < L else (lambda x: x)
+        h = _gin_layer(h, batch[f"idx{l}"], batch[f"w{l}a"],
+                       params[f"w{l}_1"], params[f"b{l}_1"],
+                       params[f"w{l}_2"], params[f"b{l}_2"],
+                       params[f"eps{l}"], act)
+    return h
+
+
+FORWARD = {
+    "gcn": gcn_forward,
+    "sage": sage_forward,
+    "gat": gat_forward,
+    "gin": gin_forward,
+}
 
 
 # ---------------------------------------------------------------------------

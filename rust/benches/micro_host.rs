@@ -6,7 +6,7 @@
 use hitgnn::comm::{CommConfig, FeatureService};
 use hitgnn::coordinator::Trainer;
 use hitgnn::fpga::parse_fleet;
-use hitgnn::fpga::timing::BatchShape;
+use hitgnn::fpga::timing::{BatchShape, ModelCost};
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
 use hitgnn::perf::experiments::{measure_host_policy, table7_fleet};
@@ -105,6 +105,7 @@ fn main() {
     b.finish();
 
     kernel_sweep();
+    model_sweep();
     cache_policy_sweep();
     scheduler_sweep();
     depth_sweep();
@@ -218,6 +219,84 @@ fn kernel_sweep() {
     println!("=== end bench: kernel sweep ===");
 }
 
+/// Model-zoo sweep (ISSUE 8 acceptance): per-batch reference-executor
+/// train-step latency across the four architectures at one matched shape
+/// (B=256, fanouts [25, 10], tiny feature widths, real sampled batches
+/// under each model's own weight mode), next to the §6.2 modeled FPGA
+/// batch time priced with each model's [`ModelCost`]. Asserts the
+/// attention model's modeled batch sits strictly above matched-shape GCN
+/// — the edge-score term must be visible to the scheduler and DSE.
+fn model_sweep() {
+    use hitgnn::coordinator::params::ParamSet;
+    use hitgnn::fpga::timing::TimingModel;
+    use hitgnn::runtime::manifest::synth_entry;
+    use hitgnn::runtime::{BatchBuffers, RefModel, MODEL_NAMES};
+
+    println!("\n=== bench: model-zoo sweep (matched shape, per-batch train step) ===");
+    let data = datasets::lookup("tiny").unwrap().build(0, 17);
+    let pre = preprocess(Algorithm::DistDgl, &data, 2, 0.2, 17);
+    let svc = FeatureService::new(&data.features, CommConfig::default());
+    let b_size = 256usize;
+    let fanouts = vec![25usize, 10];
+    let gd = data.spec.dims;
+    let widths = [gd.f0 as f64, gd.f1 as f64, gd.f2 as f64];
+    let timing = TimingModel::new(hitgnn::fpga::U250, hitgnn::fpga::DEFAULT_DIE, 16.0);
+    let shape = BatchShape::nominal(b_size as f64, &[25.0, 10.0], &widths);
+    let gcn_modeled = timing.batch(&shape, 0.75, ModelCost::GCN).gnn_s;
+    let mut t = Table::new(&[
+        "model",
+        "train step (ms)",
+        "modeled FPGA batch (ms)",
+        "vs gcn model",
+    ]);
+    for model_name in MODEL_NAMES {
+        let entry = synth_entry(
+            std::path::Path::new("/tmp"),
+            "train",
+            model_name,
+            "tiny",
+            b_size,
+            &fanouts,
+            gd,
+        );
+        let mut model = RefModel::new(&entry).expect("reference model");
+        let params = ParamSet::init(&entry, 7).data;
+        let cfg = FanoutConfig::new(b_size, &fanouts);
+        let mode = WeightMode::for_model(model_name).expect("zoo weight mode");
+        let mut sampler = Sampler::new(cfg, mode, data.graph.num_vertices(), 3);
+        let take = pre.train_parts[0].len().min(b_size);
+        let targets: Vec<u32> = pre.train_parts[0][..take].to_vec();
+        let mb = sampler.sample(&data, &targets, 0, 0);
+        let (feat0, _) = svc.gather(&mb, pre.stores[0].as_ref(), pre.vertex_part.as_deref(), 0);
+        let batch = BatchBuffers::from_minibatch(&mb, feat0, entry.dims.f0());
+        let mut bench = Bench::new(&format!("model {model_name}"));
+        let step_s = bench
+            .measure("train_step", |_| {
+                black_box(model.train_step(&params, &batch).unwrap())
+            })
+            .median_s;
+        bench.finish();
+        let cost = ModelCost::for_model(model_name).expect("zoo cost");
+        let modeled = timing.batch(&shape, 0.75, cost).gnn_s;
+        if model_name == "gat" {
+            assert!(
+                modeled > gcn_modeled,
+                "attention modeled batch must exceed matched-shape gcn \
+                 ({modeled} !> {gcn_modeled})"
+            );
+        }
+        t.row(&[
+            model_name.to_string(),
+            format!("{:.3}", step_s * 1e3),
+            format!("{:.3}", modeled * 1e3),
+            format!("{:.2}x", modeled / gcn_modeled),
+        ]);
+    }
+    t.print();
+    println!("  attention modeled batch strictly above matched-shape gcn ✓");
+    println!("=== end bench: model-zoo sweep ===");
+}
+
 /// Sampler+gather steady-state allocation count, measured through the
 /// counting global allocator when built with `--features alloc-count`
 /// (same canonical protocol as `tests/alloc_steady_state.rs` — see
@@ -242,14 +321,21 @@ fn alloc_report(data: &hitgnn::graph::Dataset, pre: &hitgnn::partition::Preproce
         allocs as f64 / iters as f64
     );
     assert_eq!(allocs, 0, "sampler+gather steady state must be allocation-free");
-    // ISSUE 7: the whole iteration, gradients and fused sync included
+    // ISSUE 7 + ISSUE 8: the whole iteration, gradients and fused sync
+    // included, for every model-zoo architecture
     let iters = 16usize;
-    let allocs = hitgnn::coordinator::audit::audit_full_iteration_allocs(2, 4, iters);
-    println!(
-        "  full-iteration steady-state allocations/iteration: {} ({allocs} over {iters} iters)",
-        allocs as f64 / iters as f64
-    );
-    assert_eq!(allocs, 0, "full training iteration steady state must be allocation-free");
+    for model in hitgnn::runtime::MODEL_NAMES {
+        let allocs = hitgnn::coordinator::audit::audit_full_iteration_allocs(model, 2, 4, iters);
+        println!(
+            "  {model} full-iteration steady-state allocations/iteration: {} \
+             ({allocs} over {iters} iters)",
+            allocs as f64 / iters as f64
+        );
+        assert_eq!(
+            allocs, 0,
+            "{model}: full training iteration steady state must be allocation-free"
+        );
+    }
 }
 
 #[cfg(not(feature = "alloc-count"))]
@@ -279,7 +365,7 @@ fn scheduler_sweep() {
     let base_w = |batches_per_part: Vec<usize>, wb: bool| Workload {
         shape: shape.clone(),
         beta: 0.75,
-        param_scale: 1.0,
+        cost: ModelCost::GCN,
         sampling_s_per_batch: 2e-3,
         batches_per_part,
         workload_balancing: wb,
@@ -470,7 +556,7 @@ fn depth_sweep() {
         let mb = sampler.sample(&data, &targets, 0, 0);
         let fanouts_f: Vec<f64> = fanouts.iter().map(|&k| k as f64).collect();
         let shape = BatchShape::nominal(1024.0, &fanouts_f, widths);
-        let gnn_s = timing.batch(&shape, 0.75, 1.0).gnn_s;
+        let gnn_s = timing.batch(&shape, 0.75, ModelCost::GCN).gnn_s;
         assert!(gnn_s > 0.0);
         t.row(&[
             label.to_string(),

@@ -14,6 +14,11 @@
 //!   `GradReducer::reduce` + `Sgd::step_fused` path at 1 and N reduction
 //!   threads, on a ~1M-element synthetic parameter set, plus the
 //!   pooled-vs-unpooled (`--no-pool`) gradient-buffer ablation.
+//! - `BENCH_models.json`  — the model-zoo sweep: measured end-to-end
+//!   NVTPS per architecture (gcn, sage, gat, gin) on the tiny dataset at
+//!   the headline pipeline configuration, tagged with the resolved kernel
+//!   tier so trajectory diffs can tell a zoo regression from a dispatch
+//!   change.
 //! - `BENCH_tune.json`    — the closed-loop auto-tune acceptance sweep: a
 //!   hand-swept static (host-threads × prefetch-depth × sched) grid on a
 //!   `u250:2,u250-half:2` fleet vs an 8-epoch `--auto-tune on` trajectory
@@ -36,6 +41,7 @@ fn main() {
     let out = bench::out_dir();
     host_suite(&out).expect("host suite");
     kernels_suite(&out).expect("kernels suite");
+    models_suite(&out).expect("models suite");
     sync_suite(&out).expect("sync suite");
     tune_suite(&out).expect("tune suite");
 }
@@ -181,6 +187,64 @@ fn kernels_suite(out: &std::path::Path) -> anyhow::Result<()> {
         suite.add(&bk);
         bk.finish();
     }
+    suite.write(out)?;
+    Ok(())
+}
+
+/// BENCH_models.json: end-to-end trainer NVTPS for every model-zoo
+/// architecture at the headline pipeline configuration (tiny, 4 FPGAs,
+/// ht=4 pd=2 — matching the `host` suite's NVTPS row so the gcn entries
+/// are comparable across files). Tagged with the resolved kernel tier:
+/// the attention kernels have their own blocked/SIMD implementations, so
+/// a dispatch change moves these numbers without any zoo regression.
+fn models_suite(out: &std::path::Path) -> anyhow::Result<()> {
+    use hitgnn::runtime::kernels;
+    use hitgnn::runtime::MODEL_NAMES;
+
+    let quick = bench::quick();
+    let mut suite = BenchSuite::new("models");
+    let mut b = Bench::new("model_zoo");
+    suite.extra(
+        "kernel_dispatch",
+        Json::obj(vec![("resolved_tier", Json::str(kernels::active_tier().name()))]),
+    );
+    let mut rows = Vec::new();
+    for model in MODEL_NAMES {
+        let cfg = TrainConfig {
+            dataset: "tiny".into(),
+            model: model.into(),
+            algo: Algorithm::DistDgl,
+            num_fpgas: 4,
+            epochs: 2,
+            scale_shift: 0,
+            seed: 11,
+            host_threads: 4,
+            prefetch_depth: 2,
+            max_iterations: if quick { Some(6) } else { None },
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let report = trainer.run()?;
+        let m = report.epochs.last().expect("two epochs");
+        let nvtps = m.vertices_traversed as f64 / m.wall_seconds;
+        b.throughput(
+            &format!("NVTPS {model} (tiny, ht=4 pd=2)"),
+            m.vertices_traversed as f64,
+            m.wall_seconds,
+            "vertices",
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("nvtps", Json::num(nvtps)),
+            ("epoch_wall_s", Json::num(m.wall_seconds)),
+            ("vertices_traversed", Json::num(m.vertices_traversed as f64)),
+            ("final_loss", Json::num(report.last_loss())),
+        ]));
+        trainer.shutdown();
+    }
+    suite.extra("model_zoo", Json::arr(rows));
+    suite.add(&b);
+    b.finish();
     suite.write(out)?;
     Ok(())
 }

@@ -123,10 +123,18 @@ impl HitGnn {
         self
     }
 
-    /// `GNN_Computation()`: "gcn" | "sage" (the kernel-library models).
+    /// `GNN_Computation()`: a model-zoo architecture —
+    /// "gcn" | "sage" | "gat" | "gin" (`runtime::MODEL_NAMES`). Validated
+    /// at `generate_design()`.
     pub fn gnn_computation(mut self, model: &str) -> Self {
         self.model = Some(model.to_string());
         self
+    }
+
+    /// The configured model-zoo architecture, if `gnn_computation()` has
+    /// been called.
+    pub fn model(&self) -> Option<&str> {
+        self.model.as_deref()
     }
 
     /// `GNN_Parameters()`: L and hidden dim. Hidden is pinned at 128 (the
@@ -201,6 +209,7 @@ impl HitGnn {
             .model
             .clone()
             .ok_or_else(|| anyhow::anyhow!("call gnn_computation() before generate_design()"))?;
+        crate::runtime::validate_model(&model)?;
         let fanouts: Vec<usize> = match &self.fanouts {
             Some(f) => {
                 // order-independent consistency: whichever of
@@ -278,7 +287,7 @@ impl HitGnn {
         let workload = DseWorkload {
             shape: BatchShape::nominal(1024.0, &fanouts_f, &widths),
             beta,
-            param_scale: if model == "sage" { 2.0 } else { 1.0 },
+            cost: crate::fpga::timing::ModelCost::for_model(&model)?,
             sampling_s_per_batch: 2e-3,
         };
         // accelerator generator: DSE over this dataset's dims — per
@@ -410,6 +419,31 @@ mod tests {
             .load_input_graph("reddit", 6)
             .generate_design()
             .is_err());
+    }
+
+    #[test]
+    fn builder_validates_model_against_the_zoo() {
+        let b = HitGnn::new().load_input_graph("reddit", 8).gnn_computation("gat");
+        assert_eq!(b.model(), Some("gat"));
+        assert_eq!(HitGnn::new().model(), None);
+        let err = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("transformer")
+            .generate_design()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown model 'transformer'"), "{msg}");
+        assert!(msg.contains("expected one of gcn|sage|gat|gin"), "{msg}");
+        // every zoo model makes it through DSE + design generation
+        for model in crate::runtime::MODEL_NAMES {
+            let d = HitGnn::new()
+                .load_input_graph("reddit", 8)
+                .gnn_computation(model)
+                .generate_design()
+                .unwrap();
+            assert_eq!(d.train.model, model);
+            assert!(d.estimated_nvtps > 0.0);
+        }
     }
 
     #[test]

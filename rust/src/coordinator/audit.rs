@@ -24,9 +24,16 @@
 
 /// Drive `iters` full training iterations (after `warmup` warm-up
 /// iterations) on the bundled tiny dataset with `num_fpgas` simulated
-/// workers, and return the heap-allocation event count of the measured
-/// window (the zero-allocation contract expects 0).
-pub fn audit_full_iteration_allocs(num_fpgas: usize, warmup: usize, iters: usize) -> u64 {
+/// workers running `model` (any `runtime::MODEL_NAMES` architecture —
+/// the zero-allocation contract covers the whole zoo, attention and MLP
+/// lanes included), and return the heap-allocation event count of the
+/// measured window (the contract expects 0).
+pub fn audit_full_iteration_allocs(
+    model: &str,
+    num_fpgas: usize,
+    warmup: usize,
+    iters: usize,
+) -> u64 {
     use crate::comm::{CommConfig, FeatureService};
     use crate::coordinator::params::{GradReducer, ParamSet, Sgd};
     use crate::graph::datasets;
@@ -52,10 +59,11 @@ pub fn audit_full_iteration_allocs(num_fpgas: usize, warmup: usize, iters: usize
     let data = datasets::lookup("tiny").expect("tiny dataset").build(0, 21);
     let pre = preprocess(Algorithm::DistDgl, &data, num_fpgas, 0.2, 21);
     let svc = FeatureService::new(&data.features, CommConfig::default());
+    let mode = WeightMode::for_model(model).expect("zoo model");
     let entry = synth_entry(
         std::path::Path::new("/tmp"),
         "train",
-        "gcn",
+        model,
         "tiny",
         b_size,
         &fanouts,
@@ -69,8 +77,7 @@ pub fn audit_full_iteration_allocs(num_fpgas: usize, warmup: usize, iters: usize
     let mut lanes: Vec<Lane> = (0..num_fpgas)
         .map(|w| {
             let cfg = FanoutConfig::new(b_size, &fanouts);
-            let sampler =
-                Sampler::new(cfg, WeightMode::GcnNorm, data.graph.num_vertices(), 9 + w as u64);
+            let sampler = Sampler::new(cfg, mode, data.graph.num_vertices(), 9 + w as u64);
             let mb = sampler.new_batch();
             let take = pre.train_parts[w].len().min(b_size);
             Lane {

@@ -25,7 +25,7 @@ SUBCOMMANDS:
 
 TRAIN OPTIONS:
     --dataset <reddit|yelp|amazon|ogbn-products>   (default ogbn-products)
-    --model <gcn|sage>           --algo <distdgl|pagraph|p3>
+    --model <gcn|sage|gat|gin>   --algo <distdgl|pagraph|p3>
     --fanouts <k1,..,kL>         per-layer fanouts, input-side hop first
                                  (DESIGN.md §Mini-batch wire format; e.g.
                                  15,10,5 = 3-layer GraphSAGE recipe).
@@ -73,7 +73,7 @@ TRAIN OPTIONS:
     --report <file.json>         write the training report
 
 DSE OPTIONS:
-    --model <gcn|sage>           --fpgas <p>
+    --model <gcn|sage|gat|gin>   --fpgas <p>
     --m-step <k>                 update-PE sweep granularity (default 16)
 
 SIMULATE OPTIONS:
@@ -134,12 +134,12 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     let p: usize = args.num("fpgas", 4)?;
     let m_step: u32 = args.num("m-step", 16)?;
     args.finish()?;
-    let param_scale = if model == "sage" { 2.0 } else { 1.0 };
+    let cost = crate::fpga::timing::ModelCost::for_model(&model)?;
     let mut spec = PlatformSpec::paper_4fpga();
     spec.num_fpgas = p;
     let mut engine = DseEngine::new(spec);
     engine.m_step = m_step;
-    let res = engine.explore(&paper_dse_workloads(param_scale))?;
+    let res = engine.explore(&paper_dse_workloads(cost))?;
     println!(
         "search space: n ≤ {} per die, m ≤ {} per die ({} feasible points)",
         res.n_max,
@@ -191,7 +191,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut plat = PlatformSpec::paper_4fpga();
     plat.num_fpgas = p;
     plat.cpu_mem_gbs = cpu_mem_gbs;
-    let model_scale = if model == "sage" { 2.0 } else { 1.0 };
+    let cost = crate::fpga::timing::ModelCost::for_model(&model)?;
     let widths: Vec<f64> = crate::runtime::manifest::feature_widths(spec.dims, fanouts.len())
         .iter()
         .map(|&x| x as f64)
@@ -201,7 +201,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let w = Workload {
         shape,
         beta,
-        param_scale: model_scale,
+        cost,
         sampling_s_per_batch: 2e-3,
         batches_per_part: vec![batches / p.max(1); p],
         workload_balancing: wb,
@@ -335,5 +335,23 @@ mod tests {
     #[test]
     fn dse_runs_with_coarse_step() {
         run(&Args::parse(["dse", "--m-step", "128"])).unwrap();
+    }
+
+    #[test]
+    fn simulate_and_dse_accept_every_zoo_model() {
+        for model in crate::runtime::MODEL_NAMES {
+            run(&Args::parse(["simulate", "--dataset", "reddit", "--model", model])).unwrap();
+        }
+        run(&Args::parse(["dse", "--model", "gat", "--m-step", "256"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_model_is_rejected_with_the_expected_set() {
+        for cmd in ["simulate", "dse"] {
+            let err = run(&Args::parse([cmd, "--model", "transformer"])).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("unknown model 'transformer'"), "{cmd}: {msg}");
+            assert!(msg.contains("expected one of gcn|sage|gat|gin"), "{cmd}: {msg}");
+        }
     }
 }

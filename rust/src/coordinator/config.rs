@@ -14,7 +14,8 @@ use crate::util::json::Json;
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub dataset: String,
-    /// "gcn" | "sage".
+    /// Model-zoo architecture (`runtime::MODEL_NAMES`):
+    /// "gcn" | "sage" | "gat" | "gin".
     pub model: String,
     /// Per-layer fanouts (`--fanouts 15,10,5`, DESIGN.md §Mini-batch wire
     /// format order: input-side hop first). `None` = the dataset
@@ -188,6 +189,7 @@ impl TrainConfig {
             ),
             max_iterations: args.opt_str("max-iterations").map(|s| s.parse()).transpose()?,
         };
+        crate::runtime::validate_model(&cfg.model)?;
         anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
         anyhow::ensure!(cfg.epochs >= 1, "--epochs must be >= 1");
         anyhow::ensure!(
@@ -340,6 +342,19 @@ mod tests {
         assert!(TrainConfig::from_args(&args).is_err());
         let args = Args::parse(["train", "--algo", "bogus"]);
         assert!(TrainConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn validates_model_against_the_zoo_registry() {
+        for model in crate::runtime::MODEL_NAMES {
+            let c = TrainConfig::from_args(&Args::parse(["train", "--model", model])).unwrap();
+            assert_eq!(c.model, model);
+        }
+        let err =
+            TrainConfig::from_args(&Args::parse(["train", "--model", "transformer"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown model 'transformer'"), "{msg}");
+        assert!(msg.contains("expected one of gcn|sage|gat|gin"), "{msg}");
     }
 
     #[test]

@@ -314,7 +314,8 @@ impl Trainer {
         Workload {
             shape,
             beta: self.last_beta,
-            param_scale: if self.cfg.model == "sage" { 2.0 } else { 1.0 },
+            cost: crate::fpga::timing::ModelCost::for_model(&self.cfg.model)
+                .expect("model validated by TrainConfig"),
             sampling_s_per_batch: 0.0,
             batches_per_part,
             workload_balancing: self.cfg.workload_balancing,

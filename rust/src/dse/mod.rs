@@ -8,7 +8,7 @@
 //! FPGA suffices (the code still exposes the per-die loop for platforms
 //! with heterogeneous dies).
 
-use crate::fpga::timing::BatchShape;
+use crate::fpga::timing::{BatchShape, ModelCost};
 use crate::fpga::{DeviceSpec, DieConfig, ResourceModel, Utilization};
 use crate::perf::{FleetModel, PlatformModel, PlatformSpec, Workload};
 use crate::sched::SchedMode;
@@ -46,7 +46,10 @@ pub struct DseWorkload {
     /// feature-store policy (`perf::experiments::measure_host_policy`);
     /// the canned paper workloads use the paper's nominal 0.75.
     pub beta: f64,
-    pub param_scale: f64,
+    /// Model-dependent cost terms ([`ModelCost::for_model`]) — makes the
+    /// swept throughput sensitive to the GNN architecture (attention adds
+    /// an edge-proportional stage the update/aggregate overlap can't hide).
+    pub cost: ModelCost,
     pub sampling_s_per_batch: f64,
 }
 
@@ -55,7 +58,7 @@ impl DseWorkload {
         Workload {
             shape: self.shape.clone(),
             beta: self.beta,
-            param_scale: self.param_scale,
+            cost: self.cost,
             sampling_s_per_batch: self.sampling_s_per_batch,
             batches_per_part: vec![batches; p],
             workload_balancing: true,
@@ -305,7 +308,7 @@ impl DseEngine {
 
 /// The four-dataset average workload the paper sweeps in Fig. 7
 /// (GraphSAGE, B=1024, fanouts 25/10).
-pub fn paper_dse_workloads(param_scale: f64) -> Vec<DseWorkload> {
+pub fn paper_dse_workloads(cost: ModelCost) -> Vec<DseWorkload> {
     crate::graph::datasets::REGISTRY
         .iter()
         .map(|spec| DseWorkload {
@@ -315,7 +318,7 @@ pub fn paper_dse_workloads(param_scale: f64) -> Vec<DseWorkload> {
                 &[spec.dims.f0 as f64, spec.dims.f1 as f64, spec.dims.f2 as f64],
             ),
             beta: 0.75,
-            param_scale,
+            cost,
             sampling_s_per_batch: 2e-3,
         })
         .collect()
@@ -332,7 +335,7 @@ mod tests {
     #[test]
     fn explores_nonempty_grid_and_best_is_max() {
         let e = engine();
-        let res = e.explore(&paper_dse_workloads(2.0)).unwrap();
+        let res = e.explore(&paper_dse_workloads(ModelCost::for_model("sage").unwrap())).unwrap();
         assert!(!res.grid.is_empty());
         let max = res
             .grid
@@ -346,7 +349,7 @@ mod tests {
     #[test]
     fn all_grid_points_feasible() {
         let e = engine();
-        let res = e.explore(&paper_dse_workloads(1.0)).unwrap();
+        let res = e.explore(&paper_dse_workloads(ModelCost::GCN)).unwrap();
         for p in &res.grid {
             assert!(p.utilization.feasible(), "{:?}", p.die);
         }
@@ -358,7 +361,7 @@ mod tests {
         // DSE prefers (8,2048) — more update parallelism wins because the
         // optimized aggregation has shifted the bottleneck to update.
         let e = engine();
-        let w = paper_dse_workloads(2.0);
+        let w = paper_dse_workloads(ModelCost::for_model("sage").unwrap());
         let a = e.evaluate_fpga_config(8, 2048, &w).unwrap();
         let b = e.evaluate_fpga_config(16, 1024, &w).unwrap();
         assert!(a.throughput > b.throughput, "a={} b={}", a.throughput, b.throughput);
@@ -367,7 +370,7 @@ mod tests {
     #[test]
     fn rejects_infeasible_config() {
         let e = engine();
-        let w = paper_dse_workloads(1.0);
+        let w = paper_dse_workloads(ModelCost::GCN);
         assert!(e.evaluate_fpga_config(128, 4096, &w).is_err());
         assert!(e.evaluate_fpga_config(7, 2048, &w).is_err()); // not /4
     }
@@ -381,7 +384,7 @@ mod tests {
     #[test]
     fn fleet_dse_picks_a_die_per_kind() {
         let fleet = crate::fpga::parse_fleet("u250:2,u250-half:2").unwrap();
-        let w = paper_dse_workloads(2.0);
+        let w = paper_dse_workloads(ModelCost::for_model("sage").unwrap());
         let res = DseEngine::explore_fleet(&fleet, 205.0, &w, 64).unwrap();
         assert_eq!(res.devices.len(), 4);
         assert_eq!(res.per_kind.len(), 2);
@@ -404,10 +407,24 @@ mod tests {
 
     #[test]
     fn fleet_dse_rejects_empty_inputs() {
-        let w = paper_dse_workloads(1.0);
+        let w = paper_dse_workloads(ModelCost::GCN);
         assert!(DseEngine::explore_fleet(&[], 205.0, &w, 16).is_err());
         let fleet = crate::fpga::parse_fleet("u250").unwrap();
         assert!(DseEngine::explore_fleet(&fleet, 205.0, &[], 16).is_err());
+    }
+
+    #[test]
+    fn dse_estimates_are_model_dependent() {
+        // the attention term must show up in the swept throughput: at a
+        // matched shape, GAT traverses fewer vertices per second than GCN,
+        // and SAGE's doubled update weights also cost on update-bound dies
+        let e = engine();
+        let die = DieConfig { n: 2, m: 512 };
+        let gcn = e.throughput(die, &paper_dse_workloads(ModelCost::GCN));
+        let gat = e.throughput(die, &paper_dse_workloads(ModelCost::for_model("gat").unwrap()));
+        let sage = e.throughput(die, &paper_dse_workloads(ModelCost::for_model("sage").unwrap()));
+        assert!(gat < gcn, "gat={gat} gcn={gcn}");
+        assert!(sage <= gcn, "sage={sage} gcn={gcn}");
     }
 
     #[test]
@@ -416,7 +433,7 @@ mod tests {
         // GraphSAGE config on the 4-dataset average; accept a wide band
         // (this is a model, not their testbed).
         let e = engine();
-        let res = e.explore(&paper_dse_workloads(2.0)).unwrap();
+        let res = e.explore(&paper_dse_workloads(ModelCost::for_model("sage").unwrap())).unwrap();
         assert!(
             res.best.throughput > 2.0e7 && res.best.throughput < 1.0e9,
             "throughput={}",

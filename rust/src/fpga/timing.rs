@@ -68,6 +68,43 @@ pub struct Bandwidths {
     pub pcie_gbs: f64,
 }
 
+/// Architecture-dependent cost knobs of the §6.2 model (HyScale-GNN's
+/// observation: the cost model must price each architecture's stages
+/// differently, or the DSE picks the wrong design point).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelCost {
+    /// Update-stage (MLP) work multiplier vs GCN's single `fin×fout`
+    /// matmul per layer: SAGE's separate self/neighbor weights and
+    /// GIN's 2-layer MLP double it.
+    pub param_scale: f64,
+    /// Edge-proportional attention work added *serially* to the layer
+    /// time (per-edge logits + softmax + score backward cannot overlap
+    /// the aggregate they gate). 0 for non-attention models.
+    pub attn_edge_scale: f64,
+}
+
+impl ModelCost {
+    /// GCN baseline: unit update work, no attention term.
+    pub const GCN: ModelCost = ModelCost { param_scale: 1.0, attn_edge_scale: 0.0 };
+
+    /// Cost knobs for a model-zoo architecture
+    /// (`runtime::model_ops::MODEL_NAMES`).
+    pub fn for_model(model: &str) -> anyhow::Result<ModelCost> {
+        Ok(match model {
+            "gcn" => ModelCost::GCN,
+            "sage" => ModelCost { param_scale: 2.0, attn_edge_scale: 0.0 },
+            // GAT: one transform like GCN, plus 2 serial edge-parallel
+            // passes (forward softmax, backward scores) over |A^l|·f^l
+            "gat" => ModelCost { param_scale: 1.0, attn_edge_scale: 2.0 },
+            "gin" => ModelCost { param_scale: 2.0, attn_edge_scale: 0.0 },
+            other => anyhow::bail!(
+                "unknown model '{other}', expected one of {}",
+                crate::runtime::model_ops::MODEL_NAMES.join("|")
+            ),
+        })
+    }
+}
+
 /// Per-layer timing breakdown.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LayerTiming {
@@ -75,7 +112,11 @@ pub struct LayerTiming {
     pub compute_s: f64,
     pub aggregate_s: f64,
     pub update_s: f64,
-    /// max(aggregate, update): the two stages are pipelined.
+    /// Edge-proportional attention time (0 for non-attention models) —
+    /// serial with the pipelined aggregate/update pair.
+    pub attn_s: f64,
+    /// max(aggregate, update) + attn: aggregate and update pipeline,
+    /// the attention pass gates them.
     pub layer_s: f64,
 }
 
@@ -150,16 +191,21 @@ impl TimingModel {
 
     /// Full mini-batch timing (Eq. 5): Σ over the L layers of the
     /// pipelined layer time, plus loss calculation and the mirrored
-    /// backward pass. `param_scale` = 1 for GCN, 2 for GraphSAGE
-    /// (separate self/neighbor weights double the update work).
-    pub fn batch(&self, shape: &BatchShape, beta: f64, param_scale: f64) -> BatchTiming {
+    /// backward pass. The [`ModelCost`] knobs price the architecture:
+    /// `param_scale` multiplies the update stage (1 for GCN, 2 for
+    /// SAGE/GIN), `attn_edge_scale` adds the edge-proportional
+    /// attention term (GAT) on the aggregation PEs, serial with the
+    /// pipelined aggregate/update pair.
+    pub fn batch(&self, shape: &BatchShape, beta: f64, cost: ModelCost) -> BatchTiming {
         let lcount = shape.layers();
         let mut layers = Vec::with_capacity(lcount);
         let mut fp_s = 0.0;
         for l in 1..=lcount {
             let mut lt = self.layer(shape, l, beta);
-            lt.update_s *= param_scale;
-            lt.layer_s = lt.aggregate_s.max(lt.update_s);
+            lt.update_s *= cost.param_scale;
+            lt.attn_s = cost.attn_edge_scale * shape.a[l - 1] * shape.f[l]
+                / (self.n_total() * self.spec.pe_simd as f64 * self.spec.freq_hz());
+            lt.layer_s = lt.aggregate_s.max(lt.update_s) + lt.attn_s;
             fp_s += lt.layer_s;
             layers.push(lt);
         }
@@ -265,7 +311,7 @@ mod tests {
     fn batch_time_composition() {
         let m = model();
         let s = shape();
-        let b = m.batch(&s, 0.8, 1.0);
+        let b = m.batch(&s, 0.8, ModelCost::GCN);
         assert_eq!(b.layers.len(), 2);
         assert!((b.gnn_s - (b.fp_s + b.lc_s + b.bp_s)).abs() < 1e-15);
         assert!(b.fp_s >= b.layers[0].layer_s);
@@ -276,14 +322,14 @@ mod tests {
     fn batch_time_sums_all_layers_at_depth_three() {
         let m = model();
         let s = BatchShape::nominal(256.0, &[8.0, 5.0, 3.0], &[100.0, 128.0, 128.0, 47.0]);
-        let b = m.batch(&s, 0.8, 1.0);
+        let b = m.batch(&s, 0.8, ModelCost::GCN);
         assert_eq!(b.layers.len(), 3);
         let sum: f64 = b.layers.iter().map(|l| l.layer_s).sum();
         assert!((b.fp_s - sum).abs() < 1e-15);
         // a third layer at positive work strictly increases the total vs
         // the same shape truncated to 2 layers
         let s2 = BatchShape { v: s.v[..3].to_vec(), a: s.a[..2].to_vec(), f: s.f[..3].to_vec() };
-        let b2 = m.batch(&s2, 0.8, 1.0);
+        let b2 = m.batch(&s2, 0.8, ModelCost::GCN);
         assert!(b.fp_s > b2.fp_s);
     }
 
@@ -293,9 +339,40 @@ mod tests {
         // big n / small m so update dominates → param_scale must matter.
         let s = shape();
         let m = TimingModel::new(U250, DieConfig { n: 8, m: 64 }, 16.0);
-        let gcn = m.batch(&s, 1.0, 1.0);
-        let sage = m.batch(&s, 1.0, 2.0);
+        let gcn = m.batch(&s, 1.0, ModelCost::GCN);
+        let sage = m.batch(&s, 1.0, ModelCost::for_model("sage").unwrap());
         assert!(sage.gnn_s > gcn.gnn_s);
+    }
+
+    #[test]
+    fn model_costs_resolve_and_reject_like_the_zoo_registry() {
+        assert_eq!(ModelCost::for_model("gcn").unwrap(), ModelCost::GCN);
+        assert_eq!(ModelCost::for_model("sage").unwrap().param_scale, 2.0);
+        assert!(ModelCost::for_model("gat").unwrap().attn_edge_scale > 0.0);
+        assert_eq!(ModelCost::for_model("gin").unwrap().param_scale, 2.0);
+        let err = ModelCost::for_model("transformer").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'transformer'"), "{err}");
+        assert!(err.contains("gcn|sage|gat|gin"), "{err}");
+    }
+
+    #[test]
+    fn attention_makespan_is_strictly_above_matched_gcn() {
+        // ISSUE 8 acceptance: the attention term is additive (serial
+        // with the pipelined stages), so at ANY matched shape — whether
+        // load-, compute-, or update-bound — GAT prices strictly above
+        // GCN, and the per-layer breakdown exposes the term.
+        let s = shape();
+        for die in [DieConfig { n: 2, m: 512 }, DieConfig { n: 8, m: 64 }] {
+            let m = TimingModel::new(U250, die, 16.0);
+            let gcn = m.batch(&s, 0.8, ModelCost::GCN);
+            let gat = m.batch(&s, 0.8, ModelCost::for_model("gat").unwrap());
+            assert!(gat.gnn_s > gcn.gnn_s, "die {die:?}");
+            for (lg, lc) in gat.layers.iter().zip(&gcn.layers) {
+                assert!(lg.attn_s > 0.0);
+                assert_eq!(lc.attn_s, 0.0);
+                assert!(lg.layer_s > lc.layer_s);
+            }
+        }
     }
 
     #[test]
@@ -319,8 +396,8 @@ mod tests {
     fn beta_one_is_never_slower() {
         let m = model();
         let s = shape();
-        let fast = m.batch(&s, 1.0, 1.0);
-        let slow = m.batch(&s, 0.3, 1.0);
+        let fast = m.batch(&s, 1.0, ModelCost::GCN);
+        let slow = m.batch(&s, 0.3, ModelCost::GCN);
         assert!(fast.gnn_s <= slow.gnn_s);
     }
 }

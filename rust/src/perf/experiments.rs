@@ -11,7 +11,7 @@
 //! only target-set choice that reproduces the paper's NVTPS magnitudes —
 //! see EXPERIMENTS.md §Table 6).
 
-use crate::fpga::timing::BatchShape;
+use crate::fpga::timing::{BatchShape, ModelCost};
 use crate::fpga::{DeviceSpec, DieConfig};
 use crate::graph::datasets::{self, DatasetSpec};
 use crate::partition::{preprocess_with_policy, Algorithm};
@@ -208,7 +208,7 @@ pub fn build_workload(
     Workload {
         shape,
         beta,
-        param_scale: if model == "sage" { 2.0 } else { 1.0 },
+        cost: ModelCost::for_model(model).expect("model validated by measure_host"),
         sampling_s_per_batch: host.sampling_s,
         batches_per_part,
         workload_balancing: wb,

@@ -94,10 +94,14 @@ impl GpuModel {
             t_agg += s.a[l - 1] * s.f[l - 1] * S_FEAT * 3.0 / (hbm * self.eff.gather);
         }
 
-        // update GEMMs: 2·|V^l|·f^{l-1}·f^l MACs per layer
+        // update GEMMs: 2·|V^l|·f^{l-1}·f^l MACs per layer, plus the
+        // per-edge attention score work (f^l MACs per edge) for models
+        // whose cost carries an attention term
         let mut t_upd = 0.0;
         for l in 1..=s.layers() {
-            t_upd += 2.0 * s.v[l] * s.f[l - 1] * s.f[l] * w.param_scale
+            t_upd += 2.0 * s.v[l] * s.f[l - 1] * s.f[l] * w.cost.param_scale
+                / (flops * self.eff.gemm);
+            t_upd += 2.0 * w.cost.attn_edge_scale * s.a[l - 1] * s.f[l]
                 / (flops * self.eff.gemm);
         }
 
@@ -112,7 +116,7 @@ impl GpuModel {
     /// NCCL-style ring allreduce of the gradients over PCIe.
     pub fn allreduce_s(&self, w: &Workload) -> f64 {
         let p = self.spec.num_gpus as f64;
-        let bytes = w.shape.param_bytes(w.param_scale) as f64;
+        let bytes = w.shape.param_bytes(w.cost.param_scale) as f64;
         2.0 * bytes * (p - 1.0) / p / (self.spec.pcie_gbs * 1e9)
     }
 
@@ -160,13 +164,13 @@ impl GpuModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fpga::timing::BatchShape;
+    use crate::fpga::timing::{BatchShape, ModelCost};
 
     fn workload() -> Workload {
         Workload {
             shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.7,
-            param_scale: 1.0,
+            cost: ModelCost::GCN,
             sampling_s_per_batch: 0.001,
             batches_per_part: vec![150; 4],
             workload_balancing: false,

@@ -6,7 +6,7 @@
 pub mod experiments;
 pub mod gpu;
 
-use crate::fpga::timing::{BatchShape, TimingModel, S_FEAT};
+use crate::fpga::timing::{BatchShape, ModelCost, TimingModel, S_FEAT};
 use crate::fpga::{DeviceSpec, DieConfig, FpgaSpec};
 use crate::sched::{epoch_makespan_batches, epoch_makespan_seconds, CostModel, SchedMode, TwoStageScheduler};
 
@@ -51,8 +51,9 @@ pub struct Workload {
     pub shape: BatchShape,
     /// Local-fetch ratio β per FPGA (measured or estimated).
     pub beta: f64,
-    /// 1.0 for GCN, 2.0 for GraphSAGE (self/neighbor weight split).
-    pub param_scale: f64,
+    /// Model-dependent cost terms (weight-matrix multiplicity plus the
+    /// attention edge-score term) — see [`ModelCost::for_model`].
+    pub cost: ModelCost,
     /// Host-side sampling time per mini-batch (overlapped with compute).
     pub sampling_s_per_batch: f64,
     /// Mini-batches per partition for one epoch.
@@ -112,7 +113,7 @@ impl PlatformModel {
 
     /// Gradient synchronisation per iteration (Eq. 4's extra term).
     pub fn gradient_sync_s(&self, w: &Workload) -> f64 {
-        let param_bytes = w.shape.param_bytes(w.param_scale);
+        let param_bytes = w.shape.param_bytes(w.cost.param_scale);
         crate::comm::gradient_sync_seconds(
             param_bytes,
             self.spec.num_fpgas,
@@ -197,12 +198,12 @@ pub fn device_batch_gnn_s(
         // batch i's compute. Steady state: per-batch time is the max
         // of (GNN time with all features staged locally) and the
         // PCIe/host fetch time of one batch's misses.
-        let gnn_local = t.batch(&w.shape, 1.0, w.param_scale).gnn_s;
+        let gnn_local = t.batch(&w.shape, 1.0, w.cost).gnn_s;
         let miss_bytes = w.shape.v[0] * w.shape.f[0] * S_FEAT * (1.0 - w.beta);
         let fetch = miss_bytes / (miss_gbs * 1e9) + extra;
         gnn_local.max(fetch)
     } else {
-        t.batch(&w.shape, w.beta, w.param_scale).gnn_s + extra
+        t.batch(&w.shape, w.beta, w.cost).gnn_s + extra
     }
 }
 
@@ -265,7 +266,7 @@ impl FleetModel {
     pub fn gradient_sync_s(&self, w: &Workload) -> f64 {
         let min_pcie = self.devices.iter().map(|d| d.pcie_gbs).fold(f64::INFINITY, f64::min);
         crate::comm::gradient_sync_seconds(
-            w.shape.param_bytes(w.param_scale),
+            w.shape.param_bytes(w.cost.param_scale),
             self.devices.len(),
             min_pcie,
             self.cpu_mem_gbs,
@@ -350,7 +351,7 @@ mod tests {
         Workload {
             shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.8,
-            param_scale: 1.0,
+            cost: ModelCost::GCN,
             sampling_s_per_batch: 0.001,
             batches_per_part: vec![48; p],
             workload_balancing: true,

@@ -534,6 +534,265 @@ pub fn scatter_self(dh: &mut [f32], dout: &[f32], idx: &[i32], rows: usize, k: u
     }
 }
 
+/// Shared masked-softmax pass of [`attn_edge_softmax`]: identical scalar
+/// code on every tier (and in the [`scalar`] oracle), so the kernel
+/// family stays bit-exact as long as the logit phase is. Entries whose
+/// wire weight is zero (padding) come out exactly 0, and all-padding
+/// rows are zeroed without computing an exp.
+#[inline]
+fn softmax_masked_row(arow: &mut [f32], wrow: &[f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for (a, &wv) in arow.iter().zip(wrow) {
+        if wv != 0.0 && *a > m {
+            m = *a;
+        }
+    }
+    if m == f32::NEG_INFINITY {
+        arow.fill(0.0);
+        return;
+    }
+    let mut s = 0.0f32;
+    for (a, &wv) in arow.iter_mut().zip(wrow) {
+        if wv != 0.0 {
+            let e = (*a - m).exp();
+            *a = e;
+            s += e;
+        } else {
+            *a = 0.0;
+        }
+    }
+    for a in arow.iter_mut() {
+        *a /= s;
+    }
+}
+
+/// GAT edge-parallel attention weights (DESIGN.md §Model zoo): for each
+/// of the `rows` ragged neighbor lists in the padded `idx`/`w` wire
+/// format, compute the logit
+/// `e[r,c] = leakyrelu(sself[idx[r,0]] + snbr[idx[r,c]], slope)` and
+/// write the max-subtracted masked softmax over the row's real columns
+/// (`w[r,c] != 0`) into `alpha[r,c]`. Padding columns come out exactly
+/// 0 and all-padding rows produce all-zero alpha rows, so downstream
+/// gather/scatter kernels skip them like any other zero weight.
+///
+/// Bit-exact across tiers: the AVX2 twin vectorizes only the
+/// gather+add+LeakyReLU logit phase with lane-wise IEEE-identical
+/// operations (no FMA), and every tier runs the same scalar softmax
+/// pass ([`softmax_masked_row`]).
+#[allow(clippy::too_many_arguments)]
+pub fn attn_edge_softmax(
+    alpha: &mut [f32],
+    sself: &[f32],
+    snbr: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    slope: f32,
+) {
+    debug_assert!(alpha.len() >= rows * k && idx.len() >= rows * k && w.len() >= rows * k);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::attn_edge_softmax(alpha, sself, snbr, idx, w, rows, k, slope) };
+        return;
+    }
+    attn_edge_softmax_blocked(alpha, sself, snbr, idx, w, rows, k, slope)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_edge_softmax_blocked(
+    alpha: &mut [f32],
+    sself: &[f32],
+    snbr: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    slope: f32,
+) {
+    for r in 0..rows {
+        let s0 = sself[idx[r * k] as usize];
+        let arow = &mut alpha[r * k..(r + 1) * k];
+        for (a, &i) in arow.iter_mut().zip(&idx[r * k..(r + 1) * k]) {
+            let x = s0 + snbr[i as usize];
+            *a = if x > 0.0 { x } else { slope * x };
+        }
+        softmax_masked_row(arow, &w[r * k..(r + 1) * k]);
+    }
+}
+
+/// Per-edge gradient dot products of the GAT backward:
+/// `dalpha[r,c] = ⟨dz[r,·], ht[idx[r,c],·]⟩` for every real column
+/// (`mask[r,c] != 0`, the forward alpha — zero exactly on padding);
+/// padding columns are written as exactly 0. Matmul-family numerics:
+/// the AVX2 tier uses FMA dot products (FP tolerance vs the scalar
+/// oracle), the blocked tier matches the oracle exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_edge_dot(
+    dalpha: &mut [f32],
+    dz: &[f32],
+    ht: &[f32],
+    idx: &[i32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+) {
+    debug_assert!(dalpha.len() >= rows * k && dz.len() >= rows * f);
+    #[cfg(target_arch = "x86_64")]
+    if use_simd() {
+        // SAFETY: use_simd() implies AVX2+FMA were detected at runtime.
+        unsafe { x86::attn_edge_dot(dalpha, dz, ht, idx, mask, rows, k, f) };
+        return;
+    }
+    attn_edge_dot_blocked(dalpha, dz, ht, idx, mask, rows, k, f)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_edge_dot_blocked(
+    dalpha: &mut [f32],
+    dz: &[f32],
+    ht: &[f32],
+    idx: &[i32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+) {
+    for r in 0..rows {
+        let drow = &dz[r * f..(r + 1) * f];
+        for c in 0..k {
+            let o = &mut dalpha[r * k + c];
+            if mask[r * k + c] == 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            let src = idx[r * k + c] as usize;
+            let hrow = &ht[src * f..(src + 1) * f];
+            let mut acc = 0.0f32;
+            for (&dv, &hv) in drow.iter().zip(hrow) {
+                acc += dv * hv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// In-place softmax + LeakyReLU backward over the attention lane:
+/// entering, `dalpha` holds ∂loss/∂alpha; leaving, it holds the
+/// raw-logit gradient
+/// `de[r,c] = lrelu'(x)·alpha[r,c]·(dalpha[r,c] − Σ_c' alpha[r,c']·dalpha[r,c'])`
+/// with the LeakyReLU mask recomputed from the forward per-vertex
+/// scores (`x = sself[idx[r,0]] + snbr[idx[r,c]]`). Scalar on every
+/// tier — the fixed accumulation order keeps the backward
+/// bit-deterministic. Padding columns (alpha exactly 0) contribute
+/// exact zeros.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_softmax_backward(
+    dalpha: &mut [f32],
+    alpha: &[f32],
+    sself: &[f32],
+    snbr: &[f32],
+    idx: &[i32],
+    rows: usize,
+    k: usize,
+    slope: f32,
+) {
+    debug_assert!(dalpha.len() >= rows * k && alpha.len() >= rows * k);
+    for r in 0..rows {
+        let arow = &alpha[r * k..(r + 1) * k];
+        let drow = &mut dalpha[r * k..(r + 1) * k];
+        let mut s = 0.0f32;
+        for (&av, &dv) in arow.iter().zip(drow.iter()) {
+            s += av * dv;
+        }
+        let s0 = sself[idx[r * k] as usize];
+        for (c, (d, &av)) in drow.iter_mut().zip(arow).enumerate() {
+            if av == 0.0 {
+                // padding (or fully-saturated-away) edge: exactly zero,
+                // without reading the stale score behind a padding index
+                *d = 0.0;
+                continue;
+            }
+            let de = av * (*d - s);
+            let x = s0 + snbr[idx[r * k + c] as usize];
+            *d = if x > 0.0 { de } else { slope * de };
+        }
+    }
+}
+
+/// Scatter the raw-logit gradients back onto the per-vertex score
+/// gradients: `dsself[idx[r,0]] += Σ_c draw[r,c]` and
+/// `dsnbr[idx[r,c]] += draw[r,c]`. The caller zeroes the live regions
+/// first.
+pub fn attn_scatter_scores(
+    dsself: &mut [f32],
+    dsnbr: &mut [f32],
+    draw: &[f32],
+    idx: &[i32],
+    rows: usize,
+    k: usize,
+) {
+    for r in 0..rows {
+        let mut row_sum = 0.0f32;
+        for c in 0..k {
+            let d = draw[r * k + c];
+            row_sum += d;
+            dsnbr[idx[r * k + c] as usize] += d;
+        }
+        dsself[idx[r * k] as usize] += row_sum;
+    }
+}
+
+/// `out[r, ·] += bias` over the first `n` rows (the attention
+/// aggregate's bias, applied after the alpha-weighted gather).
+pub fn add_bias(out: &mut [f32], bias: &[f32], n: usize, f: usize) {
+    debug_assert!(out.len() >= n * f && bias.len() == f);
+    for r in 0..n {
+        for (o, &bv) in out[r * f..(r + 1) * f].iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+}
+
+/// `out[..len] += scale · x[..len]` (GIN's (1+ε)-weighted self rows).
+pub fn scaled_add(out: &mut [f32], x: &[f32], scale: f32, len: usize) {
+    for (o, &xv) in out[..len].iter_mut().zip(&x[..len]) {
+        *o += scale * xv;
+    }
+}
+
+/// `Σ_i a[i]·b[i]` over the first `len` elements with fixed
+/// left-to-right accumulation (GIN's ∂loss/∂ε).
+pub fn dot(a: &[f32], b: &[f32], len: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for (&av, &bv) in a[..len].iter().zip(&b[..len]) {
+        acc += av * bv;
+    }
+    acc
+}
+
+/// [`scatter_self`] with a scalar weight:
+/// `dh[idx[r,0]] += scale · dout[r, ·]` (GIN's (1+ε)-scaled self-path
+/// input gradient).
+pub fn scatter_self_scaled(
+    dh: &mut [f32],
+    dout: &[f32],
+    idx: &[i32],
+    scale: f32,
+    rows: usize,
+    k: usize,
+    f: usize,
+) {
+    for r in 0..rows {
+        let src = idx[r * k] as usize;
+        for j in 0..f {
+            dh[src * f + j] += scale * dout[r * f + j];
+        }
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod x86 {
     //! Width-8 AVX2+FMA microkernels ([`super::Tier::Avx2Fma`]).
@@ -914,6 +1173,93 @@ pub(crate) mod x86 {
             }
         }
     }
+
+    /// See [`super::attn_edge_softmax`] (bit-exact with the scalar
+    /// oracle): the logit phase vectorizes the neighbor-score gather,
+    /// the broadcast add, and a compare+blend LeakyReLU — all lane-wise
+    /// IEEE-identical to the scalar expression (no FMA) — then the
+    /// masked-softmax pass is the shared scalar code. Requires every
+    /// `idx` entry to be in bounds for `snbr` (wire-format invariant:
+    /// padding indices stay within the level's capacity).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn attn_edge_softmax(
+        alpha: &mut [f32],
+        sself: &[f32],
+        snbr: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        slope: f32,
+    ) {
+        let k8 = k & !7;
+        let zero = _mm256_setzero_ps();
+        let sv = _mm256_set1_ps(slope);
+        for r in 0..rows {
+            let s0 = sself[idx[r * k] as usize];
+            let s0v = _mm256_set1_ps(s0);
+            let ip = idx.as_ptr().add(r * k);
+            let arow = &mut alpha[r * k..(r + 1) * k];
+            let ap = arow.as_mut_ptr();
+            let mut c = 0;
+            while c < k8 {
+                let vi = _mm256_loadu_si256(ip.add(c) as *const __m256i);
+                let x = _mm256_add_ps(s0v, _mm256_i32gather_ps::<4>(snbr.as_ptr(), vi));
+                let e = _mm256_blendv_ps(
+                    _mm256_mul_ps(sv, x),
+                    x,
+                    _mm256_cmp_ps::<_CMP_GT_OQ>(x, zero),
+                );
+                _mm256_storeu_ps(ap.add(c), e);
+                c += 8;
+            }
+            for c in k8..k {
+                let x = s0 + snbr[*ip.add(c) as usize];
+                arow[c] = if x > 0.0 { x } else { slope * x };
+            }
+            super::softmax_masked_row(arow, &w[r * k..(r + 1) * k]);
+        }
+    }
+
+    /// See [`super::attn_edge_dot`] (FMA dot products — matmul-family
+    /// FP tolerance vs the scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn attn_edge_dot(
+        dalpha: &mut [f32],
+        dz: &[f32],
+        ht: &[f32],
+        idx: &[i32],
+        mask: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+    ) {
+        let f8 = f & !7;
+        for r in 0..rows {
+            let dp = dz.as_ptr().add(r * f);
+            for c in 0..k {
+                let o = &mut dalpha[r * k + c];
+                if mask[r * k + c] == 0.0 {
+                    *o = 0.0;
+                    continue;
+                }
+                let hp = ht.as_ptr().add(idx[r * k + c] as usize * f);
+                let mut s = _mm256_setzero_ps();
+                let mut j = 0;
+                while j < f8 {
+                    s = _mm256_fmadd_ps(_mm256_loadu_ps(dp.add(j)), _mm256_loadu_ps(hp.add(j)), s);
+                    j += 8;
+                }
+                let mut acc = hsum(s);
+                for j in f8..f {
+                    acc += *dp.add(j) * *hp.add(j);
+                }
+                *o = acc;
+            }
+        }
+    }
 }
 
 pub mod scalar {
@@ -1097,6 +1443,58 @@ pub mod scalar {
     /// See [`super::relu_mask`]: gradient through relu as a fresh buffer.
     pub fn relu_grad(z: &[f32], dh: &[f32]) -> Vec<f32> {
         z.iter().zip(dh).map(|(&zv, &dv)| if zv > 0.0 { dv } else { 0.0 }).collect()
+    }
+
+    /// See [`super::attn_edge_softmax`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_edge_softmax(
+        sself: &[f32],
+        snbr: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        rows: usize,
+        k: usize,
+        slope: f32,
+    ) -> Vec<f32> {
+        let mut alpha = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            let s0 = sself[idx[r * k] as usize];
+            let arow = &mut alpha[r * k..(r + 1) * k];
+            for (a, &i) in arow.iter_mut().zip(&idx[r * k..(r + 1) * k]) {
+                let x = s0 + snbr[i as usize];
+                *a = if x > 0.0 { x } else { slope * x };
+            }
+            super::softmax_masked_row(arow, &w[r * k..(r + 1) * k]);
+        }
+        alpha
+    }
+
+    /// See [`super::attn_edge_dot`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_edge_dot(
+        dz: &[f32],
+        ht: &[f32],
+        idx: &[i32],
+        mask: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            for c in 0..k {
+                if mask[r * k + c] == 0.0 {
+                    continue;
+                }
+                let src = idx[r * k + c] as usize;
+                let mut acc = 0.0f32;
+                for j in 0..f {
+                    acc += dz[r * f + j] * ht[src * f + j];
+                }
+                out[r * k + c] = acc;
+            }
+        }
+        out
     }
 }
 
@@ -1314,6 +1712,168 @@ mod tests {
         aggregate(&mut got, &h, &idx, &w, 4, 5, 3, false);
         assert!(got.iter().all(|&x| x == 0.0));
         assert_eq!(got, scalar::aggregate(&h, &idx, &w, 4, 5, 3, false));
+    }
+
+    #[test]
+    fn attn_edge_softmax_matches_scalar_bit_exactly_and_normalizes() {
+        let mut rng = Rng::new(10);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // rows=0, k=1 (self-only lists), and ragged rows via rand_block's
+        // zero-weight columns / fully-padded rows
+        for (rows, k) in [(0, 3), (1, 1), (4, 1), (7, 4), (12, 6), (9, 16)] {
+            let n_src = (2 * rows).max(4);
+            let sself = rand_mat(&mut rng, n_src, 1, false);
+            let snbr = rand_mat(&mut rng, n_src, 1, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            let want = scalar::attn_edge_softmax(&sself, &snbr, &idx, &w, rows, k, 0.2);
+            let mut got = vec![f32::NAN; rows * k];
+            attn_edge_softmax(&mut got, &sself, &snbr, &idx, &w, rows, k, 0.2);
+            assert_eq!(bits(&got), bits(&want), "attn_edge_softmax {rows}x{k}");
+            for r in 0..rows {
+                let real = (0..k).filter(|&c| w[r * k + c] != 0.0).count();
+                let arow = &got[r * k..(r + 1) * k];
+                if real == 0 {
+                    assert!(arow.iter().all(|&a| a == 0.0), "padding row {r} must be 0");
+                    continue;
+                }
+                let sum: f32 = arow.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+                for (c, &a) in arow.iter().enumerate() {
+                    assert!(a >= 0.0, "row {r} col {c}: alpha {a} < 0");
+                    assert!(w[r * k + c] != 0.0 || a == 0.0, "row {r} col {c}: padding not 0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attn_edge_dot_matches_scalar_oracle() {
+        let mut rng = Rng::new(11);
+        for (rows, k, f) in [(0, 3, 4), (4, 1, 5), (7, 4, 3), (12, 6, 8), (5, 3, 19)] {
+            let n_src = (2 * rows).max(4);
+            let ht = rand_mat(&mut rng, n_src, f, false);
+            let dz = rand_mat(&mut rng, rows, f, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            let want = scalar::attn_edge_dot(&dz, &ht, &idx, &w, rows, k, f);
+            let mut got = vec![f32::NAN; rows * k];
+            attn_edge_dot(&mut got, &dz, &ht, &idx, &w, rows, k, f);
+            assert_close(&got, &want, 1e-5, &format!("attn_edge_dot {rows}x{k}x{f}"));
+        }
+    }
+
+    #[test]
+    fn attn_softmax_backward_is_shift_invariant_and_masks_padding() {
+        // A constant dalpha over a softmax row must yield (near-)zero
+        // raw-logit gradients — softmax is invariant to constant logit
+        // shifts — and padding columns (alpha exactly 0) must vanish.
+        let (rows, k, n_src) = (3usize, 4usize, 6usize);
+        let mut rng = Rng::new(12);
+        let sself = rand_mat(&mut rng, n_src, 1, false);
+        let snbr = rand_mat(&mut rng, n_src, 1, false);
+        let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+        let alpha = scalar::attn_edge_softmax(&sself, &snbr, &idx, &w, rows, k, 0.2);
+        let mut dalpha = vec![0.5f32; rows * k];
+        attn_softmax_backward(&mut dalpha, &alpha, &sself, &snbr, &idx, rows, k, 0.2);
+        for (i, &d) in dalpha.iter().enumerate() {
+            assert!(d.abs() < 1e-6, "constant dalpha must vanish, got {d} at {i}");
+        }
+    }
+
+    #[test]
+    fn attn_scatter_scores_matches_naive_two_pass() {
+        let mut rng = Rng::new(13);
+        for (rows, k) in [(0, 3), (4, 1), (7, 4), (12, 6)] {
+            let n_src = (2 * rows).max(4);
+            let (idx, _) = rand_block(&mut rng, rows, k, n_src);
+            let draw = rand_mat(&mut rng, rows, k, false);
+            let mut dsself = vec![0.0f32; n_src];
+            let mut dsnbr = vec![0.0f32; n_src];
+            attn_scatter_scores(&mut dsself, &mut dsnbr, &draw, &idx, rows, k);
+            let mut want_self = vec![0.0f32; n_src];
+            let mut want_nbr = vec![0.0f32; n_src];
+            for r in 0..rows {
+                let mut s = 0.0f32;
+                for c in 0..k {
+                    s += draw[r * k + c];
+                    want_nbr[idx[r * k + c] as usize] += draw[r * k + c];
+                }
+                want_self[idx[r * k] as usize] += s;
+            }
+            assert_eq!(dsself, want_self, "dsself {rows}x{k}");
+            assert_eq!(dsnbr, want_nbr, "dsnbr {rows}x{k}");
+        }
+    }
+
+    #[test]
+    fn small_elementwise_kernels_match_reference_expressions() {
+        let mut rng = Rng::new(14);
+        let x = rand_mat(&mut rng, 5, 7, false);
+        let bias = rand_mat(&mut rng, 1, 7, false);
+        let mut out = x.clone();
+        add_bias(&mut out, &bias, 5, 7);
+        for r in 0..5 {
+            for j in 0..7 {
+                assert_eq!(out[r * 7 + j], x[r * 7 + j] + bias[j]);
+            }
+        }
+
+        let y = rand_mat(&mut rng, 5, 7, false);
+        let mut out = x.clone();
+        scaled_add(&mut out, &y, 1.25, 35);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, x[i] + 1.25 * y[i]);
+        }
+
+        let d = dot(&x, &y, 35);
+        let mut want = 0.0f32;
+        for (&xv, &yv) in x.iter().zip(&y) {
+            want += xv * yv;
+        }
+        assert_eq!(d.to_bits(), want.to_bits());
+
+        let idx = vec![3i32, 0, 1, 0, 2, 0]; // rows=3, k=2
+        let dout = rand_mat(&mut rng, 3, 4, false);
+        let mut dh = vec![0.0f32; 5 * 4];
+        scatter_self_scaled(&mut dh, &dout, &idx, 1.5, 3, 2, 4);
+        let mut want = vec![0.0f32; 5 * 4];
+        for r in 0..3 {
+            let src = idx[r * 2] as usize;
+            for j in 0..4 {
+                want[src * 4 + j] += 1.5 * dout[r * 4 + j];
+            }
+        }
+        assert_eq!(dh, want);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_attention_kernels_match_scalar_oracle() {
+        if !simd_supported() {
+            return; // fallback hosts: the dispatch tests above cover it
+        }
+        let mut rng = Rng::new(15);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // k ≥ 8 exercises the gathered vector path; k=1 and rows=0 the
+        // degenerate scalar tails
+        for (rows, k, f) in [(0, 3, 4), (4, 1, 5), (7, 9, 3), (12, 16, 8), (5, 21, 19)] {
+            let n_src = (2 * rows).max(4);
+            let sself = rand_mat(&mut rng, n_src, 1, false);
+            let snbr = rand_mat(&mut rng, n_src, 1, false);
+            let (idx, w) = rand_block(&mut rng, rows, k, n_src);
+            let tag = format!("simd attn {rows}x{k}x{f}");
+
+            let want = scalar::attn_edge_softmax(&sself, &snbr, &idx, &w, rows, k, 0.2);
+            let mut got = vec![f32::NAN; rows * k];
+            unsafe { x86::attn_edge_softmax(&mut got, &sself, &snbr, &idx, &w, rows, k, 0.2) };
+            assert_eq!(bits(&got), bits(&want), "{tag} softmax");
+
+            let ht = rand_mat(&mut rng, n_src, f, false);
+            let dz = rand_mat(&mut rng, rows, f, false);
+            let want = scalar::attn_edge_dot(&dz, &ht, &idx, &w, rows, k, f);
+            let mut got = vec![f32::NAN; rows * k];
+            unsafe { x86::attn_edge_dot(&mut got, &dz, &ht, &idx, &w, rows, k, f) };
+            assert_close(&got, &want, 1e-5, &format!("{tag} edge dot"));
+        }
     }
 
     #[test]

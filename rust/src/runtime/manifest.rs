@@ -111,7 +111,7 @@ pub struct ArtifactEntry {
     pub name: String,
     /// "train" or "predict".
     pub kind: String,
-    /// "gcn" or "sage".
+    /// Model-zoo name (`model_ops::MODEL_NAMES`): gcn, sage, gat, gin.
     pub model: String,
     pub dataset: String,
     /// HLO text file, absolute.
@@ -134,8 +134,16 @@ impl ArtifactEntry {
 
 /// The canonical per-layer parameter list of
 /// `python/compile/model.py::init_params` for an L-layer model: GCN has
-/// (w_l, b_l) per layer, SAGE (w_l_self, w_l_nbr, b_l). At L = 2 this is
-/// exactly the seed's parameter order.
+/// (w_l, b_l) per layer, SAGE (w_l_self, w_l_nbr, b_l), GAT
+/// (w_l, a_l_self, a_l_nbr, b_l — single-head attention vectors of the
+/// output width), GIN (w_l_1, b_l_1, w_l_2, b_l_2, eps_l — the 2-layer
+/// MLP update plus the trainable scalar ε). At L = 2 the gcn/sage lists
+/// are exactly the seed's parameter order.
+///
+/// Every model name must be one of `model_ops::MODEL_NAMES` — callers
+/// validate at their entry point (`model_ops::validate_model`), so an
+/// unknown name here is a bug, not user input, and panics loudly
+/// instead of silently borrowing another model's layout.
 pub fn param_specs(model: &str, dims: &ArtifactDims) -> Vec<(String, Vec<usize>)> {
     let mut params = Vec::new();
     for l in 1..=dims.layers() {
@@ -145,11 +153,28 @@ pub fn param_specs(model: &str, dims: &ArtifactDims) -> Vec<(String, Vec<usize>)
                 params.push((format!("w{l}"), vec![fin, fout]));
                 params.push((format!("b{l}"), vec![fout]));
             }
-            _ => {
+            "sage" => {
                 params.push((format!("w{l}_self"), vec![fin, fout]));
                 params.push((format!("w{l}_nbr"), vec![fin, fout]));
                 params.push((format!("b{l}"), vec![fout]));
             }
+            "gat" => {
+                params.push((format!("w{l}"), vec![fin, fout]));
+                params.push((format!("a{l}_self"), vec![fout]));
+                params.push((format!("a{l}_nbr"), vec![fout]));
+                params.push((format!("b{l}"), vec![fout]));
+            }
+            "gin" => {
+                params.push((format!("w{l}_1"), vec![fin, fout]));
+                params.push((format!("b{l}_1"), vec![fout]));
+                params.push((format!("w{l}_2"), vec![fout, fout]));
+                params.push((format!("b{l}_2"), vec![fout]));
+                params.push((format!("eps{l}"), vec![1]));
+            }
+            other => panic!(
+                "unknown model '{other}' in param_specs — callers must \
+                 validate via model_ops::validate_model first"
+            ),
         }
     }
     params
@@ -319,8 +344,9 @@ impl Manifest {
     /// tiny (b=32, fanouts [3, 2]) plus the Table-4 datasets (b=256,
     /// fanouts [10, 5]), for gcn and sage, train and predict — plus a
     /// 3-layer SAGE tiny entry (fanouts [3, 2, 2], DistDGL's deeper
-    /// recipe scaled down). Entry `path`s point into `dir` but are not
-    /// required to exist (reference backend).
+    /// recipe scaled down) and tiny entries for the gat/gin model
+    /// families (the zoo's quickstart shapes). Entry `path`s point into
+    /// `dir` but are not required to exist (reference backend).
     pub fn builtin(dir: &Path) -> Manifest {
         let mut entries = Vec::new();
         for model in ["gcn", "sage"] {
@@ -332,6 +358,9 @@ impl Manifest {
         }
         let tiny = crate::graph::datasets::TINY;
         push_builtin(&mut entries, dir, "sage", tiny.key, 32, &[3, 2, 2], tiny.dims);
+        for model in ["gat", "gin"] {
+            push_builtin(&mut entries, dir, model, tiny.key, 32, &[3, 2], tiny.dims);
+        }
         Manifest { dir: dir.to_path_buf(), entries }
     }
 
@@ -393,8 +422,8 @@ mod tests {
     fn builtin_covers_all_models_and_datasets() {
         let m = Manifest::builtin(Path::new("/nonexistent"));
         // 2 models × (4 registry + tiny) × (train, predict) + the
-        // 3-layer SAGE tiny pair
-        assert_eq!(m.entries.len(), 2 * 5 * 2 + 2);
+        // 3-layer SAGE tiny pair + the gat/gin tiny pairs
+        assert_eq!(m.entries.len(), 2 * 5 * 2 + 2 + 2 * 2);
         let e = m.find("train", "gcn", "tiny").unwrap();
         assert_eq!(e.dims.b, 32);
         assert_eq!(e.dims.caps[1], 32 * 3);
@@ -405,6 +434,38 @@ mod tests {
         assert_eq!(s.params.len(), 6);
         assert_eq!(s.outputs, vec!["logits".to_string()]);
         assert_eq!(s.dims.f0(), 100);
+    }
+
+    #[test]
+    fn builtin_has_gat_and_gin_tiny_entries_with_zoo_layouts() {
+        let m = Manifest::builtin(Path::new("/nonexistent"));
+        let g = m.find("train", "gat", "tiny").unwrap();
+        // per layer: w [fin,fout], a_self [fout], a_nbr [fout], b [fout]
+        assert_eq!(g.params.len(), 8);
+        assert_eq!(g.params[0], ("w1".to_string(), vec![32, 16]));
+        assert_eq!(g.params[1], ("a1_self".to_string(), vec![16]));
+        assert_eq!(g.params[2], ("a1_nbr".to_string(), vec![16]));
+        assert_eq!(g.params[7], ("b2".to_string(), vec![8]));
+        assert!(g.outputs.iter().any(|o| o == "grad_a2_nbr"));
+        let n = m.find("train", "gin", "tiny").unwrap();
+        // per layer: w1 [fin,fout], b1 [fout], w2 [fout,fout], b2 [fout],
+        // eps [1]
+        assert_eq!(n.params.len(), 10);
+        assert_eq!(n.params[0], ("w1_1".to_string(), vec![32, 16]));
+        assert_eq!(n.params[2], ("w1_2".to_string(), vec![16, 16]));
+        assert_eq!(n.params[4], ("eps1".to_string(), vec![1]));
+        assert_eq!(n.params[9], ("eps2".to_string(), vec![1]));
+        assert!(m.find("predict", "gat", "tiny").is_ok());
+        assert!(m.find("predict", "gin", "tiny").is_ok());
+        // gat/gin ship tiny-only: the Table-4 datasets stay gcn/sage
+        assert!(m.find("train", "gat", "reddit").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model")]
+    fn param_specs_panics_on_unvalidated_model_names() {
+        let d = ArtifactDims::from_batch(4, &[2], &[8, 4]);
+        let _ = param_specs("transformer", &d);
     }
 
     #[test]

@@ -21,10 +21,12 @@
 pub mod executor;
 pub mod kernels;
 pub mod manifest;
+pub mod model_ops;
 pub mod reference;
 pub mod workspace;
 
 pub use executor::{BatchBuffers, GradBuffers, StepOutput, TrainExecutor};
 pub use manifest::{ArtifactDims, ArtifactEntry, Manifest};
+pub use model_ops::{ops_for, validate_model, ModelOps, MODEL_NAMES};
 pub use reference::RefModel;
-pub use workspace::Workspace;
+pub use workspace::{LaneSpec, Workspace};

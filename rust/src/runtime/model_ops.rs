@@ -1,0 +1,714 @@
+//! The pluggable model-ops seam (DESIGN.md §Model zoo).
+//!
+//! Every GNN architecture the reference executor can train is a
+//! [`ModelOps`] implementation: a stateless description of one layer's
+//! forward and backward stages as a fixed sequence of
+//! [`kernels`](super::kernels) calls over the [`Workspace`] arena. The
+//! executor owns the loop structure (layer order, inter-layer relu,
+//! loss); the ops own everything architecture-specific (which lanes
+//! they touch, how many params a layer carries, which kernels fire in
+//! which order). Adding a model means implementing this trait plus a
+//! [`param_specs`](super::manifest::ArtifactEntry) arm — nothing in the
+//! executor, sampler, or coordinator changes.
+//!
+//! Two hard invariants every impl must keep:
+//!
+//! - **Zero allocation**: the blocked `forward_layer`/`backward_layer`
+//!   stages may only write into `Workspace` lanes declared by
+//!   [`ModelOps::lane_spec`] and the caller-provided grad buffers. The
+//!   full-iteration alloc audit runs against every registered model.
+//! - **Fixed accumulation order**: the kernel sequence (and therefore
+//!   the f32 rounding order) must not depend on row count, thread
+//!   count, or batch content — the pipeline determinism law is sweep-
+//!   tested per model.
+//!
+//! The `*_scalar` twins re-express the same math over the seed's
+//! allocating scalar kernels and serve as the oracle for the
+//! blocked/SIMD path (`blocked_path_matches_scalar_oracle` in
+//! `reference.rs`).
+
+use super::executor::BatchBuffers;
+use super::kernels::{self, scalar};
+use super::workspace::{LaneSpec, Workspace};
+
+/// LeakyReLU slope of the GAT attention logits (the GAT paper's 0.2).
+pub const LEAKY_SLOPE: f32 = 0.2;
+
+/// Canonical model names, in the order they appear in sweeps, docs,
+/// and the "expected one of" validation error.
+pub const MODEL_NAMES: [&str; 4] = ["gcn", "sage", "gat", "gin"];
+
+/// Resolve a model name to its ops table, or fail with the canonical
+/// validation error ("unknown model 'X', expected one of ...").
+pub fn ops_for(model: &str) -> anyhow::Result<&'static dyn ModelOps> {
+    match model {
+        "gcn" => Ok(&GcnOps),
+        "sage" => Ok(&SageOps),
+        "gat" => Ok(&GatOps),
+        "gin" => Ok(&GinOps),
+        other => anyhow::bail!(
+            "unknown model '{other}', expected one of {}",
+            MODEL_NAMES.join("|")
+        ),
+    }
+}
+
+/// Entry-point validation of a `--model` string (CLI, config, API):
+/// same registry and error message as [`ops_for`], without exposing
+/// the ops table.
+pub fn validate_model(model: &str) -> anyhow::Result<()> {
+    ops_for(model).map(|_| ())
+}
+
+/// Per-layer geometry handed to every stage. `n`/`below` are the row
+/// counts actually processed at this level and the level beneath it —
+/// the real (clamped) counts on the hot path, the full capacities on
+/// the scalar-oracle and predict paths.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCtx {
+    /// 1-based layer index.
+    pub l: usize,
+    /// Total layer count of the model instance.
+    pub lcount: usize,
+    /// Rows computed at level `l`.
+    pub n: usize,
+    /// Rows live at level `l - 1` (the gather source).
+    pub below: usize,
+    /// Padded neighbor-list width at this level (`fanouts[l-1] + 1`).
+    pub k: usize,
+    /// Input feature width.
+    pub fin: usize,
+    /// Output feature width.
+    pub fout: usize,
+}
+
+/// Forward intermediates of one layer on the scalar-oracle path.
+/// Unused lanes stay empty; each architecture fills exactly the lanes
+/// its backward stage reads.
+#[derive(Default)]
+pub struct ScalarLayer {
+    /// Aggregated neighborhood (gcn/sage; gin stores the full MLP input
+    /// `sum + (1+eps)·self` here).
+    pub agg: Vec<f32>,
+    /// Self rows (sage concat half, gin eps path).
+    pub selfr: Vec<f32>,
+    /// Pre-activation output; the last layer's `z` is the logits.
+    pub z: Vec<f32>,
+    /// GAT: transformed features `hin · W` over the below-level rows.
+    pub ht: Vec<f32>,
+    /// GAT: per-edge attention weights.
+    pub alpha: Vec<f32>,
+    /// GAT: per-vertex self scores `ht · a_self`.
+    pub sself: Vec<f32>,
+    /// GAT: per-vertex neighbor scores `ht · a_nbr`.
+    pub snbr: Vec<f32>,
+    /// GIN: first MLP pre-activation.
+    pub z1: Vec<f32>,
+    /// GIN: first MLP activation.
+    pub h1: Vec<f32>,
+}
+
+/// One GNN architecture's per-layer stages. Implementations are
+/// stateless unit structs; `ops_for` hands out `&'static` instances.
+///
+/// Contracts shared by all stages: `pl`/`gl` are the layer's slice of
+/// the flat param/grad lists (`params_per_layer` entries, ordered as in
+/// `param_specs`); every grad buffer in `gl` is fully overwritten
+/// (recycled buffers can never leak stale gradients); `hin` resolution
+/// (`batch.feat0` at layer 1, the relu'd hidden lane below otherwise)
+/// happens inside the stage so lane borrows stay field-disjoint.
+pub trait ModelOps: Sync {
+    /// Canonical model name (`MODEL_NAMES` entry).
+    fn name(&self) -> &'static str;
+    /// Parameters per layer (the `param_specs` arity).
+    fn params_per_layer(&self) -> usize;
+    /// Which workspace lanes this architecture needs allocated.
+    fn lane_spec(&self) -> LaneSpec;
+    /// Blocked/SIMD forward of layer `cx.l`: reads the layer input
+    /// (feat0 or `ws.h[l-2]`), writes `ws.z[l-1]` (plus private lanes).
+    fn forward_layer(&self, cx: &LayerCtx, pl: &[Vec<f32>], batch: &BatchBuffers, ws: &mut Workspace);
+    /// Blocked/SIMD backward of layer `cx.l`: reads `ws.dz[l-1]` (the
+    /// gradient at this layer's pre-activation), writes the layer's
+    /// grads into `gl` and, for `l > 1`, the relu-masked input gradient
+    /// into `ws.dz[l-2]`.
+    fn backward_layer(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        batch: &BatchBuffers,
+        ws: &mut Workspace,
+        gl: &mut [Vec<f32>],
+    );
+    /// Scalar-oracle forward of layer `cx.l` (allocating).
+    fn forward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+    ) -> ScalarLayer;
+    /// Scalar-oracle backward of layer `cx.l`: fills `gl` and returns
+    /// the input gradient over the below level (pre relu mask; empty
+    /// for `l == 1` — the driver applies `relu_grad` against the
+    /// below layer's stored pre-activation).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        fwd: &ScalarLayer,
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        dz: &[f32],
+        gl: &mut [Vec<f32>],
+    ) -> Vec<f32>;
+}
+
+/// GCN: mean-normalized aggregate (self folded into the weighted
+/// neighbor list) followed by a dense update. Params per layer:
+/// `w [fin,fout]`, `b [fout]`.
+pub struct GcnOps;
+
+impl ModelOps for GcnOps {
+    fn name(&self) -> &'static str {
+        "gcn"
+    }
+
+    fn params_per_layer(&self) -> usize {
+        2
+    }
+
+    fn lane_spec(&self) -> LaneSpec {
+        LaneSpec { agg: true, dx: true, ..Default::default() }
+    }
+
+    fn forward_layer(&self, cx: &LayerCtx, pl: &[Vec<f32>], batch: &BatchBuffers, ws: &mut Workspace) {
+        let (l, n, k, fin, fout) = (cx.l, cx.n, cx.k, cx.fin, cx.fout);
+        let (wl, bl) = (&pl[0], &pl[1]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        {
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+            kernels::aggregate(&mut ws.agg[l - 1], hin, idx, wv, n, k, fin, false);
+        }
+        kernels::matmul_bias(&mut ws.z[l - 1], &ws.agg[l - 1], wl, bl, n, fin, fout);
+    }
+
+    fn backward_layer(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        batch: &BatchBuffers,
+        ws: &mut Workspace,
+        gl: &mut [Vec<f32>],
+    ) {
+        let (l, n, k, fin, fout, below) = (cx.l, cx.n, cx.k, cx.fin, cx.fout, cx.below);
+        let wl = &pl[0];
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        kernels::matmul_at_b(&mut gl[0], &ws.agg[l - 1], &ws.dz[l - 1], n, fin, fout);
+        kernels::col_sums(&mut gl[1], &ws.dz[l - 1], n, fout);
+        if l > 1 {
+            kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wl, n, fout, fin);
+            ws.dz[l - 2][..below * fin].fill(0.0);
+            kernels::scatter_aggregate(&mut ws.dz[l - 2], &ws.dx[l - 1], idx, wv, n, k, fin, false);
+            kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+        }
+    }
+
+    fn forward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+    ) -> ScalarLayer {
+        let agg = scalar::aggregate(hin, idx, w, cx.n, cx.k, cx.fin, false);
+        let z = scalar::matmul_bias(&agg, &pl[0], &pl[1], cx.n, cx.fin, cx.fout);
+        ScalarLayer { agg, z, ..Default::default() }
+    }
+
+    fn backward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        fwd: &ScalarLayer,
+        _hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        dz: &[f32],
+        gl: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        gl[0] = scalar::matmul_at_b(&fwd.agg, dz, cx.n, cx.fin, cx.fout);
+        gl[1] = scalar::col_sums(dz, cx.n, cx.fout);
+        if cx.l > 1 {
+            let dagg = scalar::matmul_b_t(dz, &pl[0], cx.n, cx.fout, cx.fin);
+            let mut dh = vec![0.0f32; cx.below * cx.fin];
+            scalar::scatter_aggregate(&mut dh, &dagg, idx, w, cx.n, cx.k, cx.fin, false);
+            return dh;
+        }
+        Vec::new()
+    }
+}
+
+/// GraphSAGE (mean variant): separate self and mean-of-neighbors
+/// paths, concatenation expressed as two matmuls into the same output.
+/// Params per layer: `w_self [fin,fout]`, `w_nbr [fin,fout]`,
+/// `b [fout]`.
+pub struct SageOps;
+
+impl ModelOps for SageOps {
+    fn name(&self) -> &'static str {
+        "sage"
+    }
+
+    fn params_per_layer(&self) -> usize {
+        3
+    }
+
+    fn lane_spec(&self) -> LaneSpec {
+        LaneSpec { agg: true, selfr: true, dx: true, dx2: true, ..Default::default() }
+    }
+
+    fn forward_layer(&self, cx: &LayerCtx, pl: &[Vec<f32>], batch: &BatchBuffers, ws: &mut Workspace) {
+        let (l, n, k, fin, fout) = (cx.l, cx.n, cx.k, cx.fin, cx.fout);
+        let (wsf, wn, bl) = (&pl[0], &pl[1], &pl[2]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        {
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+            kernels::aggregate_with_self(
+                &mut ws.agg[l - 1],
+                &mut ws.selfr[l - 1],
+                hin,
+                idx,
+                wv,
+                n,
+                k,
+                fin,
+            );
+        }
+        kernels::matmul_bias(&mut ws.z[l - 1], &ws.selfr[l - 1], wsf, bl, n, fin, fout);
+        kernels::add_matmul(&mut ws.z[l - 1], &ws.agg[l - 1], wn, n, fin, fout);
+    }
+
+    fn backward_layer(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        batch: &BatchBuffers,
+        ws: &mut Workspace,
+        gl: &mut [Vec<f32>],
+    ) {
+        let (l, n, k, fin, fout, below) = (cx.l, cx.n, cx.k, cx.fin, cx.fout, cx.below);
+        let (wsf, wn) = (&pl[0], &pl[1]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        kernels::matmul_at_b(&mut gl[0], &ws.selfr[l - 1], &ws.dz[l - 1], n, fin, fout);
+        kernels::matmul_at_b(&mut gl[1], &ws.agg[l - 1], &ws.dz[l - 1], n, fin, fout);
+        kernels::col_sums(&mut gl[2], &ws.dz[l - 1], n, fout);
+        if l > 1 {
+            kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wsf, n, fout, fin);
+            kernels::matmul_b_t(&mut ws.dx2[l - 1], &ws.dz[l - 1], wn, n, fout, fin);
+            ws.dz[l - 2][..below * fin].fill(0.0);
+            kernels::scatter_self(&mut ws.dz[l - 2], &ws.dx[l - 1], idx, n, k, fin);
+            kernels::scatter_aggregate(&mut ws.dz[l - 2], &ws.dx2[l - 1], idx, wv, n, k, fin, true);
+            kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+        }
+    }
+
+    fn forward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+    ) -> ScalarLayer {
+        let agg = scalar::aggregate(hin, idx, w, cx.n, cx.k, cx.fin, true);
+        let selfr = scalar::take_rows(hin, idx, cx.n, cx.k, cx.fin);
+        let mut z = scalar::matmul_bias(&selfr, &pl[0], &pl[2], cx.n, cx.fin, cx.fout);
+        scalar::add_matmul(&mut z, &agg, &pl[1], cx.n, cx.fin, cx.fout);
+        ScalarLayer { agg, selfr, z, ..Default::default() }
+    }
+
+    fn backward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        fwd: &ScalarLayer,
+        _hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        dz: &[f32],
+        gl: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        gl[0] = scalar::matmul_at_b(&fwd.selfr, dz, cx.n, cx.fin, cx.fout);
+        gl[1] = scalar::matmul_at_b(&fwd.agg, dz, cx.n, cx.fin, cx.fout);
+        gl[2] = scalar::col_sums(dz, cx.n, cx.fout);
+        if cx.l > 1 {
+            let dself = scalar::matmul_b_t(dz, &pl[0], cx.n, cx.fout, cx.fin);
+            let dagg = scalar::matmul_b_t(dz, &pl[1], cx.n, cx.fout, cx.fin);
+            let mut dh = vec![0.0f32; cx.below * cx.fin];
+            scalar::scatter_self(&mut dh, &dself, idx, cx.n, cx.k, cx.fin);
+            scalar::scatter_aggregate(&mut dh, &dagg, idx, w, cx.n, cx.k, cx.fin, true);
+            return dh;
+        }
+        Vec::new()
+    }
+}
+
+/// GAT (single head, GATv1): transform the below-level rows once
+/// (`ht = hin · W`), score every vertex against the shared attention
+/// vectors (`sself = ht·a_self`, `snbr = ht·a_nbr`), softmax the
+/// LeakyReLU'd edge logits over each ragged neighbor list, and
+/// aggregate `ht` with the attention weights. Params per layer:
+/// `w [fin,fout]`, `a_self [fout]`, `a_nbr [fout]`, `b [fout]`.
+///
+/// The sampler's edge weights act purely as the real-vs-padding mask
+/// ([`crate::sampling::WeightMode::Unit`]): attention replaces the
+/// fixed normalization.
+pub struct GatOps;
+
+impl ModelOps for GatOps {
+    fn name(&self) -> &'static str {
+        "gat"
+    }
+
+    fn params_per_layer(&self) -> usize {
+        4
+    }
+
+    fn lane_spec(&self) -> LaneSpec {
+        LaneSpec { attention: true, ..Default::default() }
+    }
+
+    fn forward_layer(&self, cx: &LayerCtx, pl: &[Vec<f32>], batch: &BatchBuffers, ws: &mut Workspace) {
+        let (l, n, k, fin, fout, below) = (cx.l, cx.n, cx.k, cx.fin, cx.fout, cx.below);
+        let (wl, a_self, a_nbr, bl) = (&pl[0], &pl[1], &pl[2], &pl[3]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        {
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+            let ht = &mut ws.att_ht[l - 1];
+            ht[..below * fout].fill(0.0);
+            kernels::add_matmul(ht, hin, wl, below, fin, fout);
+        }
+        kernels::matmul_b_t(&mut ws.att_sself[l - 1], &ws.att_ht[l - 1], a_self, below, fout, 1);
+        kernels::matmul_b_t(&mut ws.att_snbr[l - 1], &ws.att_ht[l - 1], a_nbr, below, fout, 1);
+        kernels::attn_edge_softmax(
+            &mut ws.att_alpha[l - 1],
+            &ws.att_sself[l - 1],
+            &ws.att_snbr[l - 1],
+            idx,
+            wv,
+            n,
+            k,
+            LEAKY_SLOPE,
+        );
+        kernels::aggregate(&mut ws.z[l - 1], &ws.att_ht[l - 1], idx, &ws.att_alpha[l - 1], n, k, fout, false);
+        kernels::add_bias(&mut ws.z[l - 1], bl, n, fout);
+    }
+
+    fn backward_layer(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        batch: &BatchBuffers,
+        ws: &mut Workspace,
+        gl: &mut [Vec<f32>],
+    ) {
+        let (l, n, k, fin, fout, below) = (cx.l, cx.n, cx.k, cx.fin, cx.fout, cx.below);
+        let (wl, a_self, a_nbr) = (&pl[0], &pl[1], &pl[2]);
+        let idx = &batch.idx[l - 1];
+        kernels::col_sums(&mut gl[3], &ws.dz[l - 1], n, fout);
+        // ∂loss/∂alpha, then in place through softmax + LeakyReLU
+        kernels::attn_edge_dot(
+            &mut ws.att_dalpha[l - 1],
+            &ws.dz[l - 1],
+            &ws.att_ht[l - 1],
+            idx,
+            &ws.att_alpha[l - 1],
+            n,
+            k,
+            fout,
+        );
+        kernels::attn_softmax_backward(
+            &mut ws.att_dalpha[l - 1],
+            &ws.att_alpha[l - 1],
+            &ws.att_sself[l - 1],
+            &ws.att_snbr[l - 1],
+            idx,
+            n,
+            k,
+            LEAKY_SLOPE,
+        );
+        // aggregation path: dht = alpha-weighted scatter of dz
+        ws.att_dht[l - 1][..below * fout].fill(0.0);
+        kernels::scatter_aggregate(
+            &mut ws.att_dht[l - 1],
+            &ws.dz[l - 1],
+            idx,
+            &ws.att_alpha[l - 1],
+            n,
+            k,
+            fout,
+            false,
+        );
+        // score path: the forward per-vertex scores are dead after the
+        // softmax backward, so their lanes recycle as grad accumulators
+        ws.att_sself[l - 1][..below].fill(0.0);
+        ws.att_snbr[l - 1][..below].fill(0.0);
+        kernels::attn_scatter_scores(
+            &mut ws.att_sself[l - 1],
+            &mut ws.att_snbr[l - 1],
+            &ws.att_dalpha[l - 1],
+            idx,
+            n,
+            k,
+        );
+        kernels::matmul_at_b(&mut gl[1], &ws.att_ht[l - 1], &ws.att_sself[l - 1], below, fout, 1);
+        kernels::matmul_at_b(&mut gl[2], &ws.att_ht[l - 1], &ws.att_snbr[l - 1], below, fout, 1);
+        kernels::add_matmul(&mut ws.att_dht[l - 1], &ws.att_sself[l - 1], a_self, below, 1, fout);
+        kernels::add_matmul(&mut ws.att_dht[l - 1], &ws.att_snbr[l - 1], a_nbr, below, 1, fout);
+        {
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+            kernels::matmul_at_b(&mut gl[0], hin, &ws.att_dht[l - 1], below, fin, fout);
+        }
+        if l > 1 {
+            // the transform covers every below-level row, so the input
+            // gradient is dense — no scatter, straight matmul
+            kernels::matmul_b_t(&mut ws.dz[l - 2], &ws.att_dht[l - 1], wl, below, fout, fin);
+            kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+        }
+    }
+
+    fn forward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+    ) -> ScalarLayer {
+        let (nb, n, k, fin, fout) = (cx.below, cx.n, cx.k, cx.fin, cx.fout);
+        let mut ht = vec![0.0f32; nb * fout];
+        scalar::add_matmul(&mut ht, hin, &pl[0], nb, fin, fout);
+        let sself = scalar::matmul_b_t(&ht, &pl[1], nb, fout, 1);
+        let snbr = scalar::matmul_b_t(&ht, &pl[2], nb, fout, 1);
+        let alpha = scalar::attn_edge_softmax(&sself, &snbr, idx, w, n, k, LEAKY_SLOPE);
+        let mut z = scalar::aggregate(&ht, idx, &alpha, n, k, fout, false);
+        kernels::add_bias(&mut z, &pl[3], n, fout);
+        ScalarLayer { z, ht, alpha, sself, snbr, ..Default::default() }
+    }
+
+    fn backward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        fwd: &ScalarLayer,
+        hin: &[f32],
+        idx: &[i32],
+        _w: &[f32],
+        dz: &[f32],
+        gl: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let (nb, n, k, fin, fout) = (cx.below, cx.n, cx.k, cx.fin, cx.fout);
+        gl[3] = scalar::col_sums(dz, n, fout);
+        let mut dalpha = scalar::attn_edge_dot(dz, &fwd.ht, idx, &fwd.alpha, n, k, fout);
+        kernels::attn_softmax_backward(
+            &mut dalpha,
+            &fwd.alpha,
+            &fwd.sself,
+            &fwd.snbr,
+            idx,
+            n,
+            k,
+            LEAKY_SLOPE,
+        );
+        let mut dht = vec![0.0f32; nb * fout];
+        scalar::scatter_aggregate(&mut dht, dz, idx, &fwd.alpha, n, k, fout, false);
+        let mut dsself = vec![0.0f32; nb];
+        let mut dsnbr = vec![0.0f32; nb];
+        kernels::attn_scatter_scores(&mut dsself, &mut dsnbr, &dalpha, idx, n, k);
+        gl[1] = scalar::matmul_at_b(&fwd.ht, &dsself, nb, fout, 1);
+        gl[2] = scalar::matmul_at_b(&fwd.ht, &dsnbr, nb, fout, 1);
+        scalar::add_matmul(&mut dht, &dsself, &pl[1], nb, 1, fout);
+        scalar::add_matmul(&mut dht, &dsnbr, &pl[2], nb, 1, fout);
+        gl[0] = scalar::matmul_at_b(hin, &dht, nb, fin, fout);
+        if cx.l > 1 {
+            return scalar::matmul_b_t(&dht, &pl[0], nb, fout, fin);
+        }
+        Vec::new()
+    }
+}
+
+/// GIN-ε: injective sum aggregation `s = Σ_nbr w·h + (1+ε)·h_self`
+/// followed by a 2-layer MLP update (`relu` between the MLP layers,
+/// widths `fin → fout → fout`). Params per layer: `w1 [fin,fout]`,
+/// `b1 [fout]`, `w2 [fout,fout]`, `b2 [fout]`, `eps [1]` (trainable,
+/// zero-initialized — GIN-0 at step 0).
+pub struct GinOps;
+
+impl ModelOps for GinOps {
+    fn name(&self) -> &'static str {
+        "gin"
+    }
+
+    fn params_per_layer(&self) -> usize {
+        5
+    }
+
+    fn lane_spec(&self) -> LaneSpec {
+        LaneSpec {
+            agg: true,
+            selfr: true,
+            dx: true,
+            dx_at_layer1: true,
+            mlp: true,
+            ..Default::default()
+        }
+    }
+
+    fn forward_layer(&self, cx: &LayerCtx, pl: &[Vec<f32>], batch: &BatchBuffers, ws: &mut Workspace) {
+        let (l, n, k, fin, fout) = (cx.l, cx.n, cx.k, cx.fin, cx.fout);
+        let (w1, b1, w2, b2, eps) = (&pl[0], &pl[1], &pl[2], &pl[3], &pl[4]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        {
+            let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
+            kernels::aggregate_with_self(
+                &mut ws.agg[l - 1],
+                &mut ws.selfr[l - 1],
+                hin,
+                idx,
+                wv,
+                n,
+                k,
+                fin,
+            );
+        }
+        // agg becomes the full MLP input; selfr survives for ∂ε
+        kernels::scaled_add(&mut ws.agg[l - 1], &ws.selfr[l - 1], 1.0 + eps[0], n * fin);
+        kernels::matmul_bias(&mut ws.mlp_z1[l - 1], &ws.agg[l - 1], w1, b1, n, fin, fout);
+        kernels::relu(&mut ws.mlp_h1[l - 1], &ws.mlp_z1[l - 1], n * fout);
+        kernels::matmul_bias(&mut ws.z[l - 1], &ws.mlp_h1[l - 1], w2, b2, n, fout, fout);
+    }
+
+    fn backward_layer(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        batch: &BatchBuffers,
+        ws: &mut Workspace,
+        gl: &mut [Vec<f32>],
+    ) {
+        let (l, n, k, fin, fout, below) = (cx.l, cx.n, cx.k, cx.fin, cx.fout, cx.below);
+        let (w1, w2, eps) = (&pl[0], &pl[2], &pl[4]);
+        let (idx, wv) = (&batch.idx[l - 1], &batch.w[l - 1]);
+        // second MLP layer
+        kernels::matmul_at_b(&mut gl[2], &ws.mlp_h1[l - 1], &ws.dz[l - 1], n, fout, fout);
+        kernels::col_sums(&mut gl[3], &ws.dz[l - 1], n, fout);
+        kernels::matmul_b_t(&mut ws.mlp_dh1[l - 1], &ws.dz[l - 1], w2, n, fout, fout);
+        kernels::relu_mask(&mut ws.mlp_dh1[l - 1], &ws.mlp_z1[l - 1], n * fout);
+        // first MLP layer
+        kernels::matmul_at_b(&mut gl[0], &ws.agg[l - 1], &ws.mlp_dh1[l - 1], n, fin, fout);
+        kernels::col_sums(&mut gl[1], &ws.mlp_dh1[l - 1], n, fout);
+        // gradient at the MLP input (the aggregated sum)
+        kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.mlp_dh1[l - 1], w1, n, fout, fin);
+        gl[4][0] = kernels::dot(&ws.selfr[l - 1], &ws.dx[l - 1], n * fin);
+        if l > 1 {
+            ws.dz[l - 2][..below * fin].fill(0.0);
+            kernels::scatter_aggregate(&mut ws.dz[l - 2], &ws.dx[l - 1], idx, wv, n, k, fin, true);
+            kernels::scatter_self_scaled(
+                &mut ws.dz[l - 2],
+                &ws.dx[l - 1],
+                idx,
+                1.0 + eps[0],
+                n,
+                k,
+                fin,
+            );
+            kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
+        }
+    }
+
+    fn forward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+    ) -> ScalarLayer {
+        let (n, k, fin, fout) = (cx.n, cx.k, cx.fin, cx.fout);
+        let mut agg = scalar::aggregate(hin, idx, w, n, k, fin, true);
+        let selfr = scalar::take_rows(hin, idx, n, k, fin);
+        kernels::scaled_add(&mut agg, &selfr, 1.0 + pl[4][0], n * fin);
+        let z1 = scalar::matmul_bias(&agg, &pl[0], &pl[1], n, fin, fout);
+        let h1 = scalar::relu(&z1);
+        let z = scalar::matmul_bias(&h1, &pl[2], &pl[3], n, fout, fout);
+        ScalarLayer { agg, selfr, z, z1, h1, ..Default::default() }
+    }
+
+    fn backward_layer_scalar(
+        &self,
+        cx: &LayerCtx,
+        pl: &[Vec<f32>],
+        fwd: &ScalarLayer,
+        _hin: &[f32],
+        idx: &[i32],
+        w: &[f32],
+        dz: &[f32],
+        gl: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let (n, k, fin, fout) = (cx.n, cx.k, cx.fin, cx.fout);
+        gl[2] = scalar::matmul_at_b(&fwd.h1, dz, n, fout, fout);
+        gl[3] = scalar::col_sums(dz, n, fout);
+        let dh1 = scalar::matmul_b_t(dz, &pl[2], n, fout, fout);
+        let dh1 = scalar::relu_grad(&fwd.z1, &dh1);
+        gl[0] = scalar::matmul_at_b(&fwd.agg, &dh1, n, fin, fout);
+        gl[1] = scalar::col_sums(&dh1, n, fout);
+        let dagg = scalar::matmul_b_t(&dh1, &pl[0], n, fout, fin);
+        gl[4] = vec![kernels::dot(&fwd.selfr, &dagg, n * fin)];
+        if cx.l > 1 {
+            let mut dh = vec![0.0f32; cx.below * fin];
+            scalar::scatter_aggregate(&mut dh, &dagg, idx, w, n, k, fin, true);
+            kernels::scatter_self_scaled(&mut dh, &dagg, idx, 1.0 + pl[4][0], n, k, fin);
+            return dh;
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_canonical_name() {
+        for name in MODEL_NAMES {
+            let ops = ops_for(name).unwrap();
+            assert_eq!(ops.name(), name);
+            assert!(ops.params_per_layer() >= 2);
+        }
+    }
+
+    #[test]
+    fn unknown_model_reports_the_expected_set() {
+        let err = ops_for("transformer").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'transformer'"), "{err}");
+        assert!(err.contains("expected one of gcn|sage|gat|gin"), "{err}");
+        assert!(validate_model("gat").is_ok());
+        assert!(validate_model("gsg").is_err());
+    }
+
+    #[test]
+    fn lane_specs_cover_each_architectures_scratch_needs() {
+        assert_eq!(
+            GcnOps.lane_spec(),
+            LaneSpec { agg: true, dx: true, ..Default::default() }
+        );
+        assert!(SageOps.lane_spec().dx2 && SageOps.lane_spec().selfr);
+        assert!(GatOps.lane_spec().attention && !GatOps.lane_spec().agg);
+        let gin = GinOps.lane_spec();
+        assert!(gin.mlp && gin.dx_at_layer1 && gin.selfr);
+    }
+}

@@ -1,19 +1,25 @@
 //! Pure-Rust reference executor — the offline twin of the PJRT backend.
 //!
-//! Implements the exact L2 model semantics (`python/compile/model.py`) for
-//! the two shipped model families — L-layer GCN and GraphSAGE-mean over
-//! the padded mini-batch wire format (DESIGN.md §Mini-batch wire format)
-//! — including the backward pass and the masked softmax cross-entropy
-//! loss. Depth comes from the artifact's fanout vector; each layer is one
-//! aggregate→update stage forward and the transposed pair backward, so
-//! the executor prices any L ≥ 1 (gradients are finite-difference-checked
-//! at L ∈ {1, 2, 3} in the unit tests). This lets the full coordinator
-//! pipeline (and its tests) run in environments without the `xla` crate
-//! or AOT artifacts: build without the `pjrt` feature and
-//! [`super::TrainExecutor`] dispatches here.
+//! Implements the exact L2 model semantics (`python/compile/model.py`)
+//! for every architecture in the model zoo (`model_ops::MODEL_NAMES`:
+//! gcn, sage, gat, gin) over the padded mini-batch wire format
+//! (DESIGN.md §Mini-batch wire format) — including the backward pass
+//! and the masked softmax cross-entropy loss. The executor owns only
+//! the architecture-independent structure: the layer loop, the
+//! inter-layer relu, the loss, and the row-count bookkeeping. Every
+//! architecture-specific stage lives behind the
+//! [`ModelOps`](super::model_ops::ModelOps) seam, so adding a model
+//! touches `model_ops.rs` + `param_specs`, not this file. Depth comes
+//! from the artifact's fanout vector; gradients are finite-difference-
+//! checked at L ∈ {1, 2, 3} for all four models in the unit tests.
+//! This lets the full coordinator pipeline (and its tests) run in
+//! environments without the `xla` crate or AOT artifacts: build
+//! without the `pjrt` feature and [`super::TrainExecutor`] dispatches
+//! here.
 //!
 //! Hot path (DESIGN.md §Hot-path memory & kernels): every intermediate
-//! lives in a per-instance [`Workspace`] and the math runs on the
+//! lives in a per-instance [`Workspace`] (lanes selected by the model's
+//! [`LaneSpec`](super::workspace::LaneSpec)) and the math runs on the
 //! blocked, write-into kernels of [`super::kernels`] — no per-step heap
 //! allocation beyond the gradient output, and training steps touch only
 //! the batch's *real* row counts (`BatchBuffers::n`), not the padded
@@ -27,23 +33,22 @@
 //!
 //! Numerics are f32 loops with a fixed accumulation order, so a training
 //! run is bit-reproducible — the property the pipeline determinism tests
-//! (`tests/pipeline_determinism.rs`) assert.
+//! (`tests/pipeline_determinism.rs`) assert per model.
 
 use super::executor::{BatchBuffers, GradBuffers, StepOutput};
 use super::kernels::{self, scalar};
 use super::manifest::{param_specs, ArtifactDims, ArtifactEntry};
+use super::model_ops::{ops_for, LayerCtx, ModelOps, ScalarLayer};
 use super::workspace::Workspace;
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ModelKind {
-    Gcn,
-    Sage,
-}
 
 /// Reference implementation of one artifact (train or predict).
 pub struct RefModel {
-    kind: ModelKind,
+    /// The architecture's per-layer stages (model zoo seam).
+    ops: &'static dyn ModelOps,
     dims: ArtifactDims,
+    /// Flat element count of each expected parameter tensor, in
+    /// artifact order — sizes the recycled gradient buffers.
+    param_lens: Vec<usize>,
     /// Pre-sized scratch arena owning every per-step intermediate.
     ws: Workspace,
 }
@@ -53,41 +58,69 @@ impl RefModel {
     /// what PJRT compilation catches (shape mismatches fail at compile
     /// time, not mid-epoch).
     pub fn new(entry: &ArtifactEntry) -> anyhow::Result<RefModel> {
-        let kind = match entry.model.as_str() {
-            "gcn" => ModelKind::Gcn,
-            "sage" => ModelKind::Sage,
-            other => anyhow::bail!(
-                "reference executor supports gcn|sage, not '{other}' \
-                 (enable the `pjrt` feature for arbitrary HLO artifacts)"
-            ),
-        };
+        let ops = ops_for(&entry.model)?;
         let d = entry.dims.clone();
         let expect = param_specs(&entry.model, &d);
+        let layout = || {
+            expect
+                .iter()
+                .map(|(n, s)| format!("{n}{s:?}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
         anyhow::ensure!(
             entry.params.len() == expect.len(),
-            "artifact '{}' has {} params, {}-layer {} model needs {}",
+            "artifact '{}' has {} params, {}-layer {} model needs {} — expected layout: [{}]",
             entry.name,
             entry.params.len(),
             d.layers(),
             entry.model,
-            expect.len()
+            expect.len(),
+            layout()
         );
         for ((name, shape), (ename, eshape)) in entry.params.iter().zip(&expect) {
             anyhow::ensure!(
                 name == ename && shape == eshape,
-                "artifact '{}' param {name}{shape:?} != expected {ename}{eshape:?}",
-                entry.name
+                "artifact '{}' param {name}{shape:?} != expected {ename}{eshape:?} \
+                 — expected layout: [{}]",
+                entry.name,
+                layout()
             );
         }
-        let ws = Workspace::new(&d, kind == ModelKind::Sage);
-        Ok(RefModel { kind, dims: d, ws })
+        let param_lens = expect.iter().map(|(_, s)| s.iter().product()).collect();
+        let ws = Workspace::new(&d, ops.lane_spec());
+        Ok(RefModel { ops, dims: d, param_lens, ws })
     }
 
-    /// Parameters-per-layer of this model kind.
-    fn ppl(&self) -> usize {
-        match self.kind {
-            ModelKind::Gcn => 2,
-            ModelKind::Sage => 3,
+    /// Canonical name of the architecture this instance runs.
+    pub fn model(&self) -> &'static str {
+        self.ops.name()
+    }
+
+    /// Geometry of layer `l` on the hot path (real row counts).
+    fn layer_ctx(&self, l: usize) -> LayerCtx {
+        LayerCtx {
+            l,
+            lcount: self.dims.layers(),
+            n: self.ws.rows[l],
+            below: self.ws.rows[l - 1],
+            k: self.dims.fanouts[l - 1] + 1,
+            fin: self.dims.f[l - 1],
+            fout: self.dims.f[l],
+        }
+    }
+
+    /// Geometry of layer `l` on the scalar-oracle path (full padded
+    /// capacities, the seed's sweep).
+    fn scalar_ctx(&self, l: usize) -> LayerCtx {
+        LayerCtx {
+            l,
+            lcount: self.dims.layers(),
+            n: self.dims.caps[l],
+            below: self.dims.caps[l - 1],
+            k: self.dims.fanouts[l - 1] + 1,
+            fin: self.dims.f[l - 1],
+            fout: self.dims.f[l],
         }
     }
 
@@ -121,7 +154,7 @@ impl RefModel {
 
     /// Forward + backward + masked CE loss, writing the gradients into a
     /// recycled [`GradBuffers`]: sized on first use, allocation-free on
-    /// every reuse (the backward kernels fully overwrite each tensor, so
+    /// every reuse (the backward stages fully overwrite each tensor, so
     /// stale contents cannot leak).
     pub fn train_step_into(
         &mut self,
@@ -151,55 +184,17 @@ impl RefModel {
 
     // -- forward -----------------------------------------------------------
 
-    /// L aggregate→update stages over the first `ws.rows[l]` rows per
-    /// level; relu between layers, linear output (`z[L-1]` is the logits).
+    /// L model-ops stages over the first `ws.rows[l]` rows per level;
+    /// relu between layers, linear output (`z[L-1]` is the logits).
     fn forward(&mut self, params: &[Vec<f32>], batch: &BatchBuffers) {
-        let ppl = self.ppl();
-        let kind = self.kind;
-        let d = &self.dims;
-        let ws = &mut self.ws;
-        let lcount = d.layers();
+        let ops = self.ops;
+        let ppl = ops.params_per_layer();
+        let lcount = self.dims.layers();
         for l in 1..=lcount {
-            let n = ws.rows[l];
-            let k = d.fanouts[l - 1] + 1;
-            let (fin, fout) = (d.f[l - 1], d.f[l]);
-            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
-            match kind {
-                ModelKind::Gcn => {
-                    let (wl, bl) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    {
-                        let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
-                        kernels::aggregate(&mut ws.agg[l - 1], hin, idx, w, n, k, fin, false);
-                    }
-                    kernels::matmul_bias(&mut ws.z[l - 1], &ws.agg[l - 1], wl, bl, n, fin, fout);
-                }
-                ModelKind::Sage => {
-                    // self rows through W_self, neighbor mean (self column
-                    // skipped) through W_nbr — one fused walk of idx/w
-                    let (wsf, wn, bl) = (
-                        &params[ppl * (l - 1)],
-                        &params[ppl * (l - 1) + 1],
-                        &params[ppl * (l - 1) + 2],
-                    );
-                    {
-                        let hin: &[f32] = if l == 1 { &batch.feat0 } else { &ws.h[l - 2] };
-                        kernels::aggregate_with_self(
-                            &mut ws.agg[l - 1],
-                            &mut ws.selfr[l - 1],
-                            hin,
-                            idx,
-                            w,
-                            n,
-                            k,
-                            fin,
-                        );
-                    }
-                    kernels::matmul_bias(&mut ws.z[l - 1], &ws.selfr[l - 1], wsf, bl, n, fin, fout);
-                    kernels::add_matmul(&mut ws.z[l - 1], &ws.agg[l - 1], wn, n, fin, fout);
-                }
-            }
+            let cx = self.layer_ctx(l);
+            ops.forward_layer(&cx, &params[ppl * (l - 1)..ppl * l], batch, &mut self.ws);
             if l < lcount {
-                kernels::relu(&mut ws.h[l - 1], &ws.z[l - 1], n * fout);
+                kernels::relu(&mut self.ws.h[l - 1], &self.ws.z[l - 1], cx.n * cx.fout);
             }
         }
     }
@@ -241,102 +236,26 @@ impl RefModel {
 
     // -- backward ----------------------------------------------------------
 
-    /// Transposed stages, layer L down to 1 (the dataflow of the seed's
-    /// explicit 2-layer backward, looped). `ws.dz[L-1]` must hold the
-    /// dlogits on entry; gradients land in `grads` in artifact parameter
-    /// order. Every tensor is fully overwritten (`matmul_at_b` and
-    /// `col_sums` zero their outputs first), so recycled buffers carry
-    /// nothing across steps.
+    /// Transposed model-ops stages, layer L down to 1. `ws.dz[L-1]` must
+    /// hold the dlogits on entry; gradients land in `grads` in artifact
+    /// parameter order, each tensor sized to its `param_specs` shape.
+    /// Every tensor is fully overwritten by its stage, so recycled
+    /// buffers carry nothing across steps.
     fn backward_into(&mut self, params: &[Vec<f32>], batch: &BatchBuffers, grads: &mut GradBuffers) {
-        let ppl = self.ppl();
-        let kind = self.kind;
-        let d = &self.dims;
-        let lcount = d.layers();
-        // layer l owns slots ppl*(l-1) .. ppl*l: weight tensors [fin, fout]
-        // then the bias [fout]
-        grads.resize_with(ppl * lcount, |gi| {
-            let l = gi / ppl + 1;
-            let (fin, fout) = (d.f[l - 1], d.f[l]);
-            if gi % ppl == ppl - 1 {
-                fout
-            } else {
-                fin * fout
-            }
-        });
-        let ws = &mut self.ws;
+        let ops = self.ops;
+        let ppl = ops.params_per_layer();
+        let lcount = self.dims.layers();
+        let lens = &self.param_lens;
+        grads.resize_with(lens.len(), |gi| lens[gi]);
         for l in (1..=lcount).rev() {
-            let n = ws.rows[l];
-            let k = d.fanouts[l - 1] + 1;
-            let (fin, fout) = (d.f[l - 1], d.f[l]);
-            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
-            match kind {
-                ModelKind::Gcn => {
-                    let wl = &params[ppl * (l - 1)];
-                    kernels::matmul_at_b(
-                        &mut grads[ppl * (l - 1)],
-                        &ws.agg[l - 1],
-                        &ws.dz[l - 1],
-                        n,
-                        fin,
-                        fout,
-                    );
-                    kernels::col_sums(&mut grads[ppl * (l - 1) + 1], &ws.dz[l - 1], n, fout);
-                    if l > 1 {
-                        kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wl, n, fout, fin);
-                        let below = ws.rows[l - 1];
-                        ws.dz[l - 2][..below * fin].fill(0.0);
-                        kernels::scatter_aggregate(
-                            &mut ws.dz[l - 2],
-                            &ws.dx[l - 1],
-                            idx,
-                            w,
-                            n,
-                            k,
-                            fin,
-                            false,
-                        );
-                        kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
-                    }
-                }
-                ModelKind::Sage => {
-                    let (wsf, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    kernels::matmul_at_b(
-                        &mut grads[ppl * (l - 1)],
-                        &ws.selfr[l - 1],
-                        &ws.dz[l - 1],
-                        n,
-                        fin,
-                        fout,
-                    );
-                    kernels::matmul_at_b(
-                        &mut grads[ppl * (l - 1) + 1],
-                        &ws.agg[l - 1],
-                        &ws.dz[l - 1],
-                        n,
-                        fin,
-                        fout,
-                    );
-                    kernels::col_sums(&mut grads[ppl * (l - 1) + 2], &ws.dz[l - 1], n, fout);
-                    if l > 1 {
-                        kernels::matmul_b_t(&mut ws.dx[l - 1], &ws.dz[l - 1], wsf, n, fout, fin);
-                        kernels::matmul_b_t(&mut ws.dx2[l - 1], &ws.dz[l - 1], wn, n, fout, fin);
-                        let below = ws.rows[l - 1];
-                        ws.dz[l - 2][..below * fin].fill(0.0);
-                        kernels::scatter_self(&mut ws.dz[l - 2], &ws.dx[l - 1], idx, n, k, fin);
-                        kernels::scatter_aggregate(
-                            &mut ws.dz[l - 2],
-                            &ws.dx2[l - 1],
-                            idx,
-                            w,
-                            n,
-                            k,
-                            fin,
-                            true,
-                        );
-                        kernels::relu_mask(&mut ws.dz[l - 2], &ws.z[l - 2], below * fin);
-                    }
-                }
-            }
+            let cx = self.layer_ctx(l);
+            ops.backward_layer(
+                &cx,
+                &params[ppl * (l - 1)..ppl * l],
+                batch,
+                &mut self.ws,
+                &mut grads[ppl * (l - 1)..ppl * l],
+            );
         }
     }
 
@@ -351,10 +270,11 @@ impl RefModel {
         params: &[Vec<f32>],
         batch: &BatchBuffers,
     ) -> anyhow::Result<StepOutput> {
-        let fwd = self.forward_scalar(params, batch);
+        let layers = self.forward_scalar(params, batch);
         let d = &self.dims;
         let classes = d.classes();
         let denom = batch.mask.iter().sum::<f32>().max(1.0);
+        let logits = &layers[d.layers() - 1].z;
 
         // masked mean softmax cross-entropy and dlogits in one pass
         let mut loss = 0.0f32;
@@ -364,7 +284,7 @@ impl RefModel {
             if mk == 0.0 {
                 continue;
             }
-            let row = &fwd.logits()[r * classes..(r + 1) * classes];
+            let row = &logits[r * classes..(r + 1) * classes];
             let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let sumexp: f32 = row.iter().map(|&x| (x - max).exp()).sum();
             let logz = max + sumexp.ln();
@@ -379,122 +299,74 @@ impl RefModel {
         }
         loss /= denom;
 
-        let grads = self.backward_scalar(params, batch, &fwd, &dlogits);
+        let grads = self.backward_scalar(params, batch, &layers, &dlogits);
         Ok(StepOutput { loss, grads: grads.into() })
     }
 
-    /// L aggregate→update stages over the full capacities (scalar oracle).
-    fn forward_scalar(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Forward {
-        let d = &self.dims;
-        let lcount = d.layers();
-        let ppl = self.ppl();
-        let mut aggs = Vec::with_capacity(lcount);
-        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(lcount);
-        let mut selfs = Vec::with_capacity(lcount);
+    /// L model-ops stages over the full capacities (scalar oracle).
+    fn forward_scalar(&self, params: &[Vec<f32>], batch: &BatchBuffers) -> Vec<ScalarLayer> {
+        let ops = self.ops;
+        let ppl = ops.params_per_layer();
+        let lcount = self.dims.layers();
+        let mut layers: Vec<ScalarLayer> = Vec::with_capacity(lcount);
         let mut h: Vec<f32> = Vec::new();
         for l in 1..=lcount {
-            let rows = d.caps[l];
-            let k = d.fanouts[l - 1] + 1;
-            let (fin, fout) = (d.f[l - 1], d.f[l]);
-            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
+            let cx = self.scalar_ctx(l);
             let hin: &[f32] = if l == 1 { &batch.feat0 } else { &h };
-            let z = match self.kind {
-                ModelKind::Gcn => {
-                    let (wl, bl) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    let agg = scalar::aggregate(hin, idx, w, rows, k, fin, false);
-                    let z = scalar::matmul_bias(&agg, wl, bl, rows, fin, fout);
-                    aggs.push(agg);
-                    z
-                }
-                ModelKind::Sage => {
-                    let (wsf, wn, bl) = (
-                        &params[ppl * (l - 1)],
-                        &params[ppl * (l - 1) + 1],
-                        &params[ppl * (l - 1) + 2],
-                    );
-                    let agg = scalar::aggregate(hin, idx, w, rows, k, fin, true);
-                    let selfr = scalar::take_rows(hin, idx, rows, k, fin);
-                    let mut z = scalar::matmul_bias(&selfr, wsf, bl, rows, fin, fout);
-                    scalar::add_matmul(&mut z, &agg, wn, rows, fin, fout);
-                    aggs.push(agg);
-                    selfs.push(selfr);
-                    z
-                }
-            };
+            let sl = ops.forward_layer_scalar(
+                &cx,
+                &params[ppl * (l - 1)..ppl * l],
+                hin,
+                &batch.idx[l - 1],
+                &batch.w[l - 1],
+            );
             if l < lcount {
-                h = scalar::relu(&z);
+                h = scalar::relu(&sl.z);
             }
-            zs.push(z);
+            layers.push(sl);
         }
-        Forward { aggs, zs, selfs }
+        layers
     }
 
-    /// Transposed stages over the full capacities (scalar oracle).
+    /// Transposed model-ops stages over the full capacities (scalar
+    /// oracle). The layer input is recomputed from the stored
+    /// pre-activations (`relu(z[l-2])`) for the stages that need it.
     fn backward_scalar(
         &self,
         params: &[Vec<f32>],
         batch: &BatchBuffers,
-        fwd: &Forward,
+        layers: &[ScalarLayer],
         dlogits: &[f32],
     ) -> Vec<Vec<f32>> {
-        let d = &self.dims;
-        let lcount = d.layers();
-        let ppl = self.ppl();
-        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); ppl * lcount];
+        let ops = self.ops;
+        let ppl = ops.params_per_layer();
+        let lcount = self.dims.layers();
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); self.param_lens.len()];
         let mut dz = dlogits.to_vec();
         for l in (1..=lcount).rev() {
-            let rows = d.caps[l];
-            let k = d.fanouts[l - 1] + 1;
-            let (fin, fout) = (d.f[l - 1], d.f[l]);
-            let (idx, w) = (&batch.idx[l - 1], &batch.w[l - 1]);
-            match self.kind {
-                ModelKind::Gcn => {
-                    let wl = &params[ppl * (l - 1)];
-                    grads[ppl * (l - 1)] =
-                        scalar::matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 1] = scalar::col_sums(&dz, rows, fout);
-                    if l > 1 {
-                        let dagg = scalar::matmul_b_t(&dz, wl, rows, fout, fin);
-                        let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
-                        scalar::scatter_aggregate(&mut dh, &dagg, idx, w, rows, k, fin, false);
-                        dz = scalar::relu_grad(&fwd.zs[l - 2], &dh);
-                    }
-                }
-                ModelKind::Sage => {
-                    let (wsf, wn) = (&params[ppl * (l - 1)], &params[ppl * (l - 1) + 1]);
-                    grads[ppl * (l - 1)] =
-                        scalar::matmul_at_b(&fwd.selfs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 1] =
-                        scalar::matmul_at_b(&fwd.aggs[l - 1], &dz, rows, fin, fout);
-                    grads[ppl * (l - 1) + 2] = scalar::col_sums(&dz, rows, fout);
-                    if l > 1 {
-                        let dself = scalar::matmul_b_t(&dz, wsf, rows, fout, fin);
-                        let dnbr = scalar::matmul_b_t(&dz, wn, rows, fout, fin);
-                        let mut dh = vec![0.0f32; d.caps[l - 1] * fin];
-                        scalar::scatter_self(&mut dh, &dself, idx, rows, k, fin);
-                        scalar::scatter_aggregate(&mut dh, &dnbr, idx, w, rows, k, fin, true);
-                        dz = scalar::relu_grad(&fwd.zs[l - 2], &dh);
-                    }
-                }
+            let cx = self.scalar_ctx(l);
+            let hin_buf;
+            let hin: &[f32] = if l == 1 {
+                &batch.feat0
+            } else {
+                hin_buf = scalar::relu(&layers[l - 2].z);
+                &hin_buf
+            };
+            let dh = ops.backward_layer_scalar(
+                &cx,
+                &params[ppl * (l - 1)..ppl * l],
+                &layers[l - 1],
+                hin,
+                &batch.idx[l - 1],
+                &batch.w[l - 1],
+                &dz,
+                &mut grads[ppl * (l - 1)..ppl * l],
+            );
+            if l > 1 {
+                dz = scalar::relu_grad(&layers[l - 2].z, &dh);
             }
         }
         grads
-    }
-}
-
-/// Scalar-path forward intermediates kept for the backward pass (one
-/// entry per layer; `selfs` is SAGE-only).
-struct Forward {
-    aggs: Vec<Vec<f32>>,
-    /// Pre-activations z_l; z_L *is* the logits (no relu on the output
-    /// layer), see [`Forward::logits`].
-    zs: Vec<Vec<f32>>,
-    selfs: Vec<Vec<f32>>,
-}
-
-impl Forward {
-    fn logits(&self) -> &[f32] {
-        self.zs.last().expect("at least one layer")
     }
 }
 
@@ -502,6 +374,7 @@ impl Forward {
 mod tests {
     use super::*;
     use crate::runtime::manifest::synth_entry;
+    use crate::runtime::model_ops::MODEL_NAMES;
     use crate::runtime::Manifest;
     use crate::util::rng::Rng;
 
@@ -548,6 +421,21 @@ mod tests {
         BatchBuffers { feat0, idx, w, labels, mask, n }
     }
 
+    /// [`crate::coordinator::params::ParamSet::init`] zero-initializes
+    /// every rank-1 tensor, which for the attention models puts every
+    /// LeakyReLU logit exactly on its kink — poison for a central-
+    /// difference check. Perturb all params to small random values.
+    fn random_params(entry: &ArtifactEntry, seed: u64) -> Vec<Vec<f32>> {
+        let mut params = crate::coordinator::params::ParamSet::init(entry, seed).data;
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        for p in params.iter_mut() {
+            for v in p.iter_mut() {
+                *v += 0.2 * (rng.f32() - 0.5);
+            }
+        }
+        params
+    }
+
     fn loss_of(model: &mut RefModel, params: &[Vec<f32>], batch: &BatchBuffers) -> f64 {
         model.train_step(params, batch).unwrap().loss as f64
     }
@@ -555,20 +443,19 @@ mod tests {
     /// Central-difference gradient check: the analytic backward pass must
     /// match numerical differentiation on sampled coordinates. Runs on
     /// the blocked workspace path.
-    fn grad_check_entry(entry: &ArtifactEntry, tag: &str) {
+    fn grad_check_with(entry: &ArtifactEntry, params: &[Vec<f32>], tag: &str) {
         let mut model = RefModel::new(entry).unwrap();
-        let params = crate::coordinator::params::ParamSet::init(entry, 9).data;
         let batch = random_batch(&entry.dims, 4);
-        let out = model.train_step(&params, &batch).unwrap();
+        let out = model.train_step(params, &batch).unwrap();
         let mut rng = Rng::new(77);
         let eps = 1e-3f32;
         let mut checked = 0;
         for (pi, p) in params.iter().enumerate() {
             for _ in 0..4 {
                 let i = rng.index(p.len());
-                let mut plus = params.clone();
+                let mut plus = params.to_vec();
                 plus[pi][i] += eps;
-                let mut minus = params.clone();
+                let mut minus = params.to_vec();
                 minus[pi][i] -= eps;
                 let num = (loss_of(&mut model, &plus, &batch)
                     - loss_of(&mut model, &minus, &batch))
@@ -582,6 +469,11 @@ mod tests {
             }
         }
         assert!(checked > 0);
+    }
+
+    fn grad_check_entry(entry: &ArtifactEntry, tag: &str) {
+        let params = crate::coordinator::params::ParamSet::init(entry, 9).data;
+        grad_check_with(entry, &params, tag);
     }
 
     fn grad_check(model_name: &str) {
@@ -609,6 +501,20 @@ mod tests {
     }
 
     #[test]
+    fn gat_and_gin_gradients_match_finite_differences_at_depths_one_two_three() {
+        // the new model families, fd-checked at every supported depth —
+        // with random non-zero attention vectors / eps (see
+        // random_params on why zero init is hostile to fd here)
+        for model in ["gat", "gin"] {
+            for fanouts in [vec![3usize], vec![3, 2], vec![3, 2, 2]] {
+                let entry = depth_entry(model, &fanouts);
+                let params = random_params(&entry, 21);
+                grad_check_with(&entry, &params, &format!("{model} L={}", fanouts.len()));
+            }
+        }
+    }
+
+    #[test]
     fn builtin_three_layer_sage_entry_gradcheck() {
         // the manifest's shipped 3-layer artifact, end to end through the
         // same validation path the trainer uses
@@ -619,15 +525,19 @@ mod tests {
 
     #[test]
     fn blocked_path_matches_scalar_oracle_at_depths_one_two_three() {
-        // ISSUE 5 tentpole guard: the workspace/blocked executor must be
-        // numerically interchangeable with the seed's scalar path on
-        // both model families at every supported depth — identical loss
-        // and gradients within FP-reassociation tolerance.
-        for model_name in ["gcn", "sage"] {
+        // ISSUE 5 tentpole guard, swept across the model zoo: the
+        // workspace/blocked executor must be numerically interchangeable
+        // with the seed's scalar path on every model family at every
+        // supported depth — identical loss and gradients within
+        // FP-reassociation tolerance.
+        for model_name in MODEL_NAMES {
             for fanouts in [vec![3usize], vec![3, 2], vec![3, 2, 2]] {
                 let entry = depth_entry(model_name, &fanouts);
                 let mut model = RefModel::new(&entry).unwrap();
-                let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
+                let params = match model_name {
+                    "gat" | "gin" => random_params(&entry, 5),
+                    _ => crate::coordinator::params::ParamSet::init(&entry, 5).data,
+                };
                 let batch = random_batch(&entry.dims, 11);
                 let blocked = model.train_step(&params, &batch).unwrap();
                 let oracle = model.train_step_scalar(&params, &batch).unwrap();
@@ -674,7 +584,9 @@ mod tests {
     fn rejects_unknown_model_and_bad_shapes() {
         let mut entry = tiny_entry("gcn", "train");
         entry.model = "transformer".into();
-        assert!(RefModel::new(&entry).is_err());
+        let err = RefModel::new(&entry).unwrap_err().to_string();
+        assert!(err.contains("unknown model 'transformer'"), "{err}");
+        assert!(err.contains("expected one of gcn|sage|gat|gin"), "{err}");
         let mut entry = tiny_entry("gcn", "train");
         entry.params[0].1 = vec![1, 1];
         assert!(RefModel::new(&entry).is_err());
@@ -685,36 +597,59 @@ mod tests {
     }
 
     #[test]
+    fn param_mismatch_errors_report_the_expected_layout() {
+        // satellite of ISSUE 8: the first thing a user wiring a new model
+        // hits must spell out the per-layer names + shapes, not counts
+        let mut entry = depth_entry("gin", &[3]);
+        entry.params.truncate(2);
+        let count_err = RefModel::new(&entry).unwrap_err().to_string();
+        assert!(count_err.contains("expected layout"), "{count_err}");
+        assert!(count_err.contains("eps1[1]"), "{count_err}");
+        let mut entry = tiny_entry("gcn", "train");
+        entry.params[0].1 = vec![1, 1];
+        let shape_err = RefModel::new(&entry).unwrap_err().to_string();
+        assert!(shape_err.contains("expected layout"), "{shape_err}");
+        assert!(shape_err.contains("!= expected"), "{shape_err}");
+    }
+
+    #[test]
     fn deterministic_bitwise() {
-        let entry = tiny_entry("sage", "train");
-        let mut model = RefModel::new(&entry).unwrap();
-        let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
-        let batch = random_batch(&entry.dims, 8);
-        let a = model.train_step(&params, &batch).unwrap();
-        let b = model.train_step(&params, &batch).unwrap();
-        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
-        assert_eq!(a.grads, b.grads);
+        for model_name in MODEL_NAMES {
+            let entry = tiny_entry(model_name, "train");
+            let mut model = RefModel::new(&entry).unwrap();
+            assert_eq!(model.model(), model_name);
+            let params = random_params(&entry, 5);
+            let batch = random_batch(&entry.dims, 8);
+            let a = model.train_step(&params, &batch).unwrap();
+            let b = model.train_step(&params, &batch).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{model_name}");
+            assert_eq!(a.grads, b.grads, "{model_name}");
+        }
     }
 
     #[test]
     fn recycled_workspace_cannot_leak_between_batches() {
         // two different batches alternated through one model instance:
         // results must match a fresh instance's on every step (the
-        // workspace is fully overwritten per step over the live region)
-        let entry = tiny_entry("sage", "train");
-        let mut reused = RefModel::new(&entry).unwrap();
-        let params = crate::coordinator::params::ParamSet::init(&entry, 5).data;
-        let batches = [random_batch(&entry.dims, 8), random_batch(&entry.dims, 9)];
-        // dirty the workspace AND the recycled gradient buffers with
-        // batch 1 first, then replay both
-        let mut grads = GradBuffers::empty();
-        let _ = reused.train_step_into(&params, &batches[1], &mut grads).unwrap();
-        for b in &batches {
-            let mut fresh = RefModel::new(&entry).unwrap();
-            let want = fresh.train_step(&params, b).unwrap();
-            let loss = reused.train_step_into(&params, b, &mut grads).unwrap();
-            assert_eq!(loss.to_bits(), want.loss.to_bits());
-            assert_eq!(grads, want.grads);
+        // workspace is fully overwritten per step over the live region).
+        // Swept over the zoo — the attention/MLP lanes and their
+        // in-place recycling are exactly where stale state would hide.
+        for model_name in MODEL_NAMES {
+            let entry = tiny_entry(model_name, "train");
+            let mut reused = RefModel::new(&entry).unwrap();
+            let params = random_params(&entry, 5);
+            let batches = [random_batch(&entry.dims, 8), random_batch(&entry.dims, 9)];
+            // dirty the workspace AND the recycled gradient buffers with
+            // batch 1 first, then replay both
+            let mut grads = GradBuffers::empty();
+            let _ = reused.train_step_into(&params, &batches[1], &mut grads).unwrap();
+            for b in &batches {
+                let mut fresh = RefModel::new(&entry).unwrap();
+                let want = fresh.train_step(&params, b).unwrap();
+                let loss = reused.train_step_into(&params, b, &mut grads).unwrap();
+                assert_eq!(loss.to_bits(), want.loss.to_bits(), "{model_name}");
+                assert_eq!(grads, want.grads, "{model_name}");
+            }
         }
     }
 }

@@ -10,21 +10,58 @@
 //! executor half of the zero-allocation hot path (DESIGN.md §Hot-path
 //! memory & kernels and §SIMD dispatch & gradient sync).
 //!
+//! Which lanes exist is driven by the model's [`LaneSpec`] (DESIGN.md
+//! §Model zoo): each `ModelOps` implementation declares the scratch it
+//! needs and the arena sizes exactly those lanes, so e.g. a GCN
+//! workspace carries no attention lanes and a GAT workspace no
+//! aggregation lane.
+//!
 //! Ownership map (layer l = 1..=L stored at index l-1; shapes are the
 //! padded wire-format capacities, but kernels only touch the batch's
-//! real row counts):
+//! real row counts; `k_l = fanouts[l-1] + 1` is the padded list width):
 //!
-//! | buffer      | shape                | role                               |
-//! |-------------|----------------------|------------------------------------|
-//! | `agg[l-1]`  | `[caps[l], f[l-1]]`  | neighbor aggregation input         |
-//! | `selfr[l-1]`| `[caps[l], f[l-1]]`  | gathered self rows (SAGE only)     |
-//! | `z[l-1]`    | `[caps[l], f[l]]`    | pre-activation; `z[L-1]` = logits  |
-//! | `h[l-1]`    | `[caps[l], f[l]]`    | post-relu activation (l < L)       |
-//! | `dz[l-1]`   | `[caps[l], f[l]]`    | ∂loss/∂z; `dz[L-1]` starts as dlogits |
-//! | `dx[l-1]`   | `[caps[l], f[l-1]]`  | backward matmul scratch (l > 1)    |
-//! | `dx2[l-1]`  | `[caps[l], f[l-1]]`  | second scratch (SAGE ∂nbr, l > 1)  |
+//! | buffer          | shape                 | role                               |
+//! |-----------------|-----------------------|------------------------------------|
+//! | `agg[l-1]`      | `[caps[l], f[l-1]]`   | neighbor aggregation input         |
+//! | `selfr[l-1]`    | `[caps[l], f[l-1]]`   | gathered self rows (SAGE/GIN)      |
+//! | `z[l-1]`        | `[caps[l], f[l]]`     | pre-activation; `z[L-1]` = logits  |
+//! | `h[l-1]`        | `[caps[l], f[l]]`     | post-relu activation (l < L)       |
+//! | `dz[l-1]`       | `[caps[l], f[l]]`     | ∂loss/∂z; `dz[L-1]` starts as dlogits |
+//! | `dx[l-1]`       | `[caps[l], f[l-1]]`   | backward matmul scratch (l > 1; GIN all l) |
+//! | `dx2[l-1]`      | `[caps[l], f[l-1]]`   | second scratch (SAGE ∂nbr, l > 1)  |
+//! | `att_ht[l-1]`   | `[caps[l-1], f[l]]`   | GAT transformed below-level rows   |
+//! | `att_dht[l-1]`  | `[caps[l-1], f[l]]`   | GAT ∂loss/∂ht accumulator          |
+//! | `att_sself[l-1]`| `[caps[l-1]]`         | GAT per-vertex self scores (bwd: ∂scores) |
+//! | `att_snbr[l-1]` | `[caps[l-1]]`         | GAT per-vertex nbr scores (bwd: ∂scores) |
+//! | `att_alpha[l-1]`| `[caps[l], k_l]`      | GAT per-edge attention weights     |
+//! | `att_dalpha[l-1]`| `[caps[l], k_l]`     | GAT per-edge gradient lane         |
+//! | `mlp_z1[l-1]`   | `[caps[l], f[l]]`     | GIN MLP hidden pre-activation      |
+//! | `mlp_h1[l-1]`   | `[caps[l], f[l]]`     | GIN MLP hidden activation          |
+//! | `mlp_dh1[l-1]`  | `[caps[l], f[l]]`     | GIN MLP hidden gradient            |
 
 use super::manifest::ArtifactDims;
+
+/// Which scratch lanes a model's forward/backward stages touch — the
+/// model-ops layer's declaration the arena sizes from. All-false plus
+/// struct-update syntax keeps each model's spec to the lanes it names.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneSpec {
+    /// Neighbor-aggregation input lane (`agg`).
+    pub agg: bool,
+    /// Gathered self rows (`selfr`) — SAGE's W_self input, GIN's
+    /// (1+ε)-weighted self path.
+    pub selfr: bool,
+    /// Backward input-gradient scratch (`dx`) at layers l > 1.
+    pub dx: bool,
+    /// `dx` also at layer 1 (GIN: ∂ε needs the layer-1 ∂aggregate).
+    pub dx_at_layer1: bool,
+    /// Second backward scratch (`dx2`) at layers l > 1 (SAGE ∂nbr).
+    pub dx2: bool,
+    /// GAT attention lanes (`att_*`).
+    pub attention: bool,
+    /// GIN 2-layer-MLP update lanes (`mlp_*`).
+    pub mlp: bool,
+}
 
 /// Pre-sized executor scratch; see the module docs for the ownership map.
 pub struct Workspace {
@@ -35,6 +72,15 @@ pub struct Workspace {
     pub dz: Vec<Vec<f32>>,
     pub dx: Vec<Vec<f32>>,
     pub dx2: Vec<Vec<f32>>,
+    pub att_ht: Vec<Vec<f32>>,
+    pub att_dht: Vec<Vec<f32>>,
+    pub att_sself: Vec<Vec<f32>>,
+    pub att_snbr: Vec<Vec<f32>>,
+    pub att_alpha: Vec<Vec<f32>>,
+    pub att_dalpha: Vec<Vec<f32>>,
+    pub mlp_z1: Vec<Vec<f32>>,
+    pub mlp_h1: Vec<Vec<f32>>,
+    pub mlp_dh1: Vec<Vec<f32>>,
     /// Per-level row counts the current step computes (`n` clamped to the
     /// capacities for training; the full capacities for prediction).
     /// Lives in the workspace so a step allocates nothing but its
@@ -42,10 +88,18 @@ pub struct Workspace {
     pub rows: Vec<usize>,
 }
 
+fn lane(on: bool, len: usize) -> Vec<f32> {
+    if on {
+        vec![0.0; len]
+    } else {
+        Vec::new()
+    }
+}
+
 impl Workspace {
-    /// Allocate every buffer an L-layer model of these dims will touch
-    /// (`sage` additionally sizes the self-row and second-scratch lanes).
-    pub fn new(dims: &ArtifactDims, sage: bool) -> Workspace {
+    /// Allocate every buffer an L-layer model of these dims will touch,
+    /// per the model's [`LaneSpec`].
+    pub fn new(dims: &ArtifactDims, spec: LaneSpec) -> Workspace {
         let lcount = dims.layers();
         let mut ws = Workspace {
             agg: Vec::with_capacity(lcount),
@@ -55,25 +109,65 @@ impl Workspace {
             dz: Vec::with_capacity(lcount),
             dx: Vec::with_capacity(lcount),
             dx2: Vec::with_capacity(lcount),
+            att_ht: Vec::with_capacity(lcount),
+            att_dht: Vec::with_capacity(lcount),
+            att_sself: Vec::with_capacity(lcount),
+            att_snbr: Vec::with_capacity(lcount),
+            att_alpha: Vec::with_capacity(lcount),
+            att_dalpha: Vec::with_capacity(lcount),
+            mlp_z1: Vec::with_capacity(lcount),
+            mlp_h1: Vec::with_capacity(lcount),
+            mlp_dh1: Vec::with_capacity(lcount),
             rows: dims.caps.clone(),
         };
         for l in 1..=lcount {
             let rows = dims.caps[l];
+            let below = dims.caps[l - 1];
+            let k = dims.fanouts[l - 1] + 1;
             let (fin, fout) = (dims.f[l - 1], dims.f[l]);
-            ws.agg.push(vec![0.0; rows * fin]);
-            ws.selfr.push(if sage { vec![0.0; rows * fin] } else { Vec::new() });
+            ws.agg.push(lane(spec.agg, rows * fin));
+            ws.selfr.push(lane(spec.selfr, rows * fin));
             ws.z.push(vec![0.0; rows * fout]);
-            ws.h.push(if l < lcount { vec![0.0; rows * fout] } else { Vec::new() });
+            ws.h.push(lane(l < lcount, rows * fout));
             ws.dz.push(vec![0.0; rows * fout]);
-            ws.dx.push(if l > 1 { vec![0.0; rows * fin] } else { Vec::new() });
-            ws.dx2.push(if sage && l > 1 { vec![0.0; rows * fin] } else { Vec::new() });
+            ws.dx.push(lane(
+                (spec.dx && l > 1) || (spec.dx_at_layer1 && l == 1),
+                rows * fin,
+            ));
+            ws.dx2.push(lane(spec.dx2 && l > 1, rows * fin));
+            ws.att_ht.push(lane(spec.attention, below * fout));
+            ws.att_dht.push(lane(spec.attention, below * fout));
+            ws.att_sself.push(lane(spec.attention, below));
+            ws.att_snbr.push(lane(spec.attention, below));
+            ws.att_alpha.push(lane(spec.attention, rows * k));
+            ws.att_dalpha.push(lane(spec.attention, rows * k));
+            ws.mlp_z1.push(lane(spec.mlp, rows * fout));
+            ws.mlp_h1.push(lane(spec.mlp, rows * fout));
+            ws.mlp_dh1.push(lane(spec.mlp, rows * fout));
         }
         ws
     }
 
     /// Total resident bytes (observability; the arena never grows).
     pub fn bytes(&self) -> usize {
-        let lanes = [&self.agg, &self.selfr, &self.z, &self.h, &self.dz, &self.dx, &self.dx2];
+        let lanes = [
+            &self.agg,
+            &self.selfr,
+            &self.z,
+            &self.h,
+            &self.dz,
+            &self.dx,
+            &self.dx2,
+            &self.att_ht,
+            &self.att_dht,
+            &self.att_sself,
+            &self.att_snbr,
+            &self.att_alpha,
+            &self.att_dalpha,
+            &self.mlp_z1,
+            &self.mlp_h1,
+            &self.mlp_dh1,
+        ];
         lanes
             .iter()
             .map(|lane| lane.iter().map(|b| b.len() * 4).sum::<usize>())
@@ -89,29 +183,78 @@ mod tests {
         ArtifactDims::from_batch(8, &[3, 2], &[6, 5, 4])
     }
 
+    fn gcn_spec() -> LaneSpec {
+        LaneSpec { agg: true, dx: true, ..LaneSpec::default() }
+    }
+
+    fn sage_spec() -> LaneSpec {
+        LaneSpec { agg: true, selfr: true, dx: true, dx2: true, ..LaneSpec::default() }
+    }
+
     #[test]
     fn gcn_workspace_shapes_follow_the_dims() {
         let d = dims();
-        let ws = Workspace::new(&d, false);
+        let ws = Workspace::new(&d, gcn_spec());
         assert_eq!(ws.agg[0].len(), d.caps[1] * d.f[0]);
         assert_eq!(ws.agg[1].len(), d.caps[2] * d.f[1]);
         assert_eq!(ws.z[1].len(), d.b * d.classes());
         assert_eq!(ws.dz[1].len(), d.b * d.classes());
         assert_eq!(ws.h[0].len(), d.caps[1] * d.f[1]);
         assert!(ws.h[1].is_empty(), "no relu after the output layer");
-        assert!(ws.selfr.iter().all(|b| b.is_empty()), "selfr is SAGE-only");
+        assert!(ws.selfr.iter().all(|b| b.is_empty()), "selfr is SAGE/GIN-only");
         assert!(ws.dx[0].is_empty(), "layer 1 has no input gradient");
         assert_eq!(ws.dx[1].len(), d.caps[2] * d.f[1]);
+        assert!(ws.att_alpha.iter().all(|b| b.is_empty()), "attention lanes are GAT-only");
+        assert!(ws.mlp_z1.iter().all(|b| b.is_empty()), "MLP lanes are GIN-only");
         assert!(ws.bytes() > 0);
     }
 
     #[test]
     fn sage_workspace_adds_self_and_second_scratch_lanes() {
         let d = dims();
-        let ws = Workspace::new(&d, true);
+        let ws = Workspace::new(&d, sage_spec());
         assert_eq!(ws.selfr[0].len(), d.caps[1] * d.f[0]);
         assert_eq!(ws.dx2[1].len(), d.caps[2] * d.f[1]);
         assert!(ws.dx2[0].is_empty());
-        assert!(ws.bytes() > Workspace::new(&d, false).bytes());
+        assert!(ws.bytes() > Workspace::new(&d, gcn_spec()).bytes());
+    }
+
+    #[test]
+    fn attention_lanes_follow_the_edge_shapes() {
+        let d = dims();
+        let spec = LaneSpec { attention: true, ..LaneSpec::default() };
+        let ws = Workspace::new(&d, spec);
+        // ht/dht live on the below level with the layer's output width
+        assert_eq!(ws.att_ht[0].len(), d.caps[0] * d.f[1]);
+        assert_eq!(ws.att_dht[1].len(), d.caps[1] * d.f[2]);
+        // per-vertex scores are one scalar per below-level row
+        assert_eq!(ws.att_sself[0].len(), d.caps[0]);
+        assert_eq!(ws.att_snbr[1].len(), d.caps[1]);
+        // alpha is per padded edge: rows × (fanout + 1)
+        assert_eq!(ws.att_alpha[0].len(), d.caps[1] * (d.fanouts[0] + 1));
+        assert_eq!(ws.att_dalpha[1].len(), d.caps[2] * (d.fanouts[1] + 1));
+        // GAT needs neither the aggregation lane nor the dx scratch
+        assert!(ws.agg.iter().all(|b| b.is_empty()));
+        assert!(ws.dx.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn gin_spec_sizes_mlp_lanes_and_layer1_dx() {
+        let d = dims();
+        let spec = LaneSpec {
+            agg: true,
+            selfr: true,
+            dx: true,
+            dx_at_layer1: true,
+            mlp: true,
+            ..LaneSpec::default()
+        };
+        let ws = Workspace::new(&d, spec);
+        assert_eq!(ws.mlp_z1[0].len(), d.caps[1] * d.f[1]);
+        assert_eq!(ws.mlp_h1[1].len(), d.caps[2] * d.f[2]);
+        assert_eq!(ws.mlp_dh1[1].len(), d.caps[2] * d.f[2]);
+        // unlike GCN/SAGE, dx exists at layer 1 too (∂ε needs ∂agg)
+        assert_eq!(ws.dx[0].len(), d.caps[1] * d.f[0]);
+        assert_eq!(ws.dx[1].len(), d.caps[2] * d.f[1]);
     }
 }

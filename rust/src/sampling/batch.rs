@@ -46,6 +46,10 @@ pub enum WeightMode {
     /// GraphSAGE-mean: neighbor columns weighted 1/k_real, self column
     /// weight 1 (consumed by the separate W_self path in the model).
     SageMean,
+    /// Unit weights on every real entry (self column included): the model
+    /// computes its own edge coefficients — GAT's learned attention, GIN's
+    /// ε-weighted sum — so the wire weights only mark real vs padding.
+    Unit,
 }
 
 impl WeightMode {
@@ -53,7 +57,11 @@ impl WeightMode {
         match model.to_ascii_lowercase().as_str() {
             "gcn" => Ok(WeightMode::GcnNorm),
             "graphsage" | "sage" | "gsg" => Ok(WeightMode::SageMean),
-            _ => anyhow::bail!("unknown model '{model}' (gcn|graphsage)"),
+            "gat" | "gin" => Ok(WeightMode::Unit),
+            _ => anyhow::bail!(
+                "unknown model '{model}', expected one of {} (graphsage/gsg alias sage)",
+                crate::runtime::model_ops::MODEL_NAMES.join("|")
+            ),
         }
     }
 }

@@ -227,6 +227,8 @@ impl Sampler {
             WeightMode::GcnNorm => 1.0 / (g.degree(v) as f32 + 1.0),
             // SAGE: the self column feeds the W_self path at weight 1
             WeightMode::SageMean => 1.0,
+            // GAT/GIN compute their own coefficients; 1 marks "real"
+            WeightMode::Unit => 1.0,
         }
     }
 
@@ -237,6 +239,7 @@ impl Sampler {
                 1.0 / (((g.degree(v) as f32 + 1.0) * (g.degree(u) as f32 + 1.0)).sqrt())
             }
             WeightMode::SageMean => 1.0 / k_real as f32,
+            WeightMode::Unit => 1.0,
         }
     }
 }
@@ -390,6 +393,33 @@ mod tests {
                 assert!((nbr_sum - 1.0).abs() < 1e-5, "row {r}: {nbr_sum}");
             }
             assert_eq!(w2[r * k2], 1.0); // self column
+        }
+    }
+
+    #[test]
+    fn unit_weights_are_one_on_real_entries_and_zero_on_padding() {
+        let d = data();
+        let mut s = Sampler::new(cfg(), WeightMode::Unit, d.graph.num_vertices(), 6);
+        let targets: Vec<u32> = d.train_vertices[..16].to_vec();
+        let mb = s.sample(&d, &targets, 0, 0);
+        mb.validate().unwrap();
+        for l in 1..=mb.layers() {
+            let k = mb.dims.row_width(l);
+            let w = &mb.w[l - 1];
+            for r in 0..mb.dims.caps[l] {
+                for c in 0..k {
+                    let val = w[r * k + c];
+                    assert!(
+                        val == 1.0 || val == 0.0,
+                        "level-{l} row {r} col {c}: weight {val} not in {{0, 1}}"
+                    );
+                    if r >= mb.n[l] {
+                        assert_eq!(val, 0.0, "padding row {r} must carry weight 0");
+                    } else if c == 0 {
+                        assert_eq!(val, 1.0, "self column of real row {r}");
+                    }
+                }
+            }
         }
     }
 

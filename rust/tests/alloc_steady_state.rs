@@ -43,15 +43,19 @@ fn sampler_and_gather_steady_state_is_allocation_free() {
         allocs as f64 / iters as f64
     );
 
-    // ISSUE 7: the whole iteration — sample → gather → assemble → p train
-    // steps (recycled GradBuffers) → serial reduce → fused SGD — stays
-    // allocation-free once warm.
+    // ISSUE 7 + ISSUE 8: the whole iteration — sample → gather → assemble
+    // → p train steps (recycled GradBuffers) → serial reduce → fused SGD —
+    // stays allocation-free once warm, for every model-zoo architecture
+    // (the GAT attention lanes and GIN MLP lanes live in the same
+    // workspace arena as the gcn/sage path).
     let iters = 16usize;
-    let allocs = audit_full_iteration_allocs(2, 4, iters);
-    assert_eq!(
-        allocs, 0,
-        "full training iteration allocated {allocs} times over {iters} iterations \
-         ({} allocations/iteration)",
-        allocs as f64 / iters as f64
-    );
+    for model in hitgnn::runtime::MODEL_NAMES {
+        let allocs = audit_full_iteration_allocs(model, 2, 4, iters);
+        assert_eq!(
+            allocs, 0,
+            "{model}: full training iteration allocated {allocs} times over {iters} \
+             iterations ({} allocations/iteration)",
+            allocs as f64 / iters as f64
+        );
+    }
 }

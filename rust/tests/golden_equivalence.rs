@@ -162,7 +162,7 @@ impl SeedSampler {
     fn self_weight(&self, g: &Csr, v: u32) -> f32 {
         match self.mode {
             WeightMode::GcnNorm => 1.0 / (g.degree(v) as f32 + 1.0),
-            WeightMode::SageMean => 1.0,
+            WeightMode::SageMean | WeightMode::Unit => 1.0,
         }
     }
 
@@ -172,6 +172,7 @@ impl SeedSampler {
                 1.0 / (((g.degree(v) as f32 + 1.0) * (g.degree(u) as f32 + 1.0)).sqrt())
             }
             WeightMode::SageMean => 1.0 / k_real as f32,
+            WeightMode::Unit => 1.0,
         }
     }
 }
@@ -198,7 +199,11 @@ fn assert_bit_identical(mb: &MiniBatch, seed: &SeedBatch, tag: &str) {
 fn generalized_sampler_is_bit_identical_to_seed_at_depth_two() {
     let data = hitgnn::graph::datasets::lookup("reddit").unwrap().build(8, 17);
     let nv = data.graph.num_vertices();
-    for (mode, rng_seed) in [(WeightMode::GcnNorm, 7u64), (WeightMode::SageMean, 23u64)] {
+    for (mode, rng_seed) in [
+        (WeightMode::GcnNorm, 7u64),
+        (WeightMode::SageMean, 23u64),
+        (WeightMode::Unit, 41u64),
+    ] {
         let mut gen = Sampler::new(FanoutConfig::new(64, &[5, 3]), mode, nv, rng_seed);
         let mut oracle = SeedSampler::new(64, 5, 3, mode, nv, rng_seed);
         // several (part, seq) keys, including a short final batch, and in
@@ -216,10 +221,10 @@ fn generalized_sampler_is_bit_identical_to_seed_at_depth_two() {
 }
 
 /// (per-iteration losses, traffic totals) of a short tiny-dataset run.
-fn run_losses(fanouts: Option<Vec<usize>>) -> (Vec<f64>, (u64, u64, u64, u64)) {
+fn run_losses(model: &str, fanouts: Option<Vec<usize>>) -> (Vec<f64>, (u64, u64, u64, u64)) {
     let cfg = TrainConfig {
         dataset: "tiny".into(),
-        model: "gcn".into(),
+        model: model.into(),
         algo: Algorithm::DistDgl,
         num_fpgas: 2,
         epochs: 2,
@@ -252,8 +257,8 @@ fn explicit_default_fanouts_reproduce_the_seed_training_run() {
     // `--fanouts 3,2` (the tiny artifact's own fanouts) must take the
     // exact same path as no override: bit-identical per-iteration losses
     // and Traffic totals — the refactor is a no-op at L = 2.
-    let base = run_losses(None);
-    let explicit = run_losses(Some(vec![3, 2]));
+    let base = run_losses("gcn", None);
+    let explicit = run_losses("gcn", Some(vec![3, 2]));
     assert!(!base.0.is_empty());
     assert_eq!(
         base.0.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
@@ -261,4 +266,27 @@ fn explicit_default_fanouts_reproduce_the_seed_training_run() {
         "losses diverged between default and explicit [3, 2] fanouts"
     );
     assert_eq!(base.1, explicit.1, "traffic diverged");
+}
+
+#[test]
+fn model_zoo_training_runs_are_bit_stable_end_to_end() {
+    // ISSUE 8 golden guard across the zoo: the full trainer pipeline
+    // (sampler → weight mode → model-ops executor → optimizer) must be a
+    // pure function of (model, seed) — rerunning any architecture yields
+    // bit-identical loss sequences and traffic totals. For gcn/sage this
+    // pins the ModelOps refactor to the pre-refactor behaviour (their ops
+    // are verbatim transcriptions and the sampler oracle above pins the
+    // batches); for gat/gin it pins the new end-to-end paths.
+    for model in hitgnn::runtime::MODEL_NAMES {
+        let a = run_losses(model, None);
+        let b = run_losses(model, None);
+        assert!(!a.0.is_empty(), "{model}: no iterations ran");
+        assert!(a.0.iter().all(|l| l.is_finite()), "{model}: non-finite loss {:?}", a.0);
+        assert_eq!(
+            a.0.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            b.0.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "{model}: loss sequence not reproducible"
+        );
+        assert_eq!(a.1, b.1, "{model}: traffic not reproducible");
+    }
 }

@@ -76,6 +76,36 @@ fn loss_sequence_invariant_across_pipeline_configs() {
 }
 
 #[test]
+fn loss_sequence_invariant_across_pipeline_configs_for_every_model() {
+    // ISSUE 8 acceptance: the determinism law is a property of the
+    // pipeline, not of one architecture — every model-zoo entry (the GAT
+    // attention path and GIN MLP path included) must produce bit-identical
+    // loss sequences and Traffic totals across host-threads ×
+    // prefetch-depth. gcn's full grid is covered above; here each model
+    // runs the serial path against the most concurrent one.
+    for model in hitgnn::runtime::MODEL_NAMES {
+        let cfg = || {
+            let mut c = base_cfg();
+            c.model = model.into();
+            c
+        };
+        let base = run_cfg(cfg(), 1, 1);
+        assert!(!base.0.is_empty(), "{model}: no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()), "{model}: non-finite loss");
+        for (ht, d) in [(4, 1), (4, 3)] {
+            let got = run_cfg(cfg(), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "{model}: loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+            );
+            assert_eq!(base.1, got.1, "{model}: traffic diverged at ({ht}, {d})");
+            assert_eq!(base.2, got.2, "{model}: batch count diverged at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "{model}: iteration count diverged at ({ht}, {d})");
+        }
+    }
+}
+
+#[test]
 fn dynamic_policy_runs_stay_bit_identical_across_pipeline_configs() {
     // ISSUE 2 acceptance: dynamic feature-store policies (epoch-snapshot
     // reads, barrier-ordered observe, epoch-barrier re-rank) plus the

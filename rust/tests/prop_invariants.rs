@@ -1,7 +1,7 @@
 //! Property-based invariants over the L3 substrates, driven by the
 //! in-repo `util::proptest` helper (seed-reproducible random cases).
 
-use hitgnn::fpga::timing::{BatchShape, TimingModel};
+use hitgnn::fpga::timing::{BatchShape, ModelCost, TimingModel};
 use hitgnn::fpga::{DieConfig, ResourceModel, U250};
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, preprocess_with_policy, Algorithm};
@@ -330,11 +330,16 @@ fn perf_model_monotone_in_resources_and_beta() {
         let m = 32 * (1 + rng.index(16)) as u32;
         let t1 = TimingModel::new(U250, DieConfig { n, m }, 16.0);
         let t2 = TimingModel::new(U250, DieConfig { n: n * 2, m: m * 2 }, 16.0);
-        let b1 = t1.batch(&shape, beta, 1.0).gnn_s;
-        let b2 = t2.batch(&shape, beta, 1.0).gnn_s;
+        let b1 = t1.batch(&shape, beta, ModelCost::GCN).gnn_s;
+        let b2 = t2.batch(&shape, beta, ModelCost::GCN).gnn_s;
         require(b2 <= b1 + 1e-12, "more PEs must not be slower")?;
-        let hi = t1.batch(&shape, (beta + 0.3).min(1.0), 1.0).gnn_s;
-        require(hi <= b1 + 1e-12, "higher beta must not be slower")
+        let hi = t1.batch(&shape, (beta + 0.3).min(1.0), ModelCost::GCN).gnn_s;
+        require(hi <= b1 + 1e-12, "higher beta must not be slower")?;
+        // the model axis prices attention: a GAT batch is never faster
+        // than the matched GCN batch, and strictly slower whenever the
+        // attention term is non-degenerate (it always is: a[l] > 0)
+        let gat = t1.batch(&shape, beta, ModelCost::for_model("gat").unwrap()).gnn_s;
+        require(gat > b1, "attention must add edge-proportional time")
     });
 }
 
@@ -352,7 +357,7 @@ fn epoch_estimate_scales_with_batches() {
         let w1 = Workload {
             shape: BatchShape::nominal(1024.0, &[25.0, 10.0], &[100.0, 128.0, 47.0]),
             beta: 0.5 + rng.f64() * 0.5,
-            param_scale: 1.0,
+            cost: ModelCost::GCN,
             sampling_s_per_batch: 0.0,
             batches_per_part: vec![base; p],
             workload_balancing: true,
