@@ -372,6 +372,8 @@ fn scheduler_sweep() {
         direct_host_fetch: true,
         extra_pcie_bytes_per_batch: 0.0,
         prefetch: false,
+        disk_gbs: 0.0,
+        disk_miss_frac: 0.0,
     };
     // (fleet, per-partition batch counts): tail-heavy profiles — the long
     // partitions live on *fast* devices, so stage 2 has extras to place

@@ -19,6 +19,11 @@
 //!   the headline pipeline configuration, tagged with the resolved kernel
 //!   tier so trajectory diffs can tell a zoo regression from a dispatch
 //!   change.
+//! - `BENCH_io.json`      — the out-of-core storage trajectory: mmap-pack
+//!   vs in-memory epoch wall clock (numerics bit-identical, asserted),
+//!   plus the DRAM-tier policy sweep (static / lfu / window at a fixed
+//!   `--dram-ratio`) with per-epoch DRAM hit rates and disk bytes, so
+//!   trajectory diffs can tell a tiering regression from a pipeline one.
 //! - `BENCH_tune.json`    — the closed-loop auto-tune acceptance sweep: a
 //!   hand-swept static (host-threads × prefetch-depth × sched) grid on a
 //!   `u250:2,u250-half:2` fleet vs an 8-epoch `--auto-tune on` trajectory
@@ -43,6 +48,7 @@ fn main() {
     kernels_suite(&out).expect("kernels suite");
     models_suite(&out).expect("models suite");
     sync_suite(&out).expect("sync suite");
+    io_suite(&out).expect("io suite");
     tune_suite(&out).expect("tune suite");
 }
 
@@ -391,6 +397,134 @@ fn sync_suite(out: &std::path::Path) -> anyhow::Result<()> {
             serial_s * 1e3
         );
     }
+    Ok(())
+}
+
+/// BENCH_io.json: the out-of-core storage trajectory. One packed tiny
+/// dataset feeds both halves: (a) mmap-vs-in-memory epoch wall at the
+/// headline pipeline configuration (the numerics are bit-identical —
+/// asserted here on the final loss, pinned exhaustively in
+/// tests/out_of_core.rs); (b) the DRAM-tier policy sweep, recording cold
+/// and steady-state DRAM hit rates plus disk bytes per policy so the
+/// LFU/window-vs-static gap under disk pricing is a tracked trajectory
+/// number.
+fn io_suite(out: &std::path::Path) -> anyhow::Result<()> {
+    use hitgnn::graph::{datasets, ondisk};
+    use hitgnn::store::CachePolicy;
+    use hitgnn::util::stats::si;
+
+    let quick = bench::quick();
+    let dir = std::env::temp_dir().join("hitgnn-bench-io");
+    std::fs::create_dir_all(&dir)?;
+    let pack = dir.join(format!("bench-{}.hitg", std::process::id()));
+    let spec = datasets::lookup("tiny")?;
+    let pack_bytes = ondisk::pack_streamed(&spec, 0, 11, &pack, ondisk::DEFAULT_PACK_BUDGET)?;
+    let pack_str = pack.to_str().expect("utf-8 temp path").to_string();
+
+    let base = || TrainConfig {
+        dataset: "tiny".into(),
+        model: "gcn".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 4,
+        epochs: 2,
+        scale_shift: 0,
+        seed: 11,
+        host_threads: 4,
+        prefetch_depth: 2,
+        max_iterations: if quick { Some(6) } else { None },
+        ..TrainConfig::default()
+    };
+
+    println!("\n=== bench: out-of-core storage ===");
+    let mut suite = BenchSuite::new("io");
+    let mut b = Bench::new("out_of_core");
+
+    // (a) mmap pack vs in-memory build, same seed → same numerics
+    let mut mem_loss = f64::NAN;
+    let mut map_loss = f64::NAN;
+    for mapped in [false, true] {
+        let mut samples = Vec::with_capacity(b.iters());
+        for _ in 0..b.iters() {
+            let mut cfg = base();
+            if mapped {
+                cfg.dataset_path = Some(pack_str.clone());
+            }
+            let mut tr = Trainer::new(cfg)?;
+            let report = tr.run()?;
+            samples.push(report.epochs.last().expect("two epochs").wall_seconds);
+            if mapped {
+                map_loss = report.last_loss();
+            } else {
+                mem_loss = report.last_loss();
+            }
+            tr.shutdown();
+        }
+        let label = if mapped { "mmap" } else { "memory" };
+        b.record(&format!("epoch_wall source={label}"), &samples);
+    }
+    assert_eq!(
+        mem_loss.to_bits(),
+        map_loss.to_bits(),
+        "mmap training must be bit-identical to in-memory ({mem_loss} vs {map_loss})"
+    );
+
+    // (b) DRAM-tier policy sweep over the pack at a fixed capacity
+    let dram_ratio = 0.3;
+    let epochs = if quick { 2 } else { 4 };
+    let hit = |m: &EpochMetrics| {
+        let split = m.dram_hit_bytes + m.disk_read_bytes;
+        if split == 0 {
+            1.0
+        } else {
+            m.dram_hit_bytes as f64 / split as f64
+        }
+    };
+    let mut rows = Vec::new();
+    for policy in CachePolicy::ALL {
+        let mut cfg = base();
+        cfg.dataset_path = Some(pack_str.clone());
+        cfg.cache_policy = policy;
+        cfg.dram_ratio = dram_ratio;
+        cfg.epochs = epochs;
+        let mut tr = Trainer::new(cfg)?;
+        let report = tr.run()?;
+        tr.shutdown();
+        let cold = &report.epochs[0];
+        let last = report.epochs.last().expect("epochs");
+        let disk_total: u64 = report.epochs.iter().map(|m| m.disk_read_bytes).sum();
+        println!(
+            "  tier {} ratio {dram_ratio}: hit {:.3} -> {:.3}, disk {} over {epochs} epochs",
+            policy.name(),
+            hit(cold),
+            hit(last),
+            si(disk_total as f64)
+        );
+        rows.push(Json::obj(vec![
+            ("policy", Json::str(policy.name())),
+            ("dram_ratio", Json::num(dram_ratio)),
+            ("cold_hit_rate", Json::num(hit(cold))),
+            ("steady_hit_rate", Json::num(hit(last))),
+            ("steady_disk_read_bytes", Json::num(last.disk_read_bytes as f64)),
+            ("disk_read_bytes_total", Json::num(disk_total as f64)),
+            (
+                "per_epoch_hit",
+                Json::arr(report.epochs.iter().map(|m| Json::num(hit(m))).collect()),
+            ),
+        ]));
+    }
+    println!("=== end bench: out-of-core storage ===");
+    suite.extra(
+        "io",
+        Json::obj(vec![
+            ("pack_bytes", Json::num(pack_bytes as f64)),
+            ("zero_copy", Json::Bool(ondisk::zero_copy_ok())),
+            ("tier_sweep", Json::arr(rows)),
+        ]),
+    );
+    suite.add(&b);
+    b.finish();
+    suite.write(out)?;
+    std::fs::remove_file(&pack).ok();
     Ok(())
 }
 

@@ -69,6 +69,14 @@ pub struct HitGnn {
     fleet: Option<Vec<DeviceSpec>>,
     auto_tune: AutoTuneMode,
     seed: u64,
+    /// Out-of-core: serve the graph from a `hitgnn pack` file (mmap)
+    /// instead of building it in memory.
+    dataset_path: Option<String>,
+    /// Host-DRAM cache tier capacity as a fraction of |V| rows; 1.0 =
+    /// everything DRAM-resident, no disk term.
+    dram_ratio: f64,
+    /// Disk read bandwidth (GB/s) below the DRAM tier.
+    disk_gbs: f64,
 }
 
 impl Default for HitGnn {
@@ -90,6 +98,9 @@ impl Default for HitGnn {
             fleet: None,
             auto_tune: AutoTuneMode::Off,
             seed: 42,
+            dataset_path: None,
+            dram_ratio: 1.0,
+            disk_gbs: 2.0,
         }
     }
 }
@@ -103,6 +114,26 @@ impl HitGnn {
     pub fn load_input_graph(mut self, dataset: &str, scale_shift: u32) -> Self {
         self.dataset = Some(dataset.to_string());
         self.scale_shift = scale_shift;
+        self
+    }
+
+    /// `LoadInputGraph()` from a packed on-disk file (`hitgnn pack`):
+    /// the dataset key and scale shift come from the pack header, and
+    /// training serves CSR + features via mmap with a bounded resident
+    /// set. Overrides [`HitGnn::load_input_graph`]'s build source.
+    pub fn load_packed_graph(mut self, path: &str) -> Self {
+        self.dataset_path = Some(path.to_string());
+        self
+    }
+
+    /// Host memory hierarchy for out-of-core training: keep
+    /// `dram_ratio·|V|` feature rows in a host-DRAM cache tier (re-ranked
+    /// by the configured [`HitGnn::feature_storing`] policy) above a disk
+    /// tier read at `disk_gbs` GB/s. `dram_ratio = 1.0` (default)
+    /// disables the tier. Validated at `generate_design()`.
+    pub fn dram_tier(mut self, dram_ratio: f64, disk_gbs: f64) -> Self {
+        self.dram_ratio = dram_ratio;
+        self.disk_gbs = disk_gbs;
         self
     }
 
@@ -202,9 +233,21 @@ impl HitGnn {
     /// `Generate_Design()`: run the DSE engine for the accelerator
     /// configuration and assemble the host-program configuration.
     pub fn generate_design(self) -> anyhow::Result<Design> {
-        let dataset = self.dataset.clone().ok_or_else(|| {
-            anyhow::anyhow!("call load_input_graph() before generate_design()")
-        })?;
+        // a packed graph carries its own dataset key + scale shift
+        let (dataset, scale_shift) = match &self.dataset_path {
+            Some(p) => {
+                let meta = crate::graph::ondisk::probe(Path::new(p))?;
+                (meta.key, meta.scale_shift)
+            }
+            None => (
+                self.dataset.clone().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "call load_input_graph() or load_packed_graph() before generate_design()"
+                    )
+                })?,
+                self.scale_shift,
+            ),
+        };
         let model = self
             .model
             .clone()
@@ -250,6 +293,16 @@ impl HitGnn {
             "feature_storing(): cache_ratio must be in [0, 1] (got {})",
             self.cache_ratio
         );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.dram_ratio),
+            "dram_tier(): dram_ratio must be in [0, 1] (got {})",
+            self.dram_ratio
+        );
+        anyhow::ensure!(
+            self.disk_gbs.is_finite() && self.disk_gbs > 0.0,
+            "dram_tier(): disk_gbs must be finite and positive (got {})",
+            self.disk_gbs
+        );
         if let Some(fleet) = &self.fleet {
             anyhow::ensure!(!fleet.is_empty(), "platform(): fleet needs at least one device");
             anyhow::ensure!(
@@ -289,6 +342,10 @@ impl HitGnn {
             beta,
             cost: crate::fpga::timing::ModelCost::for_model(&model)?,
             sampling_s_per_batch: 2e-3,
+            // disk term only when a DRAM tier caps resident rows; the
+            // cold-start miss estimate is the uncached fraction
+            disk_gbs: if self.dram_ratio < 1.0 { self.disk_gbs } else { 0.0 },
+            disk_miss_frac: 1.0 - self.dram_ratio,
         };
         // accelerator generator: DSE over this dataset's dims — per
         // device kind on an explicit fleet, classic Algorithm 4 otherwise
@@ -333,11 +390,14 @@ impl HitGnn {
             num_fpgas: self.num_fpgas,
             fleet: Some(fleet.clone()),
             cpu_mem_gbs: self.cpu_mem_gbs,
-            scale_shift: self.scale_shift,
+            scale_shift,
             cache_policy: self.cache_policy,
             cache_ratio: self.cache_ratio,
             auto_tune: self.auto_tune,
             seed: self.seed,
+            dataset_path: self.dataset_path.clone(),
+            dram_ratio: self.dram_ratio,
+            disk_gbs: self.disk_gbs,
             ..TrainConfig::default()
         };
 
@@ -592,6 +652,69 @@ mod tests {
             .unwrap();
         assert_eq!(d.fleet.len(), 4);
         assert!(d.fleet.iter().all(|dev| dev.die == d.accelerator));
+    }
+
+    #[test]
+    fn dram_tier_validates_and_threads_into_the_design() {
+        for bad in [-0.1, 1.5, f64::NAN] {
+            let r = HitGnn::new()
+                .load_input_graph("reddit", 8)
+                .gnn_computation("gcn")
+                .dram_tier(bad, 2.0)
+                .generate_design();
+            assert!(r.is_err(), "dram_ratio {bad} accepted");
+        }
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let r = HitGnn::new()
+                .load_input_graph("reddit", 8)
+                .gnn_computation("gcn")
+                .dram_tier(0.5, bad)
+                .generate_design();
+            assert!(r.is_err(), "disk_gbs {bad} accepted");
+        }
+        let tiered = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .dram_tier(0.25, 3.5)
+            .generate_design()
+            .unwrap();
+        assert_eq!(tiered.train.dram_ratio, 0.25);
+        assert_eq!(tiered.train.disk_gbs, 3.5);
+        assert!(tiered.estimated_nvtps > 0.0);
+        // a DRAM-capped tier pays a disk term the resident design does not
+        let full = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert_eq!(full.train.dram_ratio, 1.0);
+        assert!(full.train.dataset_path.is_none());
+        assert!(tiered.estimated_nvtps <= full.estimated_nvtps);
+    }
+
+    #[test]
+    fn packed_graph_supplies_dataset_key_and_shift() {
+        let spec = datasets::lookup("tiny").unwrap();
+        let data = spec.build(1, 42);
+        let dir = std::env::temp_dir().join("hitgnn-api-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("api-pack-{}.hitg", std::process::id()));
+        crate::graph::ondisk::pack_dataset(&data, &path).unwrap();
+        let d = HitGnn::new()
+            .load_packed_graph(path.to_str().unwrap())
+            .gnn_computation("gcn")
+            .generate_design()
+            .unwrap();
+        assert_eq!(d.train.dataset, "tiny");
+        assert_eq!(d.train.scale_shift, 1);
+        assert_eq!(d.train.dataset_path.as_deref(), path.to_str());
+        std::fs::remove_file(&path).ok();
+        // a missing pack is a clean error, not a panic
+        let r = HitGnn::new()
+            .load_packed_graph("/nonexistent/pack.hitg")
+            .gnn_computation("gcn")
+            .generate_design();
+        assert!(r.is_err());
     }
 
     #[test]

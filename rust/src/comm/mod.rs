@@ -49,6 +49,16 @@ pub struct Traffic {
     pub hit_rows: u64,
     /// Total layer-0 rows accounted.
     pub v0_rows: u64,
+    /// Of the missed bytes (host + f2f + dedup-saved), the part served
+    /// by the host-DRAM cache tier. Zero unless a `TieredStore` is
+    /// active — DRAM-resident datasets serve every miss from DRAM and
+    /// don't account the split. Not part of [`Traffic::total_bytes`]:
+    /// `dram_hit + disk_read` *re-partitions* the miss bytes by source
+    /// tier, it doesn't add new traffic.
+    pub dram_hit_bytes: u64,
+    /// Of the missed bytes, the part that fell through host DRAM to the
+    /// on-disk tier (mmap page-in). See [`Traffic::dram_hit_bytes`].
+    pub disk_read_bytes: u64,
 }
 
 impl std::ops::AddAssign for Traffic {
@@ -62,6 +72,8 @@ impl std::ops::AddAssign for Traffic {
         self.dedup_saved_bytes += other.dedup_saved_bytes;
         self.hit_rows += other.hit_rows;
         self.v0_rows += other.v0_rows;
+        self.dram_hit_bytes += other.dram_hit_bytes;
+        self.disk_read_bytes += other.disk_read_bytes;
     }
 }
 
@@ -90,6 +102,25 @@ impl Traffic {
 
     pub fn total_bytes(&self) -> u64 {
         self.local_bytes + self.host_bytes + self.f2f_bytes + self.dedup_saved_bytes
+    }
+
+    /// Bytes not served from FPGA-local DDR — exactly what the host
+    /// memory hierarchy (DRAM tier, then disk) must supply. When a
+    /// `TieredStore` is active, `dram_hit_bytes + disk_read_bytes`
+    /// partitions this value (pinned by `prop_invariants`).
+    pub fn missed_bytes(&self) -> u64 {
+        self.host_bytes + self.f2f_bytes + self.dedup_saved_bytes
+    }
+
+    /// Fraction of missed bytes served by the host-DRAM tier (1.0 when
+    /// nothing missed or no tiering split was recorded).
+    pub fn dram_hit_rate(&self) -> f64 {
+        let split = self.dram_hit_bytes + self.disk_read_bytes;
+        if split == 0 {
+            1.0
+        } else {
+            self.dram_hit_bytes as f64 / split as f64
+        }
     }
 
     /// Wall-clock seconds to move this traffic, given DDR / PCIe GB/s.

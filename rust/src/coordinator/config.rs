@@ -94,6 +94,22 @@ pub struct TrainConfig {
     /// Cap on iterations per epoch (None = full epoch); lets examples and
     /// benches bound wall-clock.
     pub max_iterations: Option<usize>,
+    /// Packed on-disk dataset (`--dataset-path run.hitg`, written by
+    /// `hitgnn pack`). When set the graph/features are mmapped from the
+    /// pack instead of generated in memory, and the pack's embedded
+    /// dataset key + scale shift override `dataset`/`scale_shift`
+    /// (DESIGN.md §Out-of-core storage).
+    pub dataset_path: Option<String>,
+    /// Host-DRAM tier capacity as a fraction of |V| feature rows
+    /// (`--dram-ratio`). 1.0 = everything resident (no tier, the
+    /// pre-out-of-core behavior); < 1.0 inserts a DRAM cache between the
+    /// FPGA stores and disk, re-ranked with `cache_policy` at the epoch
+    /// barrier. Must be in [0, 1].
+    pub dram_ratio: f64,
+    /// Sequential disk read bandwidth (GB/s) for the perf model's
+    /// miss-traffic term (`--disk-gbs`); only priced when
+    /// `dram_ratio < 1`.
+    pub disk_gbs: f64,
 }
 
 impl Default for TrainConfig {
@@ -125,6 +141,9 @@ impl Default for TrainConfig {
             seed: 42,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             max_iterations: None,
+            dataset_path: None,
+            dram_ratio: 1.0,
+            disk_gbs: 2.0,
         }
     }
 }
@@ -188,6 +207,9 @@ impl TrainConfig {
                 args.str("artifacts", &d.artifacts_dir.display().to_string()),
             ),
             max_iterations: args.opt_str("max-iterations").map(|s| s.parse()).transpose()?,
+            dataset_path: args.opt_str("dataset-path"),
+            dram_ratio: args.num("dram-ratio", d.dram_ratio)?,
+            disk_gbs: args.num("disk-gbs", d.disk_gbs)?,
         };
         crate::runtime::validate_model(&cfg.model)?;
         anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
@@ -213,6 +235,16 @@ impl TrainConfig {
             cfg.cpu_mem_gbs.is_finite() && cfg.cpu_mem_gbs > 0.0,
             "--cpu-mem must be positive (got {})",
             cfg.cpu_mem_gbs
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.dram_ratio),
+            "--dram-ratio must be in [0, 1] (got {})",
+            cfg.dram_ratio
+        );
+        anyhow::ensure!(
+            cfg.disk_gbs.is_finite() && cfg.disk_gbs > 0.0,
+            "--disk-gbs must be positive (got {})",
+            cfg.disk_gbs
         );
         Ok(cfg)
     }
@@ -266,6 +298,15 @@ impl TrainConfig {
             ("buffer_pool", Json::Bool(self.buffer_pool)),
             ("auto_tune", Json::str(self.auto_tune.name())),
             ("seed", Json::num(self.seed as f64)),
+            (
+                "dataset_path",
+                match &self.dataset_path {
+                    Some(p) => Json::str(p),
+                    None => Json::Null,
+                },
+            ),
+            ("dram_ratio", Json::num(self.dram_ratio)),
+            ("disk_gbs", Json::num(self.disk_gbs)),
         ])
     }
 }
@@ -413,6 +454,33 @@ mod tests {
             assert_eq!(c.to_json().req_str("auto_tune").unwrap(), s);
         }
         assert!(TrainConfig::from_args(&Args::parse(["train", "--auto-tune", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn parses_out_of_core_knobs() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert!(c.dataset_path.is_none());
+        assert_eq!(c.dram_ratio, 1.0, "everything DRAM-resident by default");
+        assert_eq!(c.disk_gbs, 2.0);
+        let c = TrainConfig::from_args(&Args::parse([
+            "train", "--dataset-path", "/tmp/run.hitg", "--dram-ratio", "0.5", "--disk-gbs", "4",
+        ]))
+        .unwrap();
+        assert_eq!(c.dataset_path.as_deref(), Some("/tmp/run.hitg"));
+        assert_eq!(c.dram_ratio, 0.5);
+        assert_eq!(c.disk_gbs, 4.0);
+        let j = c.to_json();
+        assert_eq!(j.req_str("dataset_path").unwrap(), "/tmp/run.hitg");
+        assert_eq!(j.req("dram_ratio").unwrap(), &Json::num(0.5));
+        assert_eq!(TrainConfig::default().to_json().req("dataset_path").unwrap(), &Json::Null);
+        for bad in ["-0.1", "1.5", "nan"] {
+            let args = Args::parse(["train", "--dram-ratio", bad]);
+            assert!(TrainConfig::from_args(&args).is_err(), "--dram-ratio {bad} accepted");
+        }
+        for bad in ["0", "-2", "inf"] {
+            let args = Args::parse(["train", "--disk-gbs", bad]);
+            assert!(TrainConfig::from_args(&args).is_err(), "--disk-gbs {bad} accepted");
+        }
     }
 
     #[test]

@@ -26,6 +26,13 @@ pub struct EpochMetrics {
     /// PCIe bytes avoided by iteration-level fetch dedup (charged to CPU
     /// memory bandwidth instead — `comm::IterDedup`).
     pub dedup_saved_bytes: u64,
+    /// Miss bytes served from the host-DRAM tier (`--dram-ratio < 1`;
+    /// 0 without a tier). Together with `disk_read_bytes` this
+    /// re-partitions the miss traffic by source tier — see
+    /// `comm::Traffic`.
+    pub dram_hit_bytes: u64,
+    /// Miss bytes charged as disk reads (rows outside the DRAM tier).
+    pub disk_read_bytes: u64,
     /// Feature stores whose resident set changed at this epoch's barrier
     /// (0 for static policies).
     pub stores_updated: usize,
@@ -81,6 +88,8 @@ impl EpochMetrics {
             ("host_bytes", Json::num(self.host_bytes as f64)),
             ("f2f_bytes", Json::num(self.f2f_bytes as f64)),
             ("dedup_saved_bytes", Json::num(self.dedup_saved_bytes as f64)),
+            ("dram_hit_bytes", Json::num(self.dram_hit_bytes as f64)),
+            ("disk_read_bytes", Json::num(self.disk_read_bytes as f64)),
             ("stores_updated", Json::num(self.stores_updated as f64)),
             ("epoch_makespan_batches", Json::num(self.epoch_makespan_batches as f64)),
             ("epoch_makespan_seconds", Json::num(self.epoch_makespan_seconds)),
@@ -151,6 +160,8 @@ mod tests {
                 mean_loss: 1.5,
                 cache_hit_rate: 0.5,
                 dedup_saved_bytes: 4096,
+                dram_hit_bytes: 2048,
+                disk_read_bytes: 1024,
                 stores_updated: 2,
                 epoch_makespan_batches: 7,
                 epoch_makespan_seconds: 0.25,
@@ -170,6 +181,8 @@ mod tests {
         // the new feature-store observability fields survive the roundtrip
         let e0 = &parsed.get("epochs").unwrap().as_arr().unwrap()[0];
         assert_eq!(e0.req_usize("dedup_saved_bytes").unwrap(), 4096);
+        assert_eq!(e0.req_usize("dram_hit_bytes").unwrap(), 2048);
+        assert_eq!(e0.req_usize("disk_read_bytes").unwrap(), 1024);
         assert_eq!(e0.req_usize("stores_updated").unwrap(), 2);
         assert!(e0.get("cache_hit_rate").is_some());
         // scheduler observability fields survive the roundtrip

@@ -33,7 +33,7 @@ use crate::fpga::timing::BatchShape;
 use crate::graph::{datasets, Dataset};
 use crate::partition::{preprocess_with_policy, Preprocessed};
 use crate::perf::{FleetModel, Workload};
-use crate::store::{FeatureStore, Residency};
+use crate::store::{FeatureStore, Residency, TieredStore};
 use crate::runtime::{ArtifactEntry, BatchBuffers, GradBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, FanoutConfig, Sampler, WeightMode};
 use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
@@ -92,11 +92,33 @@ pub struct Trainer {
     /// model (deterministic: measured at the barriers, so identical
     /// across pipeline configurations).
     last_beta: f64,
+    /// Host-DRAM cache tier above disk (`--dram-ratio < 1`; None =
+    /// everything resident). Charges every FPGA-store miss as a DRAM hit
+    /// or a disk read against an epoch-immutable membership and re-ranks
+    /// at the epoch barrier, exactly like the per-FPGA stores (DESIGN.md
+    /// §Out-of-core storage).
+    tier: Option<TieredStore>,
+    /// Last epoch's measured disk-read share of miss traffic — the cost
+    /// model's disk term (cold start: the uncached fraction 1−dram_ratio).
+    disk_miss_frac: f64,
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig) -> anyhow::Result<Trainer> {
-        let spec = datasets::lookup(&cfg.dataset)?;
+    pub fn new(mut cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        // a packed dataset carries its own key + scale shift; the manifest
+        // lookup and report below must see the pack's identity
+        let data = match &cfg.dataset_path {
+            Some(p) => {
+                let data = crate::graph::ondisk::load(std::path::Path::new(p))?;
+                cfg.dataset = data.spec.key.to_string();
+                cfg.scale_shift = data.scale_shift;
+                data
+            }
+            None => {
+                let spec = datasets::lookup(&cfg.dataset)?;
+                spec.build(cfg.scale_shift, cfg.seed)
+            }
+        };
         let mode = WeightMode::for_model(&cfg.model)?;
         if let Some(fleet) = &cfg.fleet {
             anyhow::ensure!(
@@ -106,13 +128,22 @@ impl Trainer {
                 cfg.num_fpgas
             );
         }
-        let data = spec.build(cfg.scale_shift, cfg.seed);
         crate::log_info!("dataset: {}", data.summary());
 
         anyhow::ensure!(
             (0.0..=1.0).contains(&cfg.cache_ratio),
             "cache_ratio must be in [0, 1] (got {})",
             cfg.cache_ratio
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.dram_ratio),
+            "dram_ratio must be in [0, 1] (got {})",
+            cfg.dram_ratio
+        );
+        anyhow::ensure!(
+            cfg.disk_gbs.is_finite() && cfg.disk_gbs > 0.0,
+            "disk_gbs must be positive (got {})",
+            cfg.disk_gbs
         );
         let pre = preprocess_with_policy(
             cfg.algo,
@@ -196,6 +227,18 @@ impl Trainer {
             .collect();
         let shape_acc = vec![0.0; 2 * entry.dims.layers() + 1];
         let (recycle_tx, recycle_rx) = mpsc::channel();
+        // the DRAM tier shares the per-FPGA stores' policy machinery and
+        // degree ranking; at dram_ratio == 1 there is nothing to account
+        let tier = (cfg.dram_ratio < 1.0).then(|| {
+            TieredStore::new(
+                cfg.cache_policy,
+                data.graph.num_vertices(),
+                cfg.dram_ratio,
+                data.features.feat_dim(),
+                crate::store::dynamic::degree_rank(&data),
+            )
+        });
+        let disk_miss_frac = 1.0 - cfg.dram_ratio;
 
         Ok(Trainer {
             cfg,
@@ -218,6 +261,8 @@ impl Trainer {
             shape_acc,
             shape_n: 0.0,
             last_beta: COLD_START_BETA,
+            tier,
+            disk_miss_frac,
         })
     }
 
@@ -322,6 +367,8 @@ impl Trainer {
             direct_host_fetch: self.cfg.direct_host_fetch,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
+            disk_gbs: if self.tier.is_some() { self.cfg.disk_gbs } else { 0.0 },
+            disk_miss_frac: self.disk_miss_frac,
         }
     }
 
@@ -465,6 +512,7 @@ impl Trainer {
         let data = &self.data;
         let vertex_part = self.pre.vertex_part.as_deref();
         let stores = &mut self.pre.stores;
+        let tier = &mut self.tier;
         let comm = CommConfig { direct_host_fetch: cfg.direct_host_fetch };
         let pool = &self.pool;
         let samplers = &mut self.samplers;
@@ -546,6 +594,17 @@ impl Trainer {
                             b.fpga,
                             traffic,
                         );
+                    }
+                }
+                // DRAM-tier accounting, same (iter, tag) order: every
+                // FPGA-store miss lands on the host — split it into DRAM
+                // hits and disk reads against this epoch's immutable tier
+                // membership, then feed the access stream to the tier's
+                // own policy (re-ranked only at the epoch barrier)
+                if let Some(tier) = tier.as_mut() {
+                    for b in items.iter_mut() {
+                        tier.charge(b.mb.level0(), &snaps[b.fpga], row_bytes, &mut b.stats.traffic);
+                        tier.observe(b.mb.level0());
                     }
                 }
                 for b in &items {
@@ -638,6 +697,11 @@ impl Trainer {
                 stores_updated += 1;
             }
         }
+        if let Some(t) = tier.as_mut() {
+            if t.end_epoch() {
+                stores_updated += 1;
+            }
+        }
 
         m.wall_seconds = t_epoch.elapsed().as_secs_f64();
         m.mean_loss = loss_sum / m.batches.max(1) as f64;
@@ -646,12 +710,20 @@ impl Trainer {
         m.host_bytes = traffic_total.host_bytes;
         m.f2f_bytes = traffic_total.f2f_bytes;
         m.dedup_saved_bytes = traffic_total.dedup_saved_bytes;
+        m.dram_hit_bytes = traffic_total.dram_hit_bytes;
+        m.disk_read_bytes = traffic_total.disk_read_bytes;
         m.beta = traffic_total.beta();
         m.cache_hit_rate = traffic_total.hit_rate();
         m.stores_updated = stores_updated;
         if m.batches > 0 {
             // feed the measured β into the next epoch's cost model
             self.last_beta = m.beta;
+        }
+        let missed = traffic_total.missed_bytes();
+        if self.tier.is_some() && missed > 0 {
+            // measured disk share of miss traffic for the next epoch's
+            // cost model (replaces the cold-start 1−dram_ratio estimate)
+            self.disk_miss_frac = traffic_total.disk_read_bytes as f64 / missed as f64;
         }
         Ok(m)
     }

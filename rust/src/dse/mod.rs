@@ -51,6 +51,12 @@ pub struct DseWorkload {
     /// an edge-proportional stage the update/aggregate overlap can't hide).
     pub cost: ModelCost,
     pub sampling_s_per_batch: f64,
+    /// Disk bandwidth feeding the host-DRAM tier (GB/s); 0 = the dataset
+    /// is DRAM-resident and the swept designs pay no disk term.
+    pub disk_gbs: f64,
+    /// Fraction of feature-miss bytes falling through DRAM to disk
+    /// (`--dram-ratio` cold-start is `1 - ratio`; measured thereafter).
+    pub disk_miss_frac: f64,
 }
 
 impl DseWorkload {
@@ -65,6 +71,8 @@ impl DseWorkload {
             direct_host_fetch: true,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
+            disk_gbs: self.disk_gbs,
+            disk_miss_frac: self.disk_miss_frac,
         }
     }
 }
@@ -320,6 +328,8 @@ pub fn paper_dse_workloads(cost: ModelCost) -> Vec<DseWorkload> {
             beta: 0.75,
             cost,
             sampling_s_per_batch: 2e-3,
+            disk_gbs: 0.0,
+            disk_miss_frac: 0.0,
         })
         .collect()
 }

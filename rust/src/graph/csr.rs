@@ -3,14 +3,38 @@
 //! Vertices are `u32` (the largest paper graph has 2.4M vertices; u32 also
 //! halves memory traffic during sampling, which matters because sampling
 //! is on the host critical path — Eq. 5). Offsets are `usize`.
+//!
+//! Storage is either owned vectors (the in-memory build path) or a
+//! zero-copy view into an mmap'd pack file (`ondisk`), so the sampler
+//! reads out-of-core graphs through the same `neighbors()` seam.
+
+use std::sync::Arc;
+
+use super::ondisk::Mapping;
+
+/// Backing storage for a CSR: owned vectors, or byte ranges inside a
+/// shared mapping of the on-disk pack format (64-bit little-endian hosts
+/// only; other hosts decode into the Owned variant at load time).
+#[derive(Clone, Debug)]
+enum Storage {
+    Owned { offsets: Vec<usize>, adj: Vec<u32> },
+    Mapped {
+        map: Arc<Mapping>,
+        /// Byte offset of the `(n+1) × u64` offsets section.
+        offsets_at: usize,
+        num_vertices: usize,
+        /// Byte offset of the `m × u32` adjacency section.
+        adj_at: usize,
+        num_edges: usize,
+    },
+}
 
 /// CSR adjacency (out-edges). For GNN sampling we store the graph with
 /// edges pointing from a vertex to the neighbors it *aggregates from*,
 /// i.e. `neighbors(v)` are the candidates for `N_s(v)` in Algorithm 1.
 #[derive(Clone, Debug)]
 pub struct Csr {
-    offsets: Vec<usize>,
-    adj: Vec<u32>,
+    storage: Storage,
 }
 
 impl Csr {
@@ -25,14 +49,21 @@ impl Csr {
         for i in 0..num_vertices {
             counts[i + 1] += counts[i];
         }
-        let offsets = counts.clone();
-        let mut cursor = counts;
+        // `counts` now *is* the offsets array. Use it directly as the
+        // write cursor (counts[v] walks from offsets[v] to offsets[v+1])
+        // and shift it back down afterwards — no cloned second array.
         let mut adj = vec![0u32; edges.len()];
         for &(s, d) in edges {
-            adj[cursor[s as usize]] = d;
-            cursor[s as usize] += 1;
+            adj[counts[s as usize]] = d;
+            counts[s as usize] += 1;
         }
-        Csr { offsets, adj }
+        for v in (1..=num_vertices).rev() {
+            counts[v] = counts[v - 1];
+        }
+        if num_vertices > 0 {
+            counts[0] = 0;
+        }
+        Csr::from_parts(counts, adj)
     }
 
     /// Build the symmetrised graph (u→v and v→u for every input edge),
@@ -48,26 +79,77 @@ impl Csr {
         Csr::from_edges(num_vertices, &both)
     }
 
+    /// Assemble from pre-built arrays (offsets.len() == n+1, last offset
+    /// == adj.len()). Callers are trusted; `validate()` checks the rest.
+    pub fn from_parts(offsets: Vec<usize>, adj: Vec<u32>) -> Csr {
+        Csr { storage: Storage::Owned { offsets, adj } }
+    }
+
+    /// Zero-copy view into a mapping of the pack format. Only sound on
+    /// 64-bit little-endian hosts with 8-aligned `offsets_at` and
+    /// 4-aligned `adj_at`; [`ondisk::load`] enforces all of that and
+    /// falls back to an owned decode elsewhere.
+    pub(crate) fn from_mapping(
+        map: Arc<Mapping>,
+        offsets_at: usize,
+        num_vertices: usize,
+        adj_at: usize,
+        num_edges: usize,
+    ) -> Csr {
+        Csr { storage: Storage::Mapped { map, offsets_at, num_vertices, adj_at, num_edges } }
+    }
+
+    #[inline]
+    fn offsets(&self) -> &[usize] {
+        match &self.storage {
+            Storage::Owned { offsets, .. } => offsets,
+            Storage::Mapped { map, offsets_at, num_vertices, .. } => {
+                map.usize_slice(*offsets_at, num_vertices + 1)
+            }
+        }
+    }
+
+    #[inline]
+    fn adj(&self) -> &[u32] {
+        match &self.storage {
+            Storage::Owned { adj, .. } => adj,
+            Storage::Mapped { map, adj_at, num_edges, .. } => map.u32_slice(*adj_at, *num_edges),
+        }
+    }
+
+    /// True when the adjacency is served from an mmap'd pack file.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.storage, Storage::Mapped { .. })
+    }
+
     #[inline]
     pub fn num_vertices(&self) -> usize {
-        self.offsets.len() - 1
+        match &self.storage {
+            Storage::Owned { offsets, .. } => offsets.len() - 1,
+            Storage::Mapped { num_vertices, .. } => *num_vertices,
+        }
     }
 
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.adj.len()
+        match &self.storage {
+            Storage::Owned { adj, .. } => adj.len(),
+            Storage::Mapped { num_edges, .. } => *num_edges,
+        }
     }
 
     #[inline]
     pub fn degree(&self, v: u32) -> usize {
         let v = v as usize;
-        self.offsets[v + 1] - self.offsets[v]
+        let offsets = self.offsets();
+        offsets[v + 1] - offsets[v]
     }
 
     #[inline]
     pub fn neighbors(&self, v: u32) -> &[u32] {
         let v = v as usize;
-        &self.adj[self.offsets[v]..self.offsets[v + 1]]
+        let offsets = self.offsets();
+        &self.adj()[offsets[v]..offsets[v + 1]]
     }
 
     /// Total degree of a vertex set (used by partition balance constraints).
@@ -83,15 +165,16 @@ impl Csr {
     /// Structural validation — every target in range, offsets monotone.
     pub fn validate(&self) -> anyhow::Result<()> {
         let n = self.num_vertices() as u32;
+        let offsets = self.offsets();
         anyhow::ensure!(
-            self.offsets.windows(2).all(|w| w[0] <= w[1]),
+            offsets.windows(2).all(|w| w[0] <= w[1]),
             "offsets not monotone"
         );
         anyhow::ensure!(
-            *self.offsets.last().unwrap() == self.adj.len(),
+            *offsets.last().unwrap() == self.num_edges(),
             "offsets do not cover adjacency"
         );
-        if let Some(&bad) = self.adj.iter().find(|&&t| t >= n) {
+        if let Some(&bad) = self.adj().iter().find(|&&t| t >= n) {
             anyhow::bail!("edge target {bad} out of range (n={n})");
         }
         Ok(())
@@ -108,9 +191,16 @@ impl Csr {
         h
     }
 
-    /// Approximate memory footprint in bytes.
+    /// Approximate *heap* footprint in bytes. Mapped storage reports 0 —
+    /// its pages live in the page cache, not the process heap, which is
+    /// exactly what the out-of-core path is accounting for.
     pub fn bytes(&self) -> usize {
-        self.offsets.len() * std::mem::size_of::<usize>() + self.adj.len() * 4
+        match &self.storage {
+            Storage::Owned { offsets, adj } => {
+                offsets.len() * std::mem::size_of::<usize>() + adj.len() * 4
+            }
+            Storage::Mapped { .. } => 0,
+        }
     }
 }
 
@@ -163,7 +253,7 @@ mod tests {
     #[test]
     fn validate_catches_out_of_range() {
         // construct a malformed CSR directly
-        let g = Csr { offsets: vec![0, 1], adj: vec![7] };
+        let g = Csr::from_parts(vec![0, 1], vec![7]);
         assert!(g.validate().is_err());
     }
 

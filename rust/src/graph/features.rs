@@ -8,7 +8,22 @@
 //! what the end-to-end example must demonstrate; the *performance* model
 //! only consumes feature byte-counts, which are exact.
 
+use std::sync::Arc;
+
+use crate::graph::ondisk::Mapping;
 use crate::util::rng::{hash64, Rng};
+
+/// Row-major feature shard inside an mmap'd pack file (the on-disk tier
+/// below host DRAM). Rows were materialised from the same generator at
+/// pack time, so serving them from the mapping is bit-identical to
+/// recomputing — only the source of the bytes changes.
+#[derive(Clone, Debug)]
+struct Backing {
+    map: Arc<Mapping>,
+    /// Byte offset of the `rows × feat_dim × f32` matrix.
+    at: usize,
+    rows: usize,
+}
 
 /// Deterministic per-vertex feature/label generator.
 #[derive(Clone, Debug)]
@@ -20,6 +35,9 @@ pub struct FeatureGen {
     centroids: Vec<f32>,
     /// Noise stddev relative to centroid scale.
     noise: f32,
+    /// When set, `write_features` copies rows out of the pack mapping
+    /// instead of recomputing them (labels stay procedural either way).
+    backing: Option<Backing>,
 }
 
 impl FeatureGen {
@@ -28,7 +46,25 @@ impl FeatureGen {
         let mut rng = Rng::new(seed ^ 0xFEA7);
         let centroids: Vec<f32> =
             (0..num_classes * feat_dim).map(|_| rng.normal() as f32).collect();
-        FeatureGen { seed, feat_dim, num_classes, centroids, noise: 0.5 }
+        FeatureGen { seed, feat_dim, num_classes, centroids, noise: 0.5, backing: None }
+    }
+
+    /// The generator seed (stored in the pack header so a loader can
+    /// reconstruct the identical centroid model).
+    #[inline]
+    pub(crate) fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Serve rows from `rows × feat_dim` f32s at byte offset `at` inside
+    /// `map` (the pack file's feature section) instead of recomputing.
+    pub(crate) fn set_backing(&mut self, map: Arc<Mapping>, at: usize, rows: usize) {
+        self.backing = Some(Backing { map, at, rows });
+    }
+
+    /// True when rows are served from an mmap'd pack file.
+    pub fn is_mapped(&self) -> bool {
+        self.backing.is_some()
     }
 
     #[inline]
@@ -50,6 +86,12 @@ impl FeatureGen {
     /// Write the feature vector of `v` into `out` (len == feat_dim).
     pub fn write_features(&self, v: u32, out: &mut [f32]) {
         assert_eq!(out.len(), self.feat_dim);
+        if let Some(b) = &self.backing {
+            debug_assert!((v as usize) < b.rows, "vertex {v} outside backed rows");
+            let row = b.map.f32_slice(b.at + v as usize * self.feat_dim * 4, self.feat_dim);
+            out.copy_from_slice(row);
+            return;
+        }
         let class = self.label(v) as usize;
         let base = &self.centroids[class * self.feat_dim..(class + 1) * self.feat_dim];
         // Cheap deterministic noise: one hash yields two 24-bit uniforms

@@ -11,6 +11,7 @@
 pub mod csr;
 pub mod datasets;
 pub mod features;
+pub mod ondisk;
 pub mod rmat;
 
 pub use csr::Csr;

@@ -1,0 +1,872 @@
+//! Out-of-core graph storage: the `.hitg` pack format + mmap loader.
+//!
+//! Every dataset used to be fully materialised in RAM, capping us far
+//! below the papers100M-class graphs the paper's CPU+Multi-FPGA platform
+//! is built to feed. This module defines a little-endian on-disk layout
+//! for CSR + row-major feature shards, a writer that serialises any
+//! in-memory [`Dataset`] (or streams a synthetic R-MAT graph in bounded
+//! memory), and a loader that maps the file and threads it behind the
+//! existing `Csr` / `FeatureGen` seams — the sampler and
+//! `FeatureService::gather_into` never know the difference.
+//!
+//! ## Format (normative; DESIGN.md §Out-of-core storage mirrors this)
+//!
+//! All integers little-endian. 104-byte header:
+//!
+//! | field          | type | notes                                   |
+//! |----------------|------|-----------------------------------------|
+//! | magic          | u64  | ASCII `HITGNNv1`                        |
+//! | version        | u32  | currently 1                             |
+//! | flags          | u32  | must be 0                               |
+//! | num_vertices n | u64  | scaled vertex count                     |
+//! | num_edges m    | u64  | directed adj entries (post-symmetrise)  |
+//! | feat_dim f0    | u64  |                                         |
+//! | hidden_dim f1  | u64  |                                         |
+//! | num_classes f2 | u64  |                                         |
+//! | feature_seed   | u64  | reconstructs the centroid generator     |
+//! | train_count    | u64  |                                         |
+//! | scale_shift    | u32  |                                         |
+//! | key_len        | u32  | dataset key byte length                 |
+//! | full_vertices  | u64  | spec's unscaled \|V\|                   |
+//! | full_edges     | u64  | spec's unscaled \|E\|                   |
+//! | train_frac     | f64  | IEEE-754 bits                           |
+//!
+//! Sections follow, each starting 8-aligned (zero padding between):
+//! key bytes, offsets `(n+1)×u64`, adj `m×u32`, features `n×f0×f32`
+//! (row-major), train vertices `train_count×u32`. The file length must
+//! equal the computed total exactly — truncated or oversized files are
+//! rejected with a clean `Err`, never a panic.
+//!
+//! On 64-bit little-endian hosts the offsets/adj/features sections are
+//! used zero-copy straight out of the mapping; elsewhere the loader
+//! decodes them into owned vectors (correct everywhere, out-of-core
+//! only where the fast path applies).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use super::csr::Csr;
+use super::datasets::{self, Dataset, DatasetSpec, GnnDims};
+use super::features::FeatureGen;
+use super::rmat::{self, RmatParams};
+use crate::util::rng::{hash64, Rng};
+
+/// ASCII "HITGNNv1" read as a little-endian u64.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"HITGNNv1");
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 104;
+
+/// Streaming-pack memory budget default: edge/feature chunk buffers and
+/// the per-bucket adjacency stay under this (plus O(|V|) index state).
+pub const DEFAULT_PACK_BUDGET: usize = 64 << 20;
+
+#[inline]
+fn pad8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+/// Zero-copy reinterpretation of the mapping is sound only when the
+/// file's little-endian 8-byte layout *is* the native layout.
+#[inline]
+pub fn zero_copy_ok() -> bool {
+    cfg!(target_endian = "little") && std::mem::size_of::<usize>() == 8
+}
+
+// ---------------------------------------------------------------------------
+// Mapping: read-only mmap with an owned-buffer fallback
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only byte mapping of a pack file. On unix this is a real
+/// `mmap(PROT_READ, MAP_PRIVATE)` — the kernel pages data in on demand
+/// and may evict it under memory pressure, which is what makes the
+/// resident set bounded. Elsewhere (or if mmap fails) the file is read
+/// into an 8-aligned owned buffer: same API, no paging.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+    /// `Some` = owned fallback buffer (u64 for 8-byte alignment);
+    /// `None` = a live mmap that `Drop` must unmap.
+    owned: Option<Vec<u64>>,
+}
+
+// The mapping is immutable for its whole lifetime (read-only pages /
+// never-mutated buffer), so shared references from any thread are fine.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("len", &self.len)
+            .field("mmap", &self.owned.is_none())
+            .finish()
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.owned.is_none() && self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+impl Mapping {
+    /// Map `path` read-only (mmap where available, owned read otherwise).
+    pub fn from_file(path: &Path) -> anyhow::Result<Mapping> {
+        let mut file =
+            File::open(path).with_context(|| format!("open pack file {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat pack file {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(Mapping { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0, owned: Some(Vec::new()) });
+        }
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize != -1 && !ptr.is_null() {
+                return Ok(Mapping { ptr: ptr as *const u8, len, owned: None });
+            }
+        }
+        // Fallback: read into an 8-aligned owned buffer.
+        let words = (len + 7) / 8;
+        let mut buf: Vec<u64> = vec![0u64; words];
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(bytes)
+                .with_context(|| format!("read pack file {}", path.display()))?;
+        }
+        let ptr = buf.as_ptr() as *const u8;
+        Ok(Mapping { ptr, len, owned: Some(buf) })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    fn typed_slice<T>(&self, at: usize, count: usize) -> &[T] {
+        let bytes = count * std::mem::size_of::<T>();
+        assert!(at + bytes <= self.len, "mapping slice out of bounds");
+        let p = unsafe { self.ptr.add(at) };
+        assert_eq!(p as usize % std::mem::align_of::<T>(), 0, "misaligned mapping slice");
+        unsafe { std::slice::from_raw_parts(p as *const T, count) }
+    }
+
+    /// `count` u32s starting at byte offset `at` (must be 4-aligned).
+    #[inline]
+    pub fn u32_slice(&self, at: usize, count: usize) -> &[u32] {
+        debug_assert!(zero_copy_ok());
+        self.typed_slice::<u32>(at, count)
+    }
+
+    /// `count` native usizes at byte offset `at` (64-bit LE hosts only).
+    #[inline]
+    pub fn usize_slice(&self, at: usize, count: usize) -> &[usize] {
+        assert!(zero_copy_ok(), "usize_slice requires a 64-bit little-endian host");
+        self.typed_slice::<usize>(at, count)
+    }
+
+    /// `count` f32s at byte offset `at` (must be 4-aligned).
+    #[inline]
+    pub fn f32_slice(&self, at: usize, count: usize) -> &[f32] {
+        debug_assert!(zero_copy_ok());
+        self.typed_slice::<f32>(at, count)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layout
+// ---------------------------------------------------------------------------
+
+/// Parsed header + computed section offsets.
+#[derive(Clone, Debug)]
+struct Layout {
+    n: usize,
+    m: usize,
+    f0: usize,
+    f1: usize,
+    f2: usize,
+    feature_seed: u64,
+    train_count: usize,
+    scale_shift: u32,
+    key: String,
+    full_vertices: usize,
+    full_edges: usize,
+    train_frac: f64,
+    offsets_at: usize,
+    adj_at: usize,
+    features_at: usize,
+    train_at: usize,
+    total: usize,
+}
+
+impl Layout {
+    fn compute(
+        n: usize,
+        m: usize,
+        dims: GnnDims,
+        feature_seed: u64,
+        train_count: usize,
+        scale_shift: u32,
+        key: &str,
+        full_vertices: usize,
+        full_edges: usize,
+        train_frac: f64,
+    ) -> Layout {
+        let key_at = HEADER_BYTES;
+        let offsets_at = pad8(key_at + key.len());
+        let adj_at = offsets_at + (n + 1) * 8;
+        let features_at = pad8(adj_at + m * 4);
+        let train_at = pad8(features_at + n * dims.f0 * 4);
+        let total = pad8(train_at + train_count * 4);
+        Layout {
+            n,
+            m,
+            f0: dims.f0,
+            f1: dims.f1,
+            f2: dims.f2,
+            feature_seed,
+            train_count,
+            scale_shift,
+            key: key.to_string(),
+            full_vertices,
+            full_edges,
+            train_frac,
+            offsets_at,
+            adj_at,
+            features_at,
+            train_at,
+            total,
+        }
+    }
+
+    fn parse(bytes: &[u8]) -> anyhow::Result<Layout> {
+        let mut r = Cursor { b: bytes, pos: 0 };
+        let magic = r.u64().context("pack header truncated")?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "bad magic 0x{magic:016x}: not a hitgnn pack file"
+        );
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported pack version {version} (this build reads version {VERSION})"
+        );
+        let flags = r.u32()?;
+        anyhow::ensure!(flags == 0, "unsupported pack flags 0x{flags:08x}");
+        let n = r.u64()? as usize;
+        let m = r.u64()? as usize;
+        let f0 = r.u64()? as usize;
+        let f1 = r.u64()? as usize;
+        let f2 = r.u64()? as usize;
+        let feature_seed = r.u64()?;
+        let train_count = r.u64()? as usize;
+        let scale_shift = r.u32()?;
+        let key_len = r.u32()? as usize;
+        let full_vertices = r.u64()? as usize;
+        let full_edges = r.u64()? as usize;
+        let train_frac = f64::from_bits(r.u64()?);
+        debug_assert_eq!(r.pos, HEADER_BYTES);
+        anyhow::ensure!(n > 0 && f0 > 0 && f2 > 0, "degenerate pack dimensions");
+        anyhow::ensure!(
+            train_count <= n,
+            "train_count {train_count} exceeds vertex count {n}"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&train_frac),
+            "train_frac {train_frac} out of [0,1]"
+        );
+        let key_bytes = r.take(key_len).context("pack key truncated")?;
+        let key = std::str::from_utf8(key_bytes).context("pack key is not utf-8")?.to_string();
+        // Validate the total length in u128 *before* computing usize
+        // section offsets, so adversarial counts in a corrupt header can
+        // never overflow-panic — they fail this check instead.
+        let p8 = |x: u128| (x + 7) & !7u128;
+        let total = {
+            let offsets_at = p8(HEADER_BYTES as u128 + key_len as u128);
+            let adj_at = offsets_at + (n as u128 + 1) * 8;
+            let features_at = p8(adj_at + m as u128 * 4);
+            let train_at = p8(features_at + n as u128 * f0 as u128 * 4);
+            p8(train_at + train_count as u128 * 4)
+        };
+        anyhow::ensure!(
+            bytes.len() as u128 == total,
+            "pack file length {} != expected {total} (truncated or corrupt)",
+            bytes.len(),
+        );
+        let dims = GnnDims { f0, f1, f2 };
+        let l = Layout::compute(
+            n,
+            m,
+            dims,
+            feature_seed,
+            train_count,
+            scale_shift,
+            &key,
+            full_vertices,
+            full_edges,
+            train_frac,
+        );
+        debug_assert_eq!(l.total as u128, total);
+        Ok(l)
+    }
+
+    fn write_header(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&0u32.to_le_bytes())?; // flags
+        w.write_all(&(self.n as u64).to_le_bytes())?;
+        w.write_all(&(self.m as u64).to_le_bytes())?;
+        w.write_all(&(self.f0 as u64).to_le_bytes())?;
+        w.write_all(&(self.f1 as u64).to_le_bytes())?;
+        w.write_all(&(self.f2 as u64).to_le_bytes())?;
+        w.write_all(&self.feature_seed.to_le_bytes())?;
+        w.write_all(&(self.train_count as u64).to_le_bytes())?;
+        w.write_all(&self.scale_shift.to_le_bytes())?;
+        w.write_all(&(self.key.len() as u32).to_le_bytes())?;
+        w.write_all(&(self.full_vertices as u64).to_le_bytes())?;
+        w.write_all(&(self.full_edges as u64).to_le_bytes())?;
+        w.write_all(&self.train_frac.to_bits().to_le_bytes())?;
+        w.write_all(self.key.as_bytes())?;
+        write_zeros(w, pad8(HEADER_BYTES + self.key.len()) - (HEADER_BYTES + self.key.len()))?;
+        Ok(())
+    }
+}
+
+/// Bounds-checked little-endian reads (clean `Err` on truncation).
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + len <= self.b.len(),
+            "pack file truncated at byte {} (need {} more)",
+            self.b.len(),
+            self.pos + len - self.b.len()
+        );
+        let s = &self.b[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn write_zeros(w: &mut impl Write, count: usize) -> std::io::Result<()> {
+    const Z: [u8; 8] = [0; 8];
+    debug_assert!(count < 8);
+    w.write_all(&Z[..count])
+}
+
+fn write_u32s(w: &mut impl Write, vals: &[u32]) -> std::io::Result<()> {
+    for &v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, vals: &[f32]) -> std::io::Result<()> {
+    for &v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Writers
+// ---------------------------------------------------------------------------
+
+/// Serialise an in-memory dataset. Returns the file size in bytes.
+/// Packing `spec.build(shift, seed)` produces a file byte-identical to
+/// [`pack_streamed`] with the same `(spec, shift, seed)` — pinned by
+/// tests — so either path yields the same training stream.
+pub fn pack_dataset(data: &Dataset, path: &Path) -> anyhow::Result<u64> {
+    let g = &data.graph;
+    let n = g.num_vertices();
+    let l = Layout::compute(
+        n,
+        g.num_edges(),
+        data.spec.dims,
+        data.features.seed(),
+        data.train_vertices.len(),
+        data.scale_shift,
+        data.spec.key,
+        data.spec.vertices,
+        data.spec.edges,
+        data.spec.train_frac,
+    );
+    let file =
+        File::create(path).with_context(|| format!("create pack file {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    l.write_header(&mut w)?;
+    // offsets: rebuilt from degrees so we never reach into Csr internals
+    let mut off = 0u64;
+    w.write_all(&off.to_le_bytes())?;
+    for v in 0..n as u32 {
+        off += g.degree(v) as u64;
+        w.write_all(&off.to_le_bytes())?;
+    }
+    // adjacency
+    for v in 0..n as u32 {
+        write_u32s(&mut w, g.neighbors(v))?;
+    }
+    write_zeros(&mut w, l.features_at - (l.adj_at + l.m * 4))?;
+    // features, row-major, materialised from the generator
+    let mut row = vec![0.0f32; l.f0];
+    for v in 0..n as u32 {
+        data.features.write_features(v, &mut row);
+        write_f32s(&mut w, &row)?;
+    }
+    write_zeros(&mut w, l.train_at - (l.features_at + n * l.f0 * 4))?;
+    write_u32s(&mut w, &data.train_vertices)?;
+    write_zeros(&mut w, l.total - (l.train_at + l.train_count * 4))?;
+    w.flush()?;
+    Ok(l.total as u64)
+}
+
+/// Stream a synthetic R-MAT dataset to disk without ever materialising
+/// the edge list, adjacency, or feature matrix: O(|V| + budget) memory.
+///
+/// Replays `DatasetSpec::build` exactly — same generator seeds, same
+/// edge order, same symmetrisation — via three passes over the
+/// deterministic chunked edge stream: (1) degree counting, (2..) one
+/// regeneration pass per adjacency bucket (vertex ranges sized so each
+/// bucket's adjacency fits in `budget` bytes; a single hub vertex may
+/// exceed it, bounded by max-degree), then feature rows and the train
+/// split streamed in chunks. The output is byte-identical to
+/// [`pack_dataset`] of the equivalent in-memory build.
+pub fn pack_streamed(
+    spec: &DatasetSpec,
+    scale_shift: u32,
+    seed: u64,
+    path: &Path,
+    budget: usize,
+) -> anyhow::Result<u64> {
+    let budget = budget.max(4096);
+    let n = spec.scaled_vertices(scale_shift);
+    let m_in = spec.scaled_edges(scale_shift);
+    let gen_seed = seed ^ hash64(spec.key.len() as u64 ^ spec.vertices as u64);
+    let communities = ((n as u32) / 1024).max(16);
+    let edge_chunk = (budget / 16).max(1);
+
+    // Pseudo-random id permutation, exactly as rmat::permute_ids builds it.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    Rng::new(seed ^ 0x9e37).shuffle(&mut perm);
+
+    // Pass 1: symmetrised degree counting over the chunked stream.
+    let mut counts = vec![0u64; n + 1];
+    {
+        let mut rng = Rng::new(gen_seed);
+        let mut stream = rmat::edges_chunked(
+            &mut rng,
+            n as u32,
+            m_in,
+            RmatParams::default(),
+            communities,
+            0.90,
+            edge_chunk,
+        );
+        while let Some(chunk) = stream.next_chunk() {
+            for &(s, d) in chunk {
+                let (ps, pd) = (perm[s as usize], perm[d as usize]);
+                counts[ps as usize + 1] += 1;
+                if ps != pd {
+                    counts[pd as usize + 1] += 1;
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        counts[i + 1] += counts[i];
+    }
+    let offsets = counts; // offsets[v]..offsets[v+1] = adjacency of v
+    let m_dir = offsets[n] as usize;
+
+    // Train split size (streamed; the same hash filter as build()).
+    const TRAIN_TAG: u64 = 0x7261_316e;
+    let is_train = |v: u32| {
+        let h = hash64(seed ^ TRAIN_TAG ^ v as u64);
+        ((h >> 11) as f64 / (1u64 << 53) as f64) < spec.train_frac
+    };
+    let train_count = (0..n as u32).filter(|&v| is_train(v)).count();
+
+    let features = FeatureGen::new(seed ^ 0xFEED, spec.dims.f0, spec.dims.f2);
+    let l = Layout::compute(
+        n,
+        m_dir,
+        spec.dims,
+        features.seed(),
+        train_count,
+        scale_shift,
+        spec.key,
+        spec.vertices,
+        spec.edges,
+        spec.train_frac,
+    );
+    let file =
+        File::create(path).with_context(|| format!("create pack file {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    l.write_header(&mut w)?;
+    for &o in offsets.iter() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+
+    // Passes 2..: adjacency, bucketed by vertex range so each bucket's
+    // edges fit in `budget`; every bucket replays the full edge stream.
+    let mut lo = 0usize;
+    while lo < n {
+        let mut hi = lo + 1;
+        while hi < n && (offsets[hi + 1] - offsets[lo]) * 4 <= budget as u64 {
+            hi += 1;
+        }
+        let base = offsets[lo];
+        let mut bucket = vec![0u32; (offsets[hi] - base) as usize];
+        let mut cursor: Vec<u32> =
+            (lo..hi).map(|v| (offsets[v] - base) as u32).collect();
+        let in_bucket = |v: u32| (v as usize) >= lo && (v as usize) < hi;
+        let mut push = |bucket: &mut [u32], cursor: &mut [u32], s: u32, d: u32| {
+            let c = &mut cursor[s as usize - lo];
+            bucket[*c as usize] = d;
+            *c += 1;
+        };
+        let mut rng = Rng::new(gen_seed);
+        let mut stream = rmat::edges_chunked(
+            &mut rng,
+            n as u32,
+            m_in,
+            RmatParams::default(),
+            communities,
+            0.90,
+            edge_chunk,
+        );
+        while let Some(chunk) = stream.next_chunk() {
+            for &(s, d) in chunk {
+                let (ps, pd) = (perm[s as usize], perm[d as usize]);
+                // same order as Csr::from_edges_symmetric: forward edge
+                // first, reverse second, self-loops not doubled
+                if in_bucket(ps) {
+                    push(&mut bucket, &mut cursor, ps, pd);
+                }
+                if ps != pd && in_bucket(pd) {
+                    push(&mut bucket, &mut cursor, pd, ps);
+                }
+            }
+        }
+        write_u32s(&mut w, &bucket)?;
+        lo = hi;
+    }
+    write_zeros(&mut w, l.features_at - (l.adj_at + m_dir * 4))?;
+
+    // Features: generated in row chunks.
+    let rows_per_chunk = (budget / (spec.dims.f0 * 4)).max(1);
+    let mut buf = vec![0.0f32; rows_per_chunk * spec.dims.f0];
+    let mut v = 0usize;
+    while v < n {
+        let take = rows_per_chunk.min(n - v);
+        for r in 0..take {
+            features.write_features(
+                (v + r) as u32,
+                &mut buf[r * spec.dims.f0..(r + 1) * spec.dims.f0],
+            );
+        }
+        write_f32s(&mut w, &buf[..take * spec.dims.f0])?;
+        v += take;
+    }
+    write_zeros(&mut w, l.train_at - (l.features_at + n * spec.dims.f0 * 4))?;
+
+    // Train split.
+    for v in (0..n as u32).filter(|&v| is_train(v)) {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    write_zeros(&mut w, l.total - (l.train_at + train_count * 4))?;
+    w.flush()?;
+    Ok(l.total as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Loader
+// ---------------------------------------------------------------------------
+
+/// Load a packed dataset. On 64-bit little-endian hosts the CSR and the
+/// feature matrix are served zero-copy from the mapping (page cache =
+/// the OS-managed disk tier); elsewhere they are decoded into owned
+/// memory. Either way the returned [`Dataset`] is observationally
+/// identical to `spec.build(scale_shift, seed)` for a pack produced
+/// from that build.
+pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+    let map = Arc::new(Mapping::from_file(path)?);
+    let l = Layout::parse(map.bytes())
+        .with_context(|| format!("invalid pack file {}", path.display()))?;
+
+    // Prefer the registry spec when the pack matches it exactly (keeps
+    // the &'static key without leaking); otherwise synthesise one from
+    // the header so foreign packs still load.
+    let spec = match datasets::lookup(&l.key) {
+        Ok(s)
+            if s.vertices == l.full_vertices
+                && s.edges == l.full_edges
+                && s.dims == (GnnDims { f0: l.f0, f1: l.f1, f2: l.f2 })
+                && s.train_frac.to_bits() == l.train_frac.to_bits() =>
+        {
+            s
+        }
+        _ => DatasetSpec {
+            key: Box::leak(l.key.clone().into_boxed_str()),
+            abbrev: "PK",
+            vertices: l.full_vertices,
+            edges: l.full_edges,
+            dims: GnnDims { f0: l.f0, f1: l.f1, f2: l.f2 },
+            train_frac: l.train_frac,
+        },
+    };
+
+    let graph = if zero_copy_ok() {
+        Csr::from_mapping(Arc::clone(&map), l.offsets_at, l.n, l.adj_at, l.m)
+    } else {
+        let mut r = Cursor { b: map.bytes(), pos: l.offsets_at };
+        let mut offsets = Vec::with_capacity(l.n + 1);
+        for _ in 0..=l.n {
+            offsets.push(r.u64()? as usize);
+        }
+        let mut adj = Vec::with_capacity(l.m);
+        let mut r = Cursor { b: map.bytes(), pos: l.adj_at };
+        for _ in 0..l.m {
+            adj.push(r.u32()?);
+        }
+        Csr::from_parts(offsets, adj)
+    };
+    // Cheap structural sanity (full validate() is an O(V+E) test affair).
+    anyhow::ensure!(
+        graph.num_vertices() == l.n && graph.num_edges() == l.m,
+        "pack CSR shape mismatch"
+    );
+
+    let mut features = FeatureGen::new(l.feature_seed, l.f0, l.f2);
+    if zero_copy_ok() {
+        features.set_backing(Arc::clone(&map), l.features_at, l.n);
+    }
+
+    let mut train_vertices = Vec::with_capacity(l.train_count);
+    let mut r = Cursor { b: map.bytes(), pos: l.train_at };
+    for _ in 0..l.train_count {
+        let v = r.u32()?;
+        anyhow::ensure!((v as usize) < l.n, "train vertex {v} out of range");
+        train_vertices.push(v);
+    }
+
+    Ok(Dataset { spec, graph, features, train_vertices, scale_shift: l.scale_shift })
+}
+
+/// Pack-file metadata (header summary, no section decoding).
+#[derive(Clone, Debug)]
+pub struct PackMeta {
+    pub key: String,
+    pub scale_shift: u32,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub dims: GnnDims,
+    pub train_count: usize,
+    pub total_bytes: usize,
+}
+
+/// Read a pack file's metadata without loading it (validates the header
+/// and total length like [`load`]).
+pub fn probe(path: &Path) -> anyhow::Result<PackMeta> {
+    let map = Mapping::from_file(path)?;
+    let l = Layout::parse(map.bytes())
+        .with_context(|| format!("invalid pack file {}", path.display()))?;
+    Ok(PackMeta {
+        key: l.key.clone(),
+        scale_shift: l.scale_shift,
+        num_vertices: l.n,
+        num_edges: l.m,
+        dims: GnnDims { f0: l.f0, f1: l.f1, f2: l.f2 },
+        train_count: l.train_count,
+        total_bytes: l.total,
+    })
+}
+
+/// One-line summary of a pack file without fully loading it (used by
+/// `hitgnn pack` reporting and `info`).
+pub fn describe(path: &Path) -> anyhow::Result<String> {
+    let m = probe(path)?;
+    Ok(format!(
+        "{} (shift {}): |V|={} |E|={} f=({},{},{}) train={} — {} bytes",
+        m.key,
+        m.scale_shift,
+        m.num_vertices,
+        m.num_edges,
+        m.dims.f0,
+        m.dims.f1,
+        m.dims.f2,
+        m.train_count,
+        m.total_bytes
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hitgnn-ondisk-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn pack_roundtrip_matches_in_memory_build() {
+        let spec = datasets::lookup("tiny").unwrap();
+        let data = spec.build(1, 42);
+        let path = tmp("roundtrip.hitg");
+        let bytes = pack_dataset(&data, &path).unwrap();
+        assert!(bytes >= HEADER_BYTES as u64);
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.spec.key, data.spec.key);
+        assert_eq!(loaded.scale_shift, data.scale_shift);
+        assert_eq!(loaded.graph.num_vertices(), data.graph.num_vertices());
+        assert_eq!(loaded.graph.num_edges(), data.graph.num_edges());
+        for v in 0..data.graph.num_vertices() as u32 {
+            assert_eq!(loaded.graph.neighbors(v), data.graph.neighbors(v), "v={v}");
+        }
+        loaded.graph.validate().unwrap();
+        assert_eq!(loaded.train_vertices, data.train_vertices);
+        let f0 = spec.dims.f0;
+        let (mut a, mut b) = (vec![0.0f32; f0], vec![0.0f32; f0]);
+        for v in [0u32, 1, 7, 1023] {
+            data.features.write_features(v, &mut a);
+            loaded.features.write_features(v, &mut b);
+            assert_eq!(a, b, "features differ at v={v}");
+            assert_eq!(data.features.label(v), loaded.features.label(v));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_pack_is_byte_identical_to_in_memory_pack() {
+        let spec = datasets::lookup("tiny").unwrap();
+        let (pa, pb) = (tmp("mem.hitg"), tmp("stream.hitg"));
+        pack_dataset(&spec.build(1, 7), &pa).unwrap();
+        // tiny budget forces many adjacency buckets + feature chunks
+        pack_streamed(&spec, 1, 7, &pb, 1).unwrap();
+        let (a, b) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        assert_eq!(a.len(), b.len());
+        assert!(a == b, "streamed pack diverges from in-memory pack");
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_and_truncated_files() {
+        let spec = datasets::lookup("tiny").unwrap();
+        let path = tmp("corrupt.hitg");
+        pack_dataset(&spec.build(2, 3), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // truncations at awkward places: clean Err, no panic
+        for cut in [0usize, 4, HEADER_BYTES - 1, HEADER_BYTES, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncated at {cut} must be rejected");
+        }
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // future version
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // trailing garbage (length mismatch)
+        let mut bad = good.clone();
+        bad.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_error() {
+        let err = load(Path::new("/nonexistent/nope.hitg")).unwrap_err().to_string();
+        assert!(err.contains("nope.hitg"), "{err}");
+    }
+
+    #[test]
+    fn describe_summarises_without_loading() {
+        let spec = datasets::lookup("tiny").unwrap();
+        let path = tmp("describe.hitg");
+        pack_dataset(&spec.build(2, 9), &path).unwrap();
+        let s = describe(&path).unwrap();
+        assert!(s.contains("tiny"), "{s}");
+        std::fs::remove_file(&path).ok();
+    }
+}

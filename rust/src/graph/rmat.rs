@@ -81,26 +81,102 @@ pub fn generate_community_edges(
     communities: u32,
     mu: f64,
 ) -> Vec<(u32, u32)> {
-    assert!(communities >= 1 && communities <= n);
-    let comm_size = (n / communities).max(1);
-    // scale of the per-community R-MAT id space
-    let comm_scale = 32 - (comm_size - 1).max(1).leading_zeros();
-    let global_scale = 32 - (n - 1).max(1).leading_zeros();
+    let mix = CommunityMix::new(n, params, communities, mu);
     let mut edges = Vec::with_capacity(num_edges);
     for _ in 0..num_edges {
-        if rng.f64() < mu {
-            let c = rng.next_below(communities as u64) as u32;
-            let base = c * comm_size;
-            let (mut s, mut d) = one_edge(rng, comm_scale, params);
-            s %= comm_size;
-            d %= comm_size;
-            edges.push(((base + s) % n, (base + d) % n));
-        } else {
-            let (s, d) = one_edge(rng, global_scale, params);
-            edges.push((s % n, d % n));
-        }
+        edges.push(mix.draw(rng));
     }
     edges
+}
+
+/// The per-edge community-mixture draw, factored out so the all-at-once
+/// generator above and the chunked streaming driver below consume the
+/// *same* RNG stream edge for edge — bit-identity between the two paths
+/// is by construction, and pinned by a regression test.
+#[derive(Clone, Copy, Debug)]
+pub struct CommunityMix {
+    n: u32,
+    comm_size: u32,
+    comm_scale: u32,
+    global_scale: u32,
+    communities: u32,
+    mu: f64,
+    params: RmatParams,
+}
+
+impl CommunityMix {
+    pub fn new(n: u32, params: RmatParams, communities: u32, mu: f64) -> CommunityMix {
+        assert!(communities >= 1 && communities <= n);
+        let comm_size = (n / communities).max(1);
+        // scale of the per-community R-MAT id space
+        let comm_scale = 32 - (comm_size - 1).max(1).leading_zeros();
+        let global_scale = 32 - (n - 1).max(1).leading_zeros();
+        CommunityMix { n, comm_size, comm_scale, global_scale, communities, mu, params }
+    }
+
+    #[inline]
+    pub fn draw(&self, rng: &mut Rng) -> (u32, u32) {
+        if rng.f64() < self.mu {
+            let c = rng.next_below(self.communities as u64) as u32;
+            let base = c * self.comm_size;
+            let (mut s, mut d) = one_edge(rng, self.comm_scale, self.params);
+            s %= self.comm_size;
+            d %= self.comm_size;
+            ((base + s) % self.n, (base + d) % self.n)
+        } else {
+            let (s, d) = one_edge(rng, self.global_scale, self.params);
+            (s % self.n, d % self.n)
+        }
+    }
+}
+
+/// Deterministic chunked edge stream: yields the exact edge sequence of
+/// [`generate_community_edges`] in bounded memory (`chunk` edges at a
+/// time), so `hitgnn pack` can emit graphs larger than RAM. The caller
+/// owns the `Rng`; a fresh `Rng` with the same seed replays the stream.
+pub struct EdgeChunks<'a> {
+    rng: &'a mut Rng,
+    mix: CommunityMix,
+    remaining: usize,
+    chunk: usize,
+    buf: Vec<(u32, u32)>,
+}
+
+pub fn edges_chunked<'a>(
+    rng: &'a mut Rng,
+    n: u32,
+    num_edges: usize,
+    params: RmatParams,
+    communities: u32,
+    mu: f64,
+    chunk: usize,
+) -> EdgeChunks<'a> {
+    assert!(chunk > 0, "chunk size must be positive");
+    EdgeChunks {
+        rng,
+        mix: CommunityMix::new(n, params, communities, mu),
+        remaining: num_edges,
+        chunk,
+        buf: Vec::with_capacity(chunk.min(num_edges)),
+    }
+}
+
+impl EdgeChunks<'_> {
+    /// Next chunk of edges, or `None` once `num_edges` have been yielded.
+    /// The returned slice is only valid until the next call (the buffer
+    /// is reused — this is what bounds memory).
+    pub fn next_chunk(&mut self) -> Option<&[(u32, u32)]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let take = self.remaining.min(self.chunk);
+        self.buf.clear();
+        for _ in 0..take {
+            self.buf.push(self.mix.draw(self.rng));
+        }
+        self.remaining -= take;
+        Some(&self.buf)
+    }
 }
 
 /// Map vertex ids through a pseudo-random permutation so that R-MAT's
@@ -149,6 +225,24 @@ mod tests {
             "max={} mean={mean}",
             g.max_degree()
         );
+    }
+
+    #[test]
+    fn chunked_stream_is_bit_identical_to_all_at_once() {
+        let n = 1u32 << 10;
+        let m = 10_000;
+        let p = RmatParams::default();
+        let all = generate_community_edges(&mut Rng::new(42), n, m, p, 16, 0.9);
+        // several chunk sizes, including ones that do not divide m
+        for chunk in [1usize, 7, 1024, 3000, 100_000] {
+            let mut rng = Rng::new(42);
+            let mut stream = edges_chunked(&mut rng, n, m, p, 16, 0.9, chunk);
+            let mut got = Vec::with_capacity(m);
+            while let Some(c) = stream.next_chunk() {
+                got.extend_from_slice(c);
+            }
+            assert_eq!(got, all, "chunk={chunk}");
+        }
     }
 
     #[test]

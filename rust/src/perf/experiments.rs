@@ -215,6 +215,8 @@ pub fn build_workload(
         direct_host_fetch: dc,
         extra_pcie_bytes_per_batch: extra,
         prefetch: false,
+        disk_gbs: 0.0,
+        disk_miss_frac: 0.0,
     }
 }
 

@@ -177,6 +177,8 @@ mod tests {
             direct_host_fetch: false,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
+            disk_gbs: 0.0,
+            disk_miss_frac: 0.0,
         }
     }
 

@@ -70,6 +70,14 @@ pub struct Workload {
     /// batch i, hiding the host-fetch latency behind compute instead of
     /// serialising it into Eq. 7.
     pub prefetch: bool,
+    /// Disk read bandwidth (GB/s) feeding the host-DRAM tier for
+    /// out-of-core datasets. 0 = dataset is DRAM-resident, no disk term.
+    pub disk_gbs: f64,
+    /// Fraction of feature-miss bytes that fall through the host-DRAM
+    /// tier to disk (measured `disk_read / missed` from the previous
+    /// epoch's `Traffic`, or `1 - dram_ratio` cold-start). Only
+    /// meaningful with `disk_gbs > 0`.
+    pub disk_miss_frac: f64,
 }
 
 /// Epoch-level estimate.
@@ -193,17 +201,26 @@ pub fn device_batch_gnn_s(
     };
     t.bw.pcie_gbs = miss_gbs;
     let extra = w.extra_pcie_bytes_per_batch / (host_gbs * 1e9);
+    // Out-of-core term: the slice of miss bytes that fell through the
+    // host-DRAM tier is first paged in from disk before it can cross
+    // PCIe. Proportional to (1-β), so β-monotonicity is preserved.
+    let miss_bytes = w.shape.v[0] * w.shape.f[0] * S_FEAT * (1.0 - w.beta);
+    let disk_s = if w.disk_gbs > 0.0 {
+        miss_bytes * w.disk_miss_frac.clamp(0.0, 1.0) / (w.disk_gbs * 1e9)
+    } else {
+        0.0
+    };
     if w.prefetch {
         // §8 extension: the host-fetch stream for batch i+1 overlaps
         // batch i's compute. Steady state: per-batch time is the max
         // of (GNN time with all features staged locally) and the
-        // PCIe/host fetch time of one batch's misses.
+        // PCIe/host fetch time of one batch's misses (disk page-in
+        // feeds that same overlapped stream).
         let gnn_local = t.batch(&w.shape, 1.0, w.cost).gnn_s;
-        let miss_bytes = w.shape.v[0] * w.shape.f[0] * S_FEAT * (1.0 - w.beta);
-        let fetch = miss_bytes / (miss_gbs * 1e9) + extra;
+        let fetch = miss_bytes / (miss_gbs * 1e9) + extra + disk_s;
         gnn_local.max(fetch)
     } else {
-        t.batch(&w.shape, w.beta, w.cost).gnn_s + extra
+        t.batch(&w.shape, w.beta, w.cost).gnn_s + extra + disk_s
     }
 }
 
@@ -358,6 +375,8 @@ mod tests {
             direct_host_fetch: true,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
+            disk_gbs: 0.0,
+            disk_miss_frac: 0.0,
         }
     }
 

@@ -20,12 +20,18 @@
 //!   static store, an LFU/hotness cache re-ranked from observed access
 //!   counts (HyScale-GNN-style dynamic caching), or a sliding-window
 //!   recency cache.
+//! - [`TieredStore`] — the host-DRAM cache tier above on-disk feature
+//!   shards (out-of-core datasets): the hierarchy becomes FPGA-DDR →
+//!   host DRAM → disk, with FPGA-store misses split into DRAM hits and
+//!   disk reads (`Traffic::{dram_hit,disk_read}_bytes`).
 
 pub mod dynamic;
 pub mod residency;
+pub mod tiered;
 
 pub use dynamic::{LfuStore, WindowStore};
 pub use residency::{Residency, Rows};
+pub use tiered::TieredStore;
 
 /// Feature-store caching policy selector (Table 2's `Feature_Storing()`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,199 @@
+//! Host-DRAM-as-cache tiering above the on-disk feature shards.
+//!
+//! With an in-memory dataset, every FPGA-store miss is a DRAM copy and
+//! the hierarchy ends there. Out-of-core (mmap'd pack files) adds a
+//! third level — FPGA-DDR → host DRAM → disk — and [`TieredStore`]
+//! makes the middle tier explicit: a capacity-bounded
+//! (`dram_ratio·|V|` rows) host-side cache that reuses the exact
+//! LFU/window re-ranking machinery of [`dynamic`](super::dynamic), so a
+//! policy sweep compares like for like across tiers. Misses that fall
+//! through DRAM are charged as disk reads.
+//!
+//! Determinism: the DRAM resident set is immutable within an epoch —
+//! [`TieredStore::observe`] only accumulates policy state, and the
+//! re-ranking happens in [`TieredStore::end_epoch`] at the epoch
+//! barrier, mirroring the per-FPGA stores. Both `charge` and `observe`
+//! are called by the coordinator at the gradient-sync barrier in
+//! (iter, tag) order, so the byte split (and therefore every derived
+//! metric) is bit-identical across `--host-threads` ×
+//! `--prefetch-depth` configurations — the same determinism law the
+//! per-FPGA stores obey (DESIGN.md §Out-of-core storage).
+
+use super::dynamic::dynamic_store;
+use super::{CachePolicy, FeatureStore, Residency};
+use crate::comm::Traffic;
+
+/// The host-DRAM cache tier: one per trainer (the host's DRAM is shared
+/// by all FPGAs, unlike the per-FPGA stores it sits below).
+pub struct TieredStore {
+    inner: Box<dyn FeatureStore>,
+    num_vertices: usize,
+    dram_ratio: f64,
+}
+
+impl TieredStore {
+    /// A DRAM tier over `num_vertices` full-width rows with capacity
+    /// `dram_ratio·num_vertices`, cold-started and tie-broken by `rank`
+    /// (the canonical degree rank — same prior as the per-FPGA caches).
+    pub fn new(
+        policy: CachePolicy,
+        num_vertices: usize,
+        dram_ratio: f64,
+        feat_dim: usize,
+        rank: Vec<u32>,
+    ) -> TieredStore {
+        assert!((0.0..=1.0).contains(&dram_ratio), "dram_ratio must be in [0,1]");
+        let inner =
+            dynamic_store(policy, num_vertices, dram_ratio, (0, feat_dim, feat_dim), rank);
+        TieredStore { inner, num_vertices, dram_ratio }
+    }
+
+    /// This epoch's DRAM resident set (immutable until `end_epoch`).
+    pub fn residency(&self) -> &Residency {
+        self.inner.residency()
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.inner.policy()
+    }
+
+    pub fn dram_ratio(&self) -> f64 {
+        self.dram_ratio
+    }
+
+    /// Rows currently held in the DRAM tier.
+    pub fn resident_rows(&self) -> usize {
+        self.inner.residency().resident_rows().unwrap_or(self.num_vertices)
+    }
+
+    /// Attribute one prepared batch's FPGA-store misses to the DRAM or
+    /// disk tier. For each layer-0 vertex, whatever `fpga_res` (that
+    /// FPGA's epoch residency snapshot) does not hold locally is a miss;
+    /// the miss lands in `dram_hit_bytes` when the DRAM tier holds the
+    /// row and in `disk_read_bytes` otherwise. This only *re-partitions*
+    /// bytes that `feature_traffic` already accounted (host/f2f/dedup),
+    /// so `dram_hit + disk_read == missed_bytes()` exactly — the
+    /// conservation law `prop_invariants` pins.
+    pub fn charge(&self, v0: &[u32], fpga_res: &Residency, row_bytes: usize, t: &mut Traffic) {
+        let dram = self.inner.residency();
+        let (mut hit, mut disk) = (0u64, 0u64);
+        for &v in v0 {
+            let miss = (row_bytes - fpga_res.local_bytes(v, row_bytes)) as u64;
+            if miss == 0 {
+                continue;
+            }
+            if dram.holds_row(v) {
+                hit += miss;
+            } else {
+                disk += miss;
+            }
+        }
+        t.dram_hit_bytes += hit;
+        t.disk_read_bytes += disk;
+    }
+
+    /// Feed the policy's access stream (coordinator-only, (iter, tag)
+    /// order at the gradient-sync barrier — same contract as the
+    /// per-FPGA stores).
+    pub fn observe(&mut self, v0: &[u32]) {
+        self.inner.observe(v0);
+    }
+
+    /// Apply the re-ranking at the epoch barrier; true if the DRAM
+    /// resident set changed.
+    pub fn end_epoch(&mut self) -> bool {
+        self.inner.end_epoch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Rows;
+    use crate::util::bitset::Bitset;
+
+    fn id_rank(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    fn fpga_res(n: usize, held: &[u32], feat_dim: usize) -> Residency {
+        let mut b = Bitset::new(n);
+        for &v in held {
+            b.set(v as usize);
+        }
+        Residency::rows_subset(b, feat_dim)
+    }
+
+    #[test]
+    fn charge_partitions_misses_by_dram_membership() {
+        let n = 100;
+        let row = 64usize;
+        // DRAM tier holds rows 0..50 (ratio 0.5, identity rank)
+        let tier = TieredStore::new(CachePolicy::Static, n, 0.5, 16, id_rank(n));
+        assert_eq!(tier.resident_rows(), 50);
+        // FPGA holds 0 and 60; batch touches 0 (local), 10 (dram), 60
+        // (local), 70 (disk)
+        let res = fpga_res(n, &[0, 60], 16);
+        let mut t = Traffic::default();
+        tier.charge(&[0, 10, 60, 70], &res, row, &mut t);
+        assert_eq!(t.dram_hit_bytes, row as u64); // vertex 10
+        assert_eq!(t.disk_read_bytes, row as u64); // vertex 70
+    }
+
+    #[test]
+    fn charge_conserves_missed_bytes_with_partial_dim_residency() {
+        // P3-style dim slice: resident rows still miss 3/4 of the row
+        let n = 16;
+        let row = 400usize;
+        let tier = TieredStore::new(CachePolicy::Static, n, 0.25, 100, id_rank(n));
+        let p3 = Residency::dim_slice(0, 25, 100);
+        let mut t = Traffic::default();
+        let v0: Vec<u32> = (0..n as u32).collect();
+        tier.charge(&v0, &p3, row, &mut t);
+        let missed: u64 = v0.iter().map(|&v| (row - p3.local_bytes(v, row)) as u64).sum();
+        assert_eq!(t.dram_hit_bytes + t.disk_read_bytes, missed);
+        assert!(t.dram_hit_bytes > 0 && t.disk_read_bytes > 0);
+    }
+
+    #[test]
+    fn lfu_tier_adopts_hot_rows_at_epoch_barrier_only() {
+        let n = 64;
+        let mut tier = TieredStore::new(CachePolicy::Lfu, n, 0.125, 8, id_rank(n));
+        let cold: Vec<usize> = match &tier.residency().rows {
+            Rows::Subset(b) => b.iter_ones().collect(),
+            Rows::All => panic!("expected subset"),
+        };
+        assert_eq!(cold, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        // hot set 40..48 observed repeatedly — residency must not move
+        // mid-epoch (the determinism law)...
+        for _ in 0..3 {
+            tier.observe(&(40..48).collect::<Vec<u32>>());
+            let now: Vec<usize> = match &tier.residency().rows {
+                Rows::Subset(b) => b.iter_ones().collect(),
+                Rows::All => unreachable!(),
+            };
+            assert_eq!(now, cold, "resident set changed mid-epoch");
+        }
+        // ...and adopts the hot rows at the barrier, shrinking disk reads
+        let res = fpga_res(n, &[], 8); // FPGA holds nothing: every row misses
+        let mut before = Traffic::default();
+        tier.charge(&(40..48).collect::<Vec<u32>>(), &res, 32, &mut before);
+        assert_eq!(before.disk_read_bytes, 8 * 32);
+        assert!(tier.end_epoch());
+        let mut after = Traffic::default();
+        tier.charge(&(40..48).collect::<Vec<u32>>(), &res, 32, &mut after);
+        assert_eq!(after.disk_read_bytes, 0);
+        assert_eq!(after.dram_hit_bytes, 8 * 32);
+    }
+
+    #[test]
+    fn full_ratio_never_reads_disk() {
+        let n = 32;
+        let tier = TieredStore::new(CachePolicy::Window, n, 1.0, 4, id_rank(n));
+        let res = fpga_res(n, &[], 4);
+        let mut t = Traffic::default();
+        tier.charge(&(0..n as u32).collect::<Vec<u32>>(), &res, 16, &mut t);
+        assert_eq!(t.disk_read_bytes, 0);
+        assert_eq!(t.dram_hit_bytes, (n * 16) as u64);
+    }
+}

@@ -8,7 +8,7 @@ use hitgnn::partition::{preprocess, preprocess_with_policy, Algorithm};
 use hitgnn::perf::{PlatformModel, PlatformSpec, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
 use hitgnn::sched::{epoch_makespan_seconds, CostModel, TwoStageScheduler};
-use hitgnn::store::{CachePolicy, FeatureStore};
+use hitgnn::store::{dynamic::degree_rank, CachePolicy, FeatureStore, TieredStore};
 use hitgnn::util::json::Json;
 use hitgnn::util::proptest::{check, require};
 use hitgnn::util::rng::Rng;
@@ -244,6 +244,83 @@ fn traffic_conserves_bytes_for_all_algorithms_and_policies() {
 }
 
 #[test]
+fn tiered_store_partitions_miss_bytes_exactly() {
+    let d = datasets::lookup("ogbn-products").unwrap().build(8, 77);
+    check("tier conservation", 12, |rng| {
+        let p = 2 + rng.index(4);
+        let algo = match rng.index(3) {
+            0 => Algorithm::DistDgl,
+            1 => Algorithm::PaGraph,
+            _ => Algorithm::P3,
+        };
+        let policy = match rng.index(3) {
+            0 => CachePolicy::Static,
+            1 => CachePolicy::Lfu,
+            _ => CachePolicy::Window,
+        };
+        let pre = preprocess_with_policy(algo, &d, p, 0.3, policy, rng.next_u64());
+        let cfg = FanoutConfig::new(32, &[4, 3]);
+        let mut s = Sampler::new(cfg, WeightMode::GcnNorm, d.graph.num_vertices(), rng.next_u64());
+        let part = rng.index(p);
+        if pre.train_parts[part].len() < 32 {
+            return Ok(());
+        }
+        let mb = s.sample(&d, &pre.train_parts[part][..32], part, 0);
+        let dc = rng.bool(0.5);
+        let comm = hitgnn::comm::CommConfig { direct_host_fetch: dc };
+        let row = d.features.bytes_per_vertex();
+        let snaps = pre.residency_snapshot();
+        let mut t = hitgnn::comm::feature_traffic(
+            &mb, &snaps[part], row, comm, pre.vertex_part.as_deref(), part,
+        );
+        // with or without fetch dedup first: dedup only relabels host
+        // bytes, so the tier split must stay exact either way
+        if rng.bool(0.5) {
+            let mut dd = hitgnn::comm::IterDedup::new(d.graph.num_vertices());
+            dd.next_iteration();
+            dd.apply(mb.level0(), &snaps[part], row, comm, pre.vertex_part.as_deref(), part, &mut t);
+        }
+        let dram_ratio = rng.f64();
+        let mut tier = TieredStore::new(
+            policy,
+            d.graph.num_vertices(),
+            dram_ratio,
+            d.features.feat_dim(),
+            degree_rank(&d),
+        );
+        tier.charge(mb.level0(), &snaps[part], row, &mut t);
+        // the tier split partitions the miss traffic exactly, so together
+        // with the FPGA-local bytes it partitions the batch total
+        require(
+            t.dram_hit_bytes + t.disk_read_bytes == t.missed_bytes(),
+            &format!(
+                "{algo:?}/{policy:?} ratio {dram_ratio:.3}: dram {} + disk {} != missed {}",
+                t.dram_hit_bytes,
+                t.disk_read_bytes,
+                t.missed_bytes()
+            ),
+        )?;
+        require(
+            t.local_bytes + t.dram_hit_bytes + t.disk_read_bytes == t.total_bytes(),
+            "local + dram + disk must partition the total",
+        )?;
+        require((0.0..=1.0).contains(&t.dram_hit_rate()), "hit rate in [0,1]")?;
+        // re-rank at the epoch barrier, then a fresh batch charge against
+        // the new membership must still split exactly
+        tier.observe(mb.level0());
+        tier.end_epoch();
+        let mut t2 = hitgnn::comm::feature_traffic(
+            &mb, &snaps[part], row, comm, pre.vertex_part.as_deref(), part,
+        );
+        tier.charge(mb.level0(), &snaps[part], row, &mut t2);
+        require(
+            t2.dram_hit_bytes + t2.disk_read_bytes == t2.missed_bytes(),
+            "post-barrier split must stay exact",
+        )
+    });
+}
+
+#[test]
 fn iteration_dedup_conserves_bytes_for_all_policies() {
     let d = datasets::lookup("yelp").unwrap().build(8, 31);
     check("dedup conservation", 12, |rng| {
@@ -364,6 +441,8 @@ fn epoch_estimate_scales_with_batches() {
             direct_host_fetch: true,
             extra_pcie_bytes_per_batch: 0.0,
             prefetch: false,
+            disk_gbs: 0.0,
+            disk_miss_frac: 0.0,
         };
         let mut w2 = w1.clone();
         w2.batches_per_part = vec![base * 2; p];
