@@ -32,6 +32,13 @@
 //!   both sides; `converged_1_05` records whether the trajectory reached
 //!   ≤ 1.05× the best static configuration.
 //!
+//! - `BENCH_robustness.json` — the fault-tolerance trajectory: epoch
+//!   wall with `--checkpoint-dir` on vs off (snapshot overhead, absolute
+//!   `checkpoint_seconds` included), and a degraded `u250:2,u250-half:2`
+//!   fleet (one board lost mid-epoch via `--fault-plan`) vs healthy —
+//!   modeled makespan, wall clock, and the quarantine/reassignment
+//!   counters. Same-plan determinism is asserted inline.
+//!
 //! `HITGNN_BENCH_QUICK` shrinks every section to CI smoke scale.
 
 use hitgnn::coordinator::{EpochMetrics, TrainConfig, Trainer};
@@ -50,6 +57,7 @@ fn main() {
     sync_suite(&out).expect("sync suite");
     io_suite(&out).expect("io suite");
     tune_suite(&out).expect("tune suite");
+    robustness_suite(&out).expect("robustness suite");
 }
 
 /// BENCH_host.json: pipeline epoch wall over the knob grid. The wall
@@ -633,5 +641,150 @@ fn tune_suite(out: &std::path::Path) -> anyhow::Result<()> {
         ratio.is_finite() && ratio < 1.5,
         "auto-tune failed to approach the best static configuration (ratio {ratio:.3})"
     );
+    Ok(())
+}
+
+/// BENCH_robustness.json: the fault-tolerance trajectory (ISSUE 10).
+/// (a) checkpoint overhead: epoch wall with `--checkpoint-dir` on vs off
+/// at the headline pipeline configuration, plus the trainer's own
+/// `checkpoint_seconds` so the snapshot cost is tracked both relatively
+/// and absolutely; (b) degraded-fleet makespan: a `u250:2,u250-half:2`
+/// fleet losing one board mid-epoch vs healthy — the wall clock, the
+/// modeled §6.2 makespan, and the quarantine/reassignment counters all
+/// land in the JSON so a degradation regression is a visible diff.
+fn robustness_suite(out: &std::path::Path) -> anyhow::Result<()> {
+    use hitgnn::fault::FaultPlan;
+
+    let quick = bench::quick();
+    let max_iters = if quick { Some(6) } else { None };
+    let base = || TrainConfig {
+        dataset: "tiny".into(),
+        model: "gcn".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 4,
+        epochs: 2,
+        scale_shift: 0,
+        seed: 11,
+        host_threads: 4,
+        prefetch_depth: 2,
+        max_iterations: max_iters,
+        ..TrainConfig::default()
+    };
+
+    println!("\n=== bench: fault tolerance ===");
+    let mut suite = BenchSuite::new("robustness");
+    let mut b = Bench::new("fault_tolerance");
+
+    // (a) checkpoint on/off epoch-wall overhead
+    let dir = std::env::temp_dir().join(format!("hitgnn-bench-ckpt-{}", std::process::id()));
+    let mut wall = [0.0f64; 2];
+    let mut ckpt_s = 0.0f64;
+    for (i, checkpoint) in [false, true].into_iter().enumerate() {
+        let mut samples = Vec::with_capacity(b.iters());
+        let mut snap = Vec::with_capacity(b.iters());
+        for _ in 0..b.iters() {
+            std::fs::remove_dir_all(&dir).ok();
+            let mut cfg = base();
+            if checkpoint {
+                cfg.checkpoint_dir = Some(dir.clone());
+            }
+            let mut tr = Trainer::new(cfg)?;
+            let report = tr.run()?;
+            let m = report.epochs.last().expect("two epochs");
+            samples.push(m.wall_seconds);
+            snap.push(m.checkpoint_seconds);
+            tr.shutdown();
+        }
+        wall[i] = samples.iter().copied().sum::<f64>() / samples.len() as f64;
+        if checkpoint {
+            ckpt_s = snap.iter().copied().sum::<f64>() / snap.len() as f64;
+        }
+        b.record(&format!("epoch_wall checkpoint={checkpoint}"), &samples);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    let overhead = wall[1] / wall[0];
+    println!(
+        "  checkpoint overhead: off {:.3} ms, on {:.3} ms ({overhead:.3}x, snapshot {:.3} ms)",
+        wall[0] * 1e3,
+        wall[1] * 1e3,
+        ckpt_s * 1e3
+    );
+
+    // (b) degraded fleet vs healthy on u250:2,u250-half:2
+    let fleet_spec = "u250:2,u250-half:2";
+    let plan = "dev1:fail@e0i1";
+    let run_fleet = |fault: Option<&str>| -> anyhow::Result<hitgnn::coordinator::TrainReport> {
+        let mut cfg = base();
+        cfg.fleet = Some(parse_fleet(fleet_spec)?);
+        cfg.sched = SchedMode::Cost;
+        cfg.fault_plan = fault.map(FaultPlan::parse).transpose()?;
+        let mut tr = Trainer::new(cfg)?;
+        let report = tr.run()?;
+        tr.shutdown();
+        Ok(report)
+    };
+    let healthy = run_fleet(None)?;
+    let degraded = run_fleet(Some(plan))?;
+    // same plan + same seed ⇒ bit-identical degraded run (the acceptance
+    // determinism law, asserted where the bench already pays for the run)
+    let rerun = run_fleet(Some(plan))?;
+    for (a, c) in degraded.epochs.iter().zip(&rerun.epochs) {
+        assert_eq!(a.iter_losses, c.iter_losses, "degraded run must be deterministic");
+    }
+    let sum = |r: &hitgnn::coordinator::TrainReport, f: &dyn Fn(&EpochMetrics) -> f64| -> f64 {
+        r.epochs.iter().map(f).sum()
+    };
+    let h_mk = sum(&healthy, &|m| m.epoch_makespan_seconds);
+    let d_mk = sum(&degraded, &|m| m.epoch_makespan_seconds);
+    let reassigned: usize = degraded.epochs.iter().map(|m| m.reassigned_batches).sum();
+    println!(
+        "  degraded fleet ({plan}): modeled makespan {d_mk:.4}s vs healthy {h_mk:.4}s \
+         ({:.3}x), {reassigned} batches reassigned",
+        d_mk / h_mk
+    );
+    println!("=== end bench: fault tolerance ===");
+
+    suite.extra(
+        "robustness",
+        Json::obj(vec![
+            ("checkpoint_epoch_wall_off_s", Json::num(wall[0])),
+            ("checkpoint_epoch_wall_on_s", Json::num(wall[1])),
+            ("checkpoint_overhead_ratio", Json::num(overhead)),
+            ("checkpoint_snapshot_s", Json::num(ckpt_s)),
+            ("fleet", Json::str(fleet_spec)),
+            ("fault_plan", Json::str(plan)),
+            ("healthy_makespan_s", Json::num(h_mk)),
+            ("degraded_makespan_s", Json::num(d_mk)),
+            ("degraded_vs_healthy_ratio", Json::num(d_mk / h_mk)),
+            (
+                "healthy_wall_s",
+                Json::num(sum(&healthy, &|m| m.wall_seconds)),
+            ),
+            (
+                "degraded_wall_s",
+                Json::num(sum(&degraded, &|m| m.wall_seconds)),
+            ),
+            (
+                "quarantined_devices",
+                Json::num(degraded.epochs.last().expect("epochs").quarantined_devices as f64),
+            ),
+            ("reassigned_batches", Json::num(reassigned as f64)),
+            (
+                "degraded_batches_per_epoch",
+                Json::arr(degraded.epochs.iter().map(|m| Json::num(m.batches as f64)).collect()),
+            ),
+        ]),
+    );
+    suite.add(&b);
+    b.finish();
+    suite.write(out)?;
+    // exactly-once even degraded: both runs train identical batch totals
+    for (h, d) in healthy.epochs.iter().zip(&degraded.epochs) {
+        assert_eq!(
+            h.batches, d.batches,
+            "epoch {}: degraded run must still train every batch exactly once",
+            h.epoch
+        );
+    }
     Ok(())
 }

@@ -77,6 +77,13 @@ pub struct HitGnn {
     dram_ratio: f64,
     /// Disk read bandwidth (GB/s) below the DRAM tier.
     disk_gbs: f64,
+    /// Deterministic fault-injection spec (`--fault-plan` grammar);
+    /// parsed and validated at `generate_design()`.
+    fault_plan: Option<String>,
+    /// Per-epoch snapshot directory for the generated host program.
+    checkpoint_dir: Option<String>,
+    /// Checkpoint file (or directory holding them) to resume from.
+    resume: Option<String>,
 }
 
 impl Default for HitGnn {
@@ -101,6 +108,9 @@ impl Default for HitGnn {
             dataset_path: None,
             dram_ratio: 1.0,
             disk_gbs: 2.0,
+            fault_plan: None,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 }
@@ -230,6 +240,32 @@ impl HitGnn {
         self
     }
 
+    /// Deterministic fault injection for the generated host program
+    /// (DESIGN.md §Fault tolerance) — the `--fault-plan` grammar, e.g.
+    /// `"dev1:fail@e2i7,dev3:slow*4@e1,disk:eio@0.01,prep:panic@e3i2"`.
+    /// Parsed (with token-naming errors) at `generate_design()`; device
+    /// ids and epoch anchors are pinned when training starts.
+    pub fn fault_plan(mut self, spec: &str) -> Self {
+        self.fault_plan = Some(spec.to_string());
+        self
+    }
+
+    /// Write a versioned trainer snapshot after every epoch into `dir`
+    /// (the `--checkpoint-dir` behavior; files are `ckpt-eNNNNN.hitg`).
+    pub fn checkpointing(mut self, dir: &str) -> Self {
+        self.checkpoint_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Resume training from a checkpoint file, or from the newest
+    /// checkpoint in a directory (the `--resume` behavior). The resumed
+    /// run continues the uninterrupted run's loss/traffic sequence
+    /// bit-for-bit (same seed required).
+    pub fn resume(mut self, path: &str) -> Self {
+        self.resume = Some(path.to_string());
+        self
+    }
+
     /// `Generate_Design()`: run the DSE engine for the accelerator
     /// configuration and assemble the host-program configuration.
     pub fn generate_design(self) -> anyhow::Result<Design> {
@@ -314,6 +350,14 @@ impl HitGnn {
             );
         }
         anyhow::ensure!(self.num_fpgas >= 1, "platform needs at least one FPGA");
+        // parse the fault schedule now so a malformed spec fails the
+        // design, not the training run (fleet/epoch pinning happens in
+        // Trainer::new once both are known)
+        let fault_plan = self
+            .fault_plan
+            .as_deref()
+            .map(crate::fault::FaultPlan::parse)
+            .transpose()?;
         let spec = datasets::lookup(&dataset)?;
 
         // Eq. 7's β, measured (per-epoch) on a scaled instance under the
@@ -398,6 +442,9 @@ impl HitGnn {
             dataset_path: self.dataset_path.clone(),
             dram_ratio: self.dram_ratio,
             disk_gbs: self.disk_gbs,
+            fault_plan,
+            checkpoint_dir: self.checkpoint_dir.as_ref().map(std::path::PathBuf::from),
+            resume: self.resume.clone(),
             ..TrainConfig::default()
         };
 
@@ -715,6 +762,34 @@ mod tests {
             .gnn_computation("gcn")
             .generate_design();
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn fault_and_checkpoint_knobs_thread_into_the_design() {
+        let d = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .fault_plan("dev0:slow*2@e0,disk:eio@0.001")
+            .checkpointing("/tmp/hitgnn-api-ck")
+            .resume("/tmp/hitgnn-api-ck")
+            .generate_design()
+            .unwrap();
+        let p = d.train.fault_plan.as_ref().unwrap();
+        assert_eq!(p.slowdowns.len(), 1);
+        assert_eq!(p.disk_eio, Some(0.001));
+        assert_eq!(
+            d.train.checkpoint_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/hitgnn-api-ck"))
+        );
+        assert_eq!(d.train.resume.as_deref(), Some("/tmp/hitgnn-api-ck"));
+        // a malformed spec fails the design with a token-naming error
+        let err = HitGnn::new()
+            .load_input_graph("reddit", 8)
+            .gnn_computation("gcn")
+            .fault_plan("dev0:melt@e0")
+            .generate_design()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dev0:melt@e0"), "{err:#}");
     }
 
     #[test]

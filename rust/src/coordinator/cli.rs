@@ -86,6 +86,23 @@ TRAIN OPTIONS:
     --disk-gbs <GB/s>            disk read bandwidth for the cost model's
                                  miss term (default 2; priced only when
                                  --dram-ratio < 1)
+    --fault-plan <spec>          deterministic fault injection (DESIGN.md
+                                 §Fault tolerance), comma-separated:
+                                 devN:fail@eEiI (device lost before that
+                                 iteration; its remaining batches reroute
+                                 to survivors), devN:slow*M@eE (straggler:
+                                 M× cost-model price from epoch E),
+                                 disk:eio@p (transient disk-read errors,
+                                 bounded retry), prep:panic@eEiI (a prep
+                                 worker panics). Same plan + same seed =
+                                 bit-identical losses
+    --checkpoint-dir <dir>       write a versioned snapshot (params, SGD
+                                 momentum, RNG, store + tuner state) after
+                                 every epoch as ckpt-eNNNNN.hitg
+    --resume <path>              resume from a checkpoint file, or from
+                                 the newest one in a directory; training
+                                 continues bit-identically to the
+                                 uninterrupted run (same --seed required)
     --seed <u64>                 --artifacts <dir>
     --report <file.json>         write the training report
 

@@ -110,6 +110,17 @@ pub struct TrainConfig {
     /// miss-traffic term (`--disk-gbs`); only priced when
     /// `dram_ratio < 1`.
     pub disk_gbs: f64,
+    /// Deterministic fault schedule (`--fault-plan
+    /// "dev1:fail@e2i7,dev3:slow*4@e1,disk:eio@0.01,prep:panic@e3i2"`,
+    /// DESIGN.md §Fault tolerance). Device ids and epoch anchors are
+    /// validated against the live fleet/run length in `Trainer::new`.
+    pub fault_plan: Option<crate::fault::FaultPlan>,
+    /// Write a versioned snapshot after every epoch into this directory
+    /// (`--checkpoint-dir`; files are `ckpt-eNNNNN.hitg`).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a checkpoint file — or, when given a directory, from
+    /// the newest checkpoint inside it (`--resume`).
+    pub resume: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -144,6 +155,9 @@ impl Default for TrainConfig {
             dataset_path: None,
             dram_ratio: 1.0,
             disk_gbs: 2.0,
+            fault_plan: None,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 }
@@ -210,6 +224,12 @@ impl TrainConfig {
             dataset_path: args.opt_str("dataset-path"),
             dram_ratio: args.num("dram-ratio", d.dram_ratio)?,
             disk_gbs: args.num("disk-gbs", d.disk_gbs)?,
+            fault_plan: args
+                .opt_str("fault-plan")
+                .map(|s| crate::fault::FaultPlan::parse(&s))
+                .transpose()?,
+            checkpoint_dir: args.opt_str("checkpoint-dir").map(PathBuf::from),
+            resume: args.opt_str("resume"),
         };
         crate::runtime::validate_model(&cfg.model)?;
         anyhow::ensure!(cfg.num_fpgas >= 1, "--fpgas must be >= 1");
@@ -307,6 +327,27 @@ impl TrainConfig {
             ),
             ("dram_ratio", Json::num(self.dram_ratio)),
             ("disk_gbs", Json::num(self.disk_gbs)),
+            (
+                "fault_plan",
+                match &self.fault_plan {
+                    Some(p) => Json::str(&p.spec),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "checkpoint_dir",
+                match &self.checkpoint_dir {
+                    Some(d) => Json::str(&d.display().to_string()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "resume",
+                match &self.resume {
+                    Some(r) => Json::str(r),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -481,6 +522,42 @@ mod tests {
             let args = Args::parse(["train", "--disk-gbs", bad]);
             assert!(TrainConfig::from_args(&args).is_err(), "--disk-gbs {bad} accepted");
         }
+    }
+
+    #[test]
+    fn parses_fault_and_checkpoint_flags() {
+        let c = TrainConfig::from_args(&Args::parse(["train"])).unwrap();
+        assert!(c.fault_plan.is_none() && c.checkpoint_dir.is_none() && c.resume.is_none());
+        let c = TrainConfig::from_args(&Args::parse([
+            "train",
+            "--fault-plan",
+            "dev1:fail@e2i7,dev3:slow*4@e1,disk:eio@0.01,prep:panic@e3i2",
+            "--checkpoint-dir",
+            "/tmp/ck",
+            "--resume",
+            "/tmp/ck",
+        ]))
+        .unwrap();
+        let p = c.fault_plan.as_ref().unwrap();
+        assert_eq!(p.failures.len(), 1);
+        assert_eq!(p.slowdowns.len(), 1);
+        assert_eq!(p.disk_eio, Some(0.01));
+        assert_eq!(p.prep_panics.len(), 1);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ck")));
+        assert_eq!(c.resume.as_deref(), Some("/tmp/ck"));
+        let j = c.to_json();
+        assert_eq!(
+            j.req_str("fault_plan").unwrap(),
+            "dev1:fail@e2i7,dev3:slow*4@e1,disk:eio@0.01,prep:panic@e3i2"
+        );
+        assert_eq!(j.req_str("checkpoint_dir").unwrap(), "/tmp/ck");
+        assert_eq!(j.req_str("resume").unwrap(), "/tmp/ck");
+        assert_eq!(TrainConfig::default().to_json().req("fault_plan").unwrap(), &Json::Null);
+
+        // malformed plans are rejected at parse time, naming the token
+        let err = TrainConfig::from_args(&Args::parse(["train", "--fault-plan", "dev1:melt@e0"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dev1:melt@e0"), "{err:#}");
     }
 
     #[test]

@@ -69,6 +69,20 @@ pub struct EpochMetrics {
     /// (`tune::TuneDecision::to_json`) — present when `--auto-tune` is
     /// `on` or `freeze`, so every knob change is auditable in the report.
     pub tune: Option<Json>,
+    /// Devices under quarantine when this epoch's barrier closed (lost
+    /// boards stay quarantined for the rest of the run — DESIGN.md
+    /// §Fault tolerance).
+    pub quarantined_devices: usize,
+    /// Batches whose home partition belongs to a quarantined device,
+    /// rerouted to survivors at planning time (each still trains exactly
+    /// once).
+    pub reassigned_batches: usize,
+    /// Transient disk-read errors absorbed by bounded retry
+    /// (`--fault-plan disk:eio@p`).
+    pub disk_retries: u64,
+    /// Wall time spent writing this epoch's snapshot
+    /// (`--checkpoint-dir`; 0 when checkpointing is off).
+    pub checkpoint_seconds: f64,
 }
 
 impl EpochMetrics {
@@ -103,6 +117,10 @@ impl EpochMetrics {
                 "iter_losses",
                 Json::arr(self.iter_losses.iter().map(|&x| Json::num(x)).collect()),
             ),
+            ("quarantined_devices", Json::num(self.quarantined_devices as f64)),
+            ("reassigned_batches", Json::num(self.reassigned_batches as f64)),
+            ("disk_retries", Json::num(self.disk_retries as f64)),
+            ("checkpoint_seconds", Json::num(self.checkpoint_seconds)),
         ];
         if let Some(t) = &self.tune {
             fields.push(("tune", t.clone()));
@@ -167,6 +185,10 @@ mod tests {
                 epoch_makespan_seconds: 0.25,
                 prep_stall_seconds: 0.125,
                 tune: Some(Json::obj(vec![("action", Json::str("hold"))])),
+                quarantined_devices: 1,
+                reassigned_batches: 3,
+                disk_retries: 2,
+                checkpoint_seconds: 0.0625,
                 ..Default::default()
             }],
             mean_shape: vec![5.0, 4.0, 3.0, 2.0, 1.0],
@@ -192,6 +214,11 @@ mod tests {
         assert!((e0.req_f64("prep_stall_seconds").unwrap() - 0.125).abs() < 1e-12);
         assert!(e0.get("execute_stall_seconds").is_some());
         assert_eq!(e0.req("tune").unwrap().req_str("action").unwrap(), "hold");
+        // fault-tolerance counters are always present in the report
+        assert_eq!(e0.req_usize("quarantined_devices").unwrap(), 1);
+        assert_eq!(e0.req_usize("reassigned_batches").unwrap(), 3);
+        assert_eq!(e0.req_usize("disk_retries").unwrap(), 2);
+        assert!((e0.req_f64("checkpoint_seconds").unwrap() - 0.0625).abs() < 1e-12);
     }
 
     /// ISSUE-7 satellite: the coordinator-thread stages are disjoint

@@ -279,6 +279,33 @@ impl Sgd {
         }
     }
 
+    /// Momentum buffers in artifact order (checkpoint snapshot).
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Restore momentum buffers from a checkpoint. The buffers must
+    /// match the optimizer's current parameter layout exactly — a
+    /// mismatch is a clean error (checkpoint from a different model).
+    pub fn restore_velocity(&mut self, velocity: Vec<Vec<f32>>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            velocity.len() == self.velocity.len(),
+            "checkpoint momentum has {} tensors, optimizer has {}",
+            velocity.len(),
+            self.velocity.len()
+        );
+        for (i, (new, cur)) in velocity.iter().zip(&self.velocity).enumerate() {
+            anyhow::ensure!(
+                new.len() == cur.len(),
+                "checkpoint momentum tensor {i} has {} elements, optimizer has {}",
+                new.len(),
+                cur.len()
+            );
+        }
+        self.velocity = velocity;
+        Ok(())
+    }
+
     /// Fused sync tail over a [`GradReducer`] accumulator: per element
     /// `g = acc/p; v = μ·v + g; w -= lr·v` in one pass — the same three
     /// expressions (division, not reciprocal multiply; no manual FMA) in

@@ -63,6 +63,9 @@ pub struct PrepTask {
     /// Per-partition batch sequence number (RNG stream key).
     pub seq: usize,
     pub targets: Vec<u32>,
+    /// Fault injection (`--fault-plan prep:panic@eEiI`): preparing this
+    /// task panics, exercising the coordinator's error-path drain.
+    pub inject_panic: bool,
 }
 
 /// Host-side measurements of one prepared batch. Collected per batch and
@@ -140,12 +143,41 @@ pub fn plan_epoch_tasks(
     remaining: &mut [usize],
     max_iterations: Option<usize>,
 ) -> Vec<Vec<PrepTask>> {
+    plan_epoch_tasks_with_faults(sched, plan, remaining, max_iterations, &[])
+        .expect("fault-free planning cannot fail")
+}
+
+/// [`plan_epoch_tasks`] under a device-failure schedule: `failures` is
+/// the epoch's (iteration, device) anchors sorted by iteration
+/// (`FaultPlan::failures_in_epoch`). Before planning iteration *I*, every
+/// failure anchored at *I* quarantines its device in the scheduler, so
+/// that device executes no task of iteration *I* or later and its
+/// partition's remaining batches drain deterministically to survivors.
+/// Because the whole epoch is planned here — before any sampling or
+/// wall-clock enters the picture — a faulted plan is a pure function of
+/// (plan, schedule), and every batch still appears exactly once.
+///
+/// Fails cleanly when a quarantine leaves no survivors or an anchor's
+/// iteration lies beyond the planned epoch (the anchor would silently
+/// never fire).
+pub fn plan_epoch_tasks_with_faults(
+    sched: &mut TwoStageScheduler,
+    plan: &mut EpochPlan,
+    remaining: &mut [usize],
+    max_iterations: Option<usize>,
+    failures: &[(usize, usize)],
+) -> anyhow::Result<Vec<Vec<PrepTask>>> {
     let mut iterations: Vec<Vec<PrepTask>> = Vec::new();
+    let mut next_failure = 0usize;
     loop {
         if let Some(mx) = max_iterations {
             if iterations.len() >= mx {
                 break;
             }
+        }
+        while next_failure < failures.len() && failures[next_failure].0 == iterations.len() {
+            sched.quarantine(failures[next_failure].1)?;
+            next_failure += 1;
         }
         let Some(ip) = sched.plan_iteration_consuming(remaining) else {
             break;
@@ -163,11 +195,20 @@ pub fn plan_epoch_tasks(
                 fpga: t.fpga,
                 seq,
                 targets: targets.to_vec(),
+                inject_panic: false,
             });
         }
         iterations.push(tasks);
     }
-    iterations
+    if next_failure < failures.len() {
+        let (it, dev) = failures[next_failure];
+        anyhow::bail!(
+            "fault plan anchors dev{dev} failure at iteration {it}, but the epoch planned \
+             only {} iterations",
+            iterations.len()
+        );
+    }
+    Ok(iterations)
 }
 
 /// Body of one prep-pool worker. Borrows a per-thread [`Sampler`] whose
@@ -213,6 +254,9 @@ pub fn prep_worker(
         let BatchCarcass { mut mb, mut bufs } = carcass;
 
         let prepared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if task.inject_panic {
+                panic!("injected fault (--fault-plan prep:panic)");
+            }
             let t0 = Instant::now();
             sampler.sample_into(&mut mb, data, &task.targets, task.part, task.seq);
             let sample_seconds = t0.elapsed().as_secs_f64();

@@ -29,6 +29,7 @@ use super::params::{GradReducer, ParamSet, Sgd};
 use super::prep;
 use super::worker::{WorkItem, WorkerPool};
 use crate::comm::{CommConfig, FeatureService, IterDedup};
+use crate::fault::{self, checkpoint::Checkpoint, FaultPlan};
 use crate::fpga::timing::BatchShape;
 use crate::graph::{datasets, Dataset};
 use crate::partition::{preprocess_with_policy, Preprocessed};
@@ -37,7 +38,7 @@ use crate::store::{FeatureStore, Residency, TieredStore};
 use crate::runtime::{ArtifactEntry, BatchBuffers, GradBuffers, Manifest, TrainExecutor};
 use crate::sampling::{EpochPlan, FanoutConfig, Sampler, WeightMode};
 use crate::sched::{CostModel, IterationPlan, Task, TwoStageScheduler};
-use crate::tune::{AutoTuneMode, AutoTuner, EpochObservation, Knobs, TunePrior};
+use crate::tune::{AutoTuneMode, AutoTuner, EpochObservation, Knobs, TunePrior, TunerState};
 use crate::util::rng::Rng;
 
 /// Cold-start local-fetch ratio for the scheduler cost model before the
@@ -101,6 +102,19 @@ pub struct Trainer {
     /// Last epoch's measured disk-read share of miss traffic — the cost
     /// model's disk term (cold start: the uncached fraction 1−dram_ratio).
     disk_miss_frac: f64,
+    /// Parsed `--fault-plan` (empty when none): the deterministic fault
+    /// schedule this run injects (DESIGN.md §Fault tolerance).
+    fault: FaultPlan,
+    /// Devices lost so far (true = quarantined). A failed device stays
+    /// quarantined for the rest of the run and across resume — the
+    /// scheduler reroutes its partition's batches to survivors at
+    /// planning time.
+    quarantined: Vec<bool>,
+    /// First epoch `run` executes (non-zero after `--resume`).
+    start_epoch: usize,
+    /// Tuner state restored from a checkpoint, applied when `run` builds
+    /// the controller.
+    resume_tuner: Option<TunerState>,
 }
 
 impl Trainer {
@@ -145,6 +159,11 @@ impl Trainer {
             "disk_gbs must be positive (got {})",
             cfg.disk_gbs
         );
+        // pin the fault schedule against the live fleet and run length
+        // before any work happens — unknown device ids and out-of-range
+        // epoch anchors are config errors, not runtime surprises
+        let fault = cfg.fault_plan.clone().unwrap_or_default();
+        fault.validate(cfg.num_fpgas, cfg.epochs)?;
         let pre = preprocess_with_policy(
             cfg.algo,
             &data,
@@ -239,8 +258,9 @@ impl Trainer {
             )
         });
         let disk_miss_frac = 1.0 - cfg.dram_ratio;
+        let quarantined = vec![false; cfg.num_fpgas];
 
-        Ok(Trainer {
+        let mut trainer = Trainer {
             cfg,
             data,
             pre,
@@ -263,7 +283,150 @@ impl Trainer {
             last_beta: COLD_START_BETA,
             tier,
             disk_miss_frac,
-        })
+            fault,
+            quarantined,
+            start_epoch: 0,
+            resume_tuner: None,
+        };
+        if let Some(r) = trainer.cfg.resume.clone() {
+            trainer.resume_from(std::path::Path::new(&r))?;
+        }
+        Ok(trainer)
+    }
+
+    /// Restore trainer state from a checkpoint file (or the newest one in
+    /// a checkpoint directory). Everything the epoch loop carries across
+    /// a barrier comes back bit-exactly, so resumed training continues
+    /// the same loss/traffic sequence the uninterrupted run would have
+    /// produced (the continuation law — `tests/pipeline_determinism.rs`).
+    fn resume_from(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let ck = Checkpoint::load(path)?;
+        anyhow::ensure!(
+            ck.dataset == self.cfg.dataset && ck.model == self.cfg.model,
+            "checkpoint is for {}/{} but this run trains {}/{}",
+            ck.dataset,
+            ck.model,
+            self.cfg.dataset,
+            self.cfg.model
+        );
+        anyhow::ensure!(
+            ck.num_fpgas as usize == self.cfg.num_fpgas,
+            "checkpoint fleet has {} devices but this run has {}",
+            ck.num_fpgas,
+            self.cfg.num_fpgas
+        );
+        anyhow::ensure!(
+            ck.seed == self.cfg.seed,
+            "checkpoint seed {} != run seed {} (resume must continue the same stream)",
+            ck.seed,
+            self.cfg.seed
+        );
+        let epoch_next = ck.epoch_next as usize;
+        anyhow::ensure!(
+            epoch_next < self.cfg.epochs,
+            "checkpoint already covers {epoch_next} epochs; raise --epochs past {epoch_next} \
+             to resume"
+        );
+        anyhow::ensure!(
+            ck.params.len() == self.params.data.len(),
+            "checkpoint has {} parameter tensors, model has {}",
+            ck.params.len(),
+            self.params.data.len()
+        );
+        for (i, (new, cur)) in ck.params.iter().zip(&self.params.data).enumerate() {
+            anyhow::ensure!(
+                new.len() == cur.len(),
+                "checkpoint parameter tensor {i} has {} elements, model has {}",
+                new.len(),
+                cur.len()
+            );
+        }
+        self.opt.restore_velocity(ck.velocity)?;
+        self.params.data = ck.params;
+        self.rng = Rng::from_state(ck.rng);
+        anyhow::ensure!(
+            ck.shape_acc.len() == self.shape_acc.len(),
+            "checkpoint shape accumulator has {} entries, model depth needs {}",
+            ck.shape_acc.len(),
+            self.shape_acc.len()
+        );
+        self.shape_acc = ck.shape_acc;
+        self.shape_n = ck.shape_n;
+        self.last_beta = ck.last_beta;
+        self.disk_miss_frac = ck.disk_miss_frac;
+        anyhow::ensure!(
+            ck.stores.len() == self.pre.stores.len(),
+            "checkpoint has {} store states, fleet has {}",
+            ck.stores.len(),
+            self.pre.stores.len()
+        );
+        for (s, st) in self.pre.stores.iter_mut().zip(&ck.stores) {
+            s.import_state(st)?;
+        }
+        match (self.tier.as_mut(), &ck.tier) {
+            (Some(t), Some(st)) => t.import_state(st)?,
+            (None, None) => {}
+            (Some(_), None) => anyhow::bail!(
+                "this run has a DRAM tier (--dram-ratio < 1) but the checkpoint carries no \
+                 tier state"
+            ),
+            (None, Some(_)) => anyhow::bail!(
+                "checkpoint carries DRAM-tier state but this run has no tier (--dram-ratio 1)"
+            ),
+        }
+        match (self.cfg.auto_tune, ck.tuner) {
+            (AutoTuneMode::Off, None) => {}
+            (AutoTuneMode::Off, Some(_)) => anyhow::bail!(
+                "checkpoint carries auto-tuner state but this run has --auto-tune off"
+            ),
+            (mode, None) => anyhow::bail!(
+                "this run has --auto-tune {} but the checkpoint carries no tuner state",
+                mode.name()
+            ),
+            (_, Some(state)) => self.resume_tuner = Some(state),
+        }
+        anyhow::ensure!(
+            ck.quarantined.len() == self.cfg.num_fpgas,
+            "checkpoint quarantine mask has {} devices, fleet has {}",
+            ck.quarantined.len(),
+            self.cfg.num_fpgas
+        );
+        self.quarantined = ck.quarantined;
+        self.start_epoch = epoch_next;
+        crate::log_info!(
+            "resume: restored epoch-{} checkpoint ({} quarantined device(s))",
+            epoch_next,
+            self.quarantined.iter().filter(|&&q| q).count()
+        );
+        Ok(())
+    }
+
+    /// Snapshot the trainer at the epoch barrier into `dir`.
+    fn save_checkpoint(
+        &self,
+        dir: &std::path::Path,
+        epoch_next: usize,
+        tuner: Option<&AutoTuner>,
+    ) -> anyhow::Result<std::path::PathBuf> {
+        let ck = Checkpoint {
+            dataset: self.cfg.dataset.clone(),
+            model: self.cfg.model.clone(),
+            num_fpgas: self.cfg.num_fpgas as u32,
+            seed: self.cfg.seed,
+            epoch_next: epoch_next as u64,
+            rng: self.rng.state(),
+            shape_n: self.shape_n,
+            last_beta: self.last_beta,
+            disk_miss_frac: self.disk_miss_frac,
+            shape_acc: self.shape_acc.clone(),
+            params: self.params.data.clone(),
+            velocity: self.opt.velocity().to_vec(),
+            stores: self.pre.stores.iter().map(|s| s.export_state()).collect(),
+            tier: self.tier.as_ref().map(|t| t.export_state()),
+            tuner: tuner.map(|t| t.to_state()),
+            quarantined: self.quarantined.clone(),
+        };
+        ck.save(dir)
     }
 
     pub fn entry(&self) -> &ArtifactEntry {
@@ -279,8 +442,17 @@ impl Trainer {
     /// decision is recorded in `EpochMetrics::tune`.
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
         let mut tuner = self.make_tuner();
+        if let Some(state) = self.resume_tuner.take() {
+            let t = tuner.as_mut().expect("resume_from validated the tuner mode");
+            t.restore(&state)?;
+            if t.mode() == AutoTuneMode::On {
+                // re-apply the knobs in effect when the snapshot was
+                // taken (the pending trial's, if one was mid-flight)
+                self.apply_knobs(t.knobs());
+            }
+        }
         let mut epochs = Vec::new();
-        for epoch in 0..self.cfg.epochs {
+        for epoch in self.start_epoch..self.cfg.epochs {
             let mut m = self.run_epoch(epoch)?;
             if let Some(t) = tuner.as_mut() {
                 let obs = EpochObservation {
@@ -304,6 +476,14 @@ impl Trainer {
                     self.apply_knobs(d.knobs);
                 }
                 m.tune = Some(d.to_json());
+            }
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                // snapshot after the tuner's decision so the restored
+                // controller replays exactly the straight run's choices
+                let t0 = Instant::now();
+                let path = self.save_checkpoint(&dir, epoch + 1, tuner.as_ref())?;
+                m.checkpoint_seconds = t0.elapsed().as_secs_f64();
+                crate::log_info!("checkpoint: wrote {}", path.display());
             }
             crate::log_info!(
                 "epoch {:>3}: loss {:.4} | {:.2}s | {} iters | NVTPS {} | beta {:.3} | hit {:.3} | dedup {} | {} stores re-ranked | makespan {} batches / {:.3}s modeled",
@@ -447,14 +627,49 @@ impl Trainer {
         // ---- planning stage (decoupled from preparation) ----------------
         let mut plan = EpochPlan::new(&self.pre.train_parts, self.entry.dims.b, &mut self.rng);
         let epoch_stream = self.rng.next_u64();
-        let cost = self.fleet_cost();
+        let mut cost = self.fleet_cost();
+        // straggler injection only re-prices the cost model: `--sched
+        // cost` routes extras around the slow device, while the loss
+        // sequence (a function of the partition stream alone) is
+        // untouched
+        for (d, c) in cost.batch_s.iter_mut().enumerate() {
+            *c *= self.fault.slow_multiplier(d, epoch);
+        }
         let mut sched =
             TwoStageScheduler::for_mode(p, cfg.workload_balancing, cfg.sched, Some(cost.clone()));
+        // devices lost in earlier epochs stay dead
+        for d in 0..p {
+            if self.quarantined[d] {
+                sched.quarantine(d)?;
+            }
+        }
         let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
-        let mut iterations =
-            prep::plan_epoch_tasks(&mut sched, &mut plan, &mut remaining, cfg.max_iterations);
+        let mut iterations = prep::plan_epoch_tasks_with_faults(
+            &mut sched,
+            &mut plan,
+            &mut remaining,
+            cfg.max_iterations,
+            &self.fault.failures_in_epoch(epoch),
+        )?;
+        let alive = sched.alive().to_vec();
+        for (q, &a) in self.quarantined.iter_mut().zip(&alive) {
+            *q = !a;
+        }
         let sizes: Vec<usize> = iterations.iter().map(|t| t.len()).collect();
         let n_iters = iterations.len();
+
+        // mark the iterations whose preparation must panic (`prep:panic`
+        // anchors) — the harness for the coordinator's error-path drain
+        for it in self.fault.prep_panics_in_epoch(epoch) {
+            anyhow::ensure!(
+                it < n_iters,
+                "fault plan anchor e{epoch}i{it} is out of range: epoch {epoch} planned only \
+                 {n_iters} iterations"
+            );
+            if let Some(t0) = iterations[it].first_mut() {
+                t0.inject_panic = true;
+            }
+        }
 
         // scheduler observability: the planned epoch's makespan in batch
         // units and in modeled seconds, via the sched module's one
@@ -473,8 +688,26 @@ impl Trainer {
             epoch,
             epoch_makespan_batches: makespan_batches,
             epoch_makespan_seconds: makespan_seconds,
+            quarantined_devices: alive.iter().filter(|&&a| !a).count(),
+            // batches whose home partition belongs to a dead device,
+            // rerouted to a survivor at planning time (pre-failure
+            // batches of that partition ran on their own device and are
+            // not reassignments)
+            reassigned_batches: iterations
+                .iter()
+                .flatten()
+                .filter(|t| !alive[t.part] && t.fpga != t.part)
+                .count(),
             ..Default::default()
         };
+        if m.quarantined_devices > 0 {
+            crate::log_info!(
+                "fault: epoch {epoch} runs with {} quarantined device(s), {} batch(es) \
+                 reassigned to survivors",
+                m.quarantined_devices,
+                m.reassigned_batches
+            );
+        }
         let mut loss_sum = 0.0f64;
         let mut traffic_total = crate::comm::Traffic::default();
 
@@ -523,6 +756,7 @@ impl Trainer {
         let grad_scratch = &mut self.grad_scratch;
         let shape_acc = &mut self.shape_acc;
         let shape_n = &mut self.shape_n;
+        let fault_plan = &self.fault;
         // runtime-safe knob: any thread count reduces in the same
         // per-element order (see GradReducer), so retuning is free
         reducer.set_threads(cfg.reduce_threads.max(1));
@@ -551,6 +785,11 @@ impl Trainer {
             // dies, recv() errors instead of hanging
             drop(done_tx);
 
+            // submitted-but-uncollected worker items: on an aborted epoch
+            // these must be drained, or the next epoch's collect barrier
+            // would receive this epoch's stale results (a poisoned pool)
+            let mut inflight = 0usize;
+            let result = (|| -> anyhow::Result<()> {
             let mut issued = 0usize;
             let mut buffered: BTreeMap<usize, Vec<prep::PreparedBatch>> = BTreeMap::new();
             for i in 0..n_iters {
@@ -577,6 +816,32 @@ impl Trainer {
                 m.prep_stall_seconds += t1.elapsed().as_secs_f64();
                 let mut items = buffered.remove(&i).unwrap_or_default();
                 items.sort_by_key(|b| b.tag);
+
+                // transient disk-error injection (`disk:eio@p`): each
+                // batch's read is drawn from a stateless hash of its
+                // logical position, retried with deterministic backoff,
+                // fatal after DISK_RETRY_MAX attempts. Runs at the
+                // barrier in (iter, tag) order so the same plan + seed
+                // retries the same batches on any host.
+                if fault_plan.disk_eio.is_some() {
+                    for b in &items {
+                        let mut attempt = 0u32;
+                        while fault_plan.disk_error(cfg.seed, epoch, i, b.tag, attempt) {
+                            attempt += 1;
+                            m.disk_retries += 1;
+                            anyhow::ensure!(
+                                attempt < fault::DISK_RETRY_MAX,
+                                "disk read failed {} times for epoch {epoch} iteration {i} \
+                                 batch tag {} (--fault-plan disk:eio)",
+                                fault::DISK_RETRY_MAX,
+                                b.tag
+                            );
+                            std::thread::sleep(std::time::Duration::from_micros(
+                                fault::retry_backoff_us(attempt),
+                            ));
+                        }
+                    }
+                }
 
                 // iteration-scoped barrier pass, in (iter, tag) order:
                 // fetch dedup against the epoch snapshot, then feed the
@@ -642,9 +907,11 @@ impl Trainer {
                         b.fpga,
                         WorkItem { params: params.clone(), batch: b.batch, grads, tag: b.tag },
                     )?;
+                    inflight += 1;
                 }
                 let t2 = Instant::now();
                 let mut results = pool.collect(submitted)?;
+                inflight -= results.len();
                 // time blocked at the collect barrier (execute-stall;
                 // sync_seconds below starts a fresh timer, so the two
                 // stages are disjoint — no double counting)
@@ -684,9 +951,22 @@ impl Trainer {
                 }
                 m.iterations += 1;
             }
-            // closing the task channel winds the prep pool down
-            drop(task_tx);
             Ok(())
+            })();
+            // closing the task channel winds the prep pool down — on the
+            // success path and the abort path alike
+            drop(task_tx);
+            if result.is_err() {
+                // mid-epoch abort (injected prep panic, worker error,
+                // exhausted disk retries): drain the prep channel until
+                // every worker has exited and swallow any in-flight
+                // execution results, so the pool the trainer keeps for
+                // the next epoch (or shutdown) is clean — no hang, no
+                // stale results, no leaked carcasses
+                while done_rx.recv().is_ok() {}
+                pool.drain(inflight);
+            }
+            result
         })?;
 
         // epoch barrier: dynamic policies re-rank their resident sets —

@@ -125,6 +125,20 @@ impl WorkerPool {
         Ok(out)
     }
 
+    /// Best-effort barrier for the error path: receive and discard up to
+    /// `n` outstanding results so an aborted epoch never leaves in-flight
+    /// work queued against a pool that the next epoch (or the caller's
+    /// shutdown) will reuse. Unlike [`WorkerPool::collect`] this ignores
+    /// per-item errors and tolerates dead workers — it must never mask
+    /// the error that triggered the abort.
+    pub fn drain(&self, n: usize) {
+        for _ in 0..n {
+            if self.rx.recv().is_err() {
+                break;
+            }
+        }
+    }
+
     /// Stop all workers and join.
     pub fn shutdown(mut self) {
         for tx in &self.txs {

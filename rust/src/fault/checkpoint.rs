@@ -1,0 +1,652 @@
+//! Versioned epoch-boundary checkpoints (`--checkpoint-dir` /
+//! `--resume`; DESIGN.md §Fault tolerance).
+//!
+//! A checkpoint is everything the trainer's epoch loop carries across an
+//! epoch barrier — parameters, SGD momentum, the coordinator RNG
+//! position, feature-store policy state (per-FPGA and DRAM tier),
+//! auto-tuner state, measured-shape accumulators, and the quarantine
+//! mask — snapshotted *at* the barrier, where every one of those is
+//! consistent. Restoring it therefore satisfies the continuation law:
+//! training N epochs straight and training K epochs, resuming, and
+//! training the remaining N−K produce bit-identical loss and traffic
+//! sequences (`tests/pipeline_determinism.rs` pins this).
+//!
+//! ## Format
+//!
+//! Little-endian throughout, in the `.hitg` pack idiom
+//! ([`crate::graph::ondisk`]): magic `HITGNNck` (u64), version (u32),
+//! flags (u32), then length-prefixed sections in a fixed order. Every
+//! read is bounds-checked and the file must be consumed *exactly* —
+//! truncated files, bit-flipped tags, future versions, and trailing
+//! garbage are all clean `Err`s, never a panic or a silent wrong resume.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::sched::SchedMode;
+use crate::store::StoreState;
+use crate::tune::{Knobs, TrialState, TunerState};
+
+/// ASCII "HITGNNck" read as a little-endian u64.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"HITGNNck");
+/// Current checkpoint format version.
+pub const VERSION: u32 = 1;
+
+/// One epoch-barrier snapshot of the trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Config fingerprint — a resume against a different dataset, model,
+    /// fleet size, or seed is rejected with a clean error.
+    pub dataset: String,
+    pub model: String,
+    pub num_fpgas: u32,
+    pub seed: u64,
+    /// First epoch the resumed run executes (epochs 0..epoch_next are
+    /// inside this snapshot).
+    pub epoch_next: u64,
+    /// Coordinator RNG position (`Rng::state`).
+    pub rng: [u64; 4],
+    pub shape_n: f64,
+    pub last_beta: f64,
+    pub disk_miss_frac: f64,
+    pub shape_acc: Vec<f64>,
+    /// Model parameters, per tensor.
+    pub params: Vec<Vec<f32>>,
+    /// SGD momentum, per tensor (same shapes as `params`).
+    pub velocity: Vec<Vec<f32>>,
+    /// Per-FPGA feature-store policy state.
+    pub stores: Vec<StoreState>,
+    /// DRAM-tier policy state (`--dram-ratio < 1` runs only).
+    pub tier: Option<StoreState>,
+    /// Auto-tuner state (`--auto-tune on|freeze` runs only).
+    pub tuner: Option<TunerState>,
+    /// Device quarantine mask (true = lost; survives resume so a dead
+    /// board stays dead).
+    pub quarantined: Vec<bool>,
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn wr_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn wr_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn wr_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn wr_str(out: &mut Vec<u8>, s: &str) {
+    wr_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn wr_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    wr_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn wr_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    wr_u64(out, xs.len() as u64);
+    for &x in xs {
+        wr_u32(out, x);
+    }
+}
+
+fn wr_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    wr_u64(out, xs.len() as u64);
+    for &x in xs {
+        wr_u64(out, x);
+    }
+}
+
+fn wr_store(out: &mut Vec<u8>, s: &StoreState) {
+    match s {
+        StoreState::Static => out.push(0),
+        StoreState::Lfu { capacity, resident, counts } => {
+            out.push(1);
+            wr_u64(out, *capacity);
+            wr_u32s(out, resident);
+            wr_u64s(out, counts);
+        }
+        StoreState::Window { capacity, clock, resident, last_seen } => {
+            out.push(2);
+            wr_u64(out, *capacity);
+            wr_u64(out, *clock);
+            wr_u32s(out, resident);
+            wr_u64s(out, last_seen);
+        }
+    }
+}
+
+fn wr_knobs(out: &mut Vec<u8>, k: &Knobs) {
+    wr_u64(out, k.host_threads as u64);
+    wr_u64(out, k.prefetch_depth as u64);
+    out.push(match k.sched {
+        SchedMode::BatchCount => 0,
+        SchedMode::Cost => 1,
+    });
+    wr_f64(out, k.cache_ratio);
+}
+
+fn wr_tuner(out: &mut Vec<u8>, t: &TunerState) {
+    wr_knobs(out, &t.current);
+    match t.best_score {
+        Some(s) => {
+            out.push(1);
+            wr_f64(out, s);
+        }
+        None => out.push(0),
+    }
+    match &t.trial {
+        Some(tr) => {
+            out.push(1);
+            out.push(tr.axis);
+            out.push(tr.dir as u8);
+            wr_knobs(out, &tr.knobs);
+            wr_str(out, &tr.action);
+        }
+        None => out.push(0),
+    }
+    for axis in &t.blocked {
+        for &b in axis {
+            out.push(b as u8);
+        }
+    }
+    out.push(t.sched_tried as u8);
+}
+
+// ---------------------------------------------------------------------------
+// Decoding (bounds-checked cursor; every failure is a clean error)
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "checkpoint truncated: wanted {n} bytes at offset {}, file has {}",
+            self.pos,
+            self.b.len()
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length prefix for a sequence of `elem` -byte items; rejects
+    /// lengths the remaining file cannot possibly hold (a bit flip in a
+    /// length field must not trigger a huge allocation).
+    fn len(&mut self, elem: usize) -> anyhow::Result<usize> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n.checked_mul(elem).is_some_and(|b| self.pos + b <= self.b.len()),
+            "checkpoint corrupt: sequence length {n} exceeds the remaining file"
+        );
+        Ok(n)
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("checkpoint corrupt: non-utf8 string")
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn u64s(&mut self) -> anyhow::Result<Vec<u64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
+    fn f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn store(&mut self) -> anyhow::Result<StoreState> {
+        match self.u8()? {
+            0 => Ok(StoreState::Static),
+            1 => Ok(StoreState::Lfu {
+                capacity: self.u64()?,
+                resident: self.u32s()?,
+                counts: self.u64s()?,
+            }),
+            2 => {
+                let capacity = self.u64()?;
+                let clock = self.u64()?;
+                Ok(StoreState::Window {
+                    capacity,
+                    clock,
+                    resident: self.u32s()?,
+                    last_seen: self.u64s()?,
+                })
+            }
+            t => anyhow::bail!("checkpoint corrupt: unknown store-state tag {t}"),
+        }
+    }
+
+    fn knobs(&mut self) -> anyhow::Result<Knobs> {
+        let host_threads = self.u64()? as usize;
+        let prefetch_depth = self.u64()? as usize;
+        let sched = match self.u8()? {
+            0 => SchedMode::BatchCount,
+            1 => SchedMode::Cost,
+            t => anyhow::bail!("checkpoint corrupt: unknown sched-mode tag {t}"),
+        };
+        Ok(Knobs { host_threads, prefetch_depth, sched, cache_ratio: self.f64()? })
+    }
+
+    fn tuner(&mut self) -> anyhow::Result<TunerState> {
+        let current = self.knobs()?;
+        let best_score = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            t => anyhow::bail!("checkpoint corrupt: bad best-score tag {t}"),
+        };
+        let trial = match self.u8()? {
+            0 => None,
+            1 => {
+                let axis = self.u8()?;
+                let dir = self.u8()? as i8;
+                let knobs = self.knobs()?;
+                Some(TrialState { axis, dir, knobs, action: self.string()? })
+            }
+            t => anyhow::bail!("checkpoint corrupt: bad trial tag {t}"),
+        };
+        let mut blocked = [[false; 2]; 4];
+        for axis in blocked.iter_mut() {
+            for b in axis.iter_mut() {
+                *b = match self.u8()? {
+                    0 => false,
+                    1 => true,
+                    t => anyhow::bail!("checkpoint corrupt: bad blocked flag {t}"),
+                };
+            }
+        }
+        let sched_tried = self.u8()? != 0;
+        Ok(TunerState { current, best_score, trial, blocked, sched_tried })
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        wr_u64(&mut out, MAGIC);
+        wr_u32(&mut out, VERSION);
+        wr_u32(&mut out, 0); // flags
+        wr_str(&mut out, &self.dataset);
+        wr_str(&mut out, &self.model);
+        wr_u32(&mut out, self.num_fpgas);
+        wr_u64(&mut out, self.seed);
+        wr_u64(&mut out, self.epoch_next);
+        for s in self.rng {
+            wr_u64(&mut out, s);
+        }
+        wr_f64(&mut out, self.shape_n);
+        wr_f64(&mut out, self.last_beta);
+        wr_f64(&mut out, self.disk_miss_frac);
+        wr_u64(&mut out, self.shape_acc.len() as u64);
+        for &x in &self.shape_acc {
+            wr_f64(&mut out, x);
+        }
+        wr_u64(&mut out, self.params.len() as u64);
+        for t in &self.params {
+            wr_f32s(&mut out, t);
+        }
+        wr_u64(&mut out, self.velocity.len() as u64);
+        for t in &self.velocity {
+            wr_f32s(&mut out, t);
+        }
+        wr_u64(&mut out, self.stores.len() as u64);
+        for s in &self.stores {
+            wr_store(&mut out, s);
+        }
+        match &self.tier {
+            Some(s) => {
+                out.push(1);
+                wr_store(&mut out, s);
+            }
+            None => out.push(0),
+        }
+        match &self.tuner {
+            Some(t) => {
+                out.push(1);
+                wr_tuner(&mut out, t);
+            }
+            None => out.push(0),
+        }
+        wr_u64(&mut out, self.quarantined.len() as u64);
+        for &q in &self.quarantined {
+            out.push(q as u8);
+        }
+        out
+    }
+
+    /// Decode and fully validate one checkpoint image.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+        let mut c = Cur { b: bytes, pos: 0 };
+        let magic = c.u64()?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "not a HitGNN checkpoint (bad magic {magic:#018x}, want {MAGIC:#018x})"
+        );
+        let version = c.u32()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads version {VERSION})"
+        );
+        let flags = c.u32()?;
+        anyhow::ensure!(flags == 0, "checkpoint corrupt: nonzero flags {flags:#x}");
+        let dataset = c.string()?;
+        let model = c.string()?;
+        let num_fpgas = c.u32()?;
+        let seed = c.u64()?;
+        let epoch_next = c.u64()?;
+        let rng = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+        let shape_n = c.f64()?;
+        let last_beta = c.f64()?;
+        let disk_miss_frac = c.f64()?;
+        let shape_acc = c.f64s()?;
+        let n_params = c.len(1)?;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(c.f32s()?);
+        }
+        let n_vel = c.len(1)?;
+        let mut velocity = Vec::with_capacity(n_vel);
+        for _ in 0..n_vel {
+            velocity.push(c.f32s()?);
+        }
+        let n_stores = c.len(1)?;
+        let mut stores = Vec::with_capacity(n_stores);
+        for _ in 0..n_stores {
+            stores.push(c.store()?);
+        }
+        let tier = match c.u8()? {
+            0 => None,
+            1 => Some(c.store()?),
+            t => anyhow::bail!("checkpoint corrupt: bad tier tag {t}"),
+        };
+        let tuner = match c.u8()? {
+            0 => None,
+            1 => Some(c.tuner()?),
+            t => anyhow::bail!("checkpoint corrupt: bad tuner tag {t}"),
+        };
+        let n_q = c.len(1)?;
+        let mut quarantined = Vec::with_capacity(n_q);
+        for _ in 0..n_q {
+            quarantined.push(match c.u8()? {
+                0 => false,
+                1 => true,
+                t => anyhow::bail!("checkpoint corrupt: bad quarantine flag {t}"),
+            });
+        }
+        anyhow::ensure!(
+            c.pos == bytes.len(),
+            "checkpoint corrupt: {} trailing bytes after the last section",
+            bytes.len() - c.pos
+        );
+        Ok(Checkpoint {
+            dataset,
+            model,
+            num_fpgas,
+            seed,
+            epoch_next,
+            rng,
+            shape_n,
+            last_beta,
+            disk_miss_frac,
+            shape_acc,
+            params,
+            velocity,
+            stores,
+            tier,
+            tuner,
+            quarantined,
+        })
+    }
+
+    /// Canonical file name for a snapshot taken after `epoch_next - 1`.
+    pub fn file_name(epoch_next: usize) -> String {
+        format!("ckpt-e{epoch_next:05}.hitg")
+    }
+
+    /// Write atomically (temp file + rename) into `dir`.
+    pub fn save(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let path = dir.join(Self::file_name(self.epoch_next as usize));
+        let tmp = dir.join(format!(".{}.tmp", Self::file_name(self.epoch_next as usize)));
+        std::fs::write(&tmp, self.encode())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing checkpoint {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load from a checkpoint file, or — when `path` is a directory —
+    /// from the newest (highest `epoch_next`) checkpoint inside it.
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let file = if path.is_dir() { latest_in_dir(path)? } else { path.to_path_buf() };
+        let bytes = std::fs::read(&file)
+            .with_context(|| format!("reading checkpoint {}", file.display()))?;
+        Checkpoint::decode(&bytes).with_context(|| format!("decoding {}", file.display()))
+    }
+}
+
+/// The newest checkpoint file in `dir` (by embedded epoch number in the
+/// canonical name, falling back to lexicographic order which matches the
+/// zero-padded scheme).
+pub fn latest_in_dir(dir: &Path) -> anyhow::Result<PathBuf> {
+    let mut best: Option<PathBuf> = None;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?
+    {
+        let p = entry?.path();
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("ckpt-e") && name.ends_with(".hitg") {
+            if best.as_ref().is_none_or(|b| p.file_name() > b.file_name()) {
+                best = Some(p);
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!("no checkpoint (ckpt-e*.hitg) found in {}", dir.display())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            dataset: "tiny".into(),
+            model: "gcn".into(),
+            num_fpgas: 2,
+            seed: 33,
+            epoch_next: 4,
+            rng: [1, 2, 3, 4],
+            shape_n: 16.0,
+            last_beta: 0.8125,
+            disk_miss_frac: 0.25,
+            shape_acc: vec![5.0, 4.0, 3.0, 2.0, 1.0],
+            params: vec![vec![0.5f32; 6], vec![-1.25f32; 3]],
+            velocity: vec![vec![0.125f32; 6], vec![0.0f32; 3]],
+            stores: vec![
+                StoreState::Static,
+                StoreState::Lfu { capacity: 8, resident: vec![0, 3, 5], counts: vec![1, 0, 7, 2] },
+            ],
+            tier: Some(StoreState::Window {
+                capacity: 4,
+                clock: 99,
+                resident: vec![1, 2],
+                last_seen: vec![9, 8, 7],
+            }),
+            tuner: Some(TunerState {
+                current: Knobs {
+                    host_threads: 2,
+                    prefetch_depth: 3,
+                    sched: SchedMode::Cost,
+                    cache_ratio: 0.25,
+                },
+                best_score: Some(1.5),
+                trial: Some(TrialState {
+                    axis: 1,
+                    dir: -1,
+                    knobs: Knobs {
+                        host_threads: 2,
+                        prefetch_depth: 2,
+                        sched: SchedMode::Cost,
+                        cache_ratio: 0.25,
+                    },
+                    action: "prefetch_depth 3 -> 2".into(),
+                }),
+                blocked: [[false, true], [false; 2], [true, false], [false; 2]],
+                sched_tried: true,
+            }),
+            quarantined: vec![false, true],
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly() {
+        let ck = sample();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // minimal variant (no tier/tuner, static stores) also roundtrips
+        let min = Checkpoint {
+            tier: None,
+            tuner: None,
+            stores: vec![StoreState::Static; 2],
+            ..ck
+        };
+        assert_eq!(Checkpoint::decode(&min.encode()).unwrap(), min);
+    }
+
+    #[test]
+    fn truncation_at_every_cut_is_a_clean_error() {
+        let bytes = sample().encode();
+        // every strict prefix must fail with Err — never panic, never Ok
+        for cut in 0..bytes.len() {
+            let r = Checkpoint::decode(&bytes[..cut]);
+            assert!(r.is_err(), "decode of {cut}-byte prefix unexpectedly succeeded");
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_trailing_garbage_are_rejected() {
+        let ck = sample();
+        let good = ck.encode();
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut future = good.clone();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Checkpoint::decode(&future).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0u8; 3]);
+        let err = Checkpoint::decode(&trailing).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn bit_flips_in_tags_and_lengths_are_clean_errors() {
+        let bytes = sample().encode();
+        // flip one bit at a time across the whole image: decode must
+        // never panic, and when it "succeeds" it must not equal the
+        // original only by accident of the flipped field (we only assert
+        // no panic + Err or changed value)
+        let orig = Checkpoint::decode(&bytes).unwrap();
+        for i in (0..bytes.len()).step_by(7) {
+            let mut b = bytes.clone();
+            b[i] ^= 0x10;
+            match Checkpoint::decode(&b) {
+                Err(_) => {}
+                Ok(ck) => assert!(ck != orig || b == bytes, "flip at {i} was silently absorbed"),
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_and_latest_selection() {
+        let dir = std::env::temp_dir().join(format!("hitgnn-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut ck = sample();
+        ck.epoch_next = 1;
+        ck.save(&dir).unwrap();
+        ck.epoch_next = 3;
+        let p3 = ck.save(&dir).unwrap();
+        assert!(p3.ends_with("ckpt-e00003.hitg"));
+        // dir resolution picks the newest
+        let loaded = Checkpoint::load(&dir).unwrap();
+        assert_eq!(loaded.epoch_next, 3);
+        // explicit file path works too
+        assert_eq!(Checkpoint::load(&p3).unwrap(), loaded);
+        // empty dir is a clean error
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(Checkpoint::load(&empty).unwrap_err().to_string().contains("no checkpoint"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

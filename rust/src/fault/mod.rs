@@ -1,0 +1,405 @@
+//! Deterministic fault injection and the fault-tolerant fleet runtime
+//! (DESIGN.md §Fault tolerance).
+//!
+//! Long multi-FPGA training runs fail in practice: a board drops off the
+//! PCIe bus, a shared-link neighbour turns a device into a straggler, an
+//! out-of-core read hits a transient I/O error, a host prep thread dies.
+//! This module gives the coordinator a *deterministic* model of those
+//! events so the degradation machinery (scheduler quarantine, bounded
+//! disk retry, error-path drain, checkpoint/resume) can be tested
+//! bit-for-bit:
+//!
+//! - [`FaultPlan`] parses `--fault-plan` specs like
+//!   `dev1:fail@e2i7,dev3:slow*4@e1,disk:eio@0.01,prep:panic@e3i2` into a
+//!   schedule keyed on **logical positions** — (epoch, iteration)
+//!   anchors, never wall-clock — so the same plan and seed reproduce the
+//!   same faulted run on any host.
+//! - Device failures are applied at *planning time*: the whole epoch's
+//!   iteration schedule is materialised up front
+//!   (`prep::plan_epoch_tasks`), so quarantining a device mid-plan
+//!   deterministically reroutes its remaining (part, seq) work to
+//!   survivors while every batch still trains exactly once.
+//! - Straggler slowdowns only re-price the scheduler's per-device
+//!   [`CostModel`](crate::sched::CostModel) — `--sched cost` then
+//!   visibly routes extras around the slow device, while the loss
+//!   sequence (a function of the partition stream alone) is untouched.
+//! - Transient disk errors are drawn by a stateless hash of
+//!   (seed, epoch, iter, tag, attempt) — no RNG stream is consumed, so
+//!   injecting faults cannot shift the sampling sequence of a run.
+
+pub mod checkpoint;
+
+use crate::util::rng::hash64;
+
+/// A logical schedule position: fire *before* iteration `iter` of epoch
+/// `epoch` (0-based, matching `EpochMetrics::epoch` and the planner's
+/// iteration index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Anchor {
+    pub epoch: usize,
+    pub iter: usize,
+}
+
+impl std::fmt::Display for Anchor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}i{}", self.epoch, self.iter)
+    }
+}
+
+/// `devN:fail@eEiI` — device N is lost for the rest of the run, starting
+/// at the anchor (it executes no batch of iteration I or later).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeviceFailure {
+    pub dev: usize,
+    pub at: Anchor,
+}
+
+/// `devN:slow*M@eE` — device N runs M× slower from epoch E onward.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slowdown {
+    pub dev: usize,
+    pub mult: f64,
+    pub from_epoch: usize,
+}
+
+/// A parsed `--fault-plan`: the full deterministic fault schedule of a
+/// run. Parsing rejects malformed tokens by name; [`FaultPlan::validate`]
+/// additionally pins device ids and epoch anchors to the live fleet and
+/// run length once those are known.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The original spec text (config echo / report round-trip).
+    pub spec: String,
+    pub failures: Vec<DeviceFailure>,
+    pub slowdowns: Vec<Slowdown>,
+    /// `disk:eio@p` — probability a batch's disk read fails transiently.
+    pub disk_eio: Option<f64>,
+    /// `prep:panic@eEiI` — a prep worker panics preparing that iteration.
+    pub prep_panics: Vec<Anchor>,
+}
+
+/// Parse `"e<digits>i<digits>"` (a full anchor).
+fn parse_anchor(s: &str, tok: &str) -> anyhow::Result<Anchor> {
+    let rest = s
+        .strip_prefix('e')
+        .ok_or_else(|| anyhow::anyhow!("bad fault token '{tok}': anchor '{s}' must be eEiI"))?;
+    let (e, i) = rest
+        .split_once('i')
+        .ok_or_else(|| anyhow::anyhow!("bad fault token '{tok}': anchor '{s}' must be eEiI"))?;
+    let epoch = e
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad fault token '{tok}': epoch '{e}' is not a number"))?;
+    let iter = i
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad fault token '{tok}': iteration '{i}' is not a number"))?;
+    Ok(Anchor { epoch, iter })
+}
+
+/// Parse `"e<digits>"` (an epoch-only anchor).
+fn parse_epoch(s: &str, tok: &str) -> anyhow::Result<usize> {
+    s.strip_prefix('e')
+        .and_then(|e| e.parse::<usize>().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad fault token '{tok}': anchor '{s}' must be eE"))
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault spec. Grammar per token:
+    /// `devN:fail@eEiI` | `devN:slow*M@eE` | `disk:eio@P` |
+    /// `prep:panic@eEiI`. Every rejection names the offending token.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan { spec: spec.trim().to_string(), ..FaultPlan::default() };
+        if plan.spec.is_empty() {
+            return Ok(plan);
+        }
+        for tok in plan.spec.split(',') {
+            let tok = tok.trim();
+            if let Some(rest) = tok.strip_prefix("dev") {
+                let (id, action) = rest.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("bad fault token '{tok}': expected devN:fail@… or devN:slow*M@…")
+                })?;
+                let dev = id.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("bad fault token '{tok}': device id '{id}' is not a number")
+                })?;
+                if let Some(anchor) = action.strip_prefix("fail@") {
+                    let at = parse_anchor(anchor, tok)?;
+                    anyhow::ensure!(
+                        !plan.failures.iter().any(|f| f.dev == dev),
+                        "bad fault token '{tok}': device {dev} already has a failure"
+                    );
+                    plan.failures.push(DeviceFailure { dev, at });
+                } else if let Some(rest) = action.strip_prefix("slow*") {
+                    let (m, anchor) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("bad fault token '{tok}': expected slow*M@eE")
+                    })?;
+                    let mult = m.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("bad fault token '{tok}': multiplier '{m}' is not a number")
+                    })?;
+                    anyhow::ensure!(
+                        mult.is_finite() && mult >= 1.0,
+                        "bad fault token '{tok}': slowdown multiplier must be a finite number >= 1"
+                    );
+                    let from_epoch = parse_epoch(anchor, tok)?;
+                    plan.slowdowns.push(Slowdown { dev, mult, from_epoch });
+                } else {
+                    anyhow::bail!(
+                        "bad fault token '{tok}': unknown device action (fail@eEiI|slow*M@eE)"
+                    );
+                }
+            } else if let Some(rest) = tok.strip_prefix("disk:eio@") {
+                let p = rest.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("bad fault token '{tok}': probability '{rest}' is not a number")
+                })?;
+                anyhow::ensure!(
+                    p.is_finite() && (0.0..=1.0).contains(&p),
+                    "bad fault token '{tok}': probability must be in [0, 1]"
+                );
+                anyhow::ensure!(
+                    plan.disk_eio.is_none(),
+                    "bad fault token '{tok}': disk:eio given twice"
+                );
+                plan.disk_eio = Some(p);
+            } else if let Some(anchor) = tok.strip_prefix("prep:panic@") {
+                plan.prep_panics.push(parse_anchor(anchor, tok)?);
+            } else if tok.is_empty() {
+                anyhow::bail!("bad fault token '' (empty entry in fault plan '{spec}')");
+            } else {
+                anyhow::bail!(
+                    "bad fault token '{tok}': expected devN:fail@eEiI, devN:slow*M@eE, \
+                     disk:eio@p, or prep:panic@eEiI"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.failures.is_empty()
+            && self.slowdowns.is_empty()
+            && self.disk_eio.is_none()
+            && self.prep_panics.is_empty()
+    }
+
+    /// Pin the plan against the live run: device ids must name fleet
+    /// members and epoch anchors must fall inside the run. (Iteration
+    /// anchors are checked per epoch by the planner, which is the first
+    /// place the iteration count exists.)
+    pub fn validate(&self, num_fpgas: usize, epochs: usize) -> anyhow::Result<()> {
+        for f in &self.failures {
+            anyhow::ensure!(
+                f.dev < num_fpgas,
+                "fault plan names dev{} but the fleet has {num_fpgas} devices (dev0..dev{})",
+                f.dev,
+                num_fpgas - 1
+            );
+            anyhow::ensure!(
+                f.at.epoch < epochs,
+                "fault plan anchor {} is out of range: the run has {epochs} epochs",
+                f.at
+            );
+        }
+        anyhow::ensure!(
+            self.failures.len() < num_fpgas,
+            "fault plan kills all {num_fpgas} devices — no survivors to finish an epoch"
+        );
+        for s in &self.slowdowns {
+            anyhow::ensure!(
+                s.dev < num_fpgas,
+                "fault plan names dev{} but the fleet has {num_fpgas} devices (dev0..dev{})",
+                s.dev,
+                num_fpgas - 1
+            );
+            anyhow::ensure!(
+                s.from_epoch < epochs,
+                "fault plan slowdown anchor e{} is out of range: the run has {epochs} epochs",
+                s.from_epoch
+            );
+        }
+        for a in &self.prep_panics {
+            anyhow::ensure!(
+                a.epoch < epochs,
+                "fault plan anchor {a} is out of range: the run has {epochs} epochs"
+            );
+        }
+        Ok(())
+    }
+
+    /// Devices whose failure anchor lies in an epoch *before* `epoch` —
+    /// already dead when this epoch starts (used to rebuild the
+    /// quarantine set on resume).
+    pub fn failed_before(&self, epoch: usize) -> Vec<usize> {
+        let mut devs: Vec<usize> =
+            self.failures.iter().filter(|f| f.at.epoch < epoch).map(|f| f.dev).collect();
+        devs.sort_unstable();
+        devs
+    }
+
+    /// Failures anchored inside `epoch`, as (iteration, device) sorted by
+    /// iteration — the planner consumes these in order.
+    pub fn failures_in_epoch(&self, epoch: usize) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .failures
+            .iter()
+            .filter(|f| f.at.epoch == epoch)
+            .map(|f| (f.at.iter, f.dev))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Combined straggler multiplier for `dev` during `epoch` (product of
+    /// all slowdowns whose anchor epoch has passed; 1.0 when healthy).
+    pub fn slow_multiplier(&self, dev: usize, epoch: usize) -> f64 {
+        self.slowdowns
+            .iter()
+            .filter(|s| s.dev == dev && s.from_epoch <= epoch)
+            .map(|s| s.mult)
+            .product()
+    }
+
+    /// Iterations of `epoch` whose preparation must panic (sorted).
+    pub fn prep_panics_in_epoch(&self, epoch: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .prep_panics
+            .iter()
+            .filter(|a| a.epoch == epoch)
+            .map(|a| a.iter)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Deterministic transient-disk-error draw for one (batch, attempt):
+    /// a stateless hash of the run seed and the batch's logical position,
+    /// compared against the plan's `disk:eio` probability. Consumes no
+    /// RNG stream, so a faulted run samples identically to a healthy one.
+    pub fn disk_error(&self, seed: u64, epoch: usize, iter: usize, tag: usize, attempt: u32) -> bool {
+        let Some(p) = self.disk_eio else {
+            return false;
+        };
+        if p <= 0.0 {
+            return false;
+        }
+        let mut x = seed ^ 0x6469_736b_5f65_696f; // "disk_eio"
+        for v in [epoch as u64, iter as u64, tag as u64, attempt as u64] {
+            x = hash64(x ^ hash64(v));
+        }
+        let u = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < p
+    }
+}
+
+/// Bounded-retry policy for transient disk errors: a read that keeps
+/// failing after [`DISK_RETRY_MAX`] attempts is a fatal, clean error.
+pub const DISK_RETRY_MAX: u32 = 5;
+
+/// Deterministic backoff before retry `attempt` (1-based), in
+/// microseconds: 50µs · 2^(attempt-1), capped at 1ms. Real time is spent
+/// (the wall-clock metrics see it) but nothing downstream keys on it.
+pub fn retry_backoff_us(attempt: u32) -> u64 {
+    (50u64 << (attempt - 1).min(10)).min(1_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p =
+            FaultPlan::parse("dev1:fail@e2i7, dev3:slow*4@e1, disk:eio@0.01, prep:panic@e3i2")
+                .unwrap();
+        assert_eq!(p.failures, vec![DeviceFailure { dev: 1, at: Anchor { epoch: 2, iter: 7 } }]);
+        assert_eq!(p.slowdowns, vec![Slowdown { dev: 3, mult: 4.0, from_epoch: 1 }]);
+        assert_eq!(p.disk_eio, Some(0.01));
+        assert_eq!(p.prep_panics, vec![Anchor { epoch: 3, iter: 2 }]);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejections_name_the_bad_token() {
+        for (spec, needle) in [
+            ("devx:fail@e1i0", "'devx:fail@e1i0'"),
+            ("dev0:explode@e1i0", "unknown device action"),
+            ("dev0:fail@e1", "must be eEiI"),
+            ("dev0:fail@i1e1", "must be eEiI"),
+            ("dev0:slow*abc@e1", "not a number"),
+            ("dev0:slow*0.5@e1", ">= 1"),
+            ("dev0:slow*4@i3", "must be eE"),
+            ("disk:eio@1.5", "in [0, 1]"),
+            ("disk:eio@nan", "in [0, 1]"),
+            ("disk:eio@0.1,disk:eio@0.2", "twice"),
+            ("prep:panic@e1", "must be eEiI"),
+            ("gpu0:fail@e1i0", "expected devN:fail@eEiI"),
+            ("dev0:fail@e1i1,,disk:eio@0.1", "empty entry"),
+            ("dev2:fail@e0i0,dev2:fail@e1i0", "already has a failure"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "spec '{spec}': error '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn validate_pins_fleet_and_run_bounds() {
+        let p = FaultPlan::parse("dev3:fail@e1i0").unwrap();
+        assert!(p.validate(4, 2).is_ok());
+        let err = p.validate(2, 2).unwrap_err().to_string();
+        assert!(err.contains("dev3") && err.contains("2 devices"), "{err}");
+        let err = p.validate(4, 1).unwrap_err().to_string();
+        assert!(err.contains("e1i0") && err.contains("1 epochs"), "{err}");
+        let slow = FaultPlan::parse("dev9:slow*2@e0").unwrap();
+        assert!(slow.validate(2, 1).unwrap_err().to_string().contains("dev9"));
+        let panic = FaultPlan::parse("prep:panic@e5i0").unwrap();
+        assert!(panic.validate(2, 2).unwrap_err().to_string().contains("e5i0"));
+        // killing the whole fleet is rejected up front
+        let all = FaultPlan::parse("dev0:fail@e0i0,dev1:fail@e0i1").unwrap();
+        assert!(all.validate(2, 2).unwrap_err().to_string().contains("no survivors"));
+    }
+
+    #[test]
+    fn epoch_queries_partition_the_schedule() {
+        let p = FaultPlan::parse("dev1:fail@e2i7,dev0:fail@e2i3,dev2:fail@e0i1").unwrap();
+        assert_eq!(p.failures_in_epoch(2), vec![(3, 0), (7, 1)]);
+        assert_eq!(p.failures_in_epoch(1), vec![]);
+        assert_eq!(p.failed_before(0), vec![]);
+        assert_eq!(p.failed_before(1), vec![2]);
+        assert_eq!(p.failed_before(3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn slow_multipliers_compound_from_their_epoch() {
+        let p = FaultPlan::parse("dev1:slow*4@e1,dev1:slow*2@e3,dev0:slow*3@e0").unwrap();
+        assert_eq!(p.slow_multiplier(1, 0), 1.0);
+        assert_eq!(p.slow_multiplier(1, 1), 4.0);
+        assert_eq!(p.slow_multiplier(1, 3), 8.0);
+        assert_eq!(p.slow_multiplier(0, 5), 3.0);
+        assert_eq!(p.slow_multiplier(2, 5), 1.0);
+    }
+
+    #[test]
+    fn disk_draw_is_deterministic_and_calibrated() {
+        let p = FaultPlan::parse("disk:eio@0.1").unwrap();
+        let mut hits = 0;
+        for i in 0..10_000 {
+            let a = p.disk_error(42, 1, i, 0, 0);
+            let b = p.disk_error(42, 1, i, 0, 0);
+            assert_eq!(a, b, "draw must be a pure function of its position");
+            if a {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / 10_000.0;
+        assert!((rate - 0.1).abs() < 0.02, "rate={rate}");
+        // attempt index decorrelates retries; seed decorrelates runs
+        assert!((0..64).any(|att| !p.disk_error(42, 0, 0, 0, att)));
+        let healthy = FaultPlan::parse("dev0:fail@e0i0").unwrap();
+        assert!(!healthy.disk_error(42, 0, 0, 0, 0));
+    }
+
+    #[test]
+    fn backoff_is_bounded() {
+        assert_eq!(retry_backoff_us(1), 50);
+        assert_eq!(retry_backoff_us(2), 100);
+        assert!(retry_backoff_us(40) <= 1_000);
+    }
+}

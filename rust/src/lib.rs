@@ -22,6 +22,7 @@ pub mod api;
 pub mod comm;
 pub mod coordinator;
 pub mod dse;
+pub mod fault;
 pub mod fpga;
 pub mod graph;
 pub mod partition;

@@ -161,12 +161,18 @@ pub struct TwoStageScheduler {
     /// `Some` → stage-2 extras use least-estimated-finish-time
     /// assignment; `None` → Algorithm 3's batch-count balancing.
     cost: Option<CostModel>,
+    /// Quarantine mask (DESIGN.md §Fault tolerance): `alive[i] == false`
+    /// means FPGA *i* is lost and receives no further tasks; its
+    /// partition's remaining batches drain through the stage-2 extra
+    /// stream to survivors. All-alive plans are bit-identical to the
+    /// pre-quarantine scheduler.
+    alive: Vec<bool>,
 }
 
 impl TwoStageScheduler {
     pub fn new(p: usize, workload_balancing: bool) -> TwoStageScheduler {
         assert!(p >= 1);
-        TwoStageScheduler { p, workload_balancing, cursor: 0, cost: None }
+        TwoStageScheduler { p, workload_balancing, cursor: 0, cost: None, alive: vec![true; p] }
     }
 
     /// Cost-aware scheduler ([`SchedMode::Cost`]); `cost` must have one
@@ -174,7 +180,41 @@ impl TwoStageScheduler {
     pub fn with_cost(p: usize, workload_balancing: bool, cost: CostModel) -> TwoStageScheduler {
         assert!(p >= 1);
         assert_eq!(cost.len(), p, "cost model must have one entry per FPGA");
-        TwoStageScheduler { p, workload_balancing, cursor: 0, cost: Some(cost) }
+        TwoStageScheduler {
+            p,
+            workload_balancing,
+            cursor: 0,
+            cost: Some(cost),
+            alive: vec![true; p],
+        }
+    }
+
+    /// Remove a failed device from the fleet: it receives no task from
+    /// any later `plan_iteration` call. Fails cleanly if the device id is
+    /// out of range or the quarantine would leave no survivors.
+    pub fn quarantine(&mut self, dev: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dev < self.p,
+            "cannot quarantine dev{dev}: the fleet has {} devices",
+            self.p
+        );
+        self.alive[dev] = false;
+        anyhow::ensure!(
+            self.alive.iter().any(|&a| a),
+            "all {} devices quarantined — no survivors left to run the fleet",
+            self.p
+        );
+        Ok(())
+    }
+
+    /// The quarantine mask (one flag per FPGA).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Devices still in the fleet.
+    pub fn num_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
     }
 
     /// Build for a mode (uniform-cost reference when `Cost` is requested
@@ -218,8 +258,9 @@ impl TwoStageScheduler {
         }
         let mut rem = remaining.to_vec();
         let mut tasks = Vec::with_capacity(self.p);
+        let all_alive = self.alive.iter().all(|&a| a);
 
-        if rem.iter().all(|&r| r > 0) {
+        if all_alive && rem.iter().all(|&r| r > 0) {
             // Stage 1: everyone samples its own partition.
             for i in 0..self.p {
                 tasks.push(Task { part: i, fpga: i });
@@ -228,13 +269,16 @@ impl TwoStageScheduler {
         }
 
         // Stage 2. Partitions with batches / idle FPGAs (Algorithm 3
-        // lines 11–17).
-        let idle: Vec<usize> = (0..self.p).filter(|&i| rem[i] == 0).collect();
+        // lines 11–17). A quarantined FPGA is never idle-available; its
+        // partition's batches reach survivors only through the extra
+        // stream below.
+        let idle: Vec<usize> =
+            (0..self.p).filter(|&i| self.alive[i] && rem[i] == 0).collect();
 
-        // Non-idle FPGAs take their own partition's next batch (lines
-        // 18–22 distribute to avail FPGAs).
+        // Surviving non-idle FPGAs take their own partition's next batch
+        // (lines 18–22 distribute to avail FPGAs).
         for i in 0..self.p {
-            if rem[i] > 0 {
+            if self.alive[i] && rem[i] > 0 {
                 tasks.push(Task { part: i, fpga: i });
                 rem[i] -= 1;
             }
@@ -251,29 +295,45 @@ impl TwoStageScheduler {
             extras.push(j);
         }
         if !self.workload_balancing {
-            // baseline: every batch stays on its own partition's FPGA
+            // baseline: every batch stays on its own partition's FPGA —
+            // unless that FPGA is quarantined, in which case the batch
+            // falls back to WB-style assignment (idle survivors in index
+            // order) so device loss never strands work.
+            let mut idle_it = idle.iter();
             for &j in &extras {
-                tasks.push(Task { part: j, fpga: j });
+                let fpga = if self.alive[j] {
+                    j
+                } else {
+                    idle_it
+                        .next()
+                        .copied()
+                        .unwrap_or_else(|| self.alive.iter().position(|&a| a).unwrap())
+                };
+                tasks.push(Task { part: j, fpga });
             }
         } else if let Some(cost) = &self.cost {
-            // cost-aware WB: least-estimated-finish-time over *all* FPGAs
-            // (an extra may stack on a fast busy device or leave a slow
-            // idle one empty); ties break toward the lowest index, which
-            // reproduces batch-count assignment on uniform costs.
+            // cost-aware WB: least-estimated-finish-time over surviving
+            // FPGAs (an extra may stack on a fast busy device or leave a
+            // slow idle one empty); ties break toward the lowest index,
+            // which reproduces batch-count assignment on uniform costs.
             let mut load = vec![0.0f64; self.p];
             for t in &tasks {
                 load[t.fpga] += cost.batch_s[t.fpga];
             }
             for &j in &extras {
-                let mut best = 0usize;
+                let mut best = usize::MAX;
                 let mut best_finish = f64::INFINITY;
                 for (f, &l) in load.iter().enumerate() {
+                    if !self.alive[f] {
+                        continue;
+                    }
                     let finish = l + cost.batch_s[f];
                     if finish < best_finish {
                         best = f;
                         best_finish = finish;
                     }
                 }
+                debug_assert!(best != usize::MAX, "quarantine never leaves zero survivors");
                 load[best] += cost.batch_s[best];
                 tasks.push(Task { part: j, fpga: best });
             }
@@ -543,6 +603,83 @@ mod tests {
         assert_eq!(counts[3], 0, "slow idle device stays empty: {counts:?}");
         assert_eq!(counts.iter().sum::<usize>(), 4);
         assert!((plan.makespan_seconds(&cost) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quarantined_device_gets_no_tasks_and_nothing_is_lost() {
+        let counts = [7usize, 3, 5, 1];
+        for wb in [true, false] {
+            for cost in [None, Some(CostModel::new(vec![1.0, 2.0, 1.0, 1.5]))] {
+                let mut s = match &cost {
+                    Some(c) => TwoStageScheduler::with_cost(4, wb, c.clone()),
+                    None => TwoStageScheduler::new(4, wb),
+                };
+                s.quarantine(1).unwrap();
+                let plans = s.plan_epoch(&counts);
+                let mut consumed = vec![0usize; 4];
+                for pl in &plans {
+                    for t in &pl.tasks {
+                        assert_ne!(t.fpga, 1, "dead device received a task (wb={wb})");
+                        consumed[t.part] += 1;
+                    }
+                }
+                assert_eq!(consumed, counts.to_vec(), "wb={wb} cost={}", cost.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_mid_epoch_reroutes_only_the_remainder() {
+        // plan 2 healthy iterations, quarantine dev 0, drain the rest —
+        // every batch still trains exactly once and the post-fault tasks
+        // avoid the dead device
+        let counts = [6usize, 4, 4];
+        let mut s = TwoStageScheduler::new(3, true);
+        let mut rem = counts.to_vec();
+        let mut consumed = vec![0usize; 3];
+        for _ in 0..2 {
+            let pl = s.plan_iteration_consuming(&mut rem).unwrap();
+            for t in &pl.tasks {
+                consumed[t.part] += 1;
+            }
+        }
+        s.quarantine(0).unwrap();
+        let mut reassigned = 0;
+        while let Some(pl) = s.plan_iteration_consuming(&mut rem) {
+            for t in &pl.tasks {
+                assert_ne!(t.fpga, 0);
+                if t.part == 0 {
+                    reassigned += 1;
+                }
+                consumed[t.part] += 1;
+            }
+        }
+        assert_eq!(consumed, counts.to_vec());
+        assert_eq!(reassigned, 4, "dev0's remaining home batches drain to survivors");
+    }
+
+    #[test]
+    fn quarantining_the_last_survivor_is_an_error() {
+        let mut s = TwoStageScheduler::new(2, true);
+        s.quarantine(0).unwrap();
+        assert_eq!(s.num_alive(), 1);
+        let err = s.quarantine(1).unwrap_err().to_string();
+        assert!(err.contains("no survivors"), "{err}");
+        assert!(s.quarantine(7).is_err(), "out-of-range device id is rejected");
+    }
+
+    #[test]
+    fn cost_mode_routes_around_a_quarantined_fast_device() {
+        // the fastest device dies: extras must go to the best *survivor*
+        let cost = CostModel::new(vec![1.0, 0.1, 3.0]);
+        let mut s = TwoStageScheduler::with_cost(3, true, cost);
+        s.quarantine(1).unwrap();
+        let plans = s.plan_epoch(&[2, 2, 2]);
+        for pl in &plans {
+            for t in &pl.tasks {
+                assert_ne!(t.fpga, 1);
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! the update is a strict-total-order top-k selection, so `end_epoch` is
 //! deterministic regardless of selection internals.
 
-use super::{CachePolicy, FeatureStore, Residency, Rows};
+use super::{CachePolicy, FeatureStore, Residency, Rows, StoreState};
 use crate::graph::Dataset;
 use crate::util::bitset::Bitset;
 
@@ -60,6 +60,29 @@ where
         bits.set(v as usize);
     }
     bits
+}
+
+/// Resident vertex ids of a store's residency (checkpoint snapshot;
+/// dynamic stores are always capacity-bounded subsets).
+fn resident_ids(res: &Residency, n: usize) -> Vec<u32> {
+    match &res.rows {
+        Rows::Subset(b) => b.iter_ones().map(|v| v as u32).collect(),
+        Rows::All => (0..n as u32).collect(),
+    }
+}
+
+/// Rebuild a residency membership bitmap from checkpointed vertex ids,
+/// rejecting out-of-range ids (corrupt or mismatched checkpoint).
+fn rows_from_ids(n: usize, ids: &[u32]) -> anyhow::Result<Bitset> {
+    let mut bits = Bitset::new(n);
+    for &v in ids {
+        anyhow::ensure!(
+            (v as usize) < n,
+            "checkpoint resident vertex id {v} out of range (|V| = {n})"
+        );
+        bits.set(v as usize);
+    }
+    Ok(bits)
 }
 
 /// Build a capacity-bounded store for `policy`, inheriting the dim range
@@ -160,6 +183,34 @@ impl FeatureStore for LfuStore {
         }
         true
     }
+
+    fn export_state(&self) -> StoreState {
+        StoreState::Lfu {
+            capacity: self.capacity as u64,
+            resident: resident_ids(&self.residency, self.counts.len()),
+            counts: self.counts.clone(),
+        }
+    }
+
+    fn import_state(&mut self, state: &StoreState) -> anyhow::Result<()> {
+        let StoreState::Lfu { capacity, resident, counts } = state else {
+            anyhow::bail!(
+                "checkpoint store state is {} but the live store is lfu",
+                state.policy().name()
+            );
+        };
+        let n = self.counts.len();
+        anyhow::ensure!(
+            counts.len() == n,
+            "checkpoint lfu state covers {} vertices, store has {n}",
+            counts.len()
+        );
+        self.capacity = (*capacity as usize).min(n);
+        self.counts.copy_from_slice(counts);
+        self.residency.rows = Rows::Subset(rows_from_ids(n, resident)?);
+        self.dirty = false;
+        Ok(())
+    }
 }
 
 /// Sliding-window recency cache: a global access clock stamps every
@@ -229,6 +280,36 @@ impl FeatureStore for WindowStore {
             self.residency.rows = Rows::Subset(selected);
         }
         true
+    }
+
+    fn export_state(&self) -> StoreState {
+        StoreState::Window {
+            capacity: self.capacity as u64,
+            clock: self.clock,
+            resident: resident_ids(&self.residency, self.last_seen.len()),
+            last_seen: self.last_seen.clone(),
+        }
+    }
+
+    fn import_state(&mut self, state: &StoreState) -> anyhow::Result<()> {
+        let StoreState::Window { capacity, clock, resident, last_seen } = state else {
+            anyhow::bail!(
+                "checkpoint store state is {} but the live store is window",
+                state.policy().name()
+            );
+        };
+        let n = self.last_seen.len();
+        anyhow::ensure!(
+            last_seen.len() == n,
+            "checkpoint window state covers {} vertices, store has {n}",
+            last_seen.len()
+        );
+        self.capacity = (*capacity as usize).min(n);
+        self.clock = *clock;
+        self.last_seen.copy_from_slice(last_seen);
+        self.residency.rows = Rows::Subset(rows_from_ids(n, resident)?);
+        self.dirty = false;
+        Ok(())
     }
 }
 

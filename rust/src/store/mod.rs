@@ -75,6 +75,35 @@ impl CachePolicy {
         [CachePolicy::Static, CachePolicy::Lfu, CachePolicy::Window];
 }
 
+/// Serializable policy state of one feature store (checkpoint/resume —
+/// DESIGN.md §Fault tolerance).
+///
+/// Static stores carry no state: their residency is derived
+/// deterministically at preprocess time, so a resumed run rebuilds it
+/// bit-identically for free. Dynamic stores snapshot their resident set
+/// plus the policy accumulator (counts / recency stamps), so a resumed
+/// run observes and re-ranks exactly as the straight run would.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreState {
+    /// No state to carry (static policies).
+    Static,
+    /// LFU: capacity, resident vertex ids, per-vertex access counts.
+    Lfu { capacity: u64, resident: Vec<u32>, counts: Vec<u64> },
+    /// Window: capacity, global clock, resident ids, last-seen stamps.
+    Window { capacity: u64, clock: u64, resident: Vec<u32>, last_seen: Vec<u64> },
+}
+
+impl StoreState {
+    /// The policy this state belongs to (checkpoint validation).
+    pub fn policy(&self) -> CachePolicy {
+        match self {
+            StoreState::Static => CachePolicy::Static,
+            StoreState::Lfu { .. } => CachePolicy::Lfu,
+            StoreState::Window { .. } => CachePolicy::Window,
+        }
+    }
+}
+
 /// One FPGA's pluggable feature store: the residency snapshot the comm
 /// layer reads plus the policy's deterministic update hooks.
 ///
@@ -113,6 +142,26 @@ pub trait FeatureStore: Send + Sync {
     /// algorithm's Table-1 residency is not a tunable cache) refuse it.
     fn set_capacity(&mut self, _rows: usize) -> bool {
         false
+    }
+
+    /// Snapshot the policy state for a checkpoint. Call only at the
+    /// epoch barrier (after `end_epoch`), where the resident set and the
+    /// accumulators are consistent. Default: stateless (static stores).
+    fn export_state(&self) -> StoreState {
+        StoreState::Static
+    }
+
+    /// Restore policy state from a checkpoint taken at an epoch barrier.
+    /// The state must match this store's policy and vertex count — a
+    /// mismatch is a clean error, never a silent wrong resume.
+    fn import_state(&mut self, state: &StoreState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.policy() == self.policy(),
+            "checkpoint store state is {} but the live store is {}",
+            state.policy().name(),
+            self.policy().name()
+        );
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

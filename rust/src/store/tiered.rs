@@ -20,7 +20,7 @@
 //! per-FPGA stores obey (DESIGN.md §Out-of-core storage).
 
 use super::dynamic::dynamic_store;
-use super::{CachePolicy, FeatureStore, Residency};
+use super::{CachePolicy, FeatureStore, Residency, StoreState};
 use crate::comm::Traffic;
 
 /// The host-DRAM cache tier: one per trainer (the host's DRAM is shared
@@ -103,6 +103,17 @@ impl TieredStore {
     /// resident set changed.
     pub fn end_epoch(&mut self) -> bool {
         self.inner.end_epoch()
+    }
+
+    /// Snapshot the DRAM tier's policy state (checkpoint; epoch-barrier
+    /// only — delegates to the inner store).
+    pub fn export_state(&self) -> StoreState {
+        self.inner.export_state()
+    }
+
+    /// Restore the DRAM tier's policy state from a checkpoint.
+    pub fn import_state(&mut self, state: &StoreState) -> anyhow::Result<()> {
+        self.inner.import_state(state)
     }
 }
 

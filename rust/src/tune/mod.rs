@@ -149,6 +149,16 @@ impl Axis {
         }
     }
 
+    fn from_index(i: usize) -> Option<Axis> {
+        match i {
+            0 => Some(Axis::HostThreads),
+            1 => Some(Axis::PrefetchDepth),
+            2 => Some(Axis::Sched),
+            3 => Some(Axis::CacheRatio),
+            _ => None,
+        }
+    }
+
     fn name(self) -> &'static str {
         match self {
             Axis::HostThreads => "host_threads",
@@ -198,6 +208,33 @@ struct Trial {
     dir: i8,
     knobs: Knobs,
     action: String,
+}
+
+/// Serializable snapshot of an in-flight trial ([`TunerState`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialState {
+    /// [`Axis`] index (0..4).
+    pub axis: u8,
+    pub dir: i8,
+    pub knobs: Knobs,
+    pub action: String,
+}
+
+/// The controller's complete epoch-barrier state (checkpoint/resume —
+/// DESIGN.md §Fault tolerance). `mode` and the cache-dynamic flag are
+/// config-derived, so they are *not* part of the state: a resumed run
+/// reconstructs the tuner from its config and then [`AutoTuner::restore`]s
+/// this snapshot, after which the hill-climb continues exactly where the
+/// straight run would be — same pending trial, same blocked steps, same
+/// reference score.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunerState {
+    pub current: Knobs,
+    pub best_score: Option<f64>,
+    pub trial: Option<TrialState>,
+    /// `[axis][0]`=shrink blocked, `[axis][1]`=grow blocked.
+    pub blocked: [[bool; 2]; 4],
+    pub sched_tried: bool,
 }
 
 /// The between-epoch controller. Drive it with [`AutoTuner::observe`]
@@ -254,6 +291,49 @@ impl AutoTuner {
     /// Knobs currently in effect (the pending trial's, if one is running).
     pub fn knobs(&self) -> Knobs {
         self.trial.as_ref().map(|t| t.knobs).unwrap_or(self.current)
+    }
+
+    /// Snapshot the controller for a checkpoint (epoch-barrier only).
+    pub fn to_state(&self) -> TunerState {
+        TunerState {
+            current: self.current,
+            best_score: self.best_score,
+            trial: self.trial.as_ref().map(|t| TrialState {
+                axis: t.axis.index() as u8,
+                dir: t.dir,
+                knobs: t.knobs,
+                action: t.action.clone(),
+            }),
+            blocked: self.blocked,
+            sched_tried: self.sched_tried,
+        }
+    }
+
+    /// Restore a checkpointed controller state onto a freshly constructed
+    /// tuner (same mode / cache-dynamic flag, from the run's config).
+    /// Malformed state — an axis or direction no [`Axis`] maps to — is a
+    /// clean error, never a silent wrong resume.
+    pub fn restore(&mut self, state: &TunerState) -> anyhow::Result<()> {
+        let trial = match &state.trial {
+            None => None,
+            Some(t) => {
+                let axis = Axis::from_index(t.axis as usize).ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint tuner trial axis {} is not a knob axis", t.axis)
+                })?;
+                anyhow::ensure!(
+                    t.dir == 1 || t.dir == -1,
+                    "checkpoint tuner trial direction {} is not +1/-1",
+                    t.dir
+                );
+                Some(Trial { axis, dir: t.dir, knobs: t.knobs, action: t.action.clone() })
+            }
+        };
+        self.current = state.current;
+        self.best_score = state.best_score;
+        self.trial = trial;
+        self.blocked = state.blocked;
+        self.sched_tried = state.sched_tried;
+        Ok(())
     }
 
     fn blocked_step(&self, axis: Axis, dir: i8) -> bool {
@@ -526,6 +606,48 @@ mod tests {
             .with_prior(TunePrior { preferred_sched: SchedMode::BatchCount });
         let d = sat(&mut dynp, 0);
         assert_eq!(d.action, "cache_ratio 0.20 -> 0.25");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_climb() {
+        // drive a tuner mid-climb (pending trial, one blocked step),
+        // snapshot it, restore onto a fresh instance, then feed both the
+        // same observation stream — decisions must be identical
+        let mut a = AutoTuner::new(AutoTuneMode::On, knobs(), true);
+        a.observe(0, &obs(1.0, 1.0, 0.5)); // baseline → sched trial
+        a.observe(1, &obs(1.3, 1.0, 0.5)); // revert + block
+        a.observe(2, &obs(1.0, 1.0, 0.5)); // re-baseline → host_threads trial
+        let snap = a.to_state();
+        assert!(snap.trial.is_some());
+        assert!(snap.sched_tried);
+        let mut b = AutoTuner::new(AutoTuneMode::On, knobs(), true);
+        b.restore(&snap).unwrap();
+        assert_eq!(b.knobs(), a.knobs());
+        for (e, o) in
+            [(3, obs(0.8, 1.0, 0.5)), (4, obs(0.7, 1.0, 0.3)), (5, obs(0.9, 1.0, 0.0))]
+        {
+            let da = a.observe(e, &o);
+            let db = b.observe(e, &o);
+            assert_eq!((da.outcome, da.action, da.knobs), (db.outcome, db.action, db.knobs));
+        }
+    }
+
+    #[test]
+    fn restore_rejects_malformed_trials() {
+        let mut t = AutoTuner::new(AutoTuneMode::On, knobs(), false);
+        let bad_axis = TunerState {
+            current: knobs(),
+            best_score: Some(1.0),
+            trial: Some(TrialState { axis: 9, dir: 1, knobs: knobs(), action: "x".into() }),
+            blocked: [[false; 2]; 4],
+            sched_tried: false,
+        };
+        assert!(t.restore(&bad_axis).unwrap_err().to_string().contains("axis 9"));
+        let bad_dir = TunerState {
+            trial: Some(TrialState { axis: 0, dir: 0, knobs: knobs(), action: "x".into() }),
+            ..bad_axis
+        };
+        assert!(t.restore(&bad_dir).is_err());
     }
 
     #[test]

@@ -6,11 +6,14 @@ use std::path::PathBuf;
 
 use hitgnn::coordinator::{TrainConfig, Trainer};
 use hitgnn::dse::DseEngine;
+use hitgnn::fault::FaultPlan;
+use hitgnn::fpga::parse_fleet;
 use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, Algorithm};
 use hitgnn::perf::PlatformSpec;
 use hitgnn::runtime::Manifest;
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
+use hitgnn::sched::SchedMode;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("hitgnn_fail_{tag}_{}", std::process::id()));
@@ -220,10 +223,26 @@ fn prep_worker_errors_propagate_instead_of_panicking() {
     let (done_tx, done_rx) = mpsc::channel();
     let oversized: Vec<u32> = (0..64u32).collect();
     task_tx
-        .send(PrepTask { iter: 0, tag: 0, part: 0, fpga: 0, seq: 0, targets: oversized })
+        .send(PrepTask {
+            iter: 0,
+            tag: 0,
+            part: 0,
+            fpga: 0,
+            seq: 0,
+            targets: oversized,
+            inject_panic: false,
+        })
         .unwrap();
     task_tx
-        .send(PrepTask { iter: 0, tag: 1, part: 0, fpga: 0, seq: 1, targets: good })
+        .send(PrepTask {
+            iter: 0,
+            tag: 1,
+            part: 0,
+            fpga: 0,
+            seq: 1,
+            targets: good,
+            inject_panic: false,
+        })
         .unwrap();
     drop(task_tx);
 
@@ -328,6 +347,265 @@ fn fanout_config_rejects_degenerate_values_at_every_entry_point() {
     };
     let err = Trainer::new(cfg).unwrap_err().to_string();
     assert!(err.contains("level-0 capacity"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// --fault-plan: the deterministic fault-injection harness
+// (DESIGN.md §Fault tolerance)
+// ---------------------------------------------------------------------
+
+fn fault_cfg(plan: Option<&str>) -> TrainConfig {
+    TrainConfig {
+        dataset: "tiny".into(),
+        algo: Algorithm::DistDgl,
+        num_fpgas: 2,
+        epochs: 2,
+        scale_shift: 0,
+        seed: 21,
+        max_iterations: Some(6),
+        fault_plan: plan.map(|s| FaultPlan::parse(s).expect("test plan parses")),
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn injected_prep_panic_aborts_cleanly_and_the_pool_survives() {
+    // ISSUE 10 satellite: a prep-worker panic mid-epoch must surface as a
+    // clean `Err` — the coordinator drains the prep/recycle channels and
+    // joins the workers — and the *same* Trainer (same WorkerPool, same
+    // recycle channel) must run the next epoch cleanly. Deep prefetch
+    // window + several host threads so batches are genuinely in flight
+    // when the panic lands.
+    let mut cfg = fault_cfg(Some("prep:panic@e0i1"));
+    cfg.host_threads = 2;
+    cfg.prefetch_depth = 3;
+    let mut t = Trainer::new(cfg).expect("plan validates against fleet and run");
+    let err = t.run_epoch(0).expect_err("injected panic must fail the epoch");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+    // same pool, next epoch: nothing leaked, nothing poisoned, no hang
+    let m = t.run_epoch(1).expect("pool must survive an injected failure");
+    assert!(m.iterations > 0);
+    assert!(m.iter_losses.iter().all(|l| l.is_finite()));
+    t.shutdown();
+}
+
+#[test]
+fn device_loss_completes_the_epoch_with_every_batch_trained_once() {
+    // ISSUE 10 acceptance: on a heterogeneous u250:2,u250-half:2 fleet, a
+    // device lost mid-epoch quarantines and its work reroutes to the
+    // survivors — the run completes, trains exactly as many batches as the
+    // healthy run, and reports the quarantine/reassignment counters. Both
+    // scheduler modes.
+    for mode in SchedMode::ALL {
+        let cfg = |plan: Option<&str>| {
+            let mut c = fault_cfg(plan);
+            c.num_fpgas = 4;
+            c.fleet = Some(parse_fleet("u250:2,u250-half:2").unwrap());
+            c.sched = mode;
+            c.max_iterations = None; // full epochs: the tail is where reroutes land
+            c
+        };
+        let run = |c: TrainConfig| {
+            let mut t = Trainer::new(c).unwrap();
+            let r = t.run().unwrap();
+            t.shutdown();
+            r
+        };
+        let healthy = run(cfg(None));
+        let faulted = run(cfg(Some("dev1:fail@e0i1")));
+        assert_eq!(healthy.epochs.len(), faulted.epochs.len());
+        for (h, f) in healthy.epochs.iter().zip(&faulted.epochs) {
+            // exactly-once: the degraded epoch still trains every batch
+            assert_eq!(h.batches, f.batches, "{mode:?} epoch {}: batch count moved", h.epoch);
+            assert!(f.iter_losses.iter().all(|l| l.is_finite()));
+        }
+        assert_eq!(faulted.epochs[0].quarantined_devices, 1, "{mode:?}");
+        // the loss stays quarantined in later epochs, where *all* of the
+        // dead device's batches are reassignments
+        assert_eq!(faulted.epochs[1].quarantined_devices, 1, "{mode:?}");
+        assert!(faulted.epochs[1].reassigned_batches > 0, "{mode:?}");
+        for h in &healthy.epochs {
+            assert_eq!(h.quarantined_devices, 0);
+            assert_eq!(h.reassigned_batches, 0);
+        }
+        // same plan + same seed ⇒ bit-identical degraded run
+        let again = run(cfg(Some("dev1:fail@e0i1")));
+        for (a, b) in faulted.epochs.iter().zip(&again.epochs) {
+            assert_eq!(a.iter_losses, b.iter_losses, "{mode:?}: faulted run not deterministic");
+            assert_eq!(a.reassigned_batches, b.reassigned_batches);
+        }
+    }
+}
+
+#[test]
+fn straggler_slowdown_reprices_the_cost_model_not_the_losses() {
+    // `devN:slow*M@eE` multiplies the device's §6.2 per-batch seconds.
+    // `--sched cost` then routes stage-2 extras around the straggler: its
+    // modeled makespan under the *same priced cost model* is never worse
+    // than batch-count assignment. The loss sequence — a function of the
+    // partition stream alone — must not move at all.
+    let cfg = |mode: SchedMode, plan: Option<&str>| {
+        let mut c = fault_cfg(plan);
+        c.fleet = Some(parse_fleet("u250:1,u250-half:1").unwrap());
+        c.sched = mode;
+        c.epochs = 1;
+        c.max_iterations = None;
+        c
+    };
+    let run = |c: TrainConfig| {
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        t.shutdown();
+        r
+    };
+    let plan = "dev0:slow*8@e0";
+    let healthy = run(cfg(SchedMode::Cost, None));
+    let slow_cost = run(cfg(SchedMode::Cost, Some(plan)));
+    let slow_batch = run(cfg(SchedMode::BatchCount, Some(plan)));
+    let losses = |r: &hitgnn::coordinator::TrainReport| r.epochs[0].iter_losses.clone();
+    assert_eq!(losses(&healthy), losses(&slow_cost), "slowdown must not touch the numerics");
+    assert_eq!(losses(&healthy), losses(&slow_batch));
+    // the straggler makes the modeled epoch strictly slower...
+    assert!(
+        slow_cost.epochs[0].epoch_makespan_seconds > healthy.epochs[0].epoch_makespan_seconds,
+        "slow {} !> healthy {}",
+        slow_cost.epochs[0].epoch_makespan_seconds,
+        healthy.epochs[0].epoch_makespan_seconds
+    );
+    // ...and cost-aware assignment visibly routes around it
+    assert!(
+        slow_cost.epochs[0].epoch_makespan_seconds
+            <= slow_batch.epochs[0].epoch_makespan_seconds + 1e-9,
+        "cost {} worse than batch-count {}",
+        slow_cost.epochs[0].epoch_makespan_seconds,
+        slow_batch.epochs[0].epoch_makespan_seconds
+    );
+}
+
+#[test]
+fn transient_disk_errors_retry_deterministically_and_stay_loss_invariant() {
+    // `disk:eio@p` draws per-(epoch, iter, tag, attempt) from a stateless
+    // hash — no RNG stream is consumed, so the retried run's numerics are
+    // bit-identical to the healthy run's, and the retry count itself is
+    // reproducible.
+    let run = |c: TrainConfig| {
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        t.shutdown();
+        r
+    };
+    let healthy = run(fault_cfg(None));
+    let faulted = run(fault_cfg(Some("disk:eio@0.5")));
+    let losses = |r: &hitgnn::coordinator::TrainReport| -> Vec<f64> {
+        r.epochs.iter().flat_map(|e| e.iter_losses.iter().copied()).collect()
+    };
+    assert_eq!(losses(&healthy), losses(&faulted), "retries must not touch the numerics");
+    let retries: u64 = faulted.epochs.iter().map(|e| e.disk_retries).sum();
+    assert!(retries > 0, "p=0.5 over 24 batch draws must hit at least once");
+    assert_eq!(healthy.epochs.iter().map(|e| e.disk_retries).sum::<u64>(), 0);
+    let again = run(fault_cfg(Some("disk:eio@0.5")));
+    assert_eq!(
+        retries,
+        again.epochs.iter().map(|e| e.disk_retries).sum::<u64>(),
+        "retry count must be a pure function of (plan, seed)"
+    );
+}
+
+#[test]
+fn persistent_disk_errors_exhaust_retries_into_a_clean_fatal_error() {
+    // p = 1: every attempt fails, so the bounded retry gives up after
+    // DISK_RETRY_MAX with a clean error naming the batch — never a hang
+    // or a panic.
+    let mut t = Trainer::new(fault_cfg(Some("disk:eio@1"))).unwrap();
+    let err = t.run().expect_err("certain disk failure must be fatal");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("disk read failed"), "{msg}");
+    assert!(msg.contains("--fault-plan disk:eio"), "{msg}");
+    // and the trainer still winds down cleanly
+    t.shutdown();
+}
+
+#[test]
+fn fault_plans_are_validated_against_the_live_run() {
+    // unknown device id — rejected at construction, naming the device
+    let err = Trainer::new(fault_cfg(Some("dev9:fail@e0i0"))).unwrap_err().to_string();
+    assert!(err.contains("dev9"), "{err}");
+    // epoch anchor past the end of the run
+    let err = Trainer::new(fault_cfg(Some("dev0:fail@e5i0"))).unwrap_err().to_string();
+    assert!(err.contains("e5i0") && err.contains("2 epochs"), "{err}");
+    // killing the whole fleet leaves no survivors
+    let err =
+        Trainer::new(fault_cfg(Some("dev0:fail@e0i0,dev1:fail@e0i0"))).unwrap_err().to_string();
+    assert!(err.contains("no survivors"), "{err}");
+    // iteration anchors are checked by the planner (first place the
+    // iteration count exists) — out of range is a clean error, not a
+    // silently ignored fault
+    let mut t = Trainer::new(fault_cfg(Some("prep:panic@e0i999"))).unwrap();
+    let err = t.run().unwrap_err().to_string();
+    assert!(err.contains("e0i999") && err.contains("out of range"), "{err}");
+    t.shutdown();
+}
+
+#[test]
+fn corrupt_checkpoints_are_clean_resume_errors() {
+    // ISSUE 10 satellite: truncated, bit-flipped, and wrong-version
+    // checkpoint files must all fail `--resume` with a clean `Err` that
+    // names the problem — never a panic — and fingerprint mismatches are
+    // caught before any state is overwritten.
+    let dir = tmpdir("ckpt_corrupt");
+    let mut cfg = fault_cfg(None);
+    cfg.checkpoint_dir = Some(dir.clone());
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.run().unwrap();
+    t.shutdown();
+    let latest = hitgnn::fault::checkpoint::latest_in_dir(&dir).unwrap();
+    let bytes = std::fs::read(&latest).unwrap();
+
+    let resume_cfg = |path: &std::path::Path| {
+        let mut c = fault_cfg(None);
+        c.epochs = 4; // past the checkpoint's epoch_next = 2
+        c.resume = Some(path.display().to_string());
+        c
+    };
+    // the intact file resumes fine (directory resolution included)
+    Trainer::new(resume_cfg(&dir)).expect("healthy resume").shutdown();
+
+    // truncation at an arbitrary cut (a name outside the ckpt-e*.hitg
+    // glob so directory resolution below still finds the intact file)
+    let bad = dir.join("corrupt.hitg");
+    std::fs::write(&bad, &bytes[..bytes.len() / 2]).unwrap();
+    let err = Trainer::new(resume_cfg(&bad)).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // flipped magic
+    let mut flipped = bytes.clone();
+    flipped[0] ^= 0xff;
+    std::fs::write(&bad, &flipped).unwrap();
+    let err = Trainer::new(resume_cfg(&bad)).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // future format version
+    let mut wrong_v = bytes.clone();
+    wrong_v[8] = 9; // version field sits right after the 8-byte magic
+    std::fs::write(&bad, &wrong_v).unwrap();
+    let err = Trainer::new(resume_cfg(&bad)).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // fingerprint mismatches: wrong model, wrong seed, epochs not raised
+    let mut c = resume_cfg(&dir);
+    c.model = "gin".into();
+    let err = Trainer::new(c).unwrap_err().to_string();
+    assert!(err.contains("checkpoint is for"), "{err}");
+    let mut c = resume_cfg(&dir);
+    c.seed = 99;
+    let err = Trainer::new(c).unwrap_err().to_string();
+    assert!(err.contains("seed"), "{err}");
+    let mut c = resume_cfg(&dir);
+    c.epochs = 2; // checkpoint already covers 2 epochs
+    let err = Trainer::new(c).unwrap_err().to_string();
+    assert!(err.contains("already covers"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

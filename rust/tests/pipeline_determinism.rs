@@ -359,6 +359,199 @@ fn reduce_thread_count_never_changes_the_loss_sequence() {
 }
 
 #[test]
+fn determinism_law_survives_an_injected_fault_plan() {
+    // ISSUE 10 acceptance: the determinism law must hold *under faults*.
+    // A plan combining a device loss, a straggler, and transient disk
+    // errors — keyed on logical (epoch, iter) positions and a stateless
+    // eio hash, never wall-clock — must produce bit-identical losses and
+    // Traffic across host-threads × prefetch-depth × sched on a
+    // heterogeneous fleet.
+    let cfg_for = |mode: SchedMode| {
+        let mut c = base_cfg();
+        c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+        c.sched = mode;
+        c.epochs = 2;
+        c.max_iterations = None; // quarantine reroutes land in the tail
+        c.fault_plan = Some(
+            hitgnn::fault::FaultPlan::parse("dev1:fail@e1i2,dev0:slow*3@e0,disk:eio@0.2")
+                .unwrap(),
+        );
+        c
+    };
+    for mode in SchedMode::ALL {
+        let base = run_cfg(cfg_for(mode), 1, 1);
+        assert!(!base.0.is_empty(), "no iterations recorded");
+        assert!(base.0.iter().all(|l| l.is_finite()));
+        for (ht, d) in [(1, 3), (4, 1), (4, 3)] {
+            let got = run_cfg(cfg_for(mode), ht, d);
+            assert_eq!(
+                base.0, got.0,
+                "{mode:?} faulted: loss sequence diverged at host-threads={ht} prefetch-depth={d}"
+            );
+            assert_eq!(base.1, got.1, "{mode:?} faulted: traffic diverged at ({ht}, {d})");
+            assert_eq!(base.2, got.2, "{mode:?} faulted: batch count diverged at ({ht}, {d})");
+            assert_eq!(base.3, got.3, "{mode:?} faulted: iteration count diverged at ({ht}, {d})");
+        }
+    }
+}
+
+#[test]
+fn training_resumes_bit_identically_from_a_checkpoint() {
+    // ISSUE 10 acceptance (continuation law): training N epochs straight
+    // must equal training N/2, checkpointing, and resuming for the rest —
+    // bit-identical per-iteration losses and Traffic totals for the
+    // resumed half. Dynamic cache policy + DRAM tier on a heterogeneous
+    // fleet, so every piece of state the snapshot carries (params,
+    // momentum, RNG, store residency, tier) is actually load-bearing.
+    // (Tuner-state roundtrip is covered separately below: the controller
+    // keys on measured wall clock, so its knob choices — and therefore
+    // traffic splits — are not byte-reproducible across runs.)
+    let dir = std::env::temp_dir()
+        .join(format!("hitgnn_resume_equiv_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = |epochs: usize| {
+        let mut c = base_cfg();
+        c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+        c.cache_policy = CachePolicy::Lfu;
+        c.cache_ratio = 0.15;
+        c.dram_ratio = 0.5;
+        c.epochs = epochs;
+        c
+    };
+    let run = |c: TrainConfig| {
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        t.shutdown();
+        r
+    };
+    // straight run: 6 epochs, no checkpointing
+    let straight = run(cfg(6));
+    // halved run: 3 epochs with snapshots, then resume for the rest
+    let mut first = cfg(3);
+    first.checkpoint_dir = Some(dir.clone());
+    let head = run(first);
+    assert!(head.epochs.iter().all(|e| e.checkpoint_seconds > 0.0));
+    let mut second = cfg(6);
+    second.resume = Some(dir.display().to_string());
+    let tail = run(second);
+    // the resumed run reports exactly the remaining epochs
+    assert_eq!(tail.epochs.len(), 3);
+    assert_eq!(tail.epochs[0].epoch, 3);
+    for (a, b) in straight.epochs[3..].iter().zip(&tail.epochs) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(
+            a.iter_losses, b.iter_losses,
+            "epoch {}: resumed losses diverged from the straight run",
+            a.epoch
+        );
+        assert_eq!(a.batches, b.batches, "epoch {}", a.epoch);
+        assert_eq!(a.iterations, b.iterations, "epoch {}", a.epoch);
+        assert_eq!(a.local_bytes, b.local_bytes, "epoch {}", a.epoch);
+        assert_eq!(a.host_bytes, b.host_bytes, "epoch {}", a.epoch);
+        assert_eq!(a.f2f_bytes, b.f2f_bytes, "epoch {}", a.epoch);
+        assert_eq!(a.dedup_saved_bytes, b.dedup_saved_bytes, "epoch {}", a.epoch);
+        assert_eq!(a.dram_hit_bytes, b.dram_hit_bytes, "epoch {}", a.epoch);
+        assert_eq!(a.disk_read_bytes, b.disk_read_bytes, "epoch {}", a.epoch);
+    }
+    // and the head half matches the straight run too (checkpointing is
+    // observationally invisible to the numerics)
+    for (a, b) in straight.epochs[..3].iter().zip(&head.epochs) {
+        assert_eq!(a.iter_losses, b.iter_losses, "epoch {}: checkpointing moved a loss", a.epoch);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_preserves_the_loss_sequence_with_the_auto_tuner_on() {
+    // the tuner's decisions key on measured wall clock, so a resumed
+    // controller may pick different knobs than the straight run — but
+    // every knob it can move is loss-invariant, so the continuation law
+    // still holds for the numerics. The snapshot carries the controller
+    // state (validated: resuming without `--auto-tune` is an error), and
+    // the resumed half keeps logging decisions.
+    let dir = std::env::temp_dir()
+        .join(format!("hitgnn_resume_tune_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = |epochs: usize| {
+        let mut c = base_cfg();
+        c.fleet = Some(parse_fleet("u250-half:1,u250:1").unwrap());
+        c.auto_tune = AutoTuneMode::On;
+        c.epochs = epochs;
+        c
+    };
+    let run = |c: TrainConfig| {
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        t.shutdown();
+        r
+    };
+    let straight = run(cfg(6));
+    let mut first = cfg(3);
+    first.checkpoint_dir = Some(dir.clone());
+    run(first);
+    // a tuner-carrying checkpoint refuses to resume into --auto-tune off
+    let mut off = cfg(6);
+    off.auto_tune = AutoTuneMode::Off;
+    off.resume = Some(dir.display().to_string());
+    let err = Trainer::new(off).unwrap_err().to_string();
+    assert!(err.contains("auto-tune"), "{err}");
+    let mut second = cfg(6);
+    second.resume = Some(dir.display().to_string());
+    let tail = run(second);
+    assert_eq!(tail.epochs.len(), 3);
+    for (a, b) in straight.epochs[3..].iter().zip(&tail.epochs) {
+        assert_eq!(
+            a.iter_losses, b.iter_losses,
+            "epoch {}: tuned resume moved the loss sequence",
+            a.epoch
+        );
+        assert_eq!(a.batches, b.batches, "epoch {}", a.epoch);
+        assert!(b.tune.is_some(), "epoch {}: restored controller logs decisions", a.epoch);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_equivalence_holds_under_a_fault_plan() {
+    // continuation law × fault injection: a device lost in the first half
+    // stays quarantined across resume (the mask rides in the snapshot),
+    // and disk-eio draws — keyed on absolute (epoch, iter) — line up.
+    let dir = std::env::temp_dir()
+        .join(format!("hitgnn_resume_fault_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = |epochs: usize| {
+        let mut c = base_cfg();
+        c.epochs = epochs;
+        c.max_iterations = None;
+        c.fault_plan =
+            Some(hitgnn::fault::FaultPlan::parse("dev0:fail@e1i1,disk:eio@0.2").unwrap());
+        c
+    };
+    let run = |c: TrainConfig| {
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        t.shutdown();
+        r
+    };
+    let straight = run(cfg(4));
+    let mut first = cfg(2);
+    first.checkpoint_dir = Some(dir.clone());
+    run(first);
+    let mut second = cfg(4);
+    second.resume = Some(dir.display().to_string());
+    let tail = run(second);
+    for (a, b) in straight.epochs[2..].iter().zip(&tail.epochs) {
+        assert_eq!(a.iter_losses, b.iter_losses, "epoch {}: faulted resume diverged", a.epoch);
+        assert_eq!(a.quarantined_devices, b.quarantined_devices, "epoch {}", a.epoch);
+        assert_eq!(a.reassigned_batches, b.reassigned_batches, "epoch {}", a.epoch);
+        assert_eq!(a.disk_retries, b.disk_retries, "epoch {}", a.epoch);
+        assert_eq!(a.batches, b.batches, "epoch {}", a.epoch);
+    }
+    assert!(tail.epochs.iter().all(|e| e.quarantined_devices == 1), "quarantine must persist");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn legacy_prefetch_flag_equals_depth_two() {
     let mut cfg_flag = base_cfg();
     cfg_flag.prefetch = true;

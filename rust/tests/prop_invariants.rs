@@ -7,7 +7,7 @@ use hitgnn::graph::datasets;
 use hitgnn::partition::{preprocess, preprocess_with_policy, Algorithm};
 use hitgnn::perf::{PlatformModel, PlatformSpec, Workload};
 use hitgnn::sampling::{FanoutConfig, Sampler, WeightMode};
-use hitgnn::sched::{epoch_makespan_seconds, CostModel, TwoStageScheduler};
+use hitgnn::sched::{epoch_makespan_seconds, CostModel, SchedMode, TwoStageScheduler};
 use hitgnn::store::{dynamic::degree_rank, CachePolicy, FeatureStore, TieredStore};
 use hitgnn::util::json::Json;
 use hitgnn::util::proptest::{check, require};
@@ -110,6 +110,80 @@ fn wb_epoch_makespan_is_optimal() {
             makespan <= base_makespan,
             &format!("WB {makespan} worse than baseline {base_makespan}"),
         )
+    });
+}
+
+#[test]
+fn faulted_epoch_plans_train_every_batch_exactly_once() {
+    // ISSUE 10 satellite: across random single-device fail points, in
+    // both scheduler modes, the planned epoch still covers every
+    // (part, seq) batch exactly once — the dead device's remaining work
+    // drains deterministically to survivors, and the dead device executes
+    // nothing from its fail iteration on.
+    use hitgnn::coordinator::prep::plan_epoch_tasks_with_faults;
+    use hitgnn::sampling::EpochPlan;
+    check("fault exactly-once", 96, |rng| {
+        let p = 2 + rng.index(6);
+        let b = 4usize;
+        let train_parts: Vec<Vec<u32>> =
+            (0..p).map(|_| (0..rng.index(33) as u32).collect()).collect();
+        let expected: Vec<usize> = train_parts.iter().map(|t| t.len().div_ceil(b)).collect();
+        if expected.iter().sum::<usize>() == 0 {
+            return Ok(());
+        }
+        let wb = rng.bool(0.5);
+        let seed = rng.next_u64();
+        let cost = CostModel::new((0..p).map(|_| 0.5 + rng.f64() * 4.0).collect());
+        for mode in SchedMode::ALL {
+            // healthy plan first: fixes the iteration range a valid
+            // anchor must land in (a faulted epoch only gets longer)
+            let mut plan = EpochPlan::new(&train_parts, b, &mut Rng::new(seed));
+            let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+            let mut sched = TwoStageScheduler::for_mode(p, wb, mode, Some(cost.clone()));
+            let healthy =
+                plan_epoch_tasks_with_faults(&mut sched, &mut plan, &mut remaining, None, &[])
+                    .map_err(|e| e.to_string())?;
+            if healthy.is_empty() {
+                continue;
+            }
+            let dev = rng.index(p);
+            let at = rng.index(healthy.len());
+            let mut plan = EpochPlan::new(&train_parts, b, &mut Rng::new(seed));
+            let mut remaining: Vec<usize> = (0..p).map(|i| plan.remaining(i)).collect();
+            let mut sched = TwoStageScheduler::for_mode(p, wb, mode, Some(cost.clone()));
+            let faulted = plan_epoch_tasks_with_faults(
+                &mut sched,
+                &mut plan,
+                &mut remaining,
+                None,
+                &[(at, dev)],
+            )
+            .map_err(|e| e.to_string())?;
+            require(!sched.alive()[dev], "failed device must be quarantined")?;
+            // exactly-once: the faulted plan covers the identical
+            // (part, seq) multiset — nothing lost, nothing duplicated
+            let mut pairs: Vec<(usize, usize)> =
+                faulted.iter().flatten().map(|t| (t.part, t.seq)).collect();
+            pairs.sort_unstable();
+            let mut want: Vec<(usize, usize)> =
+                (0..p).flat_map(|i| (0..expected[i]).map(move |s| (i, s))).collect();
+            want.sort_unstable();
+            require(
+                pairs == want,
+                &format!("{mode:?} dev{dev}@i{at}: coverage {pairs:?} != {want:?}"),
+            )?;
+            for (it, tasks) in faulted.iter().enumerate() {
+                let width = if it >= at { p - 1 } else { p };
+                require(tasks.len() <= width, "iteration wider than the live fleet")?;
+                if it >= at {
+                    require(
+                        tasks.iter().all(|t| t.fpga != dev),
+                        &format!("{mode:?}: dead dev{dev} executes at iteration {it} >= {at}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
     });
 }
 
